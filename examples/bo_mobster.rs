@@ -1,0 +1,73 @@
+//! Model-based search (paper §5.2.2, Table 3): MOBSTER (ASHA + GP/EI
+//! searcher) versus PASHA with the same searcher ("PASHA BO"), showing
+//! PASHA composes with smarter configuration proposals.
+//!
+//! ```sh
+//! cargo run --release --example bo_mobster
+//! ```
+//!
+//! When the AOT artifacts are built (`make artifacts`), the example also
+//! cross-checks the GP+EI acquisition through the compiled JAX/Pallas
+//! artifact against the pure-Rust GP on live data from the run.
+
+use pasha::benchmarks::nasbench201::NasBench201;
+use pasha::runtime::artifact::{artifacts_available, Engine};
+use pasha::runtime::gp::GpEiArtifact;
+use pasha::scheduler::asha::AshaBuilder;
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::searcher::gp::{expected_improvement, Gp};
+use pasha::tuner::{SearcherKind, Tuner, TunerSpec};
+use pasha::util::rng::Rng;
+
+fn main() {
+    let bench = NasBench201::cifar100();
+    let spec = TunerSpec {
+        searcher: SearcherKind::Bo,
+        ..Default::default()
+    };
+
+    let mobster = Tuner::run(&bench, &AshaBuilder::default(), &spec, 0, 0);
+    let pasha_bo = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+
+    println!("--- MOBSTER (ASHA + GP/EI) ---");
+    println!("accuracy {:.2}%  runtime {:.1}h  max resources {}",
+             mobster.retrain_accuracy, mobster.runtime_seconds / 3600.0,
+             mobster.max_resources);
+    println!("--- PASHA BO ---");
+    println!("accuracy {:.2}%  runtime {:.1}h  max resources {}",
+             pasha_bo.retrain_accuracy, pasha_bo.runtime_seconds / 3600.0,
+             pasha_bo.max_resources);
+    println!("speedup {:.1}x\n",
+             mobster.runtime_seconds / pasha_bo.runtime_seconds);
+
+    // PJRT cross-check of the acquisition function (all three layers).
+    if artifacts_available() {
+        let engine = Engine::cpu().expect("PJRT CPU client");
+        let art = GpEiArtifact::load(&engine).expect("gp_ei artifact");
+        let mut rng = Rng::new(7);
+        let x: Vec<Vec<f64>> = (0..24)
+            .map(|_| (0..4).map(|_| rng.next_f64()).collect())
+            .collect();
+        let y: Vec<f64> = x.iter().map(|p| (4.0 * p[0]).sin() + p[1]).collect();
+        let cand: Vec<Vec<f64>> = (0..8)
+            .map(|_| (0..4).map(|_| rng.next_f64()).collect())
+            .collect();
+        let f_best = y.iter().cloned().fold(f64::MIN, f64::max);
+        let out = art
+            .run(&x, &y, &cand, f_best, 0.3, 1.0, 1e-3)
+            .expect("gp_ei execution");
+        let gp = Gp::fit(&x, &y, 0.3, 1.0, 1e-3).unwrap();
+        println!("PJRT acquisition vs pure-Rust GP (first 4 candidates):");
+        let mut max_err: f64 = 0.0;
+        for i in 0..4 {
+            let (m, v) = gp.predict(&cand[i]);
+            let ei = expected_improvement(m, v, f_best);
+            println!("  cand {i}: pjrt EI {:.6}  rust EI {:.6}", out.ei[i], ei);
+            max_err = max_err.max((out.ei[i] - ei).abs());
+        }
+        assert!(max_err < 1e-3, "PJRT/Rust acquisition divergence {max_err}");
+        println!("max |ΔEI| = {max_err:.2e} — layers agree.");
+    } else {
+        println!("(run `make artifacts` to also exercise the PJRT GP path)");
+    }
+}

@@ -1,0 +1,24 @@
+//! End-to-end validation: the full three-layer stack on a *real*
+//! workload — PASHA vs ASHA tuning the PD1 optimizer space of an MLP
+//! classifier whose train/eval steps are AOT-compiled JAX+Pallas HLO
+//! programs executed from Rust through PJRT, on a 4-thread worker pool.
+//!
+//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_training
+//! ```
+//!
+//! The run (budget, per-epoch val-accuracy curves, epoch counts, retrain
+//! accuracies) is recorded in EXPERIMENTS.md §End-to-end.
+
+fn main() {
+    let budget = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    if let Err(e) = pasha::e2e::run_e2e(budget, /*hidden=*/ 64, /*workers=*/ 4) {
+        eprintln!("e2e failed: {e}");
+        std::process::exit(1);
+    }
+}

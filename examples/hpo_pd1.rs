@@ -1,0 +1,55 @@
+//! Large-scale HPO scenario (paper §5.3): tune the 4-dimensional
+//! optimizer space of the PD1 WMT15 German→English task (1414 epochs —
+//! 8 rung levels, the regime where PASHA's early stopping buys its
+//! biggest factor, 15.5× in the paper).
+//!
+//! ```sh
+//! cargo run --release --example hpo_pd1
+//! ```
+
+use pasha::benchmarks::pd1::Pd1;
+use pasha::benchmarks::Benchmark;
+use pasha::scheduler::asha::AshaBuilder;
+use pasha::scheduler::baselines::FixedEpochBuilder;
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::scheduler::SchedulerBuilder;
+use pasha::tuner::{Tuner, TunerSpec};
+use pasha::util::table::Table;
+
+fn main() {
+    let bench = Pd1::wmt();
+    let spec = TunerSpec::default();
+    println!(
+        "benchmark: {} ({} epochs max, {} rung levels at eta=3)\n",
+        bench.name(),
+        bench.max_epochs(),
+        pasha::scheduler::rung::RungLevels::new(1, 3, bench.max_epochs()).num_rungs()
+    );
+
+    let approaches: Vec<Box<dyn SchedulerBuilder>> = vec![
+        Box::new(AshaBuilder::default()),
+        Box::new(PashaBuilder::default()),
+        Box::new(FixedEpochBuilder { epochs: 1 }),
+    ];
+
+    let mut table = Table::new(
+        "PD1 WMT15 de-en (xformer), 5 seeds",
+        &["Approach", "Accuracy (%)", "Runtime (h)", "Speedup", "Max resources"],
+    );
+    let mut reference = 0.0;
+    for b in &approaches {
+        let results: Vec<_> = (0..5)
+            .map(|s| Tuner::run(&bench, b.as_ref(), &spec, s, 0))
+            .collect();
+        let row = pasha::metrics::Row::from_results(&b.name(), &results);
+        if reference == 0.0 {
+            reference = row.runtime.mean();
+        }
+        table.row(&row.cells(reference));
+        // show the best configuration the last repetition found
+        if let Some(c) = &results.last().unwrap().best_config {
+            println!("{:<22} best config: {}", b.name(), c);
+        }
+    }
+    println!("\n{}", table.to_text());
+}

@@ -1,0 +1,42 @@
+//! Quickstart: tune a NAS benchmark with PASHA and compare against ASHA.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the 60-second tour: build a benchmark, pick a scheduler, run
+//! the tuner, inspect the result. The full experiment grid lives behind
+//! `pasha table <n>` (see `rust/src/report/experiments.rs`).
+
+use pasha::benchmarks::nasbench201::NasBench201;
+use pasha::benchmarks::Benchmark;
+use pasha::scheduler::asha::AshaBuilder;
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::tuner::{Tuner, TunerSpec};
+
+fn main() {
+    // The paper's CIFAR-10 NAS task (surrogate; see DESIGN.md
+    // §Substitutions) with its protocol defaults: 4 asynchronous
+    // workers, N=256 candidate configurations, r=1, η=3, R=200.
+    let bench = NasBench201::cifar10();
+    let spec = TunerSpec::default();
+
+    println!("benchmark: {} (R = {} epochs)\n", bench.name(), bench.max_epochs());
+
+    let asha = Tuner::run(&bench, &AshaBuilder::default(), &spec, /*seed=*/ 0, 0);
+    let pasha = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+
+    for r in [&asha, &pasha] {
+        println!("--- {} ---", r.scheduler_name);
+        println!("retrain accuracy : {:.2}%", r.retrain_accuracy);
+        println!("tuning runtime   : {:.1}h (simulated wall-clock, 4 workers)",
+                 r.runtime_seconds / 3600.0);
+        println!("max resources    : {} epochs", r.max_resources);
+        println!("epochs trained   : {}\n", r.total_epochs);
+    }
+    println!(
+        "PASHA speedup: {:.1}x at {:+.2} accuracy points",
+        asha.runtime_seconds / pasha.runtime_seconds,
+        pasha.retrain_accuracy - asha.retrain_accuracy
+    );
+}

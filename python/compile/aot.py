@@ -1,0 +1,146 @@
+"""AOT pipeline: lower every Layer-2 program to HLO *text* artifacts.
+
+HLO text — not ``lowered.compile()`` or serialized protos — is the
+interchange format: the image's xla_extension 0.5.1 rejects jax >= 0.5
+protos with 64-bit instruction ids, while its HLO text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); emits:
+
+    artifacts/mlp_train_h{64,128,256}.hlo.txt
+    artifacts/mlp_eval_h{64,128,256}.hlo.txt
+    artifacts/gp_ei_n64_d4_m64.hlo.txt
+    artifacts/knn_n512_d4_q4.hlo.txt
+    artifacts/manifest.json         (shapes, for the Rust loader)
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_specs():
+    """(name, fn, example_args) for every artifact."""
+    specs = []
+    for h in model.HIDDEN_VARIANTS:
+        pshapes = [f32(*s) for s in model.param_shapes(h)]
+        train_args = (
+            *pshapes,                      # params
+            *pshapes,                      # momentum buffers
+            f32(model.BATCH, model.FEATURES),
+            i32(model.BATCH),
+            f32(),                         # lr
+            f32(),                         # momentum
+        )
+        specs.append((f"mlp_train_h{h}", model.train_step, train_args))
+        train_k_args = (
+            *pshapes,
+            *pshapes,
+            f32(model.SCAN_K, model.BATCH, model.FEATURES),
+            i32(model.SCAN_K, model.BATCH),
+            f32(model.SCAN_K),
+            f32(),
+        )
+        specs.append((f"mlp_train{model.SCAN_K}_h{h}", model.train_step_k, train_k_args))
+        eval_args = (
+            *pshapes,
+            f32(model.VAL_N, model.FEATURES),
+            i32(model.VAL_N),
+        )
+        specs.append((f"mlp_eval_h{h}", model.eval_step, eval_args))
+    specs.append((
+        f"gp_ei_n{model.GP_N}_d{model.GP_D}_m{model.GP_M}",
+        model.gp_ei,
+        (
+            f32(model.GP_N, model.GP_D),
+            f32(model.GP_N),
+            f32(model.GP_N),
+            f32(model.GP_M, model.GP_D),
+            f32(),  # f_best
+            f32(),  # lengthscale
+            f32(),  # signal variance
+        ),
+    ))
+    specs.append((
+        f"knn_n{model.KNN_N}_d{model.KNN_D}_q{model.KNN_Q}",
+        model.knn,
+        (
+            f32(model.KNN_N, model.KNN_D),
+            f32(model.KNN_Q, model.KNN_D),
+        ),
+    ))
+    return specs
+
+
+def arg_signature(args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in args
+    ]
+
+
+def build(out_dir: str, only=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, fn, args in lower_specs():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "inputs": arg_signature(args),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    # merge with an existing manifest when building a subset
+    existing = {}
+    if os.path.exists(manifest_path) and only:
+        with open(manifest_path) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(manifest_path, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(existing)} artifacts)")
+    return existing
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

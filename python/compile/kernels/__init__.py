@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; see DESIGN.md).
+
+Exports: linear_relu (fused linear+bias+ReLU with custom VJP), gram (RBF
+Gram matrix), pairdist (pairwise squared distances), and ref (pure-jnp
+oracles).
+"""
+
+from . import gram, linear_relu, pairdist, ref  # noqa: F401

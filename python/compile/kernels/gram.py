@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: RBF Gram matrix.
+
+``K[i, j] = sv * exp(-||X[i] - Z[j]||^2 / (2 * ls^2))`` — the kernel
+matrix behind the MOBSTER GP searcher. The grid tiles the (N, M) output;
+each step holds an ``(BN, D)`` row panel and a ``(BM, D)`` column panel
+in VMEM, expands the squared distance via the Gram identity
+``||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b`` (one MXU matmul per tile for
+the cross term), and applies the exponential on-tile (VPU).
+
+Hyperparameters ``ls``/``sv`` are scalar *runtime* operands (passed as
+(1,1) arrays — every grid step reads the same block).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _gram_kernel(x_ref, z_ref, ls_ref, sv_ref, o_ref):
+    x = x_ref[...]  # (BN, D)
+    z = z_ref[...]  # (BM, D)
+    ls = ls_ref[0, 0]
+    sv = sv_ref[0, 0]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (BN, 1)
+    zz = jnp.sum(z * z, axis=1, keepdims=True).T  # (1, BM)
+    cross = jnp.dot(x, z.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(xx + zz - 2.0 * cross, 0.0)
+    o_ref[...] = sv * jnp.exp(-d2 / (2.0 * ls * ls))
+
+
+def _tile(dim: int, preferred: int) -> int:
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def gram_pallas(x, z, ls, sv, *, bn: int = 128, bm: int = 128):
+    """RBF Gram matrix between row sets ``x`` (N, D) and ``z`` (M, D)."""
+    n, d = x.shape
+    m, d2 = z.shape
+    assert d == d2
+    ls = jnp.asarray(ls, jnp.float32).reshape(1, 1)
+    sv = jnp.asarray(sv, jnp.float32).reshape(1, 1)
+    bn = _tile(n, bn)
+    bm = _tile(m, bm)
+    return pl.pallas_call(
+        _gram_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, z, ls, sv)
+
+
+def reference(x, z, ls, sv):
+    """Pure-jnp oracle (see ref.py)."""
+    return ref.gram_ref(x, z, ls, sv)

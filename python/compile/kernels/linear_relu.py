@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernel: fused linear + bias + (optional) ReLU.
+
+The MLP's hot block ``y = max(x @ W + b, 0)`` as a single tiled kernel.
+TPU-idiomatic structure even though we execute under ``interpret=True``
+(the CPU PJRT plugin cannot run Mosaic custom-calls — see DESIGN.md
+§Hardware-Adaptation):
+
+* the grid iterates over ``(B // BM, O // BO)`` output tiles;
+* each grid step keeps an ``(BM, K)`` activation tile and a ``(K, BO)``
+  weight tile resident in VMEM and feeds the MXU with a single
+  ``jnp.dot`` (f32 accumulation);
+* the contraction dimension K is kept whole per tile — for this model
+  family K ≤ 256 so a full K-panel fits VMEM comfortably
+  (BM·K + K·BO + BM·BO floats ≈ 0.4 MiB at 128³ ≪ 16 MiB).
+
+The backward pass is provided via ``jax.custom_vjp`` with a pure-jnp
+implementation: the Pallas kernel stays on the forward path of the
+AOT-compiled train step, while XLA differentiates through the
+mathematically identical reference.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (BM, BO) output tile: full-K contraction + bias + activation."""
+    x = x_ref[...]  # (BM, K)
+    w = w_ref[...]  # (K, BO)
+    b = b_ref[...]  # (BO,)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``preferred``."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def linear_pallas(x, w, b, *, relu: bool, bm: int = 128, bo: int = 128):
+    """``max(x @ w + b, 0)`` (or without ReLU) as a Pallas call."""
+    batch, k = x.shape
+    k2, out = w.shape
+    assert k == k2 and b.shape == (out,), (x.shape, w.shape, b.shape)
+    bm = _tile(batch, bm)
+    bo = _tile(out, bo)
+    grid = (batch // bm, out // bo)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((batch, out), x.dtype),
+        grid=grid,
+        in_specs=[
+            # activation tile: row-block i, all of K
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # weight tile: all of K, column-block j
+            pl.BlockSpec((k, bo), lambda i, j: (0, j)),
+            # bias tile: column-block j
+            pl.BlockSpec((bo,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, relu: bool = True):
+    """Differentiable fused linear(+ReLU): Pallas forward, jnp backward."""
+    return linear_pallas(x, w, b, relu=relu)
+
+
+def _linear_fwd(x, w, b, relu):
+    y = linear_pallas(x, w, b, relu=relu)
+    return y, (x, w, y)
+
+
+def _linear_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0).astype(g.dtype)
+    dx = g @ w.T
+    dw = x.T @ g
+    db = g.sum(axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def reference(x, w, b, relu: bool = True):
+    """Pure-jnp oracle (see ref.py)."""
+    return ref.linear_ref(x, w, b, relu=relu)

@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: pairwise squared Euclidean distances.
+
+``D[q, n] = ||Q[q] - T[n]||^2`` between a query batch and a reference
+table — the compute core of the PD1 benchmark's 1-NN surrogate lookup.
+Same tiling strategy as the Gram kernel (row/column panels resident in
+VMEM, cross term on the MXU), without the exponential epilogue.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pairdist_kernel(q_ref, t_ref, o_ref):
+    q = q_ref[...]  # (BQ, D)
+    t = t_ref[...]  # (BN, D)
+    qq = jnp.sum(q * q, axis=1, keepdims=True)
+    tt = jnp.sum(t * t, axis=1, keepdims=True).T
+    cross = jnp.dot(q, t.T, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(qq + tt - 2.0 * cross, 0.0)
+
+
+def _tile(dim: int, preferred: int) -> int:
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def pairdist_pallas(q, t, *, bq: int = 128, bn: int = 128):
+    """Squared distances between ``q`` (Q, D) and ``t`` (N, D) → (Q, N)."""
+    nq, d = q.shape
+    nt, d2 = t.shape
+    assert d == d2
+    bq = _tile(nq, bq)
+    bn = _tile(nt, bn)
+    return pl.pallas_call(
+        _pairdist_kernel,
+        out_shape=jax.ShapeDtypeStruct((nq, nt), jnp.float32),
+        grid=(nq // bq, nt // bn),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(q, t)
+
+
+def reference(q, t):
+    """Pure-jnp oracle (see ref.py)."""
+    return ref.pairdist_ref(q, t)

@@ -1,0 +1,243 @@
+"""Layer-2 JAX compute graphs, built on the Layer-1 Pallas kernels.
+
+Three program families, each AOT-lowered to HLO text by `aot.py` and
+executed from Rust via PJRT (`rust/src/runtime/`):
+
+* **MLP train/eval step** — the real-training benchmark's model: a
+  32 -> H -> H -> 10 classifier (fused linear+ReLU Pallas kernels on the
+  forward path), softmax cross-entropy, SGD with momentum. The learning
+  rate and momentum are *runtime scalar operands*: the Rust coordinator
+  computes the polynomial decay schedule per step, so a single compiled
+  artifact serves the whole PD1-style search space.
+* **GP posterior + EI** — the MOBSTER searcher's acquisition: masked
+  (padded) RBF GP via the Pallas Gram kernel, posterior mean/variance at
+  a candidate batch, expected improvement.
+* **1-NN lookup** — the PD1 surrogate's nearest-neighbour resolution via
+  the Pallas pairwise-distance kernel.
+
+Shape constants must match `rust/src/benchmarks/realtrain.rs` and
+`rust/src/runtime/{gp,knn}.rs`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram as gram_k
+from .kernels import linear_relu as lin_k
+from .kernels import pairdist as pd_k
+
+# ---- real-training model constants (mirror realtrain.rs) ----
+FEATURES = 32
+CLASSES = 10
+BATCH = 128
+VAL_N = 1024
+HIDDEN_VARIANTS = (64, 128, 256)
+
+# ---- GP / kNN constants (mirror runtime/gp.rs, runtime/knn.rs) ----
+GP_N, GP_D, GP_M = 64, 4, 64
+KNN_N, KNN_D, KNN_Q = 512, 4, 4
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_logits(w1, b1, w2, b2, w3, b3, x):
+    """Forward pass through the 2-hidden-layer MLP (Pallas blocks)."""
+    h1 = lin_k.linear(x, w1, b1, True)
+    h2 = lin_k.linear(h1, w2, b2, True)
+    return lin_k.linear(h2, w3, b3, False)
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train_step(w1, b1, w2, b2, w3, b3,
+               m1, m2, m3, m4, m5, m6,
+               x, y, lr, momentum):
+    """One SGD-with-momentum minibatch update.
+
+    Returns the 12 updated tensors (params then momentum buffers, same
+    order as the inputs) followed by the scalar loss — 13 outputs, the
+    contract `runtime/trainer.rs` consumes.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    moms = (m1, m2, m3, m4, m5, m6)
+
+    def loss_of(ps):
+        return _xent(mlp_logits(*ps, x), y)
+
+    loss, grads = jax.value_and_grad(loss_of)(params)
+    new_moms = tuple(momentum * m + g for m, g in zip(moms, grads))
+    new_params = tuple(p - lr * m for p, m in zip(params, new_moms))
+    return (*new_params, *new_moms, loss)
+
+
+# steps fused per train_step_k call (transfer amortization; see
+# EXPERIMENTS.md §Perf): one PJRT execution uploads the 12 state tensors
+# once and runs SCAN_K SGD updates on device.
+SCAN_K = 8
+
+
+def train_step_k(w1, b1, w2, b2, w3, b3,
+                 m1, m2, m3, m4, m5, m6,
+                 xs, ys, lrs, momentum):
+    """SCAN_K fused SGD-with-momentum steps (lax.scan over minibatches).
+
+    xs: [K, BATCH, FEATURES]; ys: [K, BATCH]; lrs: [K] (the Rust
+    coordinator evaluates the polynomial decay schedule per step).
+    Returns the 12 updated tensors + mean loss over the K steps.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    moms = (m1, m2, m3, m4, m5, m6)
+
+    def body(carry, inp):
+        params, moms = carry
+        x, y, lr = inp
+
+        def loss_of(ps):
+            return _xent(mlp_logits(*ps, x), y)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        new_moms = tuple(momentum * m + g for m, g in zip(moms, grads))
+        new_params = tuple(p - lr * m for p, m in zip(params, new_moms))
+        return (new_params, new_moms), loss
+
+    (params, moms), losses = jax.lax.scan(body, (params, moms), (xs, ys, lrs))
+    return (*params, *moms, jnp.mean(losses))
+
+
+def eval_step(w1, b1, w2, b2, w3, b3, x, y):
+    """Validation (mean loss, accuracy fraction) over the full val set."""
+    logits = mlp_logits(w1, b1, w2, b2, w3, b3, x)
+    loss = _xent(logits, y)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def param_shapes(hidden):
+    """Shapes of the six parameter tensors (mirror trainer.rs)."""
+    return [
+        (FEATURES, hidden), (hidden,),
+        (hidden, hidden), (hidden,),
+        (hidden, CLASSES), (CLASSES,),
+    ]
+
+
+# --------------------------------------------------------------------------
+# GP posterior + expected improvement
+# --------------------------------------------------------------------------
+
+def _cholesky(a):
+    """Column-by-column Cholesky in basic HLO ops.
+
+    ``jnp.linalg`` lowers to LAPACK typed-FFI custom-calls that the Rust
+    side's XLA 0.5.1 cannot execute, so the factorization is written as a
+    `fori_loop` of rank-1 column updates (dynamic-update-slice + dot) —
+    plain HLO all the way down. n = GP_N = 64, so the sequential loop is
+    cheap.
+    """
+    n = a.shape[0]
+
+    def body(j, l):
+        s = a[:, j] - l @ l[j, :]
+        d = jnp.sqrt(jnp.maximum(s[j], 1e-30))
+        col = jnp.where(jnp.arange(n) >= j, s / d, 0.0)
+        return l.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def _solve_lower(l, b):
+    """Solve L x = b by forward substitution (b: (n,) or (n, m))."""
+    n = l.shape[0]
+
+    def body(i, x):
+        xi = (b[i] - l[i, :] @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _solve_upper_t(l, b):
+    """Solve L^T x = b by backward substitution."""
+    n = l.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        xi = (b[i] - l[:, i] @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _psd_solve(k, b):
+    """K⁻¹ b via Cholesky (K symmetric positive definite)."""
+    l = _cholesky(k)
+    return _solve_upper_t(l, _solve_lower(l, b))
+
+
+def _erf(x):
+    """Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+
+    Written out explicitly because XLA 0.5.1's HLO-text parser (the
+    version the Rust `xla` crate links) predates the dedicated `erf`
+    opcode jax's `jax.scipy.stats.norm` lowers to — and this is the very
+    same polynomial `rust/src/searcher/gp.rs` uses, so the PJRT and
+    pure-Rust acquisition values agree to float precision.
+    """
+    sign = jnp.sign(x)
+    x = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * x)
+    poly = t * (0.254829592 + t * (-0.284496736 + t * (
+        1.421413741 + t * (-1.453152027 + t * 1.061405429))))
+    return sign * (1.0 - poly * jnp.exp(-x * x))
+
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + _erf(z / jnp.sqrt(2.0)))
+
+
+def _norm_pdf(z):
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def gp_ei(x, y, noise, cand, f_best, ls, sv):
+    """Masked-GP posterior and EI at a candidate batch.
+
+    Padding convention: unused training slots carry ``noise >= 1e5``
+    (their y is ignored via the mask), making the padded posterior match
+    an unpadded exact GP.
+    """
+    mask = (noise < 1e5).astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(mask), 1.0)
+    ymean = jnp.sum(y * mask) / cnt
+    yc = (y - ymean) * mask
+
+    k = gram_k.gram_pallas(x, x, ls, sv)
+    k = k + jnp.diag(noise + 1e-10)
+    kq = gram_k.gram_pallas(x, cand, ls, sv)  # (N, M)
+
+    alpha = _psd_solve(k, yc)
+    mean = ymean + kq.T @ alpha
+    v = _psd_solve(k, kq)
+    var = jnp.maximum(sv - jnp.sum(kq * v, axis=0), 1e-12)
+
+    sd = jnp.sqrt(var)
+    z = (mean - f_best) / sd
+    ei = (mean - f_best) * _norm_cdf(z) + sd * _norm_pdf(z)
+    return ei, mean, var
+
+
+# --------------------------------------------------------------------------
+# 1-NN lookup
+# --------------------------------------------------------------------------
+
+def knn(table, queries):
+    """Nearest table row per query: (idx int32, squared distance)."""
+    d = pd_k.pairdist_pallas(queries, table)  # (Q, N)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    dist = jnp.min(d, axis=1)
+    return idx, dist

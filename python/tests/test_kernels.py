@@ -1,0 +1,159 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the tiling boundaries) so the BlockSpec
+index maps are exercised across uneven grids; assert_allclose against
+ref.py is the core correctness signal of the AOT stack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, linear_relu, pairdist, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+# --------------------------------------------------------------------------
+# linear(+ReLU)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8, 64, 128]),
+    i=st.sampled_from([1, 3, 32, 64]),
+    o=st.sampled_from([1, 10, 64, 128]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(b, i, o, relu, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(k1, b, i)
+    w = rand(k2, i, o)
+    bias = rand(k3, o)
+    got = linear_relu.linear_pallas(x, w, bias, relu=relu)
+    want = ref.linear_ref(x, w, bias, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([1, 16, 33, 128]),
+    bo=st.sampled_from([1, 16, 33, 128]),
+)
+def test_linear_tile_sizes_do_not_change_result(bm, bo):
+    k = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(k, 3)
+    x = rand(k1, 128, 32)
+    w = rand(k2, 32, 64)
+    b = rand(k3, 64)
+    got = linear_relu.linear_pallas(x, w, b, relu=True, bm=bm, bo=bo)
+    want = ref.linear_ref(x, w, b, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_linear_custom_vjp_matches_jnp_grads():
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = rand(k1, 16, 8)
+    w = rand(k2, 8, 12)
+    b = rand(k3, 12)
+    ct = rand(k4, 16, 12)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(linear_relu.linear(x, w, b, True) * ct)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.linear_ref(x, w, b, relu=True) * ct)
+
+    g_p = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    g_r = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gp, gr in zip(g_p, g_r):
+        np.testing.assert_allclose(gp, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_linear_relu_clamps_negatives():
+    x = jnp.array([[-1.0, -2.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    out = linear_relu.linear_pallas(x, w, b, relu=True)
+    assert (np.asarray(out) >= 0).all()
+    out_no = linear_relu.linear_pallas(x, w, b, relu=False)
+    np.testing.assert_allclose(out_no, x)
+
+
+# --------------------------------------------------------------------------
+# gram
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 7, 64]),
+    m=st.sampled_from([1, 3, 64, 128]),
+    d=st.sampled_from([1, 4, 8]),
+    ls=st.floats(0.05, 3.0),
+    sv=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(n, m, d, ls, sv, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, n, d, lo=0.0, hi=1.0)
+    z = rand(k2, m, d, lo=0.0, hi=1.0)
+    got = gram.gram_pallas(x, z, ls, sv)
+    want = ref.gram_ref(x, z, ls, sv)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_gram_diagonal_is_signal_variance():
+    x = rand(jax.random.PRNGKey(2), 16, 4, lo=0.0, hi=1.0)
+    k = gram.gram_pallas(x, x, 0.3, 1.7)
+    np.testing.assert_allclose(np.diag(np.asarray(k)), 1.7, rtol=1e-5)
+
+
+def test_gram_symmetry():
+    x = rand(jax.random.PRNGKey(3), 32, 4, lo=0.0, hi=1.0)
+    k = np.asarray(gram.gram_pallas(x, x, 0.5, 1.0))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# pairdist
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.sampled_from([1, 4, 5, 16]),
+    n=st.sampled_from([1, 2, 128, 512]),
+    d=st.sampled_from([1, 4, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairdist_matches_ref(q, n, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    qs = rand(k1, q, d, lo=0.0, hi=1.0)
+    ts = rand(k2, n, d, lo=0.0, hi=1.0)
+    got = pairdist.pairdist_pallas(qs, ts)
+    want = ref.pairdist_ref(qs, ts)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_pairdist_self_distance_zero():
+    x = rand(jax.random.PRNGKey(4), 8, 4)
+    d = np.asarray(pairdist.pairdist_pallas(x, x))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-5)
+    assert (d >= 0).all()
+
+
+def test_pairdist_known_values():
+    q = jnp.array([[0.0, 0.0], [1.0, 1.0]], jnp.float32)
+    t = jnp.array([[3.0, 4.0]], jnp.float32)
+    d = np.asarray(pairdist.pairdist_pallas(q, t))
+    np.testing.assert_allclose(d[:, 0], [25.0, 13.0], rtol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

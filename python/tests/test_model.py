@@ -1,0 +1,234 @@
+"""Layer-2 correctness: the JAX model graphs behave as specified and the
+AOT lowering produces loadable HLO text."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def init_params(key, hidden):
+    ks = jax.random.split(key, 6)
+    shapes = model.param_shapes(hidden)
+    params = []
+    for i, s in enumerate(shapes):
+        if len(s) == 2:
+            params.append(jax.random.normal(ks[i], s, jnp.float32)
+                          * np.sqrt(2.0 / s[0]))
+        else:
+            params.append(jnp.zeros(s, jnp.float32))
+    return params
+
+
+def toy_batch(key, n):
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (n, model.FEATURES), jnp.float32, -1, 1)
+    # learnable rule: class = argmax over 10 fixed random projections
+    proj = jax.random.normal(jax.random.PRNGKey(99),
+                             (model.FEATURES, model.CLASSES), jnp.float32)
+    y = jnp.argmax(x @ proj, axis=1).astype(jnp.int32)
+    return x, y
+
+
+class TestTrainStep:
+    def test_shapes_and_output_count(self):
+        params = init_params(jax.random.PRNGKey(0), 64)
+        moms = [jnp.zeros_like(p) for p in params]
+        x, y = toy_batch(jax.random.PRNGKey(1), model.BATCH)
+        out = model.train_step(*params, *moms, x, y,
+                               jnp.float32(0.1), jnp.float32(0.9))
+        assert len(out) == 13
+        for p, o in zip(params + moms, out[:12]):
+            assert o.shape == p.shape
+        assert out[12].shape == ()
+
+    def test_loss_decreases_over_steps(self):
+        params = init_params(jax.random.PRNGKey(0), 64)
+        moms = [jnp.zeros_like(p) for p in params]
+        x, y = toy_batch(jax.random.PRNGKey(1), model.BATCH)
+        step = jax.jit(model.train_step)
+        first = None
+        for i in range(60):
+            out = step(*params, *moms, x, y,
+                       jnp.float32(0.1), jnp.float32(0.9))
+            params, moms, loss = list(out[:6]), list(out[6:12]), out[12]
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first * 0.5, (first, float(loss))
+
+    def test_zero_lr_freezes_params(self):
+        params = init_params(jax.random.PRNGKey(0), 64)
+        moms = [jnp.zeros_like(p) for p in params]
+        x, y = toy_batch(jax.random.PRNGKey(1), model.BATCH)
+        out = model.train_step(*params, *moms, x, y,
+                               jnp.float32(0.0), jnp.float32(0.9))
+        for p, o in zip(params, out[:6]):
+            np.testing.assert_allclose(p, o)
+
+    def test_momentum_accumulates_gradient(self):
+        params = init_params(jax.random.PRNGKey(0), 64)
+        moms = [jnp.zeros_like(p) for p in params]
+        x, y = toy_batch(jax.random.PRNGKey(1), model.BATCH)
+        out = model.train_step(*params, *moms, x, y,
+                               jnp.float32(0.1), jnp.float32(0.9))
+        # with zero initial momentum, new momentum == gradient (nonzero)
+        assert any(float(jnp.abs(m).max()) > 0 for m in out[6:12])
+
+
+class TestTrainStepK:
+    def test_k_fused_steps_match_k_single_steps(self):
+        params = init_params(jax.random.PRNGKey(0), 64)
+        moms = [jnp.zeros_like(p) for p in params]
+        ks = jax.random.split(jax.random.PRNGKey(3), model.SCAN_K)
+        batches = [toy_batch(k, model.BATCH) for k in ks]
+        lrs = [0.1 * (0.9 ** i) for i in range(model.SCAN_K)]
+        # sequential reference
+        ps, ms = list(params), list(moms)
+        for (x, y), lr in zip(batches, lrs):
+            out = model.train_step(*ps, *ms, x, y,
+                                   jnp.float32(lr), jnp.float32(0.9))
+            ps, ms = list(out[:6]), list(out[6:12])
+        # fused scan
+        xs = jnp.stack([b[0] for b in batches])
+        ys = jnp.stack([b[1] for b in batches])
+        out_k = model.train_step_k(*params, *moms, xs, ys,
+                                   jnp.asarray(lrs, jnp.float32),
+                                   jnp.float32(0.9))
+        assert len(out_k) == 13
+        for ref, got in zip(ps + ms, out_k[:12]):
+            np.testing.assert_allclose(ref, got, rtol=2e-4, atol=2e-5)
+
+
+class TestEvalStep:
+    def test_accuracy_range_and_improvement(self):
+        params = init_params(jax.random.PRNGKey(0), 64)
+        moms = [jnp.zeros_like(p) for p in params]
+        x, y = toy_batch(jax.random.PRNGKey(1), model.BATCH)
+        vx, vy = toy_batch(jax.random.PRNGKey(2), model.VAL_N)
+        loss0, acc0 = model.eval_step(*params, vx, vy)
+        assert 0.0 <= float(acc0) <= 1.0
+        step = jax.jit(model.train_step)
+        for _ in range(60):
+            out = step(*params, *moms, x, y,
+                       jnp.float32(0.1), jnp.float32(0.9))
+            params, moms = list(out[:6]), list(out[6:12])
+        loss1, acc1 = model.eval_step(*params, vx, vy)
+        assert float(acc1) > float(acc0), (float(acc0), float(acc1))
+        assert float(loss1) < float(loss0)
+
+
+class TestGpEi:
+    def _data(self, n=20, m=10, seed=5):
+        key = jax.random.PRNGKey(seed)
+        kx, kc = jax.random.split(key)
+        x = jax.random.uniform(kx, (n, model.GP_D), jnp.float32)
+        y = jnp.sin(3.0 * x[:, 0]) + 0.5 * x[:, 1]
+        cand = jax.random.uniform(kc, (m, model.GP_D), jnp.float32)
+        return x, y, cand
+
+    def _pad(self, x, y, noise_var=1e-3):
+        n = x.shape[0]
+        xp = jnp.concatenate(
+            [x, 50.0 + jnp.arange(model.GP_N - n, dtype=jnp.float32)[:, None]
+             * jnp.ones((1, model.GP_D), jnp.float32)])
+        yp = jnp.concatenate([y, jnp.zeros(model.GP_N - n, jnp.float32)])
+        noise = jnp.concatenate([
+            jnp.full((n,), noise_var, jnp.float32),
+            jnp.full((model.GP_N - n,), 1e6, jnp.float32),
+        ])
+        return xp, yp, noise
+
+    def test_padded_matches_unpadded_exact_gp(self):
+        x, y, cand = self._data()
+        xp, yp, noise = self._pad(x, y)
+        candp = jnp.concatenate(
+            [cand, jnp.zeros((model.GP_M - cand.shape[0], model.GP_D))])
+        f_best = float(jnp.max(y))
+        ei, mean, var = model.gp_ei(xp, yp, noise, candp,
+                                    jnp.float32(f_best),
+                                    jnp.float32(0.3), jnp.float32(1.0))
+        # exact (unpadded) reference
+        from compile.kernels import ref
+        k = ref.gram_ref(x, x, 0.3, 1.0) + 1e-3 * jnp.eye(x.shape[0])
+        kq = ref.gram_ref(x, cand, 0.3, 1.0)
+        ymean = jnp.mean(y)
+        alpha = jnp.linalg.solve(k, y - ymean)
+        mean_ref = ymean + kq.T @ alpha
+        var_ref = 1.0 - jnp.sum(kq * jnp.linalg.solve(k, kq), axis=0)
+        np.testing.assert_allclose(mean[:10], mean_ref, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(var[:10], var_ref, rtol=1e-2, atol=1e-3)
+
+    def test_ei_nonnegative_and_zero_far_below_best(self):
+        x, y, cand = self._data()
+        xp, yp, noise = self._pad(x, y)
+        candp = jnp.concatenate(
+            [cand, jnp.zeros((model.GP_M - cand.shape[0], model.GP_D))])
+        ei, _, _ = model.gp_ei(xp, yp, noise, candp,
+                               jnp.float32(100.0),  # unreachable incumbent
+                               jnp.float32(0.3), jnp.float32(1.0))
+        assert (np.asarray(ei) >= 0).all()
+        assert float(jnp.max(ei)) < 1e-3
+
+
+class TestKnn:
+    def test_matches_numpy_argmin(self):
+        key = jax.random.PRNGKey(7)
+        kt, kq = jax.random.split(key)
+        table = jax.random.uniform(kt, (model.KNN_N, model.KNN_D))
+        qs = jax.random.uniform(kq, (model.KNN_Q, model.KNN_D))
+        idx, dist = model.knn(table, qs)
+        tn, qn = np.asarray(table), np.asarray(qs)
+        for i in range(model.KNN_Q):
+            d = ((tn - qn[i]) ** 2).sum(axis=1)
+            assert int(idx[i]) == int(d.argmin())
+            np.testing.assert_allclose(float(dist[i]), d.min(), rtol=1e-4)
+
+    def test_exact_member_resolves_to_itself(self):
+        table = jax.random.uniform(jax.random.PRNGKey(8),
+                                   (model.KNN_N, model.KNN_D))
+        qs = table[:model.KNN_Q]
+        idx, dist = model.knn(table, qs)
+        np.testing.assert_array_equal(np.asarray(idx),
+                                      np.arange(model.KNN_Q))
+        np.testing.assert_allclose(np.asarray(dist), 0.0, atol=1e-6)
+
+
+class TestAot:
+    def test_hlo_text_emitted_and_parseable_shape(self):
+        with tempfile.TemporaryDirectory() as d:
+            manifest = aot.build(d, only=["knn_n512_d4_q4"])
+            assert "knn_n512_d4_q4" in manifest
+            path = os.path.join(d, "knn_n512_d4_q4.hlo.txt")
+            text = open(path).read()
+            assert text.startswith("HloModule"), text[:50]
+            assert "f32[512,4]" in text
+            mpath = os.path.join(d, "manifest.json")
+            m = json.load(open(mpath))
+            assert m["knn_n512_d4_q4"]["inputs"][0]["shape"] == [512, 4]
+
+    def test_all_specs_have_unique_names(self):
+        names = [n for n, _, _ in aot.lower_specs()]
+        assert len(names) == len(set(names))
+        assert len(names) == 3 * len(model.HIDDEN_VARIANTS) + 2
+
+    def test_train_step_lowers_with_13_outputs(self):
+        # lower the smallest variant and check the ROOT tuple arity
+        with tempfile.TemporaryDirectory() as d:
+            aot.build(d, only=["mlp_train_h64"])
+            text = open(os.path.join(d, "mlp_train_h64.hlo.txt")).read()
+            assert "HloModule" in text
+            # 12 tensors + scalar loss in the output tuple
+            root_line = [l for l in text.splitlines() if "ROOT" in l][-1]
+            assert root_line.count("f32") >= 13, root_line
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,78 @@
+//! Ablation benches for the design choices called out in DESIGN.md:
+//!
+//! * scheduler family (PASHA vs ASHA vs synchronous SH vs Hyperband) on
+//!   the same workload — quantifies both the runtime saved by PASHA and
+//!   the synchronization overhead ASHA removes;
+//! * ε percentile N (Table 15 doubles as an ablation);
+//! * criss-cross eligibility window (top-rung-only curves vs all trials).
+
+use pasha::benchmarks::nasbench201::NasBench201;
+use pasha::ranking::noise::estimate_epsilon;
+use pasha::report::experiments::{ablation_schedulers, Scale};
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::ranking::RankingSpec;
+use pasha::tuner::{Tuner, TunerSpec};
+use pasha::util::benchkit::{once, section};
+use pasha::util::rng::Rng;
+
+fn main() {
+    section("Scheduler family (smoke scale)");
+    let (table, _) = once("ablation_schedulers", || {
+        ablation_schedulers(&Scale::smoke())
+    });
+    println!("{}", table.to_text());
+
+    section("ε percentile ablation (CIFAR-100, budget=96)");
+    let bench = NasBench201::cifar100();
+    let spec = TunerSpec {
+        config_budget: 96,
+        ..Default::default()
+    };
+    for n in [80.0, 90.0, 95.0, 100.0] {
+        let b = PashaBuilder::with_ranking(RankingSpec::NoiseAdaptive { percentile: n });
+        let (r, _) = once(&format!("PASHA N={n}%"), || {
+            Tuner::run(&bench, &b, &spec, 0, 0)
+        });
+        println!(
+            "    -> acc {:.2}%  runtime {:.2}h  max resources {}",
+            r.retrain_accuracy,
+            r.runtime_seconds / 3600.0,
+            r.max_resources
+        );
+    }
+
+    section("criss-cross eligibility window");
+    // Estimate ε from (a) only deep curves vs (b) all curves including
+    // short ones — quantifies why §4.2 restricts to the latest rung.
+    let mut rng = Rng::new(5);
+    let deep: Vec<Vec<f64>> = (0..12)
+        .map(|_| {
+            let base = rng.uniform(88.0, 94.0);
+            (0..81)
+                .map(|e| base * (1.0 - (-(e as f64 + 1.0) / 15.0).exp()) + rng.normal() * 0.5)
+                .collect()
+        })
+        .collect();
+    let shallow: Vec<Vec<f64>> = (0..64)
+        .map(|_| {
+            let base = rng.uniform(20.0, 94.0);
+            (0..3)
+                .map(|e| base * (1.0 - (-(e as f64 + 1.0) / 15.0).exp()) + rng.normal() * 2.0)
+                .collect()
+        })
+        .collect();
+    let deep_views: Vec<(usize, &[f64])> = deep
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (i, c.as_slice()))
+        .collect();
+    let mut all_views = deep_views.clone();
+    for (i, c) in shallow.iter().enumerate() {
+        all_views.push((100 + i, c.as_slice()));
+    }
+    let eps_deep = estimate_epsilon(&deep_views, 90.0);
+    let eps_all = estimate_epsilon(&all_views, 90.0);
+    println!("eps from top-rung curves only : {eps_deep:?}");
+    println!("eps from all curves           : {eps_all:?}");
+    println!("(top-rung restriction keeps ε tied to near-convergence noise)");
+}

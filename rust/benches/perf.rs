@@ -1,0 +1,179 @@
+//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//!
+//! * L3 scheduler internals — ε noise estimation, soft-rank consistency,
+//!   RBO/RRR, rung promotion, benchmark-oracle queries, whole simulated
+//!   tuning runs (events/sec);
+//! * GP fit/predict (the MOBSTER searcher's inner loop);
+//! * PJRT artifact execution latency (train step / eval / GP-EI / kNN),
+//!   when `make artifacts` has run.
+
+use pasha::benchmarks::knn::KnnTable;
+use pasha::benchmarks::nasbench201::NasBench201;
+use pasha::benchmarks::Benchmark;
+use pasha::config::space::Config;
+use pasha::ranking::noise::estimate_epsilon;
+use pasha::ranking::rbo::rbo;
+use pasha::ranking::rrr::rrr;
+use pasha::ranking::soft::soft_consistent;
+use pasha::scheduler::asha::AshaBuilder;
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::scheduler::rung::Rung;
+use pasha::scheduler::SchedulerBuilder;
+use pasha::searcher::gp::Gp;
+use pasha::tuner::{Tuner, TunerSpec};
+use pasha::util::benchkit::{bench, once, section};
+use pasha::util::rng::Rng;
+
+fn synth_curves(n: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let base = rng.uniform(80.0, 94.0);
+            (0..len)
+                .map(|e| base * (1.0 - (-(e as f64 + 1.0) / 20.0).exp()) + rng.normal())
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    section("L3: ranking-function hot paths");
+    // ε estimation over a realistic top-rung population (the dominant
+    // per-result cost inside PASHA)
+    for (n, len) in [(8usize, 27usize), (16, 81), (32, 200)] {
+        let curves = synth_curves(n, len, 42);
+        let views: Vec<(usize, &[f64])> = curves
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, c.as_slice()))
+            .collect();
+        bench(&format!("epsilon_estimate n={n} len={len}"), || {
+            std::hint::black_box(estimate_epsilon(&views, 90.0));
+        });
+    }
+    let ranked: Vec<(usize, f64)> = (0..32).map(|i| (i, 100.0 - i as f64)).collect();
+    bench("soft_consistent n=32", || {
+        std::hint::black_box(soft_consistent(&ranked, &ranked, 0.5));
+    });
+    let ids: Vec<usize> = (0..32).collect();
+    bench("rbo n=32 p=0.5", || {
+        std::hint::black_box(rbo(&ids, &ids, 0.5));
+    });
+    bench("rrr n=32 p=0.5", || {
+        std::hint::black_box(rrr(&ranked, &ranked, 0.5, true));
+    });
+
+    section("L3: rung promotion");
+    let mut rung = Rung::default();
+    for t in 0..256 {
+        rung.record(t, (t * 37 % 101) as f64);
+    }
+    bench("promotable scan n=256", || {
+        std::hint::black_box(rung.promotable(3));
+    });
+
+    section("Benchmark-oracle queries (per-epoch evaluator cost)");
+    let nb = NasBench201::cifar10();
+    let cfg = Config::cat(4242);
+    bench("nasbench201 accuracy_at", || {
+        std::hint::black_box(nb.accuracy_at(&cfg, 97, 0));
+    });
+    let pd1 = pasha::benchmarks::pd1::Pd1::wmt();
+    let mut rng = Rng::new(1);
+    let pd1_cfg = pd1.space().sample(&mut rng);
+    bench("pd1 accuracy_at (1-NN + curve)", || {
+        std::hint::black_box(pd1.accuracy_at(&pd1_cfg, 100, 0));
+    });
+    let table = pd1.knn_table();
+    let q = [0.3, 0.4, 0.5, 0.6];
+    bench("knn nearest (512×4, rust)", || {
+        std::hint::black_box(table.nearest(&q));
+    });
+
+    section("Whole tuning runs (simulated, budget=64, 4 workers)");
+    let spec = TunerSpec {
+        config_budget: 64,
+        ..Default::default()
+    };
+    for (name, builder) in [
+        ("ASHA", &AshaBuilder::default() as &dyn SchedulerBuilder),
+        ("PASHA", &PashaBuilder::default()),
+    ] {
+        let (r, dt) = once(&format!("tune {name} cifar10 budget=64"), || {
+            Tuner::run(&nb, builder, &spec, 0, 0)
+        });
+        println!(
+            "    -> {} jobs, {} epochs, {:.0} sim-seconds ({:.0} jobs/sec wall)",
+            r.jobs,
+            r.total_epochs,
+            r.runtime_seconds,
+            r.jobs as f64 / dt.as_secs_f64()
+        );
+    }
+
+    section("GP searcher inner loop");
+    let mut rng = Rng::new(3);
+    let x: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..4).map(|_| rng.next_f64()).collect())
+        .collect();
+    let y: Vec<f64> = x.iter().map(|p| (3.0 * p[0]).sin() + p[1]).collect();
+    bench("gp fit n=64 d=4", || {
+        std::hint::black_box(Gp::fit(&x, &y, 0.25, 1.0, 1e-3));
+    });
+    let gp = Gp::fit(&x, &y, 0.25, 1.0, 1e-3).unwrap();
+    bench("gp predict n=64", || {
+        std::hint::black_box(gp.predict(&[0.2, 0.4, 0.6, 0.8]));
+    });
+
+    section("PJRT artifact execution (L1/L2 via runtime)");
+    if !pasha::runtime::artifact::artifacts_available() {
+        println!("artifacts not built — run `make artifacts` for PJRT benches");
+        return;
+    }
+    let engine = pasha::runtime::artifact::Engine::cpu().expect("pjrt");
+    let (knn_art, _) = once("compile knn artifact", || {
+        pasha::runtime::knn::KnnArtifact::load(&engine).unwrap()
+    });
+    let mut big = KnnTable::new(4);
+    for i in 0..512 {
+        let v = i as f64 / 512.0;
+        big.push(&[v, 1.0 - v, v * v, 0.5]);
+    }
+    bench("knn nearest (512×4, PJRT artifact)", || {
+        std::hint::black_box(knn_art.nearest(&big, &q).unwrap());
+    });
+    let (gp_art, _) = once("compile gp_ei artifact", || {
+        pasha::runtime::gp::GpEiArtifact::load(&engine).unwrap()
+    });
+    let cand: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..4).map(|_| rng.next_f64()).collect())
+        .collect();
+    bench("gp_ei n=64 m=64 (PJRT artifact)", || {
+        std::hint::black_box(gp_art.run(&x, &y, &cand, 1.0, 0.25, 1.0, 1e-3).unwrap());
+    });
+    let spec = pasha::benchmarks::realtrain::RealTrainSpec {
+        hidden: 64,
+        max_epochs: 4,
+        data_seed: 0,
+    };
+    let (trainer, _) = once("compile mlp train+eval artifacts (h=64)", || {
+        pasha::runtime::trainer::MlpTrainer::new(&engine, spec).unwrap()
+    });
+    use pasha::config::space::ParamValue as P;
+    let tcfg = Config::new(vec![
+        P::Float(0.1),
+        P::Float(0.1),
+        P::Float(1.0),
+        P::Float(0.8),
+    ]);
+    let mut trial = 0usize;
+    bench("mlp train 1 epoch (32 steps + eval, PJRT)", || {
+        trial += 1;
+        std::hint::black_box(trainer.train_epochs(trial, &tcfg, 0, 1).unwrap());
+        trainer.release(trial);
+    });
+    let params = pasha::runtime::trainer::init_params(64, 0);
+    bench("mlp eval (1024×32, PJRT)", || {
+        std::hint::black_box(trainer.evaluate(&params).unwrap());
+    });
+}

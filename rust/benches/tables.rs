@@ -1,0 +1,123 @@
+//! End-to-end benches: one per paper table. Each regenerates the table
+//! at smoke scale (full scale is `pasha table <n> --scale paper`),
+//! printing the rows and the wall time of the whole experiment — the
+//! "does the experiment pipeline run fast enough to iterate on" signal.
+//!
+//! Run a subset with e.g. `cargo bench --bench tables -- table1 table13`.
+
+use pasha::benchmarks::nasbench201::Nb201Dataset;
+use pasha::report::experiments::{self, Scale};
+use pasha::util::benchkit::{once, section};
+
+fn scale() -> Scale {
+    Scale::smoke()
+}
+
+fn wants(filter: &[String], name: &str) -> bool {
+    filter.is_empty() || filter.iter().any(|f| name.contains(f.as_str()))
+}
+
+fn main() {
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let sc = scale();
+
+    let print = |tables: Vec<pasha::util::table::Table>| {
+        for t in &tables {
+            println!("{}", t.to_text());
+        }
+    };
+
+    if wants(&filter, "table1") {
+        section("Table 1 — NASBench201 main results");
+        let (tables, _) = once("table1 (3 datasets × 4 approaches, smoke)", || {
+            experiments::table1(&sc)
+        });
+        print(tables);
+    }
+    if wants(&filter, "table2") {
+        section("Table 2 — reduction factors (CIFAR-100)");
+        let (tables, _) = once("table2 (eta 2/4)", || experiments::table2(&sc));
+        print(tables);
+    }
+    if wants(&filter, "table3") {
+        section("Table 3 — MOBSTER vs PASHA BO");
+        let (tables, _) = once("table3 (GP searcher, 3 datasets)", || {
+            experiments::table3(&sc)
+        });
+        print(tables);
+    }
+    if wants(&filter, "table4") {
+        section("Table 4 — ranking functions (CIFAR-100 selection)");
+        let (t, _) = once("table4 (19 ranking variants)", || {
+            experiments::table_rankings(Nb201Dataset::Cifar100, &sc, 4)
+        });
+        println!("{}", t.to_text());
+    }
+    if wants(&filter, "table5") || wants(&filter, "table7") {
+        section("Table 5/7 — PD1 (WMT + ImageNet) with k-epoch baselines");
+        let (tables, _) = once("table5 (2 tasks × 7 approaches)", || {
+            experiments::table5(&sc)
+        });
+        print(tables);
+    }
+    if wants(&filter, "table6") {
+        section("Table 6 — NASBench201 extra baselines");
+        let (tables, _) = once("table6", || experiments::table6(&sc));
+        print(tables);
+    }
+    if wants(&filter, "table8") {
+        section("Table 8 — reduction factors (all datasets)");
+        let (tables, _) = once("table8", || experiments::table8(&sc));
+        print(tables);
+    }
+    if wants(&filter, "table9") {
+        section("Table 9 — ranking functions (CIFAR-10)");
+        let (t, _) = once("table9", || {
+            experiments::table_rankings(Nb201Dataset::Cifar10, &sc, 9)
+        });
+        println!("{}", t.to_text());
+    }
+    if wants(&filter, "table10") {
+        section("Table 10 — ranking functions (CIFAR-100)");
+        let (t, _) = once("table10", || {
+            experiments::table_rankings(Nb201Dataset::Cifar100, &sc, 10)
+        });
+        println!("{}", t.to_text());
+    }
+    if wants(&filter, "table11") {
+        section("Table 11 — ranking functions (ImageNet16-120)");
+        let (t, _) = once("table11", || {
+            experiments::table_rankings(Nb201Dataset::ImageNet16_120, &sc, 11)
+        });
+        println!("{}", t.to_text());
+    }
+    if wants(&filter, "table12") {
+        section("Table 12 — PD1 ranking functions");
+        let (tables, _) = once("table12", || experiments::table12(&sc));
+        print(tables);
+    }
+    if wants(&filter, "table13") {
+        section("Table 13 — LCBench (34 datasets)");
+        let (t, _) = once("table13 (34 datasets × ASHA/PASHA)", || {
+            experiments::table13(&sc, 34)
+        });
+        println!("{}", t.to_text());
+    }
+    if wants(&filter, "table14") {
+        section("Table 14 — variable maximum resources");
+        let (tables, _) = once("table14 (3 datasets × 200/50 epochs)", || {
+            experiments::table14(&sc)
+        });
+        print(tables);
+    }
+    if wants(&filter, "table15") {
+        section("Table 15 — ε percentile N");
+        let (tables, _) = once("table15 (N ∈ 100/95/90/80)", || {
+            experiments::table15(&sc)
+        });
+        print(tables);
+    }
+}

@@ -1,0 +1,261 @@
+//! Parametric learning-curve family used by the tabular benchmark
+//! surrogates.
+//!
+//! The paper's §3 assumptions are the behavioural contract our surrogates
+//! must exhibit: curves that increase (in expectation) and saturate,
+//! crossing points concentrated early in training, and near-tied top
+//! configurations whose observed ranking keeps swapping due to evaluation
+//! noise. [`CurveParams`] + [`curve_value`] produce exactly that:
+//!
+//! ```text
+//! acc(e) = floor + (final − floor) · (1 − exp(−e/τ))^γ  +  noise(e)
+//! ```
+//!
+//! * `τ` (time constant) controls convergence speed — heterogeneous τ
+//!   across configurations creates the early crossings;
+//! * `γ` shapes the knee;
+//! * `noise(e)` is iid Gaussian with a magnitude that decays from
+//!   `noise_early` to `noise_late` over training, producing the
+//!   criss-crossing behaviour that PASHA's ε-estimator (§4.2) measures.
+//!
+//! All values are deterministic functions of the seeds carried in
+//! `CurveParams`, so curves can be re-queried point-wise in any order.
+
+use crate::util::rng::{mix, Rng};
+
+/// Parameters of a single configuration's learning curve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CurveParams {
+    /// Asymptotic (noise-free) accuracy in percent.
+    pub final_acc: f64,
+    /// Accuracy floor at e → 0 (chance level).
+    pub floor: f64,
+    /// Convergence time constant in epochs.
+    pub tau: f64,
+    /// Knee shape exponent (> 0; 1 = pure saturating exponential).
+    pub gamma: f64,
+    /// Std-dev of evaluation noise at epoch 1 (percentage points).
+    pub noise_early: f64,
+    /// Std-dev of evaluation noise at saturation.
+    pub noise_late: f64,
+    /// Epoch scale over which noise decays from early to late.
+    pub noise_decay: f64,
+    /// Seed for this configuration's noise stream.
+    pub noise_seed: u64,
+}
+
+impl CurveParams {
+    /// Noise-free curve value at (1-based) epoch `e`.
+    pub fn clean(&self, e: u32) -> f64 {
+        debug_assert!(e >= 1);
+        let x = 1.0 - (-(e as f64) / self.tau).exp();
+        self.floor + (self.final_acc - self.floor) * x.powf(self.gamma)
+    }
+
+    /// Noise std-dev at epoch `e`.
+    pub fn noise_sd(&self, e: u32) -> f64 {
+        let w = (-(e as f64 - 1.0) / self.noise_decay).exp();
+        self.noise_late + (self.noise_early - self.noise_late) * w
+    }
+
+    /// Observed (noisy) validation accuracy at epoch `e`. Deterministic in
+    /// `(self.noise_seed, e)`; clamped to [0, 100].
+    pub fn value(&self, e: u32) -> f64 {
+        let mut rng = Rng::new(mix(&[self.noise_seed, e as u64]));
+        let v = self.clean(e) + rng.normal() * self.noise_sd(e);
+        v.clamp(0.0, 100.0)
+    }
+
+    /// Whole observed curve for epochs 1..=n.
+    pub fn values(&self, n: u32) -> Vec<f64> {
+        (1..=n).map(|e| self.value(e)).collect()
+    }
+}
+
+/// Convenience free function mirroring [`CurveParams::value`].
+pub fn curve_value(p: &CurveParams, epoch: u32) -> f64 {
+    p.value(epoch)
+}
+
+/// Specification of the marginal distribution a dataset's final accuracies
+/// are drawn from: a mixture of a "competent" Gaussian cluster near the
+/// ceiling and a uniform tail of poor configurations. Calibrated per
+/// dataset against the paper's random-baseline mean/σ and best-found
+/// accuracies (see `nasbench201.rs`).
+#[derive(Clone, Debug)]
+pub struct FinalAccDist {
+    /// Probability of the competent cluster.
+    pub p_good: f64,
+    /// Mean/σ of the competent cluster.
+    pub good_mean: f64,
+    pub good_sd: f64,
+    /// Uniform tail bounds for poor configurations.
+    pub bad_lo: f64,
+    pub bad_hi: f64,
+    /// Hard ceiling (best achievable on the benchmark).
+    pub ceiling: f64,
+}
+
+impl FinalAccDist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let v = if rng.next_f64() < self.p_good {
+            rng.normal_ms(self.good_mean, self.good_sd)
+        } else {
+            rng.uniform(self.bad_lo, self.bad_hi)
+        };
+        v.clamp(self.bad_lo * 0.5, self.ceiling)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+    use crate::util::stats;
+
+    fn params(seed: u64) -> CurveParams {
+        CurveParams {
+            final_acc: 90.0,
+            floor: 10.0,
+            tau: 20.0,
+            gamma: 1.0,
+            noise_early: 1.5,
+            noise_late: 0.3,
+            noise_decay: 30.0,
+            noise_seed: seed,
+        }
+    }
+
+    #[test]
+    fn clean_curve_monotone_and_saturating() {
+        let p = params(0);
+        let mut prev = 0.0;
+        for e in 1..=200 {
+            let v = p.clean(e);
+            assert!(v >= prev, "clean curve must be monotone");
+            prev = v;
+        }
+        assert!((p.clean(200) - 90.0).abs() < 0.01);
+        assert!(p.clean(1) < 20.0);
+    }
+
+    #[test]
+    fn value_deterministic_and_order_independent() {
+        let p = params(42);
+        let forward: Vec<f64> = (1..=50).map(|e| p.value(e)).collect();
+        let backward: Vec<f64> = (1..=50).rev().map(|e| p.value(e)).collect();
+        let mut backward = backward;
+        backward.reverse();
+        assert_eq!(forward, backward);
+    }
+
+    #[test]
+    fn different_seeds_different_noise() {
+        let a = params(1).values(30);
+        let b = params(2).values(30);
+        assert_ne!(a, b);
+        // but the underlying clean curve is identical
+        let diff: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .sum::<f64>()
+            / 30.0;
+        assert!(diff < 5.0, "noise alone should not move curves far: {diff}");
+    }
+
+    #[test]
+    fn noise_decays_over_training() {
+        let p = params(0);
+        assert!(p.noise_sd(1) > p.noise_sd(50));
+        assert!((p.noise_sd(1) - 1.5).abs() < 1e-9);
+        assert!(p.noise_sd(10_000) < 0.31);
+    }
+
+    #[test]
+    fn noise_magnitude_matches_spec() {
+        // Empirical σ of (value − clean) at a fixed epoch across seeds ≈ noise_sd.
+        let e = 5u32;
+        let devs: Vec<f64> = (0..4000)
+            .map(|s| {
+                let p = params(s);
+                p.value(e) - p.clean(e)
+            })
+            .collect();
+        let sd = stats::pstd(&devs);
+        let expect = params(0).noise_sd(e);
+        assert!(
+            (sd - expect).abs() < 0.1,
+            "sd={sd} expected≈{expect}"
+        );
+    }
+
+    #[test]
+    fn curves_cross_early_when_tau_differs() {
+        // Slow-converging but ultimately better config must cross a fast
+        // mediocre one, and the crossing must happen early relative to R.
+        let fast = CurveParams {
+            final_acc: 80.0,
+            tau: 3.0,
+            ..params(1)
+        };
+        let slow = CurveParams {
+            final_acc: 90.0,
+            tau: 25.0,
+            ..params(2)
+        };
+        let crossing = (1..=200)
+            .find(|&e| slow.clean(e) > fast.clean(e))
+            .expect("curves must cross");
+        assert!(crossing > 1, "fast starts ahead");
+        assert!(crossing < 60, "crossing should be early, got {crossing}");
+        assert!(slow.clean(200) > fast.clean(200));
+    }
+
+    #[test]
+    fn near_ties_criss_cross_due_to_noise() {
+        // Two configs within noise of each other swap observed ranking often.
+        let a = CurveParams {
+            final_acc: 90.0,
+            ..params(7)
+        };
+        let b = CurveParams {
+            final_acc: 90.2,
+            ..params(8)
+        };
+        let swaps = (2..=100)
+            .filter(|&e| (a.value(e) > b.value(e)) != (a.value(e - 1) > b.value(e - 1)))
+            .count();
+        assert!(swaps >= 5, "expected frequent rank swaps, got {swaps}");
+    }
+
+    #[test]
+    fn final_acc_dist_within_bounds() {
+        check("final acc dist respects ceiling", 300, |g| {
+            let d = FinalAccDist {
+                p_good: 0.7,
+                good_mean: 88.0,
+                good_sd: 4.0,
+                bad_lo: 10.0,
+                bad_hi: 75.0,
+                ceiling: 94.5,
+            };
+            let v = d.sample(g.rng());
+            assert!(v <= 94.5 && v >= 5.0, "v={v}");
+        });
+    }
+
+    #[test]
+    fn values_clamped_to_percentage() {
+        let p = CurveParams {
+            final_acc: 1.0,
+            floor: 0.5,
+            noise_early: 50.0,
+            ..params(3)
+        };
+        for e in 1..=50 {
+            let v = p.value(e);
+            assert!((0.0..=100.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! 1-nearest-neighbour lookup in the unit hypercube.
+//!
+//! The PD1 benchmark resolves arbitrary hyperparameter configurations to
+//! the nearest *logged* configuration (the paper: "We use 1-NN as a
+//! surrogate model for the PD1 benchmark"). This module is the pure-Rust
+//! implementation used on the hot path; `runtime::knn` exposes the same
+//! computation through the AOT-compiled Pallas pairwise-distance kernel
+//! for cross-validation of the PJRT path.
+
+/// A table of reference points (rows of dimension `dim`).
+#[derive(Clone, Debug)]
+pub struct KnnTable {
+    pub dim: usize,
+    /// Row-major [n × dim] coordinates, each in [0, 1].
+    pub points: Vec<f64>,
+}
+
+impl KnnTable {
+    pub fn new(dim: usize) -> Self {
+        KnnTable {
+            dim,
+            points: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len() / self.dim.max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn push(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.dim);
+        self.points.extend_from_slice(p);
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Squared Euclidean distance from `q` to row `i`.
+    #[inline]
+    pub fn dist2(&self, q: &[f64], i: usize) -> f64 {
+        let row = self.row(i);
+        let mut acc = 0.0;
+        for d in 0..self.dim {
+            let diff = q[d] - row[d];
+            acc += diff * diff;
+        }
+        acc
+    }
+
+    /// Index of the nearest row to `q` (ties → lowest index).
+    pub fn nearest(&self, q: &[f64]) -> usize {
+        assert_eq!(q.len(), self.dim);
+        assert!(!self.is_empty(), "nearest() on empty table");
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for i in 0..self.len() {
+            let d = self.dist2(q, i);
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Indices of the k nearest rows, ascending by distance.
+    pub fn k_nearest(&self, q: &[f64], k: usize) -> Vec<usize> {
+        let mut dists: Vec<(f64, usize)> =
+            (0..self.len()).map(|i| (self.dist2(q, i), i)).collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        dists.into_iter().take(k).map(|(_, i)| i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    fn table3() -> KnnTable {
+        let mut t = KnnTable::new(2);
+        t.push(&[0.0, 0.0]);
+        t.push(&[1.0, 0.0]);
+        t.push(&[0.0, 1.0]);
+        t
+    }
+
+    #[test]
+    fn nearest_basic() {
+        let t = table3();
+        assert_eq!(t.nearest(&[0.1, 0.1]), 0);
+        assert_eq!(t.nearest(&[0.9, 0.1]), 1);
+        assert_eq!(t.nearest(&[0.1, 0.9]), 2);
+    }
+
+    #[test]
+    fn nearest_exact_point_is_itself() {
+        let t = table3();
+        for i in 0..t.len() {
+            assert_eq!(t.nearest(t.row(i)), i);
+        }
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        let mut t = KnnTable::new(1);
+        t.push(&[0.0]);
+        t.push(&[1.0]);
+        assert_eq!(t.nearest(&[0.5]), 0);
+    }
+
+    #[test]
+    fn k_nearest_sorted_by_distance() {
+        let t = table3();
+        let ks = t.k_nearest(&[0.2, 0.2], 3);
+        assert_eq!(ks[0], 0);
+        assert_eq!(ks.len(), 3);
+        let d: Vec<f64> = ks.iter().map(|&i| t.dist2(&[0.2, 0.2], i)).collect();
+        assert!(d[0] <= d[1] && d[1] <= d[2]);
+    }
+
+    #[test]
+    fn property_nearest_minimizes_distance() {
+        check("nearest is argmin of dist2", 100, |g| {
+            let dim = g.usize(1, 5);
+            let n = g.usize(1, 40);
+            let mut t = KnnTable::new(dim);
+            for _ in 0..n {
+                let p: Vec<f64> = (0..dim).map(|_| g.f64(0.0, 1.0)).collect();
+                t.push(&p);
+            }
+            let q: Vec<f64> = (0..dim).map(|_| g.f64(0.0, 1.0)).collect();
+            let near = t.nearest(&q);
+            let dn = t.dist2(&q, near);
+            for i in 0..t.len() {
+                assert!(dn <= t.dist2(&q, i) + 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_table_panics() {
+        let t = KnnTable::new(2);
+        t.nearest(&[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,391 @@
+//! PD1 surrogate (Wang et al., 2021): the two large-scale HPO tasks used
+//! in §5.3 of the paper — WMT15 German-English (xformer, 1414 epochs) and
+//! ImageNet (ResNet50, 251 epochs) — over the 4-dimensional optimizer
+//! search space (base lr, 1−momentum, polynomial decay power, decay-steps
+//! fraction).
+//!
+//! The real PD1 tabulates logged training runs and the paper queries it
+//! through a 1-NN surrogate. We rebuild the same mechanism: a table of
+//! `TABLE_SIZE` logged configurations is generated from a smooth
+//! *response surface* (optimizer-quality model) and arbitrary queries
+//! resolve to the nearest logged entry in encoded hyperparameter space.
+//!
+//! The response surface encodes standard optimizer behaviour:
+//! * accuracy peaks at a dataset-specific (lr*, momentum*) sweet spot and
+//!   falls off log-quadratically;
+//! * configurations whose effective step size `lr / (1−β)` is too large
+//!   diverge to near-floor accuracy (this produces the enormous variance
+//!   of the random baseline — 33.9 ± 22.0 on WMT);
+//! * small learning rates converge slowly (large τ), which is what makes
+//!   aggressive early stopping risky and multi-fidelity scheduling
+//!   interesting.
+
+use super::curves::CurveParams;
+use super::knn::KnnTable;
+use super::Benchmark;
+use crate::config::space::{Config, SearchSpace};
+use crate::util::rng::{mix, Rng};
+
+/// Number of logged configurations in the surrogate table.
+pub const TABLE_SIZE: usize = 512;
+
+/// The two PD1 tasks used by the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pd1Task {
+    /// WMT15 German-English, xformer, batch 64, 1414 epochs.
+    Wmt,
+    /// ImageNet, ResNet50, batch 512, 251 epochs.
+    ImageNet,
+}
+
+impl Pd1Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pd1Task::Wmt => "wmt",
+            Pd1Task::ImageNet => "imagenet",
+        }
+    }
+
+    fn id(&self) -> u64 {
+        match self {
+            Pd1Task::Wmt => 0x3317,
+            Pd1Task::ImageNet => 0x1337,
+        }
+    }
+
+    pub fn max_epochs(&self) -> u32 {
+        match self {
+            Pd1Task::Wmt => 1414,
+            Pd1Task::ImageNet => 251,
+        }
+    }
+
+    fn epoch_cost(&self) -> f64 {
+        match self {
+            // calibrated to the paper's one-epoch-baseline runtimes
+            // (256 configs / 4 workers × cost ≈ 0.6h WMT, 1.1h ImageNet)
+            Pd1Task::Wmt => 34.0,
+            Pd1Task::ImageNet => 62.0,
+        }
+    }
+}
+
+/// Response-surface constants per task.
+#[derive(Clone, Debug)]
+struct Surface {
+    /// log10 of the optimal learning rate.
+    log_lr_star: f64,
+    lr_width: f64,
+    /// log10 of the optimal 1−momentum.
+    log_omm_star: f64,
+    omm_width: f64,
+    /// Best achievable accuracy and floor.
+    peak: f64,
+    floor: f64,
+    /// Exponent shaping how quickly quality decays off-peak.
+    shape: f64,
+    /// Divergence threshold on log10(lr / (1−β)).
+    diverge_at: f64,
+    /// Curve time constants.
+    tau_base: f64,
+    tau_spread: f64,
+    noise_early: f64,
+    noise_late: f64,
+}
+
+/// One PD1 surrogate task.
+pub struct Pd1 {
+    task: Pd1Task,
+    space: SearchSpace,
+    surface: Surface,
+    /// Logged configurations (encoded) resolved via 1-NN.
+    table: KnnTable,
+    /// Decoded table configs (for curve derivation).
+    table_configs: Vec<Config>,
+}
+
+impl Pd1 {
+    pub fn new(task: Pd1Task) -> Self {
+        let surface = match task {
+            Pd1Task::Wmt => Surface {
+                log_lr_star: -0.5, // lr* ≈ 0.32
+                lr_width: 1.6,
+                log_omm_star: -1.2, // momentum* ≈ 0.94
+                omm_width: 1.4,
+                peak: 65.5,
+                floor: 1.5,
+                shape: 0.3,
+                diverge_at: 1.0,
+                tau_base: 6.0,
+                tau_spread: 300.0,
+                noise_early: 1.6,
+                noise_late: 0.5,
+            },
+            Pd1Task::ImageNet => Surface {
+                log_lr_star: -0.2, // lr* ≈ 0.63 (batch 512)
+                lr_width: 1.5,
+                log_omm_star: -1.0, // momentum* ≈ 0.9
+                omm_width: 1.3,
+                peak: 76.8,
+                floor: 0.5,
+                shape: 0.32,
+                diverge_at: 1.1,
+                tau_base: 12.0,
+                tau_spread: 120.0,
+                noise_early: 1.8,
+                noise_late: 0.6,
+            },
+        };
+        let space = SearchSpace::pd1();
+        // Generate the logged-run table from a fixed stream so every Pd1
+        // instance shares the same "benchmark data".
+        let mut rng = Rng::new(mix(&[task.id(), 0x7AB1E]));
+        let mut table = KnnTable::new(space.dim());
+        let mut table_configs = Vec::with_capacity(TABLE_SIZE);
+        for _ in 0..TABLE_SIZE {
+            let c = space.sample(&mut rng);
+            table.push(&space.encode(&c));
+            table_configs.push(c);
+        }
+        Pd1 {
+            task,
+            space,
+            surface,
+            table,
+            table_configs,
+        }
+    }
+
+    pub fn wmt() -> Self {
+        Self::new(Pd1Task::Wmt)
+    }
+    pub fn imagenet() -> Self {
+        Self::new(Pd1Task::ImageNet)
+    }
+
+    pub fn task(&self) -> Pd1Task {
+        self.task
+    }
+
+    /// The logged-run table (used by the PJRT-backed 1-NN cross-check).
+    pub fn knn_table(&self) -> &KnnTable {
+        &self.table
+    }
+
+    /// Resolve a query config to its nearest logged entry.
+    pub fn nearest_entry(&self, config: &Config) -> usize {
+        self.table.nearest(&self.space.encode(config))
+    }
+
+    /// Quality in [0, 1] of a configuration under the response surface.
+    pub fn quality(&self, config: &Config) -> f64 {
+        let s = &self.surface;
+        let lr = config.values[0].as_f64();
+        let omm = config.values[1].as_f64();
+        let power = config.values[2].as_f64();
+        let frac = config.values[3].as_f64();
+        let log_lr = lr.log10();
+        let log_omm = omm.log10();
+        // divergence: effective step size too large
+        if log_lr - log_omm > s.diverge_at {
+            return 0.0;
+        }
+        let z_lr = (log_lr - s.log_lr_star) / s.lr_width;
+        let z_omm = (log_omm - s.log_omm_star) / s.omm_width;
+        let q_lr = (-0.5 * z_lr * z_lr).exp();
+        let q_omm = (-0.5 * z_omm * z_omm).exp();
+        // schedule params have mild, smooth effects
+        let q_power = 1.0 - 0.12 * (power - 1.0) * (power - 1.0);
+        let q_frac = 1.0 - 0.25 * (frac - 0.7) * (frac - 0.7);
+        (q_lr * q_omm * q_power * q_frac).clamp(0.0, 1.0)
+    }
+
+    /// Curve parameters of logged entry `i` under benchmark seed `seed`.
+    pub fn entry_curve(&self, i: usize, seed: u64) -> CurveParams {
+        let s = &self.surface;
+        let config = &self.table_configs[i];
+        let q = self.quality(config);
+        let final_acc = s.floor + (s.peak - s.floor) * q.powf(s.shape);
+        // small lr ⇒ slow convergence; quality enters quadratically so the
+        // whole competent neighbourhood converges fast (the paper's WMT
+        // one-epoch baseline is nearly as good as ASHA — epoch-1 signal
+        // must separate good from bad)
+        let lr = config.values[0].as_f64();
+        let slow = ((s.log_lr_star - lr.log10()).max(0.0) * 0.5).exp();
+        let off = 1.0 - q;
+        let tau = (s.tau_base + s.tau_spread * off * off) * slow;
+        CurveParams {
+            final_acc,
+            floor: s.floor,
+            tau: tau.min(self.task.max_epochs() as f64 * 1.5),
+            gamma: 1.0,
+            noise_early: s.noise_early,
+            noise_late: s.noise_late,
+            noise_decay: (self.task.max_epochs() as f64 / 8.0).max(10.0),
+            noise_seed: mix(&[self.task.id(), i as u64, seed, 0x40153]),
+        }
+    }
+}
+
+impl Benchmark for Pd1 {
+    fn name(&self) -> String {
+        format!("PD1/{}", self.task.name())
+    }
+
+    fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    fn max_epochs(&self) -> u32 {
+        self.task.max_epochs()
+    }
+
+    fn accuracy_at(&self, config: &Config, epoch: u32, seed: u64) -> f64 {
+        let entry = self.nearest_entry(config);
+        self.entry_curve(entry, seed).value(epoch)
+    }
+
+    fn epoch_cost(&self, _config: &Config, _epoch: u32) -> f64 {
+        self.task.epoch_cost()
+    }
+
+    fn retrain_accuracy(&self, config: &Config, seed: u64) -> f64 {
+        let entry = self.nearest_entry(config);
+        let p = self.entry_curve(entry, seed);
+        let mut rng = Rng::new(mix(&[self.task.id(), entry as u64, seed, 0x2E72]));
+        (p.final_acc + rng.normal() * 0.4).clamp(0.0, 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn random_finals(b: &Pd1, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let c = b.space().sample(&mut rng);
+                b.retrain_accuracy(&c, 0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn wmt_random_baseline_band() {
+        // Paper: random baseline 33.93 ± 21.96 on WMT.
+        let b = Pd1::wmt();
+        let finals = random_finals(&b, 1500, 1);
+        let m = stats::mean(&finals);
+        let s = stats::std(&finals);
+        assert!((22.0..=46.0).contains(&m), "mean={m}");
+        assert!((14.0..=30.0).contains(&s), "std={s}");
+    }
+
+    #[test]
+    fn imagenet_random_baseline_band() {
+        // Paper: random baseline 36.94 ± 31.05 on ImageNet.
+        let b = Pd1::imagenet();
+        let finals = random_finals(&b, 1500, 2);
+        let m = stats::mean(&finals);
+        let s = stats::std(&finals);
+        assert!((25.0..=50.0).contains(&m), "mean={m}");
+        assert!((18.0..=36.0).contains(&s), "std={s}");
+    }
+
+    #[test]
+    fn best_configs_reach_paper_band() {
+        // ASHA finds 62.7 on WMT / 75.1 on ImageNet: the table must contain
+        // entries in that range.
+        for (b, lo) in [(Pd1::wmt(), 61.0), (Pd1::imagenet(), 73.0)] {
+            let best = (0..TABLE_SIZE)
+                .map(|i| b.entry_curve(i, 0).final_acc)
+                .fold(f64::MIN, f64::max);
+            assert!(best >= lo, "{}: best={best}", b.name());
+        }
+    }
+
+    #[test]
+    fn divergence_region_is_floor() {
+        let b = Pd1::wmt();
+        // lr=10, momentum=0.999 ⇒ effective step 10/0.001=1e4 ⇒ diverged.
+        let c = Config::new(vec![
+            crate::config::space::ParamValue::Float(10.0),
+            crate::config::space::ParamValue::Float(1e-3),
+            crate::config::space::ParamValue::Float(1.0),
+            crate::config::space::ParamValue::Float(0.5),
+        ]);
+        assert_eq!(b.quality(&c), 0.0);
+        assert!(b.retrain_accuracy(&c, 0) < 6.0);
+    }
+
+    #[test]
+    fn sweet_spot_beats_neighbourhood() {
+        let b = Pd1::imagenet();
+        let sweet = Config::new(vec![
+            crate::config::space::ParamValue::Float(0.63),
+            crate::config::space::ParamValue::Float(0.1),
+            crate::config::space::ParamValue::Float(1.0),
+            crate::config::space::ParamValue::Float(0.7),
+        ]);
+        let off = Config::new(vec![
+            crate::config::space::ParamValue::Float(1e-4),
+            crate::config::space::ParamValue::Float(0.1),
+            crate::config::space::ParamValue::Float(1.0),
+            crate::config::space::ParamValue::Float(0.7),
+        ]);
+        assert!(b.quality(&sweet) > b.quality(&off) + 0.3);
+    }
+
+    #[test]
+    fn small_lr_converges_slowly() {
+        let b = Pd1::wmt();
+        // find two table entries with similar final acc but very different lr
+        let mut rng = Rng::new(5);
+        let mut slow_tau: f64 = 0.0;
+        let mut fast_tau = f64::INFINITY;
+        for _ in 0..400 {
+            let c = b.space().sample(&mut rng);
+            let e = b.nearest_entry(&c);
+            let curve = b.entry_curve(e, 0);
+            let lr = b.table_configs[e].values[0].as_f64();
+            if lr < 1e-3 {
+                slow_tau = slow_tau.max(curve.tau);
+            }
+            if lr > 0.1 {
+                fast_tau = fast_tau.min(curve.tau);
+            }
+        }
+        assert!(
+            slow_tau > fast_tau,
+            "small lr must converge slower: slow_tau={slow_tau} fast_tau={fast_tau}"
+        );
+    }
+
+    #[test]
+    fn knn_resolution_stable() {
+        let b = Pd1::wmt();
+        let mut rng = Rng::new(9);
+        let c = b.space().sample(&mut rng);
+        assert_eq!(b.nearest_entry(&c), b.nearest_entry(&c));
+        // a table config resolves to itself
+        let c0 = b.table_configs[17].clone();
+        assert_eq!(b.nearest_entry(&c0), 17);
+    }
+
+    #[test]
+    fn epoch_budgets_match_paper() {
+        assert_eq!(Pd1::wmt().max_epochs(), 1414);
+        assert_eq!(Pd1::imagenet().max_epochs(), 251);
+    }
+
+    #[test]
+    fn one_epoch_baseline_cost_band() {
+        // 256 configs × 1 epoch / 4 workers ≈ 0.6h (WMT) / 1.1h (ImageNet).
+        let wmt_h = 256.0 * Pd1::wmt().epoch_cost(&Config::cat(0), 1) / 4.0 / 3600.0;
+        assert!((0.45..=0.75).contains(&wmt_h), "{wmt_h}");
+        let in_h = 256.0 * Pd1::imagenet().epoch_cost(&Config::cat(0), 1) / 4.0 / 3600.0;
+        assert!((0.9..=1.3).contains(&in_h), "{in_h}");
+    }
+}

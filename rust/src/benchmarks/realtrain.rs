@@ -1,0 +1,247 @@
+//! Real-training benchmark substrate: the non-surrogate workload used by
+//! the end-to-end example.
+//!
+//! Unlike the tabular surrogates, this benchmark *actually trains* an MLP
+//! classifier — forward/backward/update steps are JAX+Pallas programs
+//! AOT-compiled to HLO and executed from Rust via PJRT
+//! (`runtime::trainer`). This module owns the parts that are independent
+//! of the runtime: the synthetic classification dataset and the workload
+//! specification (search space = the PD1 optimizer space, model variants,
+//! budgets).
+
+use crate::config::space::{Config, SearchSpace};
+use crate::util::rng::{mix, Rng};
+
+/// Input feature dimension of the synthetic task.
+pub const FEATURES: usize = 32;
+/// Number of classes.
+pub const CLASSES: usize = 10;
+/// Training-set size (must match the AOT-compiled eval batch layout).
+pub const TRAIN_N: usize = 4096;
+/// Validation-set size.
+pub const VAL_N: usize = 1024;
+/// Minibatch size baked into the compiled train step.
+pub const BATCH: usize = 128;
+
+/// A synthetic 10-class classification dataset: anisotropic Gaussian
+/// blobs pushed through a fixed random nonlinearity, so a linear model is
+/// insufficient but a small MLP separates it well. Deterministic in `seed`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub train_x: Vec<f32>, // [TRAIN_N × FEATURES]
+    pub train_y: Vec<i32>, // [TRAIN_N]
+    pub val_x: Vec<f32>,   // [VAL_N × FEATURES]
+    pub val_y: Vec<i32>,   // [VAL_N]
+}
+
+impl Dataset {
+    pub fn generate(seed: u64) -> Dataset {
+        let mut rng = Rng::new(mix(&[seed, 0xDA7A]));
+        // class centers, spread enough to be learnable, close enough to be
+        // non-trivial
+        let centers: Vec<Vec<f64>> = (0..CLASSES)
+            .map(|_| (0..FEATURES).map(|_| rng.normal() * 1.6).collect())
+            .collect();
+        // fixed random rotation-ish mixing matrix (not orthogonal; fine)
+        let mixmat: Vec<f64> = (0..FEATURES * FEATURES)
+            .map(|_| rng.normal() / (FEATURES as f64).sqrt())
+            .collect();
+        let mut gen_split = |n: usize, stream: u64| {
+            let mut r = rng.fork(stream);
+            let mut xs = Vec::with_capacity(n * FEATURES);
+            let mut ys = Vec::with_capacity(n);
+            for _ in 0..n {
+                let cls = r.below(CLASSES as u64) as usize;
+                // raw = center + noise
+                // heavy within-class noise: classes overlap, so accuracy
+                // climbs over many epochs instead of saturating at once
+                let raw: Vec<f64> = (0..FEATURES)
+                    .map(|d| centers[cls][d] + r.normal() * 2.2)
+                    .collect();
+                // mix + mild nonlinearity
+                for d in 0..FEATURES {
+                    let mut v = 0.0;
+                    for k in 0..FEATURES {
+                        v += mixmat[d * FEATURES + k] * raw[k];
+                    }
+                    xs.push((v + 0.1 * v * v * v.signum().min(1.0)).tanh() as f32);
+                }
+                ys.push(cls as i32);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen_split(TRAIN_N, 1);
+        let (val_x, val_y) = gen_split(VAL_N, 2);
+        Dataset {
+            train_x,
+            train_y,
+            val_x,
+            val_y,
+        }
+    }
+
+    /// Gather minibatch `b` of epoch `epoch` under a deterministic
+    /// per-epoch shuffle. Returns (x, y) slices copied into contiguous
+    /// buffers of shape [BATCH × FEATURES] / [BATCH].
+    pub fn minibatch(&self, seed: u64, epoch: u32, b: usize) -> (Vec<f32>, Vec<i32>) {
+        let order = self.epoch_order(seed, epoch);
+        let start = b * BATCH;
+        let mut x = Vec::with_capacity(BATCH * FEATURES);
+        let mut y = Vec::with_capacity(BATCH);
+        for &i in &order[start..start + BATCH] {
+            x.extend_from_slice(&self.train_x[i * FEATURES..(i + 1) * FEATURES]);
+            y.push(self.train_y[i]);
+        }
+        (x, y)
+    }
+
+    /// Number of minibatches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        TRAIN_N / BATCH
+    }
+
+    fn epoch_order(&self, seed: u64, epoch: u32) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..TRAIN_N).collect();
+        let mut r = Rng::new(mix(&[seed, epoch as u64, 0x04DE]));
+        r.shuffle(&mut order);
+        order
+    }
+}
+
+/// Workload specification for the real-training benchmark.
+#[derive(Clone, Debug)]
+pub struct RealTrainSpec {
+    /// Hidden width of the MLP (must match a compiled artifact variant).
+    pub hidden: usize,
+    /// Maximum training epochs (R).
+    pub max_epochs: u32,
+    /// Dataset seed.
+    pub data_seed: u64,
+}
+
+impl RealTrainSpec {
+    pub fn default_spec() -> Self {
+        RealTrainSpec {
+            hidden: 128,
+            max_epochs: 27,
+            data_seed: 0,
+        }
+    }
+
+    /// The search space: the PD1 optimizer space (lr, 1−momentum, decay
+    /// power, decay fraction) — hyperparameters are runtime inputs to the
+    /// compiled train step, so a single artifact serves every config.
+    pub fn space(&self) -> SearchSpace {
+        SearchSpace::pd1()
+    }
+
+    /// Effective learning rate at step `t` of `total` under the polynomial
+    /// decay schedule the paper's PD1 space parameterizes:
+    /// `lr(t) = lr0 · (1 − min(t, λT)/(λT))^p`, held at the end value after
+    /// the decay-steps fraction λ of training.
+    pub fn lr_at(&self, config: &Config, step: u64, total_steps: u64) -> f64 {
+        let lr0 = config.values[0].as_f64();
+        let power = config.values[2].as_f64();
+        let frac = config.values[3].as_f64();
+        let decay_steps = ((total_steps as f64) * frac).max(1.0);
+        let t = (step as f64).min(decay_steps);
+        let remain = 1.0 - t / decay_steps;
+        // keep a small floor so training never fully stalls
+        lr0 * remain.powf(power).max(1e-3)
+    }
+
+    pub fn momentum(&self, config: &Config) -> f64 {
+        1.0 - config.values[1].as_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_deterministic() {
+        let a = Dataset::generate(3);
+        let b = Dataset::generate(3);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.val_y, b.val_y);
+        let c = Dataset::generate(4);
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        let d = Dataset::generate(0);
+        assert_eq!(d.train_x.len(), TRAIN_N * FEATURES);
+        assert_eq!(d.train_y.len(), TRAIN_N);
+        assert_eq!(d.val_x.len(), VAL_N * FEATURES);
+        assert_eq!(d.val_y.len(), VAL_N);
+        assert!(d.train_y.iter().all(|&y| (0..CLASSES as i32).contains(&y)));
+    }
+
+    #[test]
+    fn features_bounded_by_tanh() {
+        let d = Dataset::generate(1);
+        assert!(d.train_x.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = Dataset::generate(2);
+        let mut seen = [false; CLASSES];
+        for &y in &d.train_y {
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn minibatch_partition_covers_epoch() {
+        let d = Dataset::generate(5);
+        let mut counts = vec![0usize; TRAIN_N];
+        let order = d.epoch_order(7, 1);
+        for &i in &order {
+            counts[i] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 1), "epoch order is a permutation");
+        // different epochs shuffle differently
+        assert_ne!(d.epoch_order(7, 1), d.epoch_order(7, 2));
+        // batches have the right shape
+        let (x, y) = d.minibatch(7, 1, 3);
+        assert_eq!(x.len(), BATCH * FEATURES);
+        assert_eq!(y.len(), BATCH);
+    }
+
+    #[test]
+    fn lr_schedule_decays_then_holds() {
+        use crate::config::space::ParamValue as P;
+        let spec = RealTrainSpec::default_spec();
+        let c = Config::new(vec![
+            P::Float(0.1),
+            P::Float(0.05),
+            P::Float(1.0),
+            P::Float(0.5),
+        ]);
+        let total = 1000;
+        let lr0 = spec.lr_at(&c, 0, total);
+        let mid = spec.lr_at(&c, 250, total);
+        let end_decay = spec.lr_at(&c, 500, total);
+        let after = spec.lr_at(&c, 900, total);
+        assert!((lr0 - 0.1).abs() < 1e-9);
+        assert!(mid < lr0 && mid > end_decay);
+        assert!((after - end_decay).abs() < 1e-12, "held after decay window");
+    }
+
+    #[test]
+    fn momentum_is_one_minus_param() {
+        use crate::config::space::ParamValue as P;
+        let spec = RealTrainSpec::default_spec();
+        let c = Config::new(vec![
+            P::Float(0.1),
+            P::Float(0.05),
+            P::Float(1.0),
+            P::Float(0.5),
+        ]);
+        assert!((spec.momentum(&c) - 0.95).abs() < 1e-12);
+    }
+}

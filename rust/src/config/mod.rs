@@ -1,0 +1,6 @@
+//! Hyperparameter configuration: search-space definitions, value encoding
+//! into the unit hypercube, and seeded sampling.
+
+pub mod space;
+
+pub use space::{Config, Domain, ParamValue, SearchSpace};

@@ -1,0 +1,376 @@
+//! Hyperparameter search-space definitions.
+//!
+//! A [`SearchSpace`] is an ordered list of named [`Domain`]s; a [`Config`]
+//! is one concrete assignment. Configurations can be encoded into the unit
+//! hypercube ([`SearchSpace::encode`]) — log-domains are encoded in log
+//! space — which is the representation used by the GP searcher and by the
+//! 1-NN surrogate lookup of the PD1 benchmark.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// The domain of a single hyperparameter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Domain {
+    /// Uniform continuous on [lo, hi].
+    Float { lo: f64, hi: f64 },
+    /// Log-uniform continuous on [lo, hi], lo > 0.
+    LogFloat { lo: f64, hi: f64 },
+    /// Uniform integer on [lo, hi] inclusive.
+    Int { lo: i64, hi: i64 },
+    /// Log-uniform integer on [lo, hi] inclusive, lo >= 1.
+    LogInt { lo: i64, hi: i64 },
+    /// Categorical with `n` unordered choices (stored as index).
+    Categorical { n: usize },
+}
+
+impl Domain {
+    /// Sample a value uniformly (w.r.t. the domain's measure).
+    pub fn sample(&self, rng: &mut Rng) -> ParamValue {
+        match *self {
+            Domain::Float { lo, hi } => ParamValue::Float(rng.uniform(lo, hi)),
+            Domain::LogFloat { lo, hi } => ParamValue::Float(rng.log_uniform(lo, hi)),
+            Domain::Int { lo, hi } => ParamValue::Int(rng.int_range(lo, hi)),
+            Domain::LogInt { lo, hi } => {
+                let v = rng.log_uniform(lo as f64, hi as f64 + 1.0);
+                ParamValue::Int((v.floor() as i64).clamp(lo, hi))
+            }
+            Domain::Categorical { n } => ParamValue::Cat(rng.below(n as u64) as usize),
+        }
+    }
+
+    /// Encode a value into [0, 1].
+    pub fn encode(&self, v: &ParamValue) -> f64 {
+        match (*self, v) {
+            (Domain::Float { lo, hi }, ParamValue::Float(x)) => (x - lo) / (hi - lo),
+            (Domain::LogFloat { lo, hi }, ParamValue::Float(x)) => {
+                (x.ln() - lo.ln()) / (hi.ln() - lo.ln())
+            }
+            (Domain::Int { lo, hi }, ParamValue::Int(x)) => {
+                if hi == lo {
+                    0.5
+                } else {
+                    (*x - lo) as f64 / (hi - lo) as f64
+                }
+            }
+            (Domain::LogInt { lo, hi }, ParamValue::Int(x)) => {
+                ((*x as f64).ln() - (lo as f64).ln()) / ((hi as f64).ln() - (lo as f64).ln())
+            }
+            (Domain::Categorical { n }, ParamValue::Cat(c)) => {
+                if n <= 1 {
+                    0.5
+                } else {
+                    *c as f64 / (n - 1) as f64
+                }
+            }
+            _ => panic!("domain/value kind mismatch: {:?} vs {:?}", self, v),
+        }
+    }
+
+    /// Decode a unit-interval coordinate back into a value (inverse of
+    /// [`Domain::encode`] up to rounding for discrete domains).
+    pub fn decode(&self, u: f64) -> ParamValue {
+        let u = u.clamp(0.0, 1.0);
+        match *self {
+            Domain::Float { lo, hi } => ParamValue::Float(lo + u * (hi - lo)),
+            Domain::LogFloat { lo, hi } => {
+                ParamValue::Float((lo.ln() + u * (hi.ln() - lo.ln())).exp())
+            }
+            Domain::Int { lo, hi } => {
+                ParamValue::Int((lo as f64 + u * (hi - lo) as f64).round() as i64)
+            }
+            Domain::LogInt { lo, hi } => {
+                let x = ((lo as f64).ln() + u * ((hi as f64).ln() - (lo as f64).ln())).exp();
+                ParamValue::Int((x.round() as i64).clamp(lo, hi))
+            }
+            Domain::Categorical { n } => {
+                ParamValue::Cat(((u * n as f64).floor() as usize).min(n.saturating_sub(1)))
+            }
+        }
+    }
+}
+
+impl Copy for Domain {}
+
+/// One hyperparameter value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    Float(f64),
+    Int(i64),
+    Cat(usize),
+}
+
+impl ParamValue {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            ParamValue::Float(x) => *x,
+            ParamValue::Int(x) => *x as f64,
+            ParamValue::Cat(c) => *c as f64,
+        }
+    }
+
+    pub fn as_cat(&self) -> usize {
+        match self {
+            ParamValue::Cat(c) => *c,
+            _ => panic!("not a categorical value: {:?}", self),
+        }
+    }
+}
+
+/// One concrete hyperparameter configuration (values ordered as in the
+/// owning [`SearchSpace`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub values: Vec<ParamValue>,
+}
+
+impl Config {
+    pub fn new(values: Vec<ParamValue>) -> Self {
+        Config { values }
+    }
+
+    /// Single-categorical convenience (used by NAS benchmarks where the
+    /// "configuration" is an architecture index).
+    pub fn cat(index: usize) -> Self {
+        Config {
+            values: vec![ParamValue::Cat(index)],
+        }
+    }
+
+    pub fn to_json(&self, space: &SearchSpace) -> Json {
+        let mut o = Json::obj();
+        for (i, v) in self.values.iter().enumerate() {
+            let name = &space.params[i].0;
+            match v {
+                ParamValue::Float(x) => o.set(name, *x),
+                ParamValue::Int(x) => o.set(name, *x),
+                ParamValue::Cat(c) => o.set(name, *c),
+            };
+        }
+        o
+    }
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, v) in self.values.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            match v {
+                ParamValue::Float(x) => write!(f, "{:.4e}", x)?,
+                ParamValue::Int(x) => write!(f, "{}", x)?,
+                ParamValue::Cat(c) => write!(f, "#{}", c)?,
+            }
+        }
+        write!(f, ")")
+    }
+}
+
+/// An ordered, named collection of hyperparameter domains.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub params: Vec<(String, Domain)>,
+}
+
+impl SearchSpace {
+    pub fn new() -> Self {
+        SearchSpace { params: Vec::new() }
+    }
+
+    pub fn add(mut self, name: &str, domain: Domain) -> Self {
+        assert!(
+            !self.params.iter().any(|(n, _)| n == name),
+            "duplicate param '{name}'"
+        );
+        self.params.push((name.to_string(), domain));
+        self
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|(n, _)| n == name)
+    }
+
+    /// Sample one configuration.
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        Config {
+            values: self.params.iter().map(|(_, d)| d.sample(rng)).collect(),
+        }
+    }
+
+    /// Encode into the unit hypercube (log domains in log space).
+    pub fn encode(&self, c: &Config) -> Vec<f64> {
+        assert_eq!(c.values.len(), self.dim(), "config/space dim mismatch");
+        self.params
+            .iter()
+            .zip(&c.values)
+            .map(|((_, d), v)| d.encode(v))
+            .collect()
+    }
+
+    /// Decode a unit-hypercube point back into a configuration.
+    pub fn decode(&self, u: &[f64]) -> Config {
+        assert_eq!(u.len(), self.dim());
+        Config {
+            values: self
+                .params
+                .iter()
+                .zip(u)
+                .map(|((_, d), &x)| d.decode(x))
+                .collect(),
+        }
+    }
+
+    /// The PD1 search space from §5.3 of the paper: base learning rate,
+    /// one-minus-momentum, polynomial decay power, decay-steps fraction.
+    pub fn pd1() -> Self {
+        SearchSpace::new()
+            .add("learning_rate", Domain::LogFloat { lo: 1e-5, hi: 10.0 })
+            .add("one_minus_momentum", Domain::LogFloat { lo: 1e-3, hi: 1.0 })
+            .add("decay_power", Domain::Float { lo: 0.1, hi: 2.0 })
+            .add(
+                "decay_steps_fraction",
+                Domain::Float { lo: 0.01, hi: 0.99 },
+            )
+    }
+
+    /// The LCBench search space from Appendix D.
+    pub fn lcbench() -> Self {
+        SearchSpace::new()
+            .add("num_layers", Domain::Int { lo: 1, hi: 5 })
+            .add("max_units", Domain::LogInt { lo: 64, hi: 1024 })
+            .add("batch_size", Domain::LogInt { lo: 16, hi: 512 })
+            .add("learning_rate", Domain::LogFloat { lo: 1e-4, hi: 1e-1 })
+            .add("weight_decay", Domain::Float { lo: 1e-5, hi: 1e-1 })
+            .add("momentum", Domain::Float { lo: 0.1, hi: 0.99 })
+            .add("max_dropout", Domain::Float { lo: 0.0, hi: 1.0 })
+    }
+
+    /// A NAS space over `n` tabulated architectures (NASBench201-style).
+    pub fn nas(n: usize) -> Self {
+        SearchSpace::new().add("architecture", Domain::Categorical { n })
+    }
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    #[test]
+    fn sample_within_domains() {
+        let space = SearchSpace::pd1();
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let c = space.sample(&mut rng);
+            let lr = c.values[0].as_f64();
+            assert!((1e-5..=10.0).contains(&lr));
+            let omm = c.values[1].as_f64();
+            assert!((1e-3..=1.0).contains(&omm));
+            let p = c.values[2].as_f64();
+            assert!((0.1..=2.0).contains(&p));
+        }
+    }
+
+    #[test]
+    fn encode_in_unit_cube() {
+        check("encode maps into [0,1]^d", 200, |g| {
+            let space = SearchSpace::lcbench();
+            let c = space.sample(g.rng());
+            for u in space.encode(&c) {
+                assert!((0.0..=1.0 + 1e-12).contains(&u), "u={u}");
+            }
+        });
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_float() {
+        check("decode(encode(c)) == c for continuous domains", 200, |g| {
+            let space = SearchSpace::pd1();
+            let c = space.sample(g.rng());
+            let c2 = space.decode(&space.encode(&c));
+            for (a, b) in c.values.iter().zip(&c2.values) {
+                let (a, b) = (a.as_f64(), b.as_f64());
+                assert!((a - b).abs() <= 1e-9 * a.abs().max(1.0), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn decode_clamps() {
+        let space = SearchSpace::pd1();
+        let c = space.decode(&[-0.5, 1.5, 0.0, 1.0]);
+        assert!((c.values[0].as_f64() - 1e-5).abs() < 1e-12);
+        assert!((c.values[1].as_f64() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_sampling_is_log_uniform() {
+        // Median of log-uniform on [1e-5, 10] is 10^((−5+1)/2) = 10^-2.
+        let d = Domain::LogFloat { lo: 1e-5, hi: 10.0 };
+        let mut rng = Rng::new(2);
+        let mut vals: Vec<f64> = (0..20000).map(|_| d.sample(&mut rng).as_f64()).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = vals[vals.len() / 2];
+        assert!(
+            (med.log10() - (-2.0)).abs() < 0.1,
+            "median {med} not ~1e-2"
+        );
+    }
+
+    #[test]
+    fn categorical_coverage() {
+        let d = Domain::Categorical { n: 7 };
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            seen[d.sample(&mut rng).as_cat()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn int_domains_inclusive() {
+        let d = Domain::Int { lo: 1, hi: 5 };
+        let mut rng = Rng::new(4);
+        let (mut lo, mut hi) = (false, false);
+        for _ in 0..1000 {
+            if let ParamValue::Int(v) = d.sample(&mut rng) {
+                assert!((1..=5).contains(&v));
+                lo |= v == 1;
+                hi |= v == 5;
+            }
+        }
+        assert!(lo && hi);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_param_rejected() {
+        let _ = SearchSpace::new()
+            .add("x", Domain::Float { lo: 0.0, hi: 1.0 })
+            .add("x", Domain::Float { lo: 0.0, hi: 1.0 });
+    }
+
+    #[test]
+    fn config_json_has_names() {
+        let space = SearchSpace::pd1();
+        let mut rng = Rng::new(5);
+        let c = space.sample(&mut rng);
+        let j = c.to_json(&space);
+        assert!(j.get("learning_rate").is_some());
+        assert!(j.get("decay_power").is_some());
+    }
+}

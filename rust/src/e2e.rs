@@ -1,0 +1,115 @@
+//! End-to-end driver: PASHA vs ASHA tuning *real* MLP training executed
+//! through PJRT — the workload that proves all three layers compose.
+//!
+//! Flow: the L3 scheduler hands out jobs → the thread-pool executor runs
+//! them on OS-thread workers → each job advances real SGD training whose
+//! train/eval steps are AOT-compiled JAX+Pallas HLO programs executed via
+//! the `xla` PJRT client → per-epoch validation accuracies feed back into
+//! PASHA's ranking-stability decision. Finally the best configuration is
+//! retrained from scratch (phase 2) and both schedulers are compared.
+
+use crate::benchmarks::realtrain::RealTrainSpec;
+use crate::executor::pool::run_pool;
+use crate::runtime::artifact::{artifacts_available, Engine};
+use crate::runtime::trainer::MlpTrainer;
+use crate::scheduler::asha::AshaBuilder;
+use crate::scheduler::pasha::PashaBuilder;
+use crate::scheduler::SchedulerBuilder;
+use crate::searcher::random::RandomSearcher;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Result of one end-to-end scheduler run.
+#[derive(Clone, Debug)]
+pub struct E2eRun {
+    pub scheduler: String,
+    pub wall_seconds: f64,
+    pub total_epochs: u64,
+    pub max_resources: u32,
+    pub best_val_acc: f64,
+    pub retrain_acc: f64,
+    pub loss_curve_of_best: Vec<f64>,
+}
+
+/// Run one scheduler over the real-training workload.
+pub fn run_one(
+    builder: &dyn SchedulerBuilder,
+    budget: usize,
+    hidden: usize,
+    workers: usize,
+    seed: u64,
+) -> Result<E2eRun> {
+    let engine = Engine::cpu()?;
+    let spec = RealTrainSpec {
+        hidden,
+        max_epochs: 27,
+        data_seed: 0,
+    };
+    let space = spec.space();
+    let trainer = Arc::new(MlpTrainer::new(&engine, spec.clone())?);
+    let mut scheduler = builder.build(spec.max_epochs, seed);
+    let mut searcher = RandomSearcher::new(seed);
+    let t0 = Instant::now();
+    let stats = run_pool(
+        scheduler.as_mut(),
+        &mut searcher,
+        &space,
+        budget,
+        workers,
+        Arc::clone(&trainer),
+    );
+    let best = scheduler
+        .best()
+        .ok_or_else(|| anyhow!("no best trial found"))?;
+    // Phase 2: retrain the selected configuration from scratch.
+    let retrain_acc = trainer.retrain(&best.config, spec.max_epochs)?;
+    let curve = scheduler.trials()[best.trial].curve.clone();
+    Ok(E2eRun {
+        scheduler: builder.name(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        total_epochs: stats.total_epochs,
+        max_resources: scheduler.max_resources_used(),
+        best_val_acc: best.metric,
+        retrain_acc,
+        loss_curve_of_best: curve,
+    })
+}
+
+/// The full comparison, printed as a report (used by `pasha e2e` and the
+/// `e2e_training` example).
+pub fn run_e2e(budget: usize, hidden: usize, workers: usize) -> Result<()> {
+    if !artifacts_available() {
+        return Err(anyhow!(
+            "AOT artifacts not found — run `make artifacts` first"
+        ));
+    }
+    println!("=== end-to-end: real MLP training via PJRT (hidden={hidden}, budget={budget}, workers={workers}) ===");
+    let pasha = run_one(&PashaBuilder::default(), budget, hidden, workers, 0)?;
+    let asha = run_one(&AshaBuilder::default(), budget, hidden, workers, 0)?;
+    for r in [&asha, &pasha] {
+        println!("\n--- {} ---", r.scheduler);
+        println!("wall time        : {:.1}s", r.wall_seconds);
+        println!("epochs trained   : {}", r.total_epochs);
+        println!("max resources    : {} epochs", r.max_resources);
+        println!("best val acc     : {:.2}%", r.best_val_acc);
+        println!("retrain accuracy : {:.2}%", r.retrain_acc);
+        println!(
+            "val-acc curve of selected config: {}",
+            r.loss_curve_of_best
+                .iter()
+                .map(|a| format!("{a:.1}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    let speedup = asha.total_epochs as f64 / pasha.total_epochs.max(1) as f64;
+    println!(
+        "\nPASHA used {:.1}x fewer training epochs than ASHA ({} vs {}), accuracy gap {:.2} points",
+        speedup,
+        pasha.total_epochs,
+        asha.total_epochs,
+        (asha.retrain_acc - pasha.retrain_acc).abs()
+    );
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! # PASHA — Efficient HPO and NAS with Progressive Resource Allocation
+//!
+//! A full-system reproduction of *PASHA* (Bohdal et al., ICLR 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the tuning framework: asynchronous
+//!   multi-fidelity schedulers ([`scheduler`]: ASHA, PASHA, successive
+//!   halving, Hyperband, baselines), the ranking-function library that
+//!   drives PASHA's progressive resource growth ([`ranking`]), searchers
+//!   ([`searcher`]: random and MOBSTER-style GP+EI), a discrete-event
+//!   multi-worker executor ([`executor`]), benchmark substrates
+//!   ([`benchmarks`]) and the orchestration layer ([`tuner`]).
+//! * **Layer 2** — JAX compute graphs (`python/compile/model.py`): MLP
+//!   train/eval steps, the GP posterior + EI acquisition, the 1-NN
+//!   surrogate — AOT-lowered to HLO text at build time.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) called from
+//!   the L2 graphs.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and executes them from Rust; Python is never on the
+//! request path.
+
+pub mod benchmarks;
+pub mod config;
+pub mod e2e;
+pub mod executor;
+pub mod metrics;
+pub mod ranking;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod searcher;
+pub mod tuner;
+pub mod util;
+
+/// Identifier of a trial (a sampled configuration under evaluation).
+pub type TrialId = usize;

@@ -1,0 +1,338 @@
+//! `pasha` — launcher CLI for the PASHA reproduction.
+//!
+//! Subcommands (hand-rolled parser; the offline image has no `clap`):
+//!
+//! ```text
+//! pasha run    --bench <name> --scheduler <name> [--budget N] [--seed S]
+//! pasha table  <id>  [--scale paper|smoke] [--out results/]
+//! pasha figure <1..5> [--out results/]
+//! pasha report [--scale paper|smoke] [--out results/]   # everything
+//! pasha e2e    [--budget N] [--hidden H]                # real PJRT training
+//! pasha artifacts-check                                  # PJRT smoke test
+//! ```
+
+use pasha::benchmarks::lcbench::LcBench;
+use pasha::benchmarks::nasbench201::{NasBench201, Nb201Dataset};
+use pasha::benchmarks::pd1::Pd1;
+use pasha::benchmarks::Benchmark;
+use pasha::report::{experiments, figures};
+use pasha::scheduler::asha::AshaBuilder;
+use pasha::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
+use pasha::scheduler::hyperband::HyperbandBuilder;
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::scheduler::sh::SyncShBuilder;
+use pasha::scheduler::SchedulerBuilder;
+use pasha::tuner::{SearcherKind, Tuner, TunerSpec};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let (cmd, rest) = (args[0].as_str(), &args[1..]);
+    let flags = parse_flags(rest);
+    let result = match cmd {
+        "run" => cmd_run(&flags),
+        "table" => cmd_table(rest.first().map(|s| s.as_str()), &flags),
+        "figure" => cmd_figure(rest.first().map(|s| s.as_str()), &flags),
+        "report" => cmd_report(&flags),
+        "e2e" => cmd_e2e(&flags),
+        "artifacts-check" => cmd_artifacts_check(),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "pasha — Progressive ASHA reproduction (Bohdal et al., ICLR 2023)
+
+USAGE:
+  pasha run    --bench <nas-cifar10|nas-cifar100|nas-imagenet16|pd1-wmt|pd1-imagenet|lcbench-<name>>
+               --scheduler <asha|pasha|sh|hyperband|1-epoch|random> [--budget N] [--seed S]
+               [--eta E] [--searcher random|bo] [--workers W]
+  pasha table  <1|2|3|4|5|6|8|9|10|11|12|13|14|15|ablation> [--scale paper|smoke] [--out DIR]
+  pasha figure <1|2|3|4|5> [--out DIR]
+  pasha report [--scale paper|smoke] [--out DIR]
+  pasha e2e    [--budget N] [--hidden 64|128|256] [--workers W]
+  pasha artifacts-check"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, default: T) -> T {
+    flags
+        .get(name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn out_dir(flags: &HashMap<String, String>) -> PathBuf {
+    PathBuf::from(
+        flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "results".to_string()),
+    )
+}
+
+fn scale(flags: &HashMap<String, String>) -> experiments::Scale {
+    match flags.get("scale").map(|s| s.as_str()) {
+        Some("smoke") => experiments::Scale::smoke(),
+        _ => experiments::Scale::paper(),
+    }
+}
+
+fn make_bench(name: &str) -> Result<Box<dyn Benchmark>, String> {
+    Ok(match name {
+        "nas-cifar10" => Box::new(NasBench201::cifar10()),
+        "nas-cifar100" => Box::new(NasBench201::cifar100()),
+        "nas-imagenet16" => Box::new(NasBench201::imagenet16()),
+        "pd1-wmt" => Box::new(Pd1::wmt()),
+        "pd1-imagenet" => Box::new(Pd1::imagenet()),
+        other => {
+            if let Some(ds) = other.strip_prefix("lcbench-") {
+                Box::new(LcBench::new(ds))
+            } else {
+                return Err(format!("unknown benchmark '{other}'"));
+            }
+        }
+    })
+}
+
+fn make_scheduler(
+    name: &str,
+    eta: u32,
+    budget: usize,
+) -> Result<Box<dyn SchedulerBuilder>, String> {
+    Ok(match name {
+        "asha" => Box::new(AshaBuilder { r_min: 1, eta }),
+        "pasha" => Box::new(PashaBuilder {
+            r_min: 1,
+            eta,
+            ranking: Default::default(),
+        }),
+        "sh" => Box::new(SyncShBuilder {
+            r_min: 1,
+            eta,
+            n0: budget,
+        }),
+        "hyperband" => Box::new(HyperbandBuilder { r_min: 1, eta }),
+        "1-epoch" => Box::new(FixedEpochBuilder { epochs: 1 }),
+        "random" => Box::new(RandomBaselineBuilder),
+        other => return Err(format!("unknown scheduler '{other}'")),
+    })
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
+    let bench_name = flags
+        .get("bench")
+        .cloned()
+        .unwrap_or_else(|| "nas-cifar10".into());
+    let sched_name = flags
+        .get("scheduler")
+        .cloned()
+        .unwrap_or_else(|| "pasha".into());
+    let budget: usize = flag(flags, "budget", 256);
+    let seed: u64 = flag(flags, "seed", 0);
+    let eta: u32 = flag(flags, "eta", 3);
+    let workers: usize = flag(flags, "workers", 4);
+    let searcher = match flags.get("searcher").map(|s| s.as_str()) {
+        Some("bo") => SearcherKind::Bo,
+        _ => SearcherKind::Random,
+    };
+    let bench = make_bench(&bench_name)?;
+    let builder = make_scheduler(&sched_name, eta, budget)?;
+    let spec = TunerSpec {
+        workers,
+        config_budget: budget,
+        searcher,
+    };
+    let t0 = std::time::Instant::now();
+    let r = Tuner::run(bench.as_ref(), builder.as_ref(), &spec, seed, 0);
+    println!("benchmark        : {}", bench.name());
+    println!("scheduler        : {}", r.scheduler_name);
+    println!("configs sampled  : {}", r.configs_sampled);
+    println!("jobs executed    : {}", r.jobs);
+    println!("epochs trained   : {}", r.total_epochs);
+    println!("max resources    : {} epochs", r.max_resources);
+    println!(
+        "tuning runtime   : {:.2}h (simulated)",
+        r.runtime_seconds / 3600.0
+    );
+    println!("best val metric  : {:.2}", r.best_metric);
+    println!("retrain accuracy : {:.2}%", r.retrain_accuracy);
+    if let Some(c) = &r.best_config {
+        println!("best config      : {c}");
+    }
+    println!("(wall time: {:.2}s)", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn write_tables(
+    tables: &[pasha::util::table::Table],
+    dir: &PathBuf,
+    stem: &str,
+) -> Result<(), String> {
+    std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    let mut md = String::new();
+    for t in tables {
+        println!("{}", t.to_text());
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+    }
+    let path = dir.join(format!("{stem}.md"));
+    std::fs::write(&path, md).map_err(|e| e.to_string())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_table(id: Option<&str>, flags: &HashMap<String, String>) -> Result<(), String> {
+    let id = id.ok_or("table id required")?;
+    let sc = scale(flags);
+    let dir = out_dir(flags);
+    let tables = match id {
+        "1" => experiments::table1(&sc),
+        "2" => experiments::table2(&sc),
+        "3" => experiments::table3(&sc),
+        "4" => vec![experiments::table_rankings(Nb201Dataset::Cifar100, &sc, 4)],
+        "5" | "7" => experiments::table5(&sc),
+        "6" => experiments::table6(&sc),
+        "8" => experiments::table8(&sc),
+        "9" => vec![experiments::table_rankings(Nb201Dataset::Cifar10, &sc, 9)],
+        "10" => vec![experiments::table_rankings(Nb201Dataset::Cifar100, &sc, 10)],
+        "11" => vec![experiments::table_rankings(
+            Nb201Dataset::ImageNet16_120,
+            &sc,
+            11,
+        )],
+        "12" => experiments::table12(&sc),
+        "13" => vec![experiments::table13(&sc, 34)],
+        "14" => experiments::table14(&sc),
+        "15" => experiments::table15(&sc),
+        "ablation" => vec![experiments::ablation_schedulers(&sc)],
+        other => return Err(format!("unknown table '{other}'")),
+    };
+    write_tables(&tables, &dir, &format!("table{id}"))
+}
+
+fn cmd_figure(id: Option<&str>, flags: &HashMap<String, String>) -> Result<(), String> {
+    let id = id.ok_or("figure id required")?;
+    let dir = out_dir(flags);
+    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+    let budget: usize = flag(flags, "budget", 256);
+    let (name, content) = match id {
+        "1" => ("figure1.txt".to_string(), figures::figure1(budget)),
+        "2" => (
+            "figure2.txt".to_string(),
+            figures::figure2(&[93.9, 93.8, 93.2, 93.1, 91.0], 0.15),
+        ),
+        "3" => (
+            "figure3_cifar10.csv".to_string(),
+            figures::figure3(Nb201Dataset::Cifar10, 0),
+        ),
+        "4" => (
+            "figure4_cifar10.csv".to_string(),
+            figures::figure4(Nb201Dataset::Cifar10, 0),
+        ),
+        "5" => {
+            for ds in [
+                Nb201Dataset::Cifar10,
+                Nb201Dataset::Cifar100,
+                Nb201Dataset::ImageNet16_120,
+            ] {
+                let csv = figures::figure5(ds, budget);
+                let p = dir.join(format!(
+                    "figure5_{}.csv",
+                    NasBench201::new(ds).name().replace('/', "_")
+                ));
+                std::fs::write(&p, csv).map_err(|e| e.to_string())?;
+                println!("wrote {}", p.display());
+            }
+            return Ok(());
+        }
+        other => return Err(format!("unknown figure '{other}'")),
+    };
+    let p = dir.join(name);
+    std::fs::write(&p, &content).map_err(|e| e.to_string())?;
+    if content.len() < 4000 {
+        println!("{content}");
+    }
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_report(flags: &HashMap<String, String>) -> Result<(), String> {
+    for id in [
+        "1", "2", "3", "4", "5", "6", "8", "9", "10", "11", "12", "13", "14", "15", "ablation",
+    ] {
+        println!("=== table {id} ===");
+        cmd_table(Some(id), flags)?;
+    }
+    for id in ["1", "2", "3", "4", "5"] {
+        println!("=== figure {id} ===");
+        cmd_figure(Some(id), flags)?;
+    }
+    Ok(())
+}
+
+fn cmd_e2e(flags: &HashMap<String, String>) -> Result<(), String> {
+    let budget: usize = flag(flags, "budget", 24);
+    let hidden: usize = flag(flags, "hidden", 64);
+    let workers: usize = flag(flags, "workers", 4);
+    pasha::e2e::run_e2e(budget, hidden, workers).map_err(|e| e.to_string())
+}
+
+fn cmd_artifacts_check() -> Result<(), String> {
+    use pasha::runtime::artifact::{artifacts_available, artifacts_dir, Engine};
+    println!("artifacts dir: {}", artifacts_dir().display());
+    if !artifacts_available() {
+        return Err("artifacts not built — run `make artifacts`".into());
+    }
+    let engine = Engine::cpu().map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", engine.platform_name());
+    for name in [
+        "mlp_train_h64",
+        "mlp_eval_h64",
+        "gp_ei_n64_d4_m64",
+        "knn_n512_d4_q4",
+    ] {
+        engine
+            .load_named(name)
+            .map_err(|e| format!("{name}: {e}"))?;
+        println!("compiled {name}: OK");
+    }
+    Ok(())
+}

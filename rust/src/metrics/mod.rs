@@ -1,0 +1,115 @@
+//! Aggregation of repeated tuning runs into the paper's table rows.
+
+use crate::tuner::TuneResult;
+use crate::util::stats::Agg;
+
+/// One approach-row of a results table, aggregated over repetitions:
+/// `Accuracy (%) | Runtime | Speedup factor | Max resources`.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub approach: String,
+    pub accuracy: Agg,
+    pub runtime: Agg,
+    pub max_resources: Agg,
+    pub total_epochs: Agg,
+}
+
+impl Row {
+    pub fn from_results(approach: &str, results: &[TuneResult]) -> Row {
+        Row {
+            approach: approach.to_string(),
+            accuracy: Agg::from(
+                &results
+                    .iter()
+                    .map(|r| r.retrain_accuracy)
+                    .collect::<Vec<_>>(),
+            ),
+            runtime: Agg::from(
+                &results
+                    .iter()
+                    .map(|r| r.runtime_seconds)
+                    .collect::<Vec<_>>(),
+            ),
+            max_resources: Agg::from(
+                &results
+                    .iter()
+                    .map(|r| r.max_resources as f64)
+                    .collect::<Vec<_>>(),
+            ),
+            total_epochs: Agg::from(
+                &results
+                    .iter()
+                    .map(|r| r.total_epochs as f64)
+                    .collect::<Vec<_>>(),
+            ),
+        }
+    }
+
+    /// Speedup factor relative to a reference (ASHA) runtime; the paper
+    /// prints `N/A` for the zero-cost random baseline.
+    pub fn speedup_cell(&self, reference_runtime: f64) -> String {
+        let rt = self.runtime.mean();
+        if rt <= 0.0 {
+            "N/A".to_string()
+        } else {
+            format!("{:.1}x", reference_runtime / rt)
+        }
+    }
+
+    /// The four standard cells.
+    pub fn cells(&self, reference_runtime: f64) -> Vec<String> {
+        vec![
+            self.approach.clone(),
+            self.accuracy.cell(2),
+            self.runtime.cell_hours(),
+            self.speedup_cell(reference_runtime),
+            self.max_resources.cell(1),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(acc: f64, rt: f64, max_r: u32) -> TuneResult {
+        TuneResult {
+            scheduler_name: "x".into(),
+            best_config: None,
+            best_metric: acc,
+            retrain_accuracy: acc,
+            runtime_seconds: rt,
+            max_resources: max_r,
+            configs_sampled: 0,
+            total_epochs: 0,
+            jobs: 0,
+            eps_history: vec![],
+        }
+    }
+
+    #[test]
+    fn row_aggregates() {
+        let rs = vec![result(90.0, 3600.0, 27), result(92.0, 7200.0, 81)];
+        let row = Row::from_results("PASHA", &rs);
+        assert_eq!(row.accuracy.cell(2), "91.00 ± 1.41");
+        assert_eq!(row.runtime.cell_hours(), "1.5h ± 0.7h");
+        assert_eq!(row.speedup_cell(10800.0), "2.0x");
+    }
+
+    #[test]
+    fn zero_runtime_speedup_na() {
+        let rs = vec![result(50.0, 0.0, 0)];
+        let row = Row::from_results("Random baseline", &rs);
+        assert_eq!(row.speedup_cell(3600.0), "N/A");
+    }
+
+    #[test]
+    fn cells_shape() {
+        let rs = vec![result(90.0, 3600.0, 27)];
+        let row = Row::from_results("ASHA", &rs);
+        let cells = row.cells(3600.0);
+        assert_eq!(cells.len(), 5);
+        assert_eq!(cells[0], "ASHA");
+        assert_eq!(cells[3], "1.0x");
+    }
+}

@@ -1,0 +1,163 @@
+//! Ranking functions: PASHA's grow-or-stop decision rule.
+//!
+//! After every completed job in the current top rung, PASHA compares the
+//! ranking of configurations in the top two rungs. If the top-rung ranking
+//! is *consistent* with the previous rung's ranking, the search is assumed
+//! stable; otherwise the maximum resource level grows by one rung (§4).
+//!
+//! The paper evaluates a family of such consistency criteria (Appendix C):
+//!
+//! * **soft ranking** with ε fixed, ε from σ-heuristics, or — the paper's
+//!   default — ε estimated from the noise observed in rank criss-crossings
+//!   ([`noise`], §4.2);
+//! * **direct ranking** (soft with ε = 0);
+//! * **Rank-Biased Overlap** ([`rbo`], Webber et al. 2010);
+//! * **Reciprocal Rank Regret** and its absolute variant ([`rrr`],
+//!   Appendix C.1.4).
+//!
+//! All operate on the two rankings *restricted to the common trial set*
+//! (every top-rung trial necessarily passed through the previous rung).
+
+pub mod noise;
+pub mod rbo;
+pub mod rrr;
+pub mod soft;
+
+use crate::TrialId;
+
+/// Extra context available to ranking functions. `top_curves` holds the
+/// full per-epoch curves of every trial promoted into the current top
+/// rung (including in-flight trials), which is what the noise-based
+/// ε-estimator consumes.
+pub struct RankCtx<'a> {
+    pub top_curves: &'a [(TrialId, &'a [f64])],
+}
+
+impl<'a> RankCtx<'a> {
+    pub fn empty() -> RankCtx<'static> {
+        RankCtx { top_curves: &[] }
+    }
+}
+
+/// A consistency criterion over the top two rungs.
+///
+/// `top` / `prev`: `(trial, metric)` for the *same* set of trials, each
+/// sorted descending by its own rung's metric. Returns `true` when the
+/// rankings agree (PASHA keeps its current resource cap) and `false` when
+/// they disagree (PASHA grows by one rung).
+pub trait RankingFunction: Send {
+    fn consistent(
+        &mut self,
+        top: &[(TrialId, f64)],
+        prev: &[(TrialId, f64)],
+        ctx: &RankCtx,
+    ) -> bool;
+
+    /// Current ε (soft-ranking variants only; used for Figure 5).
+    fn epsilon(&self) -> Option<f64> {
+        None
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Declarative specification of a ranking function — cloneable, buildable
+/// per repetition, and printable as the approach name in the tables.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RankingSpec {
+    /// Soft ranking, ε estimated from ranking noise (the paper's PASHA).
+    NoiseAdaptive { percentile: f64 },
+    /// Soft ranking with ε = 0 ("PASHA direct ranking").
+    Direct,
+    /// Soft ranking with a fixed ε (accuracy percentage points).
+    SoftFixed { epsilon: f64 },
+    /// ε = multiple × std of the previous rung's metrics.
+    SoftSigma { mult: f64 },
+    /// ε = mean consecutive gap between sorted metrics in the prev rung.
+    SoftMeanGap,
+    /// ε = median consecutive gap.
+    SoftMedianGap,
+    /// Rank-Biased Overlap with persistence p, threshold t.
+    Rbo { p: f64, t: f64 },
+    /// Reciprocal Rank Regret with weight decay p, threshold t.
+    Rrr { p: f64, t: f64 },
+    /// Absolute RRR.
+    Arrr { p: f64, t: f64 },
+}
+
+impl RankingSpec {
+    pub fn build(&self) -> Box<dyn RankingFunction> {
+        match *self {
+            RankingSpec::NoiseAdaptive { percentile } => {
+                Box::new(soft::SoftRanking::noise_adaptive(percentile))
+            }
+            RankingSpec::Direct => Box::new(soft::SoftRanking::fixed(0.0)),
+            RankingSpec::SoftFixed { epsilon } => Box::new(soft::SoftRanking::fixed(epsilon)),
+            RankingSpec::SoftSigma { mult } => Box::new(soft::SoftRanking::sigma(mult)),
+            RankingSpec::SoftMeanGap => Box::new(soft::SoftRanking::mean_gap()),
+            RankingSpec::SoftMedianGap => Box::new(soft::SoftRanking::median_gap()),
+            RankingSpec::Rbo { p, t } => Box::new(rbo::RboRanking::new(p, t)),
+            RankingSpec::Rrr { p, t } => Box::new(rrr::RrrRanking::new(p, t, false)),
+            RankingSpec::Arrr { p, t } => Box::new(rrr::RrrRanking::new(p, t, true)),
+        }
+    }
+
+    /// Name as it appears in the paper's tables.
+    pub fn label(&self) -> String {
+        match self {
+            RankingSpec::NoiseAdaptive { .. } => "PASHA".into(),
+            RankingSpec::Direct => "PASHA direct ranking".into(),
+            RankingSpec::SoftFixed { epsilon } => {
+                format!("PASHA soft ranking eps={}", epsilon)
+            }
+            RankingSpec::SoftSigma { mult } => format!("PASHA soft ranking {}sigma", mult),
+            RankingSpec::SoftMeanGap => "PASHA soft ranking mean distance".into(),
+            RankingSpec::SoftMedianGap => "PASHA soft ranking median distance".into(),
+            RankingSpec::Rbo { p, t } => format!("PASHA RBO p={p}, t={t}"),
+            RankingSpec::Rrr { p, t } => format!("PASHA RRR p={p}, t={t}"),
+            RankingSpec::Arrr { p, t } => format!("PASHA ARRR p={p}, t={t}"),
+        }
+    }
+}
+
+impl Default for RankingSpec {
+    /// The paper's default: noise-adaptive ε at the 90th percentile (§5.1).
+    fn default() -> Self {
+        RankingSpec::NoiseAdaptive { percentile: 90.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_specs_build() {
+        let specs = [
+            RankingSpec::default(),
+            RankingSpec::Direct,
+            RankingSpec::SoftFixed { epsilon: 0.025 },
+            RankingSpec::SoftSigma { mult: 2.0 },
+            RankingSpec::SoftMeanGap,
+            RankingSpec::SoftMedianGap,
+            RankingSpec::Rbo { p: 0.5, t: 0.5 },
+            RankingSpec::Rrr { p: 0.5, t: 0.05 },
+            RankingSpec::Arrr { p: 1.0, t: 0.05 },
+        ];
+        for s in specs {
+            let mut f = s.build();
+            // degenerate call: identical singleton rankings are consistent
+            let one = [(0usize, 50.0)];
+            assert!(f.consistent(&one, &one, &RankCtx::empty()), "{}", s.label());
+        }
+    }
+
+    #[test]
+    fn default_is_90th_percentile_noise() {
+        assert_eq!(
+            RankingSpec::default(),
+            RankingSpec::NoiseAdaptive { percentile: 90.0 }
+        );
+        assert_eq!(RankingSpec::default().label(), "PASHA");
+    }
+}

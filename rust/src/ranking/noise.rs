@@ -1,0 +1,209 @@
+//! Automatic estimation of the soft-ranking threshold ε by measuring
+//! noise in rankings (§4.2).
+//!
+//! Intuition: configurations whose relative order keeps flipping over
+//! training are separated by less than the training/evaluation noise, so
+//! the magnitude of their performance difference *is* a measurement of
+//! that noise. Concretely:
+//!
+//! 1. Among the configurations that made it to the latest rung, find all
+//!    pairs `(c, c')` whose per-epoch curves *criss-cross*: there exist
+//!    resource levels `r_j > r_k > r_l` with the sign of
+//!    `f(c) − f(c')` alternating (+,−,+) or (−,+,−) — i.e. at least two
+//!    sign changes across their shared history (Eq. 1).
+//! 2. For each such pair, record `|f_rj(c) − f_rj(c')|` at the largest
+//!    epoch `r_j` available for *both* (the curves may have different
+//!    lengths when one trial is still in flight).
+//! 3. ε is the N-th percentile of those distances (N = 90 by default,
+//!    Table 15 ablates N ∈ {80, 90, 95, 100}).
+//!
+//! ε is re-estimated every time new performance information arrives;
+//! until the first criss-crossing pair exists it stays 0 (exact-ranking
+//! behaviour).
+
+use crate::util::stats::percentile;
+
+/// Does the sign of `a[e] − b[e]` change at least twice over the shared
+/// prefix? Exact ties contribute no sign and are skipped.
+pub fn criss_crosses(a: &[f64], b: &[f64]) -> bool {
+    let m = a.len().min(b.len());
+    let mut last = 0i8;
+    let mut changes = 0u32;
+    for e in 0..m {
+        let d = a[e] - b[e];
+        let s = if d > 0.0 {
+            1i8
+        } else if d < 0.0 {
+            -1i8
+        } else {
+            0i8
+        };
+        if s == 0 {
+            continue;
+        }
+        if last != 0 && s != last {
+            changes += 1;
+            if changes >= 2 {
+                return true;
+            }
+        }
+        last = s;
+    }
+    false
+}
+
+/// Distance between two curves at their largest shared epoch.
+fn shared_end_distance(a: &[f64], b: &[f64]) -> f64 {
+    let m = a.len().min(b.len());
+    (a[m - 1] - b[m - 1]).abs()
+}
+
+/// Estimate ε from the curves of the top-rung configurations. Returns
+/// `None` when no pair criss-crosses yet (caller keeps ε = 0).
+pub fn estimate_epsilon(curves: &[(usize, &[f64])], pct: f64) -> Option<f64> {
+    let mut dists: Vec<f64> = Vec::new();
+    for i in 0..curves.len() {
+        for j in (i + 1)..curves.len() {
+            let (a, b) = (curves[i].1, curves[j].1);
+            if a.len().min(b.len()) < 3 {
+                continue; // need three levels for two sign changes
+            }
+            if criss_crosses(a, b) {
+                dists.push(shared_end_distance(a, b));
+            }
+        }
+    }
+    if dists.is_empty() {
+        None
+    } else {
+        Some(percentile(&dists, pct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    #[test]
+    fn monotone_separated_curves_do_not_cross() {
+        let a = [10.0, 20.0, 30.0, 40.0];
+        let b = [5.0, 15.0, 25.0, 35.0];
+        assert!(!criss_crosses(&a, &b));
+    }
+
+    #[test]
+    fn single_crossing_is_not_criss_crossing() {
+        // one sign change only: slow starter overtakes once and stays ahead
+        let a = [10.0, 20.0, 30.0, 40.0];
+        let b = [15.0, 18.0, 25.0, 35.0];
+        assert!(!criss_crosses(&a, &b));
+    }
+
+    #[test]
+    fn double_swap_detected() {
+        // + − + pattern
+        let a = [10.0, 20.0, 30.0];
+        let b = [5.0, 25.0, 28.0];
+        assert!(criss_crosses(&a, &b));
+        // mirrored − + −
+        assert!(criss_crosses(&b, &a));
+    }
+
+    #[test]
+    fn ties_are_skipped() {
+        let a = [10.0, 20.0, 20.0, 30.0];
+        let b = [10.0, 20.0, 20.0, 30.0];
+        assert!(!criss_crosses(&a, &b));
+        // tie in the middle must not count as a change
+        let c = [12.0, 20.0, 31.0];
+        let d = [10.0, 20.0, 30.0];
+        assert!(!criss_crosses(&c, &d));
+    }
+
+    #[test]
+    fn uses_shared_prefix_only() {
+        // curves of different length: only first 3 epochs shared
+        let a = [10.0, 30.0, 10.0, 99.0, 0.0];
+        let b = [20.0, 20.0, 20.0];
+        assert!(criss_crosses(&a, &b)); // −,+,− within shared prefix
+    }
+
+    #[test]
+    fn epsilon_none_without_crossings() {
+        let a = [10.0f64, 20.0, 30.0];
+        let b = [1.0, 2.0, 3.0];
+        let curves = [(0usize, &a[..]), (1, &b[..])];
+        assert_eq!(estimate_epsilon(&curves, 90.0), None);
+    }
+
+    #[test]
+    fn epsilon_matches_paper_worked_example() {
+        // §4.2 example: three configs trained 8, 8, 6 epochs, all pairs
+        // criss-crossing; distances measured at epochs 8, 6 and 6.
+        // Construct curves with controlled end values and forced crossings.
+        let ca: Vec<f64> = vec![1.0, 3.0, 1.0, 3.0, 1.0, 50.0, 50.0, 50.0];
+        let cb: Vec<f64> = vec![2.0, 2.0, 2.0, 2.0, 2.0, 49.0, 49.0, 48.5];
+        let cc: Vec<f64> = vec![1.5, 2.5, 1.5, 2.5, 1.5, 47.0];
+        let curves = [(0usize, &ca[..]), (1, &cb[..]), (2, &cc[..])];
+        // distances: |ca[7]-cb[7]| = 1.5, |ca[5]-cc[5]| = 3.0, |cb[5]-cc[5]| = 2.0
+        let eps100 = estimate_epsilon(&curves, 100.0).unwrap();
+        assert!((eps100 - 3.0).abs() < 1e-12);
+        let eps0 = estimate_epsilon(&curves, 0.0).unwrap();
+        assert!((eps0 - 1.5).abs() < 1e-12);
+        // 90th percentile of {1.5, 2.0, 3.0} (linear interp) = 2.8
+        let eps90 = estimate_epsilon(&curves, 90.0).unwrap();
+        assert!((eps90 - 2.8).abs() < 1e-12, "{eps90}");
+    }
+
+    #[test]
+    fn short_curves_excluded() {
+        // fewer than 3 shared epochs can never show two sign changes
+        let a = [1.0, 2.0];
+        let b = [2.0, 1.0];
+        let curves = [(0usize, &a[..]), (1, &b[..])];
+        assert_eq!(estimate_epsilon(&curves, 90.0), None);
+    }
+
+    #[test]
+    fn property_epsilon_nonnegative_and_bounded() {
+        check("ε within observed value range", 100, |g| {
+            let n = g.usize(2, 6);
+            let len = g.usize(3, 20);
+            let curves_owned: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..len).map(|_| g.f64(0.0, 100.0)).collect())
+                .collect();
+            let curves: Vec<(usize, &[f64])> = curves_owned
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (i, c.as_slice()))
+                .collect();
+            if let Some(eps) = estimate_epsilon(&curves, g.f64(0.0, 100.0)) {
+                assert!((0.0..=100.0).contains(&eps));
+            }
+        });
+    }
+
+    #[test]
+    fn property_percentile_monotone_in_n() {
+        check("ε non-decreasing in percentile", 50, |g| {
+            let n = g.usize(3, 6);
+            let len = 12;
+            let curves_owned: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..len).map(|_| g.f64(0.0, 10.0)).collect())
+                .collect();
+            let curves: Vec<(usize, &[f64])> = curves_owned
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (i, c.as_slice()))
+                .collect();
+            let e80 = estimate_epsilon(&curves, 80.0);
+            let e95 = estimate_epsilon(&curves, 95.0);
+            match (e80, e95) {
+                (Some(a), Some(b)) => assert!(b + 1e-12 >= a),
+                (None, None) => {}
+                _ => panic!("percentile changes existence"),
+            }
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! Rank-Biased Overlap (Webber, Moffat & Zobel, 2010) as a ranking-
+//! consistency criterion (Appendix C.1.3).
+//!
+//! RBO measures the agreement of two rankings as the average overlap of
+//! their depth-d prefixes, geometrically weighted by a persistence
+//! parameter p ∈ (0, 1]: smaller p concentrates the weight at the top of
+//! the ranking. For two same-length rankings S, T of n items:
+//!
+//! ```text
+//! A_d  = |S[..d] ∩ T[..d]| / d
+//! RBO  = (1−p) · Σ_{d=1..n} p^{d−1} · A_d   + p^n · A_n        (p < 1)
+//! RBO  = (1/n) · Σ_{d=1..n} A_d                                 (p = 1)
+//! ```
+//!
+//! (The `p^n · A_n` term is the standard extrapolation of the residual
+//! weight for truncated lists, so that identical rankings score exactly
+//! 1.) The rankings are *consistent* when RBO ≥ t; the paper uses
+//! p ∈ {1.0, 0.5} with t = 0.5.
+
+use super::{RankCtx, RankingFunction};
+use crate::TrialId;
+use std::collections::HashSet;
+
+/// Compute RBO between two equal-length rankings of the same item set.
+pub fn rbo(s: &[TrialId], t: &[TrialId], p: f64) -> f64 {
+    assert_eq!(s.len(), t.len());
+    let n = s.len();
+    if n == 0 {
+        return 1.0;
+    }
+    assert!((0.0..=1.0).contains(&p) && p > 0.0, "p must be in (0,1]");
+    let mut seen_s: HashSet<TrialId> = HashSet::with_capacity(n);
+    let mut seen_t: HashSet<TrialId> = HashSet::with_capacity(n);
+    let mut overlap = 0usize;
+    let mut acc = 0.0;
+    let mut weight = 1.0; // p^{d-1}
+    let mut a_last = 0.0;
+    for d in 1..=n {
+        let (x, y) = (s[d - 1], t[d - 1]);
+        if x == y {
+            overlap += 1;
+        } else {
+            if seen_t.contains(&x) {
+                overlap += 1;
+            }
+            if seen_s.contains(&y) {
+                overlap += 1;
+            }
+            seen_s.insert(x);
+            seen_t.insert(y);
+        }
+        let a_d = overlap as f64 / d as f64;
+        a_last = a_d;
+        acc += weight * a_d;
+        weight *= p;
+    }
+    if (p - 1.0).abs() < 1e-15 {
+        acc / n as f64
+    } else {
+        (1.0 - p) * acc + p.powi(n as i32) * a_last
+    }
+}
+
+/// RBO-thresholded consistency criterion.
+pub struct RboRanking {
+    p: f64,
+    t: f64,
+    last_value: f64,
+}
+
+impl RboRanking {
+    pub fn new(p: f64, t: f64) -> Self {
+        RboRanking {
+            p,
+            t,
+            last_value: 1.0,
+        }
+    }
+
+    pub fn last_value(&self) -> f64 {
+        self.last_value
+    }
+}
+
+impl RankingFunction for RboRanking {
+    fn consistent(
+        &mut self,
+        top: &[(TrialId, f64)],
+        prev: &[(TrialId, f64)],
+        _ctx: &RankCtx,
+    ) -> bool {
+        let s: Vec<TrialId> = top.iter().map(|&(t, _)| t).collect();
+        let t: Vec<TrialId> = prev.iter().map(|&(t, _)| t).collect();
+        self.last_value = rbo(&s, &t, self.p);
+        self.last_value >= self.t
+    }
+
+    fn name(&self) -> String {
+        format!("rbo(p={}, t={})", self.p, self.t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    #[test]
+    fn identical_rankings_score_one() {
+        for p in [0.3, 0.5, 0.9, 1.0] {
+            let ids = [3usize, 1, 4, 1 + 4, 9];
+            assert!((rbo(&ids, &ids, p) - 1.0).abs() < 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn reversed_rankings_score_low() {
+        let s = [0usize, 1, 2, 3, 4, 5];
+        let mut t = s;
+        t.reverse();
+        let v = rbo(&s, &t, 0.5);
+        assert!(v < 0.5, "reversed should be dissimilar: {v}");
+        // p=1 average overlap of reversed lists is well below 1
+        let v1 = rbo(&s, &t, 1.0);
+        assert!(v1 < 0.7, "{v1}");
+    }
+
+    #[test]
+    fn empty_rankings_are_identical() {
+        assert_eq!(rbo(&[], &[], 0.5), 1.0);
+    }
+
+    #[test]
+    fn adjacent_swap_scores_high() {
+        let s = [0usize, 1, 2, 3, 4, 5, 6, 7];
+        let mut t = s;
+        t.swap(6, 7); // swap at the bottom
+        assert!(rbo(&s, &t, 0.5) > 0.95);
+        let mut u = s;
+        u.swap(0, 1); // swap at the top hurts more with small p
+        assert!(rbo(&s, &u, 0.5) < rbo(&s, &t, 0.5));
+    }
+
+    #[test]
+    fn p1_equals_average_overlap() {
+        let s = [0usize, 1, 2];
+        let t = [1usize, 0, 2];
+        // overlaps: d1: 0/1, d2: 2/2, d3: 3/3 → mean = (0+1+1)/3
+        let v = rbo(&s, &t, 1.0);
+        assert!((v - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_drives_consistency() {
+        let top = [(0usize, 9.0), (1, 8.0), (2, 7.0)];
+        let prev_same = top;
+        let prev_swapped = [(1usize, 9.0), (0, 8.0), (2, 7.0)];
+        let mut f = RboRanking::new(1.0, 0.9);
+        assert!(f.consistent(&top, &prev_same, &RankCtx::empty()));
+        assert!(!f.consistent(&top, &prev_swapped, &RankCtx::empty()));
+        assert!((f.last_value() - 2.0 / 3.0).abs() < 1e-12);
+        // looser threshold tolerates the swap
+        let mut loose = RboRanking::new(1.0, 0.5);
+        assert!(loose.consistent(&top, &prev_swapped, &RankCtx::empty()));
+    }
+
+    #[test]
+    fn property_rbo_in_unit_interval_and_symmetric() {
+        check("0 ≤ rbo ≤ 1, symmetric", 200, |g| {
+            let n = g.usize(1, 12);
+            let s = g.permutation(n);
+            let t = g.permutation(n);
+            let p = g.f64(0.05, 1.0);
+            let v = rbo(&s, &t, p);
+            assert!((0.0..=1.0 + 1e-12).contains(&v), "v={v}");
+            let w = rbo(&t, &s, p);
+            assert!((v - w).abs() < 1e-12, "symmetry");
+        });
+    }
+
+    #[test]
+    fn property_identity_maximal() {
+        check("identity ranking maximizes rbo", 100, |g| {
+            let n = g.usize(1, 10);
+            let s = g.permutation(n);
+            let t = g.permutation(n);
+            let p = g.f64(0.05, 1.0);
+            assert!(rbo(&s, &s, p) + 1e-12 >= rbo(&s, &t, p));
+        });
+    }
+}

@@ -1,0 +1,239 @@
+//! Reciprocal Rank Regret (Appendix C.1.4): an *objective-aware*
+//! consistency criterion.
+//!
+//! Insight: swaps between configurations with nearly identical objective
+//! values are harmless — what matters is the regret we would incur by
+//! trusting the previous rung's ordering. With `f` the descending-sorted
+//! top-rung scores and `f'` the top-rung scores reordered by the previous
+//! rung's ranking:
+//!
+//! ```text
+//! RRR  = Σ_{i=0}^{n−1} w_i · (f_i − f'_i) / f_i ,   w_i = p^i / Σ_j p^j
+//! ARRR = Σ_{i=0}^{n−1} w_i · |f_i − f'_i| / f_i
+//! ```
+//!
+//! RRR is the weighted average relative regret with priority on the top
+//! of the ranking (p < 1 concentrates the weight up top; p = 1 weighs all
+//! positions equally). Best value 0 (orderings agree or disagreements are
+//! value-free); the rankings are consistent when RRR ≤ t (paper: t=0.05).
+
+use super::{RankCtx, RankingFunction};
+use crate::TrialId;
+use std::collections::HashMap;
+
+/// Compute (A)RRR for two rankings over the same trials. `top` sorted
+/// descending by top-rung metric; `prev` sorted descending by
+/// previous-rung metric.
+pub fn rrr(top: &[(TrialId, f64)], prev: &[(TrialId, f64)], p: f64, absolute: bool) -> f64 {
+    assert_eq!(top.len(), prev.len());
+    let n = top.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let top_metric: HashMap<TrialId, f64> = top.iter().copied().collect();
+    // weights w_i = p^i / Σ p^j
+    let mut weights = Vec::with_capacity(n);
+    let mut w = 1.0;
+    let mut norm = 0.0;
+    for _ in 0..n {
+        weights.push(w);
+        norm += w;
+        w *= p;
+    }
+    let mut total = 0.0;
+    for i in 0..n {
+        let f_i = top[i].1;
+        if f_i == 0.0 {
+            continue; // avoid division by zero on degenerate metrics
+        }
+        // f'_i: the top-rung score of the config the previous rung ranked i-th
+        let f_prime = match top_metric.get(&prev[i].0) {
+            Some(&m) => m,
+            None => continue,
+        };
+        let mut reg = (f_i - f_prime) / f_i;
+        if absolute {
+            reg = reg.abs();
+        }
+        total += weights[i] / norm * reg;
+    }
+    total
+}
+
+/// RRR-thresholded consistency criterion.
+pub struct RrrRanking {
+    p: f64,
+    t: f64,
+    absolute: bool,
+    last_value: f64,
+}
+
+impl RrrRanking {
+    pub fn new(p: f64, t: f64, absolute: bool) -> Self {
+        RrrRanking {
+            p,
+            t,
+            absolute,
+            last_value: 0.0,
+        }
+    }
+
+    pub fn last_value(&self) -> f64 {
+        self.last_value
+    }
+}
+
+impl RankingFunction for RrrRanking {
+    fn consistent(
+        &mut self,
+        top: &[(TrialId, f64)],
+        prev: &[(TrialId, f64)],
+        _ctx: &RankCtx,
+    ) -> bool {
+        self.last_value = rrr(top, prev, self.p, self.absolute);
+        self.last_value <= self.t
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "{}(p={}, t={})",
+            if self.absolute { "arrr" } else { "rrr" },
+            self.p,
+            self.t
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    fn mk(ids: &[usize], metrics: &[f64]) -> Vec<(TrialId, f64)> {
+        ids.iter().copied().zip(metrics.iter().copied()).collect()
+    }
+
+    #[test]
+    fn agreement_gives_zero() {
+        let top = mk(&[1, 2, 3], &[90.0, 80.0, 70.0]);
+        let prev = mk(&[1, 2, 3], &[55.0, 50.0, 45.0]);
+        assert_eq!(rrr(&top, &prev, 0.5, false), 0.0);
+        assert_eq!(rrr(&top, &prev, 0.5, true), 0.0);
+    }
+
+    #[test]
+    fn near_tie_swap_is_cheap_far_swap_expensive() {
+        let top_near = mk(&[1, 2, 3], &[90.0, 89.9, 70.0]);
+        let prev_swap = mk(&[2, 1, 3], &[55.0, 50.0, 45.0]);
+        let cheap = rrr(&top_near, &prev_swap, 0.5, false);
+        assert!(cheap.abs() < 0.01, "near-tie swap cheap: {cheap}");
+
+        let top_far = mk(&[1, 2, 3], &[90.0, 45.0, 30.0]);
+        // the signed variant can cancel on pure swaps; ARRR cannot
+        let expensive = rrr(&top_far, &prev_swap, 0.5, true);
+        assert!(expensive > 0.2, "far swap expensive: {expensive}");
+        let signed = rrr(&mk(&[1, 2, 3], &[90.0, 60.0, 30.0]), &prev_swap, 0.5, false);
+        assert!(signed > 0.02, "signed far swap: {signed}");
+    }
+
+    #[test]
+    fn weights_prioritize_top_when_p_small() {
+        // swap at top vs swap at bottom with same value gap
+        let top = mk(&[1, 2, 3, 4], &[90.0, 80.0, 40.0, 30.0]);
+        let prev_top_swap = mk(&[2, 1, 3, 4], &[9.0, 8.0, 7.0, 6.0]);
+        let prev_bot_swap = mk(&[1, 2, 4, 3], &[9.0, 8.0, 7.0, 6.0]);
+        let at_top = rrr(&top, &prev_top_swap, 0.5, true);
+        let at_bot = rrr(&top, &prev_bot_swap, 0.5, true);
+        assert!(at_top > at_bot, "top swap must weigh more: {at_top} vs {at_bot}");
+    }
+
+    #[test]
+    fn p1_weights_uniform() {
+        let top = mk(&[1, 2], &[100.0, 50.0]);
+        let prev = mk(&[2, 1], &[9.0, 8.0]);
+        // regrets: i=0: (100−50)/100 = 0.5; i=1: (50−100)/50 = −1 → sum/2 = −0.25
+        let v = rrr(&top, &prev, 1.0, false);
+        assert!((v - (-0.25)).abs() < 1e-12, "{v}");
+        // absolute: (0.5 + 1)/2 = 0.75
+        let a = rrr(&top, &prev, 1.0, true);
+        assert!((a - 0.75).abs() < 1e-12, "{a}");
+    }
+
+    #[test]
+    fn empty_is_consistent() {
+        let mut f = RrrRanking::new(0.5, 0.05, false);
+        assert!(f.consistent(&[], &[], &RankCtx::empty()));
+    }
+
+    #[test]
+    fn threshold_behaviour() {
+        let top = mk(&[1, 2, 3], &[90.0, 60.0, 50.0]);
+        let prev_big_swap = mk(&[3, 2, 1], &[9.0, 8.0, 7.0]);
+        let mut strict = RrrRanking::new(0.5, 0.05, false);
+        assert!(!strict.consistent(&top, &prev_big_swap, &RankCtx::empty()));
+        assert!(strict.last_value() > 0.05);
+        let mut lax = RrrRanking::new(0.5, 1.0, false);
+        assert!(lax.consistent(&top, &prev_big_swap, &RankCtx::empty()));
+    }
+
+    #[test]
+    fn zero_metric_positions_skipped() {
+        let top = mk(&[1, 2], &[0.0, 0.0]);
+        let prev = mk(&[2, 1], &[1.0, 0.5]);
+        assert_eq!(rrr(&top, &prev, 0.5, false), 0.0);
+    }
+
+    #[test]
+    fn property_arrr_nonnegative_and_zero_iff_agree() {
+        check("ARRR ≥ 0; 0 for agreement", 200, |g| {
+            let n = g.usize(1, 10);
+            let metrics = g.increasing(n, 1.0, 10.0);
+            let mut top: Vec<(TrialId, f64)> = (0..n)
+                .map(|i| (i, metrics[n - 1 - i]))
+                .collect();
+            top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let prev_agree: Vec<(TrialId, f64)> = top
+                .iter()
+                .enumerate()
+                .map(|(i, &(t, _))| (t, 100.0 - i as f64))
+                .collect();
+            assert!(rrr(&top, &prev_agree, 0.7, true).abs() < 1e-12);
+            // random permutation: ARRR stays non-negative and bounded by max relative gap
+            let perm = g.permutation(n);
+            let prev_perm: Vec<(TrialId, f64)> = perm
+                .iter()
+                .enumerate()
+                .map(|(i, &j)| (top[j].0, 100.0 - i as f64))
+                .collect();
+            let v = rrr(&top, &prev_perm, 0.7, true);
+            assert!(v >= 0.0);
+        });
+    }
+
+    #[test]
+    fn property_rrr_weighted_sum_bounds() {
+        check("|RRR| bounded by max |relative regret|", 100, |g| {
+            let n = g.usize(2, 8);
+            let metrics = g.increasing(n, 1.0, 10.0);
+            let mut top: Vec<(TrialId, f64)> =
+                (0..n).map(|i| (i, metrics[n - 1 - i])).collect();
+            top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let perm = g.permutation(n);
+            let prev: Vec<(TrialId, f64)> = perm
+                .iter()
+                .enumerate()
+                .map(|(i, &j)| (top[j].0, 100.0 - i as f64))
+                .collect();
+            let top_map: std::collections::HashMap<_, _> = top.iter().copied().collect();
+            let max_rel = (0..n)
+                .map(|i| {
+                    let f_i = top[i].1;
+                    let fp = top_map[&prev[i].0];
+                    ((f_i - fp) / f_i).abs()
+                })
+                .fold(0.0f64, f64::max);
+            let v = rrr(&top, &prev, g.f64(0.1, 1.0), false).abs();
+            assert!(v <= max_rel + 1e-12, "v={v} max={max_rel}");
+        });
+    }
+}

@@ -1,0 +1,305 @@
+//! Soft ranking (§4.1): configurations are sorted by predictive
+//! performance but considered *equivalent* when their metrics differ by at
+//! most ε, turning the ranking into a list of equivalence lists.
+//!
+//! Consistency check: walk the top-rung ranking position by position and
+//! verify that the configuration at rank `i` belongs to the previous
+//! rung's soft-rank set at rank `i` — i.e. its previous-rung metric is
+//! within ε of the metric of the configuration the previous rung placed
+//! there. One violation ⇒ inconsistent ⇒ PASHA grows the resource cap.
+//!
+//! The ε threshold comes from an [`EpsilonRule`]: fixed (including 0 =
+//! direct/simple ranking), σ-multiples or gap statistics of the previous
+//! rung (Appendix C.1.2), or the noise-in-rankings estimator of §4.2.
+
+use super::noise::estimate_epsilon;
+use super::{RankCtx, RankingFunction};
+use crate::util::stats;
+use crate::TrialId;
+use std::collections::HashMap;
+
+/// How ε is chosen at each consistency check.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EpsilonRule {
+    /// Constant ε in accuracy percentage points (0 ⇒ direct ranking).
+    Fixed(f64),
+    /// ε = mult × std of the previous rung's metrics.
+    SigmaPrev(f64),
+    /// ε = mean consecutive gap between sorted previous-rung metrics.
+    MeanGap,
+    /// ε = median consecutive gap.
+    MedianGap,
+    /// §4.2: ε = N-th percentile of criss-crossing pair distances.
+    NoiseAdaptive { percentile: f64 },
+}
+
+/// Soft-ranking consistency criterion.
+pub struct SoftRanking {
+    rule: EpsilonRule,
+    /// Last ε used (kept for Figure 5 and diagnostics).
+    current_eps: f64,
+}
+
+impl SoftRanking {
+    pub fn new(rule: EpsilonRule) -> Self {
+        SoftRanking {
+            rule,
+            current_eps: 0.0,
+        }
+    }
+
+    pub fn fixed(eps: f64) -> Self {
+        Self::new(EpsilonRule::Fixed(eps))
+    }
+
+    pub fn sigma(mult: f64) -> Self {
+        Self::new(EpsilonRule::SigmaPrev(mult))
+    }
+
+    pub fn mean_gap() -> Self {
+        Self::new(EpsilonRule::MeanGap)
+    }
+
+    pub fn median_gap() -> Self {
+        Self::new(EpsilonRule::MedianGap)
+    }
+
+    pub fn noise_adaptive(percentile: f64) -> Self {
+        Self::new(EpsilonRule::NoiseAdaptive { percentile })
+    }
+
+    fn compute_eps(&mut self, prev: &[(TrialId, f64)], ctx: &RankCtx) -> f64 {
+        match self.rule {
+            EpsilonRule::Fixed(e) => e,
+            EpsilonRule::SigmaPrev(mult) => {
+                let metrics: Vec<f64> = prev.iter().map(|&(_, m)| m).collect();
+                mult * stats::std(&metrics)
+            }
+            EpsilonRule::MeanGap => {
+                let gaps = consecutive_gaps(prev);
+                stats::mean(&gaps)
+            }
+            EpsilonRule::MedianGap => {
+                let gaps = consecutive_gaps(prev);
+                if gaps.is_empty() {
+                    0.0
+                } else {
+                    stats::median(&gaps)
+                }
+            }
+            EpsilonRule::NoiseAdaptive { percentile } => {
+                // Recalculated on every new piece of information; stays 0
+                // (exact ranking) until a criss-crossing pair exists.
+                estimate_epsilon(ctx.top_curves, percentile).unwrap_or(0.0)
+            }
+        }
+    }
+}
+
+/// Gaps between consecutive metrics in a descending-sorted ranking.
+fn consecutive_gaps(ranking: &[(TrialId, f64)]) -> Vec<f64> {
+    ranking
+        .windows(2)
+        .map(|w| (w[0].1 - w[1].1).abs())
+        .collect()
+}
+
+/// The position-wise soft-rank consistency check, shared with tests.
+pub fn soft_consistent(
+    top: &[(TrialId, f64)],
+    prev: &[(TrialId, f64)],
+    eps: f64,
+) -> bool {
+    debug_assert_eq!(top.len(), prev.len(), "rankings must cover the same trials");
+    let prev_metric: HashMap<TrialId, f64> = prev.iter().copied().collect();
+    for (i, &(trial, _)) in top.iter().enumerate() {
+        let anchor = prev[i].1; // metric of the config prev rung put at rank i
+        let m = match prev_metric.get(&trial) {
+            Some(&m) => m,
+            // a top-rung trial missing from the previous rung cannot be
+            // position-checked; treat as inconsistent (defensive)
+            None => return false,
+        };
+        if (m - anchor).abs() > eps {
+            return false;
+        }
+    }
+    true
+}
+
+impl RankingFunction for SoftRanking {
+    fn consistent(
+        &mut self,
+        top: &[(TrialId, f64)],
+        prev: &[(TrialId, f64)],
+        ctx: &RankCtx,
+    ) -> bool {
+        self.current_eps = self.compute_eps(prev, ctx);
+        soft_consistent(top, prev, self.current_eps)
+    }
+
+    fn epsilon(&self) -> Option<f64> {
+        Some(self.current_eps)
+    }
+
+    fn name(&self) -> String {
+        format!("soft({:?})", self.rule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    fn mk(ids: &[usize], metrics: &[f64]) -> Vec<(TrialId, f64)> {
+        ids.iter().copied().zip(metrics.iter().copied()).collect()
+    }
+
+    #[test]
+    fn identical_order_consistent_at_eps0() {
+        let top = mk(&[1, 2, 3], &[90.0, 80.0, 70.0]);
+        let prev = mk(&[1, 2, 3], &[60.0, 50.0, 40.0]);
+        assert!(soft_consistent(&top, &prev, 0.0));
+    }
+
+    #[test]
+    fn swap_inconsistent_at_eps0() {
+        let top = mk(&[2, 1, 3], &[90.0, 80.0, 70.0]);
+        let prev = mk(&[1, 2, 3], &[60.0, 50.0, 40.0]);
+        assert!(!soft_consistent(&top, &prev, 0.0));
+    }
+
+    #[test]
+    fn swap_within_eps_is_consistent() {
+        // configs 1 and 2 differ by 1.0 in the previous rung: ε ≥ 1 forgives
+        let top = mk(&[2, 1, 3], &[90.0, 80.0, 70.0]);
+        let prev = mk(&[1, 2, 3], &[60.0, 59.0, 40.0]);
+        assert!(!soft_consistent(&top, &prev, 0.5));
+        assert!(soft_consistent(&top, &prev, 1.0));
+    }
+
+    #[test]
+    fn distant_swap_not_forgiven() {
+        // top rung promotes the far-worse config to rank 0
+        let top = mk(&[3, 1, 2], &[90.0, 80.0, 70.0]);
+        let prev = mk(&[1, 2, 3], &[60.0, 59.0, 40.0]);
+        assert!(!soft_consistent(&top, &prev, 5.0));
+        assert!(soft_consistent(&top, &prev, 20.0));
+    }
+
+    #[test]
+    fn empty_and_singleton_consistent() {
+        assert!(soft_consistent(&[], &[], 0.0));
+        let one = mk(&[5], &[50.0]);
+        assert!(soft_consistent(&one, &one, 0.0));
+    }
+
+    #[test]
+    fn epsilon_rules_compute_expected_values() {
+        let prev = mk(&[1, 2, 3, 4], &[60.0, 58.0, 50.0, 30.0]);
+        let ctx = RankCtx::empty();
+
+        let mut sig = SoftRanking::sigma(2.0);
+        sig.consistent(&prev, &prev, &ctx);
+        let metrics = [60.0, 58.0, 50.0, 30.0];
+        assert!((sig.epsilon().unwrap() - 2.0 * stats::std(&metrics)).abs() < 1e-9);
+
+        let mut mg = SoftRanking::mean_gap();
+        mg.consistent(&prev, &prev, &ctx);
+        // gaps: 2, 8, 20 → mean 10
+        assert!((mg.epsilon().unwrap() - 10.0).abs() < 1e-9);
+
+        let mut md = SoftRanking::median_gap();
+        md.consistent(&prev, &prev, &ctx);
+        assert!((md.epsilon().unwrap() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_adaptive_zero_until_crossings() {
+        let mut f = SoftRanking::noise_adaptive(90.0);
+        let top = mk(&[1, 2], &[90.0, 80.0]);
+        let prev = mk(&[1, 2], &[60.0, 50.0]);
+        // no curves ⇒ ε stays 0 ⇒ exact ranking
+        assert!(f.consistent(&top, &prev, &RankCtx::empty()));
+        assert_eq!(f.epsilon(), Some(0.0));
+    }
+
+    #[test]
+    fn noise_adaptive_forgives_within_measured_noise() {
+        // Two near-tied configs criss-cross with end distance 1.0; a swap of
+        // prev-rung metrics within that ε must be consistent.
+        let ca = [50.0, 52.0, 50.0, 52.0, 51.0];
+        let cb = [51.0, 51.0, 51.0, 51.0, 50.0];
+        let curves = [(1usize, &ca[..]), (2, &cb[..])];
+        let ctx = RankCtx {
+            top_curves: &curves,
+        };
+        let mut f = SoftRanking::noise_adaptive(100.0);
+        let top = mk(&[2, 1], &[52.0, 51.0]);
+        let prev = mk(&[1, 2], &[51.0, 50.5]);
+        assert!(f.consistent(&top, &prev, &ctx));
+        assert!((f.epsilon().unwrap() - 1.0).abs() < 1e-9);
+        // but a big swap is still flagged
+        let prev_far = mk(&[1, 2], &[51.0, 45.0]);
+        let top_far = mk(&[2, 1], &[52.0, 51.0]);
+        assert!(!f.consistent(&top_far, &prev_far, &ctx));
+    }
+
+    #[test]
+    fn missing_trial_is_inconsistent() {
+        let top = mk(&[9, 2], &[90.0, 80.0]);
+        let prev = mk(&[1, 2], &[60.0, 50.0]);
+        assert!(!soft_consistent(&top, &prev, 100.0));
+    }
+
+    #[test]
+    fn property_eps0_equals_exact_order_match() {
+        check("ε=0 ⟺ identical id order (distinct metrics)", 200, |g| {
+            let n = g.usize(1, 10);
+            // distinct metrics via strictly increasing values, shuffled ids
+            let prev_metrics = g.increasing(n, 0.0, 5.0);
+            let ids = g.permutation(n);
+            let mut prev: Vec<(TrialId, f64)> = ids
+                .iter()
+                .copied()
+                .zip(prev_metrics.iter().copied())
+                .collect();
+            prev.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            // top ranking: either same order or with one adjacent swap
+            let mut top: Vec<(TrialId, f64)> = prev
+                .iter()
+                .enumerate()
+                .map(|(i, &(t, _))| (t, 100.0 - i as f64))
+                .collect();
+            let do_swap = g.bool() && n >= 2;
+            if do_swap {
+                let i = g.usize(0, n - 2);
+                let (ta, tb) = (top[i].0, top[i + 1].0);
+                top[i].0 = tb;
+                top[i + 1].0 = ta;
+            }
+            assert_eq!(soft_consistent(&top, &prev, 0.0), !do_swap);
+        });
+    }
+
+    #[test]
+    fn property_consistency_monotone_in_eps() {
+        check("consistent at ε ⇒ consistent at larger ε", 200, |g| {
+            let n = g.usize(2, 8);
+            let metrics_prev: Vec<f64> = (0..n).map(|_| g.f64(0.0, 100.0)).collect();
+            let metrics_top: Vec<f64> = (0..n).map(|_| g.f64(0.0, 100.0)).collect();
+            let mut prev: Vec<(TrialId, f64)> =
+                (0..n).zip(metrics_prev.iter().copied()).collect();
+            let mut top: Vec<(TrialId, f64)> =
+                (0..n).zip(metrics_top.iter().copied()).collect();
+            prev.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let e1 = g.f64(0.0, 20.0);
+            let e2 = e1 + g.f64(0.0, 20.0);
+            if soft_consistent(&top, &prev, e1) {
+                assert!(soft_consistent(&top, &prev, e2));
+            }
+        });
+    }
+}

@@ -1,0 +1,533 @@
+//! One function per paper table. Each regenerates the table's rows —
+//! same approaches, same datasets, same columns — against the surrogate
+//! substrates, at either paper scale (N=256, full seed grids) or a
+//! reduced smoke scale for quick runs.
+
+use crate::benchmarks::lcbench::LcBench;
+use crate::benchmarks::nasbench201::{NasBench201, Nb201Dataset};
+use crate::benchmarks::pd1::Pd1;
+use crate::benchmarks::Benchmark;
+use crate::metrics::Row;
+use crate::ranking::RankingSpec;
+use crate::scheduler::asha::AshaBuilder;
+use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
+use crate::scheduler::pasha::PashaBuilder;
+use crate::scheduler::SchedulerBuilder;
+use crate::tuner::{SearcherKind, Tuner, TunerSpec};
+use crate::util::table::Table;
+
+/// Repetition/budget scale of an experiment run.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub config_budget: usize,
+    pub workers: usize,
+    pub sched_seeds: Vec<u64>,
+    pub bench_seeds_nas: Vec<u64>,
+    pub bench_seeds_other: Vec<u64>,
+}
+
+impl Scale {
+    /// The paper's protocol: N=256 configs, 4 workers, 5 scheduler seeds,
+    /// 3 NASBench201 seeds (15 reps) / 1 seed elsewhere (5 reps).
+    pub fn paper() -> Scale {
+        Scale {
+            config_budget: 256,
+            workers: 4,
+            sched_seeds: (0..5).collect(),
+            bench_seeds_nas: (0..3).collect(),
+            bench_seeds_other: vec![0],
+        }
+    }
+
+    /// Reduced scale for smoke runs and CI.
+    pub fn smoke() -> Scale {
+        Scale {
+            config_budget: 64,
+            workers: 4,
+            sched_seeds: vec![0, 1],
+            bench_seeds_nas: vec![0],
+            bench_seeds_other: vec![0],
+        }
+    }
+
+    fn bench_seeds(&self, bench_name: &str) -> &[u64] {
+        if bench_name.starts_with("NASBench201") {
+            &self.bench_seeds_nas
+        } else {
+            &self.bench_seeds_other
+        }
+    }
+}
+
+/// An approach = a scheduler builder plus a searcher kind.
+pub struct Approach {
+    pub builder: Box<dyn SchedulerBuilder>,
+    pub searcher: SearcherKind,
+    /// Optional display-name override (e.g. "MOBSTER" for ASHA+BO).
+    pub label: Option<String>,
+}
+
+impl Approach {
+    pub fn new(builder: Box<dyn SchedulerBuilder>) -> Approach {
+        Approach {
+            builder,
+            searcher: SearcherKind::Random,
+            label: None,
+        }
+    }
+
+    pub fn bo(builder: Box<dyn SchedulerBuilder>, label: &str) -> Approach {
+        Approach {
+            builder,
+            searcher: SearcherKind::Bo,
+            label: Some(label.to_string()),
+        }
+    }
+
+    fn name(&self) -> String {
+        self.label.clone().unwrap_or_else(|| self.builder.name())
+    }
+}
+
+/// The paper's standard baseline set: ASHA, PASHA, one-epoch, random.
+pub fn standard_approaches(eta: u32) -> Vec<Approach> {
+    vec![
+        Approach::new(Box::new(AshaBuilder { r_min: 1, eta })),
+        Approach::new(Box::new(PashaBuilder {
+            r_min: 1,
+            eta,
+            ranking: RankingSpec::default(),
+        })),
+        Approach::new(Box::new(FixedEpochBuilder { epochs: 1 })),
+        Approach::new(Box::new(RandomBaselineBuilder)),
+    ]
+}
+
+/// Run a set of approaches on one benchmark and produce a paper-style
+/// table. The first approach is the speedup reference (ASHA convention).
+pub fn compare(bench: &dyn Benchmark, approaches: &[Approach], scale: &Scale, title: &str) -> Table {
+    let mut table = Table::new(
+        title,
+        &[
+            "Approach",
+            "Accuracy (%)",
+            "Runtime",
+            "Speedup factor",
+            "Max resources",
+        ],
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for a in approaches {
+        let spec = TunerSpec {
+            workers: scale.workers,
+            config_budget: scale.config_budget,
+            searcher: a.searcher.clone(),
+        };
+        let results = Tuner::run_repeated(
+            bench,
+            a.builder.as_ref(),
+            &spec,
+            &scale.sched_seeds,
+            scale.bench_seeds(&bench.name()),
+        );
+        rows.push(Row::from_results(&a.name(), &results));
+    }
+    let reference = rows[0].runtime.mean();
+    for row in &rows {
+        table.row(&row.cells(reference));
+    }
+    table
+}
+
+fn nas_all() -> Vec<NasBench201> {
+    vec![
+        NasBench201::cifar10(),
+        NasBench201::cifar100(),
+        NasBench201::imagenet16(),
+    ]
+}
+
+/// Table 1: NASBench201 main results (ASHA/PASHA/one-epoch/random × 3
+/// datasets).
+pub fn table1(scale: &Scale) -> Vec<Table> {
+    nas_all()
+        .iter()
+        .map(|b| {
+            compare(
+                b,
+                &standard_approaches(3),
+                scale,
+                &format!("Table 1 — {}", b.name()),
+            )
+        })
+        .collect()
+}
+
+/// Table 2: reduction factors η ∈ {2, 4} on CIFAR-100.
+pub fn table2(scale: &Scale) -> Vec<Table> {
+    let b = NasBench201::cifar100();
+    [2u32, 4]
+        .iter()
+        .map(|&eta| {
+            let approaches = vec![
+                Approach::new(Box::new(AshaBuilder { r_min: 1, eta })),
+                Approach::new(Box::new(PashaBuilder {
+                    r_min: 1,
+                    eta,
+                    ranking: RankingSpec::default(),
+                })),
+            ];
+            compare(
+                &b,
+                &approaches,
+                scale,
+                &format!("Table 2 — {} (eta={eta})", b.name()),
+            )
+        })
+        .collect()
+}
+
+/// Table 3: Bayesian-optimization searchers — MOBSTER (ASHA+BO) vs
+/// PASHA BO, all three NASBench201 datasets.
+pub fn table3(scale: &Scale) -> Vec<Table> {
+    nas_all()
+        .iter()
+        .map(|b| {
+            let approaches = vec![
+                Approach::bo(Box::new(AshaBuilder::default()), "MOBSTER"),
+                Approach::bo(Box::new(PashaBuilder::default()), "PASHA BO"),
+            ];
+            compare(b, &approaches, scale, &format!("Table 3 — {}", b.name()))
+        })
+        .collect()
+}
+
+/// The full ranking-function sweep of Appendix C (Tables 9/10/11; Table 4
+/// is the CIFAR-100 selection).
+pub fn ranking_function_approaches() -> Vec<Approach> {
+    let mut v = vec![
+        Approach::new(Box::new(AshaBuilder::default())),
+        Approach::new(Box::new(PashaBuilder::default())),
+        Approach::new(Box::new(PashaBuilder::with_ranking(RankingSpec::Direct))),
+    ];
+    for eps in [0.01, 0.02, 0.025, 0.03, 0.05] {
+        // NOTE: the paper's ε values are fractions of accuracy-in-[0,1];
+        // our metrics are percentages, so scale by 100.
+        v.push(Approach::new(Box::new(PashaBuilder::with_ranking(
+            RankingSpec::SoftFixed {
+                epsilon: eps * 100.0,
+            },
+        ))));
+    }
+    for mult in [1.0, 2.0, 3.0] {
+        v.push(Approach::new(Box::new(PashaBuilder::with_ranking(
+            RankingSpec::SoftSigma { mult },
+        ))));
+    }
+    v.push(Approach::new(Box::new(PashaBuilder::with_ranking(
+        RankingSpec::SoftMeanGap,
+    ))));
+    v.push(Approach::new(Box::new(PashaBuilder::with_ranking(
+        RankingSpec::SoftMedianGap,
+    ))));
+    for p in [1.0, 0.5] {
+        v.push(Approach::new(Box::new(PashaBuilder::with_ranking(
+            RankingSpec::Rbo { p, t: 0.5 },
+        ))));
+    }
+    for p in [1.0, 0.5] {
+        v.push(Approach::new(Box::new(PashaBuilder::with_ranking(
+            RankingSpec::Rrr { p, t: 0.05 },
+        ))));
+    }
+    for p in [1.0, 0.5] {
+        v.push(Approach::new(Box::new(PashaBuilder::with_ranking(
+            RankingSpec::Arrr { p, t: 0.05 },
+        ))));
+    }
+    v.push(Approach::new(Box::new(FixedEpochBuilder { epochs: 1 })));
+    v.push(Approach::new(Box::new(RandomBaselineBuilder)));
+    v
+}
+
+/// Tables 4/9/10/11: ranking functions on one NASBench201 dataset.
+pub fn table_rankings(dataset: Nb201Dataset, scale: &Scale, table_no: u32) -> Table {
+    let b = NasBench201::new(dataset);
+    compare(
+        &b,
+        &ranking_function_approaches(),
+        scale,
+        &format!("Table {table_no} — ranking functions, {}", b.name()),
+    )
+}
+
+/// Table 5/7: PD1 (WMT + ImageNet) with the k-epoch baseline family.
+pub fn table5(scale: &Scale) -> Vec<Table> {
+    [Pd1::wmt(), Pd1::imagenet()]
+        .iter()
+        .map(|b| {
+            let approaches = vec![
+                Approach::new(Box::new(AshaBuilder::default())),
+                Approach::new(Box::new(PashaBuilder::default())),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 1 })),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 2 })),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 3 })),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 5 })),
+                Approach::new(Box::new(RandomBaselineBuilder)),
+            ];
+            compare(b, &approaches, scale, &format!("Table 5/7 — {}", b.name()))
+        })
+        .collect()
+}
+
+/// Table 6: NASBench201 with the extra 2/3/5-epoch baselines.
+pub fn table6(scale: &Scale) -> Vec<Table> {
+    nas_all()
+        .iter()
+        .map(|b| {
+            let approaches = vec![
+                Approach::new(Box::new(AshaBuilder::default())),
+                Approach::new(Box::new(PashaBuilder::default())),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 1 })),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 2 })),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 3 })),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 5 })),
+                Approach::new(Box::new(RandomBaselineBuilder)),
+            ];
+            compare(b, &approaches, scale, &format!("Table 6 — {}", b.name()))
+        })
+        .collect()
+}
+
+/// Table 8: reduction factors on all three datasets.
+pub fn table8(scale: &Scale) -> Vec<Table> {
+    let mut out = Vec::new();
+    for b in nas_all() {
+        for eta in [2u32, 4] {
+            let approaches = vec![
+                Approach::new(Box::new(AshaBuilder { r_min: 1, eta })),
+                Approach::new(Box::new(PashaBuilder {
+                    r_min: 1,
+                    eta,
+                    ranking: RankingSpec::default(),
+                })),
+            ];
+            out.push(compare(
+                &b,
+                &approaches,
+                scale,
+                &format!("Table 8 — {} (eta={eta})", b.name()),
+            ));
+        }
+    }
+    out
+}
+
+/// Table 12: selected ranking functions on PD1.
+pub fn table12(scale: &Scale) -> Vec<Table> {
+    [Pd1::wmt(), Pd1::imagenet()]
+        .iter()
+        .map(|b| {
+            let approaches = vec![
+                Approach::new(Box::new(AshaBuilder::default())),
+                Approach::new(Box::new(PashaBuilder::default())),
+                Approach::new(Box::new(PashaBuilder::with_ranking(RankingSpec::Direct))),
+                Approach::new(Box::new(PashaBuilder::with_ranking(
+                    RankingSpec::SoftFixed { epsilon: 2.5 },
+                ))),
+                Approach::new(Box::new(PashaBuilder::with_ranking(
+                    RankingSpec::SoftSigma { mult: 2.0 },
+                ))),
+                Approach::new(Box::new(PashaBuilder::with_ranking(RankingSpec::Rbo {
+                    p: 0.5,
+                    t: 0.5,
+                }))),
+                Approach::new(Box::new(PashaBuilder::with_ranking(RankingSpec::Rrr {
+                    p: 0.5,
+                    t: 0.05,
+                }))),
+                Approach::new(Box::new(FixedEpochBuilder { epochs: 1 })),
+                Approach::new(Box::new(RandomBaselineBuilder)),
+            ];
+            compare(b, &approaches, scale, &format!("Table 12 — {}", b.name()))
+        })
+        .collect()
+}
+
+/// Table 13: LCBench — ASHA vs PASHA accuracy + speedup per dataset.
+pub fn table13(scale: &Scale, max_datasets: usize) -> Table {
+    let mut table = Table::new(
+        "Table 13 — LCBench",
+        &[
+            "Dataset",
+            "ASHA accuracy (%)",
+            "PASHA accuracy (%)",
+            "PASHA speedup",
+        ],
+    );
+    for b in LcBench::all().into_iter().take(max_datasets) {
+        let spec = TunerSpec {
+            workers: scale.workers,
+            config_budget: scale.config_budget,
+            searcher: SearcherKind::Random,
+        };
+        let asha = Tuner::run_repeated(
+            &b,
+            &AshaBuilder::default(),
+            &spec,
+            &scale.sched_seeds,
+            &scale.bench_seeds_other,
+        );
+        let pasha = Tuner::run_repeated(
+            &b,
+            &PashaBuilder::default(),
+            &spec,
+            &scale.sched_seeds,
+            &scale.bench_seeds_other,
+        );
+        let ra = Row::from_results("ASHA", &asha);
+        let rp = Row::from_results("PASHA", &pasha);
+        let speedup = ra.runtime.mean() / rp.runtime.mean().max(1e-9);
+        table.row(&[
+            b.name().trim_start_matches("LCBench/").to_string(),
+            ra.accuracy.cell(2),
+            rp.accuracy.cell(2),
+            format!("{:.1}x", speedup),
+        ]);
+    }
+    table
+}
+
+/// Table 14: variable maximum resources (200 vs 50 epochs).
+pub fn table14(scale: &Scale) -> Vec<Table> {
+    let mut out = Vec::new();
+    for ds in [
+        Nb201Dataset::Cifar10,
+        Nb201Dataset::Cifar100,
+        Nb201Dataset::ImageNet16_120,
+    ] {
+        for epochs in [200u32, 50] {
+            let b = NasBench201::with_max_epochs(ds, epochs);
+            let approaches = vec![
+                Approach::new(Box::new(AshaBuilder::default())),
+                Approach::new(Box::new(PashaBuilder::default())),
+            ];
+            out.push(compare(
+                &b,
+                &approaches,
+                scale,
+                &format!("Table 14 — {} ({epochs} epochs)", b.name()),
+            ));
+        }
+    }
+    out
+}
+
+/// Table 15: percentile N ∈ {100, 95, 90, 80} for the ε estimate.
+pub fn table15(scale: &Scale) -> Vec<Table> {
+    nas_all()
+        .iter()
+        .map(|b| {
+            let mut approaches = vec![Approach::new(Box::new(AshaBuilder::default()))];
+            for n in [100.0, 95.0, 90.0, 80.0] {
+                approaches.push(Approach {
+                    builder: Box::new(PashaBuilder::with_ranking(RankingSpec::NoiseAdaptive {
+                        percentile: n,
+                    })),
+                    searcher: SearcherKind::Random,
+                    label: Some(format!("PASHA N={n}%")),
+                });
+            }
+            approaches.push(Approach::new(Box::new(FixedEpochBuilder { epochs: 1 })));
+            approaches.push(Approach::new(Box::new(RandomBaselineBuilder)));
+            compare(b, &approaches, scale, &format!("Table 15 — {}", b.name()))
+        })
+        .collect()
+}
+
+/// Ablation (DESIGN.md): PASHA vs synchronous SH and Hyperband.
+pub fn ablation_schedulers(scale: &Scale) -> Table {
+    let b = NasBench201::cifar100();
+    let approaches = vec![
+        Approach::new(Box::new(AshaBuilder::default())),
+        Approach::new(Box::new(PashaBuilder::default())),
+        Approach::new(Box::new(crate::scheduler::sh::SyncShBuilder {
+            r_min: 1,
+            eta: 3,
+            n0: scale.config_budget,
+        })),
+        Approach::new(Box::new(crate::scheduler::hyperband::HyperbandBuilder {
+            r_min: 1,
+            eta: 3,
+        })),
+    ];
+    compare(
+        &b,
+        &approaches,
+        scale,
+        "Ablation — scheduler family on NASBench201/cifar100",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale {
+            config_budget: 27,
+            workers: 4,
+            sched_seeds: vec![0],
+            bench_seeds_nas: vec![0],
+            bench_seeds_other: vec![0],
+        }
+    }
+
+    #[test]
+    fn table1_smoke_shape() {
+        let tables = table1(&tiny());
+        assert_eq!(tables.len(), 3);
+        for t in &tables {
+            assert_eq!(t.rows.len(), 4);
+            assert_eq!(t.rows[0][0], "ASHA");
+            assert_eq!(t.rows[1][0], "PASHA");
+            assert_eq!(t.rows[0][3], "1.0x", "ASHA is the speedup reference");
+            assert_eq!(t.rows[3][3], "N/A", "random baseline speedup is N/A");
+        }
+    }
+
+    #[test]
+    fn table2_uses_both_etas() {
+        let tables = table2(&tiny());
+        assert_eq!(tables.len(), 2);
+        assert!(tables[0].title.contains("eta=2"));
+        assert!(tables[1].title.contains("eta=4"));
+    }
+
+    #[test]
+    fn table13_lcbench_rows() {
+        let t = table13(&tiny(), 3);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][0], "APSFailure");
+    }
+
+    #[test]
+    fn ranking_sweep_has_all_families() {
+        let approaches = ranking_function_approaches();
+        let names: Vec<String> = approaches.iter().map(|a| a.name()).collect();
+        assert!(names.iter().any(|n| n == "PASHA"));
+        assert!(names.iter().any(|n| n.contains("direct")));
+        assert!(names.iter().any(|n| n.contains("sigma")));
+        assert!(names.iter().any(|n| n.contains("RBO")));
+        assert!(names.iter().any(|n| n.contains("ARRR")));
+        assert!(names.len() >= 19);
+    }
+
+    #[test]
+    fn table14_truncated_budget_titles() {
+        let ts = table14(&tiny());
+        assert_eq!(ts.len(), 6);
+        assert!(ts[0].title.contains("200 epochs"));
+        assert!(ts[1].title.contains("50 epochs"));
+    }
+}

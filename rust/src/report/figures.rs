@@ -1,0 +1,179 @@
+//! Regeneration of the paper's figures as CSV series / text diagrams.
+//!
+//! * Figure 1 — rank-stabilization trace of a live PASHA run;
+//! * Figure 2 — soft-ranking list-of-lists on a concrete example;
+//! * Figure 3 — learning curves of the top-3 of 256 sampled configs;
+//! * Figure 4 — all 256 learning curves;
+//! * Figure 5 — evolution of the estimated ε during tuning.
+
+use crate::benchmarks::nasbench201::{NasBench201, Nb201Dataset, NUM_ARCHS};
+use crate::benchmarks::Benchmark;
+use crate::config::space::Config;
+use crate::ranking::soft::soft_consistent;
+use crate::scheduler::pasha::PashaBuilder;
+use crate::tuner::{Tuner, TunerSpec};
+use crate::util::rng::Rng;
+use crate::util::table::series_csv;
+
+/// Figure 1: run PASHA on CIFAR-10 and narrate each top-rung consistency
+/// decision (stable → stop growing; unstable → one more rung).
+pub fn figure1(budget: usize) -> String {
+    let bench = NasBench201::cifar10();
+    let spec = TunerSpec {
+        config_budget: budget,
+        ..Default::default()
+    };
+    let r = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+    let mut out = String::new();
+    out.push_str("Figure 1 — PASHA rank-stabilization trace (NASBench201/cifar10)\n");
+    out.push_str(&format!(
+        "configs sampled: {}; growth decisions observed: {}\n",
+        r.configs_sampled,
+        r.eps_history.len()
+    ));
+    out.push_str(&format!(
+        "final max resources: {} epochs (safety net: {})\n",
+        r.max_resources,
+        bench.max_epochs()
+    ));
+    out.push_str(&format!(
+        "ranking stabilized => stopped {}x below the ASHA budget\n",
+        bench.max_epochs() / r.max_resources.max(1)
+    ));
+    out
+}
+
+/// Figure 2: soft-ranking illustration. Returns the list-of-lists for a
+/// concrete set of configuration scores and ε.
+pub fn figure2(scores: &[f64], eps: f64) -> String {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 2 — soft ranking with eps={eps} (scores sorted desc)\n"
+    ));
+    for (pos, &i) in idx.iter().enumerate() {
+        let set: Vec<String> = idx
+            .iter()
+            .filter(|&&j| (scores[j] - scores[i]).abs() <= eps)
+            .map(|&j| format!("c{j}({})", scores[j]))
+            .collect();
+        out.push_str(&format!("rank {pos}: [{}]\n", set.join(", ")));
+    }
+    // also demonstrate the consistency check semantics on itself
+    let ranked: Vec<(usize, f64)> = idx.iter().map(|&i| (i, scores[i])).collect();
+    let consistent = soft_consistent(&ranked, &ranked, eps);
+    out.push_str(&format!("self-consistency (sanity): {consistent}\n"));
+    out
+}
+
+/// Sample 256 architectures the way the experiments do.
+fn sample_archs(seed: u64, n: usize) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(NUM_ARCHS as u64) as usize).collect()
+}
+
+/// Figure 3: per-epoch curves of the top-3 (by final accuracy) of a
+/// 256-architecture sample. CSV: epoch, top1, top2, top3.
+pub fn figure3(dataset: Nb201Dataset, seed: u64) -> String {
+    let bench = NasBench201::new(dataset);
+    let archs = sample_archs(seed, 256);
+    let mut by_final: Vec<(usize, f64)> = archs
+        .iter()
+        .map(|&a| (a, bench.retrain_accuracy(&Config::cat(a), 0)))
+        .collect();
+    by_final.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let top3: Vec<usize> = by_final.iter().take(3).map(|&(a, _)| a).collect();
+    let epochs: Vec<f64> = (1..=200).map(|e| e as f64).collect();
+    let mut cols = vec![epochs];
+    for &a in &top3 {
+        cols.push(
+            (1..=200u32)
+                .map(|e| bench.accuracy_at(&Config::cat(a), e, 0))
+                .collect(),
+        );
+    }
+    series_csv(&["epoch", "top1", "top2", "top3"], &cols)
+}
+
+/// Figure 4: all 256 learning curves. CSV: epoch, c0..c255 (long format
+/// would be 51k rows; wide format keeps the file tractable).
+pub fn figure4(dataset: Nb201Dataset, seed: u64) -> String {
+    let bench = NasBench201::new(dataset);
+    let archs = sample_archs(seed, 256);
+    let epochs: Vec<f64> = (1..=200).map(|e| e as f64).collect();
+    let mut headers: Vec<String> = vec!["epoch".into()];
+    let mut cols = vec![epochs];
+    for (i, &a) in archs.iter().enumerate() {
+        headers.push(format!("c{i}"));
+        cols.push(
+            (1..=200u32)
+                .map(|e| bench.accuracy_at(&Config::cat(a), e, 0))
+                .collect(),
+        );
+    }
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    series_csv(&header_refs, &cols)
+}
+
+/// Figure 5: ε evolution during PASHA tuning, one series per dataset.
+/// CSV per dataset: update index, epsilon.
+pub fn figure5(dataset: Nb201Dataset, budget: usize) -> String {
+    let bench = NasBench201::new(dataset);
+    let spec = TunerSpec {
+        config_budget: budget,
+        ..Default::default()
+    };
+    let r = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+    let idx: Vec<f64> = (0..r.eps_history.len()).map(|i| i as f64).collect();
+    series_csv(&["update", "epsilon"], &[idx, r.eps_history.clone()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_trace_mentions_stop() {
+        let s = figure1(32);
+        assert!(s.contains("final max resources"));
+        assert!(s.contains("configs sampled: 32"));
+    }
+
+    #[test]
+    fn figure2_groups_near_ties() {
+        let s = figure2(&[70.0, 69.9, 50.0], 0.5);
+        // c0 and c1 are within eps: both appear in rank-0's list
+        let first_line = s.lines().nth(1).unwrap();
+        assert!(first_line.contains("c0"), "{first_line}");
+        assert!(first_line.contains("c1"), "{first_line}");
+        assert!(!first_line.contains("c2"), "{first_line}");
+    }
+
+    #[test]
+    fn figure3_csv_shape() {
+        let csv = figure3(Nb201Dataset::Cifar10, 0);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "epoch,top1,top2,top3");
+        assert_eq!(lines.len(), 201);
+        // top1's final accuracy should be near the benchmark ceiling
+        let last: Vec<f64> = lines[200]
+            .split(',')
+            .map(|x| x.parse().unwrap())
+            .collect();
+        assert!(last[1] > 90.0, "top1 final {}", last[1]);
+    }
+
+    #[test]
+    fn figure4_has_256_series() {
+        let csv = figure4(Nb201Dataset::Cifar10, 0);
+        let header = csv.lines().next().unwrap();
+        assert_eq!(header.split(',').count(), 257);
+    }
+
+    #[test]
+    fn figure5_epsilon_series_nonempty() {
+        let csv = figure5(Nb201Dataset::Cifar100, 48);
+        assert!(csv.lines().count() >= 2, "expected ε updates: {csv}");
+    }
+}

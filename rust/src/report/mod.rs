@@ -1,0 +1,4 @@
+//! Experiment registry: regenerates every table and figure of the paper.
+
+pub mod experiments;
+pub mod figures;

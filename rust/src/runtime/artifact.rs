@@ -1,0 +1,220 @@
+//! PJRT engine + artifact registry.
+//!
+//! [`Engine`] wraps a `PjRtClient` (CPU) and compiles HLO-text artifacts
+//! once; [`CompiledArtifact`] is the executable handle used on the hot
+//! path. Artifact files live in `artifacts/` (overridable with
+//! `PASHA_ARTIFACTS`) and are produced by `make artifacts`
+//! (`python/compile/aot.py`), which also writes `manifest.json` recording
+//! every artifact's input/output shapes.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Directory holding AOT artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("PASHA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // walk up from cwd so tests work from any crate-relative location
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Are the AOT artifacts available? (Used by tests to skip gracefully
+/// before `make artifacts` has run.)
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").is_file()
+}
+
+/// A PJRT client plus a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<CompiledArtifact>>>,
+}
+
+// The PJRT CPU client is thread-safe at the C API level; executions are
+// serialized per-artifact by the Mutex in `CompiledArtifact::run`.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU engine.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<CompiledArtifact>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(a) = cache.get(path) {
+                return Ok(a.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let artifact = std::sync::Arc::new(CompiledArtifact {
+            exe: Mutex::new(exe),
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Load an artifact by name from the artifacts directory.
+    pub fn load_named(&self, name: &str) -> Result<std::sync::Arc<CompiledArtifact>> {
+        self.load(&artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct CompiledArtifact {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+unsafe impl Send for CompiledArtifact {}
+unsafe impl Sync for CompiledArtifact {}
+
+impl CompiledArtifact {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow!("untuple result {}: {e:?}", self.name))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    if numel as usize != data.len() {
+        return Err(anyhow!("shape {:?} != data len {}", dims, data.len()));
+    }
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(v)
+    } else {
+        v.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    if numel as usize != data.len() {
+        return Err(anyhow!("shape {:?} != data len {}", dims, data.len()));
+    }
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(v)
+    } else {
+        v.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Extract a scalar f32.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar f32: {e:?}"))
+}
+
+/// Extract an i32 vector.
+pub fn vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let s = lit_scalar(2.5);
+        assert_eq!(scalar_f32(&s).unwrap(), 2.5);
+        let i = lit_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(vec_i32(&i).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn engine_compiles_and_runs_builder_computation() {
+        // End-to-end PJRT smoke test without artifacts: build a tiny
+        // computation with XlaBuilder, compile, execute.
+        let engine = match Engine::cpu() {
+            Ok(e) => e,
+            Err(e) => panic!("PJRT CPU client unavailable: {e}"),
+        };
+        assert!(!engine.platform_name().is_empty());
+        let builder = xla::XlaBuilder::new("smoke");
+        let c = builder.constant_r1(&[1.0f32, 2.0]).unwrap();
+        let sum = (c + builder.constant_r0(1.0f32).unwrap()).unwrap();
+        let comp = sum.build().unwrap();
+        let exe = engine.client.compile(&comp).unwrap();
+        let out = exe.execute::<xla::Literal>(&[]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+}

@@ -1,0 +1,188 @@
+//! GP posterior + expected improvement through the AOT JAX/Pallas
+//! artifact (`gp_ei_n{N}_d{D}_m{M}.hlo.txt`).
+//!
+//! The compiled program computes, for a padded training set of exactly
+//! `N` points in `D` dimensions and `M` candidate points: the RBF Gram
+//! matrix (Layer-1 Pallas kernel), the Cholesky-free posterior via
+//! `solve(K + diag(noise), ·)` (jnp.linalg.solve in L2), posterior
+//! mean/variance at the candidates, and EI against `f_best`.
+//!
+//! Padding: unused training slots carry noise 1e6, making them
+//! statistically invisible — the masked posterior matches an unpadded GP
+//! to ~1e-5, which `tests/pjrt_numerics.rs` cross-checks against the
+//! pure-Rust [`crate::searcher::gp::Gp`].
+
+use super::artifact::{lit_f32, lit_scalar, vec_f32, CompiledArtifact, Engine};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Padded training-set size baked into the artifact.
+pub const GP_N: usize = 64;
+/// Input dimension (the PD1 search space).
+pub const GP_D: usize = 4;
+/// Candidate batch size.
+pub const GP_M: usize = 64;
+/// Noise variance assigned to padding slots.
+pub const PAD_NOISE: f32 = 1e6;
+
+/// Posterior + EI results for one candidate batch.
+#[derive(Clone, Debug)]
+pub struct GpEiOut {
+    pub ei: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+}
+
+/// Handle to the compiled GP/EI artifact.
+pub struct GpEiArtifact {
+    art: Arc<CompiledArtifact>,
+}
+
+impl GpEiArtifact {
+    pub fn load(engine: &Engine) -> Result<GpEiArtifact> {
+        let art = engine.load_named(&format!("gp_ei_n{GP_N}_d{GP_D}_m{GP_M}"))?;
+        Ok(GpEiArtifact { art })
+    }
+
+    /// Evaluate the GP posterior and EI.
+    ///
+    /// * `x` — up to `GP_N` observed points (unit cube, dim `GP_D`);
+    /// * `y` — observed objective values (already standardized by caller);
+    /// * `cand` — exactly up to `GP_M` candidates (padded internally);
+    /// * `f_best` — incumbent (standardized);
+    /// * `lengthscale`, `signal_var`, `noise_var` — RBF hyperparameters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        cand: &[Vec<f64>],
+        f_best: f64,
+        lengthscale: f64,
+        signal_var: f64,
+        noise_var: f64,
+    ) -> Result<GpEiOut> {
+        if x.len() != y.len() {
+            return Err(anyhow!("x/y length mismatch"));
+        }
+        if x.len() > GP_N {
+            return Err(anyhow!("too many observations: {} > {GP_N}", x.len()));
+        }
+        if cand.len() > GP_M {
+            return Err(anyhow!("too many candidates: {} > {GP_M}", cand.len()));
+        }
+        // pad X with distant dummy points + huge noise
+        let mut xf = vec![0.0f32; GP_N * GP_D];
+        let mut yf = vec![0.0f32; GP_N];
+        let mut noise = vec![PAD_NOISE; GP_N];
+        for (i, p) in x.iter().enumerate() {
+            if p.len() != GP_D {
+                return Err(anyhow!("point dim {} != {GP_D}", p.len()));
+            }
+            for d in 0..GP_D {
+                xf[i * GP_D + d] = p[d] as f32;
+            }
+            yf[i] = y[i] as f32;
+            noise[i] = noise_var as f32;
+        }
+        // park padding points far outside the unit cube so their kernel
+        // column is ~0 as well (double protection)
+        for i in x.len()..GP_N {
+            for d in 0..GP_D {
+                xf[i * GP_D + d] = 50.0 + i as f32;
+            }
+        }
+        let mut cf = vec![0.0f32; GP_M * GP_D];
+        for (i, p) in cand.iter().enumerate() {
+            for d in 0..GP_D {
+                cf[i * GP_D + d] = p[d] as f32;
+            }
+        }
+        let inputs = vec![
+            lit_f32(&xf, &[GP_N as i64, GP_D as i64])?,
+            lit_f32(&yf, &[GP_N as i64])?,
+            lit_f32(&noise, &[GP_N as i64])?,
+            lit_f32(&cf, &[GP_M as i64, GP_D as i64])?,
+            lit_scalar(f_best as f32),
+            lit_scalar(lengthscale as f32),
+            lit_scalar(signal_var as f32),
+        ];
+        let out = self.art.run(&inputs)?;
+        if out.len() != 3 {
+            return Err(anyhow!("gp_ei returned {} outputs", out.len()));
+        }
+        let take = |v: Vec<f32>, n: usize| v.into_iter().take(n).map(|x| x as f64).collect();
+        Ok(GpEiOut {
+            ei: take(vec_f32(&out[0])?, cand.len()),
+            mean: take(vec_f32(&out[1])?, cand.len()),
+            var: take(vec_f32(&out[2])?, cand.len()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::artifacts_available;
+    use crate::searcher::gp::{expected_improvement, Gp};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pjrt_gp_matches_pure_rust_gp() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let art = GpEiArtifact::load(&engine).unwrap();
+        let mut rng = Rng::new(11);
+        let n = 20;
+        let x: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..GP_D).map(|_| rng.next_f64()).collect())
+            .collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| (p[0] * 3.0).sin() + 0.5 * p[1])
+            .collect();
+        let cand: Vec<Vec<f64>> = (0..10)
+            .map(|_| (0..GP_D).map(|_| rng.next_f64()).collect())
+            .collect();
+        let (ls, sv, nv) = (0.3, 1.0, 1e-3);
+        let f_best = y.iter().cloned().fold(f64::MIN, f64::max);
+        let out = art.run(&x, &y, &cand, f_best, ls, sv, nv).unwrap();
+
+        let gp = Gp::fit(&x, &y, ls, sv, nv).unwrap();
+        for (i, c) in cand.iter().enumerate() {
+            let (m, v) = gp.predict(c);
+            assert!(
+                (m - out.mean[i]).abs() < 1e-3,
+                "mean[{i}]: rust {m} vs pjrt {}",
+                out.mean[i]
+            );
+            assert!(
+                (v - out.var[i]).abs() < 1e-3,
+                "var[{i}]: rust {v} vs pjrt {}",
+                out.var[i]
+            );
+            let ei = expected_improvement(m, v, f_best);
+            assert!(
+                (ei - out.ei[i]).abs() < 1e-3,
+                "ei[{i}]: rust {ei} vs pjrt {}",
+                out.ei[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_inputs() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let art = GpEiArtifact::load(&engine).unwrap();
+        let big: Vec<Vec<f64>> = (0..GP_N + 1).map(|_| vec![0.0; GP_D]).collect();
+        let y = vec![0.0; GP_N + 1];
+        assert!(art.run(&big, &y, &[], 0.0, 0.3, 1.0, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! 1-NN lookup through the AOT Pallas pairwise-distance artifact
+//! (`knn_n{N}_d{D}_q{Q}.hlo.txt`).
+//!
+//! The compiled program computes squared Euclidean distances between `Q`
+//! queries and an `N`-row reference table (Layer-1 Pallas kernel) and
+//! returns per-query argmin index + distance. This is the PJRT-backed
+//! twin of [`crate::benchmarks::knn::KnnTable`]; integration tests
+//! cross-validate the two.
+
+use super::artifact::{lit_f32, vec_f32, vec_i32, CompiledArtifact, Engine};
+use crate::benchmarks::knn::KnnTable;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Reference-table size baked into the artifact (== PD1's TABLE_SIZE).
+pub const KNN_N: usize = 512;
+/// Dimension (the PD1 search space).
+pub const KNN_D: usize = 4;
+/// Query batch size.
+pub const KNN_Q: usize = 4;
+
+/// Handle to the compiled 1-NN artifact.
+pub struct KnnArtifact {
+    art: Arc<CompiledArtifact>,
+}
+
+impl KnnArtifact {
+    pub fn load(engine: &Engine) -> Result<KnnArtifact> {
+        let art = engine.load_named(&format!("knn_n{KNN_N}_d{KNN_D}_q{KNN_Q}"))?;
+        Ok(KnnArtifact { art })
+    }
+
+    /// Nearest table row for each query (≤ KNN_Q at a time).
+    pub fn nearest_batch(
+        &self,
+        table: &KnnTable,
+        queries: &[Vec<f64>],
+    ) -> Result<Vec<(usize, f64)>> {
+        if table.dim != KNN_D {
+            return Err(anyhow!("table dim {} != {KNN_D}", table.dim));
+        }
+        if table.len() != KNN_N {
+            return Err(anyhow!("table len {} != {KNN_N}", table.len()));
+        }
+        if queries.is_empty() || queries.len() > KNN_Q {
+            return Err(anyhow!("1..={KNN_Q} queries required"));
+        }
+        let tf: Vec<f32> = table.points.iter().map(|&v| v as f32).collect();
+        let mut qf = vec![1e6f32; KNN_Q * KNN_D]; // pad with distant queries
+        for (i, q) in queries.iter().enumerate() {
+            if q.len() != KNN_D {
+                return Err(anyhow!("query dim {} != {KNN_D}", q.len()));
+            }
+            for d in 0..KNN_D {
+                qf[i * KNN_D + d] = q[d] as f32;
+            }
+        }
+        let inputs = vec![
+            lit_f32(&tf, &[KNN_N as i64, KNN_D as i64])?,
+            lit_f32(&qf, &[KNN_Q as i64, KNN_D as i64])?,
+        ];
+        let out = self.art.run(&inputs)?;
+        if out.len() != 2 {
+            return Err(anyhow!("knn returned {} outputs", out.len()));
+        }
+        let idx = vec_i32(&out[0])?;
+        let dist = vec_f32(&out[1])?;
+        Ok(queries
+            .iter()
+            .enumerate()
+            .map(|(i, _)| (idx[i] as usize, dist[i] as f64))
+            .collect())
+    }
+
+    /// Single-query convenience.
+    pub fn nearest(&self, table: &KnnTable, query: &[f64]) -> Result<(usize, f64)> {
+        Ok(self.nearest_batch(table, &[query.to_vec()])?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::pd1::Pd1;
+    use crate::runtime::artifact::artifacts_available;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pjrt_knn_matches_rust_knn_on_pd1_table() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let art = KnnArtifact::load(&engine).unwrap();
+        let bench = Pd1::wmt();
+        let table = bench.knn_table();
+        let mut rng = Rng::new(23);
+        for _ in 0..8 {
+            let q: Vec<f64> = (0..KNN_D).map(|_| rng.next_f64()).collect();
+            let (pj_idx, pj_dist) = art.nearest(table, &q).unwrap();
+            let rust_idx = table.nearest(&q);
+            // distances can tie within f32 precision; accept either argmin
+            let d_rust = table.dist2(&q, rust_idx);
+            let d_pjrt = table.dist2(&q, pj_idx);
+            assert!(
+                (d_rust - d_pjrt).abs() < 1e-5,
+                "argmin distance mismatch: {d_rust} vs {d_pjrt}"
+            );
+            assert!((pj_dist - d_pjrt).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn validates_shapes() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let art = KnnArtifact::load(&engine).unwrap();
+        let small = KnnTable::new(KNN_D);
+        assert!(art.nearest(&small, &[0.0; KNN_D]).is_err());
+    }
+}

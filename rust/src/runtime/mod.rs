@@ -1,0 +1,12 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and executes them from the Rust hot path.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto` — the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 protos with 64-bit
+//! instruction ids, while the text parser reassigns ids and round-trips
+//! cleanly (see DESIGN.md and /opt/xla-example/load_hlo/).
+
+pub mod artifact;
+pub mod gp;
+pub mod knn;
+pub mod trainer;

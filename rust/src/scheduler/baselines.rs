@@ -1,0 +1,253 @@
+//! The paper's non-adaptive baselines (§5.1, Appendix A):
+//!
+//! * **k-epoch baseline** — train every one of the N configurations for
+//!   exactly `k` epochs, then select the best-performing one. The paper's
+//!   "one-epoch baseline" is k=1; Appendix A adds k ∈ {2, 3, 5}.
+//! * **random baseline** — select a configuration uniformly at random
+//!   without any training.
+//!
+//! Both are implemented as schedulers so they run through the exact same
+//! tuner/executor machinery (and therefore the same runtime accounting)
+//! as ASHA and PASHA.
+
+use super::types::{
+    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialInfo,
+};
+
+/// Train every configuration for exactly `epochs` epochs.
+pub struct FixedEpochBaseline {
+    epochs: u32,
+    trials: Vec<TrialInfo>,
+    max_used: u32,
+}
+
+impl FixedEpochBaseline {
+    pub fn new(epochs: u32) -> Self {
+        assert!(epochs >= 1);
+        FixedEpochBaseline {
+            epochs,
+            trials: Vec::new(),
+            max_used: 0,
+        }
+    }
+}
+
+impl Scheduler for FixedEpochBaseline {
+    fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+        let config = ctx.draw()?;
+        let trial = self.trials.len();
+        let mut info = TrialInfo::new(config.clone());
+        info.dispatched_epochs = self.epochs;
+        self.trials.push(info);
+        Some(Job {
+            trial,
+            config,
+            rung: 0,
+            from_epoch: 0,
+            milestone: self.epochs,
+        })
+    }
+
+    fn on_result(&mut self, outcome: &JobOutcome) {
+        let t = &mut self.trials[outcome.trial];
+        t.curve.extend_from_slice(&outcome.curve_segment);
+        t.top_rung = Some(0);
+        self.max_used = self.max_used.max(outcome.milestone);
+    }
+
+    fn max_resources_used(&self) -> u32 {
+        self.max_used
+    }
+
+    fn best(&self) -> Option<BestTrial> {
+        self.trials
+            .iter()
+            .enumerate()
+            .filter_map(|(id, t)| t.latest_metric().map(|m| (id, t, m)))
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(id, t, m)| BestTrial {
+                trial: id,
+                config: t.config.clone(),
+                metric: m,
+                at_epoch: t.trained_epochs(),
+            })
+    }
+
+    fn trials(&self) -> &[TrialInfo] {
+        &self.trials
+    }
+
+    fn name(&self) -> String {
+        match self.epochs {
+            1 => "One-epoch baseline".into(),
+            2 => "Two-epoch baseline".into(),
+            3 => "Three-epoch baseline".into(),
+            5 => "Five-epoch baseline".into(),
+            n => format!("{n}-epoch baseline"),
+        }
+    }
+}
+
+/// Builder for the k-epoch baseline.
+#[derive(Clone, Debug)]
+pub struct FixedEpochBuilder {
+    pub epochs: u32,
+}
+
+impl SchedulerBuilder for FixedEpochBuilder {
+    fn build(&self, _max_epochs: u32, _seed: u64) -> Box<dyn Scheduler> {
+        Box::new(FixedEpochBaseline::new(self.epochs))
+    }
+
+    fn name(&self) -> String {
+        FixedEpochBaseline::new(self.epochs).name()
+    }
+}
+
+/// Select a configuration at random without training. Implemented as a
+/// scheduler that samples all N configurations as zero-epoch jobs (zero
+/// cost) and picks the first as "best" (a uniform choice, since the
+/// searcher order is random).
+pub struct RandomBaseline {
+    trials: Vec<TrialInfo>,
+}
+
+impl RandomBaseline {
+    pub fn new() -> Self {
+        RandomBaseline { trials: Vec::new() }
+    }
+}
+
+impl Default for RandomBaseline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RandomBaseline {
+    fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+        let config = ctx.draw()?;
+        let trial = self.trials.len();
+        self.trials.push(TrialInfo::new(config.clone()));
+        Some(Job {
+            trial,
+            config,
+            rung: 0,
+            from_epoch: 0,
+            milestone: 0, // zero training
+        })
+    }
+
+    fn on_result(&mut self, _outcome: &JobOutcome) {}
+
+    fn max_resources_used(&self) -> u32 {
+        0
+    }
+
+    fn best(&self) -> Option<BestTrial> {
+        self.trials.first().map(|t| BestTrial {
+            trial: 0,
+            config: t.config.clone(),
+            metric: f64::NAN,
+            at_epoch: 0,
+        })
+    }
+
+    fn trials(&self) -> &[TrialInfo] {
+        &self.trials
+    }
+
+    fn name(&self) -> String {
+        "Random baseline".into()
+    }
+}
+
+/// Builder for the random baseline.
+#[derive(Clone, Debug, Default)]
+pub struct RandomBaselineBuilder;
+
+impl SchedulerBuilder for RandomBaselineBuilder {
+    fn build(&self, _max_epochs: u32, _seed: u64) -> Box<dyn Scheduler> {
+        Box::new(RandomBaseline::new())
+    }
+
+    fn name(&self) -> String {
+        "Random baseline".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::SearchSpace;
+    use crate::searcher::random::RandomSearcher;
+
+    fn run_fixed(epochs: u32, n: usize) -> FixedEpochBaseline {
+        let space = SearchSpace::nas(1000);
+        let mut searcher = RandomSearcher::new(1);
+        let mut ctx = SchedCtx {
+            space: &space,
+            searcher: &mut searcher,
+            configs_sampled: 0,
+            config_budget: n,
+        };
+        let mut b = FixedEpochBaseline::new(epochs);
+        while let Some(j) = b.next_job(&mut ctx) {
+            assert_eq!(j.milestone, epochs);
+            let m = (j.trial % 13) as f64;
+            b.on_result(&JobOutcome {
+                trial: j.trial,
+                rung: 0,
+                milestone: epochs,
+                metric: m,
+                curve_segment: (1..=epochs).map(|_| m).collect(),
+            });
+        }
+        b
+    }
+
+    #[test]
+    fn fixed_epoch_trains_everything_k_epochs() {
+        let b = run_fixed(3, 20);
+        assert_eq!(b.trials().len(), 20);
+        assert!(b.trials().iter().all(|t| t.trained_epochs() == 3));
+        assert_eq!(b.max_resources_used(), 3);
+    }
+
+    #[test]
+    fn fixed_epoch_selects_argmax() {
+        let b = run_fixed(1, 20);
+        let best = b.best().unwrap();
+        assert_eq!(best.metric, 12.0);
+    }
+
+    #[test]
+    fn names_match_paper() {
+        assert_eq!(FixedEpochBaseline::new(1).name(), "One-epoch baseline");
+        assert_eq!(FixedEpochBaseline::new(5).name(), "Five-epoch baseline");
+        assert_eq!(RandomBaseline::new().name(), "Random baseline");
+    }
+
+    #[test]
+    fn random_baseline_zero_resources() {
+        let space = SearchSpace::nas(1000);
+        let mut searcher = RandomSearcher::new(2);
+        let mut ctx = SchedCtx {
+            space: &space,
+            searcher: &mut searcher,
+            configs_sampled: 0,
+            config_budget: 5,
+        };
+        let mut b = RandomBaseline::new();
+        let mut jobs = 0;
+        while let Some(j) = b.next_job(&mut ctx) {
+            assert_eq!(j.milestone, 0);
+            jobs += 1;
+        }
+        assert_eq!(jobs, 5);
+        assert_eq!(b.max_resources_used(), 0);
+        let best = b.best().unwrap();
+        assert_eq!(best.trial, 0, "uniform pick = first of a random stream");
+        assert!(best.metric.is_nan());
+    }
+}

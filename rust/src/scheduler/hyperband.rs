@@ -1,0 +1,209 @@
+//! Hyperband (Li et al., JMLR 2018): runs successive-halving brackets
+//! with different trade-offs between the number of configurations and the
+//! starting resource level, hedging against a bad choice of minimum
+//! resource. Included as a context baseline (the paper discusses it as
+//! the other canonical multi-fidelity method).
+
+use super::rung::RungLevels;
+use super::sh::SyncSh;
+use super::types::{
+    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialInfo,
+};
+
+pub struct Hyperband {
+    levels: RungLevels,
+    /// Remaining brackets: (n0, start_rung), consumed front to back.
+    plan: Vec<(usize, usize)>,
+    current: Option<SyncSh>,
+    /// Finished trials across brackets (current bracket's trials are
+    /// merged when it completes).
+    finished_trials: Vec<TrialInfo>,
+    best_so_far: Option<BestTrial>,
+    max_used: u32,
+}
+
+impl Hyperband {
+    pub fn new(levels: RungLevels) -> Self {
+        let s_max = levels.num_rungs() - 1;
+        let eta = levels.eta as f64;
+        // Standard Hyperband schedule: bracket s runs
+        // n = ⌈(s_max+1)/(s+1) · η^s⌉ configs starting s rungs below the top.
+        let mut plan = Vec::new();
+        for s in (0..=s_max).rev() {
+            let n = (((s_max + 1) as f64 / (s + 1) as f64) * eta.powi(s as i32)).ceil() as usize;
+            let start_rung = s_max - s;
+            plan.push((n, start_rung));
+        }
+        Hyperband {
+            levels,
+            plan,
+            current: None,
+            finished_trials: Vec::new(),
+            best_so_far: None,
+            max_used: 0,
+        }
+    }
+
+    fn update_best(&mut self) {
+        if let Some(cur) = &self.current {
+            if let Some(b) = cur.best() {
+                let better = match &self.best_so_far {
+                    None => true,
+                    Some(prev) => b.metric > prev.metric,
+                };
+                if better {
+                    self.best_so_far = Some(b);
+                }
+            }
+        }
+    }
+
+    fn roll_bracket(&mut self) {
+        if let Some(done) = self.current.take() {
+            self.finished_trials.extend_from_slice(done.trials());
+        }
+        if let Some((n0, start_rung)) = self.plan.first().copied() {
+            self.plan.remove(0);
+            self.current = Some(SyncSh::bracket(self.levels.clone(), n0, start_rung));
+        }
+    }
+}
+
+impl Scheduler for Hyperband {
+    fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+        loop {
+            match &mut self.current {
+                Some(sh) if !sh.is_done() => {
+                    if let Some(mut job) = sh.next_job(ctx) {
+                        // trial ids are bracket-local; offset them
+                        job.trial += self.finished_trials.len();
+                        return Some(job);
+                    }
+                    return None; // bracket barrier
+                }
+                _ => {
+                    if self.plan.is_empty() && self.current.as_ref().map_or(true, |c| c.is_done())
+                    {
+                        if let Some(done) = self.current.take() {
+                            self.finished_trials.extend_from_slice(done.trials());
+                        }
+                        return None;
+                    }
+                    self.roll_bracket();
+                    if self.current.is_none() {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_result(&mut self, outcome: &JobOutcome) {
+        let offset = self.finished_trials.len();
+        if let Some(sh) = &mut self.current {
+            let mut local = outcome.clone();
+            local.trial -= offset;
+            sh.on_result(&local);
+            self.max_used = self.max_used.max(outcome.milestone);
+        }
+        self.update_best();
+    }
+
+    fn max_resources_used(&self) -> u32 {
+        self.max_used
+    }
+
+    fn best(&self) -> Option<BestTrial> {
+        self.best_so_far.clone()
+    }
+
+    fn trials(&self) -> &[TrialInfo] {
+        // Between brackets this reflects completed brackets only.
+        &self.finished_trials
+    }
+
+    fn name(&self) -> String {
+        "Hyperband".into()
+    }
+}
+
+/// Builder for Hyperband.
+#[derive(Clone, Debug)]
+pub struct HyperbandBuilder {
+    pub r_min: u32,
+    pub eta: u32,
+}
+
+impl SchedulerBuilder for HyperbandBuilder {
+    fn build(&self, max_epochs: u32, _seed: u64) -> Box<dyn Scheduler> {
+        Box::new(Hyperband::new(RungLevels::new(
+            self.r_min,
+            self.eta,
+            max_epochs,
+        )))
+    }
+
+    fn name(&self) -> String {
+        "Hyperband".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::SearchSpace;
+    use crate::searcher::random::RandomSearcher;
+
+    fn drive(budget: usize) -> (Hyperband, usize) {
+        let space = SearchSpace::nas(1000);
+        let mut searcher = RandomSearcher::new(4);
+        let mut ctx = SchedCtx {
+            space: &space,
+            searcher: &mut searcher,
+            configs_sampled: 0,
+            config_budget: budget,
+        };
+        let mut hb = Hyperband::new(RungLevels::new(1, 3, 27));
+        let mut jobs = 0;
+        loop {
+            match hb.next_job(&mut ctx) {
+                Some(j) => {
+                    jobs += 1;
+                    let m = (j.trial % 17) as f64 + j.milestone as f64 * 0.001;
+                    hb.on_result(&JobOutcome {
+                        trial: j.trial,
+                        rung: j.rung,
+                        milestone: j.milestone,
+                        metric: m,
+                        curve_segment: (j.from_epoch + 1..=j.milestone).map(|_| m).collect(),
+                    });
+                }
+                None => break,
+            }
+        }
+        (hb, jobs)
+    }
+
+    #[test]
+    fn bracket_plan_is_standard() {
+        let hb = Hyperband::new(RungLevels::new(1, 3, 27));
+        // s_max = 3: n_s = ceil((s_max+1)/(s+1) * eta^s):
+        // s=3: 27@rung0; s=2: ceil(4/3*9)=12@rung1; s=1: 6@rung2; s=0: 4@rung3.
+        assert_eq!(hb.plan, vec![(27, 0), (12, 1), (6, 2), (4, 3)]);
+    }
+
+    #[test]
+    fn runs_all_brackets_and_finds_strong_config() {
+        let (hb, jobs) = drive(1000);
+        assert!(jobs > 27, "multiple brackets must run");
+        let best = hb.best().unwrap();
+        assert!(best.metric >= 16.0, "best metric {}", best.metric);
+        assert_eq!(hb.max_resources_used(), 27);
+    }
+
+    #[test]
+    fn respects_config_budget() {
+        let (_, jobs) = drive(10);
+        assert!(jobs >= 10, "at least the sampled configs run");
+    }
+}

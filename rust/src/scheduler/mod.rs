@@ -1,0 +1,22 @@
+//! Multi-fidelity schedulers: the resource-allocation half of the tuner.
+//!
+//! * [`pasha`] — the paper's contribution: ASHA with progressive growth of
+//!   the maximum resource level, driven by ranking stability.
+//! * [`asha`] — asynchronous successive halving (Li et al. 2020), the main
+//!   baseline.
+//! * [`sh`] / [`hyperband`] — classical synchronous SH and Hyperband,
+//!   context baselines.
+//! * [`baselines`] — the paper's k-epoch and random baselines.
+
+pub mod asha;
+pub mod baselines;
+pub mod core;
+pub mod hyperband;
+pub mod pasha;
+pub mod rung;
+pub mod sh;
+pub mod types;
+
+pub use types::{
+    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialInfo,
+};

@@ -1,0 +1,341 @@
+//! PASHA — Progressive Asynchronous Successive Halving (the paper's
+//! contribution, Algorithm 1).
+//!
+//! PASHA runs ASHA's asynchronous promotion rule but starts with a small
+//! resource cap: only rungs 0 and 1 exist initially (`R_0 = η·r`,
+//! `K_0 = 1`). Every time a job completes in the current top rung, the
+//! ranking of the top two rungs is compared with a [`RankingFunction`];
+//! if they disagree the cap grows by one rung (the "doubling trick":
+//! `R_{t+1} = η·R_t`), up to the safety-net maximum `R`. When the ranking
+//! has stabilized, the cap stops growing, no trial is ever trained beyond
+//! it, and the search terminates after the configuration budget drains —
+//! typically at a small fraction of ASHA's cost.
+
+use super::core::ShCore;
+use super::rung::RungLevels;
+use super::types::{
+    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialInfo,
+};
+use crate::ranking::{RankCtx, RankingFunction, RankingSpec};
+
+pub struct Pasha {
+    core: ShCore,
+    /// Current top-rung index K_t (jobs may target rungs 0..=cap).
+    cap: usize,
+    ranking: Box<dyn RankingFunction>,
+    /// ε after each re-estimation (Figure 5) — soft-ranking variants only.
+    eps_history: Vec<f64>,
+    /// Number of cap-growth events (diagnostics).
+    growths: usize,
+}
+
+impl Pasha {
+    pub fn new(levels: RungLevels, spec: &RankingSpec) -> Self {
+        // K_0 = ⌊log_η(R_0/r)⌋ with R_0 = η·r ⇒ start with rungs {0, 1}.
+        let cap = 1.min(levels.top());
+        Pasha {
+            core: ShCore::new(levels),
+            cap,
+            ranking: spec.build(),
+            eps_history: Vec::new(),
+            growths: 0,
+        }
+    }
+
+    pub fn current_cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn current_max_resources(&self) -> u32 {
+        self.core.levels.level(self.cap)
+    }
+
+    pub fn growths(&self) -> usize {
+        self.growths
+    }
+
+    /// The consistency check of Algorithm 1 lines 11–18, run after a
+    /// completed job in the current top rung.
+    fn check_and_maybe_grow(&mut self) {
+        if self.cap >= self.core.levels.top() {
+            return; // already at the safety net R: PASHA degraded to ASHA
+        }
+        if self.cap == 0 {
+            return; // degenerate single-rung grid
+        }
+        let top = self.core.ranking(self.cap);
+        if top.len() < 2 {
+            // A single configuration cannot exhibit ranking instability.
+            return;
+        }
+        let prev = self.core.ranking_restricted(self.cap - 1, self.cap);
+        debug_assert_eq!(top.len(), prev.len());
+        let curves = self.core.top_rung_curves(self.cap);
+        let ctx = RankCtx {
+            top_curves: &curves,
+        };
+        let consistent = self.ranking.consistent(&top, &prev, &ctx);
+        if let Some(eps) = self.ranking.epsilon() {
+            self.eps_history.push(eps);
+        }
+        if !consistent {
+            self.cap += 1;
+            self.growths += 1;
+        }
+    }
+}
+
+impl Scheduler for Pasha {
+    fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+        let cap = self.cap;
+        self.core.next_job_capped(ctx, cap)
+    }
+
+    fn on_result(&mut self, outcome: &JobOutcome) {
+        self.core.record(outcome);
+        if outcome.rung == self.cap {
+            self.check_and_maybe_grow();
+        }
+    }
+
+    fn max_resources_used(&self) -> u32 {
+        self.core.max_resources_used
+    }
+
+    fn best(&self) -> Option<BestTrial> {
+        self.core.best()
+    }
+
+    fn trials(&self) -> &[TrialInfo] {
+        &self.core.trials
+    }
+
+    fn epsilon_history(&self) -> &[f64] {
+        &self.eps_history
+    }
+
+    fn name(&self) -> String {
+        "PASHA".into()
+    }
+}
+
+/// Builder for PASHA with a choice of ranking function.
+#[derive(Clone, Debug)]
+pub struct PashaBuilder {
+    pub r_min: u32,
+    pub eta: u32,
+    pub ranking: RankingSpec,
+}
+
+impl Default for PashaBuilder {
+    /// Paper defaults: r=1, η=3, noise-adaptive soft ranking at N=90%.
+    fn default() -> Self {
+        PashaBuilder {
+            r_min: 1,
+            eta: 3,
+            ranking: RankingSpec::default(),
+        }
+    }
+}
+
+impl PashaBuilder {
+    pub fn with_ranking(ranking: RankingSpec) -> Self {
+        PashaBuilder {
+            ranking,
+            ..Default::default()
+        }
+    }
+}
+
+impl SchedulerBuilder for PashaBuilder {
+    fn build(&self, max_epochs: u32, _seed: u64) -> Box<dyn Scheduler> {
+        Box::new(Pasha::new(
+            RungLevels::new(self.r_min, self.eta, max_epochs),
+            &self.ranking,
+        ))
+    }
+
+    fn name(&self) -> String {
+        self.ranking.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::SearchSpace;
+    use crate::searcher::random::RandomSearcher;
+
+    /// Drive PASHA against a metric oracle until it stops asking for work.
+    fn drive(
+        spec: RankingSpec,
+        n_configs: usize,
+        max_epochs: u32,
+        metric: impl Fn(usize, u32) -> f64,
+    ) -> Pasha {
+        let space = SearchSpace::nas(100_000);
+        let mut searcher = RandomSearcher::new(3);
+        let mut ctx = SchedCtx {
+            space: &space,
+            searcher: &mut searcher,
+            configs_sampled: 0,
+            config_budget: n_configs,
+        };
+        let mut p = Pasha::new(RungLevels::new(1, 3, max_epochs), &spec);
+        while let Some(job) = p.next_job(&mut ctx) {
+            let m = metric(job.trial, job.milestone);
+            p.on_result(&JobOutcome {
+                trial: job.trial,
+                rung: job.rung,
+                milestone: job.milestone,
+                metric: m,
+                curve_segment: (job.from_epoch + 1..=job.milestone)
+                    .map(|e| metric(job.trial, e))
+                    .collect(),
+            });
+        }
+        p
+    }
+
+    #[test]
+    fn starts_with_two_rungs() {
+        let p = Pasha::new(RungLevels::new(1, 3, 200), &RankingSpec::default());
+        assert_eq!(p.current_cap(), 1);
+        assert_eq!(p.current_max_resources(), 3);
+    }
+
+    #[test]
+    fn stable_rankings_never_grow() {
+        // Metric = trial id, identical at every resource level ⇒ rankings
+        // always consistent ⇒ cap stays at 1 and nothing trains beyond η·r.
+        let p = drive(RankingSpec::Direct, 30, 200, |t, _| t as f64);
+        assert_eq!(p.current_cap(), 1);
+        assert_eq!(p.growths(), 0);
+        assert_eq!(p.max_resources_used(), 3);
+    }
+
+    #[test]
+    fn unstable_rankings_grow_to_safety_net() {
+        // Metric order flips at every rung level ⇒ PASHA must keep
+        // growing and eventually behave like ASHA (cap = top rung).
+        let levels = [1u32, 3, 9, 27, 81, 200];
+        let p = drive(RankingSpec::Direct, 300, 200, move |t, m| {
+            let k = levels.iter().position(|&l| l >= m).unwrap_or(0);
+            if k % 2 == 0 {
+                t as f64
+            } else {
+                -(t as f64)
+            }
+        });
+        assert_eq!(p.current_cap(), RungLevels::new(1, 3, 200).top());
+        assert_eq!(p.max_resources_used(), 200, "defaults to ASHA's budget");
+    }
+
+    #[test]
+    fn growth_is_one_rung_per_inconsistency() {
+        // A single early flip then stability: cap should have grown but
+        // stopped well short of the top.
+        let p = drive(RankingSpec::Direct, 40, 200, |t, m| {
+            // flip the order only between milestones 1 and 3
+            if m <= 1 {
+                -(t as f64)
+            } else {
+                t as f64
+            }
+        });
+        assert!(p.current_cap() >= 2, "must grow past the flip");
+        assert!(
+            p.current_cap() < RungLevels::new(1, 3, 200).top(),
+            "must stop once stable (cap={})",
+            p.current_cap()
+        );
+    }
+
+    #[test]
+    fn soft_ranking_forgives_noise_and_stops_earlier() {
+        // Near-tied trials with small noisy flips: direct ranking keeps
+        // growing, generous soft ranking does not.
+        let noisy = |t: usize, m: u32| {
+            let base = (t % 5) as f64 * 10.0;
+            // deterministic "noise" flips near-tied pairs at odd milestones
+            let jitter = if m % 2 == 1 { (t % 2) as f64 * 0.4 } else { 0.0 };
+            base + jitter
+        };
+        let direct = drive(RankingSpec::Direct, 30, 200, noisy);
+        let soft = drive(RankingSpec::SoftFixed { epsilon: 1.0 }, 30, 200, noisy);
+        assert!(
+            soft.max_resources_used() <= direct.max_resources_used(),
+            "soft {} vs direct {}",
+            soft.max_resources_used(),
+            direct.max_resources_used()
+        );
+        assert!(soft.growths() <= direct.growths());
+    }
+
+    #[test]
+    fn jobs_never_exceed_cap() {
+        let space = SearchSpace::nas(100_000);
+        let mut searcher = RandomSearcher::new(5);
+        let mut ctx = SchedCtx {
+            space: &space,
+            searcher: &mut searcher,
+            configs_sampled: 0,
+            config_budget: 25,
+        };
+        let mut p = Pasha::new(RungLevels::new(1, 3, 200), &RankingSpec::default());
+        while let Some(job) = p.next_job(&mut ctx) {
+            assert!(
+                job.rung <= p.current_cap(),
+                "job rung {} above cap {}",
+                job.rung,
+                p.current_cap()
+            );
+            assert!(job.milestone <= p.current_max_resources());
+            let m = job.trial as f64;
+            p.on_result(&JobOutcome {
+                trial: job.trial,
+                rung: job.rung,
+                milestone: job.milestone,
+                metric: m,
+                curve_segment: (job.from_epoch + 1..=job.milestone).map(|_| m).collect(),
+            });
+        }
+    }
+
+    #[test]
+    fn epsilon_history_recorded_for_noise_adaptive() {
+        let p = drive(
+            RankingSpec::NoiseAdaptive { percentile: 90.0 },
+            30,
+            200,
+            |t, m| {
+                let h = (m as u64)
+                    .wrapping_mul(2654435761)
+                    .wrapping_add(t as u64 * 97);
+                (t % 7) as f64 + (h % 97) as f64 * 0.01
+            },
+        );
+        assert!(
+            !p.epsilon_history().is_empty(),
+            "ε must be re-estimated on top-rung results"
+        );
+        assert!(p.epsilon_history().iter().all(|&e| e >= 0.0));
+    }
+
+    #[test]
+    fn degenerate_single_rung_grid() {
+        // R == r: only one rung exists; PASHA must not panic or grow.
+        let p = drive(RankingSpec::default(), 10, 1, |t, _| t as f64);
+        assert_eq!(p.current_cap(), 0);
+        assert_eq!(p.max_resources_used(), 1);
+    }
+
+    #[test]
+    fn builder_labels_match_paper() {
+        assert_eq!(PashaBuilder::default().name(), "PASHA");
+        assert_eq!(
+            PashaBuilder::with_ranking(RankingSpec::Direct).name(),
+            "PASHA direct ranking"
+        );
+    }
+}

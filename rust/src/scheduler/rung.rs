@@ -1,0 +1,254 @@
+//! Rung bookkeeping shared by the successive-halving family.
+//!
+//! A *rung* is a resource milestone: rung `k` holds the validation metric
+//! of every trial that has been trained for `levels[k]` epochs. Promotion
+//! moves the top `1/η` of a rung to the next milestone.
+
+use crate::TrialId;
+use std::collections::HashSet;
+
+/// The geometric milestone grid `r·η^k`, capped at `R` (with `R` itself
+/// appended as the final milestone when it is not an exact power).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RungLevels {
+    pub r_min: u32,
+    pub eta: u32,
+    pub levels: Vec<u32>,
+}
+
+impl RungLevels {
+    pub fn new(r_min: u32, eta: u32, r_max: u32) -> Self {
+        assert!(r_min >= 1, "minimum resource must be >= 1 epoch");
+        assert!(eta >= 2, "reduction factor must be >= 2");
+        assert!(r_max >= r_min, "R must be >= r");
+        let mut levels = Vec::new();
+        let mut l = r_min as u64;
+        while l < r_max as u64 {
+            levels.push(l as u32);
+            l *= eta as u64;
+        }
+        levels.push(r_max);
+        RungLevels {
+            r_min,
+            eta,
+            levels,
+        }
+    }
+
+    pub fn num_rungs(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn level(&self, k: usize) -> u32 {
+        self.levels[k]
+    }
+
+    pub fn top(&self) -> usize {
+        self.levels.len() - 1
+    }
+}
+
+/// One rung: recorded results plus the set of already-promoted trials.
+#[derive(Clone, Debug, Default)]
+pub struct Rung {
+    /// (trial, metric) in arrival order.
+    pub entries: Vec<(TrialId, f64)>,
+    pub promoted: HashSet<TrialId>,
+}
+
+impl Rung {
+    pub fn record(&mut self, trial: TrialId, metric: f64) {
+        debug_assert!(
+            !self.entries.iter().any(|&(t, _)| t == trial),
+            "trial {trial} recorded twice in one rung"
+        );
+        self.entries.push((trial, metric));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, trial: TrialId) -> bool {
+        self.entries.iter().any(|&(t, _)| t == trial)
+    }
+
+    pub fn metric_of(&self, trial: TrialId) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|&&(t, _)| t == trial)
+            .map(|&(_, m)| m)
+    }
+
+    /// Entries sorted by metric descending (ties by trial id ascending for
+    /// determinism).
+    pub fn sorted_desc(&self) -> Vec<(TrialId, f64)> {
+        let mut v = self.entries.clone();
+        v.sort_by(|a, b| crate::util::stats::desc_cmp(a.1, b.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// The next promotable trial under the asynchronous successive-halving
+    /// rule: among the top `⌊len/η⌋` entries by metric, the best one not
+    /// yet promoted. Marks nothing; caller calls [`Rung::mark_promoted`].
+    ///
+    /// Perf note (§Perf in EXPERIMENTS.md): this runs on every
+    /// `next_job` call, so instead of fully sorting the rung (O(n log n))
+    /// we select the quota boundary with `select_nth_unstable` (O(n)) and
+    /// scan only the top partition for the best unpromoted entry.
+    pub fn promotable(&self, eta: u32) -> Option<TrialId> {
+        let quota = self.len() / eta as usize;
+        if quota == 0 {
+            return None;
+        }
+        let cmp = |a: &(TrialId, f64), b: &(TrialId, f64)| {
+            crate::util::stats::desc_cmp(a.1, b.1).then(a.0.cmp(&b.0))
+        };
+        let mut v = self.entries.clone();
+        // partition: v[..quota] holds the top-quota entries (unordered)
+        if quota < v.len() {
+            v.select_nth_unstable_by(quota, cmp);
+        }
+        v[..quota]
+            .iter()
+            .filter(|(t, _)| !self.promoted.contains(t))
+            .min_by(|a, b| cmp(a, b))
+            .map(|&(t, _)| t)
+    }
+
+    pub fn mark_promoted(&mut self, trial: TrialId) {
+        self.promoted.insert(trial);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    #[test]
+    fn levels_geometric_then_capped() {
+        let l = RungLevels::new(1, 3, 200);
+        assert_eq!(l.levels, vec![1, 3, 9, 27, 81, 200]);
+        assert_eq!(l.top(), 5);
+    }
+
+    #[test]
+    fn levels_exact_power() {
+        let l = RungLevels::new(1, 3, 81);
+        assert_eq!(l.levels, vec![1, 3, 9, 27, 81]);
+    }
+
+    #[test]
+    fn levels_eta2_r50() {
+        let l = RungLevels::new(1, 2, 50);
+        assert_eq!(l.levels, vec![1, 2, 4, 8, 16, 32, 50]);
+    }
+
+    #[test]
+    fn levels_r_equals_min() {
+        let l = RungLevels::new(5, 3, 5);
+        assert_eq!(l.levels, vec![5]);
+    }
+
+    #[test]
+    fn pd1_wmt_levels() {
+        let l = RungLevels::new(1, 3, 1414);
+        assert_eq!(l.levels, vec![1, 3, 9, 27, 81, 243, 729, 1414]);
+        assert_eq!(l.num_rungs(), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_r_min_rejected() {
+        RungLevels::new(0, 3, 10);
+    }
+
+    #[test]
+    fn promotable_respects_quota_and_order() {
+        let mut r = Rung::default();
+        // 5 entries, η=3 ⇒ quota 1: only the single best is promotable.
+        for (t, m) in [(0, 50.0), (1, 70.0), (2, 60.0), (3, 65.0), (4, 40.0)] {
+            r.record(t, m);
+        }
+        assert_eq!(r.promotable(3), Some(1));
+        r.mark_promoted(1);
+        assert_eq!(r.promotable(3), None, "quota 1 exhausted");
+        // 6th entry raises quota to 2 ⇒ next best (trial 3) becomes promotable
+        r.record(5, 55.0);
+        assert_eq!(r.promotable(3), Some(3));
+    }
+
+    #[test]
+    fn promotable_empty_and_small() {
+        let mut r = Rung::default();
+        assert_eq!(r.promotable(3), None);
+        r.record(0, 10.0);
+        r.record(1, 20.0);
+        assert_eq!(r.promotable(3), None, "2 entries < η ⇒ quota 0");
+        r.record(2, 30.0);
+        assert_eq!(r.promotable(3), Some(2));
+    }
+
+    #[test]
+    fn sorted_desc_tie_break_deterministic() {
+        let mut r = Rung::default();
+        r.record(7, 50.0);
+        r.record(3, 50.0);
+        r.record(5, 60.0);
+        let s = r.sorted_desc();
+        assert_eq!(
+            s.iter().map(|&(t, _)| t).collect::<Vec<_>>(),
+            vec![5, 3, 7]
+        );
+    }
+
+    #[test]
+    fn property_promoted_fraction_bounded() {
+        check("promotions never exceed ⌊n/η⌋", 100, |g| {
+            let eta = g.usize(2, 4) as u32;
+            let n = g.usize(0, 30);
+            let mut rung = Rung::default();
+            for t in 0..n {
+                rung.record(t, g.f64(0.0, 100.0));
+            }
+            let mut count = 0;
+            while let Some(t) = rung.promotable(eta) {
+                rung.mark_promoted(t);
+                count += 1;
+            }
+            assert_eq!(count, n / eta as usize);
+        });
+    }
+
+    #[test]
+    fn property_promotions_are_top_ranked() {
+        check("every promoted trial beats every never-promotable one", 50, |g| {
+            let n = g.usize(6, 24);
+            let mut rung = Rung::default();
+            // distinct metrics to make the ordering unambiguous
+            let perm = g.permutation(n);
+            for (t, p) in perm.iter().enumerate() {
+                rung.record(t, *p as f64);
+            }
+            let mut promoted = Vec::new();
+            while let Some(t) = rung.promotable(3) {
+                rung.mark_promoted(t);
+                promoted.push(t);
+            }
+            let min_promoted = promoted
+                .iter()
+                .map(|&t| rung.metric_of(t).unwrap())
+                .fold(f64::MAX, f64::min);
+            for &(t, m) in &rung.entries {
+                if !promoted.contains(&t) {
+                    assert!(m <= min_promoted, "unpromoted {t} above promoted cutoff");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Core types shared by all schedulers: jobs, trial bookkeeping, and the
+//! scheduler trait itself.
+
+use crate::config::space::{Config, SearchSpace};
+use crate::searcher::Searcher;
+use crate::TrialId;
+
+/// A unit of work handed to a worker: continue training `trial` from
+/// `from_epoch` up to `milestone` epochs, then report the validation
+/// metric. `rung` is the rung index the result will be recorded in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Job {
+    pub trial: TrialId,
+    pub config: Config,
+    pub rung: usize,
+    pub from_epoch: u32,
+    pub milestone: u32,
+}
+
+/// Completion record delivered back to the scheduler.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub trial: TrialId,
+    pub rung: usize,
+    pub milestone: u32,
+    /// Validation accuracy (%) at the milestone.
+    pub metric: f64,
+    /// Per-epoch validation accuracies for epochs `from_epoch+1 ..= milestone`
+    /// (the per-epoch statistics §4.2's ε-estimator consumes).
+    pub curve_segment: Vec<f64>,
+}
+
+/// Scheduler-side bookkeeping for one trial.
+#[derive(Clone, Debug)]
+pub struct TrialInfo {
+    pub config: Config,
+    /// Epochs trained so far (== `curve.len()`), including in-flight work
+    /// that has been dispatched but not yet reported.
+    pub dispatched_epochs: u32,
+    /// Observed validation accuracy for epochs 1..=n (completed only).
+    pub curve: Vec<f64>,
+    /// Highest rung this trial has reported a result in (None before the
+    /// first report).
+    pub top_rung: Option<usize>,
+}
+
+impl TrialInfo {
+    pub fn new(config: Config) -> Self {
+        TrialInfo {
+            config,
+            dispatched_epochs: 0,
+            curve: Vec::new(),
+            top_rung: None,
+        }
+    }
+
+    /// Completed (reported) epochs.
+    pub fn trained_epochs(&self) -> u32 {
+        self.curve.len() as u32
+    }
+
+    /// Latest observed metric, if any.
+    pub fn latest_metric(&self) -> Option<f64> {
+        self.curve.last().copied()
+    }
+}
+
+/// The best configuration identified so far.
+#[derive(Clone, Debug)]
+pub struct BestTrial {
+    pub trial: TrialId,
+    pub config: Config,
+    pub metric: f64,
+    pub at_epoch: u32,
+}
+
+/// Context handed to [`Scheduler::next_job`]: draws new configurations
+/// through the searcher while enforcing the tuner's N-configuration budget
+/// (§5.1: "run the hyperparameter optimizer until N=256 candidate
+/// configurations are evaluated").
+pub struct SchedCtx<'a> {
+    pub space: &'a SearchSpace,
+    pub searcher: &'a mut dyn Searcher,
+    pub configs_sampled: usize,
+    pub config_budget: usize,
+}
+
+impl<'a> SchedCtx<'a> {
+    /// Draw a new configuration if the budget allows.
+    pub fn draw(&mut self) -> Option<Config> {
+        if self.configs_sampled >= self.config_budget {
+            return None;
+        }
+        self.configs_sampled += 1;
+        Some(self.searcher.suggest(self.space))
+    }
+
+    pub fn budget_left(&self) -> usize {
+        self.config_budget - self.configs_sampled
+    }
+}
+
+/// A multi-fidelity scheduler: decides which trial to advance to which
+/// milestone (promotion), when to start new trials, and — for PASHA —
+/// when to grow the maximum resource level.
+pub trait Scheduler: Send {
+    /// Work for a free worker, or `None` if nothing can run right now
+    /// (budget exhausted and no promotable candidate; for synchronous
+    /// schedulers also "waiting for stragglers").
+    fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job>;
+
+    /// Deliver a completed job.
+    fn on_result(&mut self, outcome: &JobOutcome);
+
+    /// Largest milestone any trial has been trained to so far (the paper's
+    /// "Max resources" column).
+    fn max_resources_used(&self) -> u32;
+
+    /// Best configuration identified so far (the paper selects this for
+    /// the phase-2 retraining).
+    fn best(&self) -> Option<BestTrial>;
+
+    /// Trial bookkeeping (read access for reporting/diagnostics).
+    fn trials(&self) -> &[TrialInfo];
+
+    /// ε values recorded after each ranking-noise re-estimation, if this
+    /// scheduler uses the noise-adaptive soft ranking (Figure 5).
+    fn epsilon_history(&self) -> &[f64] {
+        &[]
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Builders produce a fresh scheduler per repetition.
+pub trait SchedulerBuilder: Send + Sync {
+    fn build(&self, max_epochs: u32, seed: u64) -> Box<dyn Scheduler>;
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::searcher::random::RandomSearcher;
+
+    #[test]
+    fn ctx_enforces_budget() {
+        let space = SearchSpace::pd1();
+        let mut searcher = RandomSearcher::new(0);
+        let mut ctx = SchedCtx {
+            space: &space,
+            searcher: &mut searcher,
+            configs_sampled: 0,
+            config_budget: 3,
+        };
+        assert!(ctx.draw().is_some());
+        assert!(ctx.draw().is_some());
+        assert_eq!(ctx.budget_left(), 1);
+        assert!(ctx.draw().is_some());
+        assert!(ctx.draw().is_none());
+        assert_eq!(ctx.configs_sampled, 3);
+    }
+
+    #[test]
+    fn trial_info_tracks_epochs() {
+        let mut t = TrialInfo::new(Config::cat(0));
+        assert_eq!(t.trained_epochs(), 0);
+        assert!(t.latest_metric().is_none());
+        t.curve.extend_from_slice(&[10.0, 20.0]);
+        assert_eq!(t.trained_epochs(), 2);
+        assert_eq!(t.latest_metric(), Some(20.0));
+    }
+}

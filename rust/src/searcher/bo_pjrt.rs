@@ -1,0 +1,182 @@
+//! MOBSTER-style searcher whose acquisition function runs through the
+//! AOT-compiled JAX/Pallas artifact (`gp_ei_*.hlo.txt`) via PJRT —
+//! the L1 Gram kernel and L2 posterior/EI on the live request path.
+//!
+//! Functionally interchangeable with [`super::bo::BoSearcher`] (the
+//! pure-Rust GP): `runtime::gp` tests pin the two to <1e-3 agreement, and
+//! [`tests`] here check the *selection* agrees end-to-end. Falls back to
+//! random sampling while observations are scarce, exactly like the Rust
+//! variant.
+
+use super::bo::BoConfig;
+use super::Searcher;
+use crate::config::space::{Config, SearchSpace};
+use crate::runtime::artifact::Engine;
+use crate::runtime::gp::{GpEiArtifact, GP_D, GP_M, GP_N};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// GP+EI proposal evaluated on the PJRT engine.
+pub struct BoPjrtSearcher {
+    cfg: BoConfig,
+    rng: Rng,
+    artifact: GpEiArtifact,
+    obs: BTreeMap<u32, Vec<(Vec<f64>, f64)>>,
+    pending: Vec<(Config, u32, f64)>,
+}
+
+impl BoPjrtSearcher {
+    /// Load the acquisition artifact (requires `make artifacts`).
+    pub fn new(engine: &Engine, seed: u64) -> Result<Self> {
+        Ok(BoPjrtSearcher {
+            cfg: BoConfig::default(),
+            rng: Rng::new(seed),
+            artifact: GpEiArtifact::load(engine)?,
+            obs: BTreeMap::new(),
+            pending: Vec::new(),
+        })
+    }
+
+    fn fold_pending(&mut self, space: &SearchSpace) {
+        let pending = std::mem::take(&mut self.pending);
+        for (config, epoch, metric) in pending {
+            self.obs
+                .entry(epoch)
+                .or_default()
+                .push((space.encode(&config), metric));
+        }
+    }
+
+    fn modeling_level(&self) -> Option<u32> {
+        self.obs
+            .iter()
+            .rev()
+            .find(|(_, v)| v.len() >= self.cfg.min_points)
+            .map(|(&lvl, _)| lvl)
+    }
+}
+
+impl Searcher for BoPjrtSearcher {
+    fn suggest(&mut self, space: &SearchSpace) -> Config {
+        self.fold_pending(space);
+        if space.dim() != GP_D {
+            // artifact is compiled for GP_D-dimensional spaces only
+            return space.sample(&mut self.rng);
+        }
+        let explore = self.rng.next_f64() < self.cfg.random_fraction;
+        let level = self.modeling_level();
+        if explore || level.is_none() {
+            return space.sample(&mut self.rng);
+        }
+        let data = &self.obs[&level.unwrap()];
+        // the artifact holds at most GP_N observations: keep the most recent
+        let tail = &data[data.len().saturating_sub(GP_N)..];
+        let x: Vec<Vec<f64>> = tail.iter().map(|(x, _)| x.clone()).collect();
+        let ys: Vec<f64> = tail.iter().map(|(_, y)| *y).collect();
+        let mean = stats::mean(&ys);
+        let sd = stats::std(&ys).max(1e-6);
+        let y_std: Vec<f64> = ys.iter().map(|y| (y - mean) / sd).collect();
+        let f_best = y_std.iter().cloned().fold(f64::MIN, f64::max);
+
+        let candidates: Vec<Config> = (0..self.cfg.num_candidates.min(GP_M))
+            .map(|_| space.sample(&mut self.rng))
+            .collect();
+        let encoded: Vec<Vec<f64>> = candidates.iter().map(|c| space.encode(c)).collect();
+        match self.artifact.run(
+            &x,
+            &y_std,
+            &encoded,
+            f_best,
+            self.cfg.lengthscale,
+            self.cfg.signal_var,
+            self.cfg.noise_var,
+        ) {
+            Ok(out) => {
+                let best = out
+                    .ei
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                candidates.into_iter().nth(best).unwrap()
+            }
+            // PJRT failure: degrade gracefully to random search
+            Err(_) => space.sample(&mut self.rng),
+        }
+    }
+
+    fn on_report(&mut self, config: &Config, epoch: u32, metric: f64) {
+        if metric.is_finite() {
+            self.pending.push((config.clone(), epoch, metric));
+        }
+    }
+
+    fn name(&self) -> String {
+        "bo-gp-ei-pjrt".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::artifacts_available;
+    use crate::searcher::bo::BoSearcher;
+
+    fn quality(c: &Config) -> f64 {
+        let lr = c.values[0].as_f64();
+        let z = (lr.log10() + 2.0) / 1.0;
+        100.0 * (-z * z).exp()
+    }
+
+    #[test]
+    fn pjrt_searcher_concentrates_like_rust_searcher() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let space = SearchSpace::pd1();
+        let mut pjrt = BoPjrtSearcher::new(&engine, 3).unwrap();
+        let mut rust = BoSearcher::new(3);
+        let mut seed_rng = Rng::new(17);
+        for _ in 0..40 {
+            let c = space.sample(&mut seed_rng);
+            let m = quality(&c);
+            pjrt.on_report(&c, 9, m);
+            rust.on_report(&c, 9, m);
+        }
+        let score = |s: &mut dyn Searcher| {
+            let vals: Vec<f64> = (0..10).map(|_| quality(&s.suggest(&space))).collect();
+            stats::mean(&vals)
+        };
+        let sp = score(&mut pjrt);
+        let sr = score(&mut rust);
+        let mut rnd_rng = Rng::new(18);
+        let rnd = stats::mean(
+            &(0..10)
+                .map(|_| quality(&space.sample(&mut rnd_rng)))
+                .collect::<Vec<_>>(),
+        );
+        assert!(sp > rnd, "pjrt BO {sp:.1} must beat random {rnd:.1}");
+        assert!(
+            (sp - sr).abs() < 35.0,
+            "pjrt {sp:.1} and rust {sr:.1} searchers should be in the same league"
+        );
+    }
+
+    #[test]
+    fn degrades_to_random_on_wrong_dim() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let mut s = BoPjrtSearcher::new(&engine, 0).unwrap();
+        let nas = SearchSpace::nas(100); // 1-D categorical ≠ GP_D
+        let c = s.suggest(&nas);
+        assert_eq!(c.values.len(), 1);
+    }
+}

@@ -1,0 +1,301 @@
+//! A small exact Gaussian-process regressor (RBF kernel, Cholesky solve)
+//! plus the expected-improvement acquisition — the model behind the
+//! MOBSTER-style searcher (Table 3).
+//!
+//! Everything is dense `Vec<f64>` linear algebra: n ≤ a few hundred
+//! observations (the config budget is 256), so exact GP inference is
+//! cheap. The same posterior is also available through the AOT-compiled
+//! JAX/Pallas artifact (`runtime::gp`), which tests cross-validate
+//! against this implementation.
+
+/// Lower-triangular Cholesky factorization of a symmetric PD matrix
+/// (row-major n×n). Returns `None` if the matrix is not positive
+/// definite.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L x = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut x = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            let l_ik = l[i * n + k];
+            x[i] -= l_ik * x[k];
+        }
+        x[i] /= l[i * n + i];
+    }
+    x
+}
+
+/// Solve Lᵀ x = b (backward substitution).
+pub fn solve_upper_t(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            x[i] -= l[k * n + i] * x[k];
+        }
+        x[i] /= l[i * n + i];
+    }
+    x
+}
+
+/// Squared Euclidean distance.
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// RBF kernel value.
+#[inline]
+pub fn rbf(a: &[f64], b: &[f64], lengthscale: f64, signal_var: f64) -> f64 {
+    signal_var * (-dist2(a, b) / (2.0 * lengthscale * lengthscale)).exp()
+}
+
+/// An exact GP posterior over observations `(X, y)`.
+pub struct Gp {
+    x: Vec<Vec<f64>>,
+    /// Cholesky factor of K + σ_n² I.
+    l: Vec<f64>,
+    /// α = K⁻¹ (y − mean)
+    alpha: Vec<f64>,
+    pub lengthscale: f64,
+    pub signal_var: f64,
+    pub noise_var: f64,
+    pub y_mean: f64,
+}
+
+impl Gp {
+    /// Fit (no hyperparameter optimization: fixed, robust defaults over
+    /// unit-cube inputs and standardized outputs).
+    pub fn fit(
+        x: &[Vec<f64>],
+        y: &[f64],
+        lengthscale: f64,
+        signal_var: f64,
+        noise_var: f64,
+    ) -> Option<Gp> {
+        assert_eq!(x.len(), y.len());
+        let n = x.len();
+        if n == 0 {
+            return None;
+        }
+        let y_mean = y.iter().sum::<f64>() / n as f64;
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rbf(&x[i], &x[j], lengthscale, signal_var);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += noise_var + 1e-10;
+        }
+        let l = cholesky(&k, n)?;
+        let centered: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+        let tmp = solve_lower(&l, n, &centered);
+        let alpha = solve_upper_t(&l, n, &tmp);
+        Some(Gp {
+            x: x.to_vec(),
+            l,
+            alpha,
+            lengthscale,
+            signal_var,
+            noise_var,
+            y_mean,
+        })
+    }
+
+    /// Posterior mean and variance at a query point.
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kq: Vec<f64> = self
+            .x
+            .iter()
+            .map(|xi| rbf(xi, q, self.lengthscale, self.signal_var))
+            .collect();
+        let mean = self.y_mean
+            + kq.iter()
+                .zip(&self.alpha)
+                .map(|(k, a)| k * a)
+                .sum::<f64>();
+        let v = solve_lower(&self.l, n, &kq);
+        let var = self.signal_var - v.iter().map(|x| x * x).sum::<f64>();
+        (mean, var.max(1e-12))
+    }
+}
+
+/// Standard normal CDF (Abramowitz–Stegun erf approximation, |err|<1.5e-7).
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Standard normal PDF.
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Expected improvement for *maximization* over best observed `f_best`.
+pub fn expected_improvement(mean: f64, var: f64, f_best: f64) -> f64 {
+    let sd = var.sqrt();
+    if sd < 1e-12 {
+        return (mean - f_best).max(0.0);
+    }
+    let z = (mean - f_best) / sd;
+    (mean - f_best) * norm_cdf(z) + sd * norm_pdf(z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = L₀L₀ᵀ for a known L₀
+        let l0 = [2.0, 0.0, 0.0, 1.0, 3.0, 0.0, 0.5, -1.0, 1.5];
+        let n = 3;
+        let mut a = vec![0.0; 9];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    a[i * n + j] += l0[i * n + k] * l0[j * n + k];
+                }
+            }
+        }
+        let l = cholesky(&a, n).unwrap();
+        for i in 0..9 {
+            assert!((l[i] - l0[i]).abs() < 1e-10, "{i}: {} vs {}", l[i], l0[i]);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, −1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2).unwrap();
+        let b = [1.0, 2.0];
+        let y = solve_lower(&l, 2, &b);
+        let x = solve_upper_t(&l, 2, &y);
+        // check A x = b
+        let r0 = a[0] * x[0] + a[1] * x[1];
+        let r1 = a[2] * x[0] + a[3] * x[1];
+        assert!((r0 - 1.0).abs() < 1e-10 && (r1 - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let x = vec![vec![0.0], vec![0.5], vec![1.0]];
+        let y = vec![1.0, 3.0, 2.0];
+        let gp = Gp::fit(&x, &y, 0.3, 1.0, 1e-6).unwrap();
+        for i in 0..3 {
+            let (m, v) = gp.predict(&x[i]);
+            assert!((m - y[i]).abs() < 0.01, "mean at train point {i}: {m}");
+            assert!(v < 0.01, "var at train point: {v}");
+        }
+    }
+
+    #[test]
+    fn gp_reverts_to_prior_far_away() {
+        let x = vec![vec![0.0, 0.0]];
+        let y = vec![5.0];
+        let gp = Gp::fit(&x, &y, 0.1, 2.0, 1e-6).unwrap();
+        let (m, v) = gp.predict(&[10.0, 10.0]);
+        assert!((m - 5.0).abs() < 1e-6, "prior mean = y_mean: {m}");
+        assert!((v - 2.0).abs() < 1e-6, "prior variance = signal: {v}");
+    }
+
+    #[test]
+    fn norm_cdf_accuracy() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((norm_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ei_properties() {
+        // EI at huge mean dominates; EI is nonnegative
+        assert!(expected_improvement(10.0, 1.0, 0.0) > 9.9);
+        assert!(expected_improvement(-10.0, 1.0, 0.0) >= 0.0);
+        assert!(expected_improvement(-10.0, 1.0, 0.0) < 1e-6);
+        // zero variance: max(mean - best, 0)
+        assert_eq!(expected_improvement(2.0, 0.0, 1.0), 1.0);
+        assert_eq!(expected_improvement(0.5, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn ei_increases_with_variance_below_best() {
+        let lo = expected_improvement(0.0, 0.01, 1.0);
+        let hi = expected_improvement(0.0, 4.0, 1.0);
+        assert!(hi > lo, "exploration bonus: {hi} vs {lo}");
+    }
+
+    #[test]
+    fn property_gp_consistent_with_noise_free_function() {
+        check("GP mean close to a smooth target on dense data", 10, |g| {
+            let f = |x: f64| (3.0 * x).sin();
+            let n = 25;
+            let x: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+            let y: Vec<f64> = x.iter().map(|p| f(p[0])).collect();
+            let gp = Gp::fit(&x, &y, 0.15, 1.0, 1e-6).unwrap();
+            let q = g.f64(0.05, 0.95);
+            let (m, _) = gp.predict(&[q]);
+            assert!((m - f(q)).abs() < 0.05, "q={q} m={m} f={}", f(q));
+        });
+    }
+
+    #[test]
+    fn property_posterior_variance_nonnegative_and_bounded() {
+        check("0 ≤ var ≤ signal", 50, |g| {
+            let mut rng = Rng::new(g.u64());
+            let n = g.usize(1, 20);
+            let x: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![rng.next_f64(), rng.next_f64()])
+                .collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+            if let Some(gp) = Gp::fit(&x, &y, 0.3, 1.5, 1e-4) {
+                let q = vec![rng.next_f64(), rng.next_f64()];
+                let (_, v) = gp.predict(&q);
+                assert!(v >= 0.0 && v <= 1.5 + 1e-9, "v={v}");
+            }
+        });
+    }
+}

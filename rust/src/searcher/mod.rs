@@ -1,0 +1,28 @@
+//! Configuration searchers: the "which configuration to try next" half of
+//! the tuner (the scheduler decides *how long* to train it).
+//!
+//! * [`random::RandomSearcher`] — uniform sampling from the search space
+//!   (what the paper's main experiments use for both ASHA and PASHA).
+//! * [`bo::BoSearcher`] — a MOBSTER-style model-based searcher: a GP with
+//!   RBF kernel fitted to observations at the highest populated resource
+//!   level, proposing configurations by expected improvement (used in
+//!   Table 3, "MOBSTER" / "PASHA BO").
+
+pub mod bo;
+pub mod bo_pjrt;
+pub mod gp;
+pub mod random;
+
+use crate::config::space::{Config, SearchSpace};
+
+/// A proposal strategy for new configurations.
+pub trait Searcher: Send {
+    /// Propose the next configuration to evaluate.
+    fn suggest(&mut self, space: &SearchSpace) -> Config;
+
+    /// Observe a (possibly intermediate) result: `config` achieved
+    /// validation accuracy `metric` (%) after `epoch` epochs.
+    fn on_report(&mut self, config: &Config, epoch: u32, metric: f64);
+
+    fn name(&self) -> String;
+}

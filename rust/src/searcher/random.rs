@@ -1,0 +1,68 @@
+//! Uniform random search over the configuration space.
+
+use super::Searcher;
+use crate::config::space::{Config, SearchSpace};
+use crate::util::rng::Rng;
+
+/// Samples configurations uniformly (w.r.t. each domain's measure: linear
+/// or log). Deterministic given the seed, independent of report order.
+pub struct RandomSearcher {
+    rng: Rng,
+}
+
+impl RandomSearcher {
+    pub fn new(seed: u64) -> Self {
+        RandomSearcher {
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Searcher for RandomSearcher {
+    fn suggest(&mut self, space: &SearchSpace) -> Config {
+        space.sample(&mut self.rng)
+    }
+
+    fn on_report(&mut self, _config: &Config, _epoch: u32, _metric: f64) {}
+
+    fn name(&self) -> String {
+        "random-search".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequence() {
+        let space = SearchSpace::pd1();
+        let mut a = RandomSearcher::new(5);
+        let mut b = RandomSearcher::new(5);
+        for _ in 0..20 {
+            assert_eq!(a.suggest(&space), b.suggest(&space));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let space = SearchSpace::pd1();
+        let mut a = RandomSearcher::new(1);
+        let mut b = RandomSearcher::new(2);
+        let same = (0..10)
+            .filter(|_| a.suggest(&space) == b.suggest(&space))
+            .count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn reports_are_ignored_without_effect() {
+        let space = SearchSpace::pd1();
+        let mut a = RandomSearcher::new(7);
+        let mut b = RandomSearcher::new(7);
+        let c = a.suggest(&space);
+        b.suggest(&space);
+        a.on_report(&c, 1, 50.0);
+        assert_eq!(a.suggest(&space), b.suggest(&space));
+    }
+}

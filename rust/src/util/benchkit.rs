@@ -1,0 +1,162 @@
+//! Minimal benchmarking harness (the offline image has no `criterion`).
+//!
+//! `cargo bench` binaries use `harness = false` and drive [`bench`] /
+//! [`bench_n`] directly: warmup, then timed batches until a minimum
+//! measurement window is reached, reporting mean ± σ per iteration.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub sd_ns: f64,
+}
+
+impl Measurement {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// `name  123.4 µs/iter (± 5.6 µs, n=1000)` style line.
+    pub fn line(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.1} ns")
+            } else if ns < 1e6 {
+                format!("{:.1} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<52} {:>12}/iter  (± {}, n={})",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.sd_ns),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: warm up, then run timed batches for at least
+/// `min_total` wall time (default 300 ms when using [`bench`]).
+pub fn bench_n(name: &str, min_total: Duration, mut f: impl FnMut()) -> Measurement {
+    // warmup: a few iterations or 50 ms, whichever first
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_iters < 3 || (warm_start.elapsed() < Duration::from_millis(50) && warm_iters < 1000)
+    {
+        f();
+        warm_iters += 1;
+    }
+    // choose batch size so one batch ≈ 10 ms
+    let per = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+    let batch = ((10e6 / per.max(1.0)).ceil() as u64).clamp(1, 1_000_000);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let mut total_iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < min_total || samples.len() < 3 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(dt);
+        total_iters += batch;
+        if samples.len() > 500 {
+            break;
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean) * (s - mean))
+        .sum::<f64>()
+        / samples.len().max(1) as f64;
+    let m = Measurement {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: mean,
+        sd_ns: var.sqrt(),
+    };
+    println!("{}", m.line());
+    m
+}
+
+/// [`bench_n`] with the default 300 ms measurement window.
+pub fn bench(name: &str, f: impl FnMut()) -> Measurement {
+    bench_n(name, Duration::from_millis(300), f)
+}
+
+/// Time a one-shot (non-repeatable) workload.
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed();
+    println!("{:<52} {:>12.3} s  (one-shot)", name, dt.as_secs_f64());
+    (out, dt)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench_n("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.mean_ns >= 0.0);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn bench_scales_with_work() {
+        // black_box inside the loop so release-mode LLVM cannot
+        // const-fold the sum into a closed form
+        let fast = bench_n("fast", Duration::from_millis(20), || {
+            let mut acc = 0u64;
+            for i in 0..10u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        let slow = bench_n("slow", Duration::from_millis(20), || {
+            let mut acc = 0u64;
+            for i in 0..50_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(slow.mean_ns > fast.mean_ns * 5.0);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, dt) = once("compute", || 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn line_formats_units() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 2_500_000.0,
+            sd_ns: 100.0,
+        };
+        assert!(m.line().contains("ms/iter"));
+    }
+}

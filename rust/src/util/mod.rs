@@ -1,0 +1,11 @@
+//! Foundation utilities: deterministic RNG, statistics, JSON, table
+//! rendering, and the property-test harness. These replace the crates
+//! (`rand`, `serde`, `proptest`) that are unavailable in the offline
+//! build image — see DESIGN.md §Substitutions.
+
+pub mod benchkit;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

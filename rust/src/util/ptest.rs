@@ -1,0 +1,177 @@
+//! A tiny property-based testing harness (the image has no `proptest`).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs from a
+//! seeded generator; on failure it reports the seed and case index so the
+//! exact input can be regenerated. No shrinking — generators are kept
+//! small enough that raw failing inputs are readable.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath link flag
+//! use pasha::util::ptest::{check, Gen};
+//! check("sort is idempotent", 200, |g: &mut Gen| {
+//!     let mut v = g.vec_f64(0, 32, -1e3, 1e3);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let w = {
+//!         let mut w = v.clone();
+//!         w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!         w
+//!     };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based), exposed so properties can scale size with it.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.int_range(lo as i64, hi as i64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Vector of uniform doubles with length in [min_len, max_len].
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize(min_len, max_len);
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    /// Strictly increasing positive sequence (useful for resource levels).
+    pub fn increasing(&mut self, len: usize, start: f64, max_step: f64) -> Vec<f64> {
+        let mut v = Vec::with_capacity(len);
+        let mut x = start;
+        for _ in 0..len {
+            x += self.f64(1e-9, max_step);
+            v.push(x);
+        }
+        v
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut v);
+        v
+    }
+}
+
+/// Fixed default seed; override with env `PASHA_PTEST_SEED` to replay.
+fn base_seed() -> u64 {
+    std::env::var("PASHA_PTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `cases` generated inputs. Panics (with seed + case id)
+/// if the property panics for any case.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let case_seed = super::rng::mix(&[seed, case as u64]);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(case_seed),
+                case,
+            };
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay with PASHA_PTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("reverse twice is identity", 50, |g| {
+            let v = g.vec_f64(0, 16, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    fn reports_failure_with_case() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_g| {
+                panic!("boom");
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{payload:?}"));
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("case 0"), "{msg}");
+    }
+
+    #[test]
+    fn generator_ranges_hold() {
+        check("gen ranges", 100, |g| {
+            let x = g.f64(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+            let n = g.usize(1, 5);
+            assert!((1..=5).contains(&n));
+            let inc = g.increasing(10, 0.0, 2.0);
+            for w in inc.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            let p = g.permutation(8);
+            let mut q = p.clone();
+            q.sort();
+            assert_eq!(q, (0..8).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Two runs of the same property observe identical inputs.
+        use std::sync::Mutex;
+        static SEEN: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        SEEN.lock().unwrap().clear();
+        for _ in 0..2 {
+            check("record", 5, |g| {
+                SEEN.lock().unwrap().push(g.f64(0.0, 1.0));
+            });
+        }
+        let seen = SEEN.lock().unwrap();
+        assert_eq!(seen.len(), 10);
+        assert_eq!(seen[..5], seen[5..]);
+    }
+}

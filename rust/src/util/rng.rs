@@ -1,0 +1,259 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline image does not ship the `rand` crate, so we implement the
+//! two small generators the framework needs ourselves:
+//!
+//! * [`splitmix64`] — a stateless 64-bit mixer used to derive independent
+//!   streams from `(seed, stream-id)` pairs. Every benchmark surrogate keys
+//!   its per-configuration randomness off `splitmix64` hashes so that a
+//!   configuration's learning curve is a pure function of
+//!   `(benchmark, config, seed)` regardless of query order.
+//! * [`Rng`] — xoshiro256++, a fast, high-quality, small-state generator
+//!   (Blackman & Vigna), used wherever a sequential stream is needed
+//!   (searchers, samplers, the property-test harness).
+
+/// One round of the splitmix64 output function: a bijective 64-bit mixer.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Mix an arbitrary number of 64-bit words into a single hash.
+///
+/// Used to derive per-entity seeds, e.g. `mix(&[bench_seed, arch_id, epoch])`.
+#[inline]
+pub fn mix(words: &[u64]) -> u64 {
+    let mut h = 0x243f_6a88_85a3_08d3u64; // pi digits
+    for &w in words {
+        h = splitmix64(h ^ w);
+    }
+    h
+}
+
+/// xoshiro256++ sequential generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator seeded via splitmix64 (as recommended by the
+    /// xoshiro authors: never seed the state directly).
+    pub fn new(seed: u64) -> Self {
+        let mut z = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            *slot = splitmix64(z);
+        }
+        // All-zero state is the one invalid state.
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent sub-stream (for parallel/deterministic use).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(mix(&[self.next_u64(), stream]))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's multiply-shift rejection-free
+    /// approximation (bias < 2^-64, irrelevant at our scales).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn int_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast here).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Log-uniform in [lo, hi) (both > 0).
+    #[inline]
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(lo > 0.0 && hi > lo);
+        (self.uniform(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic_and_mixing() {
+        assert_eq!(splitmix64(0), splitmix64(0));
+        assert_ne!(splitmix64(0), splitmix64(1));
+        // avalanche sanity: flipping one input bit flips ~half the output bits
+        let a = splitmix64(0x1234);
+        let b = splitmix64(0x1235);
+        let flipped = (a ^ b).count_ones();
+        assert!((16..=48).contains(&flipped), "weak avalanche: {flipped}");
+    }
+
+    #[test]
+    fn mix_order_sensitive() {
+        assert_ne!(mix(&[1, 2]), mix(&[2, 1]));
+        assert_eq!(mix(&[1, 2, 3]), mix(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn rng_reproducible_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn log_uniform_within_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let x = r.log_uniform(1e-5, 10.0);
+            assert!((1e-5..10.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn int_range_inclusive() {
+        let mut r = Rng::new(13);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..2000 {
+            let v = r.int_range(-3, 3);
+            assert!((-3..=3).contains(&v));
+            lo_seen |= v == -3;
+            hi_seen |= v == 3;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut base = Rng::new(1);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Small statistics helpers used throughout the experiment harness:
+//! mean/std aggregation for the paper-style `x ± y` cells, percentiles for
+//! the ε-estimation rule (§4.2, N-th percentile of pair distances), and
+//! rank utilities.
+
+/// Mean of a slice; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0.0 for fewer than 2 points.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Population standard deviation (n denominator).
+pub fn pstd(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// q-th percentile (q in [0, 100]) using linear interpolation between order
+/// statistics (numpy's default "linear" method). Panics on empty input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile of an already ascending-sorted slice.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    let n = v.len();
+    if n == 1 {
+        return v[0];
+    }
+    let pos = q / 100.0 * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Aggregate of repeated experiment measurements, rendered `mean ± std`.
+#[derive(Clone, Debug, Default)]
+pub struct Agg {
+    pub values: Vec<f64>,
+}
+
+impl Agg {
+    pub fn new() -> Self {
+        Agg { values: Vec::new() }
+    }
+
+    pub fn from(values: &[f64]) -> Self {
+        Agg {
+            values: values.to_vec(),
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.values)
+    }
+
+    pub fn std(&self) -> f64 {
+        std(&self.values)
+    }
+
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `93.85 ± 0.25` style cell with the given number of decimals.
+    pub fn cell(&self, decimals: usize) -> String {
+        format!(
+            "{:.d$} ± {:.d$}",
+            self.mean(),
+            self.std(),
+            d = decimals
+        )
+    }
+
+    /// Hours cell: `3.0h ± 0.6h` from values in seconds.
+    pub fn cell_hours(&self) -> String {
+        format!(
+            "{:.1}h ± {:.1}h",
+            self.mean() / 3600.0,
+            self.std() / 3600.0
+        )
+    }
+}
+
+/// NaN-safe descending comparator: NaN sorts last (treated as −∞), and
+/// the order is total (required by `sort_by` since Rust 1.81's
+/// order-violation panics).
+#[inline]
+pub fn desc_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    let ka = if a.is_nan() { f64::NEG_INFINITY } else { a };
+    let kb = if b.is_nan() { f64::NEG_INFINITY } else { b };
+    kb.total_cmp(&ka)
+}
+
+/// Ranks (0 = best) of items sorted descending by score. Ties broken by
+/// index for determinism.
+pub fn rank_descending(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| desc_cmp(scores[a], scores[b]).then(a.cmp(&b)));
+    let mut ranks = vec![0usize; scores.len()];
+    for (rank, &i) in idx.iter().enumerate() {
+        ranks[i] = rank;
+    }
+    ranks
+}
+
+/// Spearman rank correlation between two paired score vectors.
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ra: Vec<f64> = rank_descending(a).iter().map(|&r| r as f64).collect();
+    let rb: Vec<f64> = rank_descending(b).iter().map(|&r| r as f64).collect();
+    pearson(&ra, &rb)
+}
+
+/// Pearson correlation.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let ma = mean(a);
+    let mb = mean(b);
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..a.len() {
+        let xa = a[i] - ma;
+        let xb = b[i] - mb;
+        num += xa * xb;
+        da += xa * xa;
+        db += xb * xb;
+    }
+    if da == 0.0 || db == 0.0 {
+        return 0.0;
+    }
+    num / (da * db).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((pstd(&xs) - 2.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(std(&[3.0]), 0.0);
+        assert_eq!(percentile(&[3.0], 90.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_linear_interpolation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        // numpy.percentile([1,2,3,4], 90) == 3.7
+        assert!((percentile(&xs, 90.0) - 3.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn agg_cell_format() {
+        let a = Agg::from(&[93.6, 94.1]);
+        assert_eq!(a.cell(2), "93.85 ± 0.35");
+        let hrs = Agg::from(&[3600.0 * 3.0, 3600.0 * 3.0]);
+        assert_eq!(hrs.cell_hours(), "3.0h ± 0.0h");
+    }
+
+    #[test]
+    fn rank_descending_orders_best_first() {
+        let scores = [0.3, 0.9, 0.5];
+        assert_eq!(rank_descending(&scores), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn rank_ties_deterministic() {
+        let scores = [0.5, 0.5, 0.5];
+        assert_eq!(rank_descending(&scores), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverted() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [10.0, 20.0, 30.0, 40.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [40.0, 30.0, 20.0, 10.0];
+        assert!((spearman(&a, &c) + 1.0).abs() < 1e-12);
+    }
+}

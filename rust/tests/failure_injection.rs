@@ -1,0 +1,152 @@
+//! Failure injection: the tuner must survive degenerate evaluators —
+//! NaN metrics (diverged training), zero-cost jobs, constant metrics
+//! (total ties) — and still terminate with sane output.
+
+use pasha::benchmarks::Benchmark;
+use pasha::config::space::{Config, SearchSpace};
+use pasha::executor::sim::run_sim;
+use pasha::executor::{Advance, Evaluator, SurrogateEvaluator};
+use pasha::scheduler::asha::AshaBuilder;
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::scheduler::SchedulerBuilder;
+use pasha::searcher::random::RandomSearcher;
+use pasha::TrialId;
+
+/// Evaluator where a fraction of trials "diverge" to NaN.
+struct NanEvaluator {
+    nan_every: usize,
+}
+
+impl Evaluator for NanEvaluator {
+    fn advance(&mut self, trial: TrialId, _c: &Config, from: u32, to: u32) -> Advance {
+        let diverged = trial % self.nan_every == 0;
+        let accs = (from + 1..=to)
+            .map(|e| {
+                if diverged {
+                    f64::NAN
+                } else {
+                    50.0 + (trial % 10) as f64 + e as f64 * 0.01
+                }
+            })
+            .collect();
+        Advance {
+            accs,
+            cost_seconds: (to - from) as f64,
+        }
+    }
+}
+
+/// Evaluator with identical metrics for every trial (total ties).
+struct ConstantEvaluator;
+
+impl Evaluator for ConstantEvaluator {
+    fn advance(&mut self, _t: TrialId, _c: &Config, from: u32, to: u32) -> Advance {
+        Advance {
+            accs: (from + 1..=to).map(|_| 42.0).collect(),
+            cost_seconds: (to - from) as f64,
+        }
+    }
+}
+
+fn run_with(
+    builder: &dyn SchedulerBuilder,
+    evaluator: &mut dyn Evaluator,
+    budget: usize,
+) -> (pasha::executor::sim::SimStats, Box<dyn pasha::scheduler::Scheduler>) {
+    let space = SearchSpace::nas(10_000);
+    let mut scheduler = builder.build(81, 0);
+    let mut searcher = RandomSearcher::new(0);
+    let stats = run_sim(
+        scheduler.as_mut(),
+        &mut searcher,
+        &space,
+        budget,
+        4,
+        evaluator,
+    );
+    (stats, scheduler)
+}
+
+#[test]
+fn nan_metrics_do_not_poison_best() {
+    for builder in [
+        &AshaBuilder::default() as &dyn SchedulerBuilder,
+        &PashaBuilder::default(),
+    ] {
+        let (stats, sched) = run_with(builder, &mut NanEvaluator { nan_every: 3 }, 48);
+        assert_eq!(stats.configs_sampled, 48);
+        let best = sched.best().expect("must still pick a best");
+        assert!(
+            best.metric.is_finite(),
+            "{}: best metric must be finite, got {}",
+            sched.name(),
+            best.metric
+        );
+    }
+}
+
+#[test]
+fn all_nan_still_terminates() {
+    let (stats, sched) = run_with(
+        &PashaBuilder::default(),
+        &mut NanEvaluator { nan_every: 1 },
+        24,
+    );
+    assert_eq!(stats.configs_sampled, 24);
+    // nothing finite: best falls back to the first trial
+    let best = sched.best().unwrap();
+    assert_eq!(best.trial, 0);
+}
+
+#[test]
+fn constant_metrics_terminate_with_stable_ranking() {
+    // Total ties: soft ranking sees a perfectly consistent ranking, so
+    // PASHA must stop at the initial cap rather than looping.
+    let (stats, sched) = run_with(&PashaBuilder::default(), &mut ConstantEvaluator, 48);
+    assert_eq!(stats.configs_sampled, 48);
+    assert!(
+        sched.max_resources_used() <= 9,
+        "ties must not trigger growth: {}",
+        sched.max_resources_used()
+    );
+}
+
+#[test]
+fn zero_config_budget_is_a_noop() {
+    let bench = pasha::benchmarks::nasbench201::NasBench201::cifar10();
+    let mut evaluator = SurrogateEvaluator {
+        bench: &bench,
+        bench_seed: 0,
+    };
+    let space = bench.space().clone();
+    let mut scheduler = PashaBuilder::default().build(bench.max_epochs(), 0);
+    let mut searcher = RandomSearcher::new(0);
+    let stats = run_sim(scheduler.as_mut(), &mut searcher, &space, 0, 4, &mut evaluator);
+    assert_eq!(stats.jobs, 0);
+    assert!(scheduler.best().is_none());
+}
+
+#[test]
+fn single_worker_and_many_workers_agree_on_sampled_configs() {
+    let bench = pasha::benchmarks::nasbench201::NasBench201::cifar10();
+    let space = bench.space().clone();
+    let count = |workers: usize| {
+        let mut evaluator = SurrogateEvaluator {
+            bench: &bench,
+            bench_seed: 0,
+        };
+        let mut scheduler = AshaBuilder::default().build(bench.max_epochs(), 0);
+        let mut searcher = RandomSearcher::new(3);
+        run_sim(
+            scheduler.as_mut(),
+            &mut searcher,
+            &space,
+            32,
+            workers,
+            &mut evaluator,
+        )
+        .configs_sampled
+    };
+    assert_eq!(count(1), 32);
+    assert_eq!(count(16), 32);
+}
