@@ -7,6 +7,7 @@
 //! * PJRT artifact execution latency (train step / eval / GP-EI / kNN),
 //!   when `make artifacts` has run.
 
+#[cfg(feature = "pjrt")]
 use pasha::benchmarks::knn::KnnTable;
 use pasha::benchmarks::nasbench201::NasBench201;
 use pasha::benchmarks::Benchmark;
@@ -125,6 +126,13 @@ fn main() {
         std::hint::black_box(gp.predict(&[0.2, 0.4, 0.6, 0.8]));
     });
 
+    pjrt_benches(&mut rng, &x, &y, &q);
+}
+
+/// PJRT artifact benches — only meaningful when the crate is built with
+/// the `pjrt` feature (the `xla` dependency) and `make artifacts` ran.
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(rng: &mut Rng, x: &[Vec<f64>], y: &[f64], q: &[f64; 4]) {
     section("PJRT artifact execution (L1/L2 via runtime)");
     if !pasha::runtime::artifact::artifacts_available() {
         println!("artifacts not built — run `make artifacts` for PJRT benches");
@@ -140,7 +148,7 @@ fn main() {
         big.push(&[v, 1.0 - v, v * v, 0.5]);
     }
     bench("knn nearest (512×4, PJRT artifact)", || {
-        std::hint::black_box(knn_art.nearest(&big, &q).unwrap());
+        std::hint::black_box(knn_art.nearest(&big, q).unwrap());
     });
     let (gp_art, _) = once("compile gp_ei artifact", || {
         pasha::runtime::gp::GpEiArtifact::load(&engine).unwrap()
@@ -149,7 +157,7 @@ fn main() {
         .map(|_| (0..4).map(|_| rng.next_f64()).collect())
         .collect();
     bench("gp_ei n=64 m=64 (PJRT artifact)", || {
-        std::hint::black_box(gp_art.run(&x, &y, &cand, 1.0, 0.25, 1.0, 1e-3).unwrap());
+        std::hint::black_box(gp_art.run(x, y, &cand, 1.0, 0.25, 1.0, 1e-3).unwrap());
     });
     let spec = pasha::benchmarks::realtrain::RealTrainSpec {
         hidden: 64,
@@ -176,4 +184,10 @@ fn main() {
     bench("mlp eval (1024×32, PJRT)", || {
         std::hint::black_box(trainer.evaluate(&params).unwrap());
     });
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(_rng: &mut Rng, _x: &[Vec<f64>], _y: &[f64], _q: &[f64; 4]) {
+    section("PJRT artifact execution (L1/L2 via runtime)");
+    println!("built without the `pjrt` feature — skipping artifact benches");
 }

@@ -1,0 +1,617 @@
+//! The event-driven execution engine: one driver loop for every backend.
+//!
+//! The engine owns the scheduler↔executor protocol; backends only know
+//! how to run jobs and surface events:
+//!
+//! ```text
+//!   ┌────────────┐  next_job / on_result   ┌────────────┐
+//!   │  Scheduler │ ◄─────────────────────► │   engine   │
+//!   └────────────┘     drain_actions       │ (run_engine)│
+//!                   Stop/Pause decisions    └─────┬──────┘
+//!                                         dispatch │ ▲ next_event
+//!                                           cancel ▼ │
+//!                                          ┌────────────┐
+//!                                          │ ExecBackend│  SimBackend
+//!                                          └────────────┘  PoolBackend
+//! ```
+//!
+//! * [`ExecBackend`] — where jobs physically run: the deterministic
+//!   virtual-clock simulator ([`super::sim::SimBackend`]) or the real
+//!   `std::thread` pool ([`super::pool::PoolBackend`]). Backends support
+//!   in-flight cancellation, which the engine uses both for scheduler
+//!   [`TrialAction`]s (stopping-type ASHA/PASHA) and for hard
+//!   stopping-rule halts.
+//! * [`StoppingRule`] — pluggable termination criteria: the paper's
+//!   N-configuration budget ([`ConfigBudget`]), a total-epoch budget
+//!   ([`EpochBudget`]) and a clock budget ([`ClockBudget`], virtual
+//!   seconds on the simulator, wall seconds on the pool).
+//! * [`run_engine`] — the loop: dispatch to free workers while the rules
+//!   allow, deliver the next event, apply scheduler decisions, halt when
+//!   a rule fires.
+//!
+//! A result for a cancelled job is never delivered to the scheduler or
+//! the searcher — the backend retires it as [`ExecEvent::Cancelled`].
+
+use crate::config::space::SearchSpace;
+use crate::scheduler::{Job, JobOutcome, SchedCtx, Scheduler, TrialAction};
+use crate::searcher::Searcher;
+use crate::TrialId;
+use std::collections::HashSet;
+
+/// Statistics of one engine run. `runtime_seconds` and
+/// `idle_worker_seconds` are virtual on the simulator and measured wall
+/// time on the thread pool; work counters cover *completed* jobs only
+/// (cancelled work is reported separately).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// Clock seconds until the engine drained (virtual or wall).
+    pub runtime_seconds: f64,
+    /// Total epochs trained across all completed jobs.
+    pub total_epochs: u64,
+    /// Number of jobs completed.
+    pub jobs: usize,
+    /// Number of configurations sampled.
+    pub configs_sampled: usize,
+    /// Sum over workers of idle time (synchronization overhead);
+    /// satisfies `idle = workers·runtime − Σ busy` — exactly on the
+    /// simulator's virtual clock, to measurement precision on the pool.
+    pub idle_worker_seconds: f64,
+    /// In-flight jobs cancelled (scheduler stops/pauses + rule halts).
+    pub cancelled_jobs: usize,
+    /// Trials terminated by a scheduler `Stop` decision.
+    pub stopped_trials: usize,
+    /// Trials suspended by a scheduler `Pause` decision.
+    pub paused_trials: usize,
+}
+
+/// Progress counters the stopping rules see. Dispatched counters include
+/// in-flight work; completed counters only delivered results.
+#[derive(Clone, Debug, Default)]
+pub struct EngineSnapshot {
+    pub configs_sampled: usize,
+    pub jobs_dispatched: usize,
+    pub jobs_completed: usize,
+    pub epochs_dispatched: u64,
+    pub epochs_completed: u64,
+    /// Backend clock (virtual or wall seconds).
+    pub clock_seconds: f64,
+}
+
+/// A pluggable termination criterion. Rules compose: the engine stops
+/// drawing new configurations when *any* rule's allowance is exhausted
+/// and halts (cancelling in-flight work) when *any* rule says so.
+pub trait StoppingRule: Send {
+    /// Additional configurations this rule still allows to be drawn
+    /// (`None` = unconstrained). The engine takes the minimum over rules.
+    fn draw_allowance(&self, snapshot: &EngineSnapshot) -> Option<usize> {
+        let _ = snapshot;
+        None
+    }
+
+    /// `true` ⇒ stop dispatching new jobs; in-flight work completes
+    /// (drain semantics — nothing already started is wasted).
+    fn should_drain(&self, snapshot: &EngineSnapshot) -> bool {
+        let _ = snapshot;
+        false
+    }
+
+    /// `true` ⇒ stop dispatching and cancel everything in flight.
+    /// Exhausting `draw_allowance` alone is *drain* semantics (in-flight
+    /// work still completes); a halt is immediate.
+    fn should_halt(&self, snapshot: &EngineSnapshot) -> bool {
+        let _ = snapshot;
+        false
+    }
+
+    /// For clock-based halt rules: the clock instant at which the rule
+    /// fires. Lets the engine cut a virtual-clock run exactly at the
+    /// budget boundary (runtime and busy-interval truncation then
+    /// reflect the budget instant, not the last delivered event).
+    fn halt_deadline(&self) -> Option<f64> {
+        None
+    }
+
+    fn name(&self) -> String;
+}
+
+/// The paper's §5.1 protocol: sample at most N configurations, then
+/// drain. Never halts — dispatched work always completes.
+#[derive(Clone, Debug)]
+pub struct ConfigBudget(pub usize);
+
+impl StoppingRule for ConfigBudget {
+    fn draw_allowance(&self, s: &EngineSnapshot) -> Option<usize> {
+        Some(self.0.saturating_sub(s.configs_sampled))
+    }
+
+    fn name(&self) -> String {
+        format!("config-budget({})", self.0)
+    }
+}
+
+/// Stop launching new jobs once the given number of training epochs has
+/// been dispatched; in-flight work completes (drain, not halt — real
+/// training already started is never thrown away, so the budget may
+/// overshoot by at most the jobs already running).
+#[derive(Clone, Debug)]
+pub struct EpochBudget(pub u64);
+
+impl StoppingRule for EpochBudget {
+    fn should_drain(&self, s: &EngineSnapshot) -> bool {
+        s.epochs_dispatched >= self.0
+    }
+
+    fn name(&self) -> String {
+        format!("epoch-budget({})", self.0)
+    }
+}
+
+/// Halt once the backend clock passes the given number of seconds —
+/// virtual time on the simulator, wall time on the thread pool.
+#[derive(Clone, Debug)]
+pub struct ClockBudget(pub f64);
+
+impl StoppingRule for ClockBudget {
+    fn should_halt(&self, s: &EngineSnapshot) -> bool {
+        s.clock_seconds >= self.0
+    }
+
+    fn halt_deadline(&self) -> Option<f64> {
+        Some(self.0)
+    }
+
+    fn name(&self) -> String {
+        format!("clock-budget({}s)", self.0)
+    }
+}
+
+/// An event delivered from a backend to the engine loop.
+#[derive(Debug)]
+pub enum ExecEvent {
+    /// A job finished; its outcome must reach the scheduler.
+    Completed(JobOutcome),
+    /// A previously-cancelled job retired without delivering a result
+    /// (thread-pool workers cannot be preempted, so cancellation there
+    /// surfaces when the discarded result arrives; the simulator cancels
+    /// instantly and never emits this).
+    Cancelled { trial: TrialId },
+}
+
+/// What [`ExecBackend::cancel`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The trial had no job in flight; nothing happened.
+    NotInFlight,
+    /// The job was cancelled and fully retired on the spot (virtual-clock
+    /// simulator): the trial may be dispatched again immediately.
+    Cancelled,
+    /// The job was marked cancelled but its worker cannot be preempted
+    /// (thread pool): the trial must not be re-dispatched until the
+    /// backend emits [`ExecEvent::Cancelled`] for it. The engine parks
+    /// any job for such a trial until then.
+    Deferred,
+}
+
+/// Where jobs physically execute. The engine guarantees at most one
+/// in-flight job per trial (a property of every scheduler in this crate),
+/// which backends may rely on for cancellation bookkeeping.
+pub trait ExecBackend {
+    /// Worker slots free right now.
+    fn free_workers(&self) -> usize;
+
+    /// Start `job` on a free worker (caller checked `free_workers > 0`).
+    fn dispatch(&mut self, job: Job);
+
+    /// Advance to the next event, or `None` when nothing is in flight.
+    fn next_event(&mut self) -> Option<ExecEvent>;
+
+    /// Cancel the in-flight job of `trial`, if any. The cancelled job's
+    /// result is never delivered through [`ExecBackend::next_event`] as
+    /// `Completed`; a [`CancelOutcome::Deferred`] backend retires it as
+    /// [`ExecEvent::Cancelled`] later.
+    fn cancel(&mut self, trial: TrialId) -> CancelOutcome;
+
+    /// Trials with a job currently in flight (including, on deferred
+    /// backends, jobs already marked cancelled but not yet retired).
+    fn in_flight_trials(&self) -> Vec<TrialId>;
+
+    /// Cancel every in-flight job; returns the trials whose job was
+    /// actually cancelled.
+    fn cancel_all(&mut self) -> Vec<TrialId> {
+        self.in_flight_trials()
+            .into_iter()
+            .filter(|&t| self.cancel(t) != CancelOutcome::NotInFlight)
+            .collect()
+    }
+
+    /// Backend clock in seconds (virtual or wall).
+    fn now(&self) -> f64;
+
+    /// Advance the clock to `to` without delivering events (virtual
+    /// clocks only; wall-clock backends ignore it). Used by the engine
+    /// to cut a halted run at the budget instant.
+    fn advance_clock(&mut self, to: f64) {
+        let _ = to;
+    }
+
+    /// Clock time of the next event that would actually be *delivered*,
+    /// when the backend can know it ahead of delivery (the simulator
+    /// can; a thread pool cannot). Lets the engine halt a virtual-clock
+    /// run *at* a clock budget instead of one event past it. Takes
+    /// `&mut self` so backends with lazy cancellation can discard
+    /// tombstones while peeking.
+    fn peek_next_time(&mut self) -> Option<f64> {
+        None
+    }
+
+    /// Sum over workers of idle time given the final runtime. Backends
+    /// without occupancy accounting return 0.
+    fn idle_worker_seconds(&self, runtime_seconds: f64) -> f64 {
+        let _ = runtime_seconds;
+        0.0
+    }
+}
+
+/// Run `scheduler` to completion on `backend` under `rules`.
+///
+/// The loop alternates a dispatch phase (fill every free worker while the
+/// rules permit) with an event phase (deliver exactly one completion,
+/// then apply the scheduler's Stop/Pause decisions). It terminates when
+/// no work is in flight and the scheduler has nothing to launch, or
+/// immediately after a rule halts.
+pub fn run_engine(
+    scheduler: &mut dyn Scheduler,
+    searcher: &mut dyn Searcher,
+    space: &SearchSpace,
+    rules: &[Box<dyn StoppingRule>],
+    backend: &mut dyn ExecBackend,
+) -> EngineStats {
+    let mut snap = EngineSnapshot::default();
+    let mut stats = EngineStats::default();
+    let mut stopped: HashSet<TrialId> = HashSet::new();
+    let mut paused: HashSet<TrialId> = HashSet::new();
+    // Trials whose cancelled job has not yet retired (deferred-cancel
+    // backends): jobs for them are parked, not dispatched, so a resumed
+    // trial never races its own discarded worker.
+    let mut pending_retire: HashSet<TrialId> = HashSet::new();
+    let mut parked: Vec<Job> = Vec::new();
+    let mut halted = false;
+
+    loop {
+        // Dispatch phase: fill free workers.
+        while !halted && backend.free_workers() > 0 {
+            snap.clock_seconds = backend.now();
+            if rules.iter().any(|r| r.should_halt(&snap)) {
+                halted = true;
+                break;
+            }
+            // Parked jobs whose cancelled predecessor has retired go
+            // first — they were emitted by the scheduler already, so
+            // they dispatch even under drain.
+            if let Some(i) = parked
+                .iter()
+                .position(|j| !pending_retire.contains(&j.trial))
+            {
+                let job = parked.remove(i);
+                snap.jobs_dispatched += 1;
+                snap.epochs_dispatched += (job.milestone - job.from_epoch) as u64;
+                backend.dispatch(job);
+                continue;
+            }
+            if rules.iter().any(|r| r.should_drain(&snap)) {
+                break; // stop launching; in-flight work completes
+            }
+            let draws = rules
+                .iter()
+                .filter_map(|r| r.draw_allowance(&snap))
+                .min()
+                .unwrap_or(usize::MAX);
+            let mut ctx = SchedCtx {
+                space,
+                searcher: &mut *searcher,
+                configs_sampled: snap.configs_sampled,
+                draws_remaining: draws,
+            };
+            let job = scheduler.next_job(&mut ctx);
+            snap.configs_sampled = ctx.configs_sampled;
+            match job {
+                None => break,
+                Some(job) => {
+                    debug_assert!(
+                        !stopped.contains(&job.trial),
+                        "scheduler dispatched stopped trial {}",
+                        job.trial
+                    );
+                    if pending_retire.contains(&job.trial) {
+                        parked.push(job);
+                        continue;
+                    }
+                    snap.jobs_dispatched += 1;
+                    snap.epochs_dispatched += (job.milestone - job.from_epoch) as u64;
+                    backend.dispatch(job);
+                }
+            }
+        }
+
+        if halted {
+            let cancelled = backend.cancel_all();
+            stats.cancelled_jobs += cancelled.len();
+            for t in cancelled {
+                // Same contract as the drain_actions path: the cancelled
+                // job's epochs were never trained.
+                scheduler.on_cancelled(t);
+            }
+            // Parked jobs die undispatched, but the scheduler already
+            // advanced their frontier when it emitted them — rewind.
+            for job in parked.drain(..) {
+                scheduler.on_cancelled(job.trial);
+            }
+            // Drain retirement events (pool backends) without delivering
+            // anything to the scheduler.
+            while backend.next_event().is_some() {}
+            break;
+        }
+
+        // Event phase: deliver exactly one completion. On backends with
+        // a lookahead clock, halt *at* the budget boundary rather than
+        // delivering an event beyond it.
+        if let Some(t) = backend.peek_next_time() {
+            let mut at = snap.clone();
+            at.clock_seconds = t;
+            if rules.iter().any(|r| r.should_halt(&at)) {
+                // Cut the run at the earliest firing rule's deadline
+                // (<= t), so runtime and cancelled-work busy time
+                // reflect the budget instant rather than the last
+                // delivered event.
+                let deadline = rules
+                    .iter()
+                    .filter(|r| r.should_halt(&at))
+                    .filter_map(|r| r.halt_deadline())
+                    .fold(t, f64::min)
+                    .max(snap.clock_seconds);
+                backend.advance_clock(deadline);
+                halted = true;
+                continue; // next iteration cancels in-flight work
+            }
+        }
+        let Some(event) = backend.next_event() else {
+            break; // nothing in flight, nothing to launch: drained
+        };
+        match event {
+            ExecEvent::Completed(outcome) => {
+                snap.jobs_completed += 1;
+                snap.epochs_completed += outcome.curve_segment.len() as u64;
+                snap.clock_seconds = backend.now();
+                // Model-based searchers observe every delivered result.
+                if let Some(info) = scheduler.trials().get(outcome.trial) {
+                    let config = info.config.clone();
+                    searcher.on_report(&config, outcome.milestone, outcome.metric);
+                }
+                scheduler.on_result(&outcome);
+                for action in scheduler.drain_actions() {
+                    match backend.cancel(action.trial()) {
+                        CancelOutcome::NotInFlight => {}
+                        outcome => {
+                            stats.cancelled_jobs += 1;
+                            if outcome == CancelOutcome::Deferred {
+                                pending_retire.insert(action.trial());
+                            }
+                            // The cancelled job's epochs were never
+                            // trained; let the scheduler rewind its
+                            // dispatch frontier.
+                            scheduler.on_cancelled(action.trial());
+                        }
+                    }
+                    match action {
+                        TrialAction::Stop(t) => {
+                            stopped.insert(t);
+                            // A parked resume (from an earlier pause of a
+                            // then-in-flight job) must die with the trial.
+                            parked.retain(|j| j.trial != t);
+                        }
+                        TrialAction::Pause(t) => {
+                            paused.insert(t);
+                        }
+                    }
+                }
+            }
+            ExecEvent::Cancelled { trial } => {
+                // Worker freed; the discarded result never reaches the
+                // scheduler, and any parked job for the trial becomes
+                // dispatchable.
+                pending_retire.remove(&trial);
+            }
+        }
+    }
+
+    stats.runtime_seconds = backend.now();
+    stats.total_epochs = snap.epochs_completed;
+    stats.jobs = snap.jobs_completed;
+    stats.configs_sampled = snap.configs_sampled;
+    stats.stopped_trials = stopped.len();
+    stats.paused_trials = paused.len();
+    stats.idle_worker_seconds = backend.idle_worker_seconds(stats.runtime_seconds);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::Config;
+    use crate::executor::sim::SimBackend;
+    use crate::executor::{Advance, Evaluator};
+    use crate::scheduler::{BestTrial, TrialInfo};
+    use crate::searcher::random::RandomSearcher;
+
+    /// Evaluator with a fixed per-epoch cost.
+    struct FlatCost(f64);
+
+    impl Evaluator for FlatCost {
+        fn advance(&mut self, trial: TrialId, _c: &Config, from: u32, to: u32) -> Advance {
+            Advance {
+                accs: (from + 1..=to).map(|e| trial as f64 + e as f64 * 0.01).collect(),
+                cost_seconds: (to - from) as f64 * self.0,
+            }
+        }
+    }
+
+    /// Probe scheduler: launches `n` single-epoch trials; when trial 0's
+    /// result arrives it emits `Stop` for every odd trial *already
+    /// launched* — so any such trial still in flight must be cancelled
+    /// and must never reach `on_result`.
+    struct StopOddsProbe {
+        n: usize,
+        trials: Vec<TrialInfo>,
+        actions: Vec<TrialAction>,
+        delivered: Vec<TrialId>,
+    }
+
+    impl Scheduler for StopOddsProbe {
+        fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+            if self.trials.len() >= self.n {
+                return None;
+            }
+            let config = ctx.draw()?;
+            let trial = self.trials.len();
+            let mut info = TrialInfo::new(config.clone());
+            info.dispatched_epochs = 1;
+            self.trials.push(info);
+            Some(Job {
+                trial,
+                config,
+                rung: 0,
+                from_epoch: 0,
+                milestone: 1,
+            })
+        }
+
+        fn on_result(&mut self, outcome: &JobOutcome) {
+            self.delivered.push(outcome.trial);
+            self.trials[outcome.trial]
+                .curve
+                .extend_from_slice(&outcome.curve_segment);
+            if outcome.trial == 0 {
+                for t in (1..self.trials.len()).step_by(2) {
+                    self.actions.push(TrialAction::Stop(t));
+                }
+            }
+        }
+
+        fn drain_actions(&mut self) -> Vec<TrialAction> {
+            std::mem::take(&mut self.actions)
+        }
+
+        fn max_resources_used(&self) -> u32 {
+            1
+        }
+
+        fn best(&self) -> Option<BestTrial> {
+            None
+        }
+
+        fn trials(&self) -> &[TrialInfo] {
+            &self.trials
+        }
+
+        fn name(&self) -> String {
+            "stop-odds-probe".into()
+        }
+    }
+
+    fn space() -> SearchSpace {
+        SearchSpace::nas(1000)
+    }
+
+    #[test]
+    fn stop_actions_cancel_in_flight_jobs() {
+        // 2 workers, 8 trials: trial 0 and 1 dispatch together; when 0
+        // completes, all odd trials are stopped — trial 1 is in flight at
+        // that moment and must be cancelled without delivering a result.
+        let mut sched = StopOddsProbe {
+            n: 8,
+            trials: Vec::new(),
+            actions: Vec::new(),
+            delivered: Vec::new(),
+        };
+        let mut searcher = RandomSearcher::new(0);
+        let mut evaluator = FlatCost(1.0);
+        let mut backend = SimBackend::new(2, &mut evaluator);
+        let rules: Vec<Box<dyn StoppingRule>> = vec![Box::new(ConfigBudget(8))];
+        let sp = space();
+        let stats = run_engine(&mut sched, &mut searcher, &sp, &rules, &mut backend);
+        // with 2 workers, exactly trials {0, 1} are launched when 0's
+        // result arrives, so trial 1 is stopped while in flight
+        assert_eq!(stats.stopped_trials, 1);
+        assert_eq!(stats.cancelled_jobs, 1, "trial 1 was in flight");
+        assert!(
+            !sched.delivered.contains(&1),
+            "stopped trial 1 must never deliver: {:?}",
+            sched.delivered
+        );
+        assert_eq!(sched.delivered.len(), 7, "all other trials complete");
+        assert_eq!(stats.jobs, 7);
+        assert_eq!(stats.configs_sampled, 8);
+    }
+
+    #[test]
+    fn clock_budget_halts_and_cancels() {
+        // 1-second epochs, 27-epoch trials on 2 workers: a 10-second
+        // clock budget must halt mid-flight with cancellations.
+        let mut sched = crate::scheduler::baselines::FixedEpochBaseline::new(27);
+        let mut searcher = RandomSearcher::new(0);
+        let mut evaluator = FlatCost(1.0);
+        let mut backend = SimBackend::new(2, &mut evaluator);
+        let rules: Vec<Box<dyn StoppingRule>> =
+            vec![Box::new(ConfigBudget(64)), Box::new(ClockBudget(10.0))];
+        let sp = space();
+        let stats = run_engine(&mut sched, &mut searcher, &sp, &rules, &mut backend);
+        assert!(stats.cancelled_jobs > 0, "in-flight work must be cancelled");
+        assert_eq!(stats.jobs, 0, "27s jobs cannot complete within 10s");
+        // the run is cut AT the budget instant, not at clock 0 or 27
+        assert!(
+            (stats.runtime_seconds - 10.0).abs() < 1e-9,
+            "runtime {} must equal the clock budget",
+            stats.runtime_seconds
+        );
+        // both workers were busy with (cancelled) work the whole time
+        assert!(
+            stats.idle_worker_seconds.abs() < 1e-9,
+            "idle {} on fully-busy halted run",
+            stats.idle_worker_seconds
+        );
+    }
+
+    #[test]
+    fn epoch_budget_drains_without_waste() {
+        // Drain semantics: once 10 epochs are dispatched no new job
+        // starts, but everything already running completes — nothing
+        // is cancelled, so exactly the dispatched epochs are trained.
+        let mut sched = crate::scheduler::baselines::FixedEpochBaseline::new(1);
+        let mut searcher = RandomSearcher::new(0);
+        let mut evaluator = FlatCost(1.0);
+        let mut backend = SimBackend::new(4, &mut evaluator);
+        let rules: Vec<Box<dyn StoppingRule>> =
+            vec![Box::new(ConfigBudget(100)), Box::new(EpochBudget(10))];
+        let sp = space();
+        let stats = run_engine(&mut sched, &mut searcher, &sp, &rules, &mut backend);
+        assert_eq!(stats.total_epochs, 10, "1-epoch jobs: budget hit exactly");
+        assert_eq!(stats.cancelled_jobs, 0, "drain never cancels");
+        assert_eq!(stats.jobs, 10);
+    }
+
+    #[test]
+    fn rule_names_and_allowances() {
+        let snap = EngineSnapshot {
+            configs_sampled: 3,
+            ..Default::default()
+        };
+        let cb = ConfigBudget(5);
+        assert_eq!(cb.draw_allowance(&snap), Some(2));
+        assert!(!cb.should_halt(&snap) && !cb.should_drain(&snap));
+        assert!(cb.name().contains("config-budget"));
+        assert!(EpochBudget(0).should_drain(&snap));
+        assert!(!EpochBudget(0).should_halt(&snap), "epoch budget drains");
+        assert!(!ClockBudget(1.0).should_halt(&snap));
+        assert!(ClockBudget(0.0).should_halt(&snap));
+    }
+}

@@ -1,18 +1,40 @@
 //! Trial execution: turning scheduler jobs into per-epoch metrics.
 //!
-//! Two executors share the same scheduler-facing contract:
+//! One event-driven engine ([`engine::run_engine`]) drives every
+//! workload; the pieces compose as:
 //!
-//! * [`sim::SimExecutor`] — a discrete-event simulator with a virtual
-//!   clock and `W` asynchronous workers. Used with the tabular surrogate
-//!   benchmarks; reproduces the paper's wall-clock "Runtime" columns
-//!   deterministically (the virtual clock advances by each benchmark's
-//!   logged per-epoch cost).
-//! * [`pool::PoolExecutor`] — a real `std::thread` worker pool used with
-//!   the PJRT-backed real-training benchmark, where cost is measured
-//!   wall time.
+//! * [`engine::ExecBackend`] — where jobs physically run. Two
+//!   implementations:
+//!   * [`sim::SimBackend`] — a discrete-event simulator with a virtual
+//!     clock and `W` asynchronous workers. Used with the tabular
+//!     surrogate benchmarks; reproduces the paper's wall-clock "Runtime"
+//!     columns deterministically (the virtual clock advances by each
+//!     benchmark's logged per-epoch cost) and supports instantaneous
+//!     in-flight cancellation.
+//!   * [`pool::PoolBackend`] — a real `std::thread` worker pool used
+//!     with the PJRT-backed real-training benchmark, where cost is
+//!     measured wall time and cancellation discards results on arrival.
+//! * [`engine::StoppingRule`] — pluggable termination: the paper's
+//!   N-configuration budget, an epoch budget, and a virtual/wall clock
+//!   budget, freely composable.
+//! * [`Evaluator`] / [`pool::SharedEvaluator`] — how one job's epochs
+//!   are produced: a surrogate-table oracle query or real PJRT training.
+//!
+//! Schedulers talk to the engine only through `next_job` / `on_result` /
+//! `drain_actions` (see [`crate::scheduler::TrialAction`]); the engine
+//! translates Stop/Pause decisions into backend cancellation, which is
+//! what makes the stopping-type ASHA/PASHA variants expressible.
+//! [`sim::run_sim`] and [`pool::run_pool`] remain as convenience entry
+//! points for the classic N-configuration protocol.
 
+pub mod engine;
 pub mod pool;
 pub mod sim;
+
+pub use engine::{
+    run_engine, ClockBudget, ConfigBudget, EngineStats, EpochBudget, ExecBackend, ExecEvent,
+    StoppingRule,
+};
 
 use crate::benchmarks::Benchmark;
 use crate::config::space::Config;

@@ -1,19 +1,29 @@
-//! Real thread-pool executor for live (non-surrogate) trial evaluation.
+//! Real thread-pool backend for live (non-surrogate) trial evaluation.
 //!
-//! Mirrors the discrete-event simulator's control flow — dispatch to free
-//! workers, deliver completions back to the scheduler — but jobs execute
-//! on actual `std::thread` workers and cost is measured wall time. Used
-//! by the end-to-end example where trials are real MLP training runs
-//! executed through PJRT (the image has no tokio; the paper's 4-worker
-//! asynchronous setup maps directly onto OS threads).
+//! [`PoolBackend`] implements the same [`ExecBackend`] contract as the
+//! virtual-clock simulator, but jobs execute on actual `std::thread`
+//! workers and cost is measured wall time. Used by the end-to-end example
+//! where trials are real MLP training runs executed through PJRT (the
+//! image has no tokio; the paper's 4-worker asynchronous setup maps
+//! directly onto OS threads).
+//!
+//! Cancellation semantics differ from the simulator in one honest way:
+//! an OS thread cannot be preempted mid-`advance`, so cancelling an
+//! in-flight job marks it discarded — the worker keeps running, and when
+//! its result arrives it retires as [`ExecEvent::Cancelled`] (freeing the
+//! worker) without ever reaching the scheduler.
 
+use super::engine::{
+    run_engine, CancelOutcome, ConfigBudget, EngineStats, ExecBackend, ExecEvent, StoppingRule,
+};
 use super::{Advance, Evaluator};
 use crate::config::space::{Config, SearchSpace};
-use crate::scheduler::{Job, JobOutcome, SchedCtx, Scheduler};
+use crate::scheduler::{Job, JobOutcome, Scheduler};
 use crate::searcher::Searcher;
 use crate::TrialId;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Thread-safe evaluator: workers share one instance. Implementations
@@ -34,21 +44,169 @@ impl<E: SharedEvaluator> Evaluator for SharedAsLocal<E> {
     }
 }
 
-/// Statistics of a pool run (wall-clock, measured).
-#[derive(Clone, Debug, Default)]
-pub struct PoolStats {
-    pub runtime_seconds: f64,
-    pub total_epochs: u64,
-    pub jobs: usize,
-    pub configs_sampled: usize,
-}
+/// Statistics of a pool run (alias of the engine's stats;
+/// `runtime_seconds` is measured wall time).
+pub type PoolStats = EngineStats;
 
 enum WorkerMsg {
     Run(Job),
     Stop,
 }
 
-/// Run `scheduler` to completion on `workers` OS threads.
+/// One running job's bookkeeping: which worker holds it and since when.
+struct InFlightJob {
+    wid: usize,
+    since: f64,
+}
+
+/// The wall-clock thread-pool backend.
+pub struct PoolBackend {
+    job_txs: Vec<mpsc::Sender<WorkerMsg>>,
+    result_rx: mpsc::Receiver<(usize, JobOutcome)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+    free: Vec<usize>,
+    /// trial → the job currently running it.
+    in_flight: HashMap<TrialId, InFlightJob>,
+    /// Trials whose in-flight result must be discarded on arrival.
+    discarded: HashSet<TrialId>,
+    /// Σ worker-held seconds over retired jobs (discarded included —
+    /// the worker was occupied either way).
+    busy_seconds: f64,
+    started: Instant,
+}
+
+impl PoolBackend {
+    /// Spawn `workers` OS threads sharing `evaluator`.
+    pub fn spawn<E: SharedEvaluator + 'static>(workers: usize, evaluator: Arc<E>) -> Self {
+        assert!(workers >= 1);
+        let (result_tx, result_rx) = mpsc::channel::<(usize, JobOutcome)>();
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            job_txs.push(tx);
+            let result_tx = result_tx.clone();
+            let evaluator = Arc::clone(&evaluator);
+            handles.push(std::thread::spawn(move || {
+                while let Ok(WorkerMsg::Run(job)) = rx.recv() {
+                    let adv =
+                        evaluator.advance(job.trial, &job.config, job.from_epoch, job.milestone);
+                    let metric = adv.accs.last().copied().unwrap_or(f64::NAN);
+                    let outcome = JobOutcome {
+                        trial: job.trial,
+                        rung: job.rung,
+                        milestone: job.milestone,
+                        metric,
+                        curve_segment: adv.accs,
+                    };
+                    if result_tx.send((wid, outcome)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        PoolBackend {
+            job_txs,
+            result_rx,
+            handles,
+            workers,
+            free: (0..workers).rev().collect(),
+            in_flight: HashMap::new(),
+            discarded: HashSet::new(),
+            busy_seconds: 0.0,
+            started: Instant::now(),
+        }
+    }
+}
+
+impl ExecBackend for PoolBackend {
+    fn free_workers(&self) -> usize {
+        self.free.len()
+    }
+
+    fn dispatch(&mut self, job: Job) {
+        // Hard assert (not debug) as a backstop: the engine parks jobs
+        // for trials with a pending deferred cancellation, so this can
+        // only fire if a caller bypasses run_engine. Overwriting the
+        // in_flight entry would silently cross-wire the old job's
+        // retirement with the new job's bookkeeping — fail loudly.
+        assert!(
+            !self.in_flight.contains_key(&job.trial),
+            "trial {} re-dispatched while its cancelled job is still running \
+             (pool cancellation retires only when the worker finishes)",
+            job.trial
+        );
+        let wid = self.free.pop().expect("dispatch without a free worker");
+        self.in_flight.insert(
+            job.trial,
+            InFlightJob {
+                wid,
+                since: self.now(),
+            },
+        );
+        self.job_txs[wid]
+            .send(WorkerMsg::Run(job))
+            .expect("worker died");
+    }
+
+    fn next_event(&mut self) -> Option<ExecEvent> {
+        if self.in_flight.is_empty() {
+            return None;
+        }
+        let (wid, outcome) = self.result_rx.recv().expect("all workers died");
+        if let Some(fl) = self.in_flight.remove(&outcome.trial) {
+            debug_assert_eq!(fl.wid, wid);
+            self.busy_seconds += self.now() - fl.since;
+        }
+        self.free.push(wid);
+        if self.discarded.remove(&outcome.trial) {
+            Some(ExecEvent::Cancelled {
+                trial: outcome.trial,
+            })
+        } else {
+            Some(ExecEvent::Completed(outcome))
+        }
+    }
+
+    fn cancel(&mut self, trial: TrialId) -> CancelOutcome {
+        if self.in_flight.contains_key(&trial) && !self.discarded.contains(&trial) {
+            // The worker keeps running; the discarded result retires as
+            // ExecEvent::Cancelled when it arrives.
+            self.discarded.insert(trial);
+            CancelOutcome::Deferred
+        } else {
+            CancelOutcome::NotInFlight
+        }
+    }
+
+    fn in_flight_trials(&self) -> Vec<TrialId> {
+        self.in_flight.keys().copied().collect()
+    }
+
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn idle_worker_seconds(&self, runtime_seconds: f64) -> f64 {
+        (self.workers as f64 * runtime_seconds - self.busy_seconds).max(0.0)
+    }
+}
+
+impl Drop for PoolBackend {
+    fn drop(&mut self) {
+        for tx in &self.job_txs {
+            let _ = tx.send(WorkerMsg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `scheduler` to completion on `workers` OS threads under the
+/// classic N-configuration protocol. For extra stopping rules, build a
+/// [`PoolBackend`] and call [`run_engine`] directly.
 pub fn run_pool<E: SharedEvaluator + 'static>(
     scheduler: &mut dyn Scheduler,
     searcher: &mut dyn Searcher,
@@ -57,93 +215,9 @@ pub fn run_pool<E: SharedEvaluator + 'static>(
     workers: usize,
     evaluator: Arc<E>,
 ) -> PoolStats {
-    assert!(workers >= 1);
-    let started = Instant::now();
-    let mut stats = PoolStats::default();
-    let (result_tx, result_rx) = mpsc::channel::<(usize, JobOutcome, f64)>();
-
-    // Spawn workers, each with its own job channel.
-    let mut job_txs = Vec::with_capacity(workers);
-    let mut handles = Vec::with_capacity(workers);
-    for wid in 0..workers {
-        let (tx, rx) = mpsc::channel::<WorkerMsg>();
-        job_txs.push(tx);
-        let result_tx = result_tx.clone();
-        let evaluator = Arc::clone(&evaluator);
-        handles.push(std::thread::spawn(move || {
-            while let Ok(WorkerMsg::Run(job)) = rx.recv() {
-                let t0 = Instant::now();
-                let adv = evaluator.advance(job.trial, &job.config, job.from_epoch, job.milestone);
-                let cost = t0.elapsed().as_secs_f64();
-                let metric = adv.accs.last().copied().unwrap_or(f64::NAN);
-                let outcome = JobOutcome {
-                    trial: job.trial,
-                    rung: job.rung,
-                    milestone: job.milestone,
-                    metric,
-                    curve_segment: adv.accs,
-                };
-                if result_tx.send((wid, outcome, cost)).is_err() {
-                    break;
-                }
-            }
-        }));
-    }
-    drop(result_tx);
-
-    let mut free: Vec<usize> = (0..workers).collect();
-    let mut in_flight = 0usize;
-    let mut configs_sampled = 0usize;
-    // protected scheduler access is unnecessary: only this thread touches it
-    let _ = Mutex::new(()); // (kept to document the single-owner invariant)
-
-    loop {
-        // Dispatch while workers are free and the scheduler has work.
-        while let Some(&wid) = free.last() {
-            let mut ctx = SchedCtx {
-                space,
-                searcher,
-                configs_sampled,
-                config_budget,
-            };
-            let job = scheduler.next_job(&mut ctx);
-            configs_sampled = ctx.configs_sampled;
-            match job {
-                Some(job) => {
-                    stats.total_epochs += (job.milestone - job.from_epoch) as u64;
-                    stats.jobs += 1;
-                    free.pop();
-                    in_flight += 1;
-                    job_txs[wid]
-                        .send(WorkerMsg::Run(job))
-                        .expect("worker died");
-                }
-                None => break,
-            }
-        }
-        if in_flight == 0 {
-            break; // nothing running and nothing to run: done
-        }
-        // Block for the next completion.
-        let (wid, outcome, _cost) = result_rx.recv().expect("all workers died");
-        in_flight -= 1;
-        free.push(wid);
-        if let Some(info) = scheduler.trials().get(outcome.trial) {
-            let config = info.config.clone();
-            searcher.on_report(&config, outcome.milestone, outcome.metric);
-        }
-        scheduler.on_result(&outcome);
-    }
-
-    for tx in &job_txs {
-        let _ = tx.send(WorkerMsg::Stop);
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    stats.configs_sampled = configs_sampled;
-    stats.runtime_seconds = started.elapsed().as_secs_f64();
-    stats
+    let mut backend = PoolBackend::spawn(workers, evaluator);
+    let rules: Vec<Box<dyn StoppingRule>> = vec![Box::new(ConfigBudget(config_budget))];
+    run_engine(scheduler, searcher, space, &rules, &mut backend)
 }
 
 #[cfg(test)]
@@ -153,6 +227,7 @@ mod tests {
     use crate::benchmarks::Benchmark;
     use crate::scheduler::asha::AshaBuilder;
     use crate::scheduler::pasha::PashaBuilder;
+    use crate::scheduler::stopping::StopAshaBuilder;
     use crate::scheduler::SchedulerBuilder;
     use crate::searcher::random::RandomSearcher;
 
@@ -237,8 +312,8 @@ mod tests {
         let bench = NasBench201::cifar10();
         let space = bench.space().clone();
         let run_with = |workers: usize| {
-            let mut scheduler = crate::scheduler::baselines::FixedEpochBuilder { epochs: 1 }
-                .build(27, 0);
+            let mut scheduler =
+                crate::scheduler::baselines::FixedEpochBuilder { epochs: 1 }.build(27, 0);
             let mut searcher = RandomSearcher::new(1);
             let eval = Arc::new(OracleEval {
                 bench: NasBench201::cifar10(),
@@ -251,5 +326,149 @@ mod tests {
         let t1 = run_with(1);
         let t8 = run_with(8);
         assert!(t8 < t1 * 0.7, "8 workers {t8}s vs 1 worker {t1}s");
+    }
+
+    /// Pausing a trial whose job is mid-flight on a worker must be safe:
+    /// the engine gets `CancelOutcome::Deferred`, parks the resume job
+    /// until the discarded result retires, and the trial's result is
+    /// delivered exactly once — from the resumed job.
+    #[test]
+    fn pause_of_in_flight_trial_parks_resume_until_retirement() {
+        use crate::scheduler::{BestTrial, SchedCtx, TrialAction, TrialInfo};
+
+        struct PauseProbe {
+            trials: Vec<TrialInfo>,
+            actions: Vec<TrialAction>,
+            resume: Vec<TrialId>,
+            delivered: Vec<TrialId>,
+            launched: usize,
+            paused_once: bool,
+        }
+
+        impl Scheduler for PauseProbe {
+            fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+                if let Some(t) = self.resume.pop() {
+                    let from = self.trials[t].dispatched_epochs;
+                    self.trials[t].dispatched_epochs = 1;
+                    return Some(Job {
+                        trial: t,
+                        config: self.trials[t].config.clone(),
+                        rung: 0,
+                        from_epoch: from,
+                        milestone: 1,
+                    });
+                }
+                if self.launched >= 2 {
+                    return None;
+                }
+                let config = ctx.draw()?;
+                let t = self.trials.len();
+                let mut info = TrialInfo::new(config.clone());
+                info.dispatched_epochs = 1;
+                self.trials.push(info);
+                self.launched += 1;
+                Some(Job {
+                    trial: t,
+                    config,
+                    rung: 0,
+                    from_epoch: 0,
+                    milestone: 1,
+                })
+            }
+
+            fn on_result(&mut self, outcome: &JobOutcome) {
+                self.delivered.push(outcome.trial);
+                self.trials[outcome.trial]
+                    .curve
+                    .extend_from_slice(&outcome.curve_segment);
+                if outcome.trial == 0 && !self.paused_once {
+                    self.paused_once = true;
+                    self.actions.push(TrialAction::Pause(1));
+                    self.resume.push(1);
+                }
+            }
+
+            fn drain_actions(&mut self) -> Vec<TrialAction> {
+                std::mem::take(&mut self.actions)
+            }
+
+            fn on_cancelled(&mut self, trial: TrialId) {
+                let t = &mut self.trials[trial];
+                t.dispatched_epochs = t.trained_epochs();
+            }
+
+            fn max_resources_used(&self) -> u32 {
+                1
+            }
+
+            fn best(&self) -> Option<BestTrial> {
+                None
+            }
+
+            fn trials(&self) -> &[TrialInfo] {
+                &self.trials
+            }
+
+            fn name(&self) -> String {
+                "pause-probe".into()
+            }
+        }
+
+        /// Trial 0 finishes fast; trial 1 is slow, so it is mid-flight
+        /// when trial 0's result pauses it.
+        struct SlowSecond;
+        impl SharedEvaluator for SlowSecond {
+            fn advance(&self, trial: TrialId, _c: &Config, from: u32, to: u32) -> Advance {
+                let ms = if trial == 1 { 60 } else { 1 };
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Advance {
+                    accs: (from + 1..=to).map(|e| trial as f64 + e as f64).collect(),
+                    cost_seconds: 0.0,
+                }
+            }
+        }
+
+        let space = crate::config::space::SearchSpace::nas(100);
+        let mut sched = PauseProbe {
+            trials: Vec::new(),
+            actions: Vec::new(),
+            resume: Vec::new(),
+            delivered: Vec::new(),
+            launched: 0,
+            paused_once: false,
+        };
+        let mut searcher = RandomSearcher::new(0);
+        let mut backend = PoolBackend::spawn(2, Arc::new(SlowSecond));
+        let rules: Vec<Box<dyn StoppingRule>> = vec![Box::new(ConfigBudget(2))];
+        let stats = run_engine(&mut sched, &mut searcher, &space, &rules, &mut backend);
+        assert_eq!(stats.cancelled_jobs, 1, "trial 1's first job was cancelled");
+        assert_eq!(stats.paused_trials, 1);
+        assert_eq!(
+            sched.delivered,
+            vec![0, 1],
+            "trial 1 delivers exactly once, from the resumed job"
+        );
+        assert_eq!(sched.trials[1].curve.len(), 1, "no leaked segment");
+    }
+
+    #[test]
+    fn pool_runs_stopping_scheduler() {
+        // Stopping-type ASHA through the pool: stops are pure scheduler
+        // decisions here (the stopped trial's own job just completed), so
+        // the run must drain cleanly with every curve consistent.
+        let bench = NasBench201::cifar10();
+        let space = bench.space().clone();
+        let mut scheduler = StopAshaBuilder::default().build(27, 0);
+        let mut searcher = RandomSearcher::new(5);
+        let eval = Arc::new(OracleEval {
+            bench: NasBench201::cifar10(),
+            sleep_us: 20,
+        });
+        let stats = run_pool(scheduler.as_mut(), &mut searcher, &space, 48, 4, eval);
+        assert_eq!(stats.configs_sampled, 48);
+        assert!(stats.stopped_trials > 0);
+        for t in scheduler.trials() {
+            assert_eq!(t.curve.len() as u32, t.trained_epochs());
+        }
     }
 }

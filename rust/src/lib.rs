@@ -18,15 +18,21 @@
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
 //! (`xla` crate) and executes them from Rust; Python is never on the
-//! request path.
+//! request path. The PJRT surface ([`runtime`], [`e2e`], the
+//! `searcher::bo_pjrt` variant) is gated behind the `pjrt` cargo feature
+//! so the default build is dependency-free and works fully offline; the
+//! surrogate benchmarks, schedulers, engine, and report pipeline never
+//! touch it.
 
 pub mod benchmarks;
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod e2e;
 pub mod executor;
 pub mod metrics;
 pub mod ranking;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
 pub mod searcher;

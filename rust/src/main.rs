@@ -4,9 +4,11 @@
 //!
 //! ```text
 //! pasha run    --bench <name> --scheduler <name> [--budget N] [--seed S]
+//!              [--epoch-budget E] [--time-budget SECONDS]
 //! pasha table  <id>  [--scale paper|smoke] [--out results/]
 //! pasha figure <1..5> [--out results/]
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
+//! pasha bench-json [--out FILE]                          # engine perf record
 //! pasha e2e    [--budget N] [--hidden H]                # real PJRT training
 //! pasha artifacts-check                                  # PJRT smoke test
 //! ```
@@ -21,8 +23,9 @@ use pasha::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
 use pasha::scheduler::hyperband::HyperbandBuilder;
 use pasha::scheduler::pasha::PashaBuilder;
 use pasha::scheduler::sh::SyncShBuilder;
+use pasha::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
 use pasha::scheduler::SchedulerBuilder;
-use pasha::tuner::{SearcherKind, Tuner, TunerSpec};
+use pasha::tuner::{SearcherKind, StopSpec, Tuner, TunerSpec};
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -39,6 +42,7 @@ fn main() {
         "table" => cmd_table(rest.first().map(|s| s.as_str()), &flags),
         "figure" => cmd_figure(rest.first().map(|s| s.as_str()), &flags),
         "report" => cmd_report(&flags),
+        "bench-json" => cmd_bench_json(&flags),
         "e2e" => cmd_e2e(&flags),
         "artifacts-check" => cmd_artifacts_check(),
         "help" | "--help" | "-h" => {
@@ -63,11 +67,13 @@ fn usage() {
 
 USAGE:
   pasha run    --bench <nas-cifar10|nas-cifar100|nas-imagenet16|pd1-wmt|pd1-imagenet|lcbench-<name>>
-               --scheduler <asha|pasha|sh|hyperband|1-epoch|random> [--budget N] [--seed S]
-               [--eta E] [--searcher random|bo] [--workers W]
-  pasha table  <1|2|3|4|5|6|8|9|10|11|12|13|14|15|ablation> [--scale paper|smoke] [--out DIR]
+               --scheduler <asha|pasha|asha-stop|pasha-stop|sh|hyperband|1-epoch|random>
+               [--budget N] [--seed S] [--eta E] [--searcher random|bo] [--workers W]
+               [--epoch-budget E] [--time-budget SECONDS]
+  pasha table  <1|2|3|4|5|6|8|9|10|11|12|13|14|15|ablation|stopping> [--scale paper|smoke] [--out DIR]
   pasha figure <1|2|3|4|5> [--out DIR]
   pasha report [--scale paper|smoke] [--out DIR]
+  pasha bench-json [--out FILE]            # serial-vs-parallel grid + sim throughput
   pasha e2e    [--budget N] [--hidden 64|128|256] [--workers W]
   pasha artifacts-check"
     );
@@ -144,6 +150,12 @@ fn make_scheduler(
             eta,
             ranking: Default::default(),
         }),
+        "asha-stop" => Box::new(StopAshaBuilder { r_min: 1, eta }),
+        "pasha-stop" => Box::new(StopPashaBuilder {
+            r_min: 1,
+            eta,
+            ranking: Default::default(),
+        }),
         "sh" => Box::new(SyncShBuilder {
             r_min: 1,
             eta,
@@ -175,10 +187,24 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
     };
     let bench = make_bench(&bench_name)?;
     let builder = make_scheduler(&sched_name, eta, budget)?;
+    let mut extra_stop = Vec::new();
+    if let Some(v) = flags.get("epoch-budget") {
+        let e: u64 = v
+            .parse()
+            .map_err(|_| format!("invalid --epoch-budget '{v}' (expected an integer)"))?;
+        extra_stop.push(StopSpec::EpochBudget(e));
+    }
+    if let Some(v) = flags.get("time-budget") {
+        let s: f64 = v
+            .parse()
+            .map_err(|_| format!("invalid --time-budget '{v}' (expected seconds)"))?;
+        extra_stop.push(StopSpec::ClockBudget(s));
+    }
     let spec = TunerSpec {
         workers,
         config_budget: budget,
         searcher,
+        extra_stop,
     };
     let t0 = std::time::Instant::now();
     let r = Tuner::run(bench.as_ref(), builder.as_ref(), &spec, seed, 0);
@@ -187,6 +213,12 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
     println!("configs sampled  : {}", r.configs_sampled);
     println!("jobs executed    : {}", r.jobs);
     println!("epochs trained   : {}", r.total_epochs);
+    if r.stopped_trials > 0 || r.cancelled_jobs > 0 {
+        println!(
+            "stopped trials   : {} ({} jobs cancelled in flight)",
+            r.stopped_trials, r.cancelled_jobs
+        );
+    }
     println!("max resources    : {} epochs", r.max_resources);
     println!(
         "tuning runtime   : {:.2}h (simulated)",
@@ -243,6 +275,7 @@ fn cmd_table(id: Option<&str>, flags: &HashMap<String, String>) -> Result<(), St
         "14" => experiments::table14(&sc),
         "15" => experiments::table15(&sc),
         "ablation" => vec![experiments::ablation_schedulers(&sc)],
+        "stopping" => vec![experiments::ablation_stopping(&sc)],
         other => return Err(format!("unknown table '{other}'")),
     };
     write_tables(&tables, &dir, &format!("table{id}"))
@@ -308,6 +341,89 @@ fn cmd_report(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Record the engine's performance trajectory: serial-vs-parallel
+/// experiment-grid wall time (with a result-identity check) and raw
+/// simulator throughput, written as `BENCH_engine.json`.
+fn cmd_bench_json(flags: &HashMap<String, String>) -> Result<(), String> {
+    use pasha::util::json::Json;
+    use pasha::util::parallel::available_threads;
+    use std::time::Instant;
+
+    let out_path = PathBuf::from(
+        flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_engine.json".to_string()),
+    );
+    let builder = PashaBuilder::default();
+    let spec = TunerSpec {
+        config_budget: 64,
+        ..Default::default()
+    };
+    let sched_seeds: Vec<u64> = (0..4).collect();
+    let bench_seeds: Vec<u64> = (0..3).collect();
+    let runs = sched_seeds.len() * bench_seeds.len();
+    let threads = available_threads();
+
+    // Each timed pass gets a fresh benchmark instance: NASBench201 caches
+    // fitted curves internally, so reusing one instance would hand the
+    // second pass a hot cache and skew the comparison.
+    let bench_serial = NasBench201::cifar100();
+    let t0 = Instant::now();
+    let serial =
+        Tuner::run_repeated_serial(&bench_serial, &builder, &spec, &sched_seeds, &bench_seeds);
+    let serial_s = t0.elapsed().as_secs_f64();
+    let bench_parallel = NasBench201::cifar100();
+    let t1 = Instant::now();
+    let parallel =
+        Tuner::run_repeated(&bench_parallel, &builder, &spec, &sched_seeds, &bench_seeds);
+    let parallel_s = t1.elapsed().as_secs_f64();
+    let identical = serial == parallel;
+
+    // Raw simulator throughput: jobs pushed through the event loop / sec,
+    // again on a cold benchmark instance.
+    let bench_sim = NasBench201::cifar100();
+    let t2 = Instant::now();
+    let mut sim_jobs = 0usize;
+    for seed in 0..4u64 {
+        let r = Tuner::run(&bench_sim, &AshaBuilder::default(), &spec, seed, 0);
+        sim_jobs += r.jobs;
+    }
+    let sim_s = t2.elapsed().as_secs_f64();
+
+    let mut grid = Json::obj();
+    grid.set("runs", runs)
+        .set("threads", threads)
+        .set("serial_seconds", serial_s)
+        .set("parallel_seconds", parallel_s)
+        .set("speedup", serial_s / parallel_s.max(1e-9))
+        .set("identical_results", identical);
+    let mut sim = Json::obj();
+    sim.set("jobs", sim_jobs)
+        .set("seconds", sim_s)
+        .set("jobs_per_sec", sim_jobs as f64 / sim_s.max(1e-9));
+    let mut root = Json::obj();
+    root.set("benchmark", "engine")
+        .set("grid", grid)
+        .set("sim_throughput", sim);
+    std::fs::write(&out_path, root.to_string_pretty()).map_err(|e| e.to_string())?;
+    println!(
+        "grid: {runs} runs — serial {serial_s:.2}s vs parallel {parallel_s:.2}s \
+         ({:.1}x on {threads} threads, identical={identical})",
+        serial_s / parallel_s.max(1e-9)
+    );
+    println!(
+        "sim throughput: {sim_jobs} jobs in {sim_s:.2}s ({:.0} jobs/sec)",
+        sim_jobs as f64 / sim_s.max(1e-9)
+    );
+    println!("wrote {}", out_path.display());
+    if !identical {
+        return Err("parallel grid diverged from serial reference".into());
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_e2e(flags: &HashMap<String, String>) -> Result<(), String> {
     let budget: usize = flag(flags, "budget", 24);
     let hidden: usize = flag(flags, "hidden", 64);
@@ -315,6 +431,12 @@ fn cmd_e2e(flags: &HashMap<String, String>) -> Result<(), String> {
     pasha::e2e::run_e2e(budget, hidden, workers).map_err(|e| e.to_string())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_e2e(_flags: &HashMap<String, String>) -> Result<(), String> {
+    Err("built without the `pjrt` feature — rebuild with `--features pjrt`".into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts_check() -> Result<(), String> {
     use pasha::runtime::artifact::{artifacts_available, artifacts_dir, Engine};
     println!("artifacts dir: {}", artifacts_dir().display());
@@ -335,4 +457,9 @@ fn cmd_artifacts_check() -> Result<(), String> {
         println!("compiled {name}: OK");
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts_check() -> Result<(), String> {
+    Err("built without the `pjrt` feature — rebuild with `--features pjrt`".into())
 }

@@ -83,6 +83,8 @@ mod tests {
             configs_sampled: 0,
             total_epochs: 0,
             jobs: 0,
+            cancelled_jobs: 0,
+            stopped_trials: 0,
             eps_history: vec![],
         }
     }

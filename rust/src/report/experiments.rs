@@ -2,6 +2,13 @@
 //! same approaches, same datasets, same columns — against the surrogate
 //! substrates, at either paper scale (N=256, full seed grids) or a
 //! reduced smoke scale for quick runs.
+//!
+//! Table generation fans the whole `approach × sched_seed × bench_seed`
+//! grid across the machine's cores: every cell is an independent
+//! deterministic simulation, results are regrouped by index, and the
+//! emitted tables are identical to a serial run (the repetitions used to
+//! run strictly serially — 15 at a time at paper scale — leaving every
+//! other core idle).
 
 use crate::benchmarks::lcbench::LcBench;
 use crate::benchmarks::nasbench201::{NasBench201, Nb201Dataset};
@@ -14,6 +21,7 @@ use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
 use crate::scheduler::pasha::PashaBuilder;
 use crate::scheduler::SchedulerBuilder;
 use crate::tuner::{SearcherKind, Tuner, TunerSpec};
+use crate::util::parallel::{available_threads, par_map};
 use crate::util::table::Table;
 
 /// Repetition/budget scale of an experiment run.
@@ -105,6 +113,11 @@ pub fn standard_approaches(eta: u32) -> Vec<Approach> {
 
 /// Run a set of approaches on one benchmark and produce a paper-style
 /// table. The first approach is the speedup reference (ASHA convention).
+///
+/// The full `approach × sched_seed × bench_seed` grid runs as one flat
+/// work list over a scoped thread pool — maximum core utilization
+/// without nested fan-out — and is regrouped by index afterwards, so the
+/// table is byte-identical to a serial run.
 pub fn compare(bench: &dyn Benchmark, approaches: &[Approach], scale: &Scale, title: &str) -> Table {
     let mut table = Table::new(
         title,
@@ -116,22 +129,34 @@ pub fn compare(bench: &dyn Benchmark, approaches: &[Approach], scale: &Scale, ti
             "Max resources",
         ],
     );
-    let mut rows: Vec<Row> = Vec::new();
-    for a in approaches {
-        let spec = TunerSpec {
+    let bench_seeds = scale.bench_seeds(&bench.name());
+    let reps = scale.sched_seeds.len() * bench_seeds.len();
+    let specs: Vec<TunerSpec> = approaches
+        .iter()
+        .map(|a| TunerSpec {
             workers: scale.workers,
             config_budget: scale.config_budget,
             searcher: a.searcher.clone(),
-        };
-        let results = Tuner::run_repeated(
-            bench,
-            a.builder.as_ref(),
-            &spec,
-            &scale.sched_seeds,
-            scale.bench_seeds(&bench.name()),
-        );
-        rows.push(Row::from_results(&a.name(), &results));
+            extra_stop: Vec::new(),
+        })
+        .collect();
+    // Flat grid, contiguous per approach so regrouping is a chunk.
+    let mut cells: Vec<(usize, u64, u64)> = Vec::with_capacity(approaches.len() * reps);
+    for (ai, _) in approaches.iter().enumerate() {
+        for &ss in &scale.sched_seeds {
+            for &bs in bench_seeds {
+                cells.push((ai, ss, bs));
+            }
+        }
     }
+    let results = par_map(&cells, available_threads(), |_, &(ai, ss, bs)| {
+        Tuner::run(bench, approaches[ai].builder.as_ref(), &specs[ai], ss, bs)
+    });
+    let rows: Vec<Row> = results
+        .chunks(reps)
+        .zip(approaches)
+        .map(|(chunk, a)| Row::from_results(&a.name(), chunk))
+        .collect();
     let reference = rows[0].runtime.mean();
     for row in &rows {
         table.row(&row.cells(reference));
@@ -370,6 +395,7 @@ pub fn table13(scale: &Scale, max_datasets: usize) -> Table {
             workers: scale.workers,
             config_budget: scale.config_budget,
             searcher: SearcherKind::Random,
+            extra_stop: Vec::new(),
         };
         let asha = Tuner::run_repeated(
             &b,
@@ -443,6 +469,25 @@ pub fn table15(scale: &Scale) -> Vec<Table> {
             compare(b, &approaches, scale, &format!("Table 15 — {}", b.name()))
         })
         .collect()
+}
+
+/// Promotion-type vs stopping-type ASHA/PASHA (Li et al. 2020 §3.1's
+/// two rung-decision modes) on CIFAR-100 — the scenario family the
+/// engine's decision layer unlocked.
+pub fn ablation_stopping(scale: &Scale) -> Table {
+    let b = NasBench201::cifar100();
+    let approaches = vec![
+        Approach::new(Box::new(AshaBuilder::default())),
+        Approach::new(Box::new(PashaBuilder::default())),
+        Approach::new(Box::new(crate::scheduler::stopping::StopAshaBuilder::default())),
+        Approach::new(Box::new(crate::scheduler::stopping::StopPashaBuilder::default())),
+    ];
+    compare(
+        &b,
+        &approaches,
+        scale,
+        "Ablation — promotion vs stopping variants on NASBench201/cifar100",
+    )
 }
 
 /// Ablation (DESIGN.md): PASHA vs synchronous SH and Hyperband.
@@ -521,6 +566,15 @@ mod tests {
         assert!(names.iter().any(|n| n.contains("RBO")));
         assert!(names.iter().any(|n| n.contains("ARRR")));
         assert!(names.len() >= 19);
+    }
+
+    #[test]
+    fn stopping_ablation_rows() {
+        let t = ablation_stopping(&tiny());
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows[0][0], "ASHA");
+        assert_eq!(t.rows[2][0], "ASHA-stop");
+        assert_eq!(t.rows[3][0], "PASHA-stop");
     }
 
     #[test]

@@ -40,6 +40,10 @@ impl Scheduler for Asha {
         self.core.record(outcome);
     }
 
+    fn on_cancelled(&mut self, trial: usize) {
+        self.core.rewind_dispatch(trial);
+    }
+
     fn max_resources_used(&self) -> u32 {
         self.core.max_resources_used
     }
@@ -91,12 +95,7 @@ mod tests {
     fn drive(n_configs: usize, metric: impl Fn(usize, u32) -> f64) -> Asha {
         let space = SearchSpace::nas(100_000);
         let mut searcher = RandomSearcher::new(7);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: n_configs,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, n_configs);
         let mut asha = Asha::new(RungLevels::new(1, 3, 27));
         while let Some(job) = asha.next_job(&mut ctx) {
             let m = metric(job.trial, job.milestone);

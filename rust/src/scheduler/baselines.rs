@@ -55,6 +55,11 @@ impl Scheduler for FixedEpochBaseline {
         self.max_used = self.max_used.max(outcome.milestone);
     }
 
+    fn on_cancelled(&mut self, trial: usize) {
+        let t = &mut self.trials[trial];
+        t.dispatched_epochs = t.trained_epochs();
+    }
+
     fn max_resources_used(&self) -> u32 {
         self.max_used
     }
@@ -185,12 +190,7 @@ mod tests {
     fn run_fixed(epochs: u32, n: usize) -> FixedEpochBaseline {
         let space = SearchSpace::nas(1000);
         let mut searcher = RandomSearcher::new(1);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: n,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, n);
         let mut b = FixedEpochBaseline::new(epochs);
         while let Some(j) = b.next_job(&mut ctx) {
             assert_eq!(j.milestone, epochs);
@@ -232,12 +232,7 @@ mod tests {
     fn random_baseline_zero_resources() {
         let space = SearchSpace::nas(1000);
         let mut searcher = RandomSearcher::new(2);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 5,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 5);
         let mut b = RandomBaseline::new();
         let mut jobs = 0;
         while let Some(j) = b.next_job(&mut ctx) {

@@ -38,20 +38,16 @@ impl ShCore {
         for k in (0..cap).rev() {
             if let Some(trial) = self.rungs[k].promotable(self.levels.eta) {
                 self.rungs[k].mark_promoted(trial);
-                let from = self.trials[trial].dispatched_epochs;
-                let milestone = self.levels.level(k + 1);
-                debug_assert!(milestone > from, "promotion must add resources");
-                self.trials[trial].dispatched_epochs = milestone;
-                return Some(Job {
-                    trial,
-                    config: self.trials[trial].config.clone(),
-                    rung: k + 1,
-                    from_epoch: from,
-                    milestone,
-                });
+                return Some(self.continue_job(trial, k + 1));
             }
         }
         // No promotable candidate: grow the bottom rung.
+        self.start_new(ctx)
+    }
+
+    /// Start a fresh configuration at the bottom rung (the shared "grow
+    /// the base" path of both the promotion and stopping variants).
+    pub fn start_new(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
         let config = ctx.draw()?;
         let trial = self.trials.len();
         let mut info = TrialInfo::new(config.clone());
@@ -65,6 +61,30 @@ impl ShCore {
             from_epoch: 0,
             milestone,
         })
+    }
+
+    /// Continue `trial` from its dispatched frontier up to rung `k`'s
+    /// milestone — promotions (promotion-type) and continuations
+    /// (stopping-type) are the same job shape.
+    pub fn continue_job(&mut self, trial: TrialId, k: usize) -> Job {
+        let from = self.trials[trial].dispatched_epochs;
+        let milestone = self.levels.level(k);
+        debug_assert!(milestone > from, "continuation must add resources");
+        self.trials[trial].dispatched_epochs = milestone;
+        Job {
+            trial,
+            config: self.trials[trial].config.clone(),
+            rung: k,
+            from_epoch: from,
+            milestone,
+        }
+    }
+
+    /// Rewind a trial's dispatch frontier after the engine cancelled its
+    /// in-flight job (the job's epochs were never trained).
+    pub fn rewind_dispatch(&mut self, trial: TrialId) {
+        let t = &mut self.trials[trial];
+        t.dispatched_epochs = t.trained_epochs();
     }
 
     /// Record a completed job into trial + rung state.
@@ -82,8 +102,15 @@ impl ShCore {
     }
 
     /// Best trial by latest observed metric (the configuration the paper
-    /// retrains in phase 2). Falls back to the first trial when nothing
-    /// has reported yet.
+    /// retrains in phase 2).
+    ///
+    /// Returns `None` until at least one result has been delivered —
+    /// trials that are merely dispatched are not selectable (previously
+    /// this returned trial 0 with a `NaN` metric, which callers could
+    /// mistake for a real selection). If results exist but every metric is
+    /// non-finite (all trials diverged), the first *reported* trial is
+    /// returned with `metric: f64::NAN` — the NaN metric is the explicit
+    /// "selection is arbitrary" flag.
     pub fn best(&self) -> Option<BestTrial> {
         let mut best: Option<BestTrial> = None;
         for (id, t) in self.trials.iter().enumerate() {
@@ -107,18 +134,45 @@ impl ShCore {
             }
         }
         best.or_else(|| {
-            self.trials.first().map(|t| BestTrial {
-                trial: 0,
-                config: t.config.clone(),
-                metric: f64::NAN,
-                at_epoch: 0,
-            })
+            self.trials
+                .iter()
+                .enumerate()
+                .find(|(_, t)| t.trained_epochs() > 0)
+                .map(|(id, t)| BestTrial {
+                    trial: id,
+                    config: t.config.clone(),
+                    metric: f64::NAN,
+                    at_epoch: t.trained_epochs(),
+                })
         })
     }
 
     /// Descending ranking of rung `k`.
     pub fn ranking(&self, k: usize) -> Vec<(TrialId, f64)> {
         self.rungs[k].sorted_desc()
+    }
+
+    /// 0-based position of `trial` in rung `k`'s descending ranking, or
+    /// `None` if the trial has not reported in that rung. The
+    /// stopping-type continue/stop test is `rank < max(1, len/η)`.
+    ///
+    /// Runs on every delivered result of a stopping-type run, so — per
+    /// the same perf note as [`Rung::promotable`] — it counts the
+    /// entries ordered before the trial with one linear scan instead of
+    /// cloning and sorting the rung.
+    pub fn rank_in_rung(&self, k: usize, trial: TrialId) -> Option<usize> {
+        let rung = &self.rungs[k];
+        let target = rung.metric_of(trial)?;
+        let before = rung
+            .entries
+            .iter()
+            .filter(|&&(t, m)| {
+                t != trial
+                    && crate::util::stats::desc_cmp(m, target).then(t.cmp(&trial))
+                        == std::cmp::Ordering::Less
+            })
+            .count();
+        Some(before)
     }
 
     /// Ranking of rung `k` restricted to the trials present in rung `top`
@@ -177,12 +231,7 @@ mod tests {
     #[test]
     fn first_jobs_fill_bottom_rung() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 10,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 10);
         let mut core = ShCore::new(RungLevels::new(1, 3, 27));
         for i in 0..4 {
             let j = core.next_job_capped(&mut ctx, 3).unwrap();
@@ -197,12 +246,7 @@ mod tests {
     #[test]
     fn promotion_preferred_over_new_config() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 100,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 100);
         let mut core = ShCore::new(RungLevels::new(1, 3, 27));
         // fill bottom rung with 3 results: quota 1 promotable
         for i in 0..3 {
@@ -219,12 +263,7 @@ mod tests {
     #[test]
     fn cap_limits_promotion_target() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 100,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 100);
         let mut core = ShCore::new(RungLevels::new(1, 3, 27)); // levels 1,3,9,27
         // create 3 results at rung 1 (by direct recording) so rung-1→2
         // promotion would be available without a cap
@@ -245,12 +284,7 @@ mod tests {
     #[test]
     fn budget_exhaustion_returns_none() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 2,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 2);
         let mut core = ShCore::new(RungLevels::new(1, 3, 9));
         assert!(core.next_job_capped(&mut ctx, 2).is_some());
         assert!(core.next_job_capped(&mut ctx, 2).is_some());
@@ -260,12 +294,7 @@ mod tests {
     #[test]
     fn record_tracks_curve_and_max_resources() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 10,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 10);
         let mut core = ShCore::new(RungLevels::new(1, 3, 27));
         let j = core.next_job_capped(&mut ctx, 3).unwrap();
         core.record(&outcome(j.trial, 0, 1, 0, 50.0));
@@ -281,12 +310,7 @@ mod tests {
     #[test]
     fn best_is_argmax_latest_metric() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 10,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 10);
         let mut core = ShCore::new(RungLevels::new(1, 3, 9));
         for m in [30.0, 70.0, 50.0] {
             let j = core.next_job_capped(&mut ctx, 2).unwrap();
@@ -300,12 +324,7 @@ mod tests {
     #[test]
     fn ranking_restricted_projects_top_members() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 20,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 20);
         let mut core = ShCore::new(RungLevels::new(1, 3, 9));
         // interleave: promotions may fire as soon as quota allows, so
         // always record with the job's actual rung/milestone
@@ -339,14 +358,25 @@ mod tests {
     }
 
     #[test]
+    fn rank_in_rung_matches_sorted_position() {
+        // Ties included: the linear-scan rank must agree with the full
+        // sort (metric desc, trial id asc) for every member.
+        let mut core = ShCore::new(RungLevels::new(1, 3, 9));
+        for (t, m) in [(0, 50.0), (1, 70.0), (2, 50.0), (3, 90.0), (4, 70.0)] {
+            core.rungs[0].record(t, m);
+        }
+        let sorted = core.ranking(0);
+        for (pos, &(t, _)) in sorted.iter().enumerate() {
+            assert_eq!(core.rank_in_rung(0, t), Some(pos), "trial {t}");
+        }
+        assert_eq!(core.rank_in_rung(0, 99), None);
+        assert_eq!(core.rank_in_rung(1, 0), None, "not reported in rung 1");
+    }
+
+    #[test]
     fn top_rung_curves_includes_in_flight() {
         let (space, mut searcher) = ctx_parts();
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 20,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 20);
         let mut core = ShCore::new(RungLevels::new(1, 3, 27));
         for m in [10.0, 60.0, 30.0] {
             let j = core.next_job_capped(&mut ctx, 2).unwrap();

@@ -157,12 +157,7 @@ mod tests {
     fn drive(budget: usize) -> (Hyperband, usize) {
         let space = SearchSpace::nas(1000);
         let mut searcher = RandomSearcher::new(4);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: budget,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, budget);
         let mut hb = Hyperband::new(RungLevels::new(1, 3, 27));
         let mut jobs = 0;
         loop {

@@ -1,12 +1,25 @@
 //! Multi-fidelity schedulers: the resource-allocation half of the tuner.
 //!
 //! * [`pasha`] — the paper's contribution: ASHA with progressive growth of
-//!   the maximum resource level, driven by ranking stability.
+//!   the maximum resource level, driven by ranking stability
+//!   (promotion-type).
 //! * [`asha`] — asynchronous successive halving (Li et al. 2020), the main
-//!   baseline.
+//!   baseline (promotion-type).
+//! * [`stopping`] — the stopping-type variants of both: trials keep
+//!   training until a rung completion shows they are outside the top
+//!   `1/η`, expressed through the engine's [`TrialAction`] decision
+//!   layer (`Stop` terminates, `Pause` suspends until PASHA's cap grows).
 //! * [`sh`] / [`hyperband`] — classical synchronous SH and Hyperband,
 //!   context baselines.
 //! * [`baselines`] — the paper's k-epoch and random baselines.
+//!
+//! All of them speak the same protocol to the execution engine
+//! ([`crate::executor::engine`]): `next_job` fills free workers,
+//! `on_result` absorbs completions, and `drain_actions` surfaces
+//! stop/pause decisions for the engine to enact (cancelling in-flight
+//! backend work where needed). How long a run goes on is the engine's
+//! business, governed by pluggable stopping rules — schedulers only see
+//! the per-dispatch draw allowance through [`SchedCtx`].
 
 pub mod asha;
 pub mod baselines;
@@ -15,8 +28,9 @@ pub mod hyperband;
 pub mod pasha;
 pub mod rung;
 pub mod sh;
+pub mod stopping;
 pub mod types;
 
 pub use types::{
-    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialInfo,
+    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialAction, TrialInfo,
 };

@@ -18,6 +18,39 @@ use super::types::{
 };
 use crate::ranking::{RankCtx, RankingFunction, RankingSpec};
 
+/// The consistency check of Algorithm 1 lines 11–18: compare the current
+/// top-rung ranking against the previous rung's ranking restricted to the
+/// same trials. Returns `true` when the rankings agree (no growth needed);
+/// records an ε estimate into `eps_history` when the ranking function
+/// re-estimates one. Shared by promotion-type [`Pasha`] and the
+/// stopping-type variant in [`super::stopping`].
+pub(crate) fn cap_ranking_consistent(
+    core: &ShCore,
+    ranking: &mut dyn RankingFunction,
+    cap: usize,
+    eps_history: &mut Vec<f64>,
+) -> bool {
+    if cap == 0 {
+        return true; // degenerate single-rung grid
+    }
+    let top = core.ranking(cap);
+    if top.len() < 2 {
+        // A single configuration cannot exhibit ranking instability.
+        return true;
+    }
+    let prev = core.ranking_restricted(cap - 1, cap);
+    debug_assert_eq!(top.len(), prev.len());
+    let curves = core.top_rung_curves(cap);
+    let ctx = RankCtx {
+        top_curves: &curves,
+    };
+    let consistent = ranking.consistent(&top, &prev, &ctx);
+    if let Some(eps) = ranking.epsilon() {
+        eps_history.push(eps);
+    }
+    consistent
+}
+
 pub struct Pasha {
     core: ShCore,
     /// Current top-rung index K_t (jobs may target rungs 0..=cap).
@@ -60,24 +93,12 @@ impl Pasha {
         if self.cap >= self.core.levels.top() {
             return; // already at the safety net R: PASHA degraded to ASHA
         }
-        if self.cap == 0 {
-            return; // degenerate single-rung grid
-        }
-        let top = self.core.ranking(self.cap);
-        if top.len() < 2 {
-            // A single configuration cannot exhibit ranking instability.
-            return;
-        }
-        let prev = self.core.ranking_restricted(self.cap - 1, self.cap);
-        debug_assert_eq!(top.len(), prev.len());
-        let curves = self.core.top_rung_curves(self.cap);
-        let ctx = RankCtx {
-            top_curves: &curves,
-        };
-        let consistent = self.ranking.consistent(&top, &prev, &ctx);
-        if let Some(eps) = self.ranking.epsilon() {
-            self.eps_history.push(eps);
-        }
+        let consistent = cap_ranking_consistent(
+            &self.core,
+            self.ranking.as_mut(),
+            self.cap,
+            &mut self.eps_history,
+        );
         if !consistent {
             self.cap += 1;
             self.growths += 1;
@@ -96,6 +117,10 @@ impl Scheduler for Pasha {
         if outcome.rung == self.cap {
             self.check_and_maybe_grow();
         }
+    }
+
+    fn on_cancelled(&mut self, trial: crate::TrialId) {
+        self.core.rewind_dispatch(trial);
     }
 
     fn max_resources_used(&self) -> u32 {
@@ -175,12 +200,7 @@ mod tests {
     ) -> Pasha {
         let space = SearchSpace::nas(100_000);
         let mut searcher = RandomSearcher::new(3);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: n_configs,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, n_configs);
         let mut p = Pasha::new(RungLevels::new(1, 3, max_epochs), &spec);
         while let Some(job) = p.next_job(&mut ctx) {
             let m = metric(job.trial, job.milestone);
@@ -276,12 +296,7 @@ mod tests {
     fn jobs_never_exceed_cap() {
         let space = SearchSpace::nas(100_000);
         let mut searcher = RandomSearcher::new(5);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 25,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 25);
         let mut p = Pasha::new(RungLevels::new(1, 3, 200), &RankingSpec::default());
         while let Some(job) = p.next_job(&mut ctx) {
             assert!(

@@ -199,12 +199,7 @@ mod tests {
     fn drive(n0: usize, metric: impl Fn(usize, u32) -> f64) -> SyncSh {
         let space = SearchSpace::nas(1000);
         let mut searcher = RandomSearcher::new(4);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: n0,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, n0);
         let mut sh = SyncSh::new(RungLevels::new(1, 3, 27), n0);
         loop {
             match sh.next_job(&mut ctx) {
@@ -266,12 +261,7 @@ mod tests {
     fn barrier_returns_none_with_pending_work() {
         let space = SearchSpace::nas(1000);
         let mut searcher = RandomSearcher::new(4);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 3,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 3);
         let mut sh = SyncSh::new(RungLevels::new(1, 3, 9), 3);
         let j1 = sh.next_job(&mut ctx).unwrap();
         let _j2 = sh.next_job(&mut ctx).unwrap();

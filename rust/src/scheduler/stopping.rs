@@ -1,0 +1,410 @@
+//! Stopping-type ASHA and PASHA (Li et al. 2020 §3.1; PASHA §4).
+//!
+//! The promotion variants in [`super::asha`]/[`super::pasha`] only ever
+//! *add* work: a trial sits at a rung until it wins a promotion quota.
+//! The stopping variants invert the default: every trial keeps training
+//! rung-by-rung until a rung completion shows it is **not** in the top
+//! `1/η` of that rung, at which point the scheduler emits a
+//! [`TrialAction::Stop`] and the engine cancels any in-flight work for
+//! it. This trades extra early-epoch training for decisions that never
+//! leave a promising trial idle — the variant Ray Tune and syne-tune ship
+//! as their default ASHA mode.
+//!
+//! PASHA-stop layers the progressive resource cap on top: trials that
+//! complete the current cap rung are **paused** ([`TrialAction::Pause`]),
+//! not stopped; when the top-two-rung ranking disagrees (the paper's
+//! Algorithm 1 consistency check) the cap grows one rung and every paused
+//! trial that passes the stopping test at the old cap resumes.
+
+use super::core::ShCore;
+use super::pasha::cap_ranking_consistent;
+use super::rung::RungLevels;
+use super::types::{
+    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialAction, TrialInfo,
+};
+use crate::ranking::{RankingFunction, RankingSpec};
+use crate::TrialId;
+use std::collections::VecDeque;
+
+/// Shared state machine of the stopping-type SH family. With
+/// `ranking: None` the cap is fixed at the grid top (ASHA-stop); with a
+/// ranking function the cap starts at rung 1 and grows on ranking
+/// instability (PASHA-stop).
+pub struct StoppingSh {
+    core: ShCore,
+    /// Current top-rung index: jobs may target rungs `0..=cap`.
+    cap: usize,
+    /// Progressive-growth machinery; `None` = ASHA-stop.
+    ranking: Option<Box<dyn RankingFunction>>,
+    /// Continuations waiting for a free worker: `(trial, target rung)`.
+    ready: VecDeque<(TrialId, usize)>,
+    /// Trials suspended at the current cap, resumable when it grows.
+    paused: Vec<TrialId>,
+    /// Stop/Pause decisions not yet drained by the engine.
+    actions: Vec<TrialAction>,
+    eps_history: Vec<f64>,
+    growths: usize,
+    name: String,
+}
+
+impl StoppingSh {
+    /// Stopping-type ASHA: fixed maximum resource level `R`.
+    pub fn asha(levels: RungLevels) -> Self {
+        let cap = levels.top();
+        StoppingSh {
+            core: ShCore::new(levels),
+            cap,
+            ranking: None,
+            ready: VecDeque::new(),
+            paused: Vec::new(),
+            actions: Vec::new(),
+            eps_history: Vec::new(),
+            growths: 0,
+            name: "ASHA-stop".into(),
+        }
+    }
+
+    /// Stopping-type PASHA: cap starts at rung 1 (`R_0 = η·r`) and grows
+    /// on ranking inconsistency, exactly like promotion-type PASHA.
+    pub fn pasha(levels: RungLevels, spec: &RankingSpec) -> Self {
+        let cap = 1.min(levels.top());
+        StoppingSh {
+            core: ShCore::new(levels),
+            cap,
+            ranking: Some(spec.build()),
+            ready: VecDeque::new(),
+            paused: Vec::new(),
+            actions: Vec::new(),
+            eps_history: Vec::new(),
+            growths: 0,
+            name: format!("{}-stop", spec.label()),
+        }
+    }
+
+    pub fn current_cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn growths(&self) -> usize {
+        self.growths
+    }
+
+    /// The stopping test: is `trial` in the top `1/η` of rung `k`?
+    /// `max(1, len/η)` keeps the best entry alive even in a sparsely
+    /// populated rung, so early trials are never stopped for lack of
+    /// competition (they can still be stopped retroactively-in-effect:
+    /// later, better arrivals push them out before their next rung).
+    fn passes(&self, k: usize, trial: TrialId) -> bool {
+        let len = self.core.rungs[k].len();
+        let keep = (len / self.core.levels.eta as usize).max(1);
+        match self.core.rank_in_rung(k, trial) {
+            Some(rank) => rank < keep,
+            None => false,
+        }
+    }
+}
+
+impl Scheduler for StoppingSh {
+    fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+        if let Some((trial, rung)) = self.ready.pop_front() {
+            return Some(self.core.continue_job(trial, rung));
+        }
+        self.core.start_new(ctx)
+    }
+
+    fn on_result(&mut self, outcome: &JobOutcome) {
+        self.core.record(outcome);
+        let trial = outcome.trial;
+        let rung = outcome.rung;
+        if rung == self.core.levels.top() {
+            return; // trained to the safety net R: trial is complete
+        }
+        if rung < self.cap {
+            // Intermediate rung: continue while in the top 1/η, stop
+            // otherwise — the defining rule of the stopping variant.
+            if self.passes(rung, trial) {
+                self.core.rungs[rung].mark_promoted(trial);
+                self.ready.push_back((trial, rung + 1));
+            } else {
+                self.actions.push(TrialAction::Stop(trial));
+            }
+            return;
+        }
+        // rung == cap < top: only reachable with progressive growth
+        // (ASHA-stop's cap is the top rung, handled above).
+        let grew = match self.ranking.as_mut() {
+            Some(ranking) => !cap_ranking_consistent(
+                &self.core,
+                ranking.as_mut(),
+                self.cap,
+                &mut self.eps_history,
+            ),
+            None => false,
+        };
+        if grew {
+            self.cap += 1;
+            self.growths += 1;
+            // The old cap rung is now intermediate: resume every paused
+            // trial (including this one) that passes the stopping test at
+            // the rung it last completed — paused trials from older cap
+            // generations re-test at their own frontier; the rest stay
+            // paused for the next growth.
+            self.paused.push(trial);
+            let candidates = std::mem::take(&mut self.paused);
+            for t in candidates {
+                let at = self.core.trials[t].top_rung.unwrap_or(0);
+                if at < self.cap && self.passes(at, t) {
+                    self.core.rungs[at].mark_promoted(t);
+                    self.ready.push_back((t, at + 1));
+                } else {
+                    // Older paused trials already announced their pause;
+                    // the just-reported trial suspends here for the
+                    // first time and must tell the engine.
+                    if t == trial {
+                        self.actions.push(TrialAction::Pause(t));
+                    }
+                    self.paused.push(t);
+                }
+            }
+        } else {
+            self.paused.push(trial);
+            self.actions.push(TrialAction::Pause(trial));
+        }
+    }
+
+    fn drain_actions(&mut self) -> Vec<TrialAction> {
+        std::mem::take(&mut self.actions)
+    }
+
+    fn on_cancelled(&mut self, trial: TrialId) {
+        // Keeps a later resume gap-free whether the cancellation came
+        // from our own actions or from an engine halt.
+        self.core.rewind_dispatch(trial);
+    }
+
+    fn max_resources_used(&self) -> u32 {
+        self.core.max_resources_used
+    }
+
+    fn best(&self) -> Option<BestTrial> {
+        self.core.best()
+    }
+
+    fn trials(&self) -> &[TrialInfo] {
+        &self.core.trials
+    }
+
+    fn epsilon_history(&self) -> &[f64] {
+        &self.eps_history
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Builder for stopping-type ASHA.
+#[derive(Clone, Debug)]
+pub struct StopAshaBuilder {
+    pub r_min: u32,
+    pub eta: u32,
+}
+
+impl Default for StopAshaBuilder {
+    fn default() -> Self {
+        StopAshaBuilder { r_min: 1, eta: 3 }
+    }
+}
+
+impl SchedulerBuilder for StopAshaBuilder {
+    fn build(&self, max_epochs: u32, _seed: u64) -> Box<dyn Scheduler> {
+        Box::new(StoppingSh::asha(RungLevels::new(
+            self.r_min,
+            self.eta,
+            max_epochs,
+        )))
+    }
+
+    fn name(&self) -> String {
+        "ASHA-stop".into()
+    }
+}
+
+/// Builder for stopping-type PASHA with a choice of ranking function.
+#[derive(Clone, Debug)]
+pub struct StopPashaBuilder {
+    pub r_min: u32,
+    pub eta: u32,
+    pub ranking: RankingSpec,
+}
+
+impl Default for StopPashaBuilder {
+    fn default() -> Self {
+        StopPashaBuilder {
+            r_min: 1,
+            eta: 3,
+            ranking: RankingSpec::default(),
+        }
+    }
+}
+
+impl SchedulerBuilder for StopPashaBuilder {
+    fn build(&self, max_epochs: u32, _seed: u64) -> Box<dyn Scheduler> {
+        Box::new(StoppingSh::pasha(
+            RungLevels::new(self.r_min, self.eta, max_epochs),
+            &self.ranking,
+        ))
+    }
+
+    fn name(&self) -> String {
+        format!("{}-stop", self.ranking.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::SearchSpace;
+    use crate::searcher::random::RandomSearcher;
+    use std::collections::HashSet;
+
+    /// Serial driver: run the scheduler to exhaustion against a metric
+    /// oracle, collecting the emitted actions and enforcing the engine's
+    /// contract that stopped trials never receive another job.
+    fn drive(
+        sched: &mut StoppingSh,
+        n_configs: usize,
+        metric: impl Fn(usize, u32) -> f64,
+    ) -> Vec<TrialAction> {
+        let space = SearchSpace::nas(100_000);
+        let mut searcher = RandomSearcher::new(3);
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, n_configs);
+        let mut actions = Vec::new();
+        let mut stopped: HashSet<usize> = HashSet::new();
+        while let Some(job) = sched.next_job(&mut ctx) {
+            assert!(
+                !stopped.contains(&job.trial),
+                "job dispatched for stopped trial {}",
+                job.trial
+            );
+            let m = metric(job.trial, job.milestone);
+            sched.on_result(&JobOutcome {
+                trial: job.trial,
+                rung: job.rung,
+                milestone: job.milestone,
+                metric: m,
+                curve_segment: (job.from_epoch + 1..=job.milestone)
+                    .map(|e| metric(job.trial, e))
+                    .collect(),
+            });
+            for a in sched.drain_actions() {
+                if let TrialAction::Stop(t) = a {
+                    stopped.insert(t);
+                }
+                actions.push(a);
+            }
+        }
+        actions
+    }
+
+    #[test]
+    fn asha_stop_continues_leaders_and_stops_laggards() {
+        // metric = −trial id: every later arrival is worse than the
+        // incumbent leader already recorded in rung 0, so it is stopped
+        // at its first completion while trial 0 trains to R. (Stopping
+        // decisions are made at completion time — a trial can only be
+        // stopped once something better is on the board.)
+        let mut s = StoppingSh::asha(RungLevels::new(1, 3, 27));
+        let actions = drive(&mut s, 27, |t, _| -(t as f64));
+        let stops = actions
+            .iter()
+            .filter(|a| matches!(a, TrialAction::Stop(_)))
+            .count();
+        assert!(stops >= 20, "laggards must be stopped, got {stops}");
+        assert_eq!(
+            actions.iter().filter(|a| matches!(a, TrialAction::Pause(_))).count(),
+            0,
+            "ASHA-stop never pauses"
+        );
+        assert_eq!(s.max_resources_used(), 27, "the leader reaches R");
+        let best = s.best().unwrap();
+        assert_eq!(best.trial, 0);
+    }
+
+    #[test]
+    fn asha_stop_every_trial_runs_at_least_one_rung() {
+        let mut s = StoppingSh::asha(RungLevels::new(1, 3, 27));
+        drive(&mut s, 20, |t, _| (t % 7) as f64);
+        for t in s.trials() {
+            assert!(t.trained_epochs() >= 1, "stopping happens after rung 0");
+        }
+    }
+
+    #[test]
+    fn pasha_stop_stable_rankings_pause_at_initial_cap() {
+        // Identical ordering at every resource level: the cap never grows,
+        // survivors pause at rung 1, and nothing trains beyond η·r.
+        let mut s = StoppingSh::pasha(RungLevels::new(1, 3, 200), &RankingSpec::Direct);
+        let actions = drive(&mut s, 30, |t, _| t as f64);
+        assert_eq!(s.current_cap(), 1);
+        assert_eq!(s.growths(), 0);
+        assert_eq!(s.max_resources_used(), 3);
+        assert!(
+            actions.iter().any(|a| matches!(a, TrialAction::Pause(_))),
+            "cap completions must pause"
+        );
+    }
+
+    #[test]
+    fn pasha_stop_unstable_rankings_grow_and_resume_paused() {
+        // Order flips at every rung level: the cap must keep growing to
+        // the safety net, and paused trials resume on each growth.
+        let levels = [1u32, 3, 9, 27, 81, 200];
+        let mut s = StoppingSh::pasha(RungLevels::new(1, 3, 200), &RankingSpec::Direct);
+        drive(&mut s, 300, move |t, m| {
+            let k = levels.iter().position(|&l| l >= m).unwrap_or(0);
+            if k % 2 == 0 {
+                t as f64
+            } else {
+                -(t as f64)
+            }
+        });
+        assert_eq!(s.current_cap(), RungLevels::new(1, 3, 200).top());
+        assert_eq!(s.max_resources_used(), 200, "defaults to ASHA-stop's budget");
+        assert!(s.growths() >= 2);
+    }
+
+    #[test]
+    fn pasha_stop_uses_fewer_resources_than_asha_stop_when_stable() {
+        let metric = |t: usize, _m: u32| (t % 11) as f64;
+        let mut astop = StoppingSh::asha(RungLevels::new(1, 3, 81));
+        drive(&mut astop, 40, metric);
+        let mut pstop = StoppingSh::pasha(RungLevels::new(1, 3, 81), &RankingSpec::Direct);
+        drive(&mut pstop, 40, metric);
+        assert!(pstop.max_resources_used() <= astop.max_resources_used());
+        let total = |s: &StoppingSh| -> u32 { s.trials().iter().map(|t| t.trained_epochs()).sum() };
+        assert!(total(&pstop) < total(&astop), "cap must save epochs");
+    }
+
+    #[test]
+    fn builder_names() {
+        assert_eq!(StopAshaBuilder::default().name(), "ASHA-stop");
+        assert_eq!(StopPashaBuilder::default().name(), "PASHA-stop");
+        let b = StopPashaBuilder {
+            ranking: RankingSpec::Direct,
+            ..Default::default()
+        };
+        assert_eq!(b.name(), "PASHA direct ranking-stop");
+        let s = b.build(27, 0);
+        assert_eq!(s.name(), "PASHA direct ranking-stop");
+    }
+
+    #[test]
+    fn degenerate_single_rung_grid() {
+        let mut s = StoppingSh::pasha(RungLevels::new(1, 3, 1), &RankingSpec::default());
+        let actions = drive(&mut s, 10, |t, _| t as f64);
+        assert_eq!(s.current_cap(), 0);
+        assert_eq!(s.max_resources_used(), 1);
+        assert!(actions.is_empty(), "single-rung trials just complete");
+    }
+}

@@ -1,4 +1,5 @@
-//! Core types shared by all schedulers: jobs, trial bookkeeping, and the
+//! Core types shared by all schedulers: jobs, trial bookkeeping, trial
+//! actions (the decision layer of the event-driven engine), and the
 //! scheduler trait itself.
 
 use crate::config::space::{Config, SearchSpace};
@@ -74,29 +75,84 @@ pub struct BestTrial {
     pub at_epoch: u32,
 }
 
+/// A decision a scheduler takes about a trial *outside* the free-worker
+/// job cycle. Promotion-type schedulers never emit these (a promotion is
+/// just the next [`Job`]); the stopping-type ASHA/PASHA variants (Li et
+/// al. 2020 §3.1, PASHA §4) use them to terminate or suspend trials, and
+/// the engine translates them into backend cancellation of any in-flight
+/// work. Drained by the engine via [`Scheduler::drain_actions`] after
+/// every delivered result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TrialAction {
+    /// Terminate the trial: cancel in-flight work, never run it again.
+    Stop(TrialId),
+    /// Suspend the trial: cancel in-flight work but keep it resumable —
+    /// a later [`Job`] may continue it (PASHA-stop resumes paused trials
+    /// when the resource cap grows). If the pause cancelled an in-flight
+    /// job, the engine reports it via [`Scheduler::on_cancelled`] so the
+    /// scheduler can rewind its dispatch frontier, and — on backends
+    /// that cannot preempt (the thread pool) — parks any resume job
+    /// until the cancelled job retires, so the job accounting is safe on
+    /// every backend. Caveat for *stateful* evaluators on the pool: the
+    /// discarded job's worker still ran, so a per-trial model may have
+    /// advanced past the rewound frontier; such evaluators must tolerate
+    /// `advance` being asked to (re)train from an earlier epoch, or
+    /// schedulers should only pause trials with no job in flight (what
+    /// the built-in stopping schedulers do).
+    Pause(TrialId),
+}
+
+impl TrialAction {
+    pub fn trial(&self) -> TrialId {
+        match *self {
+            TrialAction::Stop(t) | TrialAction::Pause(t) => t,
+        }
+    }
+}
+
 /// Context handed to [`Scheduler::next_job`]: draws new configurations
-/// through the searcher while enforcing the tuner's N-configuration budget
-/// (§5.1: "run the hyperparameter optimizer until N=256 candidate
-/// configurations are evaluated").
+/// through the searcher. How many draws are still permitted is decided by
+/// the engine's stopping rules (§5.1's N-configuration budget is the
+/// `ConfigBudget` rule) rather than a budget hardwired into the context.
 pub struct SchedCtx<'a> {
     pub space: &'a SearchSpace,
     pub searcher: &'a mut dyn Searcher,
     pub configs_sampled: usize,
-    pub config_budget: usize,
+    /// Additional configurations the engine's stopping rules still allow
+    /// this dispatch cycle (`usize::MAX` when unconstrained).
+    pub draws_remaining: usize,
 }
 
 impl<'a> SchedCtx<'a> {
-    /// Draw a new configuration if the budget allows.
+    /// A context that allows exactly `budget - configs_sampled` more draws
+    /// — the classic N-configuration protocol, used directly by tests and
+    /// by the engine when only a `ConfigBudget` rule is active.
+    pub fn with_budget(
+        space: &'a SearchSpace,
+        searcher: &'a mut dyn Searcher,
+        configs_sampled: usize,
+        config_budget: usize,
+    ) -> Self {
+        SchedCtx {
+            space,
+            searcher,
+            configs_sampled,
+            draws_remaining: config_budget.saturating_sub(configs_sampled),
+        }
+    }
+
+    /// Draw a new configuration if the stopping rules allow.
     pub fn draw(&mut self) -> Option<Config> {
-        if self.configs_sampled >= self.config_budget {
+        if self.draws_remaining == 0 {
             return None;
         }
+        self.draws_remaining -= 1;
         self.configs_sampled += 1;
         Some(self.searcher.suggest(self.space))
     }
 
     pub fn budget_left(&self) -> usize {
-        self.config_budget - self.configs_sampled
+        self.draws_remaining
     }
 }
 
@@ -111,6 +167,26 @@ pub trait Scheduler: Send {
 
     /// Deliver a completed job.
     fn on_result(&mut self, outcome: &JobOutcome);
+
+    /// Trial actions decided since the last drain (typically during
+    /// [`Scheduler::on_result`]). The engine applies them — cancelling
+    /// in-flight backend work for stopped/paused trials — immediately
+    /// after each delivered result. Promotion-type schedulers keep the
+    /// default empty implementation.
+    fn drain_actions(&mut self) -> Vec<TrialAction> {
+        Vec::new()
+    }
+
+    /// The engine discarded work for `trial` without running it to
+    /// completion: a drained [`TrialAction`] cancelled its in-flight
+    /// job, or a stopping-rule halt cancelled it (or dropped it before
+    /// dispatch). The job's epochs were never trained and its result
+    /// will never arrive. Schedulers must rewind their dispatch frontier
+    /// here (e.g. reset `dispatched_epochs` to the trained epochs) so
+    /// state stays consistent and a later resume leaves no curve gap.
+    fn on_cancelled(&mut self, trial: TrialId) {
+        let _ = trial;
+    }
 
     /// Largest milestone any trial has been trained to so far (the paper's
     /// "Max resources" column).
@@ -147,18 +223,34 @@ mod tests {
     fn ctx_enforces_budget() {
         let space = SearchSpace::pd1();
         let mut searcher = RandomSearcher::new(0);
-        let mut ctx = SchedCtx {
-            space: &space,
-            searcher: &mut searcher,
-            configs_sampled: 0,
-            config_budget: 3,
-        };
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 3);
         assert!(ctx.draw().is_some());
         assert!(ctx.draw().is_some());
         assert_eq!(ctx.budget_left(), 1);
         assert!(ctx.draw().is_some());
         assert!(ctx.draw().is_none());
         assert_eq!(ctx.configs_sampled, 3);
+    }
+
+    #[test]
+    fn ctx_with_budget_handles_partial_progress() {
+        let space = SearchSpace::pd1();
+        let mut searcher = RandomSearcher::new(0);
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 2, 3);
+        assert_eq!(ctx.budget_left(), 1);
+        assert!(ctx.draw().is_some());
+        assert!(ctx.draw().is_none());
+        // sampled beyond budget (rules tightened mid-run): no draws left
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 5, 3);
+        assert_eq!(ctx.budget_left(), 0);
+        assert!(ctx.draw().is_none());
+    }
+
+    #[test]
+    fn trial_action_accessor() {
+        assert_eq!(TrialAction::Stop(3).trial(), 3);
+        assert_eq!(TrialAction::Pause(7).trial(), 7);
+        assert_ne!(TrialAction::Stop(1), TrialAction::Pause(1));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!   Table 3, "MOBSTER" / "PASHA BO").
 
 pub mod bo;
+#[cfg(feature = "pjrt")]
 pub mod bo_pjrt;
 pub mod gp;
 pub mod random;

@@ -1,4 +1,4 @@
-//! Orchestration: searcher × scheduler × benchmark × executor.
+//! Orchestration: searcher × scheduler × benchmark × engine.
 //!
 //! [`Tuner::run`] reproduces the paper's two-phase experimental protocol
 //! (§5.1): phase 1 runs the optimizer until N = 256 candidate
@@ -6,15 +6,26 @@
 //! phase 2 retrains the best identified configuration from scratch and
 //! reports that accuracy. Runtime excludes the retraining (comparable
 //! across optimizers) and includes validation evaluation time.
+//!
+//! Termination is expressed through the engine's pluggable stopping
+//! rules: the classic config budget always applies, and [`StopSpec`]
+//! adds epoch/clock budgets on top. [`Tuner::run_repeated`] fans the
+//! `sched_seeds × bench_seeds` repetition grid across a scoped thread
+//! pool — every repetition is an independent deterministic simulation,
+//! so the results are identical to the serial driver
+//! ([`Tuner::run_repeated_serial`]), just several times faster on
+//! multi-core machines.
 
 use crate::benchmarks::Benchmark;
 use crate::config::space::Config;
-use crate::executor::sim::{run_sim, SimStats};
-use crate::executor::SurrogateEvaluator;
+use crate::executor::engine::{ClockBudget, ConfigBudget, EpochBudget, StoppingRule};
+use crate::executor::sim::{SimBackend, SimStats};
+use crate::executor::{run_engine, SurrogateEvaluator};
 use crate::scheduler::SchedulerBuilder;
 use crate::searcher::bo::BoSearcher;
 use crate::searcher::random::RandomSearcher;
 use crate::searcher::Searcher;
+use crate::util::parallel::{available_threads, par_map};
 use crate::util::rng::mix;
 
 /// Which proposal strategy the tuner uses.
@@ -25,6 +36,27 @@ pub enum SearcherKind {
     Bo,
 }
 
+/// Extra stopping rules layered on top of the config budget (cloneable
+/// specs; the engine rules themselves are built per repetition).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StopSpec {
+    /// Stop launching new jobs once this many training epochs have been
+    /// dispatched; in-flight work drains to completion.
+    EpochBudget(u64),
+    /// Halt once the clock (virtual seconds on the simulator) passes
+    /// this many seconds.
+    ClockBudget(f64),
+}
+
+impl StopSpec {
+    fn build(&self) -> Box<dyn StoppingRule> {
+        match *self {
+            StopSpec::EpochBudget(n) => Box::new(EpochBudget(n)),
+            StopSpec::ClockBudget(s) => Box::new(ClockBudget(s)),
+        }
+    }
+}
+
 /// Experiment-level knobs (paper defaults).
 #[derive(Clone, Debug)]
 pub struct TunerSpec {
@@ -33,6 +65,8 @@ pub struct TunerSpec {
     /// Candidate configurations to sample (paper: N = 256).
     pub config_budget: usize,
     pub searcher: SearcherKind,
+    /// Additional stopping rules (empty = classic N-config protocol).
+    pub extra_stop: Vec<StopSpec>,
 }
 
 impl Default for TunerSpec {
@@ -41,11 +75,26 @@ impl Default for TunerSpec {
             workers: 4,
             config_budget: 256,
             searcher: SearcherKind::Random,
+            extra_stop: Vec::new(),
         }
     }
 }
 
+impl TunerSpec {
+    fn rules(&self) -> Vec<Box<dyn StoppingRule>> {
+        let mut rules: Vec<Box<dyn StoppingRule>> =
+            vec![Box::new(ConfigBudget(self.config_budget))];
+        rules.extend(self.extra_stop.iter().map(|s| s.build()));
+        rules
+    }
+}
+
 /// Outcome of one tuning repetition.
+///
+/// Equality is bitwise on the float fields (`to_bits`), so two runs that
+/// both produced `NaN` placeholders (e.g. truncated before any result)
+/// still compare equal — this is what the serial-vs-parallel grid
+/// identity checks rely on.
 #[derive(Clone, Debug)]
 pub struct TuneResult {
     pub scheduler_name: String,
@@ -62,8 +111,37 @@ pub struct TuneResult {
     pub configs_sampled: usize,
     pub total_epochs: u64,
     pub jobs: usize,
+    /// In-flight jobs cancelled (stopping rules / stop decisions).
+    pub cancelled_jobs: usize,
+    /// Trials terminated by stopping-type scheduler decisions.
+    pub stopped_trials: usize,
     /// ε trajectory (Figure 5), when the scheduler records one.
     pub eps_history: Vec<f64>,
+}
+
+impl PartialEq for TuneResult {
+    fn eq(&self, other: &Self) -> bool {
+        fn feq(a: f64, b: f64) -> bool {
+            a.to_bits() == b.to_bits()
+        }
+        self.scheduler_name == other.scheduler_name
+            && self.best_config == other.best_config
+            && feq(self.best_metric, other.best_metric)
+            && feq(self.retrain_accuracy, other.retrain_accuracy)
+            && feq(self.runtime_seconds, other.runtime_seconds)
+            && self.max_resources == other.max_resources
+            && self.configs_sampled == other.configs_sampled
+            && self.total_epochs == other.total_epochs
+            && self.jobs == other.jobs
+            && self.cancelled_jobs == other.cancelled_jobs
+            && self.stopped_trials == other.stopped_trials
+            && self.eps_history.len() == other.eps_history.len()
+            && self
+                .eps_history
+                .iter()
+                .zip(&other.eps_history)
+                .all(|(a, b)| feq(*a, *b))
+    }
 }
 
 /// The tuner entry point.
@@ -89,13 +167,14 @@ impl Tuner {
             bench,
             bench_seed,
         };
-        let stats: SimStats = run_sim(
+        let mut backend = SimBackend::new(spec.workers, &mut evaluator);
+        let rules = spec.rules();
+        let stats: SimStats = run_engine(
             scheduler.as_mut(),
             searcher.as_mut(),
             bench.space(),
-            spec.config_budget,
-            spec.workers,
-            &mut evaluator,
+            &rules,
+            &mut backend,
         );
         let best = scheduler.best();
         let retrain_accuracy = best
@@ -112,12 +191,18 @@ impl Tuner {
             configs_sampled: stats.configs_sampled,
             total_epochs: stats.total_epochs,
             jobs: stats.jobs,
+            cancelled_jobs: stats.cancelled_jobs,
+            stopped_trials: stats.stopped_trials,
             eps_history: scheduler.epsilon_history().to_vec(),
         }
     }
 
-    /// Run `sched_seeds × bench_seeds` repetitions (the paper's NAS
-    /// experiments use 5 scheduler × 3 benchmark seeds = 15).
+    /// The `sched_seeds × bench_seeds` repetition grid (the paper's NAS
+    /// experiments use 5 scheduler × 3 benchmark seeds = 15), fanned out
+    /// across the machine's cores. Each repetition is an independent
+    /// deterministic simulation keyed by `(sched_seed, bench_seed)`, so
+    /// the output is identical to [`Tuner::run_repeated_serial`] in both
+    /// content and order.
     pub fn run_repeated(
         bench: &dyn Benchmark,
         builder: &dyn SchedulerBuilder,
@@ -125,13 +210,38 @@ impl Tuner {
         sched_seeds: &[u64],
         bench_seeds: &[u64],
     ) -> Vec<TuneResult> {
-        let mut out = Vec::with_capacity(sched_seeds.len() * bench_seeds.len());
-        for &ss in sched_seeds {
-            for &bs in bench_seeds {
-                out.push(Self::run(bench, builder, spec, ss, bs));
-            }
-        }
-        out
+        let threads = available_threads();
+        Self::run_repeated_threads(bench, builder, spec, sched_seeds, bench_seeds, threads)
+    }
+
+    /// [`Tuner::run_repeated`] with an explicit thread count (1 =
+    /// serial execution on the calling thread).
+    pub fn run_repeated_threads(
+        bench: &dyn Benchmark,
+        builder: &dyn SchedulerBuilder,
+        spec: &TunerSpec,
+        sched_seeds: &[u64],
+        bench_seeds: &[u64],
+        threads: usize,
+    ) -> Vec<TuneResult> {
+        let grid: Vec<(u64, u64)> = sched_seeds
+            .iter()
+            .flat_map(|&ss| bench_seeds.iter().map(move |&bs| (ss, bs)))
+            .collect();
+        par_map(&grid, threads, |_, &(ss, bs)| {
+            Self::run(bench, builder, spec, ss, bs)
+        })
+    }
+
+    /// The reference serial driver: same grid, same order, one thread.
+    pub fn run_repeated_serial(
+        bench: &dyn Benchmark,
+        builder: &dyn SchedulerBuilder,
+        spec: &TunerSpec,
+        sched_seeds: &[u64],
+        bench_seeds: &[u64],
+    ) -> Vec<TuneResult> {
+        Self::run_repeated_threads(bench, builder, spec, sched_seeds, bench_seeds, 1)
     }
 }
 
@@ -143,6 +253,7 @@ mod tests {
     use crate::scheduler::asha::AshaBuilder;
     use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
     use crate::scheduler::pasha::PashaBuilder;
+    use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
     use crate::util::stats;
 
     fn small_spec() -> TunerSpec {
@@ -150,6 +261,7 @@ mod tests {
             workers: 4,
             config_budget: 64,
             searcher: SearcherKind::Random,
+            extra_stop: Vec::new(),
         }
     }
 
@@ -216,6 +328,7 @@ mod tests {
         assert!(r.max_resources <= bench.max_epochs());
         assert!(r.best_config.is_some());
         assert!(r.retrain_accuracy > 0.0);
+        assert_eq!(r.cancelled_jobs, 0, "promotion-type never cancels");
     }
 
     #[test]
@@ -233,6 +346,100 @@ mod tests {
             &[0, 1, 2],
         );
         assert_eq!(rs.len(), 6);
+    }
+
+    #[test]
+    fn parallel_grid_identical_to_serial() {
+        // The whole point of the parallel driver: byte-identical
+        // TuneResults in the same (sched_seed, bench_seed) order.
+        let bench = NasBench201::cifar100();
+        let spec = TunerSpec {
+            config_budget: 32,
+            ..small_spec()
+        };
+        for builder in [
+            &PashaBuilder::default() as &dyn SchedulerBuilder,
+            &StopAshaBuilder::default(),
+        ] {
+            let serial =
+                Tuner::run_repeated_serial(&bench, builder, &spec, &[0, 1, 2], &[0, 1]);
+            let parallel =
+                Tuner::run_repeated_threads(&bench, builder, &spec, &[0, 1, 2], &[0, 1], 4);
+            assert_eq!(serial.len(), 6);
+            assert_eq!(serial, parallel, "parallel grid must match serial exactly");
+        }
+    }
+
+    #[test]
+    fn stopping_variants_match_promotion_shape() {
+        // The stopping-type schedulers must reproduce the paper's
+        // accuracy-vs-runtime shape: comparable accuracy, with PASHA-stop
+        // cheaper than ASHA-stop (the progressive cap saves epochs under
+        // stopping semantics too).
+        let bench = NasBench201::cifar100();
+        let spec = small_spec();
+        let seeds = [0u64, 1, 2];
+        let mean_of = |b: &dyn SchedulerBuilder, f: &dyn Fn(&TuneResult) -> f64| {
+            let rs: Vec<f64> = seeds
+                .iter()
+                .map(|&s| f(&Tuner::run(&bench, b, &spec, s, 0)))
+                .collect();
+            stats::mean(&rs)
+        };
+        let acc = |b: &dyn SchedulerBuilder| mean_of(b, &|r| r.retrain_accuracy);
+        let rt = |b: &dyn SchedulerBuilder| mean_of(b, &|r| r.runtime_seconds);
+        let asha_acc = acc(&AshaBuilder::default());
+        let astop_acc = acc(&StopAshaBuilder::default());
+        let pstop_acc = acc(&StopPashaBuilder::default());
+        assert!(
+            (asha_acc - astop_acc).abs() < 3.0,
+            "stopping ASHA accuracy parity: {asha_acc:.2} vs {astop_acc:.2}"
+        );
+        assert!(
+            (astop_acc - pstop_acc).abs() < 3.0,
+            "stopping PASHA accuracy parity: {astop_acc:.2} vs {pstop_acc:.2}"
+        );
+        assert!(
+            rt(&StopPashaBuilder::default()) < rt(&StopAshaBuilder::default()),
+            "PASHA-stop must be cheaper than ASHA-stop"
+        );
+    }
+
+    #[test]
+    fn clock_budget_truncates_run() {
+        let bench = NasBench201::cifar10();
+        let full = Tuner::run(&bench, &AshaBuilder::default(), &small_spec(), 0, 0);
+        let budget = full.runtime_seconds * 0.25;
+        let spec = TunerSpec {
+            extra_stop: vec![StopSpec::ClockBudget(budget)],
+            ..small_spec()
+        };
+        let cut = Tuner::run(&bench, &AshaBuilder::default(), &spec, 0, 0);
+        assert!(cut.runtime_seconds <= budget + 1e-9);
+        assert!(cut.total_epochs < full.total_epochs);
+        assert!(cut.cancelled_jobs > 0, "halt must cancel in-flight work");
+        assert!(cut.best_config.is_some(), "partial results still usable");
+    }
+
+    #[test]
+    fn epoch_budget_truncates_run() {
+        let bench = NasBench201::cifar10();
+        let spec = TunerSpec {
+            extra_stop: vec![StopSpec::EpochBudget(40)],
+            ..small_spec()
+        };
+        let r = Tuner::run(&bench, &AshaBuilder::default(), &spec, 0, 0);
+        // Drain semantics: dispatch stops once 40 epochs are out; the
+        // budget-crossing job and everything in flight still complete
+        // (early ASHA jobs are 1–8 epochs, so the overshoot is small)
+        // and nothing is cancelled.
+        assert!(r.total_epochs >= 40, "budget is reached: {}", r.total_epochs);
+        assert!(
+            r.total_epochs <= 40 + 30,
+            "overshoot bounded by in-flight work: {}",
+            r.total_epochs
+        );
+        assert_eq!(r.cancelled_jobs, 0, "drain never cancels");
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Foundation utilities: deterministic RNG, statistics, JSON, table
-//! rendering, and the property-test harness. These replace the crates
-//! (`rand`, `serde`, `proptest`) that are unavailable in the offline
-//! build image — see DESIGN.md §Substitutions.
+//! rendering, scoped-thread parallel map, and the property-test harness.
+//! These replace the crates (`rand`, `serde`, `rayon`, `proptest`) that
+//! are unavailable in the offline build image — see DESIGN.md
+//! §Substitutions.
 
 pub mod benchkit;
 pub mod json;
+pub mod parallel;
 pub mod ptest;
 pub mod rng;
 pub mod stats;

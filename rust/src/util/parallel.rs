@@ -1,0 +1,125 @@
+//! Deterministic fork/join over scoped OS threads (the offline image has
+//! no `rayon`).
+//!
+//! [`par_map`] fans a work list across up to `threads` scoped workers
+//! pulling indices from a shared atomic counter, and returns results in
+//! **input order** regardless of which worker ran which item — so any
+//! caller whose per-item function is deterministic gets output identical
+//! to a serial map. This is what lets the experiment-grid driver promise
+//! "same tables, just faster".
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Usable hardware parallelism (≥ 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `threads` scoped workers; results
+/// come back in input order. `f` receives `(index, &item)`. Falls back to
+/// a plain serial map when a single thread suffices. Panics in `f`
+/// propagate to the caller (the scope joins all workers first).
+pub fn par_map<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(usize, &I) -> T + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("scoped worker filled every claimed slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as Counter;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, 8, |i, &x| {
+            // stagger completion order
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_map() {
+        let items: Vec<u64> = (0..37).collect();
+        let serial = par_map(&items, 1, |_, &x| x.wrapping_mul(2654435761) % 97);
+        let parallel = par_map(&items, 6, |_, &x| x.wrapping_mul(2654435761) % 97);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let calls = Counter::new(0);
+        let items: Vec<usize> = (0..50).collect();
+        let out = par_map(&items, 4, |_, &x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 50);
+        assert_eq!(calls.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<usize> = vec![];
+        assert!(par_map(&none, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[41usize], 4, |_, &x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn actually_uses_multiple_threads() {
+        // 8 items × 20 ms on 8 threads must finish well under 8×20 ms.
+        let items: Vec<usize> = (0..8).collect();
+        let t0 = std::time::Instant::now();
+        par_map(&items, 8, |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(20))
+        });
+        assert!(
+            t0.elapsed().as_millis() < 120,
+            "took {:?} — not parallel",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn available_threads_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! Integration tests for the event-driven engine refactor:
+//!
+//! 1. the stopping-type ASHA/PASHA variants reproduce the promotion-type
+//!    accuracy-vs-runtime shape on NASBench201/CIFAR-100;
+//! 2. cancellation never leaks results — a trial's recorded curve covers
+//!    exactly its delivered milestones, and halted runs keep partial
+//!    state consistent;
+//! 3. the parallel experiment-grid driver yields results identical to
+//!    the serial reference, in the same order.
+
+use pasha::benchmarks::nasbench201::NasBench201;
+use pasha::benchmarks::pd1::Pd1;
+use pasha::scheduler::asha::AshaBuilder;
+use pasha::scheduler::pasha::PashaBuilder;
+use pasha::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
+use pasha::scheduler::SchedulerBuilder;
+use pasha::tuner::{StopSpec, TuneResult, Tuner, TunerSpec};
+use pasha::util::stats::mean;
+
+fn spec(budget: usize) -> TunerSpec {
+    TunerSpec {
+        config_budget: budget,
+        ..Default::default()
+    }
+}
+
+fn mean_over_seeds(
+    bench: &dyn pasha::benchmarks::Benchmark,
+    builder: &dyn SchedulerBuilder,
+    budget: usize,
+    f: impl Fn(&TuneResult) -> f64,
+) -> f64 {
+    let rs: Vec<f64> = (0..3u64)
+        .map(|s| f(&Tuner::run(bench, builder, &spec(budget), s, 0)))
+        .collect();
+    mean(&rs)
+}
+
+#[test]
+fn stopping_variants_reproduce_paper_shape_on_cifar100() {
+    let bench = NasBench201::cifar100();
+    let acc = |b: &dyn SchedulerBuilder| mean_over_seeds(&bench, b, 64, |r| r.retrain_accuracy);
+    let rt = |b: &dyn SchedulerBuilder| mean_over_seeds(&bench, b, 64, |r| r.runtime_seconds);
+
+    let asha_acc = acc(&AshaBuilder::default());
+    let astop_acc = acc(&StopAshaBuilder::default());
+    let pasha_acc = acc(&PashaBuilder::default());
+    let pstop_acc = acc(&StopPashaBuilder::default());
+    // Accuracy parity across all four variants (paper Table 1 band).
+    for (name, a) in [
+        ("ASHA-stop", astop_acc),
+        ("PASHA", pasha_acc),
+        ("PASHA-stop", pstop_acc),
+    ] {
+        assert!(
+            (asha_acc - a).abs() < 3.0,
+            "{name} accuracy {a:.2} vs ASHA {asha_acc:.2}"
+        );
+    }
+    // The PASHA-over-ASHA runtime saving holds within each decision mode.
+    let asha_rt = rt(&AshaBuilder::default());
+    let pasha_rt = rt(&PashaBuilder::default());
+    let astop_rt = rt(&StopAshaBuilder::default());
+    let pstop_rt = rt(&StopPashaBuilder::default());
+    assert!(
+        pasha_rt < asha_rt,
+        "promotion: pasha {pasha_rt:.0}s vs asha {asha_rt:.0}s"
+    );
+    assert!(
+        pstop_rt < astop_rt,
+        "stopping: pasha-stop {pstop_rt:.0}s vs asha-stop {astop_rt:.0}s"
+    );
+}
+
+#[test]
+fn stopping_pasha_caps_resources_like_promotion_pasha() {
+    let bench = NasBench201::cifar100();
+    let max_r = |b: &dyn SchedulerBuilder| {
+        mean_over_seeds(&bench, b, 64, |r| r.max_resources as f64)
+    };
+    // Both PASHA variants must stay below their fixed-R counterparts.
+    assert!(max_r(&PashaBuilder::default()) <= max_r(&AshaBuilder::default()));
+    assert!(max_r(&StopPashaBuilder::default()) <= max_r(&StopAshaBuilder::default()));
+}
+
+#[test]
+fn cancelled_work_never_reaches_trial_state() {
+    // Truncate an ASHA run hard with a clock budget: in-flight jobs are
+    // cancelled at the halt. Every trial's curve must still cover exactly
+    // its delivered epochs (a leaked cancellation segment would desync
+    // curve length from trained_epochs, and ShCore::record would panic
+    // on the gap in debug builds).
+    let bench = NasBench201::cifar10();
+    let full = Tuner::run(&bench, &AshaBuilder::default(), &spec(48), 0, 0);
+    assert!(full.cancelled_jobs == 0);
+    let s = TunerSpec {
+        extra_stop: vec![StopSpec::ClockBudget(full.runtime_seconds * 0.3)],
+        ..spec(48)
+    };
+    let cut = Tuner::run(&bench, &AshaBuilder::default(), &s, 0, 0);
+    assert!(cut.cancelled_jobs > 0, "halt must cancel in-flight work");
+    assert!(cut.runtime_seconds <= full.runtime_seconds * 0.3 + 1e-9);
+    assert!(cut.total_epochs < full.total_epochs);
+    // Stopping-type run: stopped trials stay frozen at their last
+    // delivered milestone.
+    let st = Tuner::run(&bench, &StopAshaBuilder::default(), &spec(48), 0, 0);
+    assert!(st.stopped_trials > 0);
+    assert_eq!(st.configs_sampled, 48);
+}
+
+#[test]
+fn parallel_grid_matches_serial_reference_across_benchmarks() {
+    let sched_seeds = [0u64, 1, 2];
+    let bench_seeds = [0u64, 1];
+    let s = spec(24);
+
+    let nas = NasBench201::cifar10();
+    let pasha = PashaBuilder::default();
+    let serial = Tuner::run_repeated_serial(&nas, &pasha, &s, &sched_seeds, &bench_seeds);
+    let parallel = Tuner::run_repeated(&nas, &pasha, &s, &sched_seeds, &bench_seeds);
+    assert_eq!(serial, parallel, "NASBench201 grid must be reproducible");
+
+    let pd1 = Pd1::wmt();
+    let pstop = StopPashaBuilder::default();
+    let serial = Tuner::run_repeated_serial(&pd1, &pstop, &s, &sched_seeds, &[0]);
+    let parallel = Tuner::run_repeated(&pd1, &pstop, &s, &sched_seeds, &[0]);
+    assert_eq!(serial, parallel, "PD1 stopping-type grid must be reproducible");
+
+    // Order is (sched_seed-major, bench_seed-minor): rows with the same
+    // bench seed but different scheduler seeds must differ.
+    assert_eq!(serial.len(), 3);
+    assert!(
+        serial[0].best_config != serial[1].best_config
+            || serial[0].runtime_seconds != serial[1].runtime_seconds,
+        "different scheduler seeds must explore differently"
+    );
+}

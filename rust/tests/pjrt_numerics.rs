@@ -1,6 +1,8 @@
 //! Cross-layer numerics: the AOT-compiled JAX/Pallas artifacts executed
 //! through PJRT must agree with independent pure-Rust reimplementations.
-//! Skipped gracefully (with a note) before `make artifacts`.
+//! Skipped gracefully (with a note) before `make artifacts`; the whole
+//! suite only exists when the crate is built with the `pjrt` feature.
+#![cfg(feature = "pjrt")]
 
 use pasha::benchmarks::realtrain::{Dataset, RealTrainSpec, CLASSES, FEATURES, VAL_N};
 use pasha::config::space::{Config, ParamValue as P};
