@@ -1,0 +1,181 @@
+//! Service-layer microbenchmarks: the ask/tell hot path at four levels —
+//! the bare adapter (no journal, no socket), a journaled session, the
+//! request dispatcher (registry + JSON, no socket), and the full loopback
+//! TCP round-trip. The spread between levels is the cost of durability,
+//! of serialization, and of the wire. (The multi-session × multi-worker
+//! stress run lives in `pasha bench-json --suite service`.)
+
+use pasha::benchmarks::Benchmark;
+use pasha::config::space::SearchSpace;
+use pasha::scheduler::asktell::{assignment_from_json, AskTell, TellAck, TrialAssignment};
+use pasha::service::{handle_request, Client, Registry, Server, Session, SessionSpec};
+use pasha::tuner::bench_from_name;
+use pasha::util::benchkit::{once, section};
+use pasha::util::json::parse;
+use std::sync::Arc;
+
+fn spec(budget: usize, seed: u64) -> SessionSpec {
+    SessionSpec {
+        bench: "lcbench-Fashion-MNIST".into(),
+        scheduler: "pasha".into(),
+        config_budget: budget,
+        seed,
+        ..SessionSpec::default()
+    }
+}
+
+/// One level of the service stack under test.
+trait Port {
+    fn ask(&mut self) -> TrialAssignment;
+    fn tell(&mut self, trial: usize, epoch: u32, metric: f64) -> TellAck;
+}
+
+struct CorePort(AskTell);
+
+impl Port for CorePort {
+    fn ask(&mut self) -> TrialAssignment {
+        self.0.ask("w0")
+    }
+    fn tell(&mut self, trial: usize, epoch: u32, metric: f64) -> TellAck {
+        self.0.tell(trial, epoch, metric).unwrap()
+    }
+}
+
+struct SessionPort(Session);
+
+impl Port for SessionPort {
+    fn ask(&mut self) -> TrialAssignment {
+        self.0.ask("w0").unwrap()
+    }
+    fn tell(&mut self, trial: usize, epoch: u32, metric: f64) -> TellAck {
+        self.0.tell(trial, epoch, metric).unwrap()
+    }
+}
+
+struct RequestPort<'a> {
+    reg: &'a Registry,
+    sid: String,
+    space: SearchSpace,
+}
+
+impl Port for RequestPort<'_> {
+    fn ask(&mut self) -> TrialAssignment {
+        let req = format!("{{\"cmd\":\"ask\",\"session\":\"{}\",\"worker\":\"w0\"}}", self.sid);
+        let resp = handle_request(self.reg, &parse(&req).unwrap());
+        assignment_from_json(&self.space, &resp).unwrap()
+    }
+    fn tell(&mut self, trial: usize, epoch: u32, metric: f64) -> TellAck {
+        let req = format!(
+            "{{\"cmd\":\"tell\",\"session\":\"{}\",\"trial\":{trial},\
+             \"epoch\":{epoch},\"metric\":{metric}}}",
+            self.sid
+        );
+        let resp = handle_request(self.reg, &parse(&req).unwrap());
+        TellAck::parse(resp.get("ack").and_then(|v| v.as_str()).unwrap_or("")).unwrap()
+    }
+}
+
+struct TcpPort {
+    client: Client,
+    sid: String,
+    space: SearchSpace,
+}
+
+impl Port for TcpPort {
+    fn ask(&mut self) -> TrialAssignment {
+        self.client.ask(&self.sid, "w0", &self.space).unwrap()
+    }
+    fn tell(&mut self, trial: usize, epoch: u32, metric: f64) -> TellAck {
+        self.client.tell(&self.sid, trial, epoch, metric).unwrap()
+    }
+}
+
+/// Drive one session to completion with a single synchronous worker;
+/// returns the number of ask+tell operations issued.
+fn drive(port: &mut dyn Port, bench: &dyn Benchmark) -> usize {
+    let mut ops = 0usize;
+    loop {
+        ops += 1;
+        match port.ask() {
+            TrialAssignment::Run(job) => {
+                for e in job.from_epoch + 1..=job.milestone {
+                    let m = bench.accuracy_at(&job.config, e, 0);
+                    ops += 1;
+                    if port.tell(job.trial, e, m) == TellAck::Abandon {
+                        break;
+                    }
+                }
+            }
+            TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+            TrialAssignment::Wait => panic!("single worker never waits"),
+            TrialAssignment::Done => return ops,
+        }
+    }
+}
+
+fn report_rate(ops: usize, dt: std::time::Duration) {
+    println!("  -> {:.0} ops/s", ops as f64 / dt.as_secs_f64().max(1e-9));
+}
+
+fn main() {
+    let budget = 48;
+    let bench = bench_from_name("lcbench-Fashion-MNIST").unwrap();
+
+    section("service: ask/tell core (in-process, no journal)");
+    let mut core = CorePort(spec(budget, 0).build_core().unwrap());
+    let (ops, dt) = once("pasha session, core only", || drive(&mut core, bench.as_ref()));
+    report_rate(ops, dt);
+
+    section("service: journaled session (write-ahead log on every op)");
+    let dir = std::env::temp_dir().join(format!("pasha-bench-svc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.jsonl");
+    let session = Session::create("bench", spec(budget, 0), Some(&path)).unwrap();
+    let mut port = SessionPort(session);
+    let (ops, dt) = once("pasha session, journaled", || drive(&mut port, bench.as_ref()));
+    report_rate(ops, dt);
+    drop(port);
+    let (recovered, rdt) = once("journal recovery (full replay)", || {
+        Session::recover(&path).unwrap().1.events_replayed
+    });
+    println!(
+        "  -> {recovered} events in {:.3}s ({:.0} events/s)",
+        rdt.as_secs_f64(),
+        recovered as f64 / rdt.as_secs_f64().max(1e-9)
+    );
+
+    section("service: request dispatch (registry + JSON, no socket)");
+    let reg = Registry::in_memory();
+    let sid = reg.create(spec(budget, 1)).unwrap();
+    let mut port = RequestPort {
+        reg: &reg,
+        sid,
+        space: bench.space().clone(),
+    };
+    let (ops, dt) = once("pasha session, handle_request", || {
+        drive(&mut port, bench.as_ref())
+    });
+    report_rate(ops, dt);
+
+    section("service: full loopback TCP round-trips");
+    let server = Server::bind("127.0.0.1:0", Arc::new(Registry::in_memory())).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(&addr).unwrap();
+    let sid = client.create(&spec(budget, 2)).unwrap();
+    let mut port = TcpPort {
+        client,
+        sid,
+        space: bench.space().clone(),
+    };
+    let (ops, dt) = once("pasha session over TCP", || drive(&mut port, bench.as_ref()));
+    println!(
+        "  -> {:.0} round-trips/s ({:.1} µs/op)",
+        ops as f64 / dt.as_secs_f64().max(1e-9),
+        dt.as_secs_f64() * 1e6 / ops.max(1) as f64
+    );
+    port.client.shutdown().unwrap();
+    let _ = server_thread.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -58,6 +58,10 @@ pub struct EngineStats {
     pub idle_worker_seconds: f64,
     /// In-flight jobs cancelled (scheduler stops/pauses + rule halts).
     pub cancelled_jobs: usize,
+    /// Jobs that failed on a worker (evaluator panic, dead worker)
+    /// without delivering a result. The affected trial's frontier is
+    /// rewound and it stays schedulable.
+    pub failed_jobs: usize,
     /// Trials terminated by a scheduler `Stop` decision.
     pub stopped_trials: usize,
     /// Trials suspended by a scheduler `Pause` decision.
@@ -175,6 +179,12 @@ pub enum ExecEvent {
     /// surfaces when the discarded result arrives; the simulator cancels
     /// instantly and never emits this).
     Cancelled { trial: TrialId },
+    /// A job failed on its worker — the evaluator panicked or the worker
+    /// died — and will never deliver a result. The engine rewinds the
+    /// trial's dispatch frontier ([`Scheduler::on_cancelled`]) and keeps
+    /// going: one bad worker must not take down the run (or, in service
+    /// mode, the server).
+    Failed { trial: TrialId, error: String },
 }
 
 /// What [`ExecBackend::cancel`] did.
@@ -420,6 +430,14 @@ pub fn run_engine(
                 // scheduler, and any parked job for the trial becomes
                 // dispatchable.
                 pending_retire.remove(&trial);
+            }
+            ExecEvent::Failed { trial, error } => {
+                // Recoverable worker failure: the job's epochs were never
+                // trained, so rewind the frontier and continue the run.
+                stats.failed_jobs += 1;
+                pending_retire.remove(&trial);
+                eprintln!("engine: job for trial {trial} failed: {error}");
+                scheduler.on_cancelled(trial);
             }
         }
     }

@@ -21,7 +21,8 @@ use crate::config::space::{Config, SearchSpace};
 use crate::scheduler::{Job, JobOutcome, Scheduler};
 use crate::searcher::Searcher;
 use crate::TrialId;
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -53,6 +54,21 @@ enum WorkerMsg {
     Stop,
 }
 
+/// What a worker thread sends back for one job.
+enum WorkerReply {
+    Done(JobOutcome),
+    /// The evaluator panicked; the worker caught it and lives on.
+    Panicked { trial: TrialId, error: String },
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
+}
+
 /// One running job's bookkeeping: which worker holds it and since when.
 struct InFlightJob {
     wid: usize,
@@ -60,9 +76,16 @@ struct InFlightJob {
 }
 
 /// The wall-clock thread-pool backend.
+///
+/// Failure model (the worker-facing error audit): an evaluator panic is
+/// caught on the worker thread and surfaces as [`ExecEvent::Failed`] —
+/// never a poisoned channel or a crashed engine. A dead worker (its
+/// channel closed) has its slot retired and its job re-routed or failed;
+/// total loss of the pool drains the run with `Failed` events instead of
+/// panicking. The engine treats `Failed` as "epochs never trained".
 pub struct PoolBackend {
     job_txs: Vec<mpsc::Sender<WorkerMsg>>,
-    result_rx: mpsc::Receiver<(usize, JobOutcome)>,
+    result_rx: mpsc::Receiver<(usize, WorkerReply)>,
     handles: Vec<std::thread::JoinHandle<()>>,
     workers: usize,
     free: Vec<usize>,
@@ -70,6 +93,9 @@ pub struct PoolBackend {
     in_flight: HashMap<TrialId, InFlightJob>,
     /// Trials whose in-flight result must be discarded on arrival.
     discarded: HashSet<TrialId>,
+    /// Locally-generated events (dispatch failures) delivered before the
+    /// next channel receive.
+    pending: VecDeque<ExecEvent>,
     /// Σ worker-held seconds over retired jobs (discarded included —
     /// the worker was occupied either way).
     busy_seconds: f64,
@@ -80,7 +106,7 @@ impl PoolBackend {
     /// Spawn `workers` OS threads sharing `evaluator`.
     pub fn spawn<E: SharedEvaluator + 'static>(workers: usize, evaluator: Arc<E>) -> Self {
         assert!(workers >= 1);
-        let (result_tx, result_rx) = mpsc::channel::<(usize, JobOutcome)>();
+        let (result_tx, result_rx) = mpsc::channel::<(usize, WorkerReply)>();
         let mut job_txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
@@ -90,17 +116,27 @@ impl PoolBackend {
             let evaluator = Arc::clone(&evaluator);
             handles.push(std::thread::spawn(move || {
                 while let Ok(WorkerMsg::Run(job)) = rx.recv() {
-                    let adv =
-                        evaluator.advance(job.trial, &job.config, job.from_epoch, job.milestone);
-                    let metric = adv.accs.last().copied().unwrap_or(f64::NAN);
-                    let outcome = JobOutcome {
-                        trial: job.trial,
-                        rung: job.rung,
-                        milestone: job.milestone,
-                        metric,
-                        curve_segment: adv.accs,
+                    let trial = job.trial;
+                    let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        evaluator.advance(job.trial, &job.config, job.from_epoch, job.milestone)
+                    }));
+                    let reply = match caught {
+                        Ok(adv) => {
+                            let metric = adv.accs.last().copied().unwrap_or(f64::NAN);
+                            WorkerReply::Done(JobOutcome {
+                                trial,
+                                rung: job.rung,
+                                milestone: job.milestone,
+                                metric,
+                                curve_segment: adv.accs,
+                            })
+                        }
+                        Err(payload) => WorkerReply::Panicked {
+                            trial,
+                            error: panic_message(payload),
+                        },
                     };
-                    if result_tx.send((wid, outcome)).is_err() {
+                    if result_tx.send((wid, reply)).is_err() {
                         break;
                     }
                 }
@@ -114,6 +150,7 @@ impl PoolBackend {
             free: (0..workers).rev().collect(),
             in_flight: HashMap::new(),
             discarded: HashSet::new(),
+            pending: VecDeque::new(),
             busy_seconds: 0.0,
             started: Instant::now(),
         }
@@ -137,35 +174,77 @@ impl ExecBackend for PoolBackend {
              (pool cancellation retires only when the worker finishes)",
             job.trial
         );
-        let wid = self.free.pop().expect("dispatch without a free worker");
-        self.in_flight.insert(
-            job.trial,
-            InFlightJob {
-                wid,
-                since: self.now(),
-            },
-        );
-        self.job_txs[wid]
-            .send(WorkerMsg::Run(job))
-            .expect("worker died");
+        let trial = job.trial;
+        // A worker whose channel is closed died mid-run (should be
+        // impossible now that evaluator panics are caught, but a worker
+        // can still abort). Retire its slot and try the next one.
+        while let Some(wid) = self.free.pop() {
+            if self.job_txs[wid].send(WorkerMsg::Run(job.clone())).is_ok() {
+                self.in_flight.insert(
+                    trial,
+                    InFlightJob {
+                        wid,
+                        since: self.now(),
+                    },
+                );
+                return;
+            }
+            eprintln!("pasha pool: worker {wid} is gone; retiring its slot");
+        }
+        // No live worker could take the job: surface a recoverable
+        // failure instead of panicking the engine.
+        self.pending.push_back(ExecEvent::Failed {
+            trial,
+            error: "no live worker available".into(),
+        });
     }
 
     fn next_event(&mut self) -> Option<ExecEvent> {
+        if let Some(ev) = self.pending.pop_front() {
+            return Some(ev);
+        }
         if self.in_flight.is_empty() {
             return None;
         }
-        let (wid, outcome) = self.result_rx.recv().expect("all workers died");
-        if let Some(fl) = self.in_flight.remove(&outcome.trial) {
+        let (wid, reply) = match self.result_rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                // Every worker disconnected with jobs still in flight:
+                // retire them and let the engine drain. Jobs already
+                // cancelled by the scheduler were counted then — they
+                // retire as Cancelled, not as a second failure.
+                eprintln!("pasha pool: all workers disconnected; failing in-flight jobs");
+                let trials: Vec<TrialId> = self.in_flight.keys().copied().collect();
+                for trial in trials {
+                    self.in_flight.remove(&trial);
+                    let ev = if self.discarded.remove(&trial) {
+                        ExecEvent::Cancelled { trial }
+                    } else {
+                        ExecEvent::Failed {
+                            trial,
+                            error: "worker pool lost".into(),
+                        }
+                    };
+                    self.pending.push_back(ev);
+                }
+                return self.pending.pop_front();
+            }
+        };
+        let trial = match &reply {
+            WorkerReply::Done(outcome) => outcome.trial,
+            WorkerReply::Panicked { trial, .. } => *trial,
+        };
+        if let Some(fl) = self.in_flight.remove(&trial) {
             debug_assert_eq!(fl.wid, wid);
             self.busy_seconds += self.now() - fl.since;
         }
         self.free.push(wid);
-        if self.discarded.remove(&outcome.trial) {
-            Some(ExecEvent::Cancelled {
-                trial: outcome.trial,
-            })
-        } else {
-            Some(ExecEvent::Completed(outcome))
+        if self.discarded.remove(&trial) {
+            return Some(ExecEvent::Cancelled { trial });
+        }
+        match reply {
+            WorkerReply::Done(outcome) => Some(ExecEvent::Completed(outcome)),
+            WorkerReply::Panicked { trial, error } => Some(ExecEvent::Failed { trial, error }),
         }
     }
 
@@ -449,6 +528,50 @@ mod tests {
             "trial 1 delivers exactly once, from the resumed job"
         );
         assert_eq!(sched.trials[1].curve.len(), 1, "no leaked segment");
+    }
+
+    /// The worker-facing error audit: an evaluator panic must surface as
+    /// a recoverable `Failed` event — the run completes, the panicking
+    /// trial is simply never trained, and nothing else is lost.
+    #[test]
+    fn evaluator_panic_is_recoverable() {
+        struct Faulty {
+            bench: NasBench201,
+        }
+
+        impl SharedEvaluator for Faulty {
+            fn advance(&self, trial: TrialId, config: &Config, from: u32, to: u32) -> Advance {
+                if trial == 1 {
+                    panic!("injected evaluator fault on trial 1");
+                }
+                Advance {
+                    accs: (from + 1..=to)
+                        .map(|e| self.bench.accuracy_at(config, e, 0))
+                        .collect(),
+                    cost_seconds: 0.0,
+                }
+            }
+        }
+
+        let bench = NasBench201::cifar10();
+        let space = bench.space().clone();
+        let mut scheduler = AshaBuilder::default().build(27, 0);
+        let mut searcher = RandomSearcher::new(2);
+        let eval = Arc::new(Faulty {
+            bench: NasBench201::cifar10(),
+        });
+        let mut backend = PoolBackend::spawn(2, eval);
+        let rules: Vec<Box<dyn StoppingRule>> = vec![Box::new(ConfigBudget(12))];
+        let stats = run_engine(scheduler.as_mut(), &mut searcher, &space, &rules, &mut backend);
+        assert_eq!(stats.failed_jobs, 1, "trial 1's job fails exactly once");
+        assert_eq!(stats.configs_sampled, 12, "the run still drains its budget");
+        assert!(stats.jobs >= 11, "every other trial completes");
+        assert!(scheduler.best().unwrap().metric.is_finite());
+        assert_eq!(
+            scheduler.trials()[1].trained_epochs(),
+            0,
+            "the failed job's epochs were never recorded"
+        );
     }
 
     #[test]

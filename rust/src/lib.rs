@@ -9,7 +9,9 @@
 //!   drives PASHA's progressive resource growth ([`ranking`]), searchers
 //!   ([`searcher`]: random and MOBSTER-style GP+EI), a discrete-event
 //!   multi-worker executor ([`executor`]), benchmark substrates
-//!   ([`benchmarks`]) and the orchestration layer ([`tuner`]).
+//!   ([`benchmarks`]), the orchestration layer ([`tuner`]), and the
+//!   ask/tell tuning service ([`service`]): durable journaled sessions
+//!   served over TCP to external workers (`pasha serve` / `pasha worker`).
 //! * **Layer 2** — JAX compute graphs (`python/compile/model.py`): MLP
 //!   train/eval steps, the GP posterior + EI acquisition, the 1-NN
 //!   surrogate — AOT-lowered to HLO text at build time.
@@ -36,6 +38,7 @@ pub mod report;
 pub mod runtime;
 pub mod scheduler;
 pub mod searcher;
+pub mod service;
 pub mod tuner;
 pub mod util;
 

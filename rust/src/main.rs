@@ -8,26 +8,29 @@
 //! pasha table  <id>  [--scale paper|smoke] [--out results/]
 //! pasha figure <1..5> [--out results/]
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
-//! pasha bench-json [--out FILE]                          # engine perf record
+//! pasha bench-json [--suite engine|service|all] [--out FILE]
+//! pasha serve  [--addr A] [--journal-dir DIR]           # ask/tell service
+//! pasha worker --addr A (--session ID | --create ...) [--expire]
+//! pasha sessions --addr A                                # list sessions
+//! pasha recover --journal FILE                           # journal check
 //! pasha e2e    [--budget N] [--hidden H]                # real PJRT training
 //! pasha artifacts-check                                  # PJRT smoke test
 //! ```
 
-use pasha::benchmarks::lcbench::LcBench;
 use pasha::benchmarks::nasbench201::{NasBench201, Nb201Dataset};
-use pasha::benchmarks::pd1::Pd1;
 use pasha::benchmarks::Benchmark;
 use pasha::report::{experiments, figures};
 use pasha::scheduler::asha::AshaBuilder;
-use pasha::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
-use pasha::scheduler::hyperband::HyperbandBuilder;
+use pasha::scheduler::asktell::config_from_json;
 use pasha::scheduler::pasha::PashaBuilder;
-use pasha::scheduler::sh::SyncShBuilder;
-use pasha::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
-use pasha::scheduler::SchedulerBuilder;
-use pasha::tuner::{SearcherKind, StopSpec, Tuner, TunerSpec};
+use pasha::service::{run_worker, Client, Registry, Server, Session, SessionSpec};
+use pasha::tuner::{
+    bench_from_name, scheduler_from_name, SearcherKind, StopSpec, Tuner, TunerSpec,
+};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -43,6 +46,10 @@ fn main() {
         "figure" => cmd_figure(rest.first().map(|s| s.as_str()), &flags),
         "report" => cmd_report(&flags),
         "bench-json" => cmd_bench_json(&flags),
+        "serve" => cmd_serve(&flags),
+        "worker" => cmd_worker(&flags),
+        "sessions" => cmd_sessions(&flags),
+        "recover" => cmd_recover(&flags),
         "e2e" => cmd_e2e(&flags),
         "artifacts-check" => cmd_artifacts_check(),
         "help" | "--help" | "-h" => {
@@ -73,7 +80,13 @@ USAGE:
   pasha table  <1|2|3|4|5|6|8|9|10|11|12|13|14|15|ablation|stopping> [--scale paper|smoke] [--out DIR]
   pasha figure <1|2|3|4|5> [--out DIR]
   pasha report [--scale paper|smoke] [--out DIR]
-  pasha bench-json [--out FILE]            # serial-vs-parallel grid + sim throughput
+  pasha bench-json [--suite engine|service|all] [--out FILE]
+  pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR]
+  pasha worker --addr HOST:PORT (--session ID | --create [--bench B] [--scheduler S]
+               [--budget N] [--seed S] [--eta E] [--searcher random|bo] [--epoch-budget E])
+               [--worker-id W] [--expire] [--shutdown]
+  pasha sessions --addr HOST:PORT
+  pasha recover --journal FILE             # verify a session journal replays cleanly
   pasha e2e    [--budget N] [--hidden 64|128|256] [--workers W]
   pasha artifacts-check"
     );
@@ -121,53 +134,6 @@ fn scale(flags: &HashMap<String, String>) -> experiments::Scale {
     }
 }
 
-fn make_bench(name: &str) -> Result<Box<dyn Benchmark>, String> {
-    Ok(match name {
-        "nas-cifar10" => Box::new(NasBench201::cifar10()),
-        "nas-cifar100" => Box::new(NasBench201::cifar100()),
-        "nas-imagenet16" => Box::new(NasBench201::imagenet16()),
-        "pd1-wmt" => Box::new(Pd1::wmt()),
-        "pd1-imagenet" => Box::new(Pd1::imagenet()),
-        other => {
-            if let Some(ds) = other.strip_prefix("lcbench-") {
-                Box::new(LcBench::new(ds))
-            } else {
-                return Err(format!("unknown benchmark '{other}'"));
-            }
-        }
-    })
-}
-
-fn make_scheduler(
-    name: &str,
-    eta: u32,
-    budget: usize,
-) -> Result<Box<dyn SchedulerBuilder>, String> {
-    Ok(match name {
-        "asha" => Box::new(AshaBuilder { r_min: 1, eta }),
-        "pasha" => Box::new(PashaBuilder {
-            r_min: 1,
-            eta,
-            ranking: Default::default(),
-        }),
-        "asha-stop" => Box::new(StopAshaBuilder { r_min: 1, eta }),
-        "pasha-stop" => Box::new(StopPashaBuilder {
-            r_min: 1,
-            eta,
-            ranking: Default::default(),
-        }),
-        "sh" => Box::new(SyncShBuilder {
-            r_min: 1,
-            eta,
-            n0: budget,
-        }),
-        "hyperband" => Box::new(HyperbandBuilder { r_min: 1, eta }),
-        "1-epoch" => Box::new(FixedEpochBuilder { epochs: 1 }),
-        "random" => Box::new(RandomBaselineBuilder),
-        other => return Err(format!("unknown scheduler '{other}'")),
-    })
-}
-
 fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
     let bench_name = flags
         .get("bench")
@@ -185,8 +151,8 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         Some("bo") => SearcherKind::Bo,
         _ => SearcherKind::Random,
     };
-    let bench = make_bench(&bench_name)?;
-    let builder = make_scheduler(&sched_name, eta, budget)?;
+    let bench = bench_from_name(&bench_name)?;
+    let builder = scheduler_from_name(&sched_name, eta, budget)?;
     let mut extra_stop = Vec::new();
     if let Some(v) = flags.get("epoch-budget") {
         let e: u64 = v
@@ -341,10 +307,26 @@ fn cmd_report(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Performance records (`BENCH_*.json`): `--suite engine` (default) for
+/// the in-process engine, `--suite service` for the TCP ask/tell loop,
+/// `--suite all` for both.
+fn cmd_bench_json(flags: &HashMap<String, String>) -> Result<(), String> {
+    match flags.get("suite").map(|s| s.as_str()).unwrap_or("engine") {
+        "engine" => bench_engine(flags),
+        "service" => bench_service(flags, flags.get("out").cloned()),
+        "all" => {
+            bench_engine(flags)?;
+            // `all` keeps each suite's default file name to avoid clobbering
+            bench_service(flags, None)
+        }
+        other => Err(format!("unknown bench suite '{other}'")),
+    }
+}
+
 /// Record the engine's performance trajectory: serial-vs-parallel
 /// experiment-grid wall time (with a result-identity check) and raw
 /// simulator throughput, written as `BENCH_engine.json`.
-fn cmd_bench_json(flags: &HashMap<String, String>) -> Result<(), String> {
+fn bench_engine(flags: &HashMap<String, String>) -> Result<(), String> {
     use pasha::util::json::Json;
     use pasha::util::parallel::available_threads;
     use std::time::Instant;
@@ -420,6 +402,302 @@ fn cmd_bench_json(flags: &HashMap<String, String>) -> Result<(), String> {
     if !identical {
         return Err("parallel grid diverged from serial reference".into());
     }
+    Ok(())
+}
+
+/// Loopback stress benchmark for the ask/tell service: N concurrent
+/// sessions × M workers over localhost TCP, recording ask/tell
+/// throughput and latency percentiles into `BENCH_service.json`, plus a
+/// single-worker determinism check against the in-process tuner.
+fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result<(), String> {
+    use pasha::scheduler::asktell::{TellAck, TrialAssignment};
+    use pasha::util::json::Json;
+    use pasha::util::stats::percentile;
+    use std::time::Instant;
+
+    let out_path = PathBuf::from(out.unwrap_or_else(|| "BENCH_service.json".to_string()));
+    let n_sessions: usize = flag(flags, "sessions", 4);
+    let m_workers: usize = flag(flags, "workers", 4);
+    let budget: usize = flag(flags, "budget", 24);
+    let bench_name = "lcbench-Fashion-MNIST";
+
+    // Journal into a scratch dir so the measured path includes the WAL.
+    let dir = std::env::temp_dir().join(format!("pasha-bench-service-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let registry = Registry::with_journal_dir(dir.clone()).map_err(|e| e.to_string())?;
+    let server = Server::bind("127.0.0.1:0", Arc::new(registry)).map_err(|e| e.to_string())?;
+    let addr = server.local_addr().map_err(|e| e.to_string())?.to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let spec_for = |seed: u64| SessionSpec {
+        bench: bench_name.to_string(),
+        scheduler: "pasha".into(),
+        config_budget: budget,
+        seed,
+        ..SessionSpec::default()
+    };
+    let mut control = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let mut session_ids = Vec::new();
+    for s in 0..n_sessions {
+        session_ids.push(control.create(&spec_for(s as u64)).map_err(|e| e.to_string())?);
+    }
+
+    // The stress phase: every (session, worker) pair drives the session
+    // over its own TCP connection, timing each round-trip.
+    let bench = bench_from_name(bench_name)?;
+    let t0 = Instant::now();
+    let per_thread: Vec<Result<(Vec<f64>, Vec<f64>), String>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for sid in &session_ids {
+            for w in 0..m_workers {
+                let bench = &bench;
+                let addr = addr.as_str();
+                handles.push(scope.spawn(move || {
+                    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+                    let wid = format!("w{w}");
+                    let space = bench.space().clone();
+                    let mut asks = Vec::new();
+                    let mut tells = Vec::new();
+                    loop {
+                        let t = Instant::now();
+                        let a = client.ask(sid, &wid, &space).map_err(|e| e.to_string())?;
+                        asks.push(t.elapsed().as_secs_f64() * 1e6);
+                        match a {
+                            TrialAssignment::Run(job) => {
+                                for e in job.from_epoch + 1..=job.milestone {
+                                    let m = bench.accuracy_at(&job.config, e, 0);
+                                    let t = Instant::now();
+                                    let ack = client
+                                        .tell(sid, job.trial, e, m)
+                                        .map_err(|e| e.to_string())?;
+                                    tells.push(t.elapsed().as_secs_f64() * 1e6);
+                                    if ack == TellAck::Abandon {
+                                        break;
+                                    }
+                                }
+                            }
+                            TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                            TrialAssignment::Wait => std::thread::sleep(Duration::from_millis(1)),
+                            TrialAssignment::Done => return Ok((asks, tells)),
+                        }
+                    }
+                }));
+            }
+        }
+        handles.into_iter().map(|h| h.join().expect("worker thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut ask_us = Vec::new();
+    let mut tell_us = Vec::new();
+    for r in per_thread {
+        let (a, t) = r?;
+        ask_us.extend(a);
+        tell_us.extend(t);
+    }
+    let ops = ask_us.len() + tell_us.len();
+
+    // Determinism check (the acceptance bar): a fresh single-worker
+    // session over TCP must land on the same incumbent as Tuner::run
+    // with the same seeds.
+    let solo_spec = spec_for(0);
+    let solo_id = control.create(&solo_spec).map_err(|e| e.to_string())?;
+    run_worker(
+        &mut control,
+        &solo_id,
+        "solo",
+        bench.as_ref(),
+        solo_spec.bench_seed,
+        Duration::from_millis(1),
+    )
+    .map_err(|e| e.to_string())?;
+    let solo_status = control.status(&solo_id).map_err(|e| e.to_string())?;
+    let served_best = solo_status
+        .get("best_metric")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(f64::NAN);
+    let tuner_spec = TunerSpec {
+        workers: 1,
+        config_budget: budget,
+        searcher: SearcherKind::Random,
+        extra_stop: Vec::new(),
+    };
+    let builder = scheduler_from_name("pasha", 3, budget)?;
+    let inproc = Tuner::run(bench.as_ref(), builder.as_ref(), &tuner_spec, 0, 0);
+    let matches = served_best.to_bits() == inproc.best_metric.to_bits();
+
+    control.shutdown().map_err(|e| e.to_string())?;
+    let _ = server_thread.join();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let lat = |v: &[f64]| -> (f64, f64) {
+        if v.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(v, 50.0), percentile(v, 99.0))
+        }
+    };
+    let (ask_p50, ask_p99) = lat(&ask_us);
+    let (tell_p50, tell_p99) = lat(&tell_us);
+    let mut ask_j = Json::obj();
+    ask_j.set("count", ask_us.len()).set("p50_us", ask_p50).set("p99_us", ask_p99);
+    let mut tell_j = Json::obj();
+    tell_j.set("count", tell_us.len()).set("p50_us", tell_p50).set("p99_us", tell_p99);
+    let mut root = Json::obj();
+    root.set("benchmark", "service")
+        .set("sessions", n_sessions)
+        .set("workers_per_session", m_workers)
+        .set("config_budget", budget)
+        .set("wall_seconds", wall)
+        .set("ops", ops)
+        .set("ops_per_sec", ops as f64 / wall.max(1e-9))
+        .set("ask", ask_j)
+        .set("tell", tell_j)
+        .set("single_worker_matches_inprocess", matches);
+    std::fs::write(&out_path, root.to_string_pretty()).map_err(|e| e.to_string())?;
+    println!(
+        "service: {n_sessions} sessions x {m_workers} workers, {ops} ops in {wall:.2}s \
+         ({:.0} ops/s); ask p50/p99 {ask_p50:.0}/{ask_p99:.0}us, \
+         tell p50/p99 {tell_p50:.0}/{tell_p99:.0}us",
+        ops as f64 / wall.max(1e-9)
+    );
+    println!("single-worker incumbent matches in-process tuner: {matches}");
+    println!("wrote {}", out_path.display());
+    if !matches {
+        return Err("served session diverged from in-process Tuner::run".into());
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7171".to_string());
+    let registry = match flags.get("journal-dir") {
+        Some(d) => Registry::with_journal_dir(PathBuf::from(d)).map_err(|e| e.to_string())?,
+        None => Registry::in_memory(),
+    };
+    for (id, rep) in registry.recovered() {
+        println!(
+            "recovered session {id}: {} events replayed ({} torn bytes dropped)",
+            rep.events_replayed, rep.truncated_bytes
+        );
+    }
+    let server = Server::bind(&addr, Arc::new(registry)).map_err(|e| e.to_string())?;
+    println!(
+        "pasha serve: listening on {}",
+        server.local_addr().map_err(|e| e.to_string())?
+    );
+    server.run().map_err(|e| e.to_string())
+}
+
+fn cmd_worker(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7171".to_string());
+    let worker_id = flags.get("worker-id").cloned().unwrap_or_else(|| "w0".to_string());
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let session = match flags.get("session") {
+        Some(id) => id.clone(),
+        None if flags.contains_key("create") => {
+            let searcher = match flags.get("searcher").map(|s| s.as_str()) {
+                Some("bo") => SearcherKind::Bo,
+                _ => SearcherKind::Random,
+            };
+            let spec = SessionSpec {
+                bench: flags
+                    .get("bench")
+                    .cloned()
+                    .unwrap_or_else(|| "lcbench-Fashion-MNIST".to_string()),
+                scheduler: flags
+                    .get("scheduler")
+                    .cloned()
+                    .unwrap_or_else(|| "pasha".to_string()),
+                eta: flag(flags, "eta", 3),
+                searcher,
+                seed: flag(flags, "seed", 0),
+                bench_seed: flag(flags, "bench-seed", 0),
+                config_budget: flag(flags, "budget", 32),
+                epoch_budget: flags.get("epoch-budget").and_then(|v| v.parse().ok()),
+            };
+            let id = client.create(&spec).map_err(|e| e.to_string())?;
+            println!("created session {id}");
+            id
+        }
+        None => return Err("need --session ID or --create".into()),
+    };
+    // Rejoining a session whose previous workers died with the server?
+    // --expire re-queues their orphaned in-flight jobs first.
+    if flags.contains_key("expire") {
+        let expired = client.expire(&session).map_err(|e| e.to_string())?;
+        println!("expired {expired} orphaned in-flight jobs");
+    }
+    // The session's spec names the benchmark this worker must evaluate.
+    let status = client.status(&session).map_err(|e| e.to_string())?;
+    let spec_json = status.get("spec").ok_or("status response missing spec")?;
+    let spec = SessionSpec::from_json(spec_json)?;
+    let bench = bench_from_name(&spec.bench)?;
+    let t0 = std::time::Instant::now();
+    let report = run_worker(
+        &mut client,
+        &session,
+        &worker_id,
+        bench.as_ref(),
+        spec.bench_seed,
+        Duration::from_millis(20),
+    )
+    .map_err(|e| e.to_string())?;
+    let status = client.status(&session).map_err(|e| e.to_string())?;
+    println!(
+        "session {session} drained: {} jobs, {} epochs told, {} abandoned ({:.2}s wall)",
+        report.jobs_completed,
+        report.epochs_told,
+        report.jobs_abandoned,
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(m) = status.get("best_metric").and_then(|v| v.as_f64()) {
+        println!("best val metric  : {m:.2}");
+        if let Some(cfg_json) = status.get("best_config") {
+            let config = config_from_json(bench.space(), cfg_json)?;
+            let retrain = bench.retrain_accuracy(&config, spec.bench_seed);
+            println!("retrain accuracy : {retrain:.2}%  (config {config})");
+        }
+    }
+    if flags.contains_key("shutdown") {
+        client.shutdown().map_err(|e| e.to_string())?;
+        println!("server shut down");
+    }
+    Ok(())
+}
+
+fn cmd_sessions(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7171".to_string());
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let statuses = client.sessions().map_err(|e| e.to_string())?;
+    println!("{}", pasha::report::service::sessions_table(&statuses).to_text());
+    Ok(())
+}
+
+/// Verify a session journal replays cleanly (CI's non-recoverable-journal
+/// gate): exits non-zero if recovery fails. Read-only — never truncates
+/// or re-opens the file, so it is safe to run against a live server's
+/// journal directory.
+fn cmd_recover(flags: &HashMap<String, String>) -> Result<(), String> {
+    let path = flags.get("journal").ok_or("need --journal FILE")?;
+    let (session, report) = Session::recover_readonly(std::path::Path::new(path))
+        .map_err(|e| format!("{path}: {e}"))?;
+    println!(
+        "journal {path}: session '{}' replayed {} events ({} torn bytes dropped)",
+        session.id, report.events_replayed, report.truncated_bytes
+    );
+    println!(
+        "{}",
+        pasha::report::service::sessions_table(&[session.status()]).to_text()
+    );
     Ok(())
 }
 

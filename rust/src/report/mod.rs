@@ -1,4 +1,6 @@
-//! Experiment registry: regenerates every table and figure of the paper.
+//! Experiment registry: regenerates every table and figure of the paper,
+//! plus reporting for the tuning service's live sessions.
 
 pub mod experiments;
 pub mod figures;
+pub mod service;

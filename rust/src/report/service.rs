@@ -1,0 +1,94 @@
+//! Per-session reporting for the tuning service: render the status
+//! objects returned by `sessions`/`status` protocol commands as an
+//! aligned table (the `pasha sessions` CLI output).
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+fn cell_str(status: &Json, key: &str) -> String {
+    status
+        .get(key)
+        .and_then(|v| v.as_str())
+        .unwrap_or("-")
+        .to_string()
+}
+
+fn cell_num(status: &Json, key: &str) -> String {
+    match status.get(key).and_then(|v| v.as_f64()) {
+        Some(n) if n.fract() == 0.0 => format!("{}", n as i64),
+        Some(n) => format!("{n:.2}"),
+        None => "-".to_string(),
+    }
+}
+
+/// One row per session: identity, progress counters, incumbent.
+pub fn sessions_table(statuses: &[Json]) -> Table {
+    let mut t = Table::new(
+        "Registered tuning sessions",
+        &[
+            "Session", "Bench", "Scheduler", "Configs", "Jobs", "Epochs", "In-flight", "Stopped",
+            "Paused", "Failed", "Max res", "Best",
+        ],
+    );
+    for st in statuses {
+        let bench = st
+            .get("spec")
+            .and_then(|s| s.get("bench"))
+            .and_then(|b| b.as_str())
+            .unwrap_or("-")
+            .to_string();
+        let best = match st.get("best_metric").and_then(|v| v.as_f64()) {
+            Some(m) => format!("{m:.2}"),
+            None => "-".to_string(),
+        };
+        t.row(&[
+            cell_str(st, "id"),
+            bench,
+            cell_str(st, "scheduler"),
+            cell_num(st, "configs_sampled"),
+            cell_num(st, "jobs_completed"),
+            cell_num(st, "epochs_completed"),
+            cell_num(st, "in_flight"),
+            cell_num(st, "stopped_trials"),
+            cell_num(st, "paused_trials"),
+            cell_num(st, "failed_jobs"),
+            cell_num(st, "max_resources"),
+            best,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::registry::Registry;
+    use crate::service::session::SessionSpec;
+
+    #[test]
+    fn renders_live_registry_statuses() {
+        let reg = Registry::in_memory();
+        let spec = SessionSpec {
+            bench: "lcbench-Fashion-MNIST".into(),
+            scheduler: "asha".into(),
+            config_budget: 4,
+            ..SessionSpec::default()
+        };
+        reg.create(spec.clone()).unwrap();
+        reg.create(spec).unwrap();
+        let table = sessions_table(&reg.statuses());
+        assert_eq!(table.rows.len(), 2);
+        let text = table.to_text();
+        assert!(text.contains("s0000"), "{text}");
+        assert!(text.contains("lcbench-Fashion-MNIST"), "{text}");
+        assert!(text.contains("ASHA"), "{text}");
+    }
+
+    #[test]
+    fn tolerates_missing_fields() {
+        let sparse = crate::util::json::parse("{\"id\":\"x\"}").unwrap();
+        let table = sessions_table(&[sparse]);
+        assert_eq!(table.rows.len(), 1);
+        assert!(table.rows[0][1..].iter().any(|c| c == "-"));
+    }
+}

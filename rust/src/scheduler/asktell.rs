@@ -1,0 +1,756 @@
+//! Ask/tell adapter: drive any [`Scheduler`] + [`Searcher`] by *pull*.
+//!
+//! The event-driven engine ([`crate::executor::engine`]) owns the driver
+//! loop: it decides when to call `next_job` and pushes results at the
+//! scheduler. The service layer ([`crate::service`]) inverts that control
+//! flow — external workers poll for work and report results whenever they
+//! have them — without consuming the engine or duplicating scheduler
+//! logic:
+//!
+//! * [`AskTell::ask`] — hand the polling worker a [`TrialAssignment`]: a
+//!   training [`Job`], a pending Stop/Pause directive for a trial that
+//!   worker is running, `Wait` (poll again) or `Done` (session drained).
+//! * [`AskTell::tell`] — absorb one per-epoch observation. Epochs are
+//!   buffered until the job's milestone, then committed as a single
+//!   [`JobOutcome`] — exactly the engine's delivery granularity, so a
+//!   session driven by one worker reproduces `run_engine` byte for byte.
+//! * Stop/Pause decisions ([`TrialAction`]) against in-flight trials mark
+//!   the job discarded: its buffered epochs are dropped, the scheduler's
+//!   dispatch frontier is rewound ([`Scheduler::on_cancelled`]), and the
+//!   worker learns on its next `tell` (ack [`TellAck::Abandon`]) or `ask`
+//!   (a `Stop`/`Pause` assignment) — the pull-model equivalent of backend
+//!   cancellation.
+//!
+//! Everything here is deterministic: given the same construction seeds
+//! and the same sequence of `ask`/`tell`/`fail` calls, the adapter
+//! traverses the same states and returns the same answers. The service
+//! journal relies on this to recover crashed sessions by replay.
+
+use crate::config::space::{Config, SearchSpace};
+use crate::executor::engine::{EngineSnapshot, StoppingRule};
+use crate::scheduler::{BestTrial, Job, JobOutcome, SchedCtx, Scheduler, TrialAction, TrialInfo};
+use crate::searcher::Searcher;
+use crate::util::json::Json;
+use crate::TrialId;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// What `ask` hands a polling worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrialAssignment {
+    /// Train `job.config` from `job.from_epoch` to `job.milestone`,
+    /// telling each epoch's metric as it is observed.
+    Run(Job),
+    /// The trial this worker was running has been terminated: abandon it.
+    Stop(TrialId),
+    /// The trial this worker was running has been suspended (resumable
+    /// later, possibly on another worker): abandon it.
+    Pause(TrialId),
+    /// Nothing to run right now, but in-flight work may unlock more.
+    Wait,
+    /// The session is complete: budget drained and nothing in flight.
+    Done,
+}
+
+impl TrialAssignment {
+    /// Whether handing out this assignment itself mutated adapter state.
+    /// `Wait`/`Done` answers are usually pure reads — but an `ask` can
+    /// park a scheduler-emitted resume and still answer `Wait`, so the
+    /// journal layer additionally compares [`AskTell::mutation_count`]
+    /// across the call rather than trusting this alone.
+    pub fn is_mutation(&self) -> bool {
+        !matches!(self, TrialAssignment::Wait | TrialAssignment::Done)
+    }
+}
+
+/// Acknowledgement of one `tell`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TellAck {
+    /// Observation recorded; keep training toward the milestone.
+    Continue,
+    /// The milestone was reached and the job committed; ask for new work.
+    JobComplete,
+    /// The job was cancelled (trial stopped/paused/failed meanwhile):
+    /// drop it and ask for new work. The told epoch was discarded.
+    Abandon,
+}
+
+impl TellAck {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TellAck::Continue => "continue",
+            TellAck::JobComplete => "job-complete",
+            TellAck::Abandon => "abandon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TellAck> {
+        match s {
+            "continue" => Some(TellAck::Continue),
+            "job-complete" => Some(TellAck::JobComplete),
+            "abandon" => Some(TellAck::Abandon),
+            _ => None,
+        }
+    }
+}
+
+/// One assigned job awaiting epoch reports.
+struct InFlight {
+    worker: String,
+    job: Job,
+    /// Metrics for epochs `from_epoch+1 ..= from_epoch+curve.len()`.
+    curve: Vec<f64>,
+    /// Cancelled by a scheduler decision or worker failure: buffered
+    /// epochs are dropped and the next tell retires the job.
+    discarded: bool,
+}
+
+/// Aggregate progress counters mirroring [`crate::executor::EngineStats`]
+/// for the pull-driven path.
+#[derive(Clone, Debug, Default)]
+pub struct AskTellStats {
+    pub cancelled_jobs: usize,
+    pub failed_jobs: usize,
+    pub stopped_trials: usize,
+    pub paused_trials: usize,
+}
+
+/// The pull-driven counterpart of `run_engine`: same scheduler protocol
+/// (`next_job` / `on_result` / `drain_actions` / `on_cancelled`), same
+/// stopping-rule composition, but workers call in instead of the loop
+/// calling out.
+pub struct AskTell {
+    scheduler: Box<dyn Scheduler>,
+    searcher: Box<dyn Searcher>,
+    space: SearchSpace,
+    rules: Vec<Box<dyn StoppingRule>>,
+    snap: EngineSnapshot,
+    in_flight: HashMap<TrialId, InFlight>,
+    /// Jobs emitted by the scheduler for trials whose discarded job has
+    /// not retired yet (same parking rule as the engine's deferred
+    /// cancellation path).
+    parked: Vec<Job>,
+    /// Stop/Pause notices awaiting delivery to the worker that holds (or
+    /// held) the affected trial.
+    directives: VecDeque<(String, TrialAction)>,
+    stopped: HashSet<TrialId>,
+    paused: HashSet<TrialId>,
+    stats: AskTellStats,
+    /// Bumped on every state change inside `ask` (dispatch *or* parking a
+    /// scheduler-emitted resume). The journal layer compares it across a
+    /// call to decide whether the ask must be logged — a `Wait` answer
+    /// that parked a job still mutated the scheduler's frontier and must
+    /// replay, or recovery would diverge.
+    mutations: u64,
+}
+
+impl AskTell {
+    pub fn new(
+        scheduler: Box<dyn Scheduler>,
+        searcher: Box<dyn Searcher>,
+        space: SearchSpace,
+        rules: Vec<Box<dyn StoppingRule>>,
+    ) -> Self {
+        AskTell {
+            scheduler,
+            searcher,
+            space,
+            rules,
+            snap: EngineSnapshot::default(),
+            in_flight: HashMap::new(),
+            parked: Vec::new(),
+            directives: VecDeque::new(),
+            stopped: HashSet::new(),
+            paused: HashSet::new(),
+            stats: AskTellStats::default(),
+            mutations: 0,
+        }
+    }
+
+    /// Monotonic count of state mutations performed by `ask` calls.
+    pub fn mutation_count(&self) -> u64 {
+        self.mutations
+    }
+
+    /// Request work on behalf of `worker`. Mirrors the engine's dispatch
+    /// phase: pending directives first, then parked (already-emitted)
+    /// jobs whose predecessor retired, then the scheduler under the
+    /// stopping rules' draw allowance.
+    pub fn ask(&mut self, worker: &str) -> TrialAssignment {
+        if let Some(pos) = self.directives.iter().position(|(w, _)| w.as_str() == worker) {
+            let (_, action) = self
+                .directives
+                .remove(pos)
+                .expect("position came from the same queue");
+            return match action {
+                TrialAction::Stop(t) => TrialAssignment::Stop(t),
+                TrialAction::Pause(t) => TrialAssignment::Pause(t),
+            };
+        }
+        loop {
+            // Parked jobs were already emitted by the scheduler, so they
+            // dispatch even once the rules say "drain" (engine parity).
+            if let Some(i) = self
+                .parked
+                .iter()
+                .position(|j| !self.in_flight.contains_key(&j.trial))
+            {
+                let job = self.parked.remove(i);
+                return self.dispatch(worker, job);
+            }
+            if self
+                .rules
+                .iter()
+                .any(|r| r.should_drain(&self.snap) || r.should_halt(&self.snap))
+            {
+                return self.idle_assignment();
+            }
+            let draws = self
+                .rules
+                .iter()
+                .filter_map(|r| r.draw_allowance(&self.snap))
+                .min()
+                .unwrap_or(usize::MAX);
+            let mut ctx = SchedCtx {
+                space: &self.space,
+                searcher: self.searcher.as_mut(),
+                configs_sampled: self.snap.configs_sampled,
+                draws_remaining: draws,
+            };
+            let job = self.scheduler.next_job(&mut ctx);
+            self.snap.configs_sampled = ctx.configs_sampled;
+            match job {
+                None => return self.idle_assignment(),
+                Some(job) if self.in_flight.contains_key(&job.trial) => {
+                    // A resume for a trial whose cancelled job has not
+                    // retired: park it and ask the scheduler again. The
+                    // scheduler's frontier advanced, so this counts as a
+                    // mutation even if the call ends up answering Wait.
+                    self.mutations += 1;
+                    self.parked.push(job);
+                }
+                Some(job) => return self.dispatch(worker, job),
+            }
+        }
+    }
+
+    fn dispatch(&mut self, worker: &str, job: Job) -> TrialAssignment {
+        self.mutations += 1;
+        self.snap.jobs_dispatched += 1;
+        self.snap.epochs_dispatched += (job.milestone - job.from_epoch) as u64;
+        self.in_flight.insert(
+            job.trial,
+            InFlight {
+                worker: worker.to_string(),
+                job: job.clone(),
+                curve: Vec::new(),
+                discarded: false,
+            },
+        );
+        TrialAssignment::Run(job)
+    }
+
+    fn idle_assignment(&self) -> TrialAssignment {
+        if self.in_flight.is_empty() && self.parked.is_empty() {
+            TrialAssignment::Done
+        } else {
+            TrialAssignment::Wait
+        }
+    }
+
+    /// Report the metric observed after training `trial` to `epoch`
+    /// (1-based, consecutive within the assigned job). Observations are
+    /// buffered until the milestone, then committed as one [`JobOutcome`].
+    ///
+    /// Errors (unknown trial, out-of-order epoch) never mutate state, so
+    /// a failed tell is a no-op for journal replay too.
+    pub fn tell(&mut self, trial: TrialId, epoch: u32, metric: f64) -> Result<TellAck, String> {
+        {
+            let fl = match self.in_flight.get_mut(&trial) {
+                Some(fl) => fl,
+                None => return Err(format!("trial {trial} has no job in flight")),
+            };
+            if fl.discarded {
+                // The cancelled job retires here: buffered epochs are
+                // dropped and any parked resume becomes dispatchable.
+                self.in_flight.remove(&trial);
+                return Ok(TellAck::Abandon);
+            }
+            let expect = fl.job.from_epoch + fl.curve.len() as u32 + 1;
+            if epoch != expect {
+                return Err(format!(
+                    "out-of-order tell for trial {trial}: epoch {epoch}, expected {expect}"
+                ));
+            }
+            fl.curve.push(metric);
+            if epoch < fl.job.milestone {
+                return Ok(TellAck::Continue);
+            }
+        }
+        // Milestone reached: commit the job, engine-style (searcher sees
+        // the result first, then the scheduler, then its decisions).
+        let fl = self
+            .in_flight
+            .remove(&trial)
+            .expect("checked in flight above");
+        let outcome = JobOutcome {
+            trial,
+            rung: fl.job.rung,
+            milestone: fl.job.milestone,
+            metric,
+            curve_segment: fl.curve,
+        };
+        self.snap.jobs_completed += 1;
+        self.snap.epochs_completed += outcome.curve_segment.len() as u64;
+        self.searcher
+            .on_report(&fl.job.config, outcome.milestone, outcome.metric);
+        self.scheduler.on_result(&outcome);
+        for action in self.scheduler.drain_actions() {
+            let t = action.trial();
+            match action {
+                TrialAction::Stop(_) => {
+                    self.stopped.insert(t);
+                    self.stats.stopped_trials = self.stopped.len();
+                    // A parked resume must die with the trial.
+                    self.parked.retain(|j| j.trial != t);
+                }
+                TrialAction::Pause(_) => {
+                    self.paused.insert(t);
+                    self.stats.paused_trials = self.paused.len();
+                }
+            }
+            if let Some(infl) = self.in_flight.get_mut(&t) {
+                if !infl.discarded {
+                    infl.discarded = true;
+                    self.stats.cancelled_jobs += 1;
+                    self.directives.push_back((infl.worker.clone(), action));
+                    // The discarded job's epochs were never trained.
+                    self.scheduler.on_cancelled(t);
+                }
+            }
+        }
+        Ok(TellAck::JobComplete)
+    }
+
+    /// A worker failed while running `trial` (crash, panic, lost
+    /// connection): the exact job is re-queued and handed to the next
+    /// asking worker. The scheduler's bookkeeping is untouched — it
+    /// already counts the job as dispatched, and the retry completes it
+    /// as if nothing happened. (A job whose trial was meanwhile
+    /// stopped/paused was already rewound when it was cancelled and is
+    /// not re-queued.) A config that reliably kills workers will loop;
+    /// that is the operator's cue to `close` the session.
+    pub fn fail(&mut self, trial: TrialId) -> Result<(), String> {
+        match self.in_flight.remove(&trial) {
+            None => Err(format!("trial {trial} has no job in flight")),
+            Some(fl) => {
+                self.stats.failed_jobs += 1;
+                if !fl.discarded {
+                    self.parked.push(fl.job);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Re-queue every in-flight job — used after a server restart when
+    /// the previously-connected workers are known to be gone. Pending
+    /// directives for dead workers are dropped. Trials are processed in
+    /// id order so the resulting queue (and therefore the post-expire
+    /// `ask` stream) is deterministic — journal replay depends on it.
+    pub fn expire_workers(&mut self) -> usize {
+        let mut trials: Vec<TrialId> = self.in_flight.keys().copied().collect();
+        trials.sort_unstable();
+        let n = trials.len();
+        for t in trials {
+            let _ = self.fail(t);
+        }
+        self.directives.clear();
+        n
+    }
+
+    /// The session is drained: nothing in flight, nothing the scheduler
+    /// can launch. (A `Wait` answer from `ask` does not count as done.)
+    pub fn is_done(&self) -> bool {
+        // Cheap pre-check: anything in flight means not done.
+        if !self.in_flight.is_empty() || !self.parked.is_empty() || !self.directives.is_empty() {
+            return false;
+        }
+        // Probing the scheduler would mutate it; rely on rules instead:
+        // drained rules + empty in-flight is the engine's exit condition.
+        self.rules
+            .iter()
+            .any(|r| r.should_drain(&self.snap) || r.should_halt(&self.snap))
+            || self.no_draws_left()
+    }
+
+    fn no_draws_left(&self) -> bool {
+        self.rules
+            .iter()
+            .filter_map(|r| r.draw_allowance(&self.snap))
+            .min()
+            .map(|d| d == 0)
+            .unwrap_or(false)
+    }
+
+    pub fn snapshot(&self) -> EngineSnapshot {
+        self.snap.clone()
+    }
+
+    pub fn stats(&self) -> &AskTellStats {
+        &self.stats
+    }
+
+    pub fn best(&self) -> Option<BestTrial> {
+        self.scheduler.best()
+    }
+
+    pub fn max_resources_used(&self) -> u32 {
+        self.scheduler.max_resources_used()
+    }
+
+    pub fn trials(&self) -> &[TrialInfo] {
+        self.scheduler.trials()
+    }
+
+    pub fn scheduler_name(&self) -> String {
+        self.scheduler.name()
+    }
+
+    pub fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    /// Trials with a live (non-discarded) job assigned right now.
+    pub fn in_flight_count(&self) -> usize {
+        self.in_flight.values().filter(|f| !f.discarded).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire format: the canonical JSON encoding of assignments and acks, shared
+// by the journal, the TCP server and the loopback client. Object keys are
+// BTreeMap-sorted, so `assignment_json(..).to_string_compact()` is a
+// canonical byte string — what the journal-recovery property compares.
+// ---------------------------------------------------------------------------
+
+/// Encode a configuration as a JSON array of numbers (categorical/int
+/// values as integers, floats via Rust's shortest-roundtrip formatting).
+pub fn config_json(c: &Config) -> Json {
+    use crate::config::space::ParamValue;
+    Json::Arr(
+        c.values
+            .iter()
+            .map(|v| match v {
+                ParamValue::Float(x) => Json::Num(*x),
+                ParamValue::Int(x) => Json::Num(*x as f64),
+                ParamValue::Cat(x) => Json::Num(*x as f64),
+            })
+            .collect(),
+    )
+}
+
+/// Decode a configuration from [`config_json`] output. The space supplies
+/// the value kinds (the array alone cannot distinguish ints from floats).
+pub fn config_from_json(space: &SearchSpace, j: &Json) -> Result<Config, String> {
+    use crate::config::space::{Domain, ParamValue};
+    let arr = j.as_arr().ok_or("config must be an array")?;
+    if arr.len() != space.dim() {
+        return Err(format!(
+            "config has {} values, space has {}",
+            arr.len(),
+            space.dim()
+        ));
+    }
+    let mut values = Vec::with_capacity(arr.len());
+    for ((_, domain), v) in space.params.iter().zip(arr) {
+        let x = v.as_f64().ok_or("config values must be numbers")?;
+        let pv = match domain {
+            Domain::Float { .. } | Domain::LogFloat { .. } => ParamValue::Float(x),
+            Domain::Int { .. } | Domain::LogInt { .. } => ParamValue::Int(x as i64),
+            Domain::Categorical { .. } => ParamValue::Cat(x as usize),
+        };
+        values.push(pv);
+    }
+    Ok(Config::new(values))
+}
+
+/// Canonical JSON encoding of a [`TrialAssignment`].
+pub fn assignment_json(a: &TrialAssignment) -> Json {
+    let mut o = Json::obj();
+    match a {
+        TrialAssignment::Run(job) => {
+            o.set("type", "run")
+                .set("trial", job.trial)
+                .set("config", config_json(&job.config))
+                .set("rung", job.rung)
+                .set("from_epoch", job.from_epoch)
+                .set("milestone", job.milestone);
+        }
+        TrialAssignment::Stop(t) => {
+            o.set("type", "stop").set("trial", *t);
+        }
+        TrialAssignment::Pause(t) => {
+            o.set("type", "pause").set("trial", *t);
+        }
+        TrialAssignment::Wait => {
+            o.set("type", "wait");
+        }
+        TrialAssignment::Done => {
+            o.set("type", "done");
+        }
+    }
+    o
+}
+
+/// Decode a [`TrialAssignment`] from [`assignment_json`] output.
+pub fn assignment_from_json(space: &SearchSpace, j: &Json) -> Result<TrialAssignment, String> {
+    let ty = j
+        .get("type")
+        .and_then(|t| t.as_str())
+        .ok_or("assignment missing 'type'")?;
+    let trial = || -> Result<TrialId, String> {
+        j.get("trial")
+            .and_then(|t| t.as_f64())
+            .map(|t| t as TrialId)
+            .ok_or_else(|| "assignment missing 'trial'".to_string())
+    };
+    match ty {
+        "run" => {
+            let config = config_from_json(
+                space,
+                j.get("config").ok_or("run assignment missing 'config'")?,
+            )?;
+            let num = |key: &str| -> Result<f64, String> {
+                j.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("run assignment missing '{key}'"))
+            };
+            Ok(TrialAssignment::Run(Job {
+                trial: trial()?,
+                config,
+                rung: num("rung")? as usize,
+                from_epoch: num("from_epoch")? as u32,
+                milestone: num("milestone")? as u32,
+            }))
+        }
+        "stop" => Ok(TrialAssignment::Stop(trial()?)),
+        "pause" => Ok(TrialAssignment::Pause(trial()?)),
+        "wait" => Ok(TrialAssignment::Wait),
+        "done" => Ok(TrialAssignment::Done),
+        other => Err(format!("unknown assignment type '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::nasbench201::NasBench201;
+    use crate::benchmarks::Benchmark;
+    use crate::executor::engine::{run_engine, ConfigBudget};
+    use crate::executor::sim::SimBackend;
+    use crate::executor::SurrogateEvaluator;
+    use crate::scheduler::asha::AshaBuilder;
+    use crate::scheduler::pasha::PashaBuilder;
+    use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
+    use crate::scheduler::SchedulerBuilder;
+    use crate::searcher::random::RandomSearcher;
+
+    fn asktell_for(builder: &dyn SchedulerBuilder, budget: usize, seed: u64) -> AskTell {
+        let bench = NasBench201::cifar10();
+        AskTell::new(
+            builder.build(bench.max_epochs(), seed),
+            Box::new(RandomSearcher::new(seed)),
+            bench.space().clone(),
+            vec![Box::new(ConfigBudget(budget))],
+        )
+    }
+
+    /// Drive an AskTell session with one synchronous worker against the
+    /// surrogate oracle, to completion.
+    fn drive_single(at: &mut AskTell, bench: &NasBench201, bench_seed: u64) {
+        loop {
+            match at.ask("w0") {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, bench_seed);
+                        if at.tell(job.trial, e, m).unwrap() == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => panic!("single worker can never wait"),
+                TrialAssignment::Done => return,
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_engine_exactly() {
+        // One pulling worker must reproduce run_engine's trajectory:
+        // same configs sampled, same epochs, same best trial — across the
+        // promotion and stopping families.
+        let bench = NasBench201::cifar10();
+        let builders: Vec<Box<dyn SchedulerBuilder>> = vec![
+            Box::new(AshaBuilder::default()),
+            Box::new(PashaBuilder::default()),
+            Box::new(StopAshaBuilder::default()),
+            Box::new(StopPashaBuilder::default()),
+        ];
+        for builder in &builders {
+            let mut at = asktell_for(builder.as_ref(), 32, 7);
+            drive_single(&mut at, &bench, 0);
+
+            let mut scheduler = builder.build(bench.max_epochs(), 7);
+            let mut searcher = RandomSearcher::new(7);
+            let mut evaluator = SurrogateEvaluator {
+                bench: &bench,
+                bench_seed: 0,
+            };
+            let mut backend = SimBackend::new(1, &mut evaluator);
+            let rules: Vec<Box<dyn crate::executor::StoppingRule>> =
+                vec![Box::new(ConfigBudget(32))];
+            let stats = run_engine(
+                scheduler.as_mut(),
+                &mut searcher,
+                bench.space(),
+                &rules,
+                &mut backend,
+            );
+
+            let snap = at.snapshot();
+            assert_eq!(snap.configs_sampled, stats.configs_sampled, "{}", builder.name());
+            assert_eq!(snap.jobs_completed, stats.jobs, "{}", builder.name());
+            assert_eq!(snap.epochs_completed, stats.total_epochs, "{}", builder.name());
+            let (a, b) = (at.best().unwrap(), scheduler.best().unwrap());
+            assert_eq!(a.trial, b.trial, "{}", builder.name());
+            assert_eq!(a.config, b.config, "{}", builder.name());
+            assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "{}", builder.name());
+            assert_eq!(
+                at.max_resources_used(),
+                scheduler.max_resources_used(),
+                "{}",
+                builder.name()
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_order_and_unknown_tells_are_rejected_without_mutation() {
+        let bench = NasBench201::cifar10();
+        let mut at = asktell_for(&AshaBuilder::default(), 4, 0);
+        assert!(at.tell(0, 1, 50.0).is_err(), "nothing asked yet");
+        let job = match at.ask("w0") {
+            TrialAssignment::Run(j) => j,
+            other => panic!("expected a job, got {other:?}"),
+        };
+        assert!(at.tell(job.trial, job.milestone + 5, 50.0).is_err());
+        // the failed tells left the job intact: the correct epoch works
+        let m = bench.accuracy_at(&job.config, job.from_epoch + 1, 0);
+        assert!(at.tell(job.trial, job.from_epoch + 1, m).is_ok());
+    }
+
+    #[test]
+    fn fail_requeues_the_exact_job() {
+        let mut at = asktell_for(&AshaBuilder::default(), 4, 1);
+        let job = match at.ask("w0") {
+            TrialAssignment::Run(j) => j,
+            other => panic!("expected a job, got {other:?}"),
+        };
+        at.fail(job.trial).unwrap();
+        assert_eq!(at.stats().failed_jobs, 1);
+        // the next asking worker gets the identical job back
+        let retry = match at.ask("w1") {
+            TrialAssignment::Run(j) => j,
+            other => panic!("expected a retry job, got {other:?}"),
+        };
+        assert_eq!(retry, job);
+        assert!(at.fail(999).is_err(), "unknown trial fail is an error");
+    }
+
+    #[test]
+    fn expire_workers_requeues_everything_in_flight_in_order() {
+        let mut at = asktell_for(&AshaBuilder::default(), 8, 2);
+        let mut jobs = Vec::new();
+        for w in 0..3 {
+            match at.ask(&format!("w{w}")) {
+                TrialAssignment::Run(j) => jobs.push(j),
+                other => panic!("expected a job, got {other:?}"),
+            }
+        }
+        assert_eq!(at.in_flight_count(), 3);
+        assert_eq!(at.expire_workers(), 3);
+        assert_eq!(at.in_flight_count(), 0);
+        assert_eq!(at.stats().failed_jobs, 3);
+        // every job comes back out, in trial-id order (determinism)
+        for expected in &jobs {
+            let retry = match at.ask("w9") {
+                TrialAssignment::Run(j) => j,
+                other => panic!("expected a job, got {other:?}"),
+            };
+            assert_eq!(&retry, expected);
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_assignments() {
+        let bench = NasBench201::cifar10();
+        let space = bench.space();
+        let mut at = asktell_for(&AshaBuilder::default(), 4, 3);
+        let a = at.ask("w0");
+        let j = assignment_json(&a);
+        let back = assignment_from_json(space, &j).unwrap();
+        assert_eq!(a, back);
+        let s = j.to_string_compact();
+        let reparsed = crate::util::json::parse(&s).unwrap();
+        assert_eq!(assignment_from_json(space, &reparsed).unwrap(), a);
+        for plain in [
+            TrialAssignment::Stop(3),
+            TrialAssignment::Pause(7),
+            TrialAssignment::Wait,
+            TrialAssignment::Done,
+        ] {
+            let j = assignment_json(&plain);
+            assert_eq!(assignment_from_json(space, &j).unwrap(), plain);
+        }
+        assert!(!TrialAssignment::Wait.is_mutation());
+        assert!(!TrialAssignment::Done.is_mutation());
+        assert!(TrialAssignment::Stop(0).is_mutation());
+    }
+
+    #[test]
+    fn wire_roundtrip_config_floats_exact() {
+        // Float configs (PD1 space) must survive JSON byte-exactly: the
+        // journal-recovery identity depends on it.
+        use crate::config::space::SearchSpace;
+        use crate::util::rng::Rng;
+        let space = SearchSpace::pd1();
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let c = space.sample(&mut rng);
+            let s = config_json(&c).to_string_compact();
+            let parsed = crate::util::json::parse(&s).unwrap();
+            let back = config_from_json(&space, &parsed).unwrap();
+            for (a, b) in c.values.iter().zip(&back.values) {
+                assert_eq!(a.as_f64().to_bits(), b.as_f64().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tell_ack_string_roundtrip() {
+        for ack in [TellAck::Continue, TellAck::JobComplete, TellAck::Abandon] {
+            assert_eq!(TellAck::parse(ack.as_str()), Some(ack));
+        }
+        assert_eq!(TellAck::parse("nope"), None);
+    }
+
+    #[test]
+    fn drained_session_reports_done() {
+        let bench = NasBench201::cifar10();
+        let mut at = asktell_for(&AshaBuilder::default(), 6, 4);
+        drive_single(&mut at, &bench, 0);
+        assert!(at.is_done());
+        assert_eq!(at.ask("w0"), TrialAssignment::Done);
+    }
+}

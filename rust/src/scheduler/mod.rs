@@ -12,6 +12,9 @@
 //! * [`sh`] / [`hyperband`] — classical synchronous SH and Hyperband,
 //!   context baselines.
 //! * [`baselines`] — the paper's k-epoch and random baselines.
+//! * [`asktell`] — the pull-mode adapter: any scheduler + searcher behind
+//!   an `ask`/`tell` API for the tuning service ([`crate::service`]),
+//!   where external workers drive trials instead of the engine loop.
 //!
 //! All of them speak the same protocol to the execution engine
 //! ([`crate::executor::engine`]): `next_job` fills free workers,
@@ -22,6 +25,7 @@
 //! the per-dispatch draw allowance through [`SchedCtx`].
 
 pub mod asha;
+pub mod asktell;
 pub mod baselines;
 pub mod core;
 pub mod hyperband;
@@ -31,6 +35,7 @@ pub mod sh;
 pub mod stopping;
 pub mod types;
 
+pub use asktell::{AskTell, TellAck, TrialAssignment};
 pub use types::{
     BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialAction, TrialInfo,
 };

@@ -1,0 +1,196 @@
+//! Line-protocol client + the `pasha worker` driver loop.
+//!
+//! [`Client`] speaks the newline-delimited JSON protocol of
+//! [`super::server`] over one `TcpStream`. [`run_worker`] is the worker
+//! side of the ask/tell contract: poll for an assignment, train it epoch
+//! by epoch against a local [`Benchmark`] evaluator (the simulator — or,
+//! with the `pjrt` feature, real training), tell each epoch's metric,
+//! and abandon the job the moment the service says so.
+
+use crate::benchmarks::Benchmark;
+use crate::config::space::SearchSpace;
+use crate::scheduler::asktell::{assignment_from_json, TellAck, TrialAssignment};
+use crate::service::registry::ServiceError;
+use crate::service::session::SessionSpec;
+use crate::util::json::{parse, Json};
+use crate::TrialId;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One connection to a `pasha serve` instance.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, ServiceError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| ServiceError::Io(format!("connect {addr}: {e}")))?;
+        let read_half = stream.try_clone().map_err(|e| ServiceError::Io(e.to_string()))?;
+        Ok(Client {
+            writer: stream,
+            reader: BufReader::new(read_half),
+        })
+    }
+
+    /// Send one request line, read one response line. Returns the
+    /// response object once `"ok": true` is verified.
+    pub fn call(&mut self, req: &Json) -> Result<Json, ServiceError> {
+        let mut line = req.to_string_compact();
+        line.push('\n');
+        let io_err = |e: std::io::Error| ServiceError::Io(e.to_string());
+        self.writer.write_all(line.as_bytes()).map_err(io_err)?;
+        let mut resp_line = String::new();
+        self.reader.read_line(&mut resp_line).map_err(io_err)?;
+        if resp_line.is_empty() {
+            return Err(ServiceError::Io("server closed the connection".into()));
+        }
+        let resp = parse(resp_line.trim())
+            .map_err(|e| ServiceError::Io(format!("bad response: {e}")))?;
+        if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            Ok(resp)
+        } else {
+            let msg = resp.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error");
+            Err(ServiceError::Session(msg.to_string()))
+        }
+    }
+
+    fn cmd(&mut self, name: &str) -> Json {
+        let mut o = Json::obj();
+        o.set("cmd", name);
+        o
+    }
+
+    fn session_cmd(&mut self, name: &str, session: &str) -> Json {
+        let mut o = self.cmd(name);
+        o.set("session", session);
+        o
+    }
+
+    pub fn ping(&mut self) -> Result<(), ServiceError> {
+        let req = self.cmd("ping");
+        self.call(&req).map(|_| ())
+    }
+
+    pub fn create(&mut self, spec: &SessionSpec) -> Result<String, ServiceError> {
+        let mut req = self.cmd("create");
+        req.set("spec", spec.to_json());
+        let resp = self.call(&req)?;
+        resp.get("session")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| ServiceError::Io("create response missing session id".into()))
+    }
+
+    pub fn ask(
+        &mut self,
+        session: &str,
+        worker: &str,
+        space: &SearchSpace,
+    ) -> Result<TrialAssignment, ServiceError> {
+        let mut req = self.session_cmd("ask", session);
+        req.set("worker", worker);
+        let resp = self.call(&req)?;
+        assignment_from_json(space, &resp).map_err(ServiceError::Io)
+    }
+
+    pub fn tell(
+        &mut self,
+        session: &str,
+        trial: TrialId,
+        epoch: u32,
+        metric: f64,
+    ) -> Result<TellAck, ServiceError> {
+        let mut req = self.session_cmd("tell", session);
+        req.set("trial", trial).set("epoch", epoch).set("metric", metric);
+        let resp = self.call(&req)?;
+        let ack = resp.get("ack").and_then(|v| v.as_str()).unwrap_or("");
+        TellAck::parse(ack).ok_or_else(|| ServiceError::Io(format!("bad tell ack '{ack}'")))
+    }
+
+    pub fn fail(&mut self, session: &str, trial: TrialId) -> Result<(), ServiceError> {
+        let mut req = self.session_cmd("fail", session);
+        req.set("trial", trial);
+        self.call(&req).map(|_| ())
+    }
+
+    pub fn status(&mut self, session: &str) -> Result<Json, ServiceError> {
+        let req = self.session_cmd("status", session);
+        let resp = self.call(&req)?;
+        resp.get("status")
+            .cloned()
+            .ok_or_else(|| ServiceError::Io("status response missing body".into()))
+    }
+
+    pub fn sessions(&mut self) -> Result<Vec<Json>, ServiceError> {
+        let req = self.cmd("sessions");
+        let resp = self.call(&req)?;
+        let arr = resp.get("sessions").and_then(|v| v.as_arr()).map(|a| a.to_vec());
+        Ok(arr.unwrap_or_default())
+    }
+
+    pub fn expire(&mut self, session: &str) -> Result<usize, ServiceError> {
+        let req = self.session_cmd("expire", session);
+        let resp = self.call(&req)?;
+        Ok(resp.get("expired").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize)
+    }
+
+    pub fn shutdown(&mut self) -> Result<(), ServiceError> {
+        let req = self.cmd("shutdown");
+        self.call(&req).map(|_| ())
+    }
+}
+
+/// What one worker did over its lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerReport {
+    /// Jobs trained to their milestone.
+    pub jobs_completed: usize,
+    /// Epochs told (committed and abandoned alike).
+    pub epochs_told: u64,
+    /// Jobs abandoned on a Stop/Pause/fail directive.
+    pub jobs_abandoned: usize,
+}
+
+/// Drive one worker against a session until the service reports `Done`:
+/// ask → train epoch-by-epoch on `bench` → tell, abandoning jobs the
+/// moment the service cancels them. `poll` is the back-off between
+/// `Wait` answers.
+pub fn run_worker(
+    client: &mut Client,
+    session: &str,
+    worker_id: &str,
+    bench: &dyn Benchmark,
+    bench_seed: u64,
+    poll: Duration,
+) -> Result<WorkerReport, ServiceError> {
+    let mut report = WorkerReport::default();
+    let space = bench.space().clone();
+    loop {
+        match client.ask(session, worker_id, &space)? {
+            TrialAssignment::Run(job) => {
+                let mut abandoned = false;
+                for e in job.from_epoch + 1..=job.milestone {
+                    let metric = bench.accuracy_at(&job.config, e, bench_seed);
+                    report.epochs_told += 1;
+                    if client.tell(session, job.trial, e, metric)? == TellAck::Abandon {
+                        abandoned = true;
+                        break;
+                    }
+                }
+                if abandoned {
+                    report.jobs_abandoned += 1;
+                } else {
+                    report.jobs_completed += 1;
+                }
+            }
+            // Directives for jobs this worker already abandoned via a
+            // tell ack; nothing left to do for them.
+            TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+            TrialAssignment::Wait => std::thread::sleep(poll),
+            TrialAssignment::Done => return Ok(report),
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Write-ahead journal: one JSONL file per session.
+//!
+//! Every state-mutating operation (`create`, `ask` with a non-idle
+//! response, `tell`, `fail`, `expire`) is appended as one compact JSON
+//! line *before* the operation is acknowledged to the client. Recovery
+//! ([`crate::service::session::Session::recover`]) replays the events
+//! against a freshly-built session; because the ask/tell core is
+//! deterministic, replay reconstructs the exact pre-crash state.
+//!
+//! Crash tolerance: a process dying mid-append leaves a partial final
+//! line. [`read_journal`] detects it (no trailing newline, or a line that
+//! fails to parse *at the end of the file*) and reports the valid prefix
+//! length; [`Journal::open_append_at`] truncates the file back to that
+//! prefix before appending, so the journal is always a sequence of whole
+//! events. A malformed line in the *middle* of a journal is corruption,
+//! not a crash artifact, and is surfaced as an error.
+//!
+//! Writes go straight to the `File` (no userspace buffering), so an
+//! acknowledged event has left the process even if it crashes the next
+//! instant. Durability against OS/power failure would need `fsync` per
+//! event; that trade-off is deliberately not made on the hot path.
+
+use crate::util::json::{parse, Json};
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Append handle for one session's journal file.
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+}
+
+impl Journal {
+    /// Create a fresh journal, truncating any existing file.
+    pub fn create(path: &Path) -> io::Result<Journal> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            file,
+        })
+    }
+
+    /// Re-open an existing journal for appending, first truncating it to
+    /// `valid_len` bytes (the whole-event prefix reported by
+    /// [`read_journal`]) so a partial crash line is never appended after.
+    pub fn open_append_at(path: &Path, valid_len: u64) -> io::Result<Journal> {
+        let file = OpenOptions::new().write(true).open(path)?;
+        file.set_len(valid_len)?;
+        let mut j = Journal {
+            path: path.to_path_buf(),
+            file,
+        };
+        j.file.seek(SeekFrom::End(0))?;
+        Ok(j)
+    }
+
+    /// Append one event and flush it to the OS before returning. The
+    /// caller must not acknowledge the operation if this fails.
+    pub fn append(&mut self, event: &Json) -> io::Result<()> {
+        let mut line = event.to_string_compact();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Result of reading a journal file.
+pub struct JournalRead {
+    /// Whole events, in append order.
+    pub events: Vec<Json>,
+    /// Byte length of the whole-event prefix (what a re-opened journal
+    /// must be truncated to).
+    pub valid_len: u64,
+    /// Bytes of a partial trailing line dropped as a crash artifact.
+    pub truncated_bytes: usize,
+}
+
+/// Read a journal file, tolerating a partial final line. Offsets are
+/// byte-accurate (the file is scanned as raw bytes, so a crash that cut a
+/// multi-byte character cannot skew `valid_len`).
+pub fn read_journal(path: &Path) -> io::Result<JournalRead> {
+    let mut buf = Vec::new();
+    File::open(path)?.read_to_end(&mut buf)?;
+    let mut events: Vec<Json> = Vec::new();
+    let mut valid_len = 0u64;
+    let mut start = 0usize;
+    let done = |events: Vec<Json>, valid_len: u64| JournalRead {
+        truncated_bytes: buf.len() - valid_len as usize,
+        events,
+        valid_len,
+    };
+    while start < buf.len() {
+        let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') else {
+            // No newline: the final append was cut short — a crash
+            // artifact, dropped.
+            return Ok(done(events, valid_len));
+        };
+        let end = start + rel;
+        let next = end + 1;
+        let at_eof = next == buf.len();
+        let line = &buf[start..end];
+        if line.is_empty() {
+            valid_len = next as u64;
+            start = next;
+            continue;
+        }
+        let parsed: Result<Json, String> = match std::str::from_utf8(line) {
+            Ok(s) => parse(s),
+            Err(e) => Err(format!("invalid utf-8: {e}")),
+        };
+        match parsed {
+            Ok(ev) => {
+                events.push(ev);
+                valid_len = next as u64;
+            }
+            // A newline-terminated but unparseable *final* line is also
+            // treated as a crash artifact (a torn multi-chunk write);
+            // anywhere else it is corruption.
+            Err(_) if at_eof => return Ok(done(events, valid_len)),
+            Err(e) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "corrupt journal {}: event {} unparseable: {e}",
+                        path.display(),
+                        events.len()
+                    ),
+                ));
+            }
+        }
+        start = next;
+    }
+    Ok(done(events, valid_len))
+}
+
+// Event constructors: the journal schema in one place.
+
+pub fn ev_create(session: &str, spec: &Json) -> Json {
+    let mut o = Json::obj();
+    o.set("ev", "create")
+        .set("session", session)
+        .set("spec", spec.clone());
+    o
+}
+
+pub fn ev_ask(worker: &str, resp: Json) -> Json {
+    let mut o = Json::obj();
+    o.set("ev", "ask").set("worker", worker).set("resp", resp);
+    o
+}
+
+pub fn ev_tell(trial: usize, epoch: u32, metric: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("ev", "tell")
+        .set("trial", trial)
+        .set("epoch", epoch)
+        .set("metric", metric);
+    o
+}
+
+pub fn ev_fail(trial: usize) -> Json {
+    let mut o = Json::obj();
+    o.set("ev", "fail").set("trial", trial);
+    o
+}
+
+pub fn ev_expire() -> Json {
+    let mut o = Json::obj();
+    o.set("ev", "expire");
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pasha-journal-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_events() {
+        let path = tmp("roundtrip.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        let evs = [ev_tell(3, 1, 55.25), ev_fail(2), ev_expire()];
+        for e in &evs {
+            j.append(e).unwrap();
+        }
+        drop(j);
+        let r = read_journal(&path).unwrap();
+        assert_eq!(r.events.len(), 3);
+        assert_eq!(r.truncated_bytes, 0);
+        assert_eq!(r.events[0], evs[0]);
+        assert_eq!(r.events[2], evs[2]);
+        let file_len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(r.valid_len, file_len, "whole file is valid");
+    }
+
+    #[test]
+    fn partial_final_line_is_dropped() {
+        let path = tmp("partial.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        j.append(&ev_tell(0, 1, 10.0)).unwrap();
+        j.append(&ev_tell(0, 2, 20.0)).unwrap();
+        drop(j);
+        let full = std::fs::read(&path).unwrap();
+        // cut mid-way through the second line
+        let cut = full.len() - 7;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let r = read_journal(&path).unwrap();
+        assert_eq!(r.events.len(), 1);
+        assert!(r.truncated_bytes > 0);
+        // re-open truncates the partial tail and appends cleanly
+        let mut j = Journal::open_append_at(&path, r.valid_len).unwrap();
+        j.append(&ev_fail(9)).unwrap();
+        drop(j);
+        let r2 = read_journal(&path).unwrap();
+        assert_eq!(r2.events.len(), 2);
+        assert_eq!(r2.truncated_bytes, 0);
+        assert_eq!(r2.events[1], ev_fail(9));
+    }
+
+    #[test]
+    fn complete_but_unterminated_final_line_is_dropped() {
+        // A crash can land exactly at the end of the JSON but before the
+        // newline: the line parses, but was never fully acknowledged.
+        let path = tmp("noterm.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        j.append(&ev_tell(1, 1, 30.0)).unwrap();
+        j.append(&ev_tell(1, 2, 31.0)).unwrap();
+        drop(j);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 1]).unwrap();
+        let r = read_journal(&path).unwrap();
+        assert_eq!(r.events.len(), 1);
+        assert!(r.truncated_bytes > 0);
+    }
+
+    #[test]
+    fn mid_file_corruption_is_an_error() {
+        let path = tmp("corrupt.jsonl");
+        std::fs::write(&path, "{\"ev\":\"tell\"}\nnot json at all\n{\"ev\":\"fail\"}\n").unwrap();
+        let err = read_journal(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn empty_journal_reads_empty() {
+        let path = tmp("empty.jsonl");
+        Journal::create(&path).unwrap();
+        let r = read_journal(&path).unwrap();
+        assert!(r.events.is_empty());
+        assert_eq!(r.valid_len, 0);
+        assert_eq!(r.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn event_constructors_shape() {
+        let c = ev_create("s0", &Json::obj());
+        assert_eq!(c.get("ev").unwrap().as_str(), Some("create"));
+        assert_eq!(c.get("session").unwrap().as_str(), Some("s0"));
+        let a = ev_ask("w1", Json::obj());
+        assert_eq!(a.get("worker").unwrap().as_str(), Some("w1"));
+        let t = ev_tell(4, 9, 77.5);
+        assert_eq!(t.get("trial").unwrap().as_f64(), Some(4.0));
+        assert_eq!(t.get("epoch").unwrap().as_f64(), Some(9.0));
+        assert_eq!(t.get("metric").unwrap().as_f64(), Some(77.5));
+    }
+}

@@ -1,0 +1,39 @@
+//! The ask/tell tuning service: PASHA as a long-running system.
+//!
+//! The library's other layers run the optimization *in process*: the
+//! engine owns the loop, trials execute on its backends. This module
+//! decouples decision-making from execution so external workers — other
+//! processes, other machines — drive trials against a central service:
+//!
+//! * [`session`] — one durable tuning session: an ask/tell core
+//!   ([`crate::scheduler::asktell`]) whose every mutating operation is
+//!   appended to a write-ahead journal before acknowledgement, plus
+//!   deterministic crash recovery by journal replay.
+//! * [`journal`] — the JSONL write-ahead log: append, truncation-tolerant
+//!   read, whole-event-prefix recovery.
+//! * [`registry`] — the thread-safe multi-session store, recovering every
+//!   session journal in a directory at startup.
+//! * [`server`] — a dependency-free `std::net` TCP server speaking
+//!   newline-delimited JSON (`pasha serve`).
+//! * [`client`] — the matching client plus the `pasha worker` driver
+//!   loop that evaluates assignments against a local [`crate::benchmarks`]
+//!   substrate.
+//!
+//! Guarantees, tested end to end:
+//!
+//! * **Determinism** — a session driven by one worker reproduces
+//!   `Tuner::run` exactly (same seeds ⇒ same incumbent).
+//! * **Durability** — kill the server at any instant; recovery replays
+//!   the journal to a state whose subsequent `ask` stream is
+//!   byte-identical to the uninterrupted session's.
+
+pub mod client;
+pub mod journal;
+pub mod registry;
+pub mod server;
+pub mod session;
+
+pub use client::{run_worker, Client, WorkerReport};
+pub use registry::{Registry, ServiceError};
+pub use server::{handle_request, Server};
+pub use session::{RecoveryReport, Session, SessionSpec};

@@ -1,0 +1,275 @@
+//! Multi-session registry: the server's shared, thread-safe session
+//! store, with journal-directory recovery at startup.
+//!
+//! Each session lives behind its own `Mutex`, so concurrent clients
+//! working different sessions never contend; the registry map itself is
+//! only locked for the short lookup/insert. When a journal directory is
+//! configured, `Registry::new` recovers every `*.jsonl` file in it —
+//! a restarted server resumes exactly where the crashed one stopped
+//! (workers that survived the restart can keep telling into their
+//! in-flight jobs; for workers that died with it, `expire` re-queues
+//! their jobs).
+
+use crate::service::session::{RecoveryReport, Session, SessionSpec};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Error type of every service-layer operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// No session with that id.
+    UnknownSession(String),
+    /// Malformed or unbuildable session spec.
+    Spec(String),
+    /// Journal I/O failure.
+    Io(String),
+    /// Journal contents unusable (corrupt, foreign, or divergent).
+    Journal(String),
+    /// A session-level protocol violation (bad tell, unknown trial…).
+    Session(String),
+    /// Malformed request (wire-level).
+    Request(String),
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::UnknownSession(id) => write!(f, "unknown session '{id}'"),
+            ServiceError::Spec(m) => write!(f, "bad session spec: {m}"),
+            ServiceError::Io(m) => write!(f, "journal io: {m}"),
+            ServiceError::Journal(m) => write!(f, "journal: {m}"),
+            ServiceError::Session(m) => write!(f, "session: {m}"),
+            ServiceError::Request(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// The shared session store.
+pub struct Registry {
+    dir: Option<PathBuf>,
+    sessions: Mutex<HashMap<String, Arc<Mutex<Session>>>>,
+    next_id: Mutex<usize>,
+    /// Sessions recovered from the journal directory at startup.
+    recovered: Vec<(String, RecoveryReport)>,
+}
+
+impl Registry {
+    /// An in-memory registry (no journals — sessions die with the
+    /// process). Used by tests and the loopback stress benchmark.
+    pub fn in_memory() -> Registry {
+        Registry {
+            dir: None,
+            sessions: Mutex::new(HashMap::new()),
+            next_id: Mutex::new(0),
+            recovered: Vec::new(),
+        }
+    }
+
+    /// A durable registry journaling into `dir`, recovering every
+    /// `*.jsonl` session journal already present.
+    pub fn with_journal_dir(dir: PathBuf) -> Result<Registry, ServiceError> {
+        std::fs::create_dir_all(&dir).map_err(|e| ServiceError::Io(e.to_string()))?;
+        let mut sessions = HashMap::new();
+        let mut recovered = Vec::new();
+        let mut max_numeric_id = 0usize;
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .map_err(|e| ServiceError::Io(e.to_string()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|x| x == "jsonl").unwrap_or(false))
+            .collect();
+        paths.sort();
+        for path in paths {
+            let (session, report) = Session::recover(&path).map_err(|e| match e {
+                ServiceError::Journal(m) => {
+                    ServiceError::Journal(format!("{}: {m}", path.display()))
+                }
+                other => other,
+            })?;
+            let numeric = session.id.strip_prefix('s').and_then(|s| s.parse::<usize>().ok());
+            if let Some(n) = numeric {
+                max_numeric_id = max_numeric_id.max(n + 1);
+            }
+            recovered.push((session.id.clone(), report));
+            sessions.insert(session.id.clone(), Arc::new(Mutex::new(session)));
+        }
+        Ok(Registry {
+            dir: Some(dir),
+            sessions: Mutex::new(sessions),
+            next_id: Mutex::new(max_numeric_id),
+            recovered,
+        })
+    }
+
+    /// Sessions recovered at startup (id + what replay found).
+    pub fn recovered(&self) -> &[(String, RecoveryReport)] {
+        &self.recovered
+    }
+
+    /// Create a new session and return its id.
+    pub fn create(&self, spec: SessionSpec) -> Result<String, ServiceError> {
+        let id = {
+            let mut n = self.next_id.lock().expect("registry lock");
+            let id = format!("s{:04}", *n);
+            *n += 1;
+            id
+        };
+        let journal_path = self.dir.as_ref().map(|d| d.join(format!("{id}.jsonl")));
+        let session = Session::create(&id, spec, journal_path.as_deref())?;
+        self.sessions
+            .lock()
+            .expect("registry lock")
+            .insert(id.clone(), Arc::new(Mutex::new(session)));
+        Ok(id)
+    }
+
+    /// Look up a session by id.
+    pub fn get(&self, id: &str) -> Result<Arc<Mutex<Session>>, ServiceError> {
+        self.sessions
+            .lock()
+            .expect("registry lock")
+            .get(id)
+            .cloned()
+            .ok_or_else(|| ServiceError::UnknownSession(id.to_string()))
+    }
+
+    /// Status summaries of every registered session, id-sorted.
+    pub fn statuses(&self) -> Vec<Json> {
+        let handles: Vec<(String, Arc<Mutex<Session>>)> = {
+            let map = self.sessions.lock().expect("registry lock");
+            let mut v: Vec<_> = map.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        handles
+            .into_iter()
+            .map(|(_, s)| s.lock().expect("session lock").status())
+            .collect()
+    }
+
+    /// Drop a session from the registry (its journal file, if any, stays
+    /// on disk and can be recovered later).
+    pub fn close(&self, id: &str) -> Result<(), ServiceError> {
+        self.sessions
+            .lock()
+            .expect("registry lock")
+            .remove(id)
+            .map(|_| ())
+            .ok_or_else(|| ServiceError::UnknownSession(id.to_string()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.lock().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Benchmark;
+    use crate::scheduler::asktell::{TellAck, TrialAssignment};
+    use crate::tuner::bench_from_name;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pasha-reg-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_spec() -> SessionSpec {
+        SessionSpec {
+            bench: "lcbench-Fashion-MNIST".into(),
+            scheduler: "asha".into(),
+            config_budget: 6,
+            ..SessionSpec::default()
+        }
+    }
+
+    fn drive(session: &Arc<Mutex<Session>>, bench: &dyn Benchmark, bench_seed: u64) {
+        loop {
+            let assignment = session.lock().unwrap().ask("w0").unwrap();
+            match assignment {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, bench_seed);
+                        let ack = session.lock().unwrap().tell(job.trial, e, m).unwrap();
+                        if ack == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => panic!("single worker never waits"),
+                TrialAssignment::Done => return,
+            }
+        }
+    }
+
+    #[test]
+    fn create_get_close_lifecycle() {
+        let reg = Registry::in_memory();
+        assert!(reg.is_empty());
+        let id = reg.create(small_spec()).unwrap();
+        assert_eq!(id, "s0000");
+        let id2 = reg.create(small_spec()).unwrap();
+        assert_eq!(id2, "s0001");
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get(&id).is_ok());
+        match reg.get("nope") {
+            Err(ServiceError::UnknownSession(missing)) => assert_eq!(missing, "nope"),
+            Err(e) => panic!("wrong error {e}"),
+            Ok(_) => panic!("unknown id must not resolve"),
+        }
+        reg.close(&id).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.close(&id).is_err(), "double close is an error");
+    }
+
+    #[test]
+    fn durable_registry_recovers_all_sessions() {
+        let dir = tmp_dir("recover");
+        let spec = small_spec();
+        let bench = bench_from_name(&spec.bench).unwrap();
+        {
+            let reg = Registry::with_journal_dir(dir.clone()).unwrap();
+            let id_a = reg.create(spec.clone()).unwrap();
+            let id_b = reg.create(spec.clone()).unwrap();
+            drive(&reg.get(&id_a).unwrap(), bench.as_ref(), spec.bench_seed);
+            // leave id_b mid-session: one job asked and never told
+            let sb = reg.get(&id_b).unwrap();
+            let first = sb.lock().unwrap().ask("w0").unwrap();
+            assert!(matches!(first, TrialAssignment::Run(_)));
+        }
+        let reg2 = Registry::with_journal_dir(dir).unwrap();
+        assert_eq!(reg2.len(), 2);
+        assert_eq!(reg2.recovered().len(), 2);
+        // ids continue past the recovered ones
+        let id_c = reg2.create(spec).unwrap();
+        assert_eq!(id_c, "s0002");
+        // the completed session is still done
+        let sa = reg2.get("s0000").unwrap();
+        assert_eq!(sa.lock().unwrap().ask("w0").unwrap(), TrialAssignment::Done);
+        // the mid-flight session still has its job in flight
+        let sb = reg2.get("s0001").unwrap();
+        assert_eq!(sb.lock().unwrap().core_ref().in_flight_count(), 1);
+    }
+
+    #[test]
+    fn statuses_are_sorted_and_complete() {
+        let reg = Registry::in_memory();
+        reg.create(small_spec()).unwrap();
+        reg.create(small_spec()).unwrap();
+        let sts = reg.statuses();
+        assert_eq!(sts.len(), 2);
+        assert_eq!(sts[0].get("id").unwrap().as_str(), Some("s0000"));
+        assert_eq!(sts[1].get("id").unwrap().as_str(), Some("s0001"));
+    }
+}

@@ -1,0 +1,352 @@
+//! Dependency-free TCP server: newline-delimited JSON over
+//! `std::net::TcpListener`.
+//!
+//! One request per line, one response per line. The accept loop runs in
+//! the calling thread; each connection is handled on a scoped thread
+//! (`std::thread::scope`, the same pure-std concurrency the rest of the
+//! crate uses — no tokio, no async). Connections poll with short read
+//! timeouts so a `shutdown` request observed by any handler stops the
+//! accept loop and drains every handler promptly.
+//!
+//! Wire protocol (requests; all responses carry `"ok": true|false`):
+//!
+//! ```text
+//! {"cmd":"ping"}
+//! {"cmd":"create","spec":{...SessionSpec...}}        -> {"ok":true,"session":"s0000"}
+//! {"cmd":"ask","session":"s0000","worker":"w0"}      -> {"ok":true,"type":"run",...}
+//! {"cmd":"tell","session":"s0000","trial":3,"epoch":1,"metric":57.5}
+//!                                                    -> {"ok":true,"ack":"continue"}
+//! {"cmd":"fail","session":"s0000","trial":3}         -> {"ok":true}
+//! {"cmd":"expire","session":"s0000"}                 -> {"ok":true,"expired":2}
+//! {"cmd":"status","session":"s0000"}                 -> {"ok":true,"status":{...}}
+//! {"cmd":"sessions"}                                 -> {"ok":true,"sessions":[...]}
+//! {"cmd":"close","session":"s0000"}                  -> {"ok":true}
+//! {"cmd":"shutdown"}                                 -> {"ok":true,"bye":true}
+//! ```
+
+use crate::scheduler::asktell::assignment_json;
+use crate::service::registry::{Registry, ServiceError};
+use crate::service::session::SessionSpec;
+use crate::util::json::{parse, Json};
+use crate::TrialId;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Handle one parsed request against the registry. Pure apart from the
+/// registry mutation — unit-testable without a socket. `shutdown`
+/// requests are handled by the caller (they need the accept loop).
+pub fn handle_request(registry: &Registry, req: &Json) -> Json {
+    match dispatch(registry, req) {
+        Ok(mut resp) => {
+            resp.set("ok", true);
+            resp
+        }
+        Err(e) => {
+            let mut resp = Json::obj();
+            resp.set("ok", false).set("error", e.to_string());
+            resp
+        }
+    }
+}
+
+fn field<'a>(req: &'a Json, key: &str) -> Result<&'a Json, ServiceError> {
+    req.get(key)
+        .ok_or_else(|| ServiceError::Request(format!("missing field '{key}'")))
+}
+
+fn str_field<'a>(req: &'a Json, key: &str) -> Result<&'a str, ServiceError> {
+    field(req, key)?
+        .as_str()
+        .ok_or_else(|| ServiceError::Request(format!("field '{key}' must be a string")))
+}
+
+fn num_field(req: &Json, key: &str) -> Result<f64, ServiceError> {
+    field(req, key)?
+        .as_f64()
+        .ok_or_else(|| ServiceError::Request(format!("field '{key}' must be a number")))
+}
+
+fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
+    let cmd = str_field(req, "cmd")?;
+    let mut resp = Json::obj();
+    match cmd {
+        "ping" => {
+            resp.set("pong", true);
+        }
+        "create" => {
+            let spec = SessionSpec::from_json(field(req, "spec")?).map_err(ServiceError::Spec)?;
+            let id = registry.create(spec)?;
+            resp.set("session", id);
+        }
+        "ask" => {
+            let session = registry.get(str_field(req, "session")?)?;
+            let worker = str_field(req, "worker").unwrap_or("anonymous");
+            let assignment = session.lock().expect("session lock").ask(worker)?;
+            resp = assignment_json(&assignment);
+        }
+        "tell" => {
+            let session = registry.get(str_field(req, "session")?)?;
+            let trial = num_field(req, "trial")? as TrialId;
+            let epoch = num_field(req, "epoch")? as u32;
+            // a diverged worker may legitimately report NaN
+            let metric = req.get("metric").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            let ack = session.lock().expect("session lock").tell(trial, epoch, metric)?;
+            resp.set("ack", ack.as_str());
+        }
+        "fail" => {
+            let session = registry.get(str_field(req, "session")?)?;
+            let trial = num_field(req, "trial")? as TrialId;
+            session.lock().expect("session lock").fail(trial)?;
+        }
+        "expire" => {
+            let session = registry.get(str_field(req, "session")?)?;
+            let expired = session.lock().expect("session lock").expire_workers()?;
+            resp.set("expired", expired);
+        }
+        "status" => {
+            let session = registry.get(str_field(req, "session")?)?;
+            let status = session.lock().expect("session lock").status();
+            resp.set("status", status);
+        }
+        "sessions" => {
+            resp.set("sessions", registry.statuses());
+        }
+        "close" => {
+            registry.close(str_field(req, "session")?)?;
+        }
+        "shutdown" => {
+            resp.set("bye", true);
+        }
+        other => {
+            return Err(ServiceError::Request(format!("unknown cmd '{other}'")));
+        }
+    }
+    Ok(resp)
+}
+
+/// A bound-but-not-yet-running server.
+pub struct Server {
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7171`, or port `0` for an ephemeral
+    /// port — query it with [`Server::local_addr`]).
+    pub fn bind(addr: &str, registry: Arc<Registry>) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            listener,
+            registry,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// A flag that stops the accept loop when set (the `shutdown`
+    /// command sets it; embedders may too).
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until shutdown. Each connection runs on a scoped thread;
+    /// the call returns once the accept loop stops and every connection
+    /// handler has drained.
+    pub fn run(self) -> io::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        let registry = &self.registry;
+        let shutdown = &self.shutdown;
+        std::thread::scope(|scope| {
+            while !shutdown.load(Ordering::SeqCst) {
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        scope.spawn(move || {
+                            if let Err(e) = handle_connection(stream, registry, shutdown) {
+                                // A dropped connection is routine; log and move on.
+                                eprintln!("pasha serve: connection error: {e}");
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        eprintln!("pasha serve: accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Read newline-delimited requests off one connection until EOF or
+/// shutdown, answering each on the same stream.
+fn handle_connection(
+    stream: TcpStream,
+    registry: &Registry,
+    shutdown: &AtomicBool,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        // `line` is NOT cleared across timeouts: a request arriving
+        // slowly may be split over several read_line calls, each timing
+        // out with a partial prefix already consumed into the buffer.
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF: client hung up
+            Ok(_) if !line.ends_with('\n') => return Ok(()), // EOF mid-request
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    line.clear();
+                    continue;
+                }
+                let resp = match parse(trimmed) {
+                    Ok(req) => {
+                        let resp = handle_request(registry, &req);
+                        if req.get("cmd").and_then(|c| c.as_str()) == Some("shutdown") {
+                            shutdown.store(true, Ordering::SeqCst);
+                        }
+                        resp
+                    }
+                    Err(e) => {
+                        let mut r = Json::obj();
+                        r.set("ok", false).set("error", format!("bad json: {e}"));
+                        r
+                    }
+                };
+                line.clear();
+                let mut out = resp.to_string_compact();
+                out.push('\n');
+                writer.write_all(out.as_bytes())?;
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue; // read timeout: re-check the shutdown flag
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::session::SessionSpec;
+
+    fn reg_with_session() -> (Registry, String) {
+        let reg = Registry::in_memory();
+        let spec = SessionSpec {
+            bench: "lcbench-Fashion-MNIST".into(),
+            scheduler: "asha".into(),
+            config_budget: 4,
+            ..SessionSpec::default()
+        };
+        let id = reg.create(spec).unwrap();
+        (reg, id)
+    }
+
+    fn req(s: &str) -> Json {
+        parse(s).unwrap()
+    }
+
+    #[test]
+    fn ping_and_unknown_cmd() {
+        let reg = Registry::in_memory();
+        let r = handle_request(&reg, &req("{\"cmd\":\"ping\"}"));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+        let r = handle_request(&reg, &req("{\"cmd\":\"frobnicate\"}"));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        let r = handle_request(&reg, &req("{}"));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn create_ask_tell_cycle_over_requests() {
+        let reg = Registry::in_memory();
+        let create = "{\"cmd\":\"create\",\"spec\":{\"bench\":\"lcbench-Fashion-MNIST\",\
+                      \"scheduler\":\"asha\",\"config_budget\":2}}";
+        let r = handle_request(&reg, &req(create));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let sid = r.get("session").unwrap().as_str().unwrap().to_string();
+
+        let ask = format!("{{\"cmd\":\"ask\",\"session\":\"{sid}\",\"worker\":\"w0\"}}");
+        let r = handle_request(&reg, &req(&ask));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("type").unwrap().as_str(), Some("run"));
+        let trial = r.get("trial").unwrap().as_f64().unwrap() as usize;
+        let milestone = r.get("milestone").unwrap().as_f64().unwrap() as u32;
+
+        for e in 1..=milestone {
+            let tell = format!(
+                "{{\"cmd\":\"tell\",\"session\":\"{sid}\",\"trial\":{trial},\
+                 \"epoch\":{e},\"metric\":{}}}",
+                50.0 + e as f64
+            );
+            let r = handle_request(&reg, &req(&tell));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            let want = if e == milestone { "job-complete" } else { "continue" };
+            assert_eq!(r.get("ack").unwrap().as_str(), Some(want));
+        }
+
+        let status = format!("{{\"cmd\":\"status\",\"session\":\"{sid}\"}}");
+        let r = handle_request(&reg, &req(&status));
+        let st = r.get("status").unwrap();
+        assert_eq!(st.get("jobs_completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn errors_are_structured() {
+        let (reg, id) = reg_with_session();
+        let r = handle_request(&reg, &req("{\"cmd\":\"ask\",\"session\":\"nope\"}"));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("nope"));
+        // tell for a trial never asked
+        let tell = format!(
+            "{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":7,\"epoch\":1,\"metric\":1}}"
+        );
+        let r = handle_request(&reg, &req(&tell));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        // sessions listing still works
+        let r = handle_request(&reg, &req("{\"cmd\":\"sessions\"}"));
+        assert_eq!(r.get("sessions").unwrap().as_arr().unwrap().len(), 1);
+        // close, then the session is gone
+        let close = format!("{{\"cmd\":\"close\",\"session\":\"{id}\"}}");
+        let closed = handle_request(&reg, &req(&close));
+        assert_eq!(closed.get("ok").unwrap().as_bool(), Some(true));
+        let r = handle_request(&reg, &req(&close));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn expire_requeues_in_flight_work() {
+        let (reg, id) = reg_with_session();
+        let ask = format!("{{\"cmd\":\"ask\",\"session\":\"{id}\",\"worker\":\"w0\"}}");
+        let first = handle_request(&reg, &req(&ask));
+        assert_eq!(first.get("type").unwrap().as_str(), Some("run"));
+        let expire = format!("{{\"cmd\":\"expire\",\"session\":\"{id}\"}}");
+        let r = handle_request(&reg, &req(&expire));
+        assert_eq!(r.get("expired").unwrap().as_f64(), Some(1.0));
+        // the same trial is offered again
+        let again = handle_request(&reg, &req(&ask));
+        assert_eq!(again.get("type").unwrap().as_str(), Some("run"));
+        assert_eq!(again.get("trial"), first.get("trial"));
+    }
+}

@@ -1,0 +1,568 @@
+//! One durable tuning session: an ask/tell core plus its write-ahead
+//! journal.
+//!
+//! A [`SessionSpec`] is the wire-serializable recipe (benchmark,
+//! scheduler, searcher, seeds, budgets) from which a session's scheduler
+//! and searcher are built deterministically — the same derivations as
+//! [`crate::tuner::Tuner::run`], so a served session reproduces the
+//! in-process run for the same seeds. A [`Session`] wraps the
+//! [`AskTell`] core and appends every mutating operation to its journal
+//! before acknowledging it; [`Session::recover`] rebuilds a crashed
+//! session by replaying the journal against a fresh core, verifying that
+//! every replayed `ask` regenerates the exact response that was
+//! acknowledged (any divergence means the journal does not belong to
+//! this code/seed combination and recovery is refused).
+
+use crate::executor::engine::{ConfigBudget, EpochBudget, StoppingRule};
+use crate::scheduler::asktell::{assignment_json, config_json, AskTell, TellAck, TrialAssignment};
+use crate::service::journal::{self, ev_ask, ev_create, ev_expire, ev_fail, ev_tell, Journal};
+use crate::service::registry::ServiceError;
+use crate::tuner::{bench_from_name, scheduler_from_name, searcher_for, SearcherKind};
+use crate::util::json::Json;
+use crate::TrialId;
+use std::path::Path;
+
+/// The serializable recipe for one session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSpec {
+    /// Benchmark wire name (`lcbench-Fashion-MNIST`, `nas-cifar10`, …):
+    /// defines the search space and max epochs here, and tells workers
+    /// what to evaluate.
+    pub bench: String,
+    /// Scheduler wire name (`pasha`, `asha`, `pasha-stop`, …).
+    pub scheduler: String,
+    pub eta: u32,
+    pub searcher: SearcherKind,
+    /// Scheduler/searcher seed (the tuner's `sched_seed`).
+    pub seed: u64,
+    /// Benchmark seed workers should evaluate with.
+    pub bench_seed: u64,
+    /// The paper's N-configuration budget.
+    pub config_budget: usize,
+    /// Optional additional epoch budget (drain semantics).
+    pub epoch_budget: Option<u64>,
+}
+
+impl Default for SessionSpec {
+    fn default() -> Self {
+        SessionSpec {
+            bench: "nas-cifar10".into(),
+            scheduler: "pasha".into(),
+            eta: 3,
+            searcher: SearcherKind::Random,
+            seed: 0,
+            bench_seed: 0,
+            config_budget: 256,
+            epoch_budget: None,
+        }
+    }
+}
+
+impl SessionSpec {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("bench", self.bench.as_str())
+            .set("scheduler", self.scheduler.as_str())
+            .set("eta", self.eta)
+            .set("searcher", self.searcher.as_str())
+            .set("seed", self.seed as f64)
+            .set("bench_seed", self.bench_seed as f64)
+            .set("config_budget", self.config_budget);
+        if let Some(e) = self.epoch_budget {
+            o.set("epoch_budget", e as f64);
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionSpec, String> {
+        let str_field = |key: &str, default: &str| -> String {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .unwrap_or(default)
+                .to_string()
+        };
+        let num = |key: &str| j.get(key).and_then(|v| v.as_f64());
+        let searcher_name = str_field("searcher", "random");
+        let searcher = SearcherKind::parse(&searcher_name)
+            .ok_or_else(|| format!("unknown searcher '{searcher_name}'"))?;
+        Ok(SessionSpec {
+            bench: str_field("bench", "nas-cifar10"),
+            scheduler: str_field("scheduler", "pasha"),
+            eta: num("eta").unwrap_or(3.0) as u32,
+            searcher,
+            seed: num("seed").unwrap_or(0.0) as u64,
+            bench_seed: num("bench_seed").unwrap_or(0.0) as u64,
+            config_budget: num("config_budget").unwrap_or(256.0) as usize,
+            epoch_budget: num("epoch_budget").map(|e| e as u64),
+        })
+    }
+
+    /// Build the deterministic ask/tell core this spec describes. Uses
+    /// the same scheduler/searcher derivations as `Tuner::run`, so a
+    /// single-worker session reproduces the in-process run exactly.
+    pub fn build_core(&self) -> Result<AskTell, String> {
+        let bench = bench_from_name(&self.bench)?;
+        let builder = scheduler_from_name(&self.scheduler, self.eta, self.config_budget)?;
+        let scheduler = builder.build(bench.max_epochs(), self.seed);
+        let searcher = searcher_for(&self.searcher, self.seed);
+        let mut rules: Vec<Box<dyn StoppingRule>> =
+            vec![Box::new(ConfigBudget(self.config_budget))];
+        if let Some(e) = self.epoch_budget {
+            rules.push(Box::new(EpochBudget(e)));
+        }
+        Ok(AskTell::new(scheduler, searcher, bench.space().clone(), rules))
+    }
+}
+
+/// What [`Session::recover`] found in the journal.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Whole events replayed (excluding the `create` header).
+    pub events_replayed: usize,
+    /// Bytes of a partial trailing line dropped as a crash artifact.
+    pub truncated_bytes: usize,
+}
+
+/// A registered tuning session: ask/tell core + journal + identity.
+pub struct Session {
+    pub id: String,
+    pub spec: SessionSpec,
+    core: AskTell,
+    journal: Option<Journal>,
+    /// Events appended since creation/recovery (excluding the `create`
+    /// header) — the trace↔journal alignment key used by tests.
+    events_written: usize,
+    /// Set when an acknowledged mutation could not be journaled: the
+    /// journal no longer matches the in-memory state, so further
+    /// mutations are refused rather than risking a bad recovery.
+    poisoned: bool,
+}
+
+impl Session {
+    /// Create a fresh session, writing the `create` header as the
+    /// journal's first event (when a journal path is given).
+    pub fn create(
+        id: &str,
+        spec: SessionSpec,
+        journal_path: Option<&Path>,
+    ) -> Result<Session, ServiceError> {
+        let core = spec.build_core().map_err(ServiceError::Spec)?;
+        let journal = match journal_path {
+            None => None,
+            Some(path) => {
+                let mut j = Journal::create(path).map_err(|e| ServiceError::Io(e.to_string()))?;
+                j.append(&ev_create(id, &spec.to_json()))
+                    .map_err(|e| ServiceError::Io(e.to_string()))?;
+                Some(j)
+            }
+        };
+        Ok(Session {
+            id: id.to_string(),
+            spec,
+            core,
+            journal,
+            events_written: 0,
+            poisoned: false,
+        })
+    }
+
+    /// Rebuild a session from its journal: build a fresh core from the
+    /// recorded spec, then replay every event. Replayed `ask`s must
+    /// regenerate byte-identical responses; a mismatch aborts recovery.
+    /// The journal is truncated to its whole-event prefix and re-opened
+    /// for appending — only call this when this process owns the journal
+    /// (for a pure check of a file another server may own, use
+    /// [`Session::recover_readonly`]).
+    pub fn recover(path: &Path) -> Result<(Session, RecoveryReport), ServiceError> {
+        Self::recover_impl(path, true)
+    }
+
+    /// [`Session::recover`] without touching the file: replays and
+    /// verifies, but never truncates or re-opens the journal, so it is
+    /// safe against a journal a live server is appending to. The
+    /// returned session has no journal attached (mutations after this
+    /// are not logged).
+    pub fn recover_readonly(path: &Path) -> Result<(Session, RecoveryReport), ServiceError> {
+        Self::recover_impl(path, false)
+    }
+
+    fn recover_impl(path: &Path, attach: bool) -> Result<(Session, RecoveryReport), ServiceError> {
+        let read = journal::read_journal(path).map_err(|e| ServiceError::Io(e.to_string()))?;
+        let mut events = read.events.iter();
+        let empty = || ServiceError::Journal("empty journal".into());
+        let header = events.next().ok_or_else(empty)?;
+        if header.get("ev").and_then(|v| v.as_str()) != Some("create") {
+            return Err(ServiceError::Journal(
+                "journal does not start with a create event".into(),
+            ));
+        }
+        let id = header
+            .get("session")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| ServiceError::Journal("create event missing session id".into()))?
+            .to_string();
+        let spec_json = header
+            .get("spec")
+            .ok_or_else(|| ServiceError::Journal("create event missing spec".into()))?;
+        let spec = SessionSpec::from_json(spec_json).map_err(ServiceError::Spec)?;
+        let mut session = Session {
+            id,
+            spec: spec.clone(),
+            core: spec.build_core().map_err(ServiceError::Spec)?,
+            journal: None,
+            events_written: 0,
+            poisoned: false,
+        };
+        let mut replayed = 0usize;
+        for (i, ev) in events.enumerate() {
+            session.replay_event(ev).map_err(|e| {
+                ServiceError::Journal(format!("event {} of {}: {e}", i + 1, path.display()))
+            })?;
+            replayed += 1;
+        }
+        if attach {
+            session.journal = Some(
+                Journal::open_append_at(path, read.valid_len)
+                    .map_err(|e| ServiceError::Io(e.to_string()))?,
+            );
+        }
+        // replayed events are already on disk; the counter tracks only
+        // what this process appends from here on
+        session.events_written = 0;
+        Ok((
+            session,
+            RecoveryReport {
+                events_replayed: replayed,
+                truncated_bytes: read.truncated_bytes,
+            },
+        ))
+    }
+
+    fn replay_event(&mut self, ev: &Json) -> Result<(), String> {
+        match ev.get("ev").and_then(|v| v.as_str()) {
+            Some("ask") => {
+                let worker = ev
+                    .get("worker")
+                    .and_then(|v| v.as_str())
+                    .ok_or("ask event missing worker")?;
+                let recorded = ev.get("resp").ok_or("ask event missing resp")?;
+                let replayed = assignment_json(&self.core.ask(worker));
+                if replayed != *recorded {
+                    return Err(format!(
+                        "replay divergence: journal acknowledged {} but replay produced {}",
+                        recorded.to_string_compact(),
+                        replayed.to_string_compact()
+                    ));
+                }
+                Ok(())
+            }
+            Some("tell") => {
+                let num = |key: &str| -> Result<f64, String> {
+                    ev.get(key)
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| format!("tell event missing '{key}'"))
+                };
+                let trial = num("trial")? as TrialId;
+                let epoch = num("epoch")? as u32;
+                // NaN metrics journal as `null`; read them back as NaN.
+                let metric = ev.get("metric").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+                // A tell that errored when live errors identically on
+                // replay; both are state no-ops, so ignore the result.
+                let _ = self.core.tell(trial, epoch, metric);
+                Ok(())
+            }
+            Some("fail") => {
+                let trial = ev
+                    .get("trial")
+                    .and_then(|v| v.as_f64())
+                    .ok_or("fail event missing trial")? as TrialId;
+                let _ = self.core.fail(trial);
+                Ok(())
+            }
+            Some("expire") => {
+                self.core.expire_workers();
+                Ok(())
+            }
+            other => Err(format!("unknown journal event {other:?}")),
+        }
+    }
+
+    fn append(&mut self, ev: &Json) -> Result<(), ServiceError> {
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.append(ev) {
+                self.poisoned = true;
+                return Err(ServiceError::Io(format!(
+                    "journal append failed, session '{}' poisoned: {e}",
+                    self.id
+                )));
+            }
+        }
+        self.events_written += 1;
+        Ok(())
+    }
+
+    /// Events appended since creation/recovery (journal-less sessions
+    /// count the appends they would have made).
+    pub fn events_journaled(&self) -> usize {
+        self.events_written
+    }
+
+    fn check_poisoned(&self) -> Result<(), ServiceError> {
+        if self.poisoned {
+            Err(ServiceError::Journal(format!(
+                "session '{}' is poisoned (an earlier journal append failed)",
+                self.id
+            )))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Ask for work on behalf of `worker`. Mutating asks are journaled
+    /// before being returned — including `Wait` answers that parked a
+    /// scheduler-emitted job (the mutation-count check), which must
+    /// replay for recovery to stay byte-identical.
+    pub fn ask(&mut self, worker: &str) -> Result<TrialAssignment, ServiceError> {
+        self.check_poisoned()?;
+        let before = self.core.mutation_count();
+        let assignment = self.core.ask(worker);
+        if assignment.is_mutation() || self.core.mutation_count() != before {
+            self.append(&ev_ask(worker, assignment_json(&assignment)))?;
+        }
+        Ok(assignment)
+    }
+
+    /// Report one epoch's metric. Journaled before it is applied, so an
+    /// acknowledged tell is always recoverable.
+    pub fn tell(
+        &mut self,
+        trial: TrialId,
+        epoch: u32,
+        metric: f64,
+    ) -> Result<TellAck, ServiceError> {
+        self.check_poisoned()?;
+        self.append(&ev_tell(trial, epoch, metric))?;
+        self.core.tell(trial, epoch, metric).map_err(ServiceError::Session)
+    }
+
+    /// A worker reported failure while running `trial`.
+    pub fn fail(&mut self, trial: TrialId) -> Result<(), ServiceError> {
+        self.check_poisoned()?;
+        self.append(&ev_fail(trial))?;
+        self.core.fail(trial).map_err(ServiceError::Session)
+    }
+
+    /// Retire all in-flight jobs (operator action after worker loss).
+    pub fn expire_workers(&mut self) -> Result<usize, ServiceError> {
+        self.check_poisoned()?;
+        self.append(&ev_expire())?;
+        Ok(self.core.expire_workers())
+    }
+
+    /// Read-only status summary (what `pasha sessions` renders).
+    pub fn status(&self) -> Json {
+        let snap = self.core.snapshot();
+        let stats = self.core.stats();
+        let mut o = Json::obj();
+        o.set("id", self.id.as_str())
+            .set("spec", self.spec.to_json())
+            .set("scheduler", self.core.scheduler_name())
+            .set("configs_sampled", snap.configs_sampled)
+            .set("jobs_dispatched", snap.jobs_dispatched)
+            .set("jobs_completed", snap.jobs_completed)
+            .set("epochs_completed", snap.epochs_completed as f64)
+            .set("in_flight", self.core.in_flight_count())
+            .set("cancelled_jobs", stats.cancelled_jobs)
+            .set("failed_jobs", stats.failed_jobs)
+            .set("stopped_trials", stats.stopped_trials)
+            .set("paused_trials", stats.paused_trials)
+            .set("max_resources", self.core.max_resources_used())
+            .set("trials", self.core.trials().len());
+        match self.core.best() {
+            Some(b) => {
+                o.set("best_trial", b.trial)
+                    .set("best_metric", b.metric)
+                    .set("best_config", config_json(&b.config));
+            }
+            None => {
+                o.set("best_metric", Json::Null);
+            }
+        }
+        o
+    }
+
+    pub fn core(&mut self) -> &mut AskTell {
+        &mut self.core
+    }
+
+    pub fn core_ref(&self) -> &AskTell {
+        &self.core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Benchmark;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("pasha-session-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn small_spec() -> SessionSpec {
+        SessionSpec {
+            bench: "lcbench-Fashion-MNIST".into(),
+            scheduler: "asha".into(),
+            config_budget: 8,
+            ..SessionSpec::default()
+        }
+    }
+
+    /// Drive a session to completion with one synchronous worker.
+    fn drive(session: &mut Session, bench: &dyn Benchmark, bench_seed: u64) {
+        loop {
+            match session.ask("w0").unwrap() {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, bench_seed);
+                        if session.tell(job.trial, e, m).unwrap() == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => panic!("single worker never waits"),
+                TrialAssignment::Done => return,
+            }
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = SessionSpec {
+            bench: "pd1-wmt".into(),
+            scheduler: "pasha-stop".into(),
+            eta: 4,
+            searcher: SearcherKind::Bo,
+            seed: 42,
+            bench_seed: 7,
+            config_budget: 99,
+            epoch_budget: Some(1234),
+        };
+        let j = spec.to_json();
+        let back = SessionSpec::from_json(&j).unwrap();
+        assert_eq!(spec, back);
+        // defaults fill missing fields
+        let sparse = crate::util::json::parse("{\"bench\":\"nas-cifar100\"}").unwrap();
+        let s = SessionSpec::from_json(&sparse).unwrap();
+        assert_eq!(s.bench, "nas-cifar100");
+        assert_eq!(s.config_budget, 256);
+        assert!(s.epoch_budget.is_none());
+    }
+
+    #[test]
+    fn full_session_recovers_to_done_state() {
+        let path = tmp("full.jsonl");
+        let spec = small_spec();
+        let bench = bench_from_name(&spec.bench).unwrap();
+        let mut s = Session::create("s0", spec.clone(), Some(&path)).unwrap();
+        drive(&mut s, bench.as_ref(), spec.bench_seed);
+        let best = s.core_ref().best().unwrap();
+        drop(s);
+
+        let (mut r, report) = Session::recover(&path).unwrap();
+        assert_eq!(report.truncated_bytes, 0);
+        assert!(report.events_replayed > 0);
+        assert_eq!(r.id, "s0");
+        assert_eq!(r.spec, spec);
+        let rbest = r.core_ref().best().unwrap();
+        assert_eq!(rbest.trial, best.trial);
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+        assert_eq!(r.ask("w0").unwrap(), TrialAssignment::Done);
+    }
+
+    #[test]
+    fn readonly_recovery_never_touches_the_file() {
+        let path = tmp("readonly.jsonl");
+        let spec = small_spec();
+        let bench = bench_from_name(&spec.bench).unwrap();
+        let mut s = Session::create("s0", spec.clone(), Some(&path)).unwrap();
+        drive(&mut s, bench.as_ref(), spec.bench_seed);
+        drop(s);
+        // leave a torn tail in place: readonly recovery must not trim it
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"ev\":\"tell\",\"tri");
+        std::fs::write(&path, &bytes).unwrap();
+        let (mut r, report) = Session::recover_readonly(&path).unwrap();
+        assert!(report.truncated_bytes > 0);
+        assert_eq!(r.ask("w0").unwrap(), TrialAssignment::Done);
+        assert_eq!(std::fs::read(&path).unwrap(), bytes, "file untouched");
+    }
+
+    #[test]
+    fn recovery_detects_foreign_journal() {
+        // A journal whose asks were produced under a different seed must
+        // be refused, not silently mis-replayed.
+        let path_a = tmp("seed-a.jsonl");
+        let spec_a = small_spec();
+        let bench = bench_from_name(&spec_a.bench).unwrap();
+        let mut a = Session::create("sa", spec_a.clone(), Some(&path_a)).unwrap();
+        drive(&mut a, bench.as_ref(), spec_a.bench_seed);
+        drop(a);
+        // swap the header's seed so replay draws different configs
+        let text = std::fs::read_to_string(&path_a).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        let doctored = lines[0].replace("\"seed\":0", "\"seed\":1");
+        lines[0] = &doctored;
+        let path_b = tmp("seed-b.jsonl");
+        std::fs::write(&path_b, lines.join("\n") + "\n").unwrap();
+        let err = match Session::recover(&path_b) {
+            Ok(_) => panic!("recovery must fail"),
+            Err(e) => e,
+        };
+        match err {
+            ServiceError::Journal(msg) => assert!(msg.contains("divergence"), "{msg}"),
+            other => panic!("expected divergence error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn status_shape() {
+        let mut s = Session::create("s1", small_spec(), None).unwrap();
+        let st = s.status();
+        assert_eq!(st.get("id").unwrap().as_str(), Some("s1"));
+        assert_eq!(st.get("configs_sampled").unwrap().as_f64(), Some(0.0));
+        assert_eq!(st.get("best_metric"), Some(&Json::Null));
+        // after some work the best appears
+        let bench = bench_from_name("lcbench-Fashion-MNIST").unwrap();
+        if let TrialAssignment::Run(job) = s.ask("w0").unwrap() {
+            for e in job.from_epoch + 1..=job.milestone {
+                let m = bench.accuracy_at(&job.config, e, 0);
+                s.tell(job.trial, e, m).unwrap();
+            }
+        } else {
+            panic!("expected a job");
+        }
+        let st = s.status();
+        assert!(st.get("best_metric").unwrap().as_f64().is_some());
+        assert_eq!(st.get("jobs_completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn bad_spec_is_rejected() {
+        let spec = SessionSpec {
+            bench: "no-such-bench".into(),
+            ..SessionSpec::default()
+        };
+        let err = match Session::create("x", spec, None) {
+            Ok(_) => panic!("bad spec must fail"),
+            Err(e) => e,
+        };
+        match err {
+            ServiceError::Spec(msg) => assert!(msg.contains("no-such-bench")),
+            other => panic!("expected spec error, got {other:?}"),
+        }
+    }
+}

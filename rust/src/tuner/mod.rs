@@ -16,11 +16,20 @@
 //! ([`Tuner::run_repeated_serial`]), just several times faster on
 //! multi-core machines.
 
+use crate::benchmarks::lcbench::LcBench;
+use crate::benchmarks::nasbench201::NasBench201;
+use crate::benchmarks::pd1::Pd1;
 use crate::benchmarks::Benchmark;
 use crate::config::space::Config;
 use crate::executor::engine::{ClockBudget, ConfigBudget, EpochBudget, StoppingRule};
 use crate::executor::sim::{SimBackend, SimStats};
 use crate::executor::{run_engine, SurrogateEvaluator};
+use crate::scheduler::asha::AshaBuilder;
+use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
+use crate::scheduler::hyperband::HyperbandBuilder;
+use crate::scheduler::pasha::PashaBuilder;
+use crate::scheduler::sh::SyncShBuilder;
+use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
 use crate::scheduler::SchedulerBuilder;
 use crate::searcher::bo::BoSearcher;
 use crate::searcher::random::RandomSearcher;
@@ -34,6 +43,84 @@ pub enum SearcherKind {
     Random,
     /// MOBSTER-style GP+EI (Table 3).
     Bo,
+}
+
+impl SearcherKind {
+    pub fn parse(s: &str) -> Option<SearcherKind> {
+        match s {
+            "random" => Some(SearcherKind::Random),
+            "bo" => Some(SearcherKind::Bo),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SearcherKind::Random => "random",
+            SearcherKind::Bo => "bo",
+        }
+    }
+}
+
+/// Benchmark registry shared by the CLI and the tuning service: resolve a
+/// benchmark by its wire name (`nas-cifar10`, `pd1-wmt`, `lcbench-<ds>`…).
+pub fn bench_from_name(name: &str) -> Result<Box<dyn Benchmark>, String> {
+    Ok(match name {
+        "nas-cifar10" => Box::new(NasBench201::cifar10()),
+        "nas-cifar100" => Box::new(NasBench201::cifar100()),
+        "nas-imagenet16" => Box::new(NasBench201::imagenet16()),
+        "pd1-wmt" => Box::new(Pd1::wmt()),
+        "pd1-imagenet" => Box::new(Pd1::imagenet()),
+        other => {
+            if let Some(ds) = other.strip_prefix("lcbench-") {
+                Box::new(LcBench::new(ds))
+            } else {
+                return Err(format!("unknown benchmark '{other}'"));
+            }
+        }
+    })
+}
+
+/// Scheduler registry shared by the CLI and the tuning service. `budget`
+/// only matters for synchronous SH (its initial cohort size).
+pub fn scheduler_from_name(
+    name: &str,
+    eta: u32,
+    budget: usize,
+) -> Result<Box<dyn SchedulerBuilder>, String> {
+    Ok(match name {
+        "asha" => Box::new(AshaBuilder { r_min: 1, eta }),
+        "pasha" => Box::new(PashaBuilder {
+            r_min: 1,
+            eta,
+            ranking: Default::default(),
+        }),
+        "asha-stop" => Box::new(StopAshaBuilder { r_min: 1, eta }),
+        "pasha-stop" => Box::new(StopPashaBuilder {
+            r_min: 1,
+            eta,
+            ranking: Default::default(),
+        }),
+        "sh" => Box::new(SyncShBuilder {
+            r_min: 1,
+            eta,
+            n0: budget,
+        }),
+        "hyperband" => Box::new(HyperbandBuilder { r_min: 1, eta }),
+        "1-epoch" => Box::new(FixedEpochBuilder { epochs: 1 }),
+        "random" => Box::new(RandomBaselineBuilder),
+        other => return Err(format!("unknown scheduler '{other}'")),
+    })
+}
+
+/// The searcher a repetition with scheduler seed `sched_seed` uses — one
+/// derivation shared by [`Tuner::run`] and the service session builder,
+/// so a served session reproduces the in-process run exactly.
+pub fn searcher_for(kind: &SearcherKind, sched_seed: u64) -> Box<dyn Searcher> {
+    match kind {
+        SearcherKind::Random => Box::new(RandomSearcher::new(mix(&[sched_seed, 0x5EA2C4]))),
+        SearcherKind::Bo => Box::new(BoSearcher::new(mix(&[sched_seed, 0xB0]))),
+    }
 }
 
 /// Extra stopping rules layered on top of the config budget (cloneable
@@ -159,14 +246,8 @@ impl Tuner {
         bench_seed: u64,
     ) -> TuneResult {
         let mut scheduler = builder.build(bench.max_epochs(), sched_seed);
-        let mut searcher: Box<dyn Searcher> = match spec.searcher {
-            SearcherKind::Random => Box::new(RandomSearcher::new(mix(&[sched_seed, 0x5EA2C4]))),
-            SearcherKind::Bo => Box::new(BoSearcher::new(mix(&[sched_seed, 0xB0]))),
-        };
-        let mut evaluator = SurrogateEvaluator {
-            bench,
-            bench_seed,
-        };
+        let mut searcher: Box<dyn Searcher> = searcher_for(&spec.searcher, sched_seed);
+        let mut evaluator = SurrogateEvaluator { bench, bench_seed };
         let mut backend = SimBackend::new(spec.workers, &mut evaluator);
         let rules = spec.rules();
         let stats: SimStats = run_engine(

@@ -1,0 +1,368 @@
+//! End-to-end tests for the ask/tell tuning service.
+//!
+//! * **Journal recovery property** — run a multi-worker session to
+//!   completion, journaling every mutating op; truncate the journal at
+//!   many points (whole-event and mid-line); recover; replay the
+//!   remainder of the reference op trace and require every subsequent
+//!   `ask` response to be byte-identical, and the final incumbent to
+//!   match the uninterrupted run exactly. Covers ASHA, PASHA, the
+//!   stopping-type variants (mid-rung kills with pauses pending and jobs
+//!   in flight) and a BO-searcher session.
+//! * **TCP equivalence** — `serve` + `worker` over localhost must land
+//!   on the same incumbent as the in-process `Tuner::run` for the same
+//!   seeds.
+
+use pasha::benchmarks::Benchmark;
+use pasha::scheduler::asktell::{assignment_json, config_from_json, TellAck, TrialAssignment};
+use pasha::service::{run_worker, Client, Registry, Server, Session, SessionSpec};
+use pasha::tuner::{bench_from_name, scheduler_from_name, SearcherKind, Tuner, TunerSpec};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pasha-e2e-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One step of the deterministic reference trace.
+#[derive(Clone, Debug)]
+enum Op {
+    /// `ask` by `worker`, with the canonical response bytes.
+    Ask { worker: usize, resp: String },
+    /// `tell(trial, epoch, metric)` by some worker, with the ack.
+    Tell {
+        trial: usize,
+        epoch: u32,
+        metric: f64,
+        ack: TellAck,
+    },
+}
+
+/// A recorded op plus the number of journal events written up to and
+/// including it (the alignment key between trace and journal lines).
+struct Traced {
+    op: Op,
+    events_after: usize,
+}
+
+fn worker_name(w: usize) -> String {
+    format!("w{w}")
+}
+
+/// Drive `session` to completion with `workers` round-robin synchronous
+/// workers (one op per worker per round), recording every op. The
+/// round-robin order makes the whole trace a pure function of the
+/// session spec, while still interleaving jobs so kills land mid-rung
+/// with work in flight.
+fn drive_traced(
+    session: &mut Session,
+    bench: &dyn Benchmark,
+    bench_seed: u64,
+    workers: usize,
+) -> Vec<Traced> {
+    let mut trace = Vec::new();
+    let mut jobs: Vec<Option<(pasha::scheduler::Job, u32)>> = vec![None; workers];
+    let mut done = vec![false; workers];
+    while !done.iter().all(|&d| d) {
+        for w in 0..workers {
+            if done[w] {
+                continue;
+            }
+            match jobs[w].take() {
+                None => {
+                    let assignment = session.ask(&worker_name(w)).unwrap();
+                    let resp = assignment_json(&assignment).to_string_compact();
+                    // events_journaled is the exact journal line count
+                    // (minus the create header) — the alignment key
+                    trace.push(Traced {
+                        op: Op::Ask { worker: w, resp },
+                        events_after: session.events_journaled(),
+                    });
+                    match assignment {
+                        TrialAssignment::Run(job) => {
+                            let from = job.from_epoch;
+                            jobs[w] = Some((job, from + 1));
+                        }
+                        TrialAssignment::Done => done[w] = true,
+                        _ => {}
+                    }
+                }
+                Some((job, epoch)) => {
+                    let metric = bench.accuracy_at(&job.config, epoch, bench_seed);
+                    let ack = session.tell(job.trial, epoch, metric).unwrap();
+                    trace.push(Traced {
+                        op: Op::Tell {
+                            trial: job.trial,
+                            epoch,
+                            metric,
+                            ack,
+                        },
+                        events_after: session.events_journaled(),
+                    });
+                    if ack == TellAck::Continue {
+                        jobs[w] = Some((job, epoch + 1));
+                    }
+                }
+            }
+        }
+    }
+    trace
+}
+
+/// Replay the trace tail on a recovered session, asserting byte-identical
+/// ask responses and identical tell acks. Returns the number of asks
+/// compared.
+fn replay_tail(session: &mut Session, tail: &[&Traced], label: &str) -> usize {
+    let mut asks = 0usize;
+    for t in tail {
+        match &t.op {
+            Op::Ask { worker, resp } => {
+                let replayed = session.ask(&worker_name(*worker)).unwrap();
+                let replayed = assignment_json(&replayed).to_string_compact();
+                assert_eq!(&replayed, resp, "{label}: ask #{asks} diverged after recovery");
+                asks += 1;
+            }
+            Op::Tell {
+                trial,
+                epoch,
+                metric,
+                ack,
+            } => {
+                let replayed = session.tell(*trial, *epoch, *metric).unwrap();
+                assert_eq!(replayed, *ack, "{label}: tell ack diverged after recovery");
+            }
+        }
+    }
+    asks
+}
+
+fn spec_for(scheduler: &str, searcher: SearcherKind, budget: usize) -> SessionSpec {
+    SessionSpec {
+        bench: "lcbench-Fashion-MNIST".into(),
+        scheduler: scheduler.into(),
+        searcher,
+        seed: 5,
+        bench_seed: 0,
+        config_budget: budget,
+        ..SessionSpec::default()
+    }
+}
+
+/// The recovery property for one session spec: every cut of the journal
+/// recovers to a state whose continuation is byte-identical to the
+/// uninterrupted run.
+fn check_recovery(label: &str, spec: SessionSpec, workers: usize) {
+    let dir = tmp_dir(label);
+    let path = dir.join("session.jsonl");
+    let bench = bench_from_name(&spec.bench).unwrap();
+
+    let mut live = Session::create("s0", spec.clone(), Some(&path)).unwrap();
+    let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, workers);
+    let best_full = live.core_ref().best().expect("session found an incumbent");
+    drop(live);
+
+    let lines: Vec<String> = std::fs::read_to_string(&path)
+        .unwrap()
+        .lines()
+        .map(|l| l.to_string())
+        .collect();
+    let total_events = lines.len() - 1; // minus the create header
+    assert!(total_events > 20, "{label}: workload too small to cut");
+
+    // Whole-event cuts across the run, denser around the middle, plus a
+    // couple of mid-line byte cuts (crash artifacts).
+    let mut cuts: Vec<usize> = (0..8).map(|i| 1 + i * total_events / 8).collect();
+    cuts.push(total_events); // recover the completed journal too
+    let mut saw_pause_mid_rung = false;
+    for (i, &cut) in cuts.iter().enumerate() {
+        let cut_path = dir.join(format!("cut-{i}.jsonl"));
+        let mut content = lines[..=cut].join("\n");
+        content.push('\n');
+        if i % 3 == 1 && cut < total_events {
+            // torn final append: recovery must drop the partial line
+            let partial = &lines[cut + 1][..lines[cut + 1].len() / 2];
+            content.push_str(partial);
+        }
+        std::fs::write(&cut_path, &content).unwrap();
+
+        let (mut recovered, report) = Session::recover(&cut_path).unwrap();
+        assert_eq!(report.events_replayed, cut, "{label}: replay count at cut {cut}");
+        let core = recovered.core_ref();
+        if core.stats().paused_trials > 0 && core.in_flight_count() > 0 {
+            saw_pause_mid_rung = true;
+        }
+        let tail: Vec<&Traced> = trace.iter().filter(|t| t.events_after > cut).collect();
+        let asks = replay_tail(&mut recovered, &tail, label);
+        if cut < total_events {
+            assert!(asks > 0, "{label}: cut {cut} left no asks to compare");
+        }
+        // after the full tail, the incumbent must match exactly
+        let best = recovered.core_ref().best().expect("recovered incumbent");
+        assert_eq!(best.trial, best_full.trial, "{label}: best trial");
+        assert_eq!(
+            best.metric.to_bits(),
+            best_full.metric.to_bits(),
+            "{label}: best metric"
+        );
+        assert_eq!(best.config, best_full.config, "{label}: best config");
+    }
+    if label.contains("pasha-stop") {
+        assert!(
+            saw_pause_mid_rung,
+            "{label}: no cut landed mid-rung with a pause pending — \
+             the scenario the journal must survive"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recovery_asha() {
+    check_recovery("asha", spec_for("asha", SearcherKind::Random, 32), 3);
+}
+
+#[test]
+fn recovery_pasha() {
+    check_recovery("pasha", spec_for("pasha", SearcherKind::Random, 32), 3);
+}
+
+#[test]
+fn recovery_asha_stop() {
+    check_recovery("asha-stop", spec_for("asha-stop", SearcherKind::Random, 32), 3);
+}
+
+#[test]
+fn recovery_pasha_stop_mid_rung_pause() {
+    // The stopping-type PASHA session: kills land while trials are
+    // paused at the resource cap and other jobs are mid-flight.
+    check_recovery("pasha-stop", spec_for("pasha-stop", SearcherKind::Random, 48), 3);
+}
+
+#[test]
+fn recovery_bo_searcher() {
+    // Model-based searcher: the GP's state is rebuilt through replayed
+    // on_report calls, so ask responses stay byte-identical.
+    check_recovery("bo", spec_for("pasha", SearcherKind::Bo, 16), 2);
+}
+
+#[test]
+fn tcp_session_matches_inprocess_tuner() {
+    // The acceptance bar: a full simulated LCBench session over real TCP
+    // lands on the same incumbent as Tuner::run for the same seeds.
+    let spec = SessionSpec {
+        bench: "lcbench-Fashion-MNIST".into(),
+        scheduler: "pasha".into(),
+        searcher: SearcherKind::Random,
+        seed: 3,
+        bench_seed: 0,
+        config_budget: 24,
+        ..SessionSpec::default()
+    };
+    let dir = tmp_dir("tcp");
+    let registry = Registry::with_journal_dir(dir.clone()).unwrap();
+    let server = Server::bind("127.0.0.1:0", Arc::new(registry)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let bench = bench_from_name(&spec.bench).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let sid = client.create(&spec).unwrap();
+    let report = run_worker(
+        &mut client,
+        &sid,
+        "w0",
+        bench.as_ref(),
+        spec.bench_seed,
+        Duration::from_millis(1),
+    )
+    .unwrap();
+    assert!(report.jobs_completed > 0);
+    let status = client.status(&sid).unwrap();
+    let served_best = status.get("best_metric").unwrap().as_f64().unwrap();
+    let served_config = config_from_json(
+        bench.space(),
+        status.get("best_config").expect("best config in status"),
+    )
+    .unwrap();
+
+    let tuner_spec = TunerSpec {
+        workers: 1,
+        config_budget: spec.config_budget,
+        searcher: SearcherKind::Random,
+        extra_stop: Vec::new(),
+    };
+    let builder = scheduler_from_name(&spec.scheduler, spec.eta, spec.config_budget).unwrap();
+    let inproc = Tuner::run(bench.as_ref(), builder.as_ref(), &tuner_spec, spec.seed, 0);
+    assert_eq!(
+        served_best.to_bits(),
+        inproc.best_metric.to_bits(),
+        "served {} vs in-process {}",
+        served_best,
+        inproc.best_metric
+    );
+    assert_eq!(Some(served_config.clone()), inproc.best_config);
+    let served_retrain = bench.retrain_accuracy(&served_config, spec.bench_seed);
+    assert_eq!(served_retrain.to_bits(), inproc.retrain_accuracy.to_bits());
+
+    // the journal the server wrote must replay cleanly, to the same best
+    let journal = dir.join(format!("{sid}.jsonl"));
+    let (recovered, _) = Session::recover(&journal).unwrap();
+    let best = recovered.core_ref().best().unwrap();
+    assert_eq!(best.metric.to_bits(), served_best.to_bits());
+
+    client.shutdown().unwrap();
+    server_thread.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tcp_many_workers_drain_one_session() {
+    // Concurrency smoke: several TCP workers share one session; the run
+    // drains, every worker exits on Done, and the incumbent is sane.
+    let spec = SessionSpec {
+        bench: "lcbench-Fashion-MNIST".into(),
+        scheduler: "asha".into(),
+        searcher: SearcherKind::Random,
+        seed: 1,
+        config_budget: 16,
+        ..SessionSpec::default()
+    };
+    let server = Server::bind("127.0.0.1:0", Arc::new(Registry::in_memory())).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let bench = bench_from_name(&spec.bench).unwrap();
+    let mut control = Client::connect(&addr).unwrap();
+    let sid = control.create(&spec).unwrap();
+    let reports: Vec<pasha::service::WorkerReport> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..4 {
+            let addr = addr.as_str();
+            let sid = sid.as_str();
+            let bench = &bench;
+            handles.push(scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                run_worker(
+                    &mut client,
+                    sid,
+                    &format!("w{w}"),
+                    bench.as_ref(),
+                    0,
+                    Duration::from_millis(1),
+                )
+                .unwrap()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let total_jobs: usize = reports.iter().map(|r| r.jobs_completed).sum();
+    assert!(total_jobs >= 16, "all configs trained: {total_jobs}");
+    let status = control.status(&sid).unwrap();
+    assert_eq!(status.get("in_flight").unwrap().as_f64(), Some(0.0), "drained");
+    assert!(status.get("best_metric").unwrap().as_f64().unwrap() > 0.0);
+    control.shutdown().unwrap();
+    server_thread.join().unwrap().unwrap();
+}
