@@ -1,14 +1,18 @@
-//! Service-layer microbenchmarks: the ask/tell hot path at four levels —
+//! Service-layer microbenchmarks: the ask/tell hot path at five levels —
 //! the bare adapter (no journal, no socket), a journaled session, the
-//! request dispatcher (registry + JSON, no socket), and the full loopback
-//! TCP round-trip. The spread between levels is the cost of durability,
-//! of serialization, and of the wire. (The multi-session × multi-worker
-//! stress run lives in `pasha bench-json --suite service`.)
+//! request dispatcher (registry + JSON, no socket), the full loopback
+//! TCP round-trip, and batched TCP frames (every epoch tell of a job
+//! plus the next ask in one round-trip). The spread between levels is
+//! the cost of durability, of serialization, of the wire, and what
+//! batching claws back. (The multi-session × multi-worker stress run
+//! lives in `pasha bench-json --suite service`.)
 
 use pasha::benchmarks::Benchmark;
 use pasha::config::space::SearchSpace;
 use pasha::scheduler::asktell::{assignment_from_json, AskTell, TellAck, TrialAssignment};
-use pasha::service::{handle_request, Client, Registry, Server, Session, SessionSpec};
+use pasha::service::{
+    handle_request, run_worker_batched, Client, Registry, Server, Session, SessionSpec,
+};
 use pasha::tuner::bench_from_name;
 use pasha::util::benchkit::{once, section};
 use pasha::util::json::parse;
@@ -175,7 +179,30 @@ fn main() {
         ops as f64 / dt.as_secs_f64().max(1e-9),
         dt.as_secs_f64() * 1e6 / ops.max(1) as f64
     );
-    port.client.shutdown().unwrap();
+
+    section("service: batched TCP frames (one round-trip per job)");
+    let mut batch_client = Client::connect(&addr).unwrap();
+    let bsid = batch_client.create(&spec(budget, 3)).unwrap();
+    let (report, bdt) = once("pasha session over TCP, batched", || {
+        run_worker_batched(
+            &mut batch_client,
+            &bsid,
+            "w0",
+            bench.as_ref(),
+            0,
+            std::time::Duration::from_millis(1),
+        )
+        .unwrap()
+    });
+    let bops = report.epochs_told as usize + report.frames;
+    println!(
+        "  -> {:.0} ops/s across {} frames ({:.1} µs/op, {:.1} ops/frame)",
+        bops as f64 / bdt.as_secs_f64().max(1e-9),
+        report.frames,
+        bdt.as_secs_f64() * 1e6 / bops.max(1) as f64,
+        bops as f64 / report.frames.max(1) as f64
+    );
+    batch_client.shutdown().unwrap();
     let _ = server_thread.join();
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -9,10 +9,11 @@
 //! pasha figure <1..5> [--out results/]
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
 //! pasha bench-json [--suite engine|service|all] [--out FILE]
-//! pasha serve  [--addr A] [--journal-dir DIR]           # ask/tell service
-//! pasha worker --addr A (--session ID | --create ...) [--expire]
+//! pasha serve  [--addr A] [--journal-dir DIR] [--snapshot-interval N]
+//! pasha worker --addr A (--session ID | --create ...) [--expire] [--batch]
 //! pasha sessions --addr A                                # list sessions
 //! pasha recover --journal FILE                           # journal check
+//! pasha compact --journal FILE                           # snapshot + truncate
 //! pasha e2e    [--budget N] [--hidden H]                # real PJRT training
 //! pasha artifacts-check                                  # PJRT smoke test
 //! ```
@@ -23,7 +24,9 @@ use pasha::report::{experiments, figures};
 use pasha::scheduler::asha::AshaBuilder;
 use pasha::scheduler::asktell::config_from_json;
 use pasha::scheduler::pasha::PashaBuilder;
-use pasha::service::{run_worker, Client, Registry, Server, Session, SessionSpec};
+use pasha::service::{
+    run_worker, run_worker_batched, Client, Registry, Server, Session, SessionOptions, SessionSpec,
+};
 use pasha::tuner::{
     bench_from_name, scheduler_from_name, SearcherKind, StopSpec, Tuner, TunerSpec,
 };
@@ -50,6 +53,7 @@ fn main() {
         "worker" => cmd_worker(&flags),
         "sessions" => cmd_sessions(&flags),
         "recover" => cmd_recover(&flags),
+        "compact" => cmd_compact(&flags),
         "e2e" => cmd_e2e(&flags),
         "artifacts-check" => cmd_artifacts_check(),
         "help" | "--help" | "-h" => {
@@ -81,12 +85,13 @@ USAGE:
   pasha figure <1|2|3|4|5> [--out DIR]
   pasha report [--scale paper|smoke] [--out DIR]
   pasha bench-json [--suite engine|service|all] [--out FILE]
-  pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR]
+  pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR] [--snapshot-interval N]
   pasha worker --addr HOST:PORT (--session ID | --create [--bench B] [--scheduler S]
                [--budget N] [--seed S] [--eta E] [--searcher random|bo] [--epoch-budget E])
-               [--worker-id W] [--expire] [--shutdown]
+               [--worker-id W] [--expire] [--batch] [--shutdown]
   pasha sessions --addr HOST:PORT
   pasha recover --journal FILE             # verify a session journal replays cleanly
+  pasha compact --journal FILE             # snapshot + truncate a session journal
   pasha e2e    [--budget N] [--hidden 64|128|256] [--workers W]
   pasha artifacts-check"
     );
@@ -525,6 +530,20 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
     let inproc = Tuner::run(bench.as_ref(), builder.as_ref(), &tuner_spec, 0, 0);
     let matches = served_best.to_bits() == inproc.best_metric.to_bits();
 
+    // Batched vs unbatched framing on identical single-worker sessions:
+    // the per-op cost of a frame of N ops must sit at or below one
+    // unbatched round-trip (the acceptance bar for the batch protocol).
+    // Both runs use the canonical worker drivers, which record per-op
+    // wire latencies in their reports.
+    let poll = Duration::from_millis(1);
+    let ub_id = control.create(&spec_for(7)).map_err(|e| e.to_string())?;
+    let unbatched = run_worker(&mut control, &ub_id, "w0", bench.as_ref(), 0, poll)
+        .map_err(|e| e.to_string())?;
+    let b_id = control.create(&spec_for(7)).map_err(|e| e.to_string())?;
+    let batched = run_worker_batched(&mut control, &b_id, "w0", bench.as_ref(), 0, poll)
+        .map_err(|e| e.to_string())?;
+    let (unbatched_us, batched_us, frames) = (unbatched.op_us, batched.op_us, batched.frames);
+
     control.shutdown().map_err(|e| e.to_string())?;
     let _ = server_thread.join();
     let _ = std::fs::remove_dir_all(&dir);
@@ -538,10 +557,23 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
     };
     let (ask_p50, ask_p99) = lat(&ask_us);
     let (tell_p50, tell_p99) = lat(&tell_us);
+    let (ub_p50, ub_p99) = lat(&unbatched_us);
+    let (b_p50, b_p99) = lat(&batched_us);
     let mut ask_j = Json::obj();
     ask_j.set("count", ask_us.len()).set("p50_us", ask_p50).set("p99_us", ask_p99);
     let mut tell_j = Json::obj();
     tell_j.set("count", tell_us.len()).set("p50_us", tell_p50).set("p99_us", tell_p99);
+    let mut unbatched_j = Json::obj();
+    unbatched_j
+        .set("count", unbatched_us.len())
+        .set("p50_us", ub_p50)
+        .set("p99_us", ub_p99);
+    let mut batched_j = Json::obj();
+    batched_j
+        .set("count", batched_us.len())
+        .set("frames", frames)
+        .set("p50_us", b_p50)
+        .set("p99_us", b_p99);
     let mut root = Json::obj();
     root.set("benchmark", "service")
         .set("sessions", n_sessions)
@@ -552,6 +584,10 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
         .set("ops_per_sec", ops as f64 / wall.max(1e-9))
         .set("ask", ask_j)
         .set("tell", tell_j)
+        .set("unbatched_per_op", unbatched_j)
+        .set("batched_per_op", batched_j)
+        .set("batched_speedup_p50", ub_p50 / b_p50.max(1e-9))
+        .set("batched_at_or_below_unbatched", b_p50 <= ub_p50)
         .set("single_worker_matches_inprocess", matches);
     std::fs::write(&out_path, root.to_string_pretty()).map_err(|e| e.to_string())?;
     println!(
@@ -559,6 +595,11 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
          ({:.0} ops/s); ask p50/p99 {ask_p50:.0}/{ask_p99:.0}us, \
          tell p50/p99 {tell_p50:.0}/{tell_p99:.0}us",
         ops as f64 / wall.max(1e-9)
+    );
+    println!(
+        "wire framing: unbatched p50 {ub_p50:.0}us/op vs batched p50 {b_p50:.0}us/op \
+         over {frames} frames ({:.1}x)",
+        ub_p50 / b_p50.max(1e-9)
     );
     println!("single-worker incumbent matches in-process tuner: {matches}");
     println!("wrote {}", out_path.display());
@@ -573,14 +614,28 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         .get("addr")
         .cloned()
         .unwrap_or_else(|| "127.0.0.1:7171".to_string());
+    let options = match flags.get("snapshot-interval") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| format!("invalid --snapshot-interval '{v}' (expected events)"))?;
+            if n == 0 {
+                return Err("--snapshot-interval must be >= 1".into());
+            }
+            SessionOptions::snapshot_every(n)
+        }
+        None => SessionOptions::default(),
+    };
     let registry = match flags.get("journal-dir") {
-        Some(d) => Registry::with_journal_dir(PathBuf::from(d)).map_err(|e| e.to_string())?,
+        Some(d) => Registry::with_journal_dir_opts(PathBuf::from(d), options)
+            .map_err(|e| e.to_string())?,
         None => Registry::in_memory(),
     };
     for (id, rep) in registry.recovered() {
         println!(
-            "recovered session {id}: {} events replayed ({} torn bytes dropped)",
-            rep.events_replayed, rep.truncated_bytes
+            "recovered session {id}: snapshot at event {} + {} replayed \
+             ({} skipped, {} torn bytes dropped)",
+            rep.snapshot_events, rep.events_replayed, rep.events_skipped, rep.truncated_bytes
         );
     }
     let server = Server::bind(&addr, Arc::new(registry)).map_err(|e| e.to_string())?;
@@ -639,18 +694,23 @@ fn cmd_worker(flags: &HashMap<String, String>) -> Result<(), String> {
     let spec = SessionSpec::from_json(spec_json)?;
     let bench = bench_from_name(&spec.bench)?;
     let t0 = std::time::Instant::now();
-    let report = run_worker(
-        &mut client,
-        &session,
-        &worker_id,
-        bench.as_ref(),
-        spec.bench_seed,
-        Duration::from_millis(20),
-    )
+    // --batch ships each job's tells + the next ask as one wire frame
+    let poll = Duration::from_millis(20);
+    let seed = spec.bench_seed;
+    let report = if flags.contains_key("batch") {
+        run_worker_batched(&mut client, &session, &worker_id, bench.as_ref(), seed, poll)
+    } else {
+        run_worker(&mut client, &session, &worker_id, bench.as_ref(), seed, poll)
+    }
     .map_err(|e| e.to_string())?;
     let status = client.status(&session).map_err(|e| e.to_string())?;
+    let frames = if report.frames > 0 {
+        format!(", {} wire frames", report.frames)
+    } else {
+        String::new()
+    };
     println!(
-        "session {session} drained: {} jobs, {} epochs told, {} abandoned ({:.2}s wall)",
+        "session {session} drained: {} jobs, {} epochs told, {} abandoned{frames} ({:.2}s wall)",
         report.jobs_completed,
         report.epochs_told,
         report.jobs_abandoned,
@@ -690,13 +750,59 @@ fn cmd_recover(flags: &HashMap<String, String>) -> Result<(), String> {
     let path = flags.get("journal").ok_or("need --journal FILE")?;
     let (session, report) = Session::recover_readonly(std::path::Path::new(path))
         .map_err(|e| format!("{path}: {e}"))?;
-    println!(
-        "journal {path}: session '{}' replayed {} events ({} torn bytes dropped)",
-        session.id, report.events_replayed, report.truncated_bytes
-    );
+    if report.snapshot_events > 0 {
+        println!(
+            "journal {path}: session '{}' restored snapshot at event {} and \
+             replayed {} tail events ({} skipped, {} torn bytes dropped)",
+            session.id,
+            report.snapshot_events,
+            report.events_replayed,
+            report.events_skipped,
+            report.truncated_bytes
+        );
+    } else {
+        println!(
+            "journal {path}: session '{}' replayed {} events ({} torn bytes dropped)",
+            session.id, report.events_replayed, report.truncated_bytes
+        );
+    }
     println!(
         "{}",
         pasha::report::service::sessions_table(&[session.status()]).to_text()
+    );
+    Ok(())
+}
+
+/// Snapshot + truncate a session journal in place: recovery afterwards
+/// restores the snapshot and replays nothing. Only run this on a journal
+/// no server currently owns (the tail rewrite would race a live
+/// appender).
+fn cmd_compact(flags: &HashMap<String, String>) -> Result<(), String> {
+    let path = flags.get("journal").ok_or("need --journal FILE")?;
+    let path = std::path::Path::new(path);
+    let size = |p: &std::path::Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+    let snap_path = pasha::service::journal::snapshot_path(path);
+    let before = size(path) + size(&snap_path);
+    let (mut session, report) =
+        Session::recover(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    session.compact_now().map_err(|e| e.to_string())?;
+    let events = session.events_total();
+    drop(session);
+    let after = size(path) + size(&snap_path);
+    println!(
+        "compacted {}: {} events -> snapshot (replayed {} on the way in); \
+         {} bytes -> {} bytes (journal + sidecar)",
+        path.display(),
+        events,
+        report.events_replayed,
+        before,
+        after
+    );
+    // prove the result is immediately recoverable, tail-free
+    let (_, check) = Session::recover_readonly(path).map_err(|e| e.to_string())?;
+    println!(
+        "verified: recovery now restores the snapshot at event {} and replays {} events",
+        check.snapshot_events, check.events_replayed
     );
     Ok(())
 }

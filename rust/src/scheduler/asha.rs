@@ -10,9 +10,11 @@
 
 use super::core::ShCore;
 use super::rung::RungLevels;
+use super::state::{field, load_sh_core, sh_core_json};
 use super::types::{
     BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialInfo,
 };
+use crate::util::json::Json;
 
 pub struct Asha {
     core: ShCore,
@@ -54,6 +56,19 @@ impl Scheduler for Asha {
 
     fn trials(&self) -> &[TrialInfo] {
         &self.core.trials
+    }
+
+    fn save_state(&self) -> Option<Json> {
+        let mut o = Json::obj();
+        o.set("kind", "asha").set("core", sh_core_json(&self.core));
+        Some(o)
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        if state.get("kind").and_then(|k| k.as_str()) != Some("asha") {
+            return Err("state is not an ASHA snapshot".into());
+        }
+        load_sh_core(&mut self.core, field(state, "core")?)
     }
 
     fn name(&self) -> String {

@@ -28,6 +28,10 @@
 
 use crate::config::space::{Config, SearchSpace};
 use crate::executor::engine::{EngineSnapshot, StoppingRule};
+use crate::scheduler::state::{
+    action_from, action_json, curve_from, curve_json, field, job_from, job_json, trial_ids_from,
+    trial_set_json, u64_from, u64_json, usize_field,
+};
 use crate::scheduler::{BestTrial, Job, JobOutcome, SchedCtx, Scheduler, TrialAction, TrialInfo};
 use crate::searcher::Searcher;
 use crate::util::json::Json;
@@ -424,6 +428,131 @@ impl AskTell {
     pub fn in_flight_count(&self) -> usize {
         self.in_flight.values().filter(|f| !f.discarded).count()
     }
+
+    /// Serialize the adapter's full state — progress counters, in-flight
+    /// jobs with their buffered curves, parked resumes, pending
+    /// directives, and the nested scheduler/searcher states — as one JSON
+    /// value ([`crate::scheduler::state`] codecs). Returns `None` when
+    /// the scheduler or searcher does not support snapshots; the service
+    /// then falls back to full journal replay.
+    pub fn save_state(&self) -> Option<Json> {
+        let scheduler = self.scheduler.save_state()?;
+        let searcher = self.searcher.save_state()?;
+        let mut snap = Json::obj();
+        snap.set("configs_sampled", self.snap.configs_sampled)
+            .set("jobs_dispatched", self.snap.jobs_dispatched)
+            .set("jobs_completed", self.snap.jobs_completed)
+            .set("epochs_dispatched", u64_json(self.snap.epochs_dispatched))
+            .set("epochs_completed", u64_json(self.snap.epochs_completed));
+        // in-flight entries sorted by trial id for deterministic bytes;
+        // restoring into a HashMap is safe because no decision path
+        // iterates the map in hash order (expire sorts, parked scans a Vec)
+        let mut trials: Vec<&TrialId> = self.in_flight.keys().collect();
+        trials.sort_unstable();
+        let in_flight: Vec<Json> = trials
+            .into_iter()
+            .map(|t| {
+                let fl = &self.in_flight[t];
+                let mut o = Json::obj();
+                o.set("worker", fl.worker.as_str())
+                    .set("job", job_json(&fl.job))
+                    .set("curve", curve_json(&fl.curve))
+                    .set("discarded", fl.discarded);
+                o
+            })
+            .collect();
+        let directives: Vec<Json> = self
+            .directives
+            .iter()
+            .map(|(w, a)| {
+                let mut o = Json::obj();
+                o.set("worker", w.as_str()).set("action", action_json(a));
+                o
+            })
+            .collect();
+        let mut stats = Json::obj();
+        stats
+            .set("cancelled_jobs", self.stats.cancelled_jobs)
+            .set("failed_jobs", self.stats.failed_jobs)
+            .set("stopped_trials", self.stats.stopped_trials)
+            .set("paused_trials", self.stats.paused_trials);
+        let mut o = Json::obj();
+        o.set("snap", snap)
+            .set("in_flight", Json::Arr(in_flight))
+            .set("parked", Json::Arr(self.parked.iter().map(job_json).collect()))
+            .set("directives", Json::Arr(directives))
+            .set("stopped", trial_set_json(&self.stopped))
+            .set("paused", trial_set_json(&self.paused))
+            .set("stats", stats)
+            .set("mutations", u64_json(self.mutations))
+            .set("scheduler", scheduler)
+            .set("searcher", searcher);
+        Some(o)
+    }
+
+    /// Restore [`AskTell::save_state`] output into this freshly-built
+    /// adapter (same construction recipe: scheduler builder, searcher
+    /// kind, space, rules). The continuation is byte-identical to the
+    /// adapter that was snapshotted.
+    pub fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        self.scheduler.load_state(field(state, "scheduler")?)?;
+        self.searcher.load_state(field(state, "searcher")?)?;
+        let snap = field(state, "snap")?;
+        self.snap = EngineSnapshot {
+            configs_sampled: usize_field(snap, "configs_sampled")?,
+            jobs_dispatched: usize_field(snap, "jobs_dispatched")?,
+            jobs_completed: usize_field(snap, "jobs_completed")?,
+            epochs_dispatched: u64_from(field(snap, "epochs_dispatched")?)?,
+            epochs_completed: u64_from(field(snap, "epochs_completed")?)?,
+            clock_seconds: 0.0,
+        };
+        self.in_flight.clear();
+        for e in field(state, "in_flight")?
+            .as_arr()
+            .ok_or("in_flight must be an array")?
+        {
+            let fl = InFlight {
+                worker: field(e, "worker")?
+                    .as_str()
+                    .ok_or("worker must be a string")?
+                    .to_string(),
+                job: job_from(field(e, "job")?)?,
+                curve: curve_from(field(e, "curve")?)?,
+                discarded: field(e, "discarded")?
+                    .as_bool()
+                    .ok_or("discarded must be a bool")?,
+            };
+            self.in_flight.insert(fl.job.trial, fl);
+        }
+        self.parked = field(state, "parked")?
+            .as_arr()
+            .ok_or("parked must be an array")?
+            .iter()
+            .map(job_from)
+            .collect::<Result<_, _>>()?;
+        self.directives.clear();
+        for d in field(state, "directives")?
+            .as_arr()
+            .ok_or("directives must be an array")?
+        {
+            let worker = field(d, "worker")?
+                .as_str()
+                .ok_or("worker must be a string")?
+                .to_string();
+            self.directives.push_back((worker, action_from(field(d, "action")?)?));
+        }
+        self.stopped = trial_ids_from(field(state, "stopped")?)?.into_iter().collect();
+        self.paused = trial_ids_from(field(state, "paused")?)?.into_iter().collect();
+        let stats = field(state, "stats")?;
+        self.stats = AskTellStats {
+            cancelled_jobs: usize_field(stats, "cancelled_jobs")?,
+            failed_jobs: usize_field(stats, "failed_jobs")?,
+            stopped_trials: usize_field(stats, "stopped_trials")?,
+            paused_trials: usize_field(stats, "paused_trials")?,
+        };
+        self.mutations = u64_from(field(state, "mutations")?)?;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -752,5 +881,128 @@ mod tests {
         drive_single(&mut at, &bench, 0);
         assert!(at.is_done());
         assert_eq!(at.ask("w0"), TrialAssignment::Done);
+    }
+
+    /// Round-robin multi-worker driver whose own cursor state (which
+    /// worker holds which job at which epoch) can be cloned — so a
+    /// snapshot cut mid-run can be continued identically on two adapters.
+    #[derive(Clone)]
+    struct Driver {
+        jobs: Vec<Option<(Job, u32)>>,
+        done: Vec<bool>,
+    }
+
+    impl Driver {
+        fn new(workers: usize) -> Driver {
+            Driver {
+                jobs: vec![None; workers],
+                done: vec![false; workers],
+            }
+        }
+
+        fn finished(&self) -> bool {
+            self.done.iter().all(|&d| d)
+        }
+
+        /// One round over all workers; every op's canonical encoding is
+        /// appended to `trace`.
+        fn round(&mut self, at: &mut AskTell, bench: &NasBench201, trace: &mut Vec<String>) {
+            for w in 0..self.jobs.len() {
+                if self.done[w] {
+                    continue;
+                }
+                let name = format!("w{w}");
+                match self.jobs[w].take() {
+                    None => {
+                        let a = at.ask(&name);
+                        trace.push(assignment_json(&a).to_string_compact());
+                        match a {
+                            TrialAssignment::Run(job) => {
+                                let from = job.from_epoch;
+                                self.jobs[w] = Some((job, from + 1));
+                            }
+                            TrialAssignment::Done => self.done[w] = true,
+                            _ => {}
+                        }
+                    }
+                    Some((job, epoch)) => {
+                        let m = bench.accuracy_at(&job.config, epoch, 0);
+                        let ack = at.tell(job.trial, epoch, m).unwrap();
+                        trace.push(format!("tell:{}:{}:{}", job.trial, epoch, ack.as_str()));
+                        if ack == TellAck::Continue {
+                            self.jobs[w] = Some((job, epoch + 1));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_mid_run_continues_byte_identically() {
+        // Cut a three-worker session mid-run (jobs in flight, and for the
+        // stopping family possibly parked resumes and pending
+        // directives), restore the snapshot into a fresh adapter, and
+        // require the remaining op trace to match byte for byte.
+        let bench = NasBench201::cifar10();
+        let builders: Vec<Box<dyn SchedulerBuilder>> = vec![
+            Box::new(AshaBuilder::default()),
+            Box::new(PashaBuilder::default()),
+            Box::new(StopAshaBuilder::default()),
+            Box::new(StopPashaBuilder::default()),
+        ];
+        for builder in &builders {
+            for cut_rounds in [3usize, 11, 29] {
+                let mut live = asktell_for(builder.as_ref(), 20, 13);
+                let mut driver = Driver::new(3);
+                let mut head = Vec::new();
+                for _ in 0..cut_rounds {
+                    if driver.finished() {
+                        break;
+                    }
+                    driver.round(&mut live, &bench, &mut head);
+                }
+                let state = live
+                    .save_state()
+                    .expect("all four schedulers support snapshots")
+                    .to_string_compact();
+                let mut restored = asktell_for(builder.as_ref(), 20, 13);
+                restored
+                    .load_state(&crate::util::json::parse(&state).unwrap())
+                    .unwrap();
+                let mut driver_b = driver.clone();
+                let (mut tail_a, mut tail_b) = (Vec::new(), Vec::new());
+                while !driver.finished() {
+                    driver.round(&mut live, &bench, &mut tail_a);
+                }
+                while !driver_b.finished() {
+                    driver_b.round(&mut restored, &bench, &mut tail_b);
+                }
+                assert_eq!(tail_a, tail_b, "{} cut {cut_rounds}", builder.name());
+                let (a, b) = (live.best().unwrap(), restored.best().unwrap());
+                assert_eq!(a.trial, b.trial, "{}", builder.name());
+                assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "{}", builder.name());
+                assert_eq!(live.mutation_count(), restored.mutation_count());
+            }
+        }
+    }
+
+    #[test]
+    fn save_state_none_for_unsupported_scheduler() {
+        // Synchronous SH has no snapshot codec: the adapter must report
+        // None (the service then falls back to full replay), not panic.
+        let bench = NasBench201::cifar10();
+        let builder = crate::scheduler::sh::SyncShBuilder {
+            r_min: 1,
+            eta: 3,
+            n0: 9,
+        };
+        let at = AskTell::new(
+            builder.build(bench.max_epochs(), 0),
+            Box::new(RandomSearcher::new(0)),
+            bench.space().clone(),
+            vec![Box::new(ConfigBudget(9))],
+        );
+        assert!(at.save_state().is_none());
     }
 }

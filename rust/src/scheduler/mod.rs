@@ -15,6 +15,10 @@
 //! * [`asktell`] — the pull-mode adapter: any scheduler + searcher behind
 //!   an `ask`/`tell` API for the tuning service ([`crate::service`]),
 //!   where external workers drive trials instead of the engine loop.
+//! * [`state`] — JSON codecs for serializable scheduler/searcher state:
+//!   the snapshot format that makes service recovery O(tail) instead of
+//!   O(history) (implemented by ASHA, PASHA, both stopping variants, and
+//!   the random/BO searchers).
 //!
 //! All of them speak the same protocol to the execution engine
 //! ([`crate::executor::engine`]): `next_job` fills free workers,
@@ -32,6 +36,7 @@ pub mod hyperband;
 pub mod pasha;
 pub mod rung;
 pub mod sh;
+pub mod state;
 pub mod stopping;
 pub mod types;
 

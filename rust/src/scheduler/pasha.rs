@@ -13,10 +13,12 @@
 
 use super::core::ShCore;
 use super::rung::RungLevels;
+use super::state::{curve_from, curve_json, field, load_sh_core, sh_core_json, usize_field};
 use super::types::{
     BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialInfo,
 };
 use crate::ranking::{RankCtx, RankingFunction, RankingSpec};
+use crate::util::json::Json;
 
 /// The consistency check of Algorithm 1 lines 11–18: compare the current
 /// top-rung ranking against the previous rung's ranking restricted to the
@@ -137,6 +139,34 @@ impl Scheduler for Pasha {
 
     fn epsilon_history(&self) -> &[f64] {
         &self.eps_history
+    }
+
+    fn save_state(&self) -> Option<Json> {
+        // The ranking function itself carries no decision state: every
+        // consistency check recomputes ε from the rung data, so rebuilding
+        // it fresh from the spec preserves byte-identical behavior.
+        let mut o = Json::obj();
+        o.set("kind", "pasha")
+            .set("core", sh_core_json(&self.core))
+            .set("cap", self.cap)
+            .set("eps_history", curve_json(&self.eps_history))
+            .set("growths", self.growths);
+        Some(o)
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        if state.get("kind").and_then(|k| k.as_str()) != Some("pasha") {
+            return Err("state is not a PASHA snapshot".into());
+        }
+        load_sh_core(&mut self.core, field(state, "core")?)?;
+        let cap = usize_field(state, "cap")?;
+        if cap >= self.core.levels.num_rungs() {
+            return Err(format!("snapshot cap {cap} outside the rung grid"));
+        }
+        self.cap = cap;
+        self.eps_history = curve_from(field(state, "eps_history")?)?;
+        self.growths = usize_field(state, "growths")?;
+        Ok(())
     }
 
     fn name(&self) -> String {

@@ -1,0 +1,506 @@
+//! JSON codecs for serializable scheduler/searcher state.
+//!
+//! The tuning service recovers a crashed session by replaying its journal
+//! against a fresh ask/tell core — O(history). Snapshots make recovery
+//! O(tail): [`crate::scheduler::Scheduler::save_state`] /
+//! [`crate::searcher::Searcher::save_state`] capture the full decision
+//! state as a JSON value, and `load_state` restores it into a
+//! freshly-built instance so the continuation is **byte-identical** to
+//! never having stopped. This module holds the shared encoding helpers
+//! those implementations use.
+//!
+//! Encoding rules that make the identity hold:
+//!
+//! * `f64` values ride as JSON numbers via Rust's shortest-roundtrip
+//!   formatting (bit-exact for finite values); `NaN`/`±Inf`/`-0.0` —
+//!   which JSON cannot represent — are spelled as the strings `"NaN"`,
+//!   `"Inf"`, `"-Inf"`, `"-0"` ([`f64_json`] / [`f64_from`]).
+//! * `u64`/`i64` values that may exceed 2^53 (RNG state, mutation
+//!   counters) ride as decimal strings, never as lossy doubles.
+//! * Hash containers are serialized in sorted order so snapshot bytes are
+//!   deterministic; restored containers behave identically because no
+//!   decision path iterates them in hash order.
+
+use crate::config::space::{Config, ParamValue};
+use crate::scheduler::core::ShCore;
+use crate::scheduler::rung::{Rung, RungLevels};
+use crate::scheduler::types::{Job, TrialAction, TrialInfo};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::TrialId;
+use std::collections::HashSet;
+
+// ---------------------------------------------------------------------------
+// Scalars
+// ---------------------------------------------------------------------------
+
+/// Encode one `f64` exactly (see module docs for the non-finite spelling).
+pub fn f64_json(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Str("NaN".into())
+    } else if x == f64::INFINITY {
+        Json::Str("Inf".into())
+    } else if x == f64::NEG_INFINITY {
+        Json::Str("-Inf".into())
+    } else if x == 0.0 && x.is_sign_negative() {
+        Json::Str("-0".into())
+    } else {
+        Json::Num(x)
+    }
+}
+
+/// Decode [`f64_json`] output bit-exactly.
+pub fn f64_from(j: &Json) -> Result<f64, String> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN),
+            "Inf" => Ok(f64::INFINITY),
+            "-Inf" => Ok(f64::NEG_INFINITY),
+            "-0" => Ok(-0.0),
+            other => Err(format!("bad float literal '{other}'")),
+        },
+        other => Err(format!("expected a float, got {other}")),
+    }
+}
+
+/// Encode a `u64` as a decimal string (doubles lose bits past 2^53).
+pub fn u64_json(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+/// Decode [`u64_json`] output.
+pub fn u64_from(j: &Json) -> Result<u64, String> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| format!("expected a u64 string, got {j}"))?;
+    s.parse::<u64>().map_err(|e| format!("bad u64 '{s}': {e}"))
+}
+
+/// Fetch a required field.
+pub fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+/// Fetch a required small non-negative integer field (exact below 2^53).
+pub fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    let x = field(j, key)?
+        .as_f64()
+        .ok_or_else(|| format!("field '{key}' must be a number"))?;
+    Ok(x as usize)
+}
+
+/// Fetch a required `u32` field.
+pub fn u32_field(j: &Json, key: &str) -> Result<u32, String> {
+    Ok(usize_field(j, key)? as u32)
+}
+
+// ---------------------------------------------------------------------------
+// RNG
+// ---------------------------------------------------------------------------
+
+/// Encode a generator's full state.
+pub fn rng_json(rng: &Rng) -> Json {
+    Json::Arr(rng.state().iter().map(|&w| u64_json(w)).collect())
+}
+
+/// Decode [`rng_json`] output; the restored stream continues exactly.
+pub fn rng_from(j: &Json) -> Result<Rng, String> {
+    let arr = j.as_arr().ok_or("rng state must be an array")?;
+    if arr.len() != 4 {
+        return Err(format!("rng state must have 4 words, got {}", arr.len()));
+    }
+    let mut s = [0u64; 4];
+    for (slot, w) in s.iter_mut().zip(arr) {
+        *slot = u64_from(w)?;
+    }
+    Ok(Rng::from_state(s))
+}
+
+// ---------------------------------------------------------------------------
+// Configurations and jobs
+// ---------------------------------------------------------------------------
+
+/// Encode one parameter value with its kind tag, so decoding needs no
+/// search space: `{"f":x}` float, `{"i":"n"}` int, `{"c":n}` categorical.
+pub fn param_value_json(v: &ParamValue) -> Json {
+    let mut o = Json::obj();
+    match v {
+        ParamValue::Float(x) => o.set("f", f64_json(*x)),
+        ParamValue::Int(x) => o.set("i", Json::Str(x.to_string())),
+        ParamValue::Cat(c) => o.set("c", *c),
+    };
+    o
+}
+
+/// Decode [`param_value_json`] output.
+pub fn param_value_from(j: &Json) -> Result<ParamValue, String> {
+    if let Some(f) = j.get("f") {
+        return Ok(ParamValue::Float(f64_from(f)?));
+    }
+    if let Some(i) = j.get("i") {
+        let s = i.as_str().ok_or("int param must be a string")?;
+        return Ok(ParamValue::Int(
+            s.parse::<i64>().map_err(|e| format!("bad int '{s}': {e}"))?,
+        ));
+    }
+    if let Some(c) = j.get("c") {
+        let n = c.as_f64().ok_or("categorical param must be a number")?;
+        return Ok(ParamValue::Cat(n as usize));
+    }
+    Err(format!("unrecognized param value {j}"))
+}
+
+/// Encode a configuration as a tagged value array (space-independent —
+/// unlike [`crate::scheduler::asktell::config_json`], which is the wire
+/// format and needs the space to decode).
+pub fn config_state_json(c: &Config) -> Json {
+    Json::Arr(c.values.iter().map(param_value_json).collect())
+}
+
+/// Decode [`config_state_json`] output.
+pub fn config_state_from(j: &Json) -> Result<Config, String> {
+    let arr = j.as_arr().ok_or("config state must be an array")?;
+    let mut values = Vec::with_capacity(arr.len());
+    for v in arr {
+        values.push(param_value_from(v)?);
+    }
+    Ok(Config::new(values))
+}
+
+/// Encode a float series (learning curve, ε history) exactly.
+pub fn curve_json(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| f64_json(x)).collect())
+}
+
+/// Decode [`curve_json`] output.
+pub fn curve_from(j: &Json) -> Result<Vec<f64>, String> {
+    let arr = j.as_arr().ok_or("curve must be an array")?;
+    arr.iter().map(f64_from).collect()
+}
+
+/// Encode a [`Job`].
+pub fn job_json(job: &Job) -> Json {
+    let mut o = Json::obj();
+    o.set("trial", job.trial)
+        .set("config", config_state_json(&job.config))
+        .set("rung", job.rung)
+        .set("from_epoch", job.from_epoch)
+        .set("milestone", job.milestone);
+    o
+}
+
+/// Decode [`job_json`] output.
+pub fn job_from(j: &Json) -> Result<Job, String> {
+    Ok(Job {
+        trial: usize_field(j, "trial")?,
+        config: config_state_from(field(j, "config")?)?,
+        rung: usize_field(j, "rung")?,
+        from_epoch: u32_field(j, "from_epoch")?,
+        milestone: u32_field(j, "milestone")?,
+    })
+}
+
+/// Encode a [`TrialAction`]: `{"stop":t}` or `{"pause":t}`.
+pub fn action_json(a: &TrialAction) -> Json {
+    let mut o = Json::obj();
+    match a {
+        TrialAction::Stop(t) => o.set("stop", *t),
+        TrialAction::Pause(t) => o.set("pause", *t),
+    };
+    o
+}
+
+/// Decode [`action_json`] output.
+pub fn action_from(j: &Json) -> Result<TrialAction, String> {
+    let t = |v: &Json| -> Result<TrialId, String> {
+        v.as_f64()
+            .map(|x| x as TrialId)
+            .ok_or_else(|| "action trial must be a number".to_string())
+    };
+    if let Some(v) = j.get("stop") {
+        return Ok(TrialAction::Stop(t(v)?));
+    }
+    if let Some(v) = j.get("pause") {
+        return Ok(TrialAction::Pause(t(v)?));
+    }
+    Err(format!("unrecognized trial action {j}"))
+}
+
+/// Encode a set of trial ids in sorted order (deterministic bytes).
+pub fn trial_set_json(set: &HashSet<TrialId>) -> Json {
+    let mut ids: Vec<TrialId> = set.iter().copied().collect();
+    ids.sort_unstable();
+    Json::Arr(ids.into_iter().map(Json::from).collect())
+}
+
+/// Decode a trial-id list (from [`trial_set_json`] or a plain list).
+pub fn trial_ids_from(j: &Json) -> Result<Vec<TrialId>, String> {
+    let arr = j.as_arr().ok_or("trial ids must be an array")?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as TrialId)
+                .ok_or_else(|| "trial id must be a number".to_string())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// ShCore: the shared successive-halving state machine
+// ---------------------------------------------------------------------------
+
+fn rung_json(rung: &Rung) -> Json {
+    let mut o = Json::obj();
+    o.set(
+        "entries",
+        Json::Arr(
+            rung.entries
+                .iter()
+                .map(|&(t, m)| Json::Arr(vec![Json::from(t), f64_json(m)]))
+                .collect(),
+        ),
+    )
+    .set("promoted", trial_set_json(&rung.promoted));
+    o
+}
+
+fn rung_from(j: &Json) -> Result<Rung, String> {
+    let mut rung = Rung::default();
+    for e in field(j, "entries")?.as_arr().ok_or("entries must be an array")? {
+        let pair = e.as_arr().ok_or("rung entry must be a pair")?;
+        if pair.len() != 2 {
+            return Err("rung entry must be a [trial, metric] pair".into());
+        }
+        let t = pair[0].as_f64().ok_or("rung entry trial must be a number")? as TrialId;
+        rung.entries.push((t, f64_from(&pair[1])?));
+    }
+    for t in trial_ids_from(field(j, "promoted")?)? {
+        rung.promoted.insert(t);
+    }
+    Ok(rung)
+}
+
+fn trial_info_json(t: &TrialInfo) -> Json {
+    let mut o = Json::obj();
+    o.set("config", config_state_json(&t.config))
+        .set("dispatched", t.dispatched_epochs)
+        .set("curve", curve_json(&t.curve));
+    match t.top_rung {
+        Some(k) => o.set("top_rung", k),
+        None => o.set("top_rung", Json::Null),
+    };
+    o
+}
+
+fn trial_info_from(j: &Json) -> Result<TrialInfo, String> {
+    let mut info = TrialInfo::new(config_state_from(field(j, "config")?)?);
+    info.dispatched_epochs = u32_field(j, "dispatched")?;
+    info.curve = curve_from(field(j, "curve")?)?;
+    info.top_rung = match field(j, "top_rung")? {
+        Json::Null => None,
+        v => Some(v.as_f64().ok_or("top_rung must be a number or null")? as usize),
+    };
+    Ok(info)
+}
+
+/// Encode the full [`ShCore`] state (rung grid, trials, resource mark).
+pub fn sh_core_json(core: &ShCore) -> Json {
+    let mut levels = Json::obj();
+    levels
+        .set("r_min", core.levels.r_min)
+        .set("eta", core.levels.eta)
+        .set(
+            "levels",
+            Json::Arr(core.levels.levels.iter().map(|&l| Json::from(l)).collect()),
+        );
+    let mut o = Json::obj();
+    o.set("levels", levels)
+        .set("rungs", Json::Arr(core.rungs.iter().map(rung_json).collect()))
+        .set(
+            "trials",
+            Json::Arr(core.trials.iter().map(trial_info_json).collect()),
+        )
+        .set("max_resources_used", core.max_resources_used);
+    o
+}
+
+/// Restore [`sh_core_json`] output into a freshly-built core. The rung
+/// grid recorded in the snapshot must match the core's (same benchmark +
+/// builder parameters) — a mismatch means the snapshot belongs to a
+/// different session recipe and is refused.
+pub fn load_sh_core(core: &mut ShCore, j: &Json) -> Result<(), String> {
+    let lv = field(j, "levels")?;
+    let recorded = RungLevels {
+        r_min: u32_field(lv, "r_min")?,
+        eta: u32_field(lv, "eta")?,
+        levels: field(lv, "levels")?
+            .as_arr()
+            .ok_or("levels must be an array")?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as u32).ok_or("level must be a number"))
+            .collect::<Result<Vec<u32>, &str>>()
+            .map_err(|e| e.to_string())?,
+    };
+    if recorded != core.levels {
+        return Err(format!(
+            "snapshot rung grid {:?} does not match session grid {:?}",
+            recorded.levels, core.levels.levels
+        ));
+    }
+    let rungs = field(j, "rungs")?.as_arr().ok_or("rungs must be an array")?;
+    if rungs.len() != core.rungs.len() {
+        return Err(format!(
+            "snapshot has {} rungs, session grid has {}",
+            rungs.len(),
+            core.rungs.len()
+        ));
+    }
+    core.rungs = rungs.iter().map(rung_from).collect::<Result<_, _>>()?;
+    core.trials = field(j, "trials")?
+        .as_arr()
+        .ok_or("trials must be an array")?
+        .iter()
+        .map(trial_info_from)
+        .collect::<Result<_, _>>()?;
+    core.max_resources_used = u32_field(j, "max_resources_used")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::types::{JobOutcome, SchedCtx};
+    use crate::searcher::random::RandomSearcher;
+
+    #[test]
+    fn f64_roundtrip_exact() {
+        for x in [
+            0.0,
+            -0.0,
+            1.5,
+            -3.25e-17,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            1.0 / 3.0,
+        ] {
+            let j = f64_json(x);
+            let s = j.to_string_compact();
+            let back = f64_from(&crate::util::json::parse(&s).unwrap()).unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x}");
+        }
+        assert!(f64_from(&Json::Str("zero".into())).is_err());
+        assert!(f64_from(&Json::Bool(true)).is_err());
+    }
+
+    #[test]
+    fn u64_and_rng_roundtrip() {
+        for x in [0u64, 1, u64::MAX, 1 << 60] {
+            assert_eq!(u64_from(&u64_json(x)).unwrap(), x);
+        }
+        assert!(u64_from(&Json::Num(3.0)).is_err());
+        let mut rng = Rng::new(7);
+        for _ in 0..13 {
+            rng.next_u64();
+        }
+        let j = rng_json(&rng);
+        let s = j.to_string_compact();
+        let mut back = rng_from(&crate::util::json::parse(&s).unwrap()).unwrap();
+        let mut orig = rng.clone();
+        for _ in 0..64 {
+            assert_eq!(orig.next_u64(), back.next_u64());
+        }
+        assert!(rng_from(&Json::Arr(vec![u64_json(1)])).is_err());
+    }
+
+    #[test]
+    fn config_and_job_roundtrip() {
+        let config = Config::new(vec![
+            ParamValue::Float(3.5e-4),
+            ParamValue::Int(-12),
+            ParamValue::Cat(7),
+            ParamValue::Float(f64::NAN),
+        ]);
+        let j = config_state_json(&config);
+        let s = j.to_string_compact();
+        let back = config_state_from(&crate::util::json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.values.len(), 4);
+        for (a, b) in config.values.iter().zip(&back.values) {
+            match (a, b) {
+                (ParamValue::Float(x), ParamValue::Float(y)) => {
+                    assert_eq!(x.to_bits(), y.to_bits())
+                }
+                _ => assert_eq!(a, b),
+            }
+        }
+        let job = Job {
+            trial: 4,
+            config,
+            rung: 2,
+            from_epoch: 3,
+            milestone: 9,
+        };
+        let back = job_from(&job_json(&job)).unwrap();
+        assert_eq!(back.trial, job.trial);
+        assert_eq!(back.rung, job.rung);
+        assert_eq!(back.from_epoch, job.from_epoch);
+        assert_eq!(back.milestone, job.milestone);
+    }
+
+    #[test]
+    fn action_roundtrip() {
+        for a in [TrialAction::Stop(3), TrialAction::Pause(11)] {
+            assert_eq!(action_from(&action_json(&a)).unwrap(), a);
+        }
+        assert!(action_from(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn sh_core_roundtrip_preserves_decisions() {
+        // Build a core with promotions recorded, snapshot it, restore into
+        // a fresh core, and require identical subsequent job decisions.
+        let space = crate::config::space::SearchSpace::nas(1000);
+        let mut searcher = RandomSearcher::new(3);
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, 100);
+        let mut core = ShCore::new(RungLevels::new(1, 3, 27));
+        for i in 0..7 {
+            let job = core.next_job_capped(&mut ctx, 3).unwrap();
+            core.record(&JobOutcome {
+                trial: job.trial,
+                rung: job.rung,
+                milestone: job.milestone,
+                metric: 40.0 + i as f64,
+                curve_segment: (job.from_epoch + 1..=job.milestone)
+                    .map(|_| 40.0 + i as f64)
+                    .collect(),
+            });
+        }
+        let snap = sh_core_json(&core);
+        let reparsed = crate::util::json::parse(&snap.to_string_compact()).unwrap();
+        let mut restored = ShCore::new(RungLevels::new(1, 3, 27));
+        load_sh_core(&mut restored, &reparsed).unwrap();
+        assert_eq!(restored.trials.len(), core.trials.len());
+        assert_eq!(restored.max_resources_used, core.max_resources_used);
+        // identical decision surface: rankings, promotion candidates, best
+        for k in 0..core.rungs.len() {
+            assert_eq!(restored.ranking(k), core.ranking(k), "rung {k}");
+            assert_eq!(
+                restored.rungs[k].promotable(3),
+                core.rungs[k].promotable(3),
+                "rung {k}"
+            );
+        }
+        let (a, b) = (core.best().unwrap(), restored.best().unwrap());
+        assert_eq!(a.trial, b.trial);
+        assert_eq!(a.metric.to_bits(), b.metric.to_bits());
+        for (x, y) in core.trials.iter().zip(&restored.trials) {
+            assert_eq!(x.dispatched_epochs, y.dispatched_epochs);
+            assert_eq!(x.curve.len(), y.curve.len());
+        }
+        // grid mismatch is refused
+        let mut wrong = ShCore::new(RungLevels::new(1, 3, 9));
+        assert!(load_sh_core(&mut wrong, &reparsed).is_err());
+    }
+}

@@ -19,10 +19,15 @@
 use super::core::ShCore;
 use super::pasha::cap_ranking_consistent;
 use super::rung::RungLevels;
+use super::state::{
+    action_from, action_json, curve_from, curve_json, field, load_sh_core, sh_core_json,
+    trial_ids_from, usize_field,
+};
 use super::types::{
     BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialAction, TrialInfo,
 };
 use crate::ranking::{RankingFunction, RankingSpec};
+use crate::util::json::Json;
 use crate::TrialId;
 use std::collections::VecDeque;
 
@@ -196,6 +201,68 @@ impl Scheduler for StoppingSh {
 
     fn epsilon_history(&self) -> &[f64] {
         &self.eps_history
+    }
+
+    fn save_state(&self) -> Option<Json> {
+        // `ranking`/`name` come from the builder; the queues must ride
+        // along in order — `ready` is the dispatch order and `paused` the
+        // resume-scan order, both of which the byte-identity depends on.
+        let mut o = Json::obj();
+        o.set("kind", "stopping")
+            .set("core", sh_core_json(&self.core))
+            .set("cap", self.cap)
+            .set(
+                "ready",
+                Json::Arr(
+                    self.ready
+                        .iter()
+                        .map(|&(t, k)| Json::Arr(vec![Json::from(t), Json::from(k)]))
+                        .collect(),
+                ),
+            )
+            .set(
+                "paused",
+                Json::Arr(self.paused.iter().map(|&t| Json::from(t)).collect()),
+            )
+            .set(
+                "actions",
+                Json::Arr(self.actions.iter().map(action_json).collect()),
+            )
+            .set("eps_history", curve_json(&self.eps_history))
+            .set("growths", self.growths);
+        Some(o)
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        if state.get("kind").and_then(|k| k.as_str()) != Some("stopping") {
+            return Err("state is not a stopping-type snapshot".into());
+        }
+        load_sh_core(&mut self.core, field(state, "core")?)?;
+        let cap = usize_field(state, "cap")?;
+        if cap >= self.core.levels.num_rungs() {
+            return Err(format!("snapshot cap {cap} outside the rung grid"));
+        }
+        self.cap = cap;
+        self.ready.clear();
+        for pair in field(state, "ready")?.as_arr().ok_or("ready must be an array")? {
+            let p = pair.as_arr().ok_or("ready entry must be a pair")?;
+            if p.len() != 2 {
+                return Err("ready entry must be a [trial, rung] pair".into());
+            }
+            let t = p[0].as_f64().ok_or("ready trial must be a number")? as TrialId;
+            let k = p[1].as_f64().ok_or("ready rung must be a number")? as usize;
+            self.ready.push_back((t, k));
+        }
+        self.paused = trial_ids_from(field(state, "paused")?)?;
+        self.actions = field(state, "actions")?
+            .as_arr()
+            .ok_or("actions must be an array")?
+            .iter()
+            .map(action_from)
+            .collect::<Result<_, _>>()?;
+        self.eps_history = curve_from(field(state, "eps_history")?)?;
+        self.growths = usize_field(state, "growths")?;
+        Ok(())
     }
 
     fn name(&self) -> String {

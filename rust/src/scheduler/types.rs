@@ -4,6 +4,7 @@
 
 use crate::config::space::{Config, SearchSpace};
 use crate::searcher::Searcher;
+use crate::util::json::Json;
 use crate::TrialId;
 
 /// A unit of work handed to a worker: continue training `trial` from
@@ -203,6 +204,24 @@ pub trait Scheduler: Send {
     /// scheduler uses the noise-adaptive soft ranking (Figure 5).
     fn epsilon_history(&self) -> &[f64] {
         &[]
+    }
+
+    /// Serialize the full decision state for a snapshot
+    /// ([`crate::scheduler::state`]), or `None` if this scheduler does
+    /// not support snapshots (the service then falls back to full journal
+    /// replay). Restoring the returned value into a freshly-built
+    /// instance via [`Scheduler::load_state`] must yield byte-identical
+    /// subsequent decisions.
+    fn save_state(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore [`Scheduler::save_state`] output into this freshly-built
+    /// instance. Errors when the state belongs to a different scheduler
+    /// kind or rung grid.
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        let _ = state;
+        Err(format!("scheduler '{}' does not support snapshots", self.name()))
     }
 
     fn name(&self) -> String;

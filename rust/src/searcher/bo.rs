@@ -12,6 +12,11 @@
 use super::gp::{expected_improvement, Gp};
 use super::Searcher;
 use crate::config::space::{Config, SearchSpace};
+use crate::scheduler::state::{
+    config_state_from, config_state_json, curve_from, curve_json, f64_from, f64_json, field,
+    rng_from, rng_json, u32_field, usize_field,
+};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
@@ -134,6 +139,84 @@ impl Searcher for BoSearcher {
         self.pending.push((config.clone(), epoch, metric));
     }
 
+    fn save_state(&self) -> Option<Json> {
+        // Captures everything the GP proposal depends on: the exact RNG
+        // stream, every folded observation (bit-exact encodings and
+        // metrics), and reports still waiting to be folded. `cfg` comes
+        // from construction and is not snapshotted.
+        let obs = self
+            .obs
+            .iter()
+            .map(|(&epoch, points)| {
+                let mut level = Json::obj();
+                level.set("epoch", epoch).set(
+                    "points",
+                    Json::Arr(
+                        points
+                            .iter()
+                            .map(|(x, y)| {
+                                let mut p = Json::obj();
+                                p.set("x", curve_json(x)).set("y", f64_json(*y));
+                                p
+                            })
+                            .collect(),
+                    ),
+                );
+                level
+            })
+            .collect();
+        let pending = self
+            .pending
+            .iter()
+            .map(|(config, epoch, metric)| {
+                let mut p = Json::obj();
+                p.set("config", config_state_json(config))
+                    .set("epoch", *epoch)
+                    .set("metric", f64_json(*metric));
+                p
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("kind", "bo")
+            .set("rng", rng_json(&self.rng))
+            .set("obs", Json::Arr(obs))
+            .set("pending", Json::Arr(pending))
+            .set("suggestions", self.suggestions);
+        Some(o)
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        if state.get("kind").and_then(|k| k.as_str()) != Some("bo") {
+            return Err("state is not a BO-searcher snapshot".into());
+        }
+        self.rng = rng_from(field(state, "rng")?)?;
+        self.obs.clear();
+        for level in field(state, "obs")?.as_arr().ok_or("obs must be an array")? {
+            let epoch = u32_field(level, "epoch")?;
+            let mut points = Vec::new();
+            for p in field(level, "points")?
+                .as_arr()
+                .ok_or("points must be an array")?
+            {
+                points.push((curve_from(field(p, "x")?)?, f64_from(field(p, "y")?)?));
+            }
+            self.obs.insert(epoch, points);
+        }
+        self.pending.clear();
+        for p in field(state, "pending")?
+            .as_arr()
+            .ok_or("pending must be an array")?
+        {
+            self.pending.push((
+                config_state_from(field(p, "config")?)?,
+                u32_field(p, "epoch")?,
+                f64_from(field(p, "metric")?)?,
+            ));
+        }
+        self.suggestions = usize_field(state, "suggestions")?;
+        Ok(())
+    }
+
     fn name(&self) -> String {
         "bo-gp-ei".into()
     }
@@ -225,6 +308,32 @@ mod tests {
             bo_mean > rnd_mean,
             "BO should beat random: {bo_mean:.1} vs {rnd_mean:.1}"
         );
+    }
+
+    #[test]
+    fn state_roundtrip_continues_suggestion_stream() {
+        // Fold some observations, leave some pending, then snapshot: the
+        // restored searcher must propose identical configurations.
+        let space = SearchSpace::pd1();
+        let mut a = BoSearcher::new(5);
+        let mut rng = Rng::new(23);
+        for _ in 0..12 {
+            let c = space.sample(&mut rng);
+            a.on_report(&c, 9, quadratic_metric(&c));
+        }
+        a.suggest(&space); // folds the first batch
+        for _ in 0..3 {
+            let c = space.sample(&mut rng);
+            a.on_report(&c, 27, quadratic_metric(&c)); // stays pending
+        }
+        let state = a.save_state().unwrap().to_string_compact();
+        let mut b = BoSearcher::new(0);
+        b.load_state(&crate::util::json::parse(&state).unwrap()).unwrap();
+        for _ in 0..6 {
+            assert_eq!(a.suggest(&space), b.suggest(&space));
+        }
+        assert_eq!(a.num_observations(), b.num_observations());
+        assert!(b.load_state(&Json::obj()).is_err(), "kind is checked");
     }
 
     #[test]

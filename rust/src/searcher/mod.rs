@@ -15,6 +15,7 @@ pub mod gp;
 pub mod random;
 
 use crate::config::space::{Config, SearchSpace};
+use crate::util::json::Json;
 
 /// A proposal strategy for new configurations.
 pub trait Searcher: Send {
@@ -24,6 +25,21 @@ pub trait Searcher: Send {
     /// Observe a (possibly intermediate) result: `config` achieved
     /// validation accuracy `metric` (%) after `epoch` epochs.
     fn on_report(&mut self, config: &Config, epoch: u32, metric: f64);
+
+    /// Serialize the full proposal state (RNG stream, observations) for a
+    /// snapshot ([`crate::scheduler::state`]), or `None` when snapshots
+    /// are unsupported. Restoring via [`Searcher::load_state`] must
+    /// continue the exact suggestion stream.
+    fn save_state(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore [`Searcher::save_state`] output into this freshly-built
+    /// instance.
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        let _ = state;
+        Err(format!("searcher '{}' does not support snapshots", self.name()))
+    }
 
     fn name(&self) -> String;
 }

@@ -2,6 +2,8 @@
 
 use super::Searcher;
 use crate::config::space::{Config, SearchSpace};
+use crate::scheduler::state::{field, rng_from, rng_json};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Samples configurations uniformly (w.r.t. each domain's measure: linear
@@ -24,6 +26,20 @@ impl Searcher for RandomSearcher {
     }
 
     fn on_report(&mut self, _config: &Config, _epoch: u32, _metric: f64) {}
+
+    fn save_state(&self) -> Option<Json> {
+        let mut o = Json::obj();
+        o.set("kind", "random").set("rng", rng_json(&self.rng));
+        Some(o)
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        if state.get("kind").and_then(|k| k.as_str()) != Some("random") {
+            return Err("state is not a random-searcher snapshot".into());
+        }
+        self.rng = rng_from(field(state, "rng")?)?;
+        Ok(())
+    }
 
     fn name(&self) -> String {
         "random-search".into()
@@ -53,6 +69,22 @@ mod tests {
             .filter(|_| a.suggest(&space) == b.suggest(&space))
             .count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_stream() {
+        let space = SearchSpace::pd1();
+        let mut a = RandomSearcher::new(11);
+        for _ in 0..7 {
+            a.suggest(&space);
+        }
+        let state = a.save_state().unwrap().to_string_compact();
+        let mut b = RandomSearcher::new(0);
+        b.load_state(&crate::util::json::parse(&state).unwrap()).unwrap();
+        for _ in 0..20 {
+            assert_eq!(a.suggest(&space), b.suggest(&space));
+        }
+        assert!(b.load_state(&Json::obj()).is_err(), "kind is checked");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Line-protocol client + the `pasha worker` driver loop.
+//! Line-protocol client + the `pasha worker` driver loops.
 //!
 //! [`Client`] speaks the newline-delimited JSON protocol of
 //! [`super::server`] over one `TcpStream`. [`run_worker`] is the worker
@@ -6,6 +6,19 @@
 //! by epoch against a local [`Benchmark`] evaluator (the simulator — or,
 //! with the `pjrt` feature, real training), tell each epoch's metric,
 //! and abandon the job the moment the service says so.
+//!
+//! [`run_worker_batched`] is the same contract over batched frames: all
+//! of a job's epoch tells plus the next ask travel as one `batch`
+//! request — one syscall round-trip instead of `milestone + 1`. Batching
+//! changes framing, not semantics: the ops hit the same per-session
+//! dispatch in the same order, so a given op sequence produces the same
+//! journal bytes and incumbent whether issued singly or batched (the
+//! equivalence `tests/service_e2e.rs` pins down). The one behavioral
+//! wrinkle is optimism: if the service cancels a job mid-frame, the
+//! frame's remaining tells arrive anyway and are refused as no-ops,
+//! where an unbatched worker would have stopped telling — harmless for
+//! state, and the right trade when training an epoch is cheap relative
+//! to a round-trip (always true for the simulator).
 
 use crate::benchmarks::Benchmark;
 use crate::config::space::SearchSpace;
@@ -16,7 +29,7 @@ use crate::util::json::{parse, Json};
 use crate::TrialId;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One connection to a `pasha serve` instance.
 pub struct Client {
@@ -141,6 +154,44 @@ impl Client {
         let req = self.cmd("shutdown");
         self.call(&req).map(|_| ())
     }
+
+    /// Send `ops` as one `batch` frame and return the per-op results
+    /// (each with its own `ok` flag; a failed op does not abort the
+    /// frame). Build ops with [`ask_op`] / [`tell_op`] / [`fail_op`].
+    pub fn batch(&mut self, ops: Vec<Json>) -> Result<Vec<Json>, ServiceError> {
+        let mut req = self.cmd("batch");
+        req.set("ops", Json::Arr(ops));
+        let resp = self.call(&req)?;
+        resp.get("results")
+            .and_then(|r| r.as_arr())
+            .map(|a| a.to_vec())
+            .ok_or_else(|| ServiceError::Io("batch response missing results".into()))
+    }
+}
+
+/// An `ask` op for a [`Client::batch`] frame.
+pub fn ask_op(session: &str, worker: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("cmd", "ask").set("session", session).set("worker", worker);
+    o
+}
+
+/// A `tell` op for a [`Client::batch`] frame.
+pub fn tell_op(session: &str, trial: TrialId, epoch: u32, metric: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("cmd", "tell")
+        .set("session", session)
+        .set("trial", trial)
+        .set("epoch", epoch)
+        .set("metric", metric);
+    o
+}
+
+/// A `fail` op for a [`Client::batch`] frame.
+pub fn fail_op(session: &str, trial: TrialId) -> Json {
+    let mut o = Json::obj();
+    o.set("cmd", "fail").set("session", session).set("trial", trial);
+    o
 }
 
 /// What one worker did over its lifetime.
@@ -152,6 +203,15 @@ pub struct WorkerReport {
     pub epochs_told: u64,
     /// Jobs abandoned on a Stop/Pause/fail directive.
     pub jobs_abandoned: usize,
+    /// Network round-trips used ([`run_worker_batched`] only; the
+    /// unbatched driver leaves it 0). The batching win is
+    /// `epochs_told + asks ≫ frames`.
+    pub frames: usize,
+    /// Per-op wire latency in microseconds: one entry per round-trip for
+    /// the unbatched driver, or the frame round-trip amortized over its
+    /// ops for the batched driver. What `bench-json --suite service`
+    /// reports as the batched-vs-unbatched per-op comparison.
+    pub op_us: Vec<f64>,
 }
 
 /// Drive one worker against a session until the service reports `Done`:
@@ -169,13 +229,19 @@ pub fn run_worker(
     let mut report = WorkerReport::default();
     let space = bench.space().clone();
     loop {
-        match client.ask(session, worker_id, &space)? {
+        let t = Instant::now();
+        let assignment = client.ask(session, worker_id, &space)?;
+        report.op_us.push(t.elapsed().as_secs_f64() * 1e6);
+        match assignment {
             TrialAssignment::Run(job) => {
                 let mut abandoned = false;
                 for e in job.from_epoch + 1..=job.milestone {
                     let metric = bench.accuracy_at(&job.config, e, bench_seed);
                     report.epochs_told += 1;
-                    if client.tell(session, job.trial, e, metric)? == TellAck::Abandon {
+                    let t = Instant::now();
+                    let ack = client.tell(session, job.trial, e, metric)?;
+                    report.op_us.push(t.elapsed().as_secs_f64() * 1e6);
+                    if ack == TellAck::Abandon {
                         abandoned = true;
                         break;
                     }
@@ -190,6 +256,88 @@ pub fn run_worker(
             // tell ack; nothing left to do for them.
             TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
             TrialAssignment::Wait => std::thread::sleep(poll),
+            TrialAssignment::Done => return Ok(report),
+        }
+    }
+}
+
+/// [`run_worker`] over batched frames: train the whole assigned job
+/// locally, then ship every epoch tell *plus the next ask* as a single
+/// `batch` round-trip. See the module docs for the exact equivalence to
+/// the unbatched driver.
+pub fn run_worker_batched(
+    client: &mut Client,
+    session: &str,
+    worker_id: &str,
+    bench: &dyn Benchmark,
+    bench_seed: u64,
+    poll: Duration,
+) -> Result<WorkerReport, ServiceError> {
+    let mut report = WorkerReport::default();
+    let space = bench.space().clone();
+    // each frame ends with an ask; the first frame is that ask alone
+    let mut ops = vec![ask_op(session, worker_id)];
+    loop {
+        let expected = ops.len();
+        report.frames += 1;
+        let t = Instant::now();
+        let results = client.batch(ops)?;
+        let per_op = t.elapsed().as_secs_f64() * 1e6 / expected as f64;
+        report.op_us.resize(report.op_us.len() + expected, per_op);
+        if results.len() != expected {
+            return Err(ServiceError::Io(format!(
+                "batch returned {} results for {expected} ops",
+                results.len()
+            )));
+        }
+        // tell results precede the trailing ask result
+        let (tells, ask) = results.split_at(expected - 1);
+        let mut abandoned = false;
+        for r in tells {
+            if abandoned {
+                // refusals after an abandon are expected no-ops
+                continue;
+            }
+            if r.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+                let msg = r.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error");
+                return Err(ServiceError::Session(msg.to_string()));
+            }
+            report.epochs_told += 1;
+            let ack = r.get("ack").and_then(|v| v.as_str()).unwrap_or("");
+            match TellAck::parse(ack) {
+                Some(TellAck::Abandon) => {
+                    abandoned = true;
+                    report.jobs_abandoned += 1;
+                }
+                Some(TellAck::JobComplete) => report.jobs_completed += 1,
+                Some(TellAck::Continue) => {}
+                None => {
+                    return Err(ServiceError::Io(format!("bad tell ack '{ack}'")));
+                }
+            }
+        }
+        let ask = &ask[0];
+        if ask.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            let msg = ask.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error");
+            return Err(ServiceError::Session(msg.to_string()));
+        }
+        match assignment_from_json(&space, ask).map_err(ServiceError::Io)? {
+            TrialAssignment::Run(job) => {
+                ops = (job.from_epoch + 1..=job.milestone)
+                    .map(|e| {
+                        let metric = bench.accuracy_at(&job.config, e, bench_seed);
+                        tell_op(session, job.trial, e, metric)
+                    })
+                    .collect();
+                ops.push(ask_op(session, worker_id));
+            }
+            TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {
+                ops = vec![ask_op(session, worker_id)];
+            }
+            TrialAssignment::Wait => {
+                std::thread::sleep(poll);
+                ops = vec![ask_op(session, worker_id)];
+            }
             TrialAssignment::Done => return Ok(report),
         }
     }

@@ -146,6 +146,104 @@ pub fn read_journal(path: &Path) -> io::Result<JournalRead> {
     Ok(done(events, valid_len))
 }
 
+// ---------------------------------------------------------------------------
+// Snapshot sidecar: `<journal>.snap` holds whole-state snapshot records,
+// one JSON line each, appended after the covered events are durable. The
+// journal tail can then be compacted (rewritten atomically) down to the
+// events a retained snapshot does not cover — recovery becomes
+// O(snapshot + tail) instead of O(history).
+// ---------------------------------------------------------------------------
+
+/// The snapshot sidecar path for a journal file (`s0000.jsonl` →
+/// `s0000.jsonl.snap`). The `.snap` extension keeps it out of the
+/// registry's `*.jsonl` recovery scan.
+pub fn snapshot_path(journal: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.snap", journal.display()))
+}
+
+/// Append one JSON line to `path`, creating the file (and parent
+/// directory) if needed. A previous crash can have left a torn final
+/// line; the file is first truncated back to its whole-line prefix so
+/// the new record can never merge with torn bytes (the sidecar analogue
+/// of [`Journal::open_append_at`]) — without this, one crash mid-append
+/// would silently corrupt every later record on the same line.
+pub fn append_line(path: &Path, event: &Json) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut file = OpenOptions::new()
+        .create(true)
+        .read(true)
+        .write(true)
+        .open(path)?;
+    let mut buf = Vec::new();
+    file.read_to_end(&mut buf)?;
+    let valid = match buf.iter().rposition(|&b| b == b'\n') {
+        Some(i) => (i + 1) as u64,
+        None => 0,
+    };
+    if valid != buf.len() as u64 {
+        file.set_len(valid)?;
+    }
+    file.seek(SeekFrom::Start(valid))?;
+    let mut line = event.to_string_compact();
+    line.push('\n');
+    file.write_all(line.as_bytes())
+}
+
+/// Atomically replace `path` with the given lines: write a sibling
+/// `.tmp` file, then rename over the target. A crash before the rename
+/// leaves the original untouched; after, the replacement is complete.
+/// Used by journal compaction and snapshot-file rotation.
+pub fn rewrite_atomic(path: &Path, lines: &[Json]) -> io::Result<()> {
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    {
+        let mut file = File::create(&tmp)?;
+        let mut out = String::new();
+        for l in lines {
+            out.push_str(&l.to_string_compact());
+            out.push('\n');
+        }
+        file.write_all(out.as_bytes())?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Read every parseable line of a snapshot sidecar, skipping anything
+/// torn or corrupt (snapshots are an optimization — the journal remains
+/// the ground truth, so a bad snapshot line is dropped, never fatal).
+/// A missing file reads as empty.
+pub fn read_snapshots(path: &Path) -> Vec<Json> {
+    let mut buf = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            if f.read_to_end(&mut buf).is_err() {
+                return Vec::new();
+            }
+        }
+        Err(_) => return Vec::new(),
+    }
+    let mut lines = Vec::new();
+    let mut start = 0usize;
+    while start < buf.len() {
+        // only newline-terminated lines count: a torn final append is
+        // incomplete by definition
+        let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') else {
+            break;
+        };
+        let end = start + rel;
+        if let Ok(s) = std::str::from_utf8(&buf[start..end]) {
+            if let Ok(v) = parse(s) {
+                lines.push(v);
+            }
+        }
+        start = end + 1;
+    }
+    lines
+}
+
 // Event constructors: the journal schema in one place.
 
 pub fn ev_create(session: &str, spec: &Json) -> Json {
@@ -153,6 +251,31 @@ pub fn ev_create(session: &str, spec: &Json) -> Json {
     o.set("ev", "create")
         .set("session", session)
         .set("spec", spec.clone());
+    o
+}
+
+/// A `create` header for a compacted journal tail: `base` is the number
+/// of events already covered by a snapshot and dropped from this file
+/// (the first event line after the header is absolute event `base + 1`).
+/// With `base == 0` the encoding is identical to [`ev_create`], so
+/// uncompacted journals keep their exact historical bytes.
+pub fn ev_create_at(session: &str, spec: &Json, base: usize) -> Json {
+    let mut o = ev_create(session, spec);
+    if base > 0 {
+        o.set("base", base);
+    }
+    o
+}
+
+/// A snapshot record: the serialized ask/tell core state after exactly
+/// `events` journaled events (absolute count since session creation).
+pub fn ev_snapshot(session: &str, events: usize, spec: &Json, state: Json) -> Json {
+    let mut o = Json::obj();
+    o.set("ev", "snapshot")
+        .set("session", session)
+        .set("events", events)
+        .set("spec", spec.clone())
+        .set("state", state);
     o
 }
 
@@ -267,6 +390,58 @@ mod tests {
         assert!(r.events.is_empty());
         assert_eq!(r.valid_len, 0);
         assert_eq!(r.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn snapshot_sidecar_read_is_lenient() {
+        let jpath = tmp("sidecar.jsonl");
+        let path = snapshot_path(&jpath);
+        assert!(path.to_string_lossy().ends_with("sidecar.jsonl.snap"));
+        let _ = std::fs::remove_file(&path);
+        assert!(read_snapshots(&path).is_empty(), "missing file reads empty");
+        append_line(&path, &ev_snapshot("s0", 10, &Json::obj(), Json::obj())).unwrap();
+        append_line(&path, &ev_snapshot("s0", 20, &Json::obj(), Json::obj())).unwrap();
+        assert_eq!(read_snapshots(&path).len(), 2);
+        // a torn final append is dropped; earlier whole lines survive
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"ev\":\"snapshot\",\"events\":30");
+        std::fs::write(&path, &bytes).unwrap();
+        let snaps = read_snapshots(&path);
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[1].get("events").unwrap().as_f64(), Some(20.0));
+        // appending over a torn tail truncates it first: the new record
+        // must never merge with the torn bytes
+        append_line(&path, &ev_snapshot("s0", 40, &Json::obj(), Json::obj())).unwrap();
+        let snaps = read_snapshots(&path);
+        assert_eq!(snaps.len(), 3, "torn bytes repaired, new record whole");
+        assert_eq!(snaps[2].get("events").unwrap().as_f64(), Some(40.0));
+        // corrupt middle lines are skipped, not fatal
+        std::fs::write(&path, "not json\n{\"ev\":\"snapshot\",\"events\":5}\n").unwrap();
+        let snaps = read_snapshots(&path);
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].get("events").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn rewrite_atomic_replaces_content() {
+        let path = tmp("rewrite.jsonl");
+        std::fs::write(&path, "old line\n").unwrap();
+        rewrite_atomic(&path, &[ev_fail(1), ev_fail(2)]).unwrap();
+        let r = read_journal(&path).unwrap();
+        assert_eq!(r.events.len(), 2);
+        assert_eq!(r.events[0], ev_fail(1));
+        assert!(!PathBuf::from(format!("{}.tmp", path.display())).exists());
+    }
+
+    #[test]
+    fn create_at_base_zero_matches_legacy_bytes() {
+        let spec = Json::obj();
+        assert_eq!(
+            ev_create_at("s1", &spec, 0).to_string_compact(),
+            ev_create("s1", &spec).to_string_compact()
+        );
+        let with_base = ev_create_at("s1", &spec, 42);
+        assert_eq!(with_base.get("base").unwrap().as_f64(), Some(42.0));
     }
 
     #[test]

@@ -8,9 +8,13 @@
 //! * [`session`] — one durable tuning session: an ask/tell core
 //!   ([`crate::scheduler::asktell`]) whose every mutating operation is
 //!   appended to a write-ahead journal before acknowledgement, plus
-//!   deterministic crash recovery by journal replay.
+//!   deterministic crash recovery. Recovery restores the newest usable
+//!   snapshot ([`crate::scheduler::state`]) and replays only the journal
+//!   tail past it — O(tail), not O(history); with no usable snapshot it
+//!   falls back to full replay.
 //! * [`journal`] — the JSONL write-ahead log: append, truncation-tolerant
-//!   read, whole-event-prefix recovery.
+//!   read, whole-event-prefix recovery, plus the snapshot sidecar
+//!   (`<journal>.snap`) and atomic tail compaction.
 //! * [`registry`] — the thread-safe multi-session store, recovering every
 //!   session journal in a directory at startup.
 //! * [`server`] — a dependency-free `std::net` TCP server speaking
@@ -26,6 +30,13 @@
 //! * **Durability** — kill the server at any instant; recovery replays
 //!   the journal to a state whose subsequent `ask` stream is
 //!   byte-identical to the uninterrupted session's.
+//! * **Snapshot equivalence** — recovery from (snapshot + tail) and from
+//!   the full journal produce byte-identical continuations; a torn
+//!   snapshot falls back to the previous one (or full replay), never to
+//!   a wrong state.
+//! * **Batching** — `batch` frames execute their ops in order against
+//!   the same journal path as singly-issued requests: same journal
+//!   bytes, same incumbent, one syscall round-trip for N ops.
 
 pub mod client;
 pub mod journal;
@@ -33,7 +44,7 @@ pub mod registry;
 pub mod server;
 pub mod session;
 
-pub use client::{run_worker, Client, WorkerReport};
+pub use client::{run_worker, run_worker_batched, Client, WorkerReport};
 pub use registry::{Registry, ServiceError};
 pub use server::{handle_request, Server};
-pub use session::{RecoveryReport, Session, SessionSpec};
+pub use session::{RecoveryReport, Session, SessionOptions, SessionSpec};

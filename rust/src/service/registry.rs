@@ -10,7 +10,7 @@
 //! in-flight jobs; for workers that died with it, `expire` re-queues
 //! their jobs).
 
-use crate::service::session::{RecoveryReport, Session, SessionSpec};
+use crate::service::session::{RecoveryReport, Session, SessionOptions, SessionSpec};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::fmt;
@@ -52,6 +52,7 @@ impl std::error::Error for ServiceError {}
 /// The shared session store.
 pub struct Registry {
     dir: Option<PathBuf>,
+    options: SessionOptions,
     sessions: Mutex<HashMap<String, Arc<Mutex<Session>>>>,
     next_id: Mutex<usize>,
     /// Sessions recovered from the journal directory at startup.
@@ -64,6 +65,7 @@ impl Registry {
     pub fn in_memory() -> Registry {
         Registry {
             dir: None,
+            options: SessionOptions::default(),
             sessions: Mutex::new(HashMap::new()),
             next_id: Mutex::new(0),
             recovered: Vec::new(),
@@ -71,8 +73,18 @@ impl Registry {
     }
 
     /// A durable registry journaling into `dir`, recovering every
-    /// `*.jsonl` session journal already present.
+    /// `*.jsonl` session journal already present (snapshot-aware, but
+    /// writing no new snapshots — see [`Registry::with_journal_dir_opts`]).
     pub fn with_journal_dir(dir: PathBuf) -> Result<Registry, ServiceError> {
+        Self::with_journal_dir_opts(dir, SessionOptions::default())
+    }
+
+    /// [`Registry::with_journal_dir`] with a snapshot/compaction policy
+    /// applied to every session (recovered and newly created).
+    pub fn with_journal_dir_opts(
+        dir: PathBuf,
+        options: SessionOptions,
+    ) -> Result<Registry, ServiceError> {
         std::fs::create_dir_all(&dir).map_err(|e| ServiceError::Io(e.to_string()))?;
         let mut sessions = HashMap::new();
         let mut recovered = Vec::new();
@@ -84,12 +96,13 @@ impl Registry {
             .collect();
         paths.sort();
         for path in paths {
-            let (session, report) = Session::recover(&path).map_err(|e| match e {
-                ServiceError::Journal(m) => {
-                    ServiceError::Journal(format!("{}: {m}", path.display()))
-                }
-                other => other,
-            })?;
+            let (session, report) =
+                Session::recover_with(&path, options.clone()).map_err(|e| match e {
+                    ServiceError::Journal(m) => {
+                        ServiceError::Journal(format!("{}: {m}", path.display()))
+                    }
+                    other => other,
+                })?;
             let numeric = session.id.strip_prefix('s').and_then(|s| s.parse::<usize>().ok());
             if let Some(n) = numeric {
                 max_numeric_id = max_numeric_id.max(n + 1);
@@ -99,6 +112,7 @@ impl Registry {
         }
         Ok(Registry {
             dir: Some(dir),
+            options,
             sessions: Mutex::new(sessions),
             next_id: Mutex::new(max_numeric_id),
             recovered,
@@ -119,7 +133,8 @@ impl Registry {
             id
         };
         let journal_path = self.dir.as_ref().map(|d| d.join(format!("{id}.jsonl")));
-        let session = Session::create(&id, spec, journal_path.as_deref())?;
+        let session =
+            Session::create_with(&id, spec, journal_path.as_deref(), self.options.clone())?;
         self.sessions
             .lock()
             .expect("registry lock")
@@ -260,6 +275,31 @@ mod tests {
         // the mid-flight session still has its job in flight
         let sb = reg2.get("s0001").unwrap();
         assert_eq!(sb.lock().unwrap().core_ref().in_flight_count(), 1);
+    }
+
+    #[test]
+    fn snapshot_registry_recovers_from_tail() {
+        let dir = tmp_dir("snap");
+        let spec = small_spec();
+        let bench = bench_from_name(&spec.bench).unwrap();
+        let options = SessionOptions::snapshot_every(8);
+        let total;
+        {
+            let reg = Registry::with_journal_dir_opts(dir.clone(), options.clone()).unwrap();
+            let id = reg.create(spec.clone()).unwrap();
+            let s = reg.get(&id).unwrap();
+            drive(&s, bench.as_ref(), spec.bench_seed);
+            total = s.lock().unwrap().events_total();
+        }
+        let reg2 = Registry::with_journal_dir_opts(dir, options).unwrap();
+        let (_, report) = &reg2.recovered()[0];
+        assert!(report.snapshot_events > 0, "snapshot used on restart");
+        assert!(report.events_replayed < total);
+        let s = reg2.get("s0000").unwrap();
+        assert_eq!(
+            s.lock().unwrap().ask("w0").unwrap(),
+            crate::scheduler::asktell::TrialAssignment::Done
+        );
     }
 
     #[test]

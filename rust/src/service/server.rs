@@ -21,8 +21,16 @@
 //! {"cmd":"status","session":"s0000"}                 -> {"ok":true,"status":{...}}
 //! {"cmd":"sessions"}                                 -> {"ok":true,"sessions":[...]}
 //! {"cmd":"close","session":"s0000"}                  -> {"ok":true}
+//! {"cmd":"batch","ops":[{...},{...}]}                -> {"ok":true,"results":[...]}
 //! {"cmd":"shutdown"}                                 -> {"ok":true,"bye":true}
 //! ```
+//!
+//! `batch` executes its ops strictly in order and returns one result per
+//! op (each with its own `ok` flag — a failed op never aborts the frame).
+//! The ops go through the same per-session dispatch as singly-issued
+//! requests, so journal bytes and scheduler state are identical to the
+//! unbatched path; the frame just collapses N network round-trips into
+//! one. `batch` and `shutdown` cannot be nested inside a frame.
 
 use crate::scheduler::asktell::assignment_json;
 use crate::service::registry::{Registry, ServiceError};
@@ -116,6 +124,27 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
         }
         "close" => {
             registry.close(str_field(req, "session")?)?;
+        }
+        "batch" => {
+            let ops = field(req, "ops")?
+                .as_arr()
+                .ok_or_else(|| ServiceError::Request("field 'ops' must be an array".into()))?;
+            let results: Vec<Json> = ops
+                .iter()
+                .map(|op| match op.get("cmd").and_then(|c| c.as_str()) {
+                    // frame-control commands cannot nest: `batch` would
+                    // recurse unboundedly and `shutdown` needs the accept
+                    // loop, which only sees top-level commands
+                    Some("batch") | Some("shutdown") => {
+                        let mut r = Json::obj();
+                        r.set("ok", false)
+                            .set("error", "command not allowed inside a batch");
+                        r
+                    }
+                    _ => handle_request(registry, op),
+                })
+                .collect();
+            resp.set("results", Json::Arr(results));
         }
         "shutdown" => {
             resp.set("bye", true);
@@ -333,6 +362,62 @@ mod tests {
         assert_eq!(closed.get("ok").unwrap().as_bool(), Some(true));
         let r = handle_request(&reg, &req(&close));
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn batch_executes_ops_in_order_with_per_op_results() {
+        let (reg, id) = reg_with_session();
+        // one frame: ask, three tells toward the milestone, bad op, ask
+        let ask = format!("{{\"cmd\":\"ask\",\"session\":\"{id}\",\"worker\":\"w0\"}}");
+        let first = handle_request(&reg, &req(&ask));
+        let trial = first.get("trial").unwrap().as_f64().unwrap() as usize;
+        let milestone = first.get("milestone").unwrap().as_f64().unwrap() as u32;
+        let mut ops = Vec::new();
+        for e in 1..=milestone {
+            ops.push(req(&format!(
+                "{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":{trial},\
+                 \"epoch\":{e},\"metric\":{}}}",
+                60.0 + e as f64
+            )));
+        }
+        let bad = "{\"cmd\":\"tell\",\"session\":\"nope\",\"trial\":0,\"epoch\":1,\"metric\":1}";
+        ops.push(req(bad));
+        ops.push(req(&ask));
+        let mut frame = Json::obj();
+        frame.set("cmd", "batch").set("ops", Json::Arr(ops));
+        let resp = handle_request(&reg, &frame);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let results = resp.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), milestone as usize + 2);
+        // tells progressed in order: continue… then job-complete
+        for e in 0..milestone as usize {
+            let want = if e + 1 == milestone as usize {
+                "job-complete"
+            } else {
+                "continue"
+            };
+            assert_eq!(results[e].get("ack").unwrap().as_str(), Some(want), "op {e}");
+        }
+        // the bad op failed without aborting the frame
+        assert_eq!(
+            results[milestone as usize].get("ok").unwrap().as_bool(),
+            Some(false)
+        );
+        // the trailing ask executed after the tells
+        assert_eq!(
+            results[milestone as usize + 1].get("ok").unwrap().as_bool(),
+            Some(true)
+        );
+        // nested frame-control ops are refused per-op
+        let mut nested = Json::obj();
+        nested.set("cmd", "batch").set(
+            "ops",
+            Json::Arr(vec![req("{\"cmd\":\"shutdown\"}"), req("{\"cmd\":\"ping\"}")]),
+        );
+        let resp = handle_request(&reg, &nested);
+        let results = resp.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(results[1].get("ok").unwrap().as_bool(), Some(true));
     }
 
     #[test]

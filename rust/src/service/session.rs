@@ -15,7 +15,9 @@
 
 use crate::executor::engine::{ConfigBudget, EpochBudget, StoppingRule};
 use crate::scheduler::asktell::{assignment_json, config_json, AskTell, TellAck, TrialAssignment};
-use crate::service::journal::{self, ev_ask, ev_create, ev_expire, ev_fail, ev_tell, Journal};
+use crate::service::journal::{
+    self, ev_ask, ev_create, ev_create_at, ev_expire, ev_fail, ev_snapshot, ev_tell, Journal,
+};
 use crate::service::registry::ServiceError;
 use crate::tuner::{bench_from_name, scheduler_from_name, searcher_for, SearcherKind};
 use crate::util::json::Json;
@@ -114,13 +116,53 @@ impl SessionSpec {
     }
 }
 
+/// Snapshot/compaction policy for a durable session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionOptions {
+    /// Write a state snapshot after this many journaled events
+    /// (`None` = never snapshot; recovery is full journal replay).
+    pub snapshot_every: Option<usize>,
+    /// After each snapshot, compact the journal tail down to the
+    /// *previous* snapshot's boundary and trim the sidecar to the last
+    /// two snapshots. The one-snapshot lag means a torn latest snapshot
+    /// still recovers from the previous one plus a longer tail.
+    pub compact_on_snapshot: bool,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            snapshot_every: None,
+            compact_on_snapshot: true,
+        }
+    }
+}
+
+impl SessionOptions {
+    /// Snapshot every `events` events with rotation/compaction on — what
+    /// `pasha serve --snapshot-interval` uses.
+    pub fn snapshot_every(events: usize) -> SessionOptions {
+        SessionOptions {
+            snapshot_every: Some(events),
+            compact_on_snapshot: true,
+        }
+    }
+}
+
 /// What [`Session::recover`] found in the journal.
 #[derive(Clone, Debug, Default)]
 pub struct RecoveryReport {
-    /// Whole events replayed (excluding the `create` header).
+    /// Whole events replayed against the core (excluding the `create`
+    /// header and any events already covered by the snapshot used).
     pub events_replayed: usize,
     /// Bytes of a partial trailing line dropped as a crash artifact.
     pub truncated_bytes: usize,
+    /// Absolute event count covered by the snapshot recovery restored
+    /// from (0 = no usable snapshot; full replay).
+    pub snapshot_events: usize,
+    /// Pre-snapshot events still present in the (uncompacted) tail that
+    /// were skipped rather than re-applied.
+    pub events_skipped: usize,
 }
 
 /// A registered tuning session: ask/tell core + journal + identity.
@@ -132,6 +174,22 @@ pub struct Session {
     /// Events appended since creation/recovery (excluding the `create`
     /// header) — the trace↔journal alignment key used by tests.
     events_written: usize,
+    /// Absolute event count since session creation (across restarts and
+    /// compactions) — the coordinate system snapshots are keyed by.
+    events_total: usize,
+    /// Absolute event count at which the current journal tail starts
+    /// (the compacted-away prefix; 0 for an uncompacted journal).
+    base: usize,
+    /// Absolute event counts of trusted durable snapshots, ascending:
+    /// ones this session wrote, plus (after recovery) the load-verified
+    /// snapshot it restored from. Compaction only ever advances the
+    /// journal base to one of these.
+    snapshots: Vec<usize>,
+    options: SessionOptions,
+    /// A snapshot/compaction failure is recorded (and snapshotting
+    /// disabled) rather than failing the acknowledged operation — the
+    /// journal stays authoritative.
+    snapshot_error: Option<String>,
     /// Set when an acknowledged mutation could not be journaled: the
     /// journal no longer matches the in-memory state, so further
     /// mutations are refused rather than risking a bad recovery.
@@ -146,10 +204,22 @@ impl Session {
         spec: SessionSpec,
         journal_path: Option<&Path>,
     ) -> Result<Session, ServiceError> {
+        Self::create_with(id, spec, journal_path, SessionOptions::default())
+    }
+
+    /// [`Session::create`] with an explicit snapshot/compaction policy.
+    pub fn create_with(
+        id: &str,
+        spec: SessionSpec,
+        journal_path: Option<&Path>,
+        options: SessionOptions,
+    ) -> Result<Session, ServiceError> {
         let core = spec.build_core().map_err(ServiceError::Spec)?;
         let journal = match journal_path {
             None => None,
             Some(path) => {
+                // a fresh session must not inherit a stale sidecar
+                let _ = std::fs::remove_file(journal::snapshot_path(path));
                 let mut j = Journal::create(path).map_err(|e| ServiceError::Io(e.to_string()))?;
                 j.append(&ev_create(id, &spec.to_json()))
                     .map_err(|e| ServiceError::Io(e.to_string()))?;
@@ -162,35 +232,53 @@ impl Session {
             core,
             journal,
             events_written: 0,
+            events_total: 0,
+            base: 0,
+            snapshots: Vec::new(),
+            options,
+            snapshot_error: None,
             poisoned: false,
         })
     }
 
-    /// Rebuild a session from its journal: build a fresh core from the
-    /// recorded spec, then replay every event. Replayed `ask`s must
-    /// regenerate byte-identical responses; a mismatch aborts recovery.
-    /// The journal is truncated to its whole-event prefix and re-opened
-    /// for appending — only call this when this process owns the journal
-    /// (for a pure check of a file another server may own, use
-    /// [`Session::recover_readonly`]).
+    /// Rebuild a session from its journal: restore the newest usable
+    /// snapshot (if the sidecar has one), then replay only the events
+    /// past it. Replayed `ask`s must regenerate byte-identical responses;
+    /// a mismatch aborts recovery. The journal is truncated to its
+    /// whole-event prefix and re-opened for appending — only call this
+    /// when this process owns the journal (for a pure check of a file
+    /// another server may own, use [`Session::recover_readonly`]).
     pub fn recover(path: &Path) -> Result<(Session, RecoveryReport), ServiceError> {
-        Self::recover_impl(path, true)
+        Self::recover_impl(path, true, SessionOptions::default())
     }
 
-    /// [`Session::recover`] without touching the file: replays and
-    /// verifies, but never truncates or re-opens the journal, so it is
-    /// safe against a journal a live server is appending to. The
-    /// returned session has no journal attached (mutations after this
-    /// are not logged).
+    /// [`Session::recover`] with an explicit snapshot/compaction policy
+    /// for the session's life *after* recovery (recovery itself always
+    /// uses any snapshots already on disk).
+    pub fn recover_with(
+        path: &Path,
+        options: SessionOptions,
+    ) -> Result<(Session, RecoveryReport), ServiceError> {
+        Self::recover_impl(path, true, options)
+    }
+
+    /// [`Session::recover`] without touching the files: restores and
+    /// verifies, but never truncates, compacts or re-opens the journal,
+    /// so it is safe against a journal a live server is appending to.
+    /// The returned session has no journal attached (mutations after
+    /// this are not logged).
     pub fn recover_readonly(path: &Path) -> Result<(Session, RecoveryReport), ServiceError> {
-        Self::recover_impl(path, false)
+        Self::recover_impl(path, false, SessionOptions::default())
     }
 
-    fn recover_impl(path: &Path, attach: bool) -> Result<(Session, RecoveryReport), ServiceError> {
+    fn recover_impl(
+        path: &Path,
+        attach: bool,
+        options: SessionOptions,
+    ) -> Result<(Session, RecoveryReport), ServiceError> {
         let read = journal::read_journal(path).map_err(|e| ServiceError::Io(e.to_string()))?;
-        let mut events = read.events.iter();
         let empty = || ServiceError::Journal("empty journal".into());
-        let header = events.next().ok_or_else(empty)?;
+        let header = read.events.first().ok_or_else(empty)?;
         if header.get("ev").and_then(|v| v.as_str()) != Some("create") {
             return Err(ServiceError::Journal(
                 "journal does not start with a create event".into(),
@@ -205,18 +293,68 @@ impl Session {
             .get("spec")
             .ok_or_else(|| ServiceError::Journal("create event missing spec".into()))?;
         let spec = SessionSpec::from_json(spec_json).map_err(ServiceError::Spec)?;
+        let base = header.get("base").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+        let tail = &read.events[1..];
+
+        // Newest usable snapshot first: it must belong to this session
+        // (id + spec), cover at least the compacted-away prefix, and its
+        // state must load cleanly. Anything else falls back — ultimately
+        // to full replay when the tail still starts at event 0.
+        let candidates = Self::snapshot_candidates(path, &id, &spec, base);
+        let mut core = None;
+        let mut snapshot_events = 0usize;
+        for (events, state) in candidates.iter().rev() {
+            let mut fresh = spec.build_core().map_err(ServiceError::Spec)?;
+            if fresh.load_state(state).is_ok() {
+                core = Some(fresh);
+                snapshot_events = *events;
+                break;
+            }
+        }
+        let core = match core {
+            Some(c) => c,
+            None if base == 0 => spec.build_core().map_err(ServiceError::Spec)?,
+            None => {
+                return Err(ServiceError::Journal(format!(
+                    "journal {} is compacted to event {base} but no usable \
+                     snapshot covers it",
+                    path.display()
+                )));
+            }
+        };
+
+        // Only the load-verified snapshot may anchor future compaction:
+        // recording unverified sidecar records here would let a later
+        // rotation compact the journal to a boundary covered only by a
+        // snapshot that cannot actually be restored.
+        let verified = if snapshot_events > 0 {
+            vec![snapshot_events]
+        } else {
+            Vec::new()
+        };
         let mut session = Session {
             id,
-            spec: spec.clone(),
-            core: spec.build_core().map_err(ServiceError::Spec)?,
+            spec,
+            core,
             journal: None,
             events_written: 0,
+            events_total: (base + tail.len()).max(snapshot_events),
+            base,
+            snapshots: verified,
+            options,
+            snapshot_error: None,
             poisoned: false,
         };
         let mut replayed = 0usize;
-        for (i, ev) in events.enumerate() {
+        let mut skipped = 0usize;
+        for (i, ev) in tail.iter().enumerate() {
+            // absolute index of this event in the session's history
+            if base + 1 + i <= snapshot_events {
+                skipped += 1;
+                continue;
+            }
             session.replay_event(ev).map_err(|e| {
-                ServiceError::Journal(format!("event {} of {}: {e}", i + 1, path.display()))
+                ServiceError::Journal(format!("event {} of {}: {e}", base + 1 + i, path.display()))
             })?;
             replayed += 1;
         }
@@ -234,8 +372,45 @@ impl Session {
             RecoveryReport {
                 events_replayed: replayed,
                 truncated_bytes: read.truncated_bytes,
+                snapshot_events,
+                events_skipped: skipped,
             },
         ))
+    }
+
+    /// Snapshot records usable for recovering this journal, ascending by
+    /// coverage: right session, identical spec, coverage at or past the
+    /// compacted-away prefix.
+    fn snapshot_candidates(
+        path: &Path,
+        id: &str,
+        spec: &SessionSpec,
+        base: usize,
+    ) -> Vec<(usize, Json)> {
+        journal::read_snapshots(&journal::snapshot_path(path))
+            .into_iter()
+            .filter_map(|line| {
+                if line.get("ev").and_then(|v| v.as_str()) != Some("snapshot") {
+                    return None;
+                }
+                if line.get("session").and_then(|v| v.as_str()) != Some(id) {
+                    return None;
+                }
+                let line_spec = SessionSpec::from_json(line.get("spec")?).ok()?;
+                if line_spec != *spec {
+                    return None;
+                }
+                let events = line.get("events").and_then(|v| v.as_f64())? as usize;
+                if events < base {
+                    return None;
+                }
+                Some((events, line.get("state")?.clone()))
+            })
+            .collect::<Vec<(usize, Json)>>()
+            .into_iter()
+            .collect::<std::collections::BTreeMap<usize, Json>>()
+            .into_iter()
+            .collect()
     }
 
     fn replay_event(&mut self, ev: &Json) -> Result<(), String> {
@@ -298,6 +473,7 @@ impl Session {
             }
         }
         self.events_written += 1;
+        self.events_total += 1;
         Ok(())
     }
 
@@ -305,6 +481,143 @@ impl Session {
     /// count the appends they would have made).
     pub fn events_journaled(&self) -> usize {
         self.events_written
+    }
+
+    /// Absolute event count since session creation, across restarts and
+    /// compactions.
+    pub fn events_total(&self) -> usize {
+        self.events_total
+    }
+
+    /// Absolute event counts of the trusted snapshots (see the field
+    /// docs: written by this session, or load-verified at recovery).
+    pub fn snapshots(&self) -> &[usize] {
+        &self.snapshots
+    }
+
+    /// Write a snapshot if the policy says one is due. Runs *after* the
+    /// triggering operation has fully applied, so the captured state is
+    /// exactly "all events ≤ `events_total`". Snapshot failures never
+    /// fail the acknowledged operation: the journal is authoritative —
+    /// the error is recorded and snapshotting disabled.
+    fn maybe_snapshot(&mut self) {
+        let Some(every) = self.options.snapshot_every else {
+            return;
+        };
+        if self.journal.is_none() {
+            return;
+        }
+        let last = self.snapshots.last().copied().unwrap_or(0);
+        if self.events_total < last + every {
+            return;
+        }
+        if let Err(e) = self.write_snapshot() {
+            self.snapshot_error = Some(e.to_string());
+            self.options.snapshot_every = None;
+        }
+    }
+
+    /// Append a snapshot record covering every event so far, then (per
+    /// policy) rotate: compact the journal tail to the previous
+    /// snapshot's boundary and trim the sidecar to the last two records.
+    fn write_snapshot(&mut self) -> Result<(), ServiceError> {
+        let Some(journal_path) = self.journal.as_ref().map(|j| j.path().to_path_buf()) else {
+            return Ok(());
+        };
+        let Some(state) = self.core.save_state() else {
+            // scheduler/searcher without a codec: recovery stays full
+            // replay for this session, silently
+            self.options.snapshot_every = None;
+            return Ok(());
+        };
+        let snap_path = journal::snapshot_path(&journal_path);
+        let record = ev_snapshot(&self.id, self.events_total, &self.spec.to_json(), state);
+        journal::append_line(&snap_path, &record).map_err(|e| ServiceError::Io(e.to_string()))?;
+        self.snapshots.push(self.events_total);
+        if self.options.compact_on_snapshot {
+            // lag by one snapshot: if this record is torn on disk, the
+            // previous one plus the longer tail still recovers
+            if self.snapshots.len() >= 2 {
+                let new_base = self.snapshots[self.snapshots.len() - 2];
+                self.compact_tail_to(&journal_path, new_base)?;
+            }
+            self.trim_sidecar(&snap_path, 2)?;
+        }
+        Ok(())
+    }
+
+    /// Rewrite the journal tail atomically so it starts at absolute event
+    /// `new_base` (which a durable snapshot must cover), then re-open the
+    /// append handle. A crash before the rename leaves the old tail; a
+    /// crash after leaves the new one — both recover.
+    fn compact_tail_to(&mut self, path: &Path, new_base: usize) -> Result<(), ServiceError> {
+        if new_base <= self.base {
+            return Ok(());
+        }
+        let io_err = |e: std::io::Error| ServiceError::Io(e.to_string());
+        let read = journal::read_journal(path).map_err(io_err)?;
+        let tail = &read.events[1..];
+        let drop_count = new_base - self.base;
+        if drop_count > tail.len() {
+            return Err(ServiceError::Journal(format!(
+                "cannot compact to event {new_base}: tail only reaches {}",
+                self.base + tail.len()
+            )));
+        }
+        let mut lines = Vec::with_capacity(1 + tail.len() - drop_count);
+        lines.push(ev_create_at(&self.id, &self.spec.to_json(), new_base));
+        lines.extend_from_slice(&tail[drop_count..]);
+        journal::rewrite_atomic(path, &lines).map_err(io_err)?;
+        let len = std::fs::metadata(path).map_err(io_err)?.len();
+        self.journal = Some(Journal::open_append_at(path, len).map_err(io_err)?);
+        self.base = new_base;
+        Ok(())
+    }
+
+    /// Keep only the newest `keep` snapshot records in the sidecar.
+    fn trim_sidecar(&mut self, snap_path: &Path, keep: usize) -> Result<(), ServiceError> {
+        if self.snapshots.len() <= keep {
+            return Ok(());
+        }
+        let cutoff = self.snapshots[self.snapshots.len() - keep];
+        let retained: Vec<Json> = journal::read_snapshots(snap_path)
+            .into_iter()
+            .filter(|line| {
+                line.get("events")
+                    .and_then(|v| v.as_f64())
+                    .map(|e| e as usize >= cutoff)
+                    .unwrap_or(false)
+            })
+            .collect();
+        journal::rewrite_atomic(snap_path, &retained)
+            .map_err(|e| ServiceError::Io(e.to_string()))?;
+        self.snapshots.retain(|&e| e >= cutoff);
+        Ok(())
+    }
+
+    /// Fully compact this session right now: write a snapshot covering
+    /// everything, truncate the journal tail to just the header, and trim
+    /// the sidecar to the final two records. What `pasha compact` runs.
+    /// Errors if the scheduler/searcher has no snapshot codec.
+    pub fn compact_now(&mut self) -> Result<(), ServiceError> {
+        let Some(journal_path) = self.journal.as_ref().map(|j| j.path().to_path_buf()) else {
+            return Err(ServiceError::Journal(
+                "session has no journal attached".into(),
+            ));
+        };
+        let Some(state) = self.core.save_state() else {
+            return Err(ServiceError::Journal(format!(
+                "scheduler '{}' does not support snapshots",
+                self.core.scheduler_name()
+            )));
+        };
+        let snap_path = journal::snapshot_path(&journal_path);
+        let record = ev_snapshot(&self.id, self.events_total, &self.spec.to_json(), state);
+        journal::append_line(&snap_path, &record).map_err(|e| ServiceError::Io(e.to_string()))?;
+        self.snapshots.push(self.events_total);
+        self.compact_tail_to(&journal_path, self.events_total)?;
+        self.trim_sidecar(&snap_path, 2)?;
+        Ok(())
     }
 
     fn check_poisoned(&self) -> Result<(), ServiceError> {
@@ -328,6 +641,7 @@ impl Session {
         let assignment = self.core.ask(worker);
         if assignment.is_mutation() || self.core.mutation_count() != before {
             self.append(&ev_ask(worker, assignment_json(&assignment)))?;
+            self.maybe_snapshot();
         }
         Ok(assignment)
     }
@@ -342,21 +656,27 @@ impl Session {
     ) -> Result<TellAck, ServiceError> {
         self.check_poisoned()?;
         self.append(&ev_tell(trial, epoch, metric))?;
-        self.core.tell(trial, epoch, metric).map_err(ServiceError::Session)
+        let ack = self.core.tell(trial, epoch, metric).map_err(ServiceError::Session);
+        self.maybe_snapshot();
+        ack
     }
 
     /// A worker reported failure while running `trial`.
     pub fn fail(&mut self, trial: TrialId) -> Result<(), ServiceError> {
         self.check_poisoned()?;
         self.append(&ev_fail(trial))?;
-        self.core.fail(trial).map_err(ServiceError::Session)
+        let r = self.core.fail(trial).map_err(ServiceError::Session);
+        self.maybe_snapshot();
+        r
     }
 
     /// Retire all in-flight jobs (operator action after worker loss).
     pub fn expire_workers(&mut self) -> Result<usize, ServiceError> {
         self.check_poisoned()?;
         self.append(&ev_expire())?;
-        Ok(self.core.expire_workers())
+        let n = self.core.expire_workers();
+        self.maybe_snapshot();
+        Ok(n)
     }
 
     /// Read-only status summary (what `pasha sessions` renders).
@@ -377,7 +697,16 @@ impl Session {
             .set("stopped_trials", stats.stopped_trials)
             .set("paused_trials", stats.paused_trials)
             .set("max_resources", self.core.max_resources_used())
-            .set("trials", self.core.trials().len());
+            .set("trials", self.core.trials().len())
+            .set("events_total", self.events_total)
+            .set("snapshots", self.snapshots.len())
+            .set(
+                "snapshot_events",
+                self.snapshots.last().copied().unwrap_or(0),
+            );
+        if let Some(e) = &self.snapshot_error {
+            o.set("snapshot_error", e.as_str());
+        }
         match self.core.best() {
             Some(b) => {
                 o.set("best_trial", b.trial)
@@ -548,6 +877,101 @@ mod tests {
         let st = s.status();
         assert!(st.get("best_metric").unwrap().as_f64().is_some());
         assert_eq!(st.get("jobs_completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn snapshot_rotation_keeps_recovery_o_tail() {
+        let path = tmp("snap-cycle.jsonl");
+        let spec = small_spec();
+        let bench = bench_from_name(&spec.bench).unwrap();
+        let options = SessionOptions::snapshot_every(8);
+        let mut s = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
+        drive(&mut s, bench.as_ref(), spec.bench_seed);
+        let total = s.events_total();
+        let best = s.core_ref().best().unwrap();
+        assert!(s.snapshots().len() >= 2, "rotation keeps the last two");
+        assert!(s.snapshots().len() <= 2, "older snapshots are trimmed");
+        drop(s);
+
+        let (mut r, report) = Session::recover(&path).unwrap();
+        assert!(report.snapshot_events > 0, "recovery used a snapshot");
+        assert!(
+            report.events_replayed < total,
+            "replayed {} of {total}",
+            report.events_replayed
+        );
+        assert_eq!(
+            report.snapshot_events + report.events_replayed,
+            total,
+            "snapshot coverage plus replayed tail is the whole history"
+        );
+        let rbest = r.core_ref().best().unwrap();
+        assert_eq!(rbest.trial, best.trial);
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+        assert_eq!(r.ask("w0").unwrap(), TrialAssignment::Done);
+    }
+
+    #[test]
+    fn torn_final_snapshot_falls_back_to_previous() {
+        let path = tmp("snap-torn.jsonl");
+        let spec = small_spec();
+        let bench = bench_from_name(&spec.bench).unwrap();
+        // compaction off: the full tail stays available for any fallback
+        let options = SessionOptions {
+            snapshot_every: Some(8),
+            compact_on_snapshot: false,
+        };
+        let mut s = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
+        drive(&mut s, bench.as_ref(), spec.bench_seed);
+        let total = s.events_total();
+        let best = s.core_ref().best().unwrap();
+        let snaps = s.snapshots().to_vec();
+        assert!(snaps.len() >= 2, "need two snapshots to demonstrate fallback");
+        drop(s);
+
+        // tear the final snapshot record mid-line
+        let snap_path = journal::snapshot_path(&path);
+        let bytes = std::fs::read(&snap_path).unwrap();
+        std::fs::write(&snap_path, &bytes[..bytes.len() - 9]).unwrap();
+        let (r, report) = Session::recover_readonly(&path).unwrap();
+        assert_eq!(
+            report.snapshot_events,
+            snaps[snaps.len() - 2],
+            "previous snapshot used"
+        );
+        assert_eq!(report.events_replayed, total - report.snapshot_events);
+        let rbest = r.core_ref().best().unwrap();
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+
+        // destroy the sidecar entirely: full replay still works
+        std::fs::write(&snap_path, b"garbage\n").unwrap();
+        let (_, report) = Session::recover_readonly(&path).unwrap();
+        assert_eq!(report.snapshot_events, 0);
+        assert_eq!(report.events_replayed, total);
+    }
+
+    #[test]
+    fn compact_now_truncates_tail_to_header() {
+        let path = tmp("compact-now.jsonl");
+        let spec = small_spec();
+        let bench = bench_from_name(&spec.bench).unwrap();
+        let mut s = Session::create("s0", spec.clone(), Some(&path)).unwrap();
+        drive(&mut s, bench.as_ref(), spec.bench_seed);
+        let total = s.events_total();
+        let best = s.core_ref().best().unwrap();
+        let before = std::fs::metadata(&path).unwrap().len();
+        s.compact_now().unwrap();
+        drop(s);
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert!(after < before, "tail shrank: {before} -> {after}");
+        let read = journal::read_journal(&path).unwrap();
+        assert_eq!(read.events.len(), 1, "header only");
+        let (r, report) = Session::recover_readonly(&path).unwrap();
+        assert_eq!(report.snapshot_events, total);
+        assert_eq!(report.events_replayed, 0, "nothing to replay past the snapshot");
+        assert_eq!(report.events_skipped, 0, "nothing pre-snapshot on disk");
+        let rbest = r.core_ref().best().unwrap();
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
     }
 
     #[test]

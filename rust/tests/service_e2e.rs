@@ -11,10 +11,24 @@
 //! * **TCP equivalence** — `serve` + `worker` over localhost must land
 //!   on the same incumbent as the in-process `Tuner::run` for the same
 //!   seeds.
+//! * **Snapshot equivalence** — cut the journal at any event index:
+//!   recovery from (snapshot + tail) and from the full journal must
+//!   produce byte-identical subsequent asks and the same final
+//!   incumbent, for every scheduler family and the BO searcher.
+//! * **Torn-snapshot fuzzing** — truncate the snapshot sidecar at every
+//!   byte boundary: recovery falls back to the prior snapshot (or full
+//!   replay), never panics, and the `RecoveryReport` accounting stays
+//!   exact.
+//! * **Batched-wire equivalence** — the same op sequence issued in
+//!   `batch` frames and singly must leave byte-identical journals and
+//!   the same incumbent.
 
 use pasha::benchmarks::Benchmark;
 use pasha::scheduler::asktell::{assignment_json, config_from_json, TellAck, TrialAssignment};
-use pasha::service::{run_worker, Client, Registry, Server, Session, SessionSpec};
+use pasha::service::journal::snapshot_path;
+use pasha::service::{
+    run_worker, run_worker_batched, Client, Registry, Server, Session, SessionOptions, SessionSpec,
+};
 use pasha::tuner::{bench_from_name, scheduler_from_name, SearcherKind, Tuner, TunerSpec};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -246,6 +260,369 @@ fn recovery_bo_searcher() {
     // Model-based searcher: the GP's state is rebuilt through replayed
     // on_report calls, so ask responses stay byte-identical.
     check_recovery("bo", spec_for("pasha", SearcherKind::Bo, 16), 2);
+}
+
+/// The snapshot-equivalence property for one session spec: at every cut
+/// of the journal, recovery from (snapshot + tail) and recovery from the
+/// full journal must reach the same state — byte-identical subsequent
+/// asks, identical tell acks, identical final incumbent — and the
+/// snapshot path must replay only post-snapshot events.
+fn check_snapshot_equivalence(label: &str, spec: SessionSpec, workers: usize, interval: usize) {
+    let dir = tmp_dir(&format!("snapeq-{label}"));
+    let path = dir.join("session.jsonl");
+    let bench = bench_from_name(&spec.bench).unwrap();
+
+    // Snapshots on, compaction off: the full journal stays available, so
+    // any cut index can be reconstructed alongside its sidecar prefix.
+    let options = SessionOptions {
+        snapshot_every: Some(interval),
+        compact_on_snapshot: false,
+    };
+    let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
+    let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, workers);
+    let best_full = live.core_ref().best().expect("session found an incumbent");
+    let snapshot_points = live.snapshots().to_vec();
+    drop(live);
+    assert!(
+        snapshot_points.len() >= 2,
+        "{label}: workload too small for several snapshots: {snapshot_points:?}"
+    );
+
+    let lines: Vec<String> = std::fs::read_to_string(&path)
+        .unwrap()
+        .lines()
+        .map(|l| l.to_string())
+        .collect();
+    let snap_lines: Vec<String> = std::fs::read_to_string(snapshot_path(&path))
+        .unwrap()
+        .lines()
+        .map(|l| l.to_string())
+        .collect();
+    // coverage of each sidecar line, aligned with snap_lines
+    let covered: Vec<usize> = snap_lines
+        .iter()
+        .map(|l| {
+            pasha::util::json::parse(l).unwrap().get("events").unwrap().as_f64().unwrap() as usize
+        })
+        .collect();
+    let total_events = lines.len() - 1;
+
+    let mut cuts: Vec<usize> = (0..6).map(|i| 1 + i * total_events / 6).collect();
+    cuts.push(total_events);
+    let mut used_snapshot = false;
+    for (i, &cut) in cuts.iter().enumerate() {
+        let mut content = lines[..=cut].join("\n");
+        content.push('\n');
+        // the snapshot+tail variant: journal cut plus the sidecar records
+        // durable by that point
+        let snap_cut_path = dir.join(format!("snapcut-{i}.jsonl"));
+        std::fs::write(&snap_cut_path, &content).unwrap();
+        let sidecar: Vec<&String> = snap_lines
+            .iter()
+            .zip(&covered)
+            .filter(|&(_, &events)| events <= cut)
+            .map(|(l, _)| l)
+            .collect();
+        let sidecar_content = sidecar.iter().map(|l| format!("{l}\n")).collect::<String>();
+        std::fs::write(snapshot_path(&snap_cut_path), sidecar_content).unwrap();
+        // the full-replay variant: same journal bytes, no sidecar
+        let full_cut_path = dir.join(format!("fullcut-{i}.jsonl"));
+        std::fs::write(&full_cut_path, &content).unwrap();
+
+        let (mut via_snap, snap_report) = Session::recover(&snap_cut_path).unwrap();
+        let (mut via_full, full_report) = Session::recover(&full_cut_path).unwrap();
+        assert_eq!(full_report.snapshot_events, 0, "{label}: no sidecar, no snapshot");
+        assert_eq!(full_report.events_replayed, cut, "{label}: full replay at cut {cut}");
+        let best_durable = covered.iter().filter(|&&e| e <= cut).max().copied();
+        match best_durable {
+            Some(expected) => {
+                used_snapshot = true;
+                assert_eq!(
+                    snap_report.snapshot_events, expected,
+                    "{label}: newest durable snapshot used at cut {cut}"
+                );
+                assert_eq!(
+                    snap_report.events_replayed,
+                    cut - expected,
+                    "{label}: O(tail) — only post-snapshot events replayed"
+                );
+            }
+            None => {
+                assert_eq!(snap_report.snapshot_events, 0, "{label}: nothing durable yet");
+                assert_eq!(snap_report.events_replayed, cut);
+            }
+        }
+
+        // identical continuation from both recoveries, against the
+        // uninterrupted run's reference trace
+        let tail: Vec<&Traced> = trace.iter().filter(|t| t.events_after > cut).collect();
+        let asks_snap = replay_tail(&mut via_snap, &tail, &format!("{label}/snap"));
+        let asks_full = replay_tail(&mut via_full, &tail, &format!("{label}/full"));
+        assert_eq!(asks_snap, asks_full, "{label}: same asks compared");
+        for (which, session) in [("snap", &via_snap), ("full", &via_full)] {
+            let best = session.core_ref().best().expect("recovered incumbent");
+            assert_eq!(best.trial, best_full.trial, "{label}/{which}: best trial");
+            assert_eq!(
+                best.metric.to_bits(),
+                best_full.metric.to_bits(),
+                "{label}/{which}: best metric"
+            );
+            assert_eq!(best.config, best_full.config, "{label}/{which}: best config");
+        }
+    }
+    assert!(used_snapshot, "{label}: no cut exercised snapshot recovery");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_equivalence_asha() {
+    check_snapshot_equivalence("asha", spec_for("asha", SearcherKind::Random, 32), 3, 20);
+}
+
+#[test]
+fn snapshot_equivalence_pasha() {
+    check_snapshot_equivalence("pasha", spec_for("pasha", SearcherKind::Random, 32), 3, 20);
+}
+
+#[test]
+fn snapshot_equivalence_asha_stop() {
+    check_snapshot_equivalence(
+        "asha-stop",
+        spec_for("asha-stop", SearcherKind::Random, 32),
+        3,
+        20,
+    );
+}
+
+#[test]
+fn snapshot_equivalence_pasha_stop() {
+    check_snapshot_equivalence(
+        "pasha-stop",
+        spec_for("pasha-stop", SearcherKind::Random, 48),
+        3,
+        20,
+    );
+}
+
+#[test]
+fn snapshot_equivalence_bo_searcher() {
+    // The GP searcher's state (RNG stream, folded + pending observations)
+    // must survive the snapshot for asks to stay byte-identical.
+    check_snapshot_equivalence("bo", spec_for("pasha", SearcherKind::Bo, 16), 2, 12);
+}
+
+#[test]
+fn torn_snapshot_fuzz_every_byte() {
+    // Truncate the snapshot sidecar at EVERY byte boundary. Whatever
+    // survives, recovery must pick the newest intact snapshot (or fall
+    // back to full replay), never panic, and account exactly.
+    let spec = spec_for("asha", SearcherKind::Random, 8);
+    let dir = tmp_dir("snapfuzz");
+    let path = dir.join("session.jsonl");
+    let bench = bench_from_name(&spec.bench).unwrap();
+    let options = SessionOptions {
+        snapshot_every: Some(12),
+        compact_on_snapshot: false,
+    };
+    let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
+    let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, 2);
+    let total = live.events_total();
+    let snapshot_points = live.snapshots().to_vec();
+    let best = live.core_ref().best().unwrap();
+    drop(live);
+    assert_eq!(total, trace.last().unwrap().events_after);
+    assert!(snapshot_points.len() >= 2, "need several snapshots: {snapshot_points:?}");
+
+    let snap_path = snapshot_path(&path);
+    let bytes = std::fs::read(&snap_path).unwrap();
+    for cut in 0..=bytes.len() {
+        std::fs::write(&snap_path, &bytes[..cut]).unwrap();
+        let (recovered, report) = Session::recover_readonly(&path)
+            .unwrap_or_else(|e| panic!("cut {cut}: recovery failed: {e}"));
+        assert!(
+            report.snapshot_events == 0 || snapshot_points.contains(&report.snapshot_events),
+            "cut {cut}: snapshot_events {} not a real snapshot point",
+            report.snapshot_events
+        );
+        assert_eq!(
+            report.events_replayed,
+            total - report.snapshot_events,
+            "cut {cut}: tail accounting"
+        );
+        let rbest = recovered.core_ref().best().unwrap();
+        assert_eq!(rbest.trial, best.trial, "cut {cut}");
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits(), "cut {cut}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batched_wire_equivalence() {
+    // The same logical op sequence issued singly and in batch frames
+    // must leave byte-identical journals (modulo the session id in the
+    // create header) and land on the same incumbent. ASHA + single
+    // worker keeps the op sequence identical between the two drivers
+    // (promotion-type schedulers never cancel, so the batched driver
+    // never overshoots an abandoned job).
+    let spec = SessionSpec {
+        bench: "lcbench-Fashion-MNIST".into(),
+        scheduler: "asha".into(),
+        searcher: SearcherKind::Random,
+        seed: 2,
+        bench_seed: 0,
+        config_budget: 16,
+        ..SessionSpec::default()
+    };
+    let dir = tmp_dir("batchwire");
+    let registry = Registry::with_journal_dir(dir.clone()).unwrap();
+    let server = Server::bind("127.0.0.1:0", Arc::new(registry)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let bench = bench_from_name(&spec.bench).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let single_id = client.create(&spec).unwrap();
+    let single = run_worker(
+        &mut client,
+        &single_id,
+        "w0",
+        bench.as_ref(),
+        spec.bench_seed,
+        Duration::from_millis(1),
+    )
+    .unwrap();
+    let batched_id = client.create(&spec).unwrap();
+    let batched = run_worker_batched(
+        &mut client,
+        &batched_id,
+        "w0",
+        bench.as_ref(),
+        spec.bench_seed,
+        Duration::from_millis(1),
+    )
+    .unwrap();
+    client.shutdown().unwrap();
+    server_thread.join().unwrap().unwrap();
+
+    assert_eq!(single.jobs_completed, batched.jobs_completed);
+    assert_eq!(single.epochs_told, batched.epochs_told);
+    assert!(batched.frames > 0);
+    assert!(
+        (batched.frames as u64) < batched.epochs_told,
+        "frames {} must undercut per-op round-trips {}",
+        batched.frames,
+        batched.epochs_told
+    );
+
+    let read = |id: &str| -> Vec<String> {
+        std::fs::read_to_string(dir.join(format!("{id}.jsonl")))
+            .unwrap()
+            .lines()
+            .map(|l| l.to_string())
+            .collect()
+    };
+    let single_lines = read(&single_id);
+    let batched_lines = read(&batched_id);
+    assert_eq!(
+        single_lines[1..],
+        batched_lines[1..],
+        "journal bytes identical past the create header"
+    );
+
+    let (a, _) = Session::recover(&dir.join(format!("{single_id}.jsonl"))).unwrap();
+    let (b, _) = Session::recover(&dir.join(format!("{batched_id}.jsonl"))).unwrap();
+    let (ba, bb) = (a.core_ref().best().unwrap(), b.core_ref().best().unwrap());
+    assert_eq!(ba.trial, bb.trial);
+    assert_eq!(ba.metric.to_bits(), bb.metric.to_bits());
+    assert_eq!(ba.config, bb.config);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recover_readonly_at_snapshot_boundary_replays_nothing() {
+    // Regression for the O(history) readonly path: a journal compacted
+    // so it ends exactly at a snapshot boundary must not re-scan (or
+    // re-apply) pre-snapshot events — the report proves O(tail) with an
+    // empty tail.
+    let spec = spec_for("asha", SearcherKind::Random, 12);
+    let dir = tmp_dir("snapboundary");
+    let path = dir.join("session.jsonl");
+    let bench = bench_from_name(&spec.bench).unwrap();
+    let options = SessionOptions::snapshot_every(10);
+    let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
+    let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, 2);
+    let total = live.events_total();
+    assert_eq!(total, trace.last().unwrap().events_after);
+    let best = live.core_ref().best().unwrap();
+    live.compact_now().unwrap();
+    drop(live);
+
+    let (recovered, report) = Session::recover_readonly(&path).unwrap();
+    assert_eq!(report.snapshot_events, total, "snapshot covers the whole history");
+    assert_eq!(report.events_replayed, 0, "no pre-snapshot events re-applied");
+    assert_eq!(report.events_skipped, 0, "no pre-snapshot events even on disk");
+    let rbest = recovered.core_ref().best().unwrap();
+    assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn large_session_recovery_replays_only_post_snapshot_tail() {
+    // The acceptance bar: a session with >= 10k journaled events must
+    // recover by replaying only the post-snapshot tail, bounded by the
+    // snapshot interval and the rotation lag — not the whole history.
+    let interval = 1000usize;
+    let spec = SessionSpec {
+        bench: "lcbench-Fashion-MNIST".into(),
+        scheduler: "asha".into(),
+        searcher: SearcherKind::Random,
+        seed: 9,
+        bench_seed: 0,
+        config_budget: 2600,
+        ..SessionSpec::default()
+    };
+    let dir = tmp_dir("large");
+    let path = dir.join("session.jsonl");
+    let bench = bench_from_name(&spec.bench).unwrap();
+    let options = SessionOptions::snapshot_every(interval);
+    let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
+    loop {
+        match live.ask("w0").unwrap() {
+            TrialAssignment::Run(job) => {
+                for e in job.from_epoch + 1..=job.milestone {
+                    let m = bench.accuracy_at(&job.config, e, spec.bench_seed);
+                    if live.tell(job.trial, e, m).unwrap() == TellAck::Abandon {
+                        break;
+                    }
+                }
+            }
+            TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+            TrialAssignment::Wait => panic!("single worker never waits"),
+            TrialAssignment::Done => break,
+        }
+    }
+    let total = live.events_total();
+    let best = live.core_ref().best().unwrap();
+    drop(live);
+    assert!(total >= 10_000, "workload too small: {total} events");
+
+    let (recovered, report) = Session::recover(&path).unwrap();
+    assert!(report.snapshot_events > 0, "snapshot recovery engaged");
+    assert_eq!(report.snapshot_events + report.events_replayed, total);
+    assert!(
+        report.events_replayed < interval + 1,
+        "replayed {} of {total}: tail must stay within one interval",
+        report.events_replayed
+    );
+    assert!(
+        report.events_skipped <= interval,
+        "rotation lag keeps at most one interval of pre-snapshot tail, got {}",
+        report.events_skipped
+    );
+    let rbest = recovered.core_ref().best().unwrap();
+    assert_eq!(rbest.trial, best.trial);
+    assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
