@@ -16,18 +16,19 @@ use pasha::runtime::gp::GpEiArtifact;
 use pasha::scheduler::asha::AshaBuilder;
 use pasha::scheduler::pasha::PashaBuilder;
 use pasha::searcher::gp::{expected_improvement, Gp};
-use pasha::tuner::{SearcherKind, Tuner, TunerSpec};
+use pasha::spec::SearcherSpec;
+use pasha::tuner::{Tuner, TunerSpec};
 use pasha::util::rng::Rng;
 
 fn main() {
     let bench = NasBench201::cifar100();
     let spec = TunerSpec {
-        searcher: SearcherKind::Bo,
+        searcher: SearcherSpec::Bo(Default::default()),
         ..Default::default()
     };
 
-    let mobster = Tuner::run(&bench, &AshaBuilder::default(), &spec, 0, 0);
-    let pasha_bo = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+    let mobster = Tuner::run_with(&bench, &AshaBuilder::default(), &spec, 0, 0);
+    let pasha_bo = Tuner::run_with(&bench, &PashaBuilder::default(), &spec, 0, 0);
 
     println!("--- MOBSTER (ASHA + GP/EI) ---");
     println!("accuracy {:.2}%  runtime {:.1}h  max resources {}",

@@ -39,7 +39,7 @@ fn main() {
     let mut reference = 0.0;
     for b in &approaches {
         let results: Vec<_> = (0..5)
-            .map(|s| Tuner::run(&bench, b.as_ref(), &spec, s, 0))
+            .map(|s| Tuner::run_with(&bench, b.as_ref(), &spec, s, 0))
             .collect();
         let row = pasha::metrics::Row::from_results(&b.name(), &results);
         if reference == 0.0 {

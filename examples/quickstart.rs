@@ -4,33 +4,37 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! This is the 60-second tour: build a benchmark, pick a scheduler, run
-//! the tuner, inspect the result. The full experiment grid lives behind
+//! This is the 60-second tour of the spec API: describe the experiment
+//! as data (`ExperimentSpec`), run it, inspect the result. The same spec
+//! serializes to JSON for `pasha run --spec exp.json` and for the tuning
+//! service's `create` command. The full experiment grid lives behind
 //! `pasha table <n>` (see `rust/src/report/experiments.rs`).
 
-use pasha::benchmarks::nasbench201::NasBench201;
-use pasha::benchmarks::Benchmark;
-use pasha::scheduler::asha::AshaBuilder;
-use pasha::scheduler::pasha::PashaBuilder;
-use pasha::tuner::{Tuner, TunerSpec};
+use pasha::spec::ExperimentSpec;
+use pasha::tuner::Tuner;
 
 fn main() {
     // The paper's CIFAR-10 NAS task (surrogate; see DESIGN.md
     // §Substitutions) with its protocol defaults: 4 asynchronous
     // workers, N=256 candidate configurations, r=1, η=3, R=200.
-    let bench = NasBench201::cifar10();
-    let spec = TunerSpec::default();
+    // `ExperimentSpec::default()` is exactly that — PASHA with the
+    // noise-adaptive soft ranking; the ASHA baseline is the same spec
+    // with a different scheduler name.
+    let pasha_spec = ExperimentSpec::default();
+    let asha_spec = ExperimentSpec::named("nas-cifar10", "asha").expect("wire names");
 
-    println!("benchmark: {} (R = {} epochs)\n", bench.name(), bench.max_epochs());
+    println!("spec: {}\n", pasha_spec.to_json().to_string_compact());
 
-    let asha = Tuner::run(&bench, &AshaBuilder::default(), &spec, /*seed=*/ 0, 0);
-    let pasha = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+    let asha = Tuner::run(&asha_spec).expect("asha run");
+    let pasha = Tuner::run(&pasha_spec).expect("pasha run");
 
     for r in [&asha, &pasha] {
         println!("--- {} ---", r.scheduler_name);
         println!("retrain accuracy : {:.2}%", r.retrain_accuracy);
-        println!("tuning runtime   : {:.1}h (simulated wall-clock, 4 workers)",
-                 r.runtime_seconds / 3600.0);
+        println!(
+            "tuning runtime   : {:.1}h (simulated wall-clock, 4 workers)",
+            r.runtime_seconds / 3600.0
+        );
         println!("max resources    : {} epochs", r.max_resources);
         println!("epochs trained   : {}\n", r.total_epochs);
     }

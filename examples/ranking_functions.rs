@@ -5,28 +5,40 @@
 //! ```sh
 //! cargo run --release --example ranking_functions
 //! ```
+//!
+//! Every variant is one declarative [`ExperimentSpec`] differing only in
+//! `scheduler.ranking` — the same strings work on the CLI
+//! (`pasha run --ranking soft:2.5`) and in `--spec` files.
 
-use pasha::benchmarks::nasbench201::NasBench201;
 use pasha::metrics::Row;
-use pasha::ranking::RankingSpec;
-use pasha::scheduler::asha::AshaBuilder;
-use pasha::scheduler::pasha::PashaBuilder;
-use pasha::scheduler::SchedulerBuilder;
-use pasha::tuner::{Tuner, TunerSpec};
+use pasha::spec::{parse_ranking, ExperimentSpec};
+use pasha::tuner::{TuneResult, Tuner};
 use pasha::util::table::Table;
 
 fn main() {
-    let bench = NasBench201::cifar100();
-    let spec = TunerSpec::default();
+    let base = |scheduler: &str| {
+        ExperimentSpec::named("nas-cifar100", scheduler).expect("wire names")
+    };
     let seeds: Vec<u64> = (0..3).collect();
+    let run_seeds = |spec: &ExperimentSpec| -> Vec<TuneResult> {
+        seeds
+            .iter()
+            .map(|&s| {
+                let mut rep = spec.clone();
+                rep.seed = s;
+                Tuner::run(&rep).expect("run")
+            })
+            .collect()
+    };
 
-    let rankers = vec![
-        RankingSpec::default(),                       // noise-adaptive (PASHA)
-        RankingSpec::Direct,                          // exact ranking
-        RankingSpec::SoftFixed { epsilon: 2.5 },      // fixed ε = 2.5 points
-        RankingSpec::SoftSigma { mult: 2.0 },         // 2σ heuristic
-        RankingSpec::Rbo { p: 0.5, t: 0.5 },
-        RankingSpec::Rrr { p: 0.5, t: 0.05 },
+    // The CLI shorthand for each paper variant (Appendix C).
+    let rankers = [
+        "noisy",      // noise-adaptive ε (the paper's PASHA)
+        "plain",      // exact ranking
+        "soft:2.5",   // fixed ε = 2.5 accuracy points
+        "sigma:2",    // 2σ heuristic
+        "rbo:0.5,0.5",
+        "rrr:0.5,0.05",
     ];
 
     let mut table = Table::new(
@@ -35,21 +47,18 @@ fn main() {
     );
 
     // reference: ASHA
-    let asha: Vec<_> = seeds
-        .iter()
-        .map(|&s| Tuner::run(&bench, &AshaBuilder::default(), &spec, s, 0))
-        .collect();
-    let asha_row = Row::from_results("ASHA", &asha);
+    let asha_row = Row::from_results("ASHA", &run_seeds(&base("asha")));
     let reference = asha_row.runtime.mean();
     table.row(&asha_row.cells(reference));
 
-    for r in rankers {
-        let builder = PashaBuilder::with_ranking(r.clone());
-        let results: Vec<_> = seeds
-            .iter()
-            .map(|&s| Tuner::run(&bench, &builder, &spec, s, 0))
-            .collect();
-        table.row(&Row::from_results(&builder.name(), &results).cells(reference));
+    for shorthand in rankers {
+        let mut spec = base("pasha");
+        if let pasha::spec::SchedulerSpec::Pasha { ranking, .. } = &mut spec.scheduler {
+            *ranking = parse_ranking(shorthand).expect("ranking shorthand");
+        }
+        let results = run_seeds(&spec);
+        let name = results[0].scheduler_name.clone();
+        table.row(&Row::from_results(&name, &results).cells(reference));
     }
     println!("{}", table.to_text());
     println!(

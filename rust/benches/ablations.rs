@@ -31,7 +31,7 @@ fn main() {
     for n in [80.0, 90.0, 95.0, 100.0] {
         let b = PashaBuilder::with_ranking(RankingSpec::NoiseAdaptive { percentile: n });
         let (r, _) = once(&format!("PASHA N={n}%"), || {
-            Tuner::run(&bench, &b, &spec, 0, 0)
+            Tuner::run_with(&bench, &b, &spec, 0, 0)
         });
         println!(
             "    -> acc {:.2}%  runtime {:.2}h  max resources {}",

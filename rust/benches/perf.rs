@@ -101,7 +101,7 @@ fn main() {
         ("PASHA", &PashaBuilder::default()),
     ] {
         let (r, dt) = once(&format!("tune {name} cifar10 budget=64"), || {
-            Tuner::run(&nb, builder, &spec, 0, 0)
+            Tuner::run_with(&nb, builder, &spec, 0, 0)
         });
         println!(
             "    -> {} jobs, {} epochs, {:.0} sim-seconds ({:.0} jobs/sec wall)",

@@ -10,22 +10,17 @@
 use pasha::benchmarks::Benchmark;
 use pasha::config::space::SearchSpace;
 use pasha::scheduler::asktell::{assignment_from_json, AskTell, TellAck, TrialAssignment};
-use pasha::service::{
-    handle_request, run_worker_batched, Client, Registry, Server, Session, SessionSpec,
-};
-use pasha::tuner::bench_from_name;
+use pasha::service::{handle_request, run_worker_batched, Client, Registry, Server, Session};
+use pasha::spec::ExperimentSpec;
 use pasha::util::benchkit::{once, section};
 use pasha::util::json::parse;
 use std::sync::Arc;
 
-fn spec(budget: usize, seed: u64) -> SessionSpec {
-    SessionSpec {
-        bench: "lcbench-Fashion-MNIST".into(),
-        scheduler: "pasha".into(),
-        config_budget: budget,
-        seed,
-        ..SessionSpec::default()
-    }
+fn spec(budget: usize, seed: u64) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "pasha").unwrap();
+    spec.stop.config_budget = budget;
+    spec.seed = seed;
+    spec
 }
 
 /// One level of the service stack under test.
@@ -123,7 +118,7 @@ fn report_rate(ops: usize, dt: std::time::Duration) {
 
 fn main() {
     let budget = 48;
-    let bench = bench_from_name("lcbench-Fashion-MNIST").unwrap();
+    let bench = spec(budget, 0).bench.build().unwrap();
 
     section("service: ask/tell core (in-process, no journal)");
     let mut core = CorePort(spec(budget, 0).build_core().unwrap());

@@ -158,7 +158,7 @@ mod tests {
             let run = |builder: &dyn crate::scheduler::SchedulerBuilder| {
                 let rs: Vec<_> = seeds
                     .iter()
-                    .map(|&s| Tuner::run(&bench, builder, &spec, s, 0))
+                    .map(|&s| Tuner::run_with(&bench, builder, &spec, s, 0))
                     .collect();
                 (
                     mean(&rs.iter().map(|r| r.runtime_seconds).collect::<Vec<_>>()),

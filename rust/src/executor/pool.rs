@@ -35,6 +35,25 @@ pub trait SharedEvaluator: Send + Sync {
     fn advance(&self, trial: TrialId, config: &Config, from: u32, to: u32) -> Advance;
 }
 
+/// Oracle-backed [`SharedEvaluator`] over an owned benchmark — the pool
+/// counterpart of [`super::SurrogateEvaluator`], used when an experiment
+/// spec selects the `pool` backend for a surrogate run.
+pub struct SharedSurrogate {
+    pub bench: Box<dyn crate::benchmarks::Benchmark>,
+    pub bench_seed: u64,
+}
+
+impl SharedEvaluator for SharedSurrogate {
+    fn advance(&self, trial: TrialId, config: &Config, from: u32, to: u32) -> Advance {
+        // one oracle-advance semantics, shared with the simulator path
+        super::SurrogateEvaluator {
+            bench: self.bench.as_ref(),
+            bench_seed: self.bench_seed,
+        }
+        .advance(trial, config, from, to)
+    }
+}
+
 /// Adapter: any `SharedEvaluator` is an [`Evaluator`] (for reusing the
 /// simulator on live workloads in tests).
 pub struct SharedAsLocal<E: SharedEvaluator>(pub Arc<E>);

@@ -9,9 +9,11 @@
 //!   drives PASHA's progressive resource growth ([`ranking`]), searchers
 //!   ([`searcher`]: random and MOBSTER-style GP+EI), a discrete-event
 //!   multi-worker executor ([`executor`]), benchmark substrates
-//!   ([`benchmarks`]), the orchestration layer ([`tuner`]), and the
-//!   ask/tell tuning service ([`service`]): durable journaled sessions
-//!   served over TCP to external workers (`pasha serve` / `pasha worker`).
+//!   ([`benchmarks`]), the declarative experiment specification that is
+//!   the single construction path for all of them ([`spec`]), the
+//!   orchestration layer ([`tuner`]), and the ask/tell tuning service
+//!   ([`service`]): durable journaled sessions served over TCP to
+//!   external workers (`pasha serve` / `pasha worker`).
 //! * **Layer 2** — JAX compute graphs (`python/compile/model.py`): MLP
 //!   train/eval steps, the GP posterior + EI acquisition, the 1-NN
 //!   surrogate — AOT-lowered to HLO text at build time.
@@ -39,6 +41,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod searcher;
 pub mod service;
+pub mod spec;
 pub mod tuner;
 pub mod util;
 

@@ -3,8 +3,10 @@
 //! Subcommands (hand-rolled parser; the offline image has no `clap`):
 //!
 //! ```text
-//! pasha run    --bench <name> --scheduler <name> [--budget N] [--seed S]
-//!              [--epoch-budget E] [--time-budget SECONDS]
+//! pasha run    [--spec exp.json] [--set key.path=value ...] [--bench <name>]
+//!              [--scheduler <name>] [--budget N] [--seed S] [--r-min R]
+//!              [--ranking soft:0.025|plain|rbo:0.9|...] [--epoch-budget E]
+//!              [--time-budget SECONDS]
 //! pasha table  <id>  [--scale paper|smoke] [--out results/]
 //! pasha figure <1..5> [--out results/]
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
@@ -25,11 +27,10 @@ use pasha::scheduler::asha::AshaBuilder;
 use pasha::scheduler::asktell::config_from_json;
 use pasha::scheduler::pasha::PashaBuilder;
 use pasha::service::{
-    run_worker, run_worker_batched, Client, Registry, Server, Session, SessionOptions, SessionSpec,
+    run_worker, run_worker_batched, Client, Registry, Server, Session, SessionOptions,
 };
-use pasha::tuner::{
-    bench_from_name, scheduler_from_name, SearcherKind, StopSpec, Tuner, TunerSpec,
-};
+use pasha::spec::{apply_flag_overrides, BenchSpec, ExperimentSpec, SPEC_FLAGS};
+use pasha::tuner::{Tuner, TunerSpec};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -42,15 +43,15 @@ fn main() {
         std::process::exit(2);
     }
     let (cmd, rest) = (args[0].as_str(), &args[1..]);
-    let flags = parse_flags(rest);
+    let (flags, sets) = parse_flags(rest);
     let result = match cmd {
-        "run" => cmd_run(&flags),
+        "run" => cmd_run(&flags, &sets),
         "table" => cmd_table(rest.first().map(|s| s.as_str()), &flags),
         "figure" => cmd_figure(rest.first().map(|s| s.as_str()), &flags),
         "report" => cmd_report(&flags),
         "bench-json" => cmd_bench_json(&flags),
         "serve" => cmd_serve(&flags),
-        "worker" => cmd_worker(&flags),
+        "worker" => cmd_worker(&flags, &sets),
         "sessions" => cmd_sessions(&flags),
         "recover" => cmd_recover(&flags),
         "compact" => cmd_compact(&flags),
@@ -77,17 +78,22 @@ fn usage() {
         "pasha — Progressive ASHA reproduction (Bohdal et al., ICLR 2023)
 
 USAGE:
-  pasha run    --bench <nas-cifar10|nas-cifar100|nas-imagenet16|pd1-wmt|pd1-imagenet|lcbench-<name>>
-               --scheduler <asha|pasha|asha-stop|pasha-stop|sh|hyperband|1-epoch|random>
-               [--budget N] [--seed S] [--eta E] [--searcher random|bo] [--workers W]
+  pasha run    [--spec exp.json] [--set key.path=value ...]
+               [--bench <nas-cifar10|nas-cifar100|nas-imagenet16|pd1-wmt|pd1-imagenet|lcbench-<name>>]
+               [--scheduler <asha|pasha|asha-stop|pasha-stop|sh|hyperband|1-epoch|random>]
+               [--budget N] [--seed S] [--eta E] [--r-min R]
+               [--ranking plain|noisy[:PCT]|soft:EPS|sigma:MULT|mean-gap|median-gap|rbo:P[,T]|rrr:P[,T]|arrr:P[,T]]
+               [--searcher random|bo] [--workers W] [--backend sim|pool]
                [--epoch-budget E] [--time-budget SECONDS]
+               # every flag lowers into one versioned ExperimentSpec (see README)
   pasha table  <1|2|3|4|5|6|8|9|10|11|12|13|14|15|ablation|stopping> [--scale paper|smoke] [--out DIR]
   pasha figure <1|2|3|4|5> [--out DIR]
   pasha report [--scale paper|smoke] [--out DIR]
   pasha bench-json [--suite engine|service|all] [--out FILE]
   pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR] [--snapshot-interval N]
-  pasha worker --addr HOST:PORT (--session ID | --create [--bench B] [--scheduler S]
-               [--budget N] [--seed S] [--eta E] [--searcher random|bo] [--epoch-budget E])
+  pasha worker --addr HOST:PORT (--session ID | --create [--spec exp.json] [--bench B]
+               [--scheduler S] [--budget N] [--seed S] [--eta E] [--r-min R] [--ranking ...]
+               [--searcher random|bo] [--epoch-budget E] [--set key.path=value ...])
                [--worker-id W] [--expire] [--batch] [--shutdown]
   pasha sessions --addr HOST:PORT
   pasha recover --journal FILE             # verify a session journal replays cleanly
@@ -97,14 +103,26 @@ USAGE:
     );
 }
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// Parse `--name value` pairs. `--set key=value` may repeat, so its
+/// occurrences are collected separately in order.
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     let mut flags = HashMap::new();
+    let mut sets = Vec::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
             if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), args[i + 1].clone());
+                if name == "set" {
+                    sets.push(args[i + 1].clone());
+                } else {
+                    flags.insert(name.to_string(), args[i + 1].clone());
+                }
                 i += 2;
+            } else if name == "set" {
+                // a dangling --set surfaces as a clear "--set expects
+                // key.path=value" error instead of an unknown flag
+                sets.push(String::new());
+                i += 1;
             } else {
                 flags.insert(name.to_string(), "true".to_string());
                 i += 1;
@@ -113,7 +131,54 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
             i += 1;
         }
     }
-    flags
+    (flags, sets)
+}
+
+/// Spec-lowering commands reject flags they do not understand — the
+/// same strictness the spec parser applies to keys, so a typo like
+/// `--rmin` cannot silently fall back to a default.
+fn reject_unknown_flags(
+    flags: &HashMap<String, String>,
+    extra_allowed: &[&str],
+) -> Result<(), String> {
+    for name in flags.keys() {
+        if !SPEC_FLAGS.contains(&name.as_str()) && !extra_allowed.contains(&name.as_str()) {
+            let recognized: Vec<&str> = SPEC_FLAGS
+                .iter()
+                .chain(extra_allowed.iter())
+                .copied()
+                .collect();
+            return Err(format!(
+                "unknown flag --{name} (recognized: --set, --{})",
+                recognized.join(", --")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Resolve the experiment spec a command describes: start from `base`
+/// (or a `--spec FILE`), lower every recognized flag onto it, then apply
+/// the `--set key.path=value` overrides in order.
+fn resolve_spec(
+    base: ExperimentSpec,
+    flags: &HashMap<String, String>,
+    sets: &[String],
+) -> Result<ExperimentSpec, String> {
+    let mut spec = match flags.get("spec") {
+        None => base,
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("--spec {path}: {e}"))?;
+            let json =
+                pasha::util::json::parse(&text).map_err(|e| format!("--spec {path}: {e}"))?;
+            ExperimentSpec::from_json(&json).map_err(|e| format!("--spec {path}: {e}"))?
+        }
+    };
+    apply_flag_overrides(&mut spec, flags)?;
+    for assignment in sets {
+        spec.set(assignment)?;
+    }
+    Ok(spec)
 }
 
 fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, default: T) -> T {
@@ -139,47 +204,15 @@ fn scale(flags: &HashMap<String, String>) -> experiments::Scale {
     }
 }
 
-fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
-    let bench_name = flags
-        .get("bench")
-        .cloned()
-        .unwrap_or_else(|| "nas-cifar10".into());
-    let sched_name = flags
-        .get("scheduler")
-        .cloned()
-        .unwrap_or_else(|| "pasha".into());
-    let budget: usize = flag(flags, "budget", 256);
-    let seed: u64 = flag(flags, "seed", 0);
-    let eta: u32 = flag(flags, "eta", 3);
-    let workers: usize = flag(flags, "workers", 4);
-    let searcher = match flags.get("searcher").map(|s| s.as_str()) {
-        Some("bo") => SearcherKind::Bo,
-        _ => SearcherKind::Random,
-    };
-    let bench = bench_from_name(&bench_name)?;
-    let builder = scheduler_from_name(&sched_name, eta, budget)?;
-    let mut extra_stop = Vec::new();
-    if let Some(v) = flags.get("epoch-budget") {
-        let e: u64 = v
-            .parse()
-            .map_err(|_| format!("invalid --epoch-budget '{v}' (expected an integer)"))?;
-        extra_stop.push(StopSpec::EpochBudget(e));
-    }
-    if let Some(v) = flags.get("time-budget") {
-        let s: f64 = v
-            .parse()
-            .map_err(|_| format!("invalid --time-budget '{v}' (expected seconds)"))?;
-        extra_stop.push(StopSpec::ClockBudget(s));
-    }
-    let spec = TunerSpec {
-        workers,
-        config_budget: budget,
-        searcher,
-        extra_stop,
-    };
+fn cmd_run(flags: &HashMap<String, String>, sets: &[String]) -> Result<(), String> {
+    reject_unknown_flags(flags, &[])?;
+    let spec = resolve_spec(ExperimentSpec::default(), flags, sets)?;
+    // print the reproduction line *before* running, so an interrupted
+    // run still leaves it in the log
+    println!("spec             : {}", spec.to_json().to_string_compact());
     let t0 = std::time::Instant::now();
-    let r = Tuner::run(bench.as_ref(), builder.as_ref(), &spec, seed, 0);
-    println!("benchmark        : {}", bench.name());
+    let r = Tuner::run(&spec)?;
+    println!("benchmark        : {}", spec.bench.name);
     println!("scheduler        : {}", r.scheduler_name);
     println!("configs sampled  : {}", r.configs_sampled);
     println!("jobs executed    : {}", r.jobs);
@@ -363,7 +396,7 @@ fn bench_engine(flags: &HashMap<String, String>) -> Result<(), String> {
     let bench_parallel = NasBench201::cifar100();
     let t1 = Instant::now();
     let parallel =
-        Tuner::run_repeated(&bench_parallel, &builder, &spec, &sched_seeds, &bench_seeds);
+        Tuner::run_repeated_with(&bench_parallel, &builder, &spec, &sched_seeds, &bench_seeds);
     let parallel_s = t1.elapsed().as_secs_f64();
     let identical = serial == parallel;
 
@@ -373,7 +406,7 @@ fn bench_engine(flags: &HashMap<String, String>) -> Result<(), String> {
     let t2 = Instant::now();
     let mut sim_jobs = 0usize;
     for seed in 0..4u64 {
-        let r = Tuner::run(&bench_sim, &AshaBuilder::default(), &spec, seed, 0);
+        let r = Tuner::run_with(&bench_sim, &AshaBuilder::default(), &spec, seed, 0);
         sim_jobs += r.jobs;
     }
     let sim_s = t2.elapsed().as_secs_f64();
@@ -434,12 +467,11 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
     let addr = server.local_addr().map_err(|e| e.to_string())?.to_string();
     let server_thread = std::thread::spawn(move || server.run());
 
-    let spec_for = |seed: u64| SessionSpec {
-        bench: bench_name.to_string(),
-        scheduler: "pasha".into(),
-        config_budget: budget,
-        seed,
-        ..SessionSpec::default()
+    let spec_for = |seed: u64| {
+        let mut s = ExperimentSpec::named(bench_name, "pasha").expect("bench name");
+        s.stop.config_budget = budget;
+        s.seed = seed;
+        s
     };
     let mut control = Client::connect(&addr).map_err(|e| e.to_string())?;
     let mut session_ids = Vec::new();
@@ -449,7 +481,7 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
 
     // The stress phase: every (session, worker) pair drives the session
     // over its own TCP connection, timing each round-trip.
-    let bench = bench_from_name(bench_name)?;
+    let bench = BenchSpec::new(bench_name).build()?;
     let t0 = Instant::now();
     let per_thread: Vec<Result<(Vec<f64>, Vec<f64>), String>> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -520,14 +552,9 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
         .get("best_metric")
         .and_then(|v| v.as_f64())
         .unwrap_or(f64::NAN);
-    let tuner_spec = TunerSpec {
-        workers: 1,
-        config_budget: budget,
-        searcher: SearcherKind::Random,
-        extra_stop: Vec::new(),
-    };
-    let builder = scheduler_from_name("pasha", 3, budget)?;
-    let inproc = Tuner::run(bench.as_ref(), builder.as_ref(), &tuner_spec, 0, 0);
+    let mut inproc_spec = spec_for(0);
+    inproc_spec.exec.workers = 1;
+    let inproc = Tuner::run(&inproc_spec)?;
     let matches = served_best.to_bits() == inproc.best_metric.to_bits();
 
     // Batched vs unbatched framing on identical single-worker sessions:
@@ -646,7 +673,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     server.run().map_err(|e| e.to_string())
 }
 
-fn cmd_worker(flags: &HashMap<String, String>) -> Result<(), String> {
+fn cmd_worker(flags: &HashMap<String, String>, sets: &[String]) -> Result<(), String> {
     let addr = flags
         .get("addr")
         .cloned()
@@ -654,28 +681,44 @@ fn cmd_worker(flags: &HashMap<String, String>) -> Result<(), String> {
     let worker_id = flags.get("worker-id").cloned().unwrap_or_else(|| "w0".to_string());
     let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
     let session = match flags.get("session") {
-        Some(id) => id.clone(),
+        Some(id) => {
+            // attaching to an existing session: spec-lowering flags
+            // would be silently dead and typos must not pass, so only
+            // the worker control flags are accepted here
+            let control = ["addr", "worker-id", "session", "expire", "batch", "shutdown"];
+            for name in flags.keys() {
+                if control.contains(&name.as_str()) {
+                    continue;
+                }
+                if SPEC_FLAGS.contains(&name.as_str()) {
+                    return Err(format!(
+                        "--{name} describes a new session's spec; it has no effect with \
+                         --session (use --create to apply it)"
+                    ));
+                }
+                return Err(format!(
+                    "unknown flag --{name} (with --session: --{})",
+                    control.join(", --")
+                ));
+            }
+            if !sets.is_empty() {
+                return Err(
+                    "--set describes a new session's spec; it has no effect with \
+                     --session (use --create to apply it)"
+                        .into(),
+                );
+            }
+            id.clone()
+        }
         None if flags.contains_key("create") => {
-            let searcher = match flags.get("searcher").map(|s| s.as_str()) {
-                Some("bo") => SearcherKind::Bo,
-                _ => SearcherKind::Random,
-            };
-            let spec = SessionSpec {
-                bench: flags
-                    .get("bench")
-                    .cloned()
-                    .unwrap_or_else(|| "lcbench-Fashion-MNIST".to_string()),
-                scheduler: flags
-                    .get("scheduler")
-                    .cloned()
-                    .unwrap_or_else(|| "pasha".to_string()),
-                eta: flag(flags, "eta", 3),
-                searcher,
-                seed: flag(flags, "seed", 0),
-                bench_seed: flag(flags, "bench-seed", 0),
-                config_budget: flag(flags, "budget", 32),
-                epoch_budget: flags.get("epoch-budget").and_then(|v| v.parse().ok()),
-            };
+            reject_unknown_flags(
+                flags,
+                &["addr", "worker-id", "create", "expire", "batch", "shutdown"],
+            )?;
+            // worker-created smoke sessions default smaller than `run`
+            let mut base = ExperimentSpec::named("lcbench-Fashion-MNIST", "pasha")?;
+            base.stop.config_budget = 32;
+            let spec = resolve_spec(base, flags, sets)?;
             let id = client.create(&spec).map_err(|e| e.to_string())?;
             println!("created session {id}");
             id
@@ -691,8 +734,8 @@ fn cmd_worker(flags: &HashMap<String, String>) -> Result<(), String> {
     // The session's spec names the benchmark this worker must evaluate.
     let status = client.status(&session).map_err(|e| e.to_string())?;
     let spec_json = status.get("spec").ok_or("status response missing spec")?;
-    let spec = SessionSpec::from_json(spec_json)?;
-    let bench = bench_from_name(&spec.bench)?;
+    let spec = ExperimentSpec::from_json(spec_json)?;
+    let bench = spec.bench.build()?;
     let t0 = std::time::Instant::now();
     // --batch ships each job's tells + the next ask as one wire frame
     let poll = Duration::from_millis(20);

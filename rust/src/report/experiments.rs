@@ -20,7 +20,8 @@ use crate::scheduler::asha::AshaBuilder;
 use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
 use crate::scheduler::pasha::PashaBuilder;
 use crate::scheduler::SchedulerBuilder;
-use crate::tuner::{SearcherKind, Tuner, TunerSpec};
+use crate::spec::SearcherSpec;
+use crate::tuner::{Tuner, TunerSpec};
 use crate::util::parallel::{available_threads, par_map};
 use crate::util::table::Table;
 
@@ -67,10 +68,10 @@ impl Scale {
     }
 }
 
-/// An approach = a scheduler builder plus a searcher kind.
+/// An approach = a scheduler builder plus a searcher spec.
 pub struct Approach {
     pub builder: Box<dyn SchedulerBuilder>,
-    pub searcher: SearcherKind,
+    pub searcher: SearcherSpec,
     /// Optional display-name override (e.g. "MOBSTER" for ASHA+BO).
     pub label: Option<String>,
 }
@@ -79,7 +80,7 @@ impl Approach {
     pub fn new(builder: Box<dyn SchedulerBuilder>) -> Approach {
         Approach {
             builder,
-            searcher: SearcherKind::Random,
+            searcher: SearcherSpec::Random,
             label: None,
         }
     }
@@ -87,7 +88,7 @@ impl Approach {
     pub fn bo(builder: Box<dyn SchedulerBuilder>, label: &str) -> Approach {
         Approach {
             builder,
-            searcher: SearcherKind::Bo,
+            searcher: SearcherSpec::Bo(Default::default()),
             label: Some(label.to_string()),
         }
     }
@@ -150,7 +151,7 @@ pub fn compare(bench: &dyn Benchmark, approaches: &[Approach], scale: &Scale, ti
         }
     }
     let results = par_map(&cells, available_threads(), |_, &(ai, ss, bs)| {
-        Tuner::run(bench, approaches[ai].builder.as_ref(), &specs[ai], ss, bs)
+        Tuner::run_with(bench, approaches[ai].builder.as_ref(), &specs[ai], ss, bs)
     });
     let rows: Vec<Row> = results
         .chunks(reps)
@@ -394,17 +395,17 @@ pub fn table13(scale: &Scale, max_datasets: usize) -> Table {
         let spec = TunerSpec {
             workers: scale.workers,
             config_budget: scale.config_budget,
-            searcher: SearcherKind::Random,
+            searcher: SearcherSpec::Random,
             extra_stop: Vec::new(),
         };
-        let asha = Tuner::run_repeated(
+        let asha = Tuner::run_repeated_with(
             &b,
             &AshaBuilder::default(),
             &spec,
             &scale.sched_seeds,
             &scale.bench_seeds_other,
         );
-        let pasha = Tuner::run_repeated(
+        let pasha = Tuner::run_repeated_with(
             &b,
             &PashaBuilder::default(),
             &spec,
@@ -460,7 +461,7 @@ pub fn table15(scale: &Scale) -> Vec<Table> {
                     builder: Box::new(PashaBuilder::with_ranking(RankingSpec::NoiseAdaptive {
                         percentile: n,
                     })),
-                    searcher: SearcherKind::Random,
+                    searcher: SearcherSpec::Random,
                     label: Some(format!("PASHA N={n}%")),
                 });
             }

@@ -23,7 +23,7 @@ pub fn figure1(budget: usize) -> String {
         config_budget: budget,
         ..Default::default()
     };
-    let r = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+    let r = Tuner::run_with(&bench, &PashaBuilder::default(), &spec, 0, 0);
     let mut out = String::new();
     out.push_str("Figure 1 — PASHA rank-stabilization trace (NASBench201/cifar10)\n");
     out.push_str(&format!(
@@ -124,7 +124,7 @@ pub fn figure5(dataset: Nb201Dataset, budget: usize) -> String {
         config_budget: budget,
         ..Default::default()
     };
-    let r = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+    let r = Tuner::run_with(&bench, &PashaBuilder::default(), &spec, 0, 0);
     let idx: Vec<f64> = (0..r.eps_history.len()).map(|i| i as f64).collect();
     series_csv(&["update", "epsilon"], &[idx, r.eps_history.clone()])
 }

@@ -31,10 +31,15 @@ pub fn sessions_table(statuses: &[Json]) -> Table {
         ],
     );
     for st in statuses {
-        let bench = st
-            .get("spec")
-            .and_then(|s| s.get("bench"))
+        // v2 specs carry `bench: {name}`; v1 statuses had a bare string
+        let bench_field = st.get("spec").and_then(|s| s.get("bench"));
+        let bench = bench_field
             .and_then(|b| b.as_str())
+            .or_else(|| {
+                bench_field
+                    .and_then(|b| b.get("name"))
+                    .and_then(|n| n.as_str())
+            })
             .unwrap_or("-")
             .to_string();
         let best = match st.get("best_metric").and_then(|v| v.as_f64()) {
@@ -63,17 +68,13 @@ pub fn sessions_table(statuses: &[Json]) -> Table {
 mod tests {
     use super::*;
     use crate::service::registry::Registry;
-    use crate::service::session::SessionSpec;
+    use crate::spec::ExperimentSpec;
 
     #[test]
     fn renders_live_registry_statuses() {
         let reg = Registry::in_memory();
-        let spec = SessionSpec {
-            bench: "lcbench-Fashion-MNIST".into(),
-            scheduler: "asha".into(),
-            config_budget: 4,
-            ..SessionSpec::default()
-        };
+        let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha").unwrap();
+        spec.stop.config_budget = 4;
         reg.create(spec.clone()).unwrap();
         reg.create(spec).unwrap();
         let table = sessions_table(&reg.statuses());

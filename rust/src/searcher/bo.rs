@@ -21,7 +21,7 @@ use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
 /// Tuning constants for the BO searcher.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BoConfig {
     /// Minimum observations at a resource level before the GP is trusted.
     pub min_points: usize,

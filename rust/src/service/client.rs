@@ -24,7 +24,7 @@ use crate::benchmarks::Benchmark;
 use crate::config::space::SearchSpace;
 use crate::scheduler::asktell::{assignment_from_json, TellAck, TrialAssignment};
 use crate::service::registry::ServiceError;
-use crate::service::session::SessionSpec;
+use crate::spec::ExperimentSpec;
 use crate::util::json::{parse, Json};
 use crate::TrialId;
 use std::io::{BufRead, BufReader, Write};
@@ -87,14 +87,41 @@ impl Client {
         self.call(&req).map(|_| ())
     }
 
-    pub fn create(&mut self, spec: &SessionSpec) -> Result<String, ServiceError> {
+    pub fn create(&mut self, spec: &ExperimentSpec) -> Result<String, ServiceError> {
         let mut req = self.cmd("create");
-        req.set("spec", spec.to_json());
+        // send the v1 shape whenever the spec is representable there, so
+        // a pre-redesign server creates the *right* session instead of
+        // silently defaulting object-shaped fields it cannot read;
+        // v2-only specs — which an old server could not honor anyway —
+        // go as v2
+        req.set(
+            "spec",
+            spec.to_v1_compat_json().unwrap_or_else(|| spec.to_json()),
+        );
         let resp = self.call(&req)?;
-        resp.get("session")
+        let id = resp
+            .get("session")
             .and_then(|v| v.as_str())
             .map(|s| s.to_string())
-            .ok_or_else(|| ServiceError::Io("create response missing session id".into()))
+            .ok_or_else(|| ServiceError::Io("create response missing session id".into()))?;
+        // Read the session's spec back and compare: a pre-redesign
+        // server handed a v2-only payload silently defaults the fields
+        // it cannot read — catch that at create time instead of driving
+        // the wrong experiment.
+        let status = self.status(&id)?;
+        let served = status
+            .get("spec")
+            .ok_or_else(|| ServiceError::Io("status response missing spec".into()))?;
+        let served = ExperimentSpec::from_json(served).map_err(ServiceError::Spec)?;
+        if &served != spec {
+            return Err(ServiceError::Spec(format!(
+                "server created session '{id}' with a different spec than requested \
+                 (got {}, wanted {}) — a pre-redesign server cannot honor v2-only specs",
+                served.to_json().to_string_compact(),
+                spec.to_json().to_string_compact()
+            )));
+        }
+        Ok(id)
     }
 
     pub fn ask(

@@ -5,6 +5,11 @@
 //! decouples decision-making from execution so external workers — other
 //! processes, other machines — drive trials against a central service:
 //!
+//! Sessions are described by the shared, versioned
+//! [`crate::spec::ExperimentSpec`] (re-exported here): the `create`
+//! command accepts the v2 wire format and migrates legacy v1 (flat)
+//! payloads, and journal headers recover through the same parser.
+//!
 //! * [`session`] — one durable tuning session: an ask/tell core
 //!   ([`crate::scheduler::asktell`]) whose every mutating operation is
 //!   appended to a write-ahead journal before acknowledgement, plus
@@ -44,7 +49,8 @@ pub mod registry;
 pub mod server;
 pub mod session;
 
+pub use crate::spec::ExperimentSpec;
 pub use client::{run_worker, run_worker_batched, Client, WorkerReport};
 pub use registry::{Registry, ServiceError};
 pub use server::{handle_request, Server};
-pub use session::{RecoveryReport, Session, SessionOptions, SessionSpec};
+pub use session::{RecoveryReport, Session, SessionOptions};

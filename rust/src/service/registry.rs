@@ -10,7 +10,8 @@
 //! in-flight jobs; for workers that died with it, `expire` re-queues
 //! their jobs).
 
-use crate::service::session::{RecoveryReport, Session, SessionOptions, SessionSpec};
+use crate::service::session::{RecoveryReport, Session, SessionOptions};
+use crate::spec::ExperimentSpec;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::fmt;
@@ -125,7 +126,7 @@ impl Registry {
     }
 
     /// Create a new session and return its id.
-    pub fn create(&self, spec: SessionSpec) -> Result<String, ServiceError> {
+    pub fn create(&self, spec: ExperimentSpec) -> Result<String, ServiceError> {
         let id = {
             let mut n = self.next_id.lock().expect("registry lock");
             let id = format!("s{:04}", *n);
@@ -191,7 +192,6 @@ mod tests {
     use super::*;
     use crate::benchmarks::Benchmark;
     use crate::scheduler::asktell::{TellAck, TrialAssignment};
-    use crate::tuner::bench_from_name;
 
     fn tmp_dir(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!("pasha-reg-{}-{name}", std::process::id()));
@@ -199,13 +199,10 @@ mod tests {
         dir
     }
 
-    fn small_spec() -> SessionSpec {
-        SessionSpec {
-            bench: "lcbench-Fashion-MNIST".into(),
-            scheduler: "asha".into(),
-            config_budget: 6,
-            ..SessionSpec::default()
-        }
+    fn small_spec() -> ExperimentSpec {
+        let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha").unwrap();
+        spec.stop.config_budget = 6;
+        spec
     }
 
     fn drive(session: &Arc<Mutex<Session>>, bench: &dyn Benchmark, bench_seed: u64) {
@@ -252,7 +249,7 @@ mod tests {
     fn durable_registry_recovers_all_sessions() {
         let dir = tmp_dir("recover");
         let spec = small_spec();
-        let bench = bench_from_name(&spec.bench).unwrap();
+        let bench = spec.bench.build().unwrap();
         {
             let reg = Registry::with_journal_dir(dir.clone()).unwrap();
             let id_a = reg.create(spec.clone()).unwrap();
@@ -281,7 +278,7 @@ mod tests {
     fn snapshot_registry_recovers_from_tail() {
         let dir = tmp_dir("snap");
         let spec = small_spec();
-        let bench = bench_from_name(&spec.bench).unwrap();
+        let bench = spec.bench.build().unwrap();
         let options = SessionOptions::snapshot_every(8);
         let total;
         {

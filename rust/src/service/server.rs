@@ -12,7 +12,7 @@
 //!
 //! ```text
 //! {"cmd":"ping"}
-//! {"cmd":"create","spec":{...SessionSpec...}}        -> {"ok":true,"session":"s0000"}
+//! {"cmd":"create","spec":{...ExperimentSpec...}}     -> {"ok":true,"session":"s0000"}
 //! {"cmd":"ask","session":"s0000","worker":"w0"}      -> {"ok":true,"type":"run",...}
 //! {"cmd":"tell","session":"s0000","trial":3,"epoch":1,"metric":57.5}
 //!                                                    -> {"ok":true,"ack":"continue"}
@@ -34,7 +34,7 @@
 
 use crate::scheduler::asktell::assignment_json;
 use crate::service::registry::{Registry, ServiceError};
-use crate::service::session::SessionSpec;
+use crate::spec::ExperimentSpec;
 use crate::util::json::{parse, Json};
 use crate::TrialId;
 use std::io::{self, BufRead, BufReader, Write};
@@ -85,7 +85,8 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
             resp.set("pong", true);
         }
         "create" => {
-            let spec = SessionSpec::from_json(field(req, "spec")?).map_err(ServiceError::Spec)?;
+            let spec =
+                ExperimentSpec::from_json(field(req, "spec")?).map_err(ServiceError::Spec)?;
             let id = registry.create(spec)?;
             resp.set("session", id);
         }
@@ -277,22 +278,44 @@ fn handle_connection(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::service::session::SessionSpec;
+    use crate::spec::ExperimentSpec;
 
     fn reg_with_session() -> (Registry, String) {
         let reg = Registry::in_memory();
-        let spec = SessionSpec {
-            bench: "lcbench-Fashion-MNIST".into(),
-            scheduler: "asha".into(),
-            config_budget: 4,
-            ..SessionSpec::default()
-        };
+        let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha").unwrap();
+        spec.stop.config_budget = 4;
         let id = reg.create(spec).unwrap();
         (reg, id)
     }
 
     fn req(s: &str) -> Json {
         parse(s).unwrap()
+    }
+
+    #[test]
+    fn create_accepts_v2_and_v1_specs_and_rejects_typos() {
+        let reg = Registry::in_memory();
+        // v2 wire format
+        let v2 = "{\"cmd\":\"create\",\"spec\":{\"version\":2,\
+                   \"bench\":{\"name\":\"lcbench-Fashion-MNIST\"},\
+                   \"scheduler\":{\"name\":\"asha\"},\
+                   \"stop\":{\"config_budget\":4}}}";
+        let r = handle_request(&reg, &req(v2));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        // legacy v1 flat payloads still create sessions
+        let v1 = "{\"cmd\":\"create\",\"spec\":{\"bench\":\"lcbench-Fashion-MNIST\",\
+                   \"scheduler\":\"asha\",\"config_budget\":4}}";
+        let r = handle_request(&reg, &req(v1));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        // a typo'd key is a structured error naming the field, not a
+        // silently-defaulted session
+        let typo = "{\"cmd\":\"create\",\"spec\":{\"bench\":\"lcbench-Fashion-MNIST\",\
+                     \"confg_budget\":4}}";
+        let r = handle_request(&reg, &req(typo));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        let msg = r.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("confg_budget"), "{msg}");
+        assert_eq!(reg.len(), 2, "only the two valid creates registered");
     }
 
     #[test]

@@ -1,120 +1,31 @@
 //! One durable tuning session: an ask/tell core plus its write-ahead
 //! journal.
 //!
-//! A [`SessionSpec`] is the wire-serializable recipe (benchmark,
-//! scheduler, searcher, seeds, budgets) from which a session's scheduler
-//! and searcher are built deterministically — the same derivations as
-//! [`crate::tuner::Tuner::run`], so a served session reproduces the
-//! in-process run for the same seeds. A [`Session`] wraps the
-//! [`AskTell`] core and appends every mutating operation to its journal
-//! before acknowledging it; [`Session::recover`] rebuilds a crashed
-//! session by replaying the journal against a fresh core, verifying that
-//! every replayed `ask` regenerates the exact response that was
-//! acknowledged (any divergence means the journal does not belong to
-//! this code/seed combination and recovery is refused).
+//! A session is described by an [`ExperimentSpec`] — the same versioned,
+//! wire-serializable recipe the CLI and the in-process tuner use — from
+//! which its scheduler and searcher are built deterministically
+//! ([`ExperimentSpec::build_core`], the same derivations as
+//! [`crate::tuner::Tuner::run`]), so a served session reproduces the
+//! in-process run for the same seeds. Journal headers written by older
+//! builds carry the flat v1 spec shape; [`ExperimentSpec::from_json`]
+//! migrates them, so v1 journals and snapshots recover byte-identically.
+//! A [`Session`] wraps the [`AskTell`] core and appends every mutating
+//! operation to its journal before acknowledging it;
+//! [`Session::recover`] rebuilds a crashed session by replaying the
+//! journal against a fresh core, verifying that every replayed `ask`
+//! regenerates the exact response that was acknowledged (any divergence
+//! means the journal does not belong to this code/seed combination and
+//! recovery is refused).
 
-use crate::executor::engine::{ConfigBudget, EpochBudget, StoppingRule};
 use crate::scheduler::asktell::{assignment_json, config_json, AskTell, TellAck, TrialAssignment};
 use crate::service::journal::{
     self, ev_ask, ev_create, ev_create_at, ev_expire, ev_fail, ev_snapshot, ev_tell, Journal,
 };
 use crate::service::registry::ServiceError;
-use crate::tuner::{bench_from_name, scheduler_from_name, searcher_for, SearcherKind};
+use crate::spec::ExperimentSpec;
 use crate::util::json::Json;
 use crate::TrialId;
 use std::path::Path;
-
-/// The serializable recipe for one session.
-#[derive(Clone, Debug, PartialEq)]
-pub struct SessionSpec {
-    /// Benchmark wire name (`lcbench-Fashion-MNIST`, `nas-cifar10`, …):
-    /// defines the search space and max epochs here, and tells workers
-    /// what to evaluate.
-    pub bench: String,
-    /// Scheduler wire name (`pasha`, `asha`, `pasha-stop`, …).
-    pub scheduler: String,
-    pub eta: u32,
-    pub searcher: SearcherKind,
-    /// Scheduler/searcher seed (the tuner's `sched_seed`).
-    pub seed: u64,
-    /// Benchmark seed workers should evaluate with.
-    pub bench_seed: u64,
-    /// The paper's N-configuration budget.
-    pub config_budget: usize,
-    /// Optional additional epoch budget (drain semantics).
-    pub epoch_budget: Option<u64>,
-}
-
-impl Default for SessionSpec {
-    fn default() -> Self {
-        SessionSpec {
-            bench: "nas-cifar10".into(),
-            scheduler: "pasha".into(),
-            eta: 3,
-            searcher: SearcherKind::Random,
-            seed: 0,
-            bench_seed: 0,
-            config_budget: 256,
-            epoch_budget: None,
-        }
-    }
-}
-
-impl SessionSpec {
-    pub fn to_json(&self) -> Json {
-        let mut o = Json::obj();
-        o.set("bench", self.bench.as_str())
-            .set("scheduler", self.scheduler.as_str())
-            .set("eta", self.eta)
-            .set("searcher", self.searcher.as_str())
-            .set("seed", self.seed as f64)
-            .set("bench_seed", self.bench_seed as f64)
-            .set("config_budget", self.config_budget);
-        if let Some(e) = self.epoch_budget {
-            o.set("epoch_budget", e as f64);
-        }
-        o
-    }
-
-    pub fn from_json(j: &Json) -> Result<SessionSpec, String> {
-        let str_field = |key: &str, default: &str| -> String {
-            j.get(key)
-                .and_then(|v| v.as_str())
-                .unwrap_or(default)
-                .to_string()
-        };
-        let num = |key: &str| j.get(key).and_then(|v| v.as_f64());
-        let searcher_name = str_field("searcher", "random");
-        let searcher = SearcherKind::parse(&searcher_name)
-            .ok_or_else(|| format!("unknown searcher '{searcher_name}'"))?;
-        Ok(SessionSpec {
-            bench: str_field("bench", "nas-cifar10"),
-            scheduler: str_field("scheduler", "pasha"),
-            eta: num("eta").unwrap_or(3.0) as u32,
-            searcher,
-            seed: num("seed").unwrap_or(0.0) as u64,
-            bench_seed: num("bench_seed").unwrap_or(0.0) as u64,
-            config_budget: num("config_budget").unwrap_or(256.0) as usize,
-            epoch_budget: num("epoch_budget").map(|e| e as u64),
-        })
-    }
-
-    /// Build the deterministic ask/tell core this spec describes. Uses
-    /// the same scheduler/searcher derivations as `Tuner::run`, so a
-    /// single-worker session reproduces the in-process run exactly.
-    pub fn build_core(&self) -> Result<AskTell, String> {
-        let bench = bench_from_name(&self.bench)?;
-        let builder = scheduler_from_name(&self.scheduler, self.eta, self.config_budget)?;
-        let scheduler = builder.build(bench.max_epochs(), self.seed);
-        let searcher = searcher_for(&self.searcher, self.seed);
-        let mut rules: Vec<Box<dyn StoppingRule>> =
-            vec![Box::new(ConfigBudget(self.config_budget))];
-        if let Some(e) = self.epoch_budget {
-            rules.push(Box::new(EpochBudget(e)));
-        }
-        Ok(AskTell::new(scheduler, searcher, bench.space().clone(), rules))
-    }
-}
 
 /// Snapshot/compaction policy for a durable session.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -168,7 +79,7 @@ pub struct RecoveryReport {
 /// A registered tuning session: ask/tell core + journal + identity.
 pub struct Session {
     pub id: String,
-    pub spec: SessionSpec,
+    pub spec: ExperimentSpec,
     core: AskTell,
     journal: Option<Journal>,
     /// Events appended since creation/recovery (excluding the `create`
@@ -201,7 +112,7 @@ impl Session {
     /// journal's first event (when a journal path is given).
     pub fn create(
         id: &str,
-        spec: SessionSpec,
+        spec: ExperimentSpec,
         journal_path: Option<&Path>,
     ) -> Result<Session, ServiceError> {
         Self::create_with(id, spec, journal_path, SessionOptions::default())
@@ -210,7 +121,7 @@ impl Session {
     /// [`Session::create`] with an explicit snapshot/compaction policy.
     pub fn create_with(
         id: &str,
-        spec: SessionSpec,
+        spec: ExperimentSpec,
         journal_path: Option<&Path>,
         options: SessionOptions,
     ) -> Result<Session, ServiceError> {
@@ -292,7 +203,7 @@ impl Session {
         let spec_json = header
             .get("spec")
             .ok_or_else(|| ServiceError::Journal("create event missing spec".into()))?;
-        let spec = SessionSpec::from_json(spec_json).map_err(ServiceError::Spec)?;
+        let spec = ExperimentSpec::from_json(spec_json).map_err(ServiceError::Spec)?;
         let base = header.get("base").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
         let tail = &read.events[1..];
 
@@ -384,7 +295,7 @@ impl Session {
     fn snapshot_candidates(
         path: &Path,
         id: &str,
-        spec: &SessionSpec,
+        spec: &ExperimentSpec,
         base: usize,
     ) -> Vec<(usize, Json)> {
         journal::read_snapshots(&journal::snapshot_path(path))
@@ -396,7 +307,7 @@ impl Session {
                 if line.get("session").and_then(|v| v.as_str()) != Some(id) {
                     return None;
                 }
-                let line_spec = SessionSpec::from_json(line.get("spec")?).ok()?;
+                let line_spec = ExperimentSpec::from_json(line.get("spec")?).ok()?;
                 if line_spec != *spec {
                     return None;
                 }
@@ -685,7 +596,16 @@ impl Session {
         let stats = self.core.stats();
         let mut o = Json::obj();
         o.set("id", self.id.as_str())
-            .set("spec", self.spec.to_json())
+            // prefer the v1 shape when the spec is representable there,
+            // so pre-redesign workers read the right benchmark during a
+            // rolling upgrade; v2-only sessions (which old clients could
+            // never have created) carry the v2 shape
+            .set(
+                "spec",
+                self.spec
+                    .to_v1_compat_json()
+                    .unwrap_or_else(|| self.spec.to_json()),
+            )
             .set("scheduler", self.core.scheduler_name())
             .set("configs_sampled", snap.configs_sampled)
             .set("jobs_dispatched", snap.jobs_dispatched)
@@ -740,13 +660,10 @@ mod tests {
         dir.join(name)
     }
 
-    fn small_spec() -> SessionSpec {
-        SessionSpec {
-            bench: "lcbench-Fashion-MNIST".into(),
-            scheduler: "asha".into(),
-            config_budget: 8,
-            ..SessionSpec::default()
-        }
+    fn small_spec() -> ExperimentSpec {
+        let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha").unwrap();
+        spec.stop.config_budget = 8;
+        spec
     }
 
     /// Drive a session to completion with one synchronous worker.
@@ -770,32 +687,30 @@ mod tests {
 
     #[test]
     fn spec_json_roundtrip() {
-        let spec = SessionSpec {
-            bench: "pd1-wmt".into(),
-            scheduler: "pasha-stop".into(),
-            eta: 4,
-            searcher: SearcherKind::Bo,
-            seed: 42,
-            bench_seed: 7,
-            config_budget: 99,
-            epoch_budget: Some(1234),
-        };
+        let mut spec = ExperimentSpec::named("pd1-wmt", "pasha-stop").unwrap();
+        spec.set("scheduler.eta=4").unwrap();
+        spec.set("searcher.name=bo").unwrap();
+        spec.seed = 42;
+        spec.bench_seed = 7;
+        spec.stop.config_budget = 99;
+        spec.stop.epoch_budget = Some(1234);
         let j = spec.to_json();
-        let back = SessionSpec::from_json(&j).unwrap();
+        let back = ExperimentSpec::from_json(&j).unwrap();
         assert_eq!(spec, back);
-        // defaults fill missing fields
+        // sparse v1 payloads (old journal headers) still parse, with the
+        // legacy defaults filling the gaps
         let sparse = crate::util::json::parse("{\"bench\":\"nas-cifar100\"}").unwrap();
-        let s = SessionSpec::from_json(&sparse).unwrap();
-        assert_eq!(s.bench, "nas-cifar100");
-        assert_eq!(s.config_budget, 256);
-        assert!(s.epoch_budget.is_none());
+        let s = ExperimentSpec::from_json(&sparse).unwrap();
+        assert_eq!(s.bench.name, "nas-cifar100");
+        assert_eq!(s.stop.config_budget, 256);
+        assert!(s.stop.epoch_budget.is_none());
     }
 
     #[test]
     fn full_session_recovers_to_done_state() {
         let path = tmp("full.jsonl");
         let spec = small_spec();
-        let bench = bench_from_name(&spec.bench).unwrap();
+        let bench = spec.bench.build().unwrap();
         let mut s = Session::create("s0", spec.clone(), Some(&path)).unwrap();
         drive(&mut s, bench.as_ref(), spec.bench_seed);
         let best = s.core_ref().best().unwrap();
@@ -816,7 +731,7 @@ mod tests {
     fn readonly_recovery_never_touches_the_file() {
         let path = tmp("readonly.jsonl");
         let spec = small_spec();
-        let bench = bench_from_name(&spec.bench).unwrap();
+        let bench = spec.bench.build().unwrap();
         let mut s = Session::create("s0", spec.clone(), Some(&path)).unwrap();
         drive(&mut s, bench.as_ref(), spec.bench_seed);
         drop(s);
@@ -836,7 +751,7 @@ mod tests {
         // be refused, not silently mis-replayed.
         let path_a = tmp("seed-a.jsonl");
         let spec_a = small_spec();
-        let bench = bench_from_name(&spec_a.bench).unwrap();
+        let bench = spec_a.bench.build().unwrap();
         let mut a = Session::create("sa", spec_a.clone(), Some(&path_a)).unwrap();
         drive(&mut a, bench.as_ref(), spec_a.bench_seed);
         drop(a);
@@ -865,7 +780,7 @@ mod tests {
         assert_eq!(st.get("configs_sampled").unwrap().as_f64(), Some(0.0));
         assert_eq!(st.get("best_metric"), Some(&Json::Null));
         // after some work the best appears
-        let bench = bench_from_name("lcbench-Fashion-MNIST").unwrap();
+        let bench = crate::spec::BenchSpec::new("lcbench-Fashion-MNIST").build().unwrap();
         if let TrialAssignment::Run(job) = s.ask("w0").unwrap() {
             for e in job.from_epoch + 1..=job.milestone {
                 let m = bench.accuracy_at(&job.config, e, 0);
@@ -883,7 +798,7 @@ mod tests {
     fn snapshot_rotation_keeps_recovery_o_tail() {
         let path = tmp("snap-cycle.jsonl");
         let spec = small_spec();
-        let bench = bench_from_name(&spec.bench).unwrap();
+        let bench = spec.bench.build().unwrap();
         let options = SessionOptions::snapshot_every(8);
         let mut s = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
         drive(&mut s, bench.as_ref(), spec.bench_seed);
@@ -915,7 +830,7 @@ mod tests {
     fn torn_final_snapshot_falls_back_to_previous() {
         let path = tmp("snap-torn.jsonl");
         let spec = small_spec();
-        let bench = bench_from_name(&spec.bench).unwrap();
+        let bench = spec.bench.build().unwrap();
         // compaction off: the full tail stays available for any fallback
         let options = SessionOptions {
             snapshot_every: Some(8),
@@ -954,7 +869,7 @@ mod tests {
     fn compact_now_truncates_tail_to_header() {
         let path = tmp("compact-now.jsonl");
         let spec = small_spec();
-        let bench = bench_from_name(&spec.bench).unwrap();
+        let bench = spec.bench.build().unwrap();
         let mut s = Session::create("s0", spec.clone(), Some(&path)).unwrap();
         drive(&mut s, bench.as_ref(), spec.bench_seed);
         let total = s.events_total();
@@ -976,9 +891,9 @@ mod tests {
 
     #[test]
     fn bad_spec_is_rejected() {
-        let spec = SessionSpec {
-            bench: "no-such-bench".into(),
-            ..SessionSpec::default()
+        let spec = ExperimentSpec {
+            bench: crate::spec::BenchSpec::new("no-such-bench"),
+            ..ExperimentSpec::default()
         };
         let err = match Session::create("x", spec, None) {
             Ok(_) => panic!("bad spec must fail"),

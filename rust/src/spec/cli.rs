@@ -1,0 +1,337 @@
+//! Lowering of CLI flags into an [`ExperimentSpec`] — shared by
+//! `pasha run` and `pasha worker --create` so every flag combination and
+//! every spec file land on the same construction path (and so the
+//! equivalence of the two is testable from the library).
+
+use super::{BenchSpec, ExecBackendKind, ExperimentSpec, SchedulerSpec, SearcherSpec};
+use crate::ranking::RankingSpec;
+use std::collections::HashMap;
+
+/// The canonical set of CLI flags that lower into an [`ExperimentSpec`]:
+/// everything [`apply_flag_overrides`] understands, plus `spec` (the
+/// `--spec FILE` loader the CLI front-end handles). Commands validate
+/// their flag sets against this one list so it cannot drift from the
+/// lowering code next to it.
+pub const SPEC_FLAGS: &[&str] = &[
+    "spec",
+    "bench",
+    "scheduler",
+    "r-min",
+    "eta",
+    "ranking",
+    "searcher",
+    "budget",
+    "seed",
+    "bench-seed",
+    "workers",
+    "backend",
+    "epoch-budget",
+    "time-budget",
+];
+
+/// Parse the `--ranking` shorthand into a [`RankingSpec`]:
+///
+/// ```text
+/// plain | noisy | noisy:PCT | soft:EPS | sigma:MULT | mean-gap |
+/// median-gap | rbo:P | rbo:P,T | rrr:P,T | arrr:P,T
+/// ```
+pub fn parse_ranking(s: &str) -> Result<RankingSpec, String> {
+    let (kind, args) = match s.split_once(':') {
+        Some((k, a)) => (k, Some(a)),
+        None => (s, None),
+    };
+    let one = |args: Option<&str>, what: &str| -> Result<f64, String> {
+        let a = args.ok_or_else(|| format!("ranking '{kind}' needs :{what}"))?;
+        a.parse::<f64>()
+            .map_err(|_| format!("ranking '{kind}': invalid {what} '{a}'"))
+    };
+    let pair = |args: Option<&str>, d0: f64, d1: f64| -> Result<(f64, f64), String> {
+        match args {
+            None => Ok((d0, d1)),
+            Some(a) => {
+                let mut it = a.splitn(2, ',');
+                let p = it
+                    .next()
+                    .unwrap_or("")
+                    .parse::<f64>()
+                    .map_err(|_| format!("ranking '{kind}': invalid p in '{a}'"))?;
+                let t = match it.next() {
+                    None => d1,
+                    Some(t) => t
+                        .parse::<f64>()
+                        .map_err(|_| format!("ranking '{kind}': invalid t in '{a}'"))?,
+                };
+                Ok((p, t))
+            }
+        }
+    };
+    let spec = match kind {
+        "plain" | "direct" => RankingSpec::Direct,
+        "noisy" => RankingSpec::NoiseAdaptive {
+            percentile: match args {
+                None => 90.0,
+                Some(_) => one(args, "percentile")?,
+            },
+        },
+        "soft" => RankingSpec::SoftFixed {
+            epsilon: one(args, "epsilon")?,
+        },
+        "sigma" => RankingSpec::SoftSigma {
+            mult: one(args, "multiple")?,
+        },
+        "mean-gap" => RankingSpec::SoftMeanGap,
+        "median-gap" => RankingSpec::SoftMedianGap,
+        "rbo" => {
+            let (p, t) = pair(args, 0.5, 0.5)?;
+            RankingSpec::Rbo { p, t }
+        }
+        "rrr" => {
+            let (p, t) = pair(args, 0.5, 0.05)?;
+            RankingSpec::Rrr { p, t }
+        }
+        "arrr" => {
+            let (p, t) = pair(args, 1.0, 0.05)?;
+            RankingSpec::Arrr { p, t }
+        }
+        other => {
+            return Err(format!(
+                "unknown ranking '{other}' (expected plain, noisy[:PCT], soft:EPS, \
+                 sigma:MULT, mean-gap, median-gap, rbo:P[,T], rrr:P[,T], arrr:P[,T])"
+            ));
+        }
+    };
+    Ok(spec)
+}
+
+fn num_flag<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    name: &str,
+) -> Result<Option<T>, String> {
+    match flags.get(name) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| format!("invalid --{name} '{v}'")),
+    }
+}
+
+/// Apply every recognized CLI flag onto `spec`, in place. Flags compose
+/// with whatever the spec already holds (e.g. from `--spec exp.json`):
+/// `--eta 4` alone re-derives the scheduler with its current name,
+/// `r_min`, and ranking. The result is validated.
+///
+/// Recognized flags: `bench`, `scheduler`, `r-min`, `eta`, `ranking`,
+/// `searcher`, `budget`, `seed`, `bench-seed`, `workers`, `backend`,
+/// `epoch-budget`, `time-budget`.
+pub fn apply_flag_overrides(
+    spec: &mut ExperimentSpec,
+    flags: &HashMap<String, String>,
+) -> Result<(), String> {
+    if let Some(b) = flags.get("bench") {
+        spec.bench = BenchSpec::new(b);
+    }
+    let name = flags.get("scheduler").map(String::as_str);
+    let r_min: Option<u32> = num_flag(flags, "r-min")?;
+    let eta: Option<u32> = num_flag(flags, "eta")?;
+    let ranking = match flags.get("ranking") {
+        None => None,
+        Some(r) => Some(parse_ranking(r)?),
+    };
+    if name.is_some() || r_min.is_some() || eta.is_some() || ranking.is_some() {
+        // rename first (carries every shared knob, including a
+        // fixed-epoch count), then overlay the explicitly-flagged knobs
+        let renamed = match name {
+            Some(n) => spec.scheduler.renamed(n)?,
+            None => spec.scheduler.clone(),
+        };
+        let r_min = r_min.or_else(|| renamed.r_min()).unwrap_or(1);
+        let eta = eta.or_else(|| renamed.eta()).unwrap_or(3);
+        let ranking = ranking
+            .or_else(|| renamed.ranking().cloned())
+            .unwrap_or_default();
+        spec.scheduler = match renamed {
+            // no r_min/eta/ranking to overlay on these families
+            SchedulerSpec::FixedEpoch { .. } | SchedulerSpec::RandomBaseline => renamed,
+            other => SchedulerSpec::from_name(other.wire_name(), r_min, eta, ranking)?,
+        };
+        // A flag the selected family cannot honor is an error, not dead
+        // configuration. (`--eta` stays accepted-and-ignored for the
+        // baselines: the legacy CLI always threaded it through.)
+        if flags.contains_key("ranking") && spec.scheduler.ranking().is_none() {
+            return Err(format!(
+                "--ranking applies to the PASHA variants only (scheduler '{}' \
+                 has no ranking function)",
+                spec.scheduler.wire_name()
+            ));
+        }
+        if flags.contains_key("r-min") && spec.scheduler.r_min().is_none() {
+            return Err(format!(
+                "--r-min does not apply to scheduler '{}'",
+                spec.scheduler.wire_name()
+            ));
+        }
+    }
+    if let Some(s) = flags.get("searcher") {
+        spec.searcher = SearcherSpec::from_name(s)?;
+    }
+    if let Some(b) = num_flag::<usize>(flags, "budget")? {
+        spec.stop.config_budget = b;
+    }
+    if let Some(s) = num_flag::<u64>(flags, "seed")? {
+        spec.seed = s;
+    }
+    if let Some(s) = num_flag::<u64>(flags, "bench-seed")? {
+        spec.bench_seed = s;
+    }
+    if let Some(w) = num_flag::<usize>(flags, "workers")? {
+        spec.exec.workers = w;
+    }
+    if let Some(b) = flags.get("backend") {
+        spec.exec.backend = ExecBackendKind::parse(b)
+            .ok_or_else(|| format!("invalid --backend '{b}' (expected sim|pool)"))?;
+    }
+    if let Some(e) = num_flag::<u64>(flags, "epoch-budget")? {
+        spec.stop.epoch_budget = Some(e);
+    }
+    if let Some(t) = num_flag::<f64>(flags, "time-budget")? {
+        spec.stop.time_budget = Some(t);
+    }
+    spec.validate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::DecisionMode;
+
+    fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn ranking_shorthand_covers_the_paper_family() {
+        assert_eq!(parse_ranking("plain").unwrap(), RankingSpec::Direct);
+        assert_eq!(
+            parse_ranking("noisy").unwrap(),
+            RankingSpec::NoiseAdaptive { percentile: 90.0 }
+        );
+        assert_eq!(
+            parse_ranking("noisy:75").unwrap(),
+            RankingSpec::NoiseAdaptive { percentile: 75.0 }
+        );
+        assert_eq!(
+            parse_ranking("soft:0.025").unwrap(),
+            RankingSpec::SoftFixed { epsilon: 0.025 }
+        );
+        assert_eq!(
+            parse_ranking("sigma:2").unwrap(),
+            RankingSpec::SoftSigma { mult: 2.0 }
+        );
+        assert_eq!(parse_ranking("mean-gap").unwrap(), RankingSpec::SoftMeanGap);
+        assert_eq!(
+            parse_ranking("rbo:0.9").unwrap(),
+            RankingSpec::Rbo { p: 0.9, t: 0.5 }
+        );
+        assert_eq!(
+            parse_ranking("rbo:0.9,0.4").unwrap(),
+            RankingSpec::Rbo { p: 0.9, t: 0.4 }
+        );
+        assert_eq!(
+            parse_ranking("rrr:0.5,0.05").unwrap(),
+            RankingSpec::Rrr { p: 0.5, t: 0.05 }
+        );
+        assert!(parse_ranking("soft").is_err());
+        assert!(parse_ranking("wibble").is_err());
+    }
+
+    #[test]
+    fn flags_lower_onto_the_spec() {
+        let mut spec = ExperimentSpec::default();
+        apply_flag_overrides(
+            &mut spec,
+            &flags(&[
+                ("bench", "nas-cifar100"),
+                ("scheduler", "pasha-stop"),
+                ("r-min", "2"),
+                ("eta", "4"),
+                ("ranking", "soft:0.025"),
+                ("searcher", "bo"),
+                ("budget", "64"),
+                ("seed", "5"),
+                ("workers", "2"),
+                ("epoch-budget", "500"),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(spec.bench.name, "nas-cifar100");
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Pasha {
+                r_min: 2,
+                eta: 4,
+                mode: DecisionMode::Stop,
+                ranking: RankingSpec::SoftFixed { epsilon: 0.025 },
+            }
+        );
+        assert!(matches!(spec.searcher, SearcherSpec::Bo(_)));
+        assert_eq!(spec.stop.config_budget, 64);
+        assert_eq!(spec.seed, 5);
+        assert_eq!(spec.exec.workers, 2);
+        assert_eq!(spec.stop.epoch_budget, Some(500));
+    }
+
+    #[test]
+    fn partial_scheduler_flags_compose_with_current_state() {
+        let mut spec = ExperimentSpec::default();
+        spec.set("scheduler.ranking=rbo:0.9").unwrap();
+        // --eta alone must keep the name and ranking already in the spec
+        apply_flag_overrides(&mut spec, &flags(&[("eta", "4")])).unwrap();
+        assert_eq!(spec.scheduler.wire_name(), "pasha");
+        assert_eq!(spec.scheduler.eta(), Some(4));
+        assert_eq!(
+            spec.scheduler.ranking(),
+            Some(&RankingSpec::Rbo { p: 0.9, t: 0.5 })
+        );
+    }
+
+    #[test]
+    fn invalid_flags_error_by_name() {
+        let mut spec = ExperimentSpec::default();
+        let err = apply_flag_overrides(&mut spec, &flags(&[("eta", "x")])).unwrap_err();
+        assert!(err.contains("--eta"), "{err}");
+        let err = apply_flag_overrides(&mut spec, &flags(&[("eta", "1")])).unwrap_err();
+        assert!(err.contains("scheduler.eta"), "{err}");
+        let err =
+            apply_flag_overrides(&mut spec, &flags(&[("scheduler", "sgd")])).unwrap_err();
+        assert!(err.contains("sgd"), "{err}");
+    }
+
+    #[test]
+    fn flags_the_family_cannot_honor_are_errors() {
+        // --ranking on a non-PASHA scheduler would be silently dead
+        let mut spec = ExperimentSpec::default();
+        let err = apply_flag_overrides(
+            &mut spec,
+            &flags(&[("scheduler", "asha"), ("ranking", "soft:0.5")]),
+        )
+        .unwrap_err();
+        assert!(err.contains("--ranking"), "{err}");
+        // --r-min on the baselines likewise
+        let mut spec = ExperimentSpec::default();
+        let err = apply_flag_overrides(
+            &mut spec,
+            &flags(&[("scheduler", "random"), ("r-min", "2")]),
+        )
+        .unwrap_err();
+        assert!(err.contains("--r-min"), "{err}");
+        // legacy compat: --eta is still accepted (and unused) there
+        let mut spec = ExperimentSpec::default();
+        apply_flag_overrides(&mut spec, &flags(&[("scheduler", "1-epoch"), ("eta", "3")]))
+            .unwrap();
+        assert_eq!(spec.scheduler.wire_name(), "1-epoch");
+    }
+}

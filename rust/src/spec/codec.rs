@@ -1,0 +1,560 @@
+//! Strict JSON codec for the v2 [`ExperimentSpec`] wire format.
+//!
+//! Serialization is deterministic: object keys are alphabetically sorted
+//! (the [`Json`] writer's `BTreeMap` ordering), integers print without a
+//! fraction, and `to_string_compact` output is byte-stable — which is
+//! what the committed golden fixtures in `tests/fixtures/` pin down.
+//!
+//! Parsing is strict through [`Fields`]: every recognized key is marked
+//! as consumed, and any leftover key is an error naming the full field
+//! path (`unknown field 'scheduler.modee'`). Values are type- and
+//! range-checked with errors that also name the field. Omitted keys take
+//! the documented defaults — strictness is about rejecting what we do
+//! *not* understand, not about forcing every knob to be spelled out.
+
+use super::{
+    BenchSpec, DecisionMode, ExecBackendKind, ExecSpec, ExperimentSpec, SchedulerSpec,
+    SearcherSpec, StopRules, SPEC_VERSION,
+};
+use crate::ranking::RankingSpec;
+use crate::searcher::bo::BoConfig;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A strict view over one JSON object: tracks which keys were consumed
+/// so [`Fields::finish`] can reject the rest by name.
+pub(crate) struct Fields<'a> {
+    /// Dotted path prefix for error messages (`""` at the top level,
+    /// `"scheduler."` inside the scheduler object, …).
+    prefix: String,
+    map: &'a BTreeMap<String, Json>,
+    seen: BTreeSet<&'a str>,
+}
+
+impl<'a> Fields<'a> {
+    pub(crate) fn new(j: &'a Json, prefix: &str) -> Result<Fields<'a>, String> {
+        match j {
+            Json::Obj(map) => Ok(Fields {
+                prefix: prefix.to_string(),
+                map,
+                seen: BTreeSet::new(),
+            }),
+            _ => Err(format!(
+                "field '{}': must be an object",
+                prefix.trim_end_matches('.')
+            )),
+        }
+    }
+
+    fn path(&self, key: &str) -> String {
+        format!("{}{key}", self.prefix)
+    }
+
+    /// Mark `key` consumed and fetch it. `null` counts as absent.
+    fn take(&mut self, key: &'a str) -> Option<&'a Json> {
+        self.seen.insert(key);
+        match self.map.get(key) {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(v),
+        }
+    }
+
+    pub(crate) fn opt_str(&mut self, key: &'a str) -> Result<Option<String>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(Json::Str(s)) => Ok(Some(s.clone())),
+            Some(_) => Err(format!("field '{}': must be a string", self.path(key))),
+        }
+    }
+
+    pub(crate) fn str_or(&mut self, key: &'a str, default: &str) -> Result<String, String> {
+        Ok(self.opt_str(key)?.unwrap_or_else(|| default.to_string()))
+    }
+
+    pub(crate) fn opt_f64(&mut self, key: &'a str) -> Result<Option<f64>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(Json::Num(n)) => Ok(Some(*n)),
+            Some(_) => Err(format!("field '{}': must be a number", self.path(key))),
+        }
+    }
+
+    pub(crate) fn f64_or(&mut self, key: &'a str, default: f64) -> Result<f64, String> {
+        Ok(self.opt_f64(key)?.unwrap_or(default))
+    }
+
+    fn integer(&self, key: &str, v: f64) -> Result<u64, String> {
+        if v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v <= 2f64.powi(53) {
+            Ok(v as u64)
+        } else {
+            Err(format!(
+                "field '{}': must be a non-negative integer (got {v})",
+                self.path(key)
+            ))
+        }
+    }
+
+    pub(crate) fn opt_u64(&mut self, key: &'a str) -> Result<Option<u64>, String> {
+        match self.opt_f64(key)? {
+            None => Ok(None),
+            Some(v) => Ok(Some(self.integer(key, v)?)),
+        }
+    }
+
+    pub(crate) fn u64_or(&mut self, key: &'a str, default: u64) -> Result<u64, String> {
+        Ok(self.opt_u64(key)?.unwrap_or(default))
+    }
+
+    pub(crate) fn u32_or(&mut self, key: &'a str, default: u32) -> Result<u32, String> {
+        match self.opt_u64(key)? {
+            None => Ok(default),
+            Some(v) if v <= u32::MAX as u64 => Ok(v as u32),
+            Some(v) => Err(format!(
+                "field '{}': {v} is out of range for a 32-bit integer",
+                self.path(key)
+            )),
+        }
+    }
+
+    pub(crate) fn usize_or(&mut self, key: &'a str, default: usize) -> Result<usize, String> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    /// Consume a nested object, returning `None` when absent.
+    pub(crate) fn opt_obj(&mut self, key: &'a str) -> Result<Option<Fields<'a>>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => Fields::new(v, &format!("{}.", self.path(key))).map(Some),
+        }
+    }
+
+    /// Error on every key that was present but never consumed.
+    pub(crate) fn finish(self) -> Result<(), String> {
+        let unknown: Vec<String> = self
+            .map
+            .keys()
+            .filter(|k| !self.seen.contains(k.as_str()))
+            .map(|k| format!("'{}{}'", self.prefix, k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            let expected: Vec<&str> = self.seen.iter().copied().collect();
+            Err(format!(
+                "unknown field {} (expected one of: {})",
+                unknown.join(", "),
+                expected.join(", ")
+            ))
+        }
+    }
+}
+
+pub(crate) fn to_json(spec: &ExperimentSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("version", SPEC_VERSION)
+        .set("bench", bench_to_json(&spec.bench))
+        .set("scheduler", scheduler_to_json(&spec.scheduler))
+        .set("searcher", searcher_to_json(&spec.searcher))
+        .set("exec", exec_to_json(&spec.exec))
+        .set("stop", stop_to_json(&spec.stop))
+        .set("seed", spec.seed as f64)
+        .set("bench_seed", spec.bench_seed as f64);
+    o
+}
+
+pub(crate) fn from_v2_json(j: &Json) -> Result<ExperimentSpec, String> {
+    let mut f = Fields::new(j, "")?;
+    let version = f.u32_or("version", SPEC_VERSION)?;
+    if version != SPEC_VERSION {
+        return Err(format!(
+            "field 'version': unsupported spec version {version} (this build reads v1 and v2)"
+        ));
+    }
+    let bench = match f.opt_obj("bench")? {
+        None => BenchSpec::new("nas-cifar10"),
+        Some(b) => bench_from_fields(b)?,
+    };
+    let scheduler = match f.opt_obj("scheduler")? {
+        None => ExperimentSpec::default().scheduler,
+        Some(s) => scheduler_from_fields(s)?,
+    };
+    let searcher = match f.opt_obj("searcher")? {
+        None => SearcherSpec::Random,
+        Some(s) => searcher_from_fields(s)?,
+    };
+    let exec = match f.opt_obj("exec")? {
+        None => ExecSpec::default(),
+        Some(e) => exec_from_fields(e)?,
+    };
+    let stop = match f.opt_obj("stop")? {
+        None => StopRules::default(),
+        Some(s) => stop_from_fields(s)?,
+    };
+    let seed = f.u64_or("seed", 0)?;
+    let bench_seed = f.u64_or("bench_seed", 0)?;
+    f.finish()?;
+    Ok(ExperimentSpec {
+        bench,
+        scheduler,
+        searcher,
+        exec,
+        stop,
+        seed,
+        bench_seed,
+    })
+}
+
+fn bench_to_json(b: &BenchSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("name", b.name.as_str());
+    o
+}
+
+fn bench_from_fields(mut f: Fields) -> Result<BenchSpec, String> {
+    let name = f.str_or("name", "nas-cifar10")?;
+    f.finish()?;
+    Ok(BenchSpec::new(&name))
+}
+
+fn scheduler_to_json(s: &SchedulerSpec) -> Json {
+    let mut o = Json::obj();
+    match s {
+        SchedulerSpec::Asha { r_min, eta, mode } => {
+            o.set("name", "asha")
+                .set("mode", mode.as_str())
+                .set("r_min", *r_min)
+                .set("eta", *eta);
+        }
+        SchedulerSpec::Pasha {
+            r_min,
+            eta,
+            mode,
+            ranking,
+        } => {
+            o.set("name", "pasha")
+                .set("mode", mode.as_str())
+                .set("r_min", *r_min)
+                .set("eta", *eta)
+                .set("ranking", ranking_to_json(ranking));
+        }
+        SchedulerSpec::Sh { r_min, eta } => {
+            o.set("name", "sh").set("r_min", *r_min).set("eta", *eta);
+        }
+        SchedulerSpec::Hyperband { r_min, eta } => {
+            o.set("name", "hyperband")
+                .set("r_min", *r_min)
+                .set("eta", *eta);
+        }
+        SchedulerSpec::FixedEpoch { epochs } => {
+            o.set("name", "1-epoch").set("epochs", *epochs);
+        }
+        SchedulerSpec::RandomBaseline => {
+            o.set("name", "random");
+        }
+    }
+    o
+}
+
+fn scheduler_from_fields(mut f: Fields) -> Result<SchedulerSpec, String> {
+    let name = f.str_or("name", "pasha")?;
+    // `asha-stop`-style names carry their mode; an explicit `mode` key
+    // must not contradict them.
+    let (base, name_mode) = match name.as_str() {
+        "asha-stop" => ("asha", Some(DecisionMode::Stop)),
+        "pasha-stop" => ("pasha", Some(DecisionMode::Stop)),
+        other => (other, None),
+    };
+    let mode = match (name_mode, f.opt_str("mode")?) {
+        (Some(_), Some(_)) => {
+            return Err(format!(
+                "field 'scheduler.mode': conflicts with scheduler name '{name}' \
+                 (use name 'asha'/'pasha' with an explicit mode)"
+            ));
+        }
+        (Some(m), None) => m,
+        (None, Some(s)) => DecisionMode::parse(&s).ok_or_else(|| {
+            format!("field 'scheduler.mode': expected 'promote' or 'stop' (got '{s}')")
+        })?,
+        (None, None) => DecisionMode::Promote,
+    };
+    let spec = match base {
+        "asha" => SchedulerSpec::Asha {
+            r_min: f.u32_or("r_min", 1)?,
+            eta: f.u32_or("eta", 3)?,
+            mode,
+        },
+        "pasha" => {
+            let ranking = match f.opt_obj("ranking")? {
+                None => RankingSpec::default(),
+                Some(r) => ranking_from_fields(r)?,
+            };
+            SchedulerSpec::Pasha {
+                r_min: f.u32_or("r_min", 1)?,
+                eta: f.u32_or("eta", 3)?,
+                mode,
+                ranking,
+            }
+        }
+        "sh" => SchedulerSpec::Sh {
+            r_min: f.u32_or("r_min", 1)?,
+            eta: f.u32_or("eta", 3)?,
+        },
+        "hyperband" => SchedulerSpec::Hyperband {
+            r_min: f.u32_or("r_min", 1)?,
+            eta: f.u32_or("eta", 3)?,
+        },
+        "1-epoch" => SchedulerSpec::FixedEpoch {
+            epochs: f.u32_or("epochs", 1)?,
+        },
+        "random" => SchedulerSpec::RandomBaseline,
+        other => return Err(format!("field 'scheduler.name': unknown scheduler '{other}'")),
+    };
+    if mode == DecisionMode::Stop && !matches!(base, "asha" | "pasha") {
+        return Err(format!(
+            "field 'scheduler.mode': '{base}' has no stopping variant"
+        ));
+    }
+    f.finish()?;
+    Ok(spec)
+}
+
+pub(crate) fn ranking_to_json(r: &RankingSpec) -> Json {
+    let mut o = Json::obj();
+    match *r {
+        RankingSpec::NoiseAdaptive { percentile } => {
+            o.set("kind", "noisy").set("percentile", percentile);
+        }
+        RankingSpec::Direct => {
+            o.set("kind", "plain");
+        }
+        RankingSpec::SoftFixed { epsilon } => {
+            o.set("kind", "soft").set("epsilon", epsilon);
+        }
+        RankingSpec::SoftSigma { mult } => {
+            o.set("kind", "sigma").set("mult", mult);
+        }
+        RankingSpec::SoftMeanGap => {
+            o.set("kind", "mean-gap");
+        }
+        RankingSpec::SoftMedianGap => {
+            o.set("kind", "median-gap");
+        }
+        RankingSpec::Rbo { p, t } => {
+            o.set("kind", "rbo").set("p", p).set("t", t);
+        }
+        RankingSpec::Rrr { p, t } => {
+            o.set("kind", "rrr").set("p", p).set("t", t);
+        }
+        RankingSpec::Arrr { p, t } => {
+            o.set("kind", "arrr").set("p", p).set("t", t);
+        }
+    }
+    o
+}
+
+fn ranking_from_fields(mut f: Fields) -> Result<RankingSpec, String> {
+    let kind = f.str_or("kind", "noisy")?;
+    let spec = match kind.as_str() {
+        "noisy" => RankingSpec::NoiseAdaptive {
+            percentile: f.f64_or("percentile", 90.0)?,
+        },
+        "plain" => RankingSpec::Direct,
+        "soft" => RankingSpec::SoftFixed {
+            epsilon: f.f64_or("epsilon", 0.0)?,
+        },
+        "sigma" => RankingSpec::SoftSigma {
+            mult: f.f64_or("mult", 2.0)?,
+        },
+        "mean-gap" => RankingSpec::SoftMeanGap,
+        "median-gap" => RankingSpec::SoftMedianGap,
+        "rbo" => RankingSpec::Rbo {
+            p: f.f64_or("p", 0.5)?,
+            t: f.f64_or("t", 0.5)?,
+        },
+        "rrr" => RankingSpec::Rrr {
+            p: f.f64_or("p", 0.5)?,
+            t: f.f64_or("t", 0.05)?,
+        },
+        "arrr" => RankingSpec::Arrr {
+            p: f.f64_or("p", 1.0)?,
+            t: f.f64_or("t", 0.05)?,
+        },
+        other => {
+            return Err(format!(
+                "field 'scheduler.ranking.kind': unknown ranking function '{other}' \
+                 (expected noisy, plain, soft, sigma, mean-gap, median-gap, rbo, rrr, arrr)"
+            ));
+        }
+    };
+    f.finish()?;
+    Ok(spec)
+}
+
+fn searcher_to_json(s: &SearcherSpec) -> Json {
+    let mut o = Json::obj();
+    match s {
+        SearcherSpec::Random => {
+            o.set("name", "random");
+        }
+        SearcherSpec::Bo(cfg) => {
+            o.set("name", "bo")
+                .set("min_points", cfg.min_points)
+                .set("num_candidates", cfg.num_candidates)
+                .set("random_fraction", cfg.random_fraction)
+                .set("lengthscale", cfg.lengthscale)
+                .set("signal_var", cfg.signal_var)
+                .set("noise_var", cfg.noise_var);
+        }
+    }
+    o
+}
+
+fn searcher_from_fields(mut f: Fields) -> Result<SearcherSpec, String> {
+    let name = f.str_or("name", "random")?;
+    let spec = match name.as_str() {
+        "random" => SearcherSpec::Random,
+        "bo" => {
+            let d = BoConfig::default();
+            SearcherSpec::Bo(BoConfig {
+                min_points: f.usize_or("min_points", d.min_points)?,
+                num_candidates: f.usize_or("num_candidates", d.num_candidates)?,
+                random_fraction: f.f64_or("random_fraction", d.random_fraction)?,
+                lengthscale: f.f64_or("lengthscale", d.lengthscale)?,
+                signal_var: f.f64_or("signal_var", d.signal_var)?,
+                noise_var: f.f64_or("noise_var", d.noise_var)?,
+            })
+        }
+        other => return Err(format!("field 'searcher.name': unknown searcher '{other}'")),
+    };
+    f.finish()?;
+    Ok(spec)
+}
+
+fn exec_to_json(e: &ExecSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("workers", e.workers).set("backend", e.backend.as_str());
+    o
+}
+
+fn exec_from_fields(mut f: Fields) -> Result<ExecSpec, String> {
+    let backend_name = f.str_or("backend", "sim")?;
+    let backend = ExecBackendKind::parse(&backend_name).ok_or_else(|| {
+        format!("field 'exec.backend': expected 'sim' or 'pool' (got '{backend_name}')")
+    })?;
+    let workers = f.usize_or("workers", 4)?;
+    f.finish()?;
+    Ok(ExecSpec { workers, backend })
+}
+
+fn stop_to_json(s: &StopRules) -> Json {
+    let mut o = Json::obj();
+    o.set("config_budget", s.config_budget);
+    if let Some(e) = s.epoch_budget {
+        o.set("epoch_budget", e as f64);
+    }
+    if let Some(t) = s.time_budget {
+        o.set("time_budget", t);
+    }
+    o
+}
+
+fn stop_from_fields(mut f: Fields) -> Result<StopRules, String> {
+    let rules = StopRules {
+        config_budget: f.usize_or("config_budget", 256)?,
+        epoch_budget: f.opt_u64("epoch_budget")?,
+        time_budget: f.opt_f64("time_budget")?,
+    };
+    f.finish()?;
+    Ok(rules)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn unknown_keys_are_rejected_with_paths() {
+        let j = parse(r#"{"version":2,"stop":{"confg_budget":64}}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'stop.confg_budget'"), "{err}");
+
+        let j = parse(r#"{"version":2,"scheduler":{"name":"pasha","modee":"stop"}}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'scheduler.modee'"), "{err}");
+
+        let j = parse(r#"{"version":2,"extra":1}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'extra'"), "{err}");
+    }
+
+    #[test]
+    fn bad_types_and_versions_are_rejected() {
+        let j = parse(r#"{"version":3}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+
+        let j = parse(r#"{"version":2,"seed":-1}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'seed'"), "{err}");
+
+        let j = parse(r#"{"version":2,"bench":"nas-cifar10"}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'bench'"), "{err}");
+
+        let j = parse(r#"{"version":2,"stop":{"config_budget":1.5}}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'stop.config_budget'"), "{err}");
+    }
+
+    #[test]
+    fn partial_v2_payloads_take_defaults() {
+        let j = parse(r#"{"version":2,"bench":{"name":"pd1-wmt"}}"#).unwrap();
+        let spec = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(spec.bench.name, "pd1-wmt");
+        assert_eq!(spec.stop.config_budget, 256);
+        assert_eq!(spec.scheduler.wire_name(), "pasha");
+        assert_eq!(spec.exec.workers, 4);
+    }
+
+    #[test]
+    fn stop_suffix_names_and_mode_key_agree() {
+        let j = parse(r#"{"version":2,"scheduler":{"name":"asha-stop"}}"#).unwrap();
+        let spec = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(spec.scheduler.wire_name(), "asha-stop");
+
+        let j = parse(r#"{"version":2,"scheduler":{"name":"asha","mode":"stop"}}"#).unwrap();
+        let spec2 = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(spec.scheduler, spec2.scheduler);
+
+        let j =
+            parse(r#"{"version":2,"scheduler":{"name":"asha-stop","mode":"stop"}}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("scheduler.mode"), "{err}");
+
+        let j = parse(r#"{"version":2,"scheduler":{"name":"sh","mode":"stop"}}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("no stopping variant"), "{err}");
+    }
+
+    #[test]
+    fn every_ranking_kind_round_trips() {
+        let kinds = [
+            RankingSpec::NoiseAdaptive { percentile: 90.0 },
+            RankingSpec::Direct,
+            RankingSpec::SoftFixed { epsilon: 0.025 },
+            RankingSpec::SoftSigma { mult: 2.0 },
+            RankingSpec::SoftMeanGap,
+            RankingSpec::SoftMedianGap,
+            RankingSpec::Rbo { p: 0.9, t: 0.5 },
+            RankingSpec::Rrr { p: 0.5, t: 0.05 },
+            RankingSpec::Arrr { p: 1.0, t: 0.05 },
+        ];
+        for r in kinds {
+            let j = ranking_to_json(&r);
+            let f = Fields::new(&j, "scheduler.ranking.").unwrap();
+            let back = ranking_from_fields(f).unwrap();
+            assert_eq!(r, back, "{}", j.to_string_compact());
+        }
+    }
+}

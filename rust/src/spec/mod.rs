@@ -1,0 +1,953 @@
+//! The declarative experiment specification — the single construction
+//! path for every way of running PASHA.
+//!
+//! An [`ExperimentSpec`] is a versioned, JSON-round-trippable description
+//! of one experiment: which benchmark ([`BenchSpec`]), which decision
+//! policy with *all* of the paper's knobs ([`SchedulerSpec`]: `r_min`,
+//! η, the ranking function, promote-vs-stop mode), which proposal
+//! strategy ([`SearcherSpec`], including the BO hyperparameters), how to
+//! execute ([`ExecSpec`]: workers, sim/pool backend), and when to stop
+//! ([`StopRules`]). The CLI (`pasha run --spec exp.json`), the in-process
+//! tuner ([`crate::tuner::Tuner::run`]), and the tuning service's
+//! `create` command all lower into this one type, so an experiment is a
+//! durable, diffable artifact rather than a combination of code paths.
+//!
+//! Parsing is *strict*: unknown keys and out-of-range values are errors
+//! that name the offending field (see [`ExperimentSpec::from_json`]).
+//! The wire format is versioned — `"version": 2` is the current schema;
+//! v1 payloads (the flat `SessionSpec` shape of earlier journals) are
+//! detected by the absence of a `version` key and migrated losslessly,
+//! so every existing journal and snapshot recovers byte-identically.
+
+mod cli;
+mod codec;
+mod v1;
+
+pub use cli::{apply_flag_overrides, parse_ranking, SPEC_FLAGS};
+
+use crate::benchmarks::lcbench::{self, LcBench};
+use crate::benchmarks::nasbench201::NasBench201;
+use crate::benchmarks::pd1::Pd1;
+use crate::benchmarks::Benchmark;
+use crate::executor::engine::{ConfigBudget, EpochBudget, StoppingRule};
+use crate::ranking::RankingSpec;
+use crate::scheduler::asha::AshaBuilder;
+use crate::scheduler::asktell::AskTell;
+use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
+use crate::scheduler::hyperband::HyperbandBuilder;
+use crate::scheduler::pasha::PashaBuilder;
+use crate::scheduler::sh::SyncShBuilder;
+use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
+use crate::scheduler::SchedulerBuilder;
+use crate::searcher::bo::{BoConfig, BoSearcher};
+use crate::searcher::random::RandomSearcher;
+use crate::searcher::Searcher;
+use crate::util::json::Json;
+use crate::util::rng::mix;
+
+/// Current wire-format version written by [`ExperimentSpec::to_json`].
+pub const SPEC_VERSION: u32 = 2;
+
+/// Which benchmark substrate an experiment runs against, by wire name
+/// (`nas-cifar10`, `pd1-wmt`, `lcbench-<dataset>`, …).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BenchSpec {
+    pub name: String,
+}
+
+impl BenchSpec {
+    pub fn new(name: &str) -> BenchSpec {
+        BenchSpec {
+            name: name.to_string(),
+        }
+    }
+
+    /// Check the name resolves without constructing the benchmark.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.name.as_str() {
+            "nas-cifar10" | "nas-cifar100" | "nas-imagenet16" | "pd1-wmt" | "pd1-imagenet" => {
+                Ok(())
+            }
+            other => match other.strip_prefix("lcbench-") {
+                Some(ds) if lcbench::DATASETS.iter().any(|(n, _)| *n == ds) => Ok(()),
+                Some(ds) => Err(format!(
+                    "field 'bench.name': unknown LCBench dataset '{ds}'"
+                )),
+                None => Err(format!("field 'bench.name': unknown benchmark '{other}'")),
+            },
+        }
+    }
+
+    /// Construct the benchmark this spec names.
+    pub fn build(&self) -> Result<Box<dyn Benchmark>, String> {
+        self.validate()?;
+        Ok(match self.name.as_str() {
+            "nas-cifar10" => Box::new(NasBench201::cifar10()),
+            "nas-cifar100" => Box::new(NasBench201::cifar100()),
+            "nas-imagenet16" => Box::new(NasBench201::imagenet16()),
+            "pd1-wmt" => Box::new(Pd1::wmt()),
+            "pd1-imagenet" => Box::new(Pd1::imagenet()),
+            other => {
+                // validate() established the lcbench- prefix and dataset
+                let ds = other.strip_prefix("lcbench-").expect("validated");
+                Box::new(LcBench::new(ds))
+            }
+        })
+    }
+}
+
+/// Whether a successive-halving scheduler *promotes* survivors rung by
+/// rung (the ASHA/PASHA default) or *stops* the losers in place while
+/// survivors train through (the `-stop` variants, Li et al.'s stopping
+/// semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecisionMode {
+    Promote,
+    Stop,
+}
+
+impl DecisionMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DecisionMode::Promote => "promote",
+            DecisionMode::Stop => "stop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DecisionMode> {
+        match s {
+            "promote" => Some(DecisionMode::Promote),
+            "stop" => Some(DecisionMode::Stop),
+            _ => None,
+        }
+    }
+}
+
+/// The decision policy: which scheduler runs, with every paper knob
+/// exposed — `r_min`, the reduction factor η, the ranking function
+/// (PASHA §4 / Appendix C), and promote-vs-stop mode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedulerSpec {
+    /// Asynchronous successive halving (Li et al. 2020).
+    Asha {
+        r_min: u32,
+        eta: u32,
+        mode: DecisionMode,
+    },
+    /// Progressive ASHA (the paper's contribution, Algorithm 1).
+    Pasha {
+        r_min: u32,
+        eta: u32,
+        mode: DecisionMode,
+        ranking: RankingSpec,
+    },
+    /// Synchronous successive halving; its initial cohort size is the
+    /// experiment's configuration budget.
+    Sh { r_min: u32, eta: u32 },
+    /// Hyperband over synchronous SH brackets.
+    Hyperband { r_min: u32, eta: u32 },
+    /// Every configuration trained for a fixed number of epochs.
+    FixedEpoch { epochs: u32 },
+    /// Random search at full resources (the paper's weakest baseline).
+    RandomBaseline,
+}
+
+impl SchedulerSpec {
+    /// Resolve a scheduler wire name (`asha`, `pasha-stop`, `sh`, …) with
+    /// explicit knobs. The `-stop` suffix selects [`DecisionMode::Stop`];
+    /// `ranking` only applies to the PASHA variants.
+    pub fn from_name(
+        name: &str,
+        r_min: u32,
+        eta: u32,
+        ranking: RankingSpec,
+    ) -> Result<SchedulerSpec, String> {
+        Ok(match name {
+            "asha" => SchedulerSpec::Asha {
+                r_min,
+                eta,
+                mode: DecisionMode::Promote,
+            },
+            "asha-stop" => SchedulerSpec::Asha {
+                r_min,
+                eta,
+                mode: DecisionMode::Stop,
+            },
+            "pasha" => SchedulerSpec::Pasha {
+                r_min,
+                eta,
+                mode: DecisionMode::Promote,
+                ranking,
+            },
+            "pasha-stop" => SchedulerSpec::Pasha {
+                r_min,
+                eta,
+                mode: DecisionMode::Stop,
+                ranking,
+            },
+            "sh" => SchedulerSpec::Sh { r_min, eta },
+            "hyperband" => SchedulerSpec::Hyperband { r_min, eta },
+            "1-epoch" => SchedulerSpec::FixedEpoch { epochs: 1 },
+            "random" => SchedulerSpec::RandomBaseline,
+            other => return Err(format!("unknown scheduler '{other}'")),
+        })
+    }
+
+    /// Re-derive this spec under a (possibly different) wire name,
+    /// carrying over every knob the new family shares — `r_min`, η, the
+    /// ranking function, and the fixed-epoch count. What `--scheduler`
+    /// over a loaded spec and `--set scheduler.name=…` both lower to.
+    pub fn renamed(&self, name: &str) -> Result<SchedulerSpec, String> {
+        let mut next = SchedulerSpec::from_name(
+            name,
+            self.r_min().unwrap_or(1),
+            self.eta().unwrap_or(3),
+            self.ranking().cloned().unwrap_or_default(),
+        )?;
+        if let (
+            SchedulerSpec::FixedEpoch { epochs },
+            SchedulerSpec::FixedEpoch { epochs: current },
+        ) = (&mut next, self)
+        {
+            *epochs = *current;
+        }
+        Ok(next)
+    }
+
+    /// The CLI/wire name this spec round-trips through (`-stop` folded
+    /// back into the name).
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            SchedulerSpec::Asha {
+                mode: DecisionMode::Promote,
+                ..
+            } => "asha",
+            SchedulerSpec::Asha {
+                mode: DecisionMode::Stop,
+                ..
+            } => "asha-stop",
+            SchedulerSpec::Pasha {
+                mode: DecisionMode::Promote,
+                ..
+            } => "pasha",
+            SchedulerSpec::Pasha {
+                mode: DecisionMode::Stop,
+                ..
+            } => "pasha-stop",
+            SchedulerSpec::Sh { .. } => "sh",
+            SchedulerSpec::Hyperband { .. } => "hyperband",
+            SchedulerSpec::FixedEpoch { .. } => "1-epoch",
+            SchedulerSpec::RandomBaseline => "random",
+        }
+    }
+
+    /// `r_min` where the scheduler has one.
+    pub fn r_min(&self) -> Option<u32> {
+        match *self {
+            SchedulerSpec::Asha { r_min, .. }
+            | SchedulerSpec::Pasha { r_min, .. }
+            | SchedulerSpec::Sh { r_min, .. }
+            | SchedulerSpec::Hyperband { r_min, .. } => Some(r_min),
+            _ => None,
+        }
+    }
+
+    /// η where the scheduler has one.
+    pub fn eta(&self) -> Option<u32> {
+        match *self {
+            SchedulerSpec::Asha { eta, .. }
+            | SchedulerSpec::Pasha { eta, .. }
+            | SchedulerSpec::Sh { eta, .. }
+            | SchedulerSpec::Hyperband { eta, .. } => Some(eta),
+            _ => None,
+        }
+    }
+
+    /// The ranking function (PASHA variants only).
+    pub fn ranking(&self) -> Option<&RankingSpec> {
+        match self {
+            SchedulerSpec::Pasha { ranking, .. } => Some(ranking),
+            _ => None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(r_min) = self.r_min() {
+            if r_min < 1 {
+                return Err("field 'scheduler.r_min': must be >= 1".into());
+            }
+        }
+        if let Some(eta) = self.eta() {
+            if eta < 2 {
+                return Err(format!("field 'scheduler.eta': must be >= 2 (got {eta})"));
+            }
+        }
+        if let SchedulerSpec::FixedEpoch { epochs } = *self {
+            if epochs < 1 {
+                return Err("field 'scheduler.epochs': must be >= 1".into());
+            }
+        }
+        if let Some(ranking) = self.ranking() {
+            validate_ranking(ranking)?;
+        }
+        Ok(())
+    }
+
+    /// Build the concrete [`SchedulerBuilder`]. `config_budget` sizes the
+    /// synchronous-SH cohort; the other schedulers ignore it.
+    pub fn builder(&self, config_budget: usize) -> Result<Box<dyn SchedulerBuilder>, String> {
+        self.validate()?;
+        Ok(match self.clone() {
+            SchedulerSpec::Asha {
+                r_min,
+                eta,
+                mode: DecisionMode::Promote,
+            } => Box::new(AshaBuilder { r_min, eta }),
+            SchedulerSpec::Asha {
+                r_min,
+                eta,
+                mode: DecisionMode::Stop,
+            } => Box::new(StopAshaBuilder { r_min, eta }),
+            SchedulerSpec::Pasha {
+                r_min,
+                eta,
+                mode: DecisionMode::Promote,
+                ranking,
+            } => Box::new(PashaBuilder {
+                r_min,
+                eta,
+                ranking,
+            }),
+            SchedulerSpec::Pasha {
+                r_min,
+                eta,
+                mode: DecisionMode::Stop,
+                ranking,
+            } => Box::new(StopPashaBuilder {
+                r_min,
+                eta,
+                ranking,
+            }),
+            SchedulerSpec::Sh { r_min, eta } => Box::new(SyncShBuilder {
+                r_min,
+                eta,
+                n0: config_budget,
+            }),
+            SchedulerSpec::Hyperband { r_min, eta } => Box::new(HyperbandBuilder { r_min, eta }),
+            SchedulerSpec::FixedEpoch { epochs } => Box::new(FixedEpochBuilder { epochs }),
+            SchedulerSpec::RandomBaseline => Box::new(RandomBaselineBuilder),
+        })
+    }
+}
+
+fn validate_ranking(r: &RankingSpec) -> Result<(), String> {
+    let finite = |v: f64, field: &str| -> Result<(), String> {
+        if v.is_finite() {
+            Ok(())
+        } else {
+            Err(format!("field '{field}': must be finite"))
+        }
+    };
+    match *r {
+        RankingSpec::NoiseAdaptive { percentile } => {
+            finite(percentile, "scheduler.ranking.percentile")?;
+            if !(0.0..=100.0).contains(&percentile) {
+                return Err(format!(
+                    "field 'scheduler.ranking.percentile': must be in [0, 100] (got {percentile})"
+                ));
+            }
+        }
+        RankingSpec::Direct | RankingSpec::SoftMeanGap | RankingSpec::SoftMedianGap => {}
+        RankingSpec::SoftFixed { epsilon } => {
+            finite(epsilon, "scheduler.ranking.epsilon")?;
+            if epsilon < 0.0 {
+                return Err(format!(
+                    "field 'scheduler.ranking.epsilon': must be >= 0 (got {epsilon})"
+                ));
+            }
+        }
+        RankingSpec::SoftSigma { mult } => {
+            finite(mult, "scheduler.ranking.mult")?;
+            if mult <= 0.0 {
+                return Err(format!(
+                    "field 'scheduler.ranking.mult': must be > 0 (got {mult})"
+                ));
+            }
+        }
+        RankingSpec::Rbo { p, t } | RankingSpec::Rrr { p, t } | RankingSpec::Arrr { p, t } => {
+            finite(p, "scheduler.ranking.p")?;
+            finite(t, "scheduler.ranking.t")?;
+            if !(p > 0.0 && p <= 1.0) {
+                return Err(format!(
+                    "field 'scheduler.ranking.p': must be in (0, 1] (got {p})"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The proposal strategy, including its hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SearcherSpec {
+    /// Uniform sampling (the paper's main experiments).
+    Random,
+    /// MOBSTER-style GP + EI with explicit tuning constants.
+    Bo(BoConfig),
+}
+
+impl SearcherSpec {
+    /// Resolve a searcher wire name (BO gets the default
+    /// hyperparameters) — the one parser every construction path shares.
+    pub fn from_name(name: &str) -> Result<SearcherSpec, String> {
+        match name {
+            "random" => Ok(SearcherSpec::Random),
+            "bo" => Ok(SearcherSpec::Bo(BoConfig::default())),
+            other => Err(format!("unknown searcher '{other}' (expected random|bo)")),
+        }
+    }
+
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            SearcherSpec::Random => "random",
+            SearcherSpec::Bo(_) => "bo",
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let SearcherSpec::Bo(cfg) = self {
+            if cfg.min_points < 1 {
+                return Err("field 'searcher.min_points': must be >= 1".into());
+            }
+            if cfg.num_candidates < 1 {
+                return Err("field 'searcher.num_candidates': must be >= 1".into());
+            }
+            if !(0.0..=1.0).contains(&cfg.random_fraction) {
+                return Err(format!(
+                    "field 'searcher.random_fraction': must be in [0, 1] (got {})",
+                    cfg.random_fraction
+                ));
+            }
+            for (v, field) in [
+                (cfg.lengthscale, "searcher.lengthscale"),
+                (cfg.signal_var, "searcher.signal_var"),
+                (cfg.noise_var, "searcher.noise_var"),
+            ] {
+                if !(v.is_finite() && v > 0.0) {
+                    return Err(format!("field '{field}': must be > 0 (got {v})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the searcher for a repetition with scheduler seed
+    /// `sched_seed` — the exact seed derivations `Tuner::run` has always
+    /// used, so a served session reproduces the in-process run.
+    pub fn build(&self, sched_seed: u64) -> Box<dyn Searcher> {
+        match self {
+            SearcherSpec::Random => Box::new(RandomSearcher::new(mix(&[sched_seed, 0x5EA2C4]))),
+            SearcherSpec::Bo(cfg) => {
+                Box::new(BoSearcher::with_config(mix(&[sched_seed, 0xB0]), cfg.clone()))
+            }
+        }
+    }
+}
+
+/// Where trials physically execute for in-process runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecBackendKind {
+    /// The deterministic virtual-clock simulator (default).
+    Sim,
+    /// A wall-clock `std::thread` pool; results depend on completion
+    /// order, so runs are not bit-reproducible.
+    Pool,
+}
+
+impl ExecBackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecBackendKind::Sim => "sim",
+            ExecBackendKind::Pool => "pool",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExecBackendKind> {
+        match s {
+            "sim" => Some(ExecBackendKind::Sim),
+            "pool" => Some(ExecBackendKind::Pool),
+            _ => None,
+        }
+    }
+}
+
+/// Execution shape: how many parallel workers, on which backend.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecSpec {
+    /// Parallel asynchronous workers (paper: 4).
+    pub workers: usize,
+    pub backend: ExecBackendKind,
+}
+
+impl Default for ExecSpec {
+    fn default() -> Self {
+        ExecSpec {
+            workers: 4,
+            backend: ExecBackendKind::Sim,
+        }
+    }
+}
+
+impl ExecSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers < 1 {
+            return Err("field 'exec.workers': must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// When the experiment stops: the paper's N-configuration budget, plus
+/// optional epoch (drain semantics) and clock (halt semantics) budgets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StopRules {
+    /// Candidate configurations to sample (paper: N = 256).
+    pub config_budget: usize,
+    /// Stop dispatching once this many epochs have been launched;
+    /// in-flight work drains.
+    pub epoch_budget: Option<u64>,
+    /// Halt (cancelling in-flight work) once the clock passes this many
+    /// seconds (virtual on the simulator, wall on the pool).
+    pub time_budget: Option<f64>,
+}
+
+impl Default for StopRules {
+    fn default() -> Self {
+        StopRules {
+            config_budget: 256,
+            epoch_budget: None,
+            time_budget: None,
+        }
+    }
+}
+
+impl StopRules {
+    pub fn validate(&self) -> Result<(), String> {
+        // Integers ride the JSON wire as f64; past 2^53 they serialize
+        // inexactly and a journaled session could never be re-parsed.
+        // Zero budgets stay legal: the pre-redesign CLI accepted them
+        // (`--budget 0` terminates immediately with no best config) and
+        // legacy journals may carry them.
+        const MAX_EXACT: u64 = 1 << 53;
+        if self.config_budget as u64 > MAX_EXACT {
+            return Err("field 'stop.config_budget': must be <= 2^53".into());
+        }
+        if let Some(e) = self.epoch_budget {
+            if e > MAX_EXACT {
+                return Err("field 'stop.epoch_budget': must be <= 2^53".into());
+            }
+        }
+        if let Some(t) = self.time_budget {
+            if !(t.is_finite() && t > 0.0) {
+                return Err(format!(
+                    "field 'stop.time_budget': must be > 0 seconds (got {t})"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One complete, versioned experiment description — see the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    pub bench: BenchSpec,
+    pub scheduler: SchedulerSpec,
+    pub searcher: SearcherSpec,
+    pub exec: ExecSpec,
+    pub stop: StopRules,
+    /// Scheduler/searcher seed (one repetition's `sched_seed`).
+    pub seed: u64,
+    /// Benchmark training seed workers evaluate with.
+    pub bench_seed: u64,
+}
+
+impl Default for ExperimentSpec {
+    /// The paper's protocol defaults: PASHA (noise-adaptive soft ranking,
+    /// r = 1, η = 3) on NASBench201/CIFAR-10, random search, 4 simulated
+    /// workers, N = 256.
+    fn default() -> Self {
+        ExperimentSpec {
+            bench: BenchSpec::new("nas-cifar10"),
+            scheduler: SchedulerSpec::Pasha {
+                r_min: 1,
+                eta: 3,
+                mode: DecisionMode::Promote,
+                ranking: RankingSpec::default(),
+            },
+            searcher: SearcherSpec::Random,
+            exec: ExecSpec::default(),
+            stop: StopRules::default(),
+            seed: 0,
+            bench_seed: 0,
+        }
+    }
+}
+
+impl ExperimentSpec {
+    /// A spec for `bench` × `scheduler` (wire names) with every other
+    /// knob at its default — the common construction in tests and tools.
+    pub fn named(bench: &str, scheduler: &str) -> Result<ExperimentSpec, String> {
+        let spec = ExperimentSpec {
+            bench: BenchSpec::new(bench),
+            scheduler: SchedulerSpec::from_name(scheduler, 1, 3, RankingSpec::default())?,
+            ..ExperimentSpec::default()
+        };
+        spec.bench.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.bench.validate()?;
+        self.scheduler.validate()?;
+        self.searcher.validate()?;
+        self.exec.validate()?;
+        self.stop.validate()?;
+        // Seeds ride the JSON wire as numbers; beyond 2^53 they would
+        // serialize inexactly and a journaled session could never be
+        // re-parsed, so reject them up front.
+        for (v, field) in [(self.seed, "seed"), (self.bench_seed, "bench_seed")] {
+            if v > 1u64 << 53 {
+                return Err(format!(
+                    "field '{field}': must be <= 2^53 (seeds are exact JSON integers)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the versioned v2 wire format (deterministic key
+    /// order; what journals, snapshots, and `--spec` files carry).
+    pub fn to_json(&self) -> Json {
+        codec::to_json(self)
+    }
+
+    /// Serialize to the legacy v1 (flat) wire shape when the spec uses
+    /// only knobs a pre-redesign client understood (`r_min = 1`, the
+    /// default ranking and BO hyperparameters, default exec, no time
+    /// budget); `None` otherwise. Session `status` responses prefer this
+    /// form so old workers keep interoperating during a rolling upgrade.
+    pub fn to_v1_compat_json(&self) -> Option<Json> {
+        v1::to_v1_json(self)
+    }
+
+    /// Parse a spec. Strict: unknown keys and out-of-range values are
+    /// errors naming the field. A payload without a `"version"` key is
+    /// read as the legacy v1 (flat `SessionSpec`) shape and migrated.
+    pub fn from_json(j: &Json) -> Result<ExperimentSpec, String> {
+        let spec = if j.get("version").is_none() {
+            v1::from_v1_json(j)?
+        } else {
+            codec::from_v2_json(j)?
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Apply one `key.path=value` override (the CLI's `--set`). The
+    /// value is parsed as JSON when possible (numbers, booleans,
+    /// objects) and as a bare string otherwise; `scheduler.ranking`
+    /// additionally accepts the CLI shorthand (`soft:0.025`, `rbo:0.9`,
+    /// `plain`, …). The result is re-parsed strictly, so a typo'd path
+    /// is an error naming the field.
+    ///
+    /// Paths that select an enum variant (`scheduler.name`,
+    /// `searcher.name`, `scheduler.ranking.kind`) rebuild the whole
+    /// sub-spec, carrying over the knobs the new variant shares —
+    /// otherwise stale sibling keys from the old variant would fail the
+    /// strict re-parse.
+    pub fn set(&mut self, assignment: &str) -> Result<(), String> {
+        let (path, value) = assignment
+            .split_once('=')
+            .ok_or_else(|| format!("--set expects key.path=value, got '{assignment}'"))?;
+        let mut keys: Vec<&str> = path.split('.').collect();
+        if keys.iter().any(|k| k.is_empty()) {
+            return Err(format!("--set path '{path}' has an empty segment"));
+        }
+        match keys.as_slice() {
+            ["scheduler", "name"] => {
+                self.scheduler = self.scheduler.renamed(value)?;
+                return self.validate();
+            }
+            ["searcher", "name"] => {
+                self.searcher = SearcherSpec::from_name(value)
+                    .map_err(|e| format!("field 'searcher.name': {e}"))?;
+                return self.validate();
+            }
+            _ => {}
+        }
+        let vjson = if matches!(keys.as_slice(), ["scheduler", "ranking", "kind"]) {
+            // replace the whole ranking object so knobs of the old kind
+            // don't linger into the strict re-parse; the new kind's
+            // parameters take their defaults
+            keys.truncate(2);
+            let mut o = Json::obj();
+            o.set("kind", value);
+            o
+        } else if keys.last() == Some(&"ranking") {
+            match parse_ranking(value) {
+                Ok(r) => codec::ranking_to_json(&r),
+                Err(_) => scalar_json(value),
+            }
+        } else {
+            scalar_json(value)
+        };
+        let mut root = self.to_json();
+        let mut cur = &mut root;
+        for k in &keys[..keys.len() - 1] {
+            cur = match cur {
+                Json::Obj(m) => m.entry(k.to_string()).or_insert_with(Json::obj),
+                _ => return Err(format!("field '{k}' in '{path}' is not an object")),
+            };
+        }
+        match cur {
+            Json::Obj(m) => {
+                m.insert(keys[keys.len() - 1].to_string(), vjson);
+            }
+            _ => return Err(format!("field '{path}' is not settable (parent not an object)")),
+        }
+        *self = ExperimentSpec::from_json(&root)?;
+        Ok(())
+    }
+
+    /// Build the deterministic ask/tell core this spec describes (the
+    /// tuning service's session engine). Uses the same scheduler and
+    /// searcher derivations as [`crate::tuner::Tuner::run`], so a
+    /// single-worker session reproduces the in-process run exactly.
+    pub fn build_core(&self) -> Result<AskTell, String> {
+        self.validate()?;
+        if self.stop.time_budget.is_some() {
+            return Err(
+                "field 'stop.time_budget': not supported for served (ask/tell) sessions".into(),
+            );
+        }
+        // A served session is driven by however many external workers
+        // connect; a non-default exec section would be silently dead
+        // configuration, so refuse it rather than mislead.
+        if self.exec != ExecSpec::default() {
+            return Err(
+                "field 'exec': served (ask/tell) sessions are driven by external workers — \
+                 exec applies to in-process runs only (drop it or keep the defaults)"
+                    .into(),
+            );
+        }
+        let bench = self.bench.build()?;
+        let builder = self.scheduler.builder(self.stop.config_budget)?;
+        let scheduler = builder.build(bench.max_epochs(), self.seed);
+        let searcher = self.searcher.build(self.seed);
+        let mut rules: Vec<Box<dyn StoppingRule>> =
+            vec![Box::new(ConfigBudget(self.stop.config_budget))];
+        if let Some(e) = self.stop.epoch_budget {
+            rules.push(Box::new(EpochBudget(e)));
+        }
+        Ok(AskTell::new(
+            scheduler,
+            searcher,
+            bench.space().clone(),
+            rules,
+        ))
+    }
+}
+
+fn scalar_json(value: &str) -> Json {
+    crate::util::json::parse(value).unwrap_or_else(|_| Json::Str(value.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_validates_and_round_trips() {
+        let spec = ExperimentSpec::default();
+        spec.validate().unwrap();
+        let j = spec.to_json();
+        assert_eq!(j.get("version").and_then(|v| v.as_f64()), Some(2.0));
+        let back = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn named_resolves_wire_names() {
+        let spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha-stop").unwrap();
+        assert_eq!(spec.scheduler.wire_name(), "asha-stop");
+        assert!(ExperimentSpec::named("nope", "asha").is_err());
+        assert!(ExperimentSpec::named("nas-cifar10", "nope").is_err());
+    }
+
+    #[test]
+    fn bench_validation_names_the_field() {
+        let err = BenchSpec::new("lcbench-NotADataset").validate().unwrap_err();
+        assert!(err.contains("bench.name"), "{err}");
+        assert!(err.contains("NotADataset"), "{err}");
+        BenchSpec::new("lcbench-Fashion-MNIST").validate().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_errors_name_the_field() {
+        let mut spec = ExperimentSpec::default();
+        spec.stop.config_budget = 1 << 54; // inexact past the f64 wire
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("stop.config_budget"), "{err}");
+        // the degenerate-but-legal legacy case stays accepted
+        spec.stop.config_budget = 0;
+        spec.validate().unwrap();
+
+        let sched = SchedulerSpec::Asha {
+            r_min: 1,
+            eta: 1,
+            mode: DecisionMode::Promote,
+        };
+        let err = sched.validate().unwrap_err();
+        assert!(err.contains("scheduler.eta"), "{err}");
+
+        let sched = SchedulerSpec::Pasha {
+            r_min: 1,
+            eta: 3,
+            mode: DecisionMode::Promote,
+            ranking: RankingSpec::SoftFixed { epsilon: -1.0 },
+        };
+        let err = sched.validate().unwrap_err();
+        assert!(err.contains("scheduler.ranking.epsilon"), "{err}");
+
+        // a seed beyond exact-f64 range could be journaled but never
+        // re-parsed — rejected before it can be created at all
+        let mut spec = ExperimentSpec::default();
+        spec.seed = (1u64 << 53) + 2;
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("'seed'"), "{err}");
+    }
+
+    #[test]
+    fn set_overrides_and_rejects_typos() {
+        let mut spec = ExperimentSpec::default();
+        spec.set("stop.config_budget=64").unwrap();
+        assert_eq!(spec.stop.config_budget, 64);
+        spec.set("scheduler.eta=4").unwrap();
+        assert_eq!(spec.scheduler.eta(), Some(4));
+        spec.set("scheduler.ranking=soft:0.025").unwrap();
+        assert_eq!(
+            spec.scheduler.ranking(),
+            Some(&RankingSpec::SoftFixed { epsilon: 0.025 })
+        );
+        spec.set("bench.name=pd1-wmt").unwrap();
+        assert_eq!(spec.bench.name, "pd1-wmt");
+        let err = spec.set("stop.confg_budget=64").unwrap_err();
+        assert!(err.contains("confg_budget"), "{err}");
+        let err = spec.set("scheduler.eta=1").unwrap_err();
+        assert!(err.contains("scheduler.eta"), "{err}");
+        let err = spec.set("nonsense").unwrap_err();
+        assert!(err.contains("key.path=value"), "{err}");
+    }
+
+    #[test]
+    fn set_switches_enum_variants_cleanly() {
+        // switching scheduler family keeps the shared knobs and drops
+        // the ones the new family lacks (no stale-key parse errors)
+        let mut spec = ExperimentSpec::default();
+        spec.set("scheduler.eta=4").unwrap();
+        spec.set("scheduler.name=asha-stop").unwrap();
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Asha {
+                r_min: 1,
+                eta: 4,
+                mode: DecisionMode::Stop,
+            }
+        );
+        // and back: pasha regains a ranking (the default)
+        spec.set("scheduler.name=pasha").unwrap();
+        assert_eq!(spec.scheduler.ranking(), Some(&RankingSpec::default()));
+        assert_eq!(spec.scheduler.eta(), Some(4));
+        assert!(spec.set("scheduler.name=sgd").is_err());
+
+        // searcher family switches both ways
+        spec.set("searcher.name=bo").unwrap();
+        assert!(matches!(spec.searcher, SearcherSpec::Bo(_)));
+        spec.set("searcher.min_points=8").unwrap();
+        spec.set("searcher.name=random").unwrap();
+        assert_eq!(spec.searcher, SearcherSpec::Random);
+        assert!(spec.set("searcher.name=gradient").is_err());
+
+        // ranking-kind switches rebuild the ranking object from defaults
+        spec.set("scheduler.ranking=rbo:0.9").unwrap();
+        spec.set("scheduler.ranking.kind=plain").unwrap();
+        assert_eq!(spec.scheduler.ranking(), Some(&RankingSpec::Direct));
+        spec.set("scheduler.ranking.kind=soft").unwrap();
+        assert_eq!(
+            spec.scheduler.ranking(),
+            Some(&RankingSpec::SoftFixed { epsilon: 0.0 })
+        );
+    }
+
+    #[test]
+    fn builder_names_match_legacy_factories() {
+        let budget = 16;
+        for (name, want) in [
+            ("asha", "ASHA"),
+            ("pasha", "PASHA"),
+            ("asha-stop", "ASHA-stop"),
+            ("pasha-stop", "PASHA-stop"),
+            ("sh", "SuccessiveHalving"),
+            ("hyperband", "Hyperband"),
+            ("1-epoch", "One-epoch baseline"),
+            ("random", "Random baseline"),
+        ] {
+            let spec = SchedulerSpec::from_name(name, 1, 3, RankingSpec::default()).unwrap();
+            let built = spec.builder(budget).unwrap();
+            assert_eq!(built.name(), want, "wire name {name}");
+            assert_eq!(spec.wire_name(), name);
+        }
+    }
+
+    #[test]
+    fn build_core_rejects_in_process_only_knobs() {
+        let spec = ExperimentSpec {
+            stop: StopRules {
+                time_budget: Some(10.0),
+                ..StopRules::default()
+            },
+            ..ExperimentSpec::default()
+        };
+        let err = spec.build_core().unwrap_err();
+        assert!(err.contains("stop.time_budget"), "{err}");
+
+        let mut spec = ExperimentSpec::default();
+        spec.exec.workers = 8;
+        let err = spec.build_core().unwrap_err();
+        assert!(err.contains("'exec'"), "{err}");
+    }
+
+    #[test]
+    fn renamed_carries_shared_knobs() {
+        let one_epoch = SchedulerSpec::FixedEpoch { epochs: 5 };
+        // same family: the epoch count survives a no-op rename
+        assert_eq!(one_epoch.renamed("1-epoch").unwrap(), one_epoch);
+        // cross-family renames carry r_min/eta/ranking
+        let pasha = SchedulerSpec::Pasha {
+            r_min: 2,
+            eta: 4,
+            mode: DecisionMode::Promote,
+            ranking: RankingSpec::Rbo { p: 0.9, t: 0.5 },
+        };
+        assert_eq!(
+            pasha.renamed("asha-stop").unwrap(),
+            SchedulerSpec::Asha {
+                r_min: 2,
+                eta: 4,
+                mode: DecisionMode::Stop,
+            }
+        );
+        assert_eq!(pasha.renamed("pasha").unwrap(), pasha);
+    }
+}

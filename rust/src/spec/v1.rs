@@ -1,0 +1,198 @@
+//! Migration from the v1 wire format — the flat `SessionSpec` shape that
+//! PR 3/4-era journals and clients carry.
+//!
+//! v1 → v2 field mapping (also documented in the README):
+//!
+//! | v1 (flat)            | v2                                          |
+//! |----------------------|---------------------------------------------|
+//! | `bench` (string)     | `bench.name`                                |
+//! | `scheduler` (string) | `scheduler.name` (+ `mode` for `-stop`)     |
+//! | `eta`                | `scheduler.eta`                             |
+//! | *(implicit)* `r=1`   | `scheduler.r_min = 1`                       |
+//! | *(implicit)* ranking | `scheduler.ranking = {kind: noisy, 90}`     |
+//! | `searcher` (string)  | `searcher.name` (BO hyperparameters default)|
+//! | `seed`               | `seed`                                      |
+//! | `bench_seed`         | `bench_seed`                                |
+//! | `config_budget`      | `stop.config_budget`                        |
+//! | `epoch_budget`       | `stop.epoch_budget`                         |
+//! | *(implicit)* workers | `exec = {workers: 4, backend: sim}`         |
+//!
+//! The implicit values are exactly what the legacy
+//! `tuner::scheduler_from_name` / `searcher_for` factories hardcoded, so
+//! a migrated spec builds a byte-identical ask/tell core — every v1
+//! journal and snapshot recovers unchanged.
+//!
+//! Parsing is strict (unlike the original `SessionSpec::from_json`,
+//! which silently fell back to defaults): a typo'd key such as
+//! `confg_budget` is an error naming the field.
+
+use super::codec::Fields;
+use super::{BenchSpec, ExecSpec, ExperimentSpec, SchedulerSpec, SearcherSpec, StopRules};
+use crate::ranking::RankingSpec;
+use crate::searcher::bo::BoConfig;
+use crate::util::json::Json;
+
+/// Serialize to the legacy v1 wire shape, when the spec is exactly
+/// representable there: `r_min = 1`, the default ranking, default BO
+/// hyperparameters, the default execution shape, and no time budget —
+/// i.e. everything a pre-redesign client could have asked for. Returns
+/// `None` for specs that use v2-only knobs. Session `status` responses
+/// use this so pre-redesign workers keep interoperating with sessions
+/// they could have created themselves.
+pub(crate) fn to_v1_json(spec: &ExperimentSpec) -> Option<Json> {
+    if spec.exec != ExecSpec::default() || spec.stop.time_budget.is_some() {
+        return None;
+    }
+    let representable_scheduler = match &spec.scheduler {
+        SchedulerSpec::Asha { r_min, .. }
+        | SchedulerSpec::Sh { r_min, .. }
+        | SchedulerSpec::Hyperband { r_min, .. } => *r_min == 1,
+        SchedulerSpec::Pasha { r_min, ranking, .. } => {
+            *r_min == 1 && *ranking == RankingSpec::default()
+        }
+        SchedulerSpec::FixedEpoch { epochs } => *epochs == 1,
+        SchedulerSpec::RandomBaseline => true,
+    };
+    let representable_searcher = match &spec.searcher {
+        SearcherSpec::Random => true,
+        SearcherSpec::Bo(cfg) => *cfg == BoConfig::default(),
+    };
+    if !(representable_scheduler && representable_searcher) {
+        return None;
+    }
+    let mut o = Json::obj();
+    o.set("bench", spec.bench.name.as_str())
+        .set("scheduler", spec.scheduler.wire_name())
+        .set("eta", spec.scheduler.eta().unwrap_or(3))
+        .set("searcher", spec.searcher.wire_name())
+        .set("seed", spec.seed as f64)
+        .set("bench_seed", spec.bench_seed as f64)
+        .set("config_budget", spec.stop.config_budget);
+    if let Some(e) = spec.stop.epoch_budget {
+        o.set("epoch_budget", e as f64);
+    }
+    Some(o)
+}
+
+pub(crate) fn from_v1_json(j: &Json) -> Result<ExperimentSpec, String> {
+    let mut f = Fields::new(j, "")?;
+    let bench = f.str_or("bench", "nas-cifar10")?;
+    let scheduler_name = f.str_or("scheduler", "pasha")?;
+    let eta = f.u32_or("eta", 3)?;
+    let searcher_name = f.str_or("searcher", "random")?;
+    let seed = f.u64_or("seed", 0)?;
+    let bench_seed = f.u64_or("bench_seed", 0)?;
+    let config_budget = f.usize_or("config_budget", 256)?;
+    let epoch_budget = f.opt_u64("epoch_budget")?;
+    f.finish()?;
+    let searcher = SearcherSpec::from_name(&searcher_name)
+        .map_err(|e| format!("field 'searcher': {e}"))?;
+    // r_min = 1 and the default (noise-adaptive) ranking are what the
+    // legacy factories hardcoded for every v1 session.
+    let scheduler = SchedulerSpec::from_name(&scheduler_name, 1, eta, RankingSpec::default())
+        .map_err(|e| format!("field 'scheduler': {e}"))?;
+    Ok(ExperimentSpec {
+        bench: BenchSpec::new(&bench),
+        scheduler,
+        searcher,
+        exec: ExecSpec::default(),
+        stop: StopRules {
+            config_budget,
+            epoch_budget,
+            time_budget: None,
+        },
+        seed,
+        bench_seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::DecisionMode;
+    use crate::util::json::parse;
+
+    #[test]
+    fn v1_payloads_migrate_with_legacy_defaults() {
+        let j = parse(
+            r#"{"bench":"lcbench-Fashion-MNIST","scheduler":"pasha-stop","eta":4,
+                "searcher":"bo","seed":7,"bench_seed":1,"config_budget":99,
+                "epoch_budget":1234}"#,
+        )
+        .unwrap();
+        let spec = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(spec.bench.name, "lcbench-Fashion-MNIST");
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Pasha {
+                r_min: 1,
+                eta: 4,
+                mode: DecisionMode::Stop,
+                ranking: RankingSpec::default(),
+            }
+        );
+        assert_eq!(spec.searcher, SearcherSpec::Bo(BoConfig::default()));
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.bench_seed, 1);
+        assert_eq!(spec.stop.config_budget, 99);
+        assert_eq!(spec.stop.epoch_budget, Some(1234));
+        assert_eq!(spec.stop.time_budget, None);
+        assert_eq!(spec.exec.workers, 4);
+    }
+
+    #[test]
+    fn v1_missing_fields_take_defaults_but_typos_error() {
+        // sparse payloads keep working (old journals may omit fields)...
+        let sparse = parse(r#"{"bench":"nas-cifar100"}"#).unwrap();
+        let spec = ExperimentSpec::from_json(&sparse).unwrap();
+        assert_eq!(spec.bench.name, "nas-cifar100");
+        assert_eq!(spec.stop.config_budget, 256);
+        assert!(spec.stop.epoch_budget.is_none());
+        // ...but a typo'd key is no longer a silent default
+        let typo = parse(r#"{"bench":"nas-cifar10","confg_budget":64}"#).unwrap();
+        let err = ExperimentSpec::from_json(&typo).unwrap_err();
+        assert!(err.contains("'confg_budget'"), "{err}");
+
+        let bad = parse(r#"{"searcher":"gradient"}"#).unwrap();
+        let err = ExperimentSpec::from_json(&bad).unwrap_err();
+        assert!(err.contains("gradient"), "{err}");
+    }
+
+    #[test]
+    fn v1_compat_emission_round_trips_or_abstains() {
+        // representable spec: v1 bytes parse back to the same spec
+        let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "pasha-stop").unwrap();
+        spec.stop.config_budget = 40;
+        spec.stop.epoch_budget = Some(99);
+        spec.seed = 6;
+        let v1 = spec.to_v1_compat_json().expect("v1-representable");
+        assert_eq!(ExperimentSpec::from_json(&v1).unwrap(), spec);
+
+        // v2-only knobs abstain instead of lying to old clients
+        let mut v2_only = spec.clone();
+        v2_only.set("scheduler.r-min=2").unwrap_err(); // typo'd path still errors
+        v2_only.set("scheduler.r_min=2").unwrap();
+        assert!(v2_only.to_v1_compat_json().is_none(), "r_min=2 is v2-only");
+        let mut v2_only = spec.clone();
+        v2_only.set("scheduler.ranking=soft:0.5").unwrap();
+        assert!(v2_only.to_v1_compat_json().is_none(), "non-default ranking");
+        let mut v2_only = spec.clone();
+        v2_only.stop.time_budget = Some(10.0);
+        assert!(v2_only.to_v1_compat_json().is_none(), "time budget");
+        let mut v2_only = spec;
+        v2_only.exec.workers = 2;
+        assert!(v2_only.to_v1_compat_json().is_none(), "non-default exec");
+    }
+
+    #[test]
+    fn v1_and_v2_forms_of_the_same_spec_compare_equal() {
+        let v1 = parse(
+            r#"{"bench":"lcbench-Fashion-MNIST","scheduler":"asha","eta":3,
+                "searcher":"random","seed":0,"bench_seed":0,"config_budget":8}"#,
+        )
+        .unwrap();
+        let migrated = ExperimentSpec::from_json(&v1).unwrap();
+        let reparsed = ExperimentSpec::from_json(&migrated.to_json()).unwrap();
+        assert_eq!(migrated, reparsed);
+    }
+}

@@ -1,43 +1,42 @@
 //! Orchestration: searcher × scheduler × benchmark × engine.
 //!
-//! [`Tuner::run`] reproduces the paper's two-phase experimental protocol
-//! (§5.1): phase 1 runs the optimizer until N = 256 candidate
-//! configurations have been sampled and all dispatched work has drained;
-//! phase 2 retrains the best identified configuration from scratch and
-//! reports that accuracy. Runtime excludes the retraining (comparable
-//! across optimizers) and includes validation evaluation time.
+//! [`Tuner::run`] takes a declarative [`ExperimentSpec`] — the one
+//! construction path shared with the CLI and the tuning service — and
+//! reproduces the paper's two-phase experimental protocol (§5.1):
+//! phase 1 runs the optimizer until N = 256 candidate configurations
+//! have been sampled and all dispatched work has drained; phase 2
+//! retrains the best identified configuration from scratch and reports
+//! that accuracy. Runtime excludes the retraining (comparable across
+//! optimizers) and includes validation evaluation time.
 //!
-//! Termination is expressed through the engine's pluggable stopping
-//! rules: the classic config budget always applies, and [`StopSpec`]
-//! adds epoch/clock budgets on top. [`Tuner::run_repeated`] fans the
-//! `sched_seeds × bench_seeds` repetition grid across a scoped thread
-//! pool — every repetition is an independent deterministic simulation,
-//! so the results are identical to the serial driver
-//! ([`Tuner::run_repeated_serial`]), just several times faster on
-//! multi-core machines.
+//! [`Tuner::run_with`] is the lower-level entry point over
+//! already-built parts (benchmark + scheduler builder + [`TunerSpec`]),
+//! used by the report grid so repetitions can share one benchmark
+//! instance. Termination is expressed through the engine's pluggable
+//! stopping rules: the classic config budget always applies, and
+//! [`StopSpec`] adds epoch/clock budgets on top.
+//! [`Tuner::run_repeated_with`] fans the `sched_seeds × bench_seeds`
+//! repetition grid across a scoped thread pool — every repetition is an
+//! independent deterministic simulation, so the results are identical
+//! to the serial driver ([`Tuner::run_repeated_serial`]), just several
+//! times faster on multi-core machines.
 
-use crate::benchmarks::lcbench::LcBench;
-use crate::benchmarks::nasbench201::NasBench201;
-use crate::benchmarks::pd1::Pd1;
 use crate::benchmarks::Benchmark;
 use crate::config::space::Config;
 use crate::executor::engine::{ClockBudget, ConfigBudget, EpochBudget, StoppingRule};
+use crate::executor::pool::{PoolBackend, SharedSurrogate};
 use crate::executor::sim::{SimBackend, SimStats};
 use crate::executor::{run_engine, SurrogateEvaluator};
-use crate::scheduler::asha::AshaBuilder;
-use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
-use crate::scheduler::hyperband::HyperbandBuilder;
-use crate::scheduler::pasha::PashaBuilder;
-use crate::scheduler::sh::SyncShBuilder;
-use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
-use crate::scheduler::SchedulerBuilder;
-use crate::searcher::bo::BoSearcher;
-use crate::searcher::random::RandomSearcher;
+use crate::ranking::RankingSpec;
+use crate::scheduler::{Scheduler, SchedulerBuilder};
 use crate::searcher::Searcher;
+use crate::spec::{BenchSpec, ExecBackendKind, ExperimentSpec, SchedulerSpec, SearcherSpec};
 use crate::util::parallel::{available_threads, par_map};
-use crate::util::rng::mix;
+use std::sync::Arc;
 
-/// Which proposal strategy the tuner uses.
+/// Which proposal strategy the tuner uses, by wire name. Kept for the
+/// legacy construction paths; [`SearcherSpec`] is the canonical form and
+/// additionally carries the BO hyperparameters.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SearcherKind {
     Random,
@@ -60,67 +59,42 @@ impl SearcherKind {
             SearcherKind::Bo => "bo",
         }
     }
-}
 
-/// Benchmark registry shared by the CLI and the tuning service: resolve a
-/// benchmark by its wire name (`nas-cifar10`, `pd1-wmt`, `lcbench-<ds>`…).
-pub fn bench_from_name(name: &str) -> Result<Box<dyn Benchmark>, String> {
-    Ok(match name {
-        "nas-cifar10" => Box::new(NasBench201::cifar10()),
-        "nas-cifar100" => Box::new(NasBench201::cifar100()),
-        "nas-imagenet16" => Box::new(NasBench201::imagenet16()),
-        "pd1-wmt" => Box::new(Pd1::wmt()),
-        "pd1-imagenet" => Box::new(Pd1::imagenet()),
-        other => {
-            if let Some(ds) = other.strip_prefix("lcbench-") {
-                Box::new(LcBench::new(ds))
-            } else {
-                return Err(format!("unknown benchmark '{other}'"));
-            }
+    /// The canonical spec this kind lowers to (BO gets the default
+    /// hyperparameters, exactly what the legacy factory built).
+    pub fn to_spec(&self) -> SearcherSpec {
+        match self {
+            SearcherKind::Random => SearcherSpec::Random,
+            SearcherKind::Bo => SearcherSpec::Bo(Default::default()),
         }
-    })
+    }
 }
 
-/// Scheduler registry shared by the CLI and the tuning service. `budget`
-/// only matters for synchronous SH (its initial cohort size).
+/// Resolve a benchmark by its wire name.
+#[deprecated(note = "use spec::BenchSpec::new(name).build() — specs are the construction path")]
+pub fn bench_from_name(name: &str) -> Result<Box<dyn Benchmark>, String> {
+    BenchSpec::new(name).build()
+}
+
+/// Resolve a scheduler by its wire name with the legacy hardcoded knobs
+/// (`r_min = 1`, default ranking). `budget` only matters for synchronous
+/// SH (its initial cohort size).
+#[deprecated(
+    note = "use spec::SchedulerSpec::from_name(...).builder(budget) — it exposes r_min and \
+            the ranking function"
+)]
 pub fn scheduler_from_name(
     name: &str,
     eta: u32,
     budget: usize,
 ) -> Result<Box<dyn SchedulerBuilder>, String> {
-    Ok(match name {
-        "asha" => Box::new(AshaBuilder { r_min: 1, eta }),
-        "pasha" => Box::new(PashaBuilder {
-            r_min: 1,
-            eta,
-            ranking: Default::default(),
-        }),
-        "asha-stop" => Box::new(StopAshaBuilder { r_min: 1, eta }),
-        "pasha-stop" => Box::new(StopPashaBuilder {
-            r_min: 1,
-            eta,
-            ranking: Default::default(),
-        }),
-        "sh" => Box::new(SyncShBuilder {
-            r_min: 1,
-            eta,
-            n0: budget,
-        }),
-        "hyperband" => Box::new(HyperbandBuilder { r_min: 1, eta }),
-        "1-epoch" => Box::new(FixedEpochBuilder { epochs: 1 }),
-        "random" => Box::new(RandomBaselineBuilder),
-        other => return Err(format!("unknown scheduler '{other}'")),
-    })
+    SchedulerSpec::from_name(name, 1, eta, RankingSpec::default())?.builder(budget)
 }
 
-/// The searcher a repetition with scheduler seed `sched_seed` uses — one
-/// derivation shared by [`Tuner::run`] and the service session builder,
-/// so a served session reproduces the in-process run exactly.
+/// The searcher a repetition with scheduler seed `sched_seed` uses.
+#[deprecated(note = "use spec::SearcherSpec::build(sched_seed)")]
 pub fn searcher_for(kind: &SearcherKind, sched_seed: u64) -> Box<dyn Searcher> {
-    match kind {
-        SearcherKind::Random => Box::new(RandomSearcher::new(mix(&[sched_seed, 0x5EA2C4]))),
-        SearcherKind::Bo => Box::new(BoSearcher::new(mix(&[sched_seed, 0xB0]))),
-    }
+    kind.to_spec().build(sched_seed)
 }
 
 /// Extra stopping rules layered on top of the config budget (cloneable
@@ -144,14 +118,15 @@ impl StopSpec {
     }
 }
 
-/// Experiment-level knobs (paper defaults).
+/// Experiment-level knobs for the lower-level [`Tuner::run_with`] entry
+/// point (paper defaults). [`ExperimentSpec`] lowers into this.
 #[derive(Clone, Debug)]
 pub struct TunerSpec {
     /// Parallel asynchronous workers (paper: 4).
     pub workers: usize,
     /// Candidate configurations to sample (paper: N = 256).
     pub config_budget: usize,
-    pub searcher: SearcherKind,
+    pub searcher: SearcherSpec,
     /// Additional stopping rules (empty = classic N-config protocol).
     pub extra_stop: Vec<StopSpec>,
 }
@@ -161,8 +136,28 @@ impl Default for TunerSpec {
         TunerSpec {
             workers: 4,
             config_budget: 256,
-            searcher: SearcherKind::Random,
+            searcher: SearcherSpec::Random,
             extra_stop: Vec::new(),
+        }
+    }
+}
+
+impl From<&ExperimentSpec> for TunerSpec {
+    /// Lower the execution/stopping slice of an experiment spec (same
+    /// rule order the CLI has always used: epoch budget, then clock).
+    fn from(spec: &ExperimentSpec) -> TunerSpec {
+        let mut extra_stop = Vec::new();
+        if let Some(e) = spec.stop.epoch_budget {
+            extra_stop.push(StopSpec::EpochBudget(e));
+        }
+        if let Some(t) = spec.stop.time_budget {
+            extra_stop.push(StopSpec::ClockBudget(t));
+        }
+        TunerSpec {
+            workers: spec.exec.workers,
+            config_budget: spec.stop.config_budget,
+            searcher: spec.searcher.clone(),
+            extra_stop,
         }
     }
 }
@@ -235,10 +230,58 @@ impl PartialEq for TuneResult {
 pub struct Tuner;
 
 impl Tuner {
-    /// Run one repetition: `sched_seed` drives the searcher's sampling
-    /// stream, `bench_seed` selects the benchmark's training seed
-    /// (NASBench201 provides 3; the paper averages over both).
-    pub fn run(
+    /// Run the experiment a spec describes: build the benchmark,
+    /// scheduler, and searcher from it, execute one repetition with the
+    /// spec's own seeds on the spec's backend, and report the result.
+    /// On the default `sim` backend this is deterministic; the `pool`
+    /// backend runs on real threads (wall-clock runtime, completion
+    /// order not reproducible).
+    pub fn run(spec: &ExperimentSpec) -> Result<TuneResult, String> {
+        spec.validate()?;
+        let bench = spec.bench.build()?;
+        let builder = spec.scheduler.builder(spec.stop.config_budget)?;
+        let tspec = TunerSpec::from(spec);
+        match spec.exec.backend {
+            ExecBackendKind::Sim => Ok(Self::run_with(
+                bench.as_ref(),
+                builder.as_ref(),
+                &tspec,
+                spec.seed,
+                spec.bench_seed,
+            )),
+            ExecBackendKind::Pool => Ok(Self::run_on_pool(bench, builder.as_ref(), &tspec, spec)),
+        }
+    }
+
+    /// The spec-driven repetition grid: one deterministic simulation per
+    /// `(sched_seed, bench_seed)` pair, fanned across cores, overriding
+    /// the spec's own seeds. Requires the `sim` backend (the pool is not
+    /// reproducible, which is the grid's whole contract).
+    pub fn run_repeated(
+        spec: &ExperimentSpec,
+        sched_seeds: &[u64],
+        bench_seeds: &[u64],
+    ) -> Result<Vec<TuneResult>, String> {
+        spec.validate()?;
+        if spec.exec.backend != ExecBackendKind::Sim {
+            return Err("field 'exec.backend': repetition grids require the 'sim' backend".into());
+        }
+        let bench = spec.bench.build()?;
+        let builder = spec.scheduler.builder(spec.stop.config_budget)?;
+        Ok(Self::run_repeated_with(
+            bench.as_ref(),
+            builder.as_ref(),
+            &TunerSpec::from(spec),
+            sched_seeds,
+            bench_seeds,
+        ))
+    }
+
+    /// Run one repetition over already-built parts: `sched_seed` drives
+    /// the searcher's sampling stream, `bench_seed` selects the
+    /// benchmark's training seed (NASBench201 provides 3; the paper
+    /// averages over both).
+    pub fn run_with(
         bench: &dyn Benchmark,
         builder: &dyn SchedulerBuilder,
         spec: &TunerSpec,
@@ -246,7 +289,7 @@ impl Tuner {
         bench_seed: u64,
     ) -> TuneResult {
         let mut scheduler = builder.build(bench.max_epochs(), sched_seed);
-        let mut searcher: Box<dyn Searcher> = searcher_for(&spec.searcher, sched_seed);
+        let mut searcher: Box<dyn Searcher> = spec.searcher.build(sched_seed);
         let mut evaluator = SurrogateEvaluator { bench, bench_seed };
         let mut backend = SimBackend::new(spec.workers, &mut evaluator);
         let rules = spec.rules();
@@ -257,13 +300,60 @@ impl Tuner {
             &rules,
             &mut backend,
         );
+        Self::collect(builder.name(), scheduler, stats, bench, bench_seed)
+    }
+
+    /// One repetition on the wall-clock thread pool (spec backend
+    /// `pool`): same surrogate oracle, real `std::thread` workers.
+    fn run_on_pool(
+        bench: Box<dyn Benchmark>,
+        builder: &dyn SchedulerBuilder,
+        tspec: &TunerSpec,
+        spec: &ExperimentSpec,
+    ) -> TuneResult {
+        let mut scheduler = builder.build(bench.max_epochs(), spec.seed);
+        let mut searcher: Box<dyn Searcher> = tspec.searcher.build(spec.seed);
+        let space = bench.space().clone();
+        let shared = Arc::new(SharedSurrogate {
+            bench,
+            bench_seed: spec.bench_seed,
+        });
+        let rules = tspec.rules();
+        let stats = {
+            let mut backend = PoolBackend::spawn(tspec.workers, shared.clone());
+            run_engine(
+                scheduler.as_mut(),
+                searcher.as_mut(),
+                &space,
+                &rules,
+                &mut backend,
+            )
+        };
+        Self::collect(
+            builder.name(),
+            scheduler,
+            stats,
+            shared.bench.as_ref(),
+            spec.bench_seed,
+        )
+    }
+
+    /// Phase 2 + bookkeeping: retrain the incumbent and assemble the
+    /// result record.
+    fn collect(
+        scheduler_name: String,
+        scheduler: Box<dyn Scheduler>,
+        stats: SimStats,
+        bench: &dyn Benchmark,
+        bench_seed: u64,
+    ) -> TuneResult {
         let best = scheduler.best();
         let retrain_accuracy = best
             .as_ref()
             .map(|b| bench.retrain_accuracy(&b.config, bench_seed))
             .unwrap_or(f64::NAN);
         TuneResult {
-            scheduler_name: builder.name(),
+            scheduler_name,
             best_metric: best.as_ref().map(|b| b.metric).unwrap_or(f64::NAN),
             best_config: best.map(|b| b.config),
             retrain_accuracy,
@@ -278,13 +368,13 @@ impl Tuner {
         }
     }
 
-    /// The `sched_seeds × bench_seeds` repetition grid (the paper's NAS
-    /// experiments use 5 scheduler × 3 benchmark seeds = 15), fanned out
-    /// across the machine's cores. Each repetition is an independent
-    /// deterministic simulation keyed by `(sched_seed, bench_seed)`, so
-    /// the output is identical to [`Tuner::run_repeated_serial`] in both
-    /// content and order.
-    pub fn run_repeated(
+    /// The `sched_seeds × bench_seeds` repetition grid over already-built
+    /// parts (the paper's NAS experiments use 5 scheduler × 3 benchmark
+    /// seeds = 15), fanned out across the machine's cores. Each
+    /// repetition is an independent deterministic simulation keyed by
+    /// `(sched_seed, bench_seed)`, so the output is identical to
+    /// [`Tuner::run_repeated_serial`] in both content and order.
+    pub fn run_repeated_with(
         bench: &dyn Benchmark,
         builder: &dyn SchedulerBuilder,
         spec: &TunerSpec,
@@ -295,7 +385,7 @@ impl Tuner {
         Self::run_repeated_threads(bench, builder, spec, sched_seeds, bench_seeds, threads)
     }
 
-    /// [`Tuner::run_repeated`] with an explicit thread count (1 =
+    /// [`Tuner::run_repeated_with`] with an explicit thread count (1 =
     /// serial execution on the calling thread).
     pub fn run_repeated_threads(
         bench: &dyn Benchmark,
@@ -310,7 +400,7 @@ impl Tuner {
             .flat_map(|&ss| bench_seeds.iter().map(move |&bs| (ss, bs)))
             .collect();
         par_map(&grid, threads, |_, &(ss, bs)| {
-            Self::run(bench, builder, spec, ss, bs)
+            Self::run_with(bench, builder, spec, ss, bs)
         })
     }
 
@@ -341,7 +431,7 @@ mod tests {
         TunerSpec {
             workers: 4,
             config_budget: 64,
-            searcher: SearcherKind::Random,
+            searcher: SearcherSpec::Random,
             extra_stop: Vec::new(),
         }
     }
@@ -357,11 +447,11 @@ mod tests {
         let seeds = [0u64, 1, 2];
         let asha: Vec<TuneResult> = seeds
             .iter()
-            .map(|&s| Tuner::run(&bench, &AshaBuilder::default(), &spec, s, 0))
+            .map(|&s| Tuner::run_with(&bench, &AshaBuilder::default(), &spec, s, 0))
             .collect();
         let pasha: Vec<TuneResult> = seeds
             .iter()
-            .map(|&s| Tuner::run(&bench, &PashaBuilder::default(), &spec, s, 0))
+            .map(|&s| Tuner::run_with(&bench, &PashaBuilder::default(), &spec, s, 0))
             .collect();
         let asha_acc = stats::mean(&asha.iter().map(|r| r.retrain_accuracy).collect::<Vec<_>>());
         let pasha_acc =
@@ -386,7 +476,7 @@ mod tests {
         let spec = small_spec();
         let acc = |b: &dyn SchedulerBuilder| {
             let rs: Vec<f64> = (0..3)
-                .map(|s| Tuner::run(&bench, b, &spec, s, 0).retrain_accuracy)
+                .map(|s| Tuner::run_with(&bench, b, &spec, s, 0).retrain_accuracy)
                 .collect();
             stats::mean(&rs)
         };
@@ -404,12 +494,83 @@ mod tests {
     fn budget_and_drain_invariants() {
         let bench = NasBench201::cifar10();
         let spec = small_spec();
-        let r = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+        let r = Tuner::run_with(&bench, &PashaBuilder::default(), &spec, 0, 0);
         assert_eq!(r.configs_sampled, 64);
         assert!(r.max_resources <= bench.max_epochs());
         assert!(r.best_config.is_some());
         assert!(r.retrain_accuracy > 0.0);
         assert_eq!(r.cancelled_jobs, 0, "promotion-type never cancels");
+    }
+
+    #[test]
+    fn spec_run_matches_part_wise_run() {
+        // The redesigned entry point: Tuner::run over a declarative spec
+        // must be bit-identical to building the parts by hand.
+        let spec = ExperimentSpec {
+            bench: BenchSpec::new("nas-cifar10"),
+            stop: crate::spec::StopRules {
+                config_budget: 32,
+                ..Default::default()
+            },
+            seed: 3,
+            ..ExperimentSpec::default()
+        };
+        let from_spec = Tuner::run(&spec).unwrap();
+        let bench = NasBench201::cifar10();
+        let parts = Tuner::run_with(
+            &bench,
+            &PashaBuilder::default(),
+            &TunerSpec {
+                config_budget: 32,
+                ..small_spec()
+            },
+            3,
+            0,
+        );
+        assert_eq!(from_spec, parts);
+    }
+
+    #[test]
+    fn spec_grid_matches_part_wise_grid() {
+        let spec = ExperimentSpec {
+            bench: BenchSpec::new("nas-cifar10"),
+            stop: crate::spec::StopRules {
+                config_budget: 16,
+                ..Default::default()
+            },
+            ..ExperimentSpec::default()
+        };
+        let from_spec = Tuner::run_repeated(&spec, &[0, 1], &[0]).unwrap();
+        let bench = NasBench201::cifar10();
+        let parts = Tuner::run_repeated_with(
+            &bench,
+            &PashaBuilder::default(),
+            &TunerSpec {
+                config_budget: 16,
+                ..small_spec()
+            },
+            &[0, 1],
+            &[0],
+        );
+        assert_eq!(from_spec, parts);
+    }
+
+    #[test]
+    fn pool_backend_runs_a_spec_end_to_end() {
+        let mut spec = ExperimentSpec {
+            bench: BenchSpec::new("nas-cifar10"),
+            ..ExperimentSpec::default()
+        };
+        spec.stop.config_budget = 16;
+        spec.exec.backend = ExecBackendKind::Pool;
+        spec.exec.workers = 2;
+        let r = Tuner::run(&spec).unwrap();
+        assert_eq!(r.configs_sampled, 16);
+        assert!(r.best_config.is_some());
+        assert!(r.retrain_accuracy > 0.0);
+        // grids refuse the non-reproducible backend
+        let err = Tuner::run_repeated(&spec, &[0], &[0]).unwrap_err();
+        assert!(err.contains("exec.backend"), "{err}");
     }
 
     #[test]
@@ -419,7 +580,7 @@ mod tests {
             config_budget: 16,
             ..small_spec()
         };
-        let rs = Tuner::run_repeated(
+        let rs = Tuner::run_repeated_with(
             &bench,
             &FixedEpochBuilder { epochs: 1 },
             &spec,
@@ -463,7 +624,7 @@ mod tests {
         let mean_of = |b: &dyn SchedulerBuilder, f: &dyn Fn(&TuneResult) -> f64| {
             let rs: Vec<f64> = seeds
                 .iter()
-                .map(|&s| f(&Tuner::run(&bench, b, &spec, s, 0)))
+                .map(|&s| f(&Tuner::run_with(&bench, b, &spec, s, 0)))
                 .collect();
             stats::mean(&rs)
         };
@@ -489,13 +650,13 @@ mod tests {
     #[test]
     fn clock_budget_truncates_run() {
         let bench = NasBench201::cifar10();
-        let full = Tuner::run(&bench, &AshaBuilder::default(), &small_spec(), 0, 0);
+        let full = Tuner::run_with(&bench, &AshaBuilder::default(), &small_spec(), 0, 0);
         let budget = full.runtime_seconds * 0.25;
         let spec = TunerSpec {
             extra_stop: vec![StopSpec::ClockBudget(budget)],
             ..small_spec()
         };
-        let cut = Tuner::run(&bench, &AshaBuilder::default(), &spec, 0, 0);
+        let cut = Tuner::run_with(&bench, &AshaBuilder::default(), &spec, 0, 0);
         assert!(cut.runtime_seconds <= budget + 1e-9);
         assert!(cut.total_epochs < full.total_epochs);
         assert!(cut.cancelled_jobs > 0, "halt must cancel in-flight work");
@@ -509,7 +670,7 @@ mod tests {
             extra_stop: vec![StopSpec::EpochBudget(40)],
             ..small_spec()
         };
-        let r = Tuner::run(&bench, &AshaBuilder::default(), &spec, 0, 0);
+        let r = Tuner::run_with(&bench, &AshaBuilder::default(), &spec, 0, 0);
         // Drain semantics: dispatch stops once 40 epochs are out; the
         // budget-crossing job and everything in flight still complete
         // (early ASHA jobs are 1–8 epochs, so the overshoot is small)
@@ -527,11 +688,11 @@ mod tests {
     fn bo_searcher_runs_end_to_end() {
         let bench = NasBench201::cifar10();
         let spec = TunerSpec {
-            searcher: SearcherKind::Bo,
+            searcher: SearcherKind::Bo.to_spec(),
             config_budget: 32,
             ..small_spec()
         };
-        let r = Tuner::run(&bench, &PashaBuilder::default(), &spec, 0, 0);
+        let r = Tuner::run_with(&bench, &PashaBuilder::default(), &spec, 0, 0);
         assert!(r.retrain_accuracy > 50.0, "BO run sane: {}", r.retrain_accuracy);
     }
 
@@ -543,8 +704,8 @@ mod tests {
             config_budget: 48,
             ..small_spec()
         };
-        let asha = Tuner::run(&bench, &AshaBuilder::default(), &spec, 1, 0);
-        let pasha = Tuner::run(&bench, &PashaBuilder::default(), &spec, 1, 0);
+        let asha = Tuner::run_with(&bench, &AshaBuilder::default(), &spec, 1, 0);
+        let pasha = Tuner::run_with(&bench, &PashaBuilder::default(), &spec, 1, 0);
         assert!(
             pasha.runtime_seconds * 2.0 < asha.runtime_seconds,
             "pasha {} vs asha {}",
@@ -552,5 +713,27 @@ mod tests {
             asha.runtime_seconds
         );
         assert!(pasha.max_resources < asha.max_resources);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_factories_match_spec_construction() {
+        // The deprecated wrappers must stay bit-compatible: they now
+        // produce specs internally, and the outputs must be what the old
+        // hand-rolled factories built.
+        let bench = bench_from_name("nas-cifar10").unwrap();
+        assert_eq!(bench.name(), NasBench201::cifar10().name());
+        assert!(bench_from_name("nope").is_err());
+        let builder = scheduler_from_name("pasha", 3, 64).unwrap();
+        assert_eq!(builder.name(), "PASHA");
+        let spec_builder = SchedulerSpec::from_name("pasha", 1, 3, RankingSpec::default())
+            .unwrap()
+            .builder(64)
+            .unwrap();
+        let r1 = Tuner::run_with(&*bench, &*builder, &small_spec(), 0, 0);
+        let r2 = Tuner::run_with(&*bench, &*spec_builder, &small_spec(), 0, 0);
+        assert_eq!(r1, r2);
+        let s = searcher_for(&SearcherKind::Random, 9);
+        assert_eq!(s.name(), SearcherSpec::Random.build(9).name());
     }
 }

@@ -31,7 +31,7 @@ fn mean_over_seeds(
     f: impl Fn(&TuneResult) -> f64,
 ) -> f64 {
     let rs: Vec<f64> = (0..3u64)
-        .map(|s| f(&Tuner::run(bench, builder, &spec(budget), s, 0)))
+        .map(|s| f(&Tuner::run_with(bench, builder, &spec(budget), s, 0)))
         .collect();
     mean(&rs)
 }
@@ -91,19 +91,19 @@ fn cancelled_work_never_reaches_trial_state() {
     // curve length from trained_epochs, and ShCore::record would panic
     // on the gap in debug builds).
     let bench = NasBench201::cifar10();
-    let full = Tuner::run(&bench, &AshaBuilder::default(), &spec(48), 0, 0);
+    let full = Tuner::run_with(&bench, &AshaBuilder::default(), &spec(48), 0, 0);
     assert!(full.cancelled_jobs == 0);
     let s = TunerSpec {
         extra_stop: vec![StopSpec::ClockBudget(full.runtime_seconds * 0.3)],
         ..spec(48)
     };
-    let cut = Tuner::run(&bench, &AshaBuilder::default(), &s, 0, 0);
+    let cut = Tuner::run_with(&bench, &AshaBuilder::default(), &s, 0, 0);
     assert!(cut.cancelled_jobs > 0, "halt must cancel in-flight work");
     assert!(cut.runtime_seconds <= full.runtime_seconds * 0.3 + 1e-9);
     assert!(cut.total_epochs < full.total_epochs);
     // Stopping-type run: stopped trials stay frozen at their last
     // delivered milestone.
-    let st = Tuner::run(&bench, &StopAshaBuilder::default(), &spec(48), 0, 0);
+    let st = Tuner::run_with(&bench, &StopAshaBuilder::default(), &spec(48), 0, 0);
     assert!(st.stopped_trials > 0);
     assert_eq!(st.configs_sampled, 48);
 }
@@ -117,13 +117,13 @@ fn parallel_grid_matches_serial_reference_across_benchmarks() {
     let nas = NasBench201::cifar10();
     let pasha = PashaBuilder::default();
     let serial = Tuner::run_repeated_serial(&nas, &pasha, &s, &sched_seeds, &bench_seeds);
-    let parallel = Tuner::run_repeated(&nas, &pasha, &s, &sched_seeds, &bench_seeds);
+    let parallel = Tuner::run_repeated_with(&nas, &pasha, &s, &sched_seeds, &bench_seeds);
     assert_eq!(serial, parallel, "NASBench201 grid must be reproducible");
 
     let pd1 = Pd1::wmt();
     let pstop = StopPashaBuilder::default();
     let serial = Tuner::run_repeated_serial(&pd1, &pstop, &s, &sched_seeds, &[0]);
-    let parallel = Tuner::run_repeated(&pd1, &pstop, &s, &sched_seeds, &[0]);
+    let parallel = Tuner::run_repeated_with(&pd1, &pstop, &s, &sched_seeds, &[0]);
     assert_eq!(serial, parallel, "PD1 stopping-type grid must be reproducible");
 
     // Order is (sched_seed-major, bench_seed-minor): rows with the same

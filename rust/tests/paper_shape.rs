@@ -29,7 +29,7 @@ fn runs(
     seeds: std::ops::Range<u64>,
 ) -> Vec<TuneResult> {
     seeds
-        .map(|s| Tuner::run(bench, b, &spec(budget), s, s % 3))
+        .map(|s| Tuner::run_with(bench, b, &spec(budget), s, s % 3))
         .collect()
 }
 
@@ -209,7 +209,7 @@ fn protocol_invariants() {
         Box::new(RandomBaselineBuilder),
     ];
     for b in &builders {
-        let r = Tuner::run(&bench, b.as_ref(), &spec(64), 0, 0);
+        let r = Tuner::run_with(&bench, b.as_ref(), &spec(64), 0, 0);
         assert_eq!(r.configs_sampled, 64, "{}", b.name());
         assert!(r.max_resources <= bench.max_epochs());
         assert!(r.best_config.is_some());

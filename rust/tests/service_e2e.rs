@@ -27,9 +27,10 @@ use pasha::benchmarks::Benchmark;
 use pasha::scheduler::asktell::{assignment_json, config_from_json, TellAck, TrialAssignment};
 use pasha::service::journal::snapshot_path;
 use pasha::service::{
-    run_worker, run_worker_batched, Client, Registry, Server, Session, SessionOptions, SessionSpec,
+    run_worker, run_worker_batched, Client, Registry, Server, Session, SessionOptions,
 };
-use pasha::tuner::{bench_from_name, scheduler_from_name, SearcherKind, Tuner, TunerSpec};
+use pasha::spec::{ExperimentSpec, SearcherSpec};
+use pasha::tuner::Tuner;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -153,25 +154,21 @@ fn replay_tail(session: &mut Session, tail: &[&Traced], label: &str) -> usize {
     asks
 }
 
-fn spec_for(scheduler: &str, searcher: SearcherKind, budget: usize) -> SessionSpec {
-    SessionSpec {
-        bench: "lcbench-Fashion-MNIST".into(),
-        scheduler: scheduler.into(),
-        searcher,
-        seed: 5,
-        bench_seed: 0,
-        config_budget: budget,
-        ..SessionSpec::default()
-    }
+fn spec_for(scheduler: &str, searcher: SearcherSpec, budget: usize) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", scheduler).unwrap();
+    spec.searcher = searcher;
+    spec.seed = 5;
+    spec.stop.config_budget = budget;
+    spec
 }
 
 /// The recovery property for one session spec: every cut of the journal
 /// recovers to a state whose continuation is byte-identical to the
 /// uninterrupted run.
-fn check_recovery(label: &str, spec: SessionSpec, workers: usize) {
+fn check_recovery(label: &str, spec: ExperimentSpec, workers: usize) {
     let dir = tmp_dir(label);
     let path = dir.join("session.jsonl");
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
 
     let mut live = Session::create("s0", spec.clone(), Some(&path)).unwrap();
     let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, workers);
@@ -235,31 +232,31 @@ fn check_recovery(label: &str, spec: SessionSpec, workers: usize) {
 
 #[test]
 fn recovery_asha() {
-    check_recovery("asha", spec_for("asha", SearcherKind::Random, 32), 3);
+    check_recovery("asha", spec_for("asha", SearcherSpec::Random, 32), 3);
 }
 
 #[test]
 fn recovery_pasha() {
-    check_recovery("pasha", spec_for("pasha", SearcherKind::Random, 32), 3);
+    check_recovery("pasha", spec_for("pasha", SearcherSpec::Random, 32), 3);
 }
 
 #[test]
 fn recovery_asha_stop() {
-    check_recovery("asha-stop", spec_for("asha-stop", SearcherKind::Random, 32), 3);
+    check_recovery("asha-stop", spec_for("asha-stop", SearcherSpec::Random, 32), 3);
 }
 
 #[test]
 fn recovery_pasha_stop_mid_rung_pause() {
     // The stopping-type PASHA session: kills land while trials are
     // paused at the resource cap and other jobs are mid-flight.
-    check_recovery("pasha-stop", spec_for("pasha-stop", SearcherKind::Random, 48), 3);
+    check_recovery("pasha-stop", spec_for("pasha-stop", SearcherSpec::Random, 48), 3);
 }
 
 #[test]
 fn recovery_bo_searcher() {
     // Model-based searcher: the GP's state is rebuilt through replayed
     // on_report calls, so ask responses stay byte-identical.
-    check_recovery("bo", spec_for("pasha", SearcherKind::Bo, 16), 2);
+    check_recovery("bo", spec_for("pasha", SearcherSpec::Bo(Default::default()), 16), 2);
 }
 
 /// The snapshot-equivalence property for one session spec: at every cut
@@ -267,10 +264,15 @@ fn recovery_bo_searcher() {
 /// full journal must reach the same state — byte-identical subsequent
 /// asks, identical tell acks, identical final incumbent — and the
 /// snapshot path must replay only post-snapshot events.
-fn check_snapshot_equivalence(label: &str, spec: SessionSpec, workers: usize, interval: usize) {
+fn check_snapshot_equivalence(
+    label: &str,
+    spec: ExperimentSpec,
+    workers: usize,
+    interval: usize,
+) {
     let dir = tmp_dir(&format!("snapeq-{label}"));
     let path = dir.join("session.jsonl");
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
 
     // Snapshots on, compaction off: the full journal stays available, so
     // any cut index can be reconstructed alongside its sidecar prefix.
@@ -376,19 +378,19 @@ fn check_snapshot_equivalence(label: &str, spec: SessionSpec, workers: usize, in
 
 #[test]
 fn snapshot_equivalence_asha() {
-    check_snapshot_equivalence("asha", spec_for("asha", SearcherKind::Random, 32), 3, 20);
+    check_snapshot_equivalence("asha", spec_for("asha", SearcherSpec::Random, 32), 3, 20);
 }
 
 #[test]
 fn snapshot_equivalence_pasha() {
-    check_snapshot_equivalence("pasha", spec_for("pasha", SearcherKind::Random, 32), 3, 20);
+    check_snapshot_equivalence("pasha", spec_for("pasha", SearcherSpec::Random, 32), 3, 20);
 }
 
 #[test]
 fn snapshot_equivalence_asha_stop() {
     check_snapshot_equivalence(
         "asha-stop",
-        spec_for("asha-stop", SearcherKind::Random, 32),
+        spec_for("asha-stop", SearcherSpec::Random, 32),
         3,
         20,
     );
@@ -398,7 +400,7 @@ fn snapshot_equivalence_asha_stop() {
 fn snapshot_equivalence_pasha_stop() {
     check_snapshot_equivalence(
         "pasha-stop",
-        spec_for("pasha-stop", SearcherKind::Random, 48),
+        spec_for("pasha-stop", SearcherSpec::Random, 48),
         3,
         20,
     );
@@ -408,7 +410,7 @@ fn snapshot_equivalence_pasha_stop() {
 fn snapshot_equivalence_bo_searcher() {
     // The GP searcher's state (RNG stream, folded + pending observations)
     // must survive the snapshot for asks to stay byte-identical.
-    check_snapshot_equivalence("bo", spec_for("pasha", SearcherKind::Bo, 16), 2, 12);
+    check_snapshot_equivalence("bo", spec_for("pasha", SearcherSpec::Bo(Default::default()), 16), 2, 12);
 }
 
 #[test]
@@ -416,10 +418,10 @@ fn torn_snapshot_fuzz_every_byte() {
     // Truncate the snapshot sidecar at EVERY byte boundary. Whatever
     // survives, recovery must pick the newest intact snapshot (or fall
     // back to full replay), never panic, and account exactly.
-    let spec = spec_for("asha", SearcherKind::Random, 8);
+    let spec = spec_for("asha", SearcherSpec::Random, 8);
     let dir = tmp_dir("snapfuzz");
     let path = dir.join("session.jsonl");
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
     let options = SessionOptions {
         snapshot_every: Some(12),
         compact_on_snapshot: false,
@@ -464,22 +466,16 @@ fn batched_wire_equivalence() {
     // worker keeps the op sequence identical between the two drivers
     // (promotion-type schedulers never cancel, so the batched driver
     // never overshoots an abandoned job).
-    let spec = SessionSpec {
-        bench: "lcbench-Fashion-MNIST".into(),
-        scheduler: "asha".into(),
-        searcher: SearcherKind::Random,
-        seed: 2,
-        bench_seed: 0,
-        config_budget: 16,
-        ..SessionSpec::default()
-    };
+    let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha").unwrap();
+    spec.seed = 2;
+    spec.stop.config_budget = 16;
     let dir = tmp_dir("batchwire");
     let registry = Registry::with_journal_dir(dir.clone()).unwrap();
     let server = Server::bind("127.0.0.1:0", Arc::new(registry)).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || server.run());
 
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
     let mut client = Client::connect(&addr).unwrap();
     let single_id = client.create(&spec).unwrap();
     let single = run_worker(
@@ -544,10 +540,10 @@ fn recover_readonly_at_snapshot_boundary_replays_nothing() {
     // so it ends exactly at a snapshot boundary must not re-scan (or
     // re-apply) pre-snapshot events — the report proves O(tail) with an
     // empty tail.
-    let spec = spec_for("asha", SearcherKind::Random, 12);
+    let spec = spec_for("asha", SearcherSpec::Random, 12);
     let dir = tmp_dir("snapboundary");
     let path = dir.join("session.jsonl");
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
     let options = SessionOptions::snapshot_every(10);
     let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
     let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, 2);
@@ -572,18 +568,12 @@ fn large_session_recovery_replays_only_post_snapshot_tail() {
     // recover by replaying only the post-snapshot tail, bounded by the
     // snapshot interval and the rotation lag — not the whole history.
     let interval = 1000usize;
-    let spec = SessionSpec {
-        bench: "lcbench-Fashion-MNIST".into(),
-        scheduler: "asha".into(),
-        searcher: SearcherKind::Random,
-        seed: 9,
-        bench_seed: 0,
-        config_budget: 2600,
-        ..SessionSpec::default()
-    };
+    let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha").unwrap();
+    spec.seed = 9;
+    spec.stop.config_budget = 2600;
     let dir = tmp_dir("large");
     let path = dir.join("session.jsonl");
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
     let options = SessionOptions::snapshot_every(interval);
     let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
     loop {
@@ -629,22 +619,16 @@ fn large_session_recovery_replays_only_post_snapshot_tail() {
 fn tcp_session_matches_inprocess_tuner() {
     // The acceptance bar: a full simulated LCBench session over real TCP
     // lands on the same incumbent as Tuner::run for the same seeds.
-    let spec = SessionSpec {
-        bench: "lcbench-Fashion-MNIST".into(),
-        scheduler: "pasha".into(),
-        searcher: SearcherKind::Random,
-        seed: 3,
-        bench_seed: 0,
-        config_budget: 24,
-        ..SessionSpec::default()
-    };
+    let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "pasha").unwrap();
+    spec.seed = 3;
+    spec.stop.config_budget = 24;
     let dir = tmp_dir("tcp");
     let registry = Registry::with_journal_dir(dir.clone()).unwrap();
     let server = Server::bind("127.0.0.1:0", Arc::new(registry)).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || server.run());
 
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
     let mut client = Client::connect(&addr).unwrap();
     let sid = client.create(&spec).unwrap();
     let report = run_worker(
@@ -665,14 +649,11 @@ fn tcp_session_matches_inprocess_tuner() {
     )
     .unwrap();
 
-    let tuner_spec = TunerSpec {
-        workers: 1,
-        config_budget: spec.config_budget,
-        searcher: SearcherKind::Random,
-        extra_stop: Vec::new(),
-    };
-    let builder = scheduler_from_name(&spec.scheduler, spec.eta, spec.config_budget).unwrap();
-    let inproc = Tuner::run(bench.as_ref(), builder.as_ref(), &tuner_spec, spec.seed, 0);
+    // the served session's own spec, lowered to a single in-process
+    // worker, must reproduce the incumbent bit-for-bit
+    let mut inproc_spec = spec.clone();
+    inproc_spec.exec.workers = 1;
+    let inproc = Tuner::run(&inproc_spec).unwrap();
     assert_eq!(
         served_best.to_bits(),
         inproc.best_metric.to_bits(),
@@ -699,19 +680,14 @@ fn tcp_session_matches_inprocess_tuner() {
 fn tcp_many_workers_drain_one_session() {
     // Concurrency smoke: several TCP workers share one session; the run
     // drains, every worker exits on Done, and the incumbent is sane.
-    let spec = SessionSpec {
-        bench: "lcbench-Fashion-MNIST".into(),
-        scheduler: "asha".into(),
-        searcher: SearcherKind::Random,
-        seed: 1,
-        config_budget: 16,
-        ..SessionSpec::default()
-    };
+    let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "asha").unwrap();
+    spec.seed = 1;
+    spec.stop.config_budget = 16;
     let server = Server::bind("127.0.0.1:0", Arc::new(Registry::in_memory())).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || server.run());
 
-    let bench = bench_from_name(&spec.bench).unwrap();
+    let bench = spec.bench.build().unwrap();
     let mut control = Client::connect(&addr).unwrap();
     let sid = control.create(&spec).unwrap();
     let reports: Vec<pasha::service::WorkerReport> = std::thread::scope(|scope| {

@@ -1,0 +1,460 @@
+//! The `ExperimentSpec` compatibility gates.
+//!
+//! * **Golden schema fixture** — specs constructed in code must serialize
+//!   byte-for-byte to `tests/fixtures/spec_v2.golden.jsonl`. Any schema
+//!   drift (a renamed field, a changed default, a reordered key) fails
+//!   here before it can corrupt journals in the wild.
+//! * **Round-trip property** — for randomly generated specs,
+//!   parse(serialize(spec)) == spec and serialize∘parse is byte-stable.
+//! * **v1 journal fixtures** — committed PR 3/4-era `ev_create` journals
+//!   must migrate through `ExperimentSpec::from_json` and recover; a
+//!   full generated v1 journal must recover with the byte-identical-ask
+//!   verification recovery performs on every replayed event.
+//! * **Legacy CLI equivalence** — for each legacy flag combination, the
+//!   lowered spec must produce a `TuneResult` bit-identical to the
+//!   deprecated factory path (`bench_from_name`/`scheduler_from_name`).
+
+use pasha::ranking::RankingSpec;
+use pasha::scheduler::asktell::{TellAck, TrialAssignment};
+use pasha::searcher::bo::BoConfig;
+use pasha::service::journal::ev_create;
+use pasha::service::Session;
+use pasha::spec::{
+    apply_flag_overrides, BenchSpec, DecisionMode, ExecBackendKind, ExecSpec, ExperimentSpec,
+    SchedulerSpec, SearcherSpec, StopRules,
+};
+use pasha::tuner::{StopSpec, Tuner, TunerSpec};
+use pasha::util::json::{parse, Json};
+use pasha::util::ptest::{check, Gen};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pasha-specrt-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The specs pinned by the golden fixture, in file order.
+fn golden_specs() -> Vec<ExperimentSpec> {
+    let default = ExperimentSpec::default();
+    let kitchen_sink = ExperimentSpec {
+        bench: BenchSpec::new("pd1-wmt"),
+        scheduler: SchedulerSpec::Asha {
+            r_min: 2,
+            eta: 4,
+            mode: DecisionMode::Stop,
+        },
+        searcher: SearcherSpec::Bo(BoConfig::default()),
+        exec: ExecSpec {
+            workers: 8,
+            backend: ExecBackendKind::Pool,
+        },
+        stop: StopRules {
+            config_budget: 64,
+            epoch_budget: Some(4000),
+            time_budget: Some(3600.5),
+        },
+        seed: 42,
+        bench_seed: 7,
+    };
+    let rbo = ExperimentSpec {
+        bench: BenchSpec::new("lcbench-Fashion-MNIST"),
+        scheduler: SchedulerSpec::Pasha {
+            r_min: 1,
+            eta: 3,
+            mode: DecisionMode::Promote,
+            ranking: RankingSpec::Rbo { p: 0.9, t: 0.5 },
+        },
+        stop: StopRules {
+            config_budget: 32,
+            ..Default::default()
+        },
+        seed: 5,
+        ..ExperimentSpec::default()
+    };
+    vec![default, kitchen_sink, rbo]
+}
+
+#[test]
+fn golden_schema_fixture_pins_the_wire_format() {
+    let golden = std::fs::read_to_string(fixture("spec_v2.golden.jsonl")).unwrap();
+    let lines: Vec<&str> = golden.lines().collect();
+    let specs = golden_specs();
+    assert_eq!(lines.len(), specs.len(), "fixture line count");
+    for (i, (spec, line)) in specs.iter().zip(&lines).enumerate() {
+        assert_eq!(
+            &spec.to_json().to_string_compact(),
+            line,
+            "golden spec #{i} drifted — the v2 wire schema changed; if this is \
+             intentional, bump the spec version and regenerate the fixture"
+        );
+        // and the pinned bytes parse back to the same spec
+        let back = ExperimentSpec::from_json(&parse(line).unwrap()).unwrap();
+        assert_eq!(&back, spec, "golden spec #{i} re-parse");
+    }
+}
+
+fn gen_ranking(g: &mut Gen) -> RankingSpec {
+    match g.usize(0, 8) {
+        0 => RankingSpec::NoiseAdaptive {
+            percentile: g.f64(1.0, 100.0),
+        },
+        1 => RankingSpec::Direct,
+        2 => RankingSpec::SoftFixed {
+            epsilon: g.f64(0.0, 5.0),
+        },
+        3 => RankingSpec::SoftSigma {
+            mult: g.f64(0.1, 4.0),
+        },
+        4 => RankingSpec::SoftMeanGap,
+        5 => RankingSpec::SoftMedianGap,
+        6 => RankingSpec::Rbo {
+            p: g.f64(0.05, 1.0),
+            t: g.f64(0.0, 1.0),
+        },
+        7 => RankingSpec::Rrr {
+            p: g.f64(0.05, 1.0),
+            t: g.f64(0.0, 0.5),
+        },
+        _ => RankingSpec::Arrr {
+            p: g.f64(0.05, 1.0),
+            t: g.f64(0.0, 0.5),
+        },
+    }
+}
+
+fn gen_spec(g: &mut Gen) -> ExperimentSpec {
+    let benches = [
+        "nas-cifar10",
+        "nas-cifar100",
+        "nas-imagenet16",
+        "pd1-wmt",
+        "pd1-imagenet",
+        "lcbench-Fashion-MNIST",
+    ];
+    let bench = BenchSpec::new(benches[g.usize(0, benches.len() - 1)]);
+    let r_min = g.usize(1, 4) as u32;
+    let eta = g.usize(2, 5) as u32;
+    let scheduler = match g.usize(0, 5) {
+        0 => SchedulerSpec::Asha {
+            r_min,
+            eta,
+            mode: if g.bool() {
+                DecisionMode::Promote
+            } else {
+                DecisionMode::Stop
+            },
+        },
+        1 => SchedulerSpec::Pasha {
+            r_min,
+            eta,
+            mode: if g.bool() {
+                DecisionMode::Promote
+            } else {
+                DecisionMode::Stop
+            },
+            ranking: gen_ranking(g),
+        },
+        2 => SchedulerSpec::Sh { r_min, eta },
+        3 => SchedulerSpec::Hyperband { r_min, eta },
+        4 => SchedulerSpec::FixedEpoch {
+            epochs: g.usize(1, 10) as u32,
+        },
+        _ => SchedulerSpec::RandomBaseline,
+    };
+    let searcher = if g.bool() {
+        SearcherSpec::Random
+    } else {
+        SearcherSpec::Bo(BoConfig {
+            min_points: g.usize(1, 16),
+            num_candidates: g.usize(1, 256),
+            random_fraction: g.f64(0.0, 1.0),
+            lengthscale: g.f64(0.01, 2.0),
+            signal_var: g.f64(0.1, 4.0),
+            noise_var: g.f64(1e-6, 0.1),
+        })
+    };
+    ExperimentSpec {
+        bench,
+        scheduler,
+        searcher,
+        exec: ExecSpec {
+            workers: g.usize(1, 16),
+            backend: if g.bool() {
+                ExecBackendKind::Sim
+            } else {
+                ExecBackendKind::Pool
+            },
+        },
+        stop: StopRules {
+            config_budget: g.usize(1, 4096),
+            epoch_budget: if g.bool() {
+                Some(g.usize(1, 100_000) as u64)
+            } else {
+                None
+            },
+            time_budget: if g.bool() {
+                Some(g.f64(0.001, 1e6))
+            } else {
+                None
+            },
+        },
+        // < 2^32 so the f64 wire representation is exact
+        seed: g.u64() >> 32,
+        bench_seed: g.u64() >> 32,
+    }
+}
+
+#[test]
+fn parse_serialize_parse_is_byte_identical_for_random_specs() {
+    check("spec round-trip", 300, |g| {
+        let spec = gen_spec(g);
+        spec.validate().unwrap_or_else(|e| panic!("generated spec invalid: {e}"));
+        let first = spec.to_json().to_string_compact();
+        let parsed = ExperimentSpec::from_json(&parse(&first).unwrap())
+            .unwrap_or_else(|e| panic!("parse failed for {first}: {e}"));
+        assert_eq!(parsed, spec, "value round-trip for {first}");
+        let second = parsed.to_json().to_string_compact();
+        assert_eq!(second, first, "byte round-trip");
+    });
+}
+
+/// The v1 JSON encoding old journal headers carry (what
+/// `SessionSpec::to_json` produced before the redesign).
+fn v1_spec_json(spec: &ExperimentSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("bench", spec.bench.name.as_str())
+        .set("scheduler", spec.scheduler.wire_name())
+        .set("eta", spec.scheduler.eta().unwrap_or(3))
+        .set("searcher", spec.searcher.wire_name())
+        .set("seed", spec.seed as f64)
+        .set("bench_seed", spec.bench_seed as f64)
+        .set("config_budget", spec.stop.config_budget);
+    if let Some(e) = spec.stop.epoch_budget {
+        o.set("epoch_budget", e as f64);
+    }
+    o
+}
+
+#[test]
+fn committed_v1_fixture_journals_migrate_and_recover() {
+    for (name, id, scheduler, replayed) in [
+        ("v1_create_asha.jsonl", "v1-asha", "asha", 0usize),
+        ("v1_events.jsonl", "v1-events", "pasha", 3usize),
+    ] {
+        // copy the fixture out of the repo so nothing can touch it
+        let dir = tmp_dir(name);
+        let path = dir.join("journal.jsonl");
+        std::fs::copy(fixture(name), &path).unwrap();
+        let (session, report) = Session::recover_readonly(&path)
+            .unwrap_or_else(|e| panic!("{name}: v1 journal failed to recover: {e}"));
+        assert_eq!(session.id, id, "{name}");
+        assert_eq!(report.events_replayed, replayed, "{name}");
+        assert_eq!(report.truncated_bytes, 0, "{name}");
+        // the header migrated to the legacy knobs
+        assert_eq!(session.spec.bench.name, "lcbench-Fashion-MNIST", "{name}");
+        assert_eq!(session.spec.scheduler.wire_name(), scheduler, "{name}");
+        assert_eq!(session.spec.scheduler.r_min(), Some(1), "{name}");
+        assert_eq!(
+            session.spec.scheduler.ranking().cloned(),
+            if scheduler == "pasha" {
+                Some(RankingSpec::default())
+            } else {
+                None
+            },
+            "{name}: the implicit v1 ranking is the paper default"
+        );
+        assert_eq!(session.spec.stop.config_budget, 8, "{name}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn generated_v1_journal_recovers_byte_identically() {
+    // Write a complete session journal, then rewrite its header to the
+    // exact v1 encoding. Recovery re-derives the core from the migrated
+    // spec and verifies every replayed ask byte-for-byte against what
+    // was acknowledged — which is precisely the v1-compatibility
+    // guarantee: same bytes in, same decisions out.
+    for scheduler in ["asha", "pasha", "pasha-stop"] {
+        let dir = tmp_dir(&format!("v1gen-{scheduler}"));
+        let path = dir.join("session.jsonl");
+        let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", scheduler).unwrap();
+        spec.stop.config_budget = 8;
+        spec.seed = 4;
+        let bench = spec.bench.build().unwrap();
+        let mut live = Session::create("v1gen", spec.clone(), Some(&path)).unwrap();
+        loop {
+            match live.ask("w0").unwrap() {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, spec.bench_seed);
+                        if live.tell(job.trial, e, m).unwrap() == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => panic!("single worker never waits"),
+                TrialAssignment::Done => break,
+            }
+        }
+        let best = live.core_ref().best().unwrap();
+        drop(live);
+
+        // swap the v2 header for the v1 bytes of the same spec
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        let v1_header = ev_create("v1gen", &v1_spec_json(&spec)).to_string_compact();
+        lines[0] = &v1_header;
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+
+        let (recovered, report) = Session::recover_readonly(&path)
+            .unwrap_or_else(|e| panic!("{scheduler}: v1-headed journal refused: {e}"));
+        assert!(report.events_replayed > 10, "{scheduler}: whole history replayed");
+        assert_eq!(recovered.spec, spec, "{scheduler}: migration is lossless");
+        let rbest = recovered.core_ref().best().unwrap();
+        assert_eq!(rbest.trial, best.trial, "{scheduler}");
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits(), "{scheduler}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+#[test]
+#[allow(deprecated)]
+fn legacy_cli_flag_combinations_lower_bit_identically() {
+    use pasha::tuner::{bench_from_name, scheduler_from_name, SearcherKind};
+
+    // Each case is (CLI flags as the old `pasha run` accepted them,
+    // the equivalent legacy factory construction).
+    let bench_name = "lcbench-Fashion-MNIST";
+    let schedulers = [
+        "asha",
+        "pasha",
+        "asha-stop",
+        "pasha-stop",
+        "sh",
+        "hyperband",
+        "1-epoch",
+        "random",
+    ];
+    for scheduler in schedulers {
+        for searcher in ["random", "bo"] {
+            if searcher == "bo" && scheduler != "pasha" {
+                continue; // one BO case keeps the matrix fast
+            }
+            let budget = 12usize;
+            let seed = 3u64;
+            let eta = 3u32;
+
+            // New path: the CLI lowering.
+            let mut spec = ExperimentSpec::default();
+            apply_flag_overrides(
+                &mut spec,
+                &flags(&[
+                    ("bench", bench_name),
+                    ("scheduler", scheduler),
+                    ("budget", "12"),
+                    ("seed", "3"),
+                    ("eta", "3"),
+                    ("searcher", searcher),
+                    ("workers", "4"),
+                ]),
+            )
+            .unwrap();
+            let new = Tuner::run(&spec).unwrap();
+
+            // Old path: the pre-redesign factories, verbatim.
+            let bench = bench_from_name(bench_name).unwrap();
+            let builder = scheduler_from_name(scheduler, eta, budget).unwrap();
+            let kind = SearcherKind::parse(searcher).unwrap();
+            let tspec = TunerSpec {
+                workers: 4,
+                config_budget: budget,
+                searcher: kind.to_spec(),
+                extra_stop: Vec::new(),
+            };
+            let old = Tuner::run_with(bench.as_ref(), builder.as_ref(), &tspec, seed, 0);
+
+            assert_eq!(
+                new, old,
+                "flag combination --scheduler {scheduler} --searcher {searcher} \
+                 must lower bit-identically"
+            );
+        }
+    }
+
+    // Stopping-budget flags lower into the same rule set, in order.
+    let mut spec = ExperimentSpec::default();
+    apply_flag_overrides(
+        &mut spec,
+        &flags(&[
+            ("bench", bench_name),
+            ("scheduler", "asha"),
+            ("budget", "16"),
+            ("seed", "1"),
+            ("epoch-budget", "60"),
+            ("time-budget", "50000"),
+        ]),
+    )
+    .unwrap();
+    let new = Tuner::run(&spec).unwrap();
+    let bench = bench_from_name(bench_name).unwrap();
+    let builder = scheduler_from_name("asha", 3, 16).unwrap();
+    let tspec = TunerSpec {
+        workers: 4,
+        config_budget: 16,
+        searcher: SearcherSpec::Random,
+        extra_stop: vec![StopSpec::EpochBudget(60), StopSpec::ClockBudget(50000.0)],
+    };
+    let old = Tuner::run_with(bench.as_ref(), builder.as_ref(), &tspec, 1, 0);
+    assert_eq!(new, old, "budget flags must lower bit-identically");
+}
+
+#[test]
+fn v1_wire_create_and_v2_wire_create_build_identical_sessions() {
+    // A v1 client and a v2 client describing the same experiment must
+    // land on sessions whose ask streams are identical.
+    let mut spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "pasha").unwrap();
+    spec.stop.config_budget = 6;
+    spec.seed = 2;
+    let v1 = ExperimentSpec::from_json(&v1_spec_json(&spec)).unwrap();
+    let v2 = ExperimentSpec::from_json(&spec.to_json()).unwrap();
+    assert_eq!(v1, v2);
+    let mut a = Session::create("a", v1, None).unwrap();
+    let mut b = Session::create("b", v2, None).unwrap();
+    for _ in 0..40 {
+        let ra = a.ask("w0").unwrap();
+        let rb = b.ask("w0").unwrap();
+        assert_eq!(ra, rb);
+        match ra {
+            TrialAssignment::Run(job) => {
+                for e in job.from_epoch + 1..=job.milestone {
+                    let ack_a = a.tell(job.trial, e, 50.0 + e as f64).unwrap();
+                    let ack_b = b.tell(job.trial, e, 50.0 + e as f64).unwrap();
+                    assert_eq!(ack_a, ack_b);
+                    if ack_a == TellAck::Abandon {
+                        break;
+                    }
+                }
+            }
+            TrialAssignment::Done => break,
+            _ => {}
+        }
+    }
+}
