@@ -42,6 +42,7 @@ pub mod scheduler;
 pub mod searcher;
 pub mod service;
 pub mod spec;
+pub mod store;
 pub mod tuner;
 pub mod util;
 

@@ -10,9 +10,10 @@
 //! pasha table  <id>  [--scale paper|smoke] [--out results/]
 //! pasha figure <1..5> [--out results/]
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
-//! pasha bench-json [--suite engine|service|all] [--out FILE]
-//! pasha serve  [--addr A] [--journal-dir DIR] [--snapshot-interval N]
+//! pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
+//! pasha serve  [--addr A] [--journal-dir DIR] [--snapshot-interval N] [--store FILE]
 //! pasha worker --addr A (--session ID | --create ...) [--expire] [--batch]
+//! pasha store  <ls|gc|export> --store FILE [--fingerprint FP] [--out FILE]
 //! pasha sessions --addr A                                # list sessions
 //! pasha recover --journal FILE                           # journal check
 //! pasha compact --journal FILE                           # snapshot + truncate
@@ -30,6 +31,7 @@ use pasha::service::{
     run_worker, run_worker_batched, Client, Registry, Server, Session, SessionOptions,
 };
 use pasha::spec::{apply_flag_overrides, BenchSpec, ExperimentSpec, SPEC_FLAGS};
+use pasha::store::{self, StoreSpec, TrialStore};
 use pasha::tuner::{Tuner, TunerSpec};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -52,6 +54,7 @@ fn main() {
         "bench-json" => cmd_bench_json(&flags),
         "serve" => cmd_serve(&flags),
         "worker" => cmd_worker(&flags, &sets),
+        "store" => cmd_store(rest.first().map(|s| s.as_str()), &flags),
         "sessions" => cmd_sessions(&flags),
         "recover" => cmd_recover(&flags),
         "compact" => cmd_compact(&flags),
@@ -85,16 +88,22 @@ USAGE:
                [--ranking plain|noisy[:PCT]|soft:EPS|sigma:MULT|mean-gap|median-gap|rbo:P[,T]|rrr:P[,T]|arrr:P[,T]]
                [--searcher random|bo] [--workers W] [--backend sim|pool]
                [--epoch-budget E] [--time-budget SECONDS]
+               [--store trials.jsonl] [--warm-start trials.jsonl] [--warm-start-max N]
                # every flag lowers into one versioned ExperimentSpec (see README)
   pasha table  <1|2|3|4|5|6|8|9|10|11|12|13|14|15|ablation|stopping> [--scale paper|smoke] [--out DIR]
   pasha figure <1|2|3|4|5> [--out DIR]
   pasha report [--scale paper|smoke] [--out DIR]
-  pasha bench-json [--suite engine|service|all] [--out FILE]
+  pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
   pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR] [--snapshot-interval N]
+               [--store trials.jsonl]
   pasha worker --addr HOST:PORT (--session ID | --create [--spec exp.json] [--bench B]
                [--scheduler S] [--budget N] [--seed S] [--eta E] [--r-min R] [--ranking ...]
-               [--searcher random|bo] [--epoch-budget E] [--set key.path=value ...])
+               [--searcher random|bo] [--epoch-budget E] [--warm-start trials.jsonl]
+               [--set key.path=value ...])
                [--worker-id W] [--expire] [--batch] [--shutdown]
+  pasha store  ls --store trials.jsonl            # fingerprint summary
+  pasha store  gc --store trials.jsonl            # dedup + compact in place
+  pasha store  export --store trials.jsonl [--fingerprint FP] [--out FILE]
   pasha sessions --addr HOST:PORT
   pasha recover --journal FILE             # verify a session journal replays cleanly
   pasha compact --journal FILE             # snapshot + truncate a session journal
@@ -205,13 +214,29 @@ fn scale(flags: &HashMap<String, String>) -> experiments::Scale {
 }
 
 fn cmd_run(flags: &HashMap<String, String>, sets: &[String]) -> Result<(), String> {
-    reject_unknown_flags(flags, &[])?;
-    let spec = resolve_spec(ExperimentSpec::default(), flags, sets)?;
-    // print the reproduction line *before* running, so an interrupted
-    // run still leaves it in the log
+    reject_unknown_flags(flags, &["store"])?;
+    let mut spec = resolve_spec(ExperimentSpec::default(), flags, sets)?;
+    // print the reproduction line *before* running (and before sealing —
+    // the unsealed reference form is the reproducible recipe), so an
+    // interrupted run still leaves it in the log
     println!("spec             : {}", spec.to_json().to_string_compact());
     let t0 = std::time::Instant::now();
-    let r = Tuner::run(&spec)?;
+    let r = match flags.get("store") {
+        // --store: seal any warm start, run, and record the finished
+        // trials back into the store for later transfers
+        Some(path) => {
+            let (r, ingested) = Tuner::run_stored(&spec, &StoreSpec::new(path))?;
+            println!("trial store      : {path} (+{ingested} trials)");
+            r
+        }
+        None => {
+            let embedded = store::resolve_warm_start(&mut spec)?;
+            if embedded > 0 {
+                println!("warm start       : {embedded} prior trials embedded");
+            }
+            Tuner::run(&spec)?
+        }
+    };
     println!("benchmark        : {}", spec.bench.name);
     println!("scheduler        : {}", r.scheduler_name);
     println!("configs sampled  : {}", r.configs_sampled);
@@ -347,18 +372,148 @@ fn cmd_report(flags: &HashMap<String, String>) -> Result<(), String> {
 
 /// Performance records (`BENCH_*.json`): `--suite engine` (default) for
 /// the in-process engine, `--suite service` for the TCP ask/tell loop,
-/// `--suite all` for both.
+/// `--suite transfer` for cold-vs-warm-start resource-to-target runs,
+/// `--suite all` for all of them.
 fn cmd_bench_json(flags: &HashMap<String, String>) -> Result<(), String> {
     match flags.get("suite").map(|s| s.as_str()).unwrap_or("engine") {
         "engine" => bench_engine(flags),
         "service" => bench_service(flags, flags.get("out").cloned()),
+        "transfer" => bench_transfer(flags, flags.get("out").cloned()),
         "all" => {
             bench_engine(flags)?;
             // `all` keeps each suite's default file name to avoid clobbering
-            bench_service(flags, None)
+            bench_service(flags, None)?;
+            bench_transfer(flags, None)
         }
         other => Err(format!("unknown bench suite '{other}'")),
     }
+}
+
+/// Warm-start transfer benchmark: for each task family, a source run
+/// populates a trial store, then a target task (same space, different
+/// benchmark seed) is tuned cold vs warm and the epochs each needs to
+/// reach a shared target metric are compared. Written as
+/// `BENCH_transfer.json`, with a seal-once/run-twice determinism check.
+fn bench_transfer(flags: &HashMap<String, String>, out: Option<String>) -> Result<(), String> {
+    use pasha::spec::SearcherSpec;
+    use pasha::util::json::Json;
+
+    let out_path = PathBuf::from(out.unwrap_or_else(|| "BENCH_transfer.json".to_string()));
+    let budget: usize = flag(flags, "budget", 24);
+    let dir = std::env::temp_dir().join(format!("pasha-bench-transfer-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+
+    // Drive a spec to completion on one synchronous worker, recording the
+    // incumbent after every told epoch: (cumulative epochs, best metric).
+    let trajectory = |spec: &ExperimentSpec| -> Result<Vec<(u64, f64)>, String> {
+        use pasha::scheduler::asktell::{TellAck, TrialAssignment};
+        let bench = spec.bench.build()?;
+        let mut at = spec.build_core()?;
+        let mut track = Vec::new();
+        let mut epochs = 0u64;
+        loop {
+            match at.ask("w0") {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, spec.bench_seed);
+                        epochs += 1;
+                        let ack = at.tell(job.trial, e, m).map_err(|e| e.to_string())?;
+                        if let Some(b) = at.best() {
+                            track.push((epochs, b.metric));
+                        }
+                        if ack == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => return Err("single worker must never wait".into()),
+                TrialAssignment::Done => return Ok(track),
+            }
+        }
+    };
+    let epochs_to = |track: &[(u64, f64)], target: f64| -> Option<u64> {
+        track.iter().find(|(_, m)| *m >= target).map(|(e, _)| *e)
+    };
+
+    let mut pairs = Vec::new();
+    let mut all_deterministic = true;
+    let mut all_warm_win = true;
+    for bench_name in ["lcbench-Fashion-MNIST", "nas-cifar10"] {
+        let store_path = dir.join(format!("{bench_name}.jsonl"));
+        let _ = std::fs::remove_file(&store_path);
+        let store = StoreSpec::new(&store_path);
+
+        // Source task: BO under PASHA, trials recorded into the store.
+        let mut source = ExperimentSpec::named(bench_name, "pasha")?;
+        source.stop.config_budget = budget;
+        source.searcher = SearcherSpec::bo_default();
+        let (_, ingested) = Tuner::run_stored(&source, &store)?;
+
+        // Target task: same family, different benchmark seed — cold BO
+        // vs BO warm-started from the source task's observations.
+        let mut cold = source.clone();
+        cold.seed = 1;
+        cold.bench_seed = 1;
+        let mut warm = cold.clone();
+        warm.searcher = SearcherSpec::bo_warm(
+            store_path.to_str().ok_or("non-utf8 store path")?,
+            budget / 2,
+        );
+        let embedded = store::resolve_warm_start(&mut warm)?;
+
+        let cold_track = trajectory(&cold)?;
+        let warm_track = trajectory(&warm)?;
+        let cold_final = cold_track.last().map(|&(_, m)| m).unwrap_or(f64::NAN);
+        let warm_final = warm_track.last().map(|&(_, m)| m).unwrap_or(f64::NAN);
+        // Shared target: the weaker of the two final incumbents, so both
+        // trajectories are guaranteed to cross it.
+        let target = cold_final.min(warm_final);
+        let cold_epochs = epochs_to(&cold_track, target).unwrap_or(u64::MAX);
+        let warm_epochs = epochs_to(&warm_track, target).unwrap_or(u64::MAX);
+
+        // Determinism: the sealed warm spec must reproduce bit-identically.
+        let r1 = Tuner::run(&warm)?;
+        let r2 = Tuner::run(&warm)?;
+        let deterministic = r1 == r2;
+        all_deterministic &= deterministic;
+        all_warm_win &= warm_epochs <= cold_epochs;
+
+        println!(
+            "{bench_name}: target {target:.2} — cold {cold_epochs} epochs vs warm \
+             {warm_epochs} epochs ({embedded} prior trials, {ingested} ingested, \
+             deterministic={deterministic})"
+        );
+        let mut p = Json::obj();
+        p.set("bench", bench_name)
+            .set("ingested", ingested)
+            .set("embedded_trials", embedded)
+            .set("target_metric", target)
+            .set("cold_epochs_to_target", cold_epochs as f64)
+            .set("warm_epochs_to_target", warm_epochs as f64)
+            .set(
+                "speedup",
+                cold_epochs as f64 / (warm_epochs as f64).max(1.0),
+            )
+            .set("cold_final_best", cold_final)
+            .set("warm_final_best", warm_final)
+            .set("warm_deterministic", deterministic);
+        pairs.push(p);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut root = Json::obj();
+    root.set("benchmark", "transfer")
+        .set("config_budget", budget)
+        .set("pairs", Json::Arr(pairs))
+        .set("all_deterministic", all_deterministic)
+        .set("warm_never_slower", all_warm_win);
+    std::fs::write(&out_path, root.to_string_pretty()).map_err(|e| e.to_string())?;
+    println!("wrote {}", out_path.display());
+    if !all_deterministic {
+        return Err("sealed warm-start run was not deterministic".into());
+    }
+    Ok(())
 }
 
 /// Record the engine's performance trajectory: serial-vs-parallel
@@ -641,7 +796,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         .get("addr")
         .cloned()
         .unwrap_or_else(|| "127.0.0.1:7171".to_string());
-    let options = match flags.get("snapshot-interval") {
+    let mut options = match flags.get("snapshot-interval") {
         Some(v) => {
             let n: usize = v
                 .parse()
@@ -653,10 +808,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         }
         None => SessionOptions::default(),
     };
+    // --store: completed sessions record their trials here, and new
+    // sessions' warm-start references are sealed from it
+    options.store = flags.get("store").map(StoreSpec::new);
     let registry = match flags.get("journal-dir") {
         Some(d) => Registry::with_journal_dir_opts(PathBuf::from(d), options)
             .map_err(|e| e.to_string())?,
-        None => Registry::in_memory(),
+        None => Registry::in_memory_opts(options),
     };
     for (id, rep) in registry.recovered() {
         println!(
@@ -718,7 +876,13 @@ fn cmd_worker(flags: &HashMap<String, String>, sets: &[String]) -> Result<(), St
             // worker-created smoke sessions default smaller than `run`
             let mut base = ExperimentSpec::named("lcbench-Fashion-MNIST", "pasha")?;
             base.stop.config_budget = 32;
-            let spec = resolve_spec(base, flags, sets)?;
+            let mut spec = resolve_spec(base, flags, sets)?;
+            // seal --warm-start here, where the store file lives: the
+            // server only sees the embedded observations
+            let embedded = store::resolve_warm_start(&mut spec)?;
+            if embedded > 0 {
+                println!("warm start: {embedded} prior trials embedded");
+            }
             let id = client.create(&spec).map_err(|e| e.to_string())?;
             println!("created session {id}");
             id
@@ -772,6 +936,64 @@ fn cmd_worker(flags: &HashMap<String, String>, sets: &[String]) -> Result<(), St
         println!("server shut down");
     }
     Ok(())
+}
+
+/// `pasha store <ls|gc|export>` — inspect and maintain a trial store.
+fn cmd_store(sub: Option<&str>, flags: &HashMap<String, String>) -> Result<(), String> {
+    let sub = sub.ok_or("need a subcommand: store <ls|gc|export>")?;
+    let path = flags.get("store").ok_or("need --store FILE")?;
+    let store = TrialStore::open(path);
+    match sub {
+        "ls" => {
+            let records = store.read_all().map_err(|e| e.to_string())?;
+            // one line per fingerprint: where the records came from and
+            // how much signal a warm start could draw from them
+            let mut groups: std::collections::BTreeMap<&str, (usize, &str, u32, f64)> =
+                std::collections::BTreeMap::new();
+            for r in &records {
+                let g = groups
+                    .entry(r.fingerprint.as_str())
+                    .or_insert((0, r.bench.as_str(), 0, f64::NEG_INFINITY));
+                g.0 += 1;
+                g.2 = g.2.max(r.epoch);
+                g.3 = g.3.max(r.metric);
+            }
+            println!("{} records, {} fingerprints in {path}", records.len(), groups.len());
+            for (fp, (n, bench, max_epoch, best)) in groups {
+                println!("  {fp}  {n:>5} trials  {bench}  max_epoch={max_epoch}  best={best:.2}");
+            }
+            Ok(())
+        }
+        "gc" => {
+            let report = store.gc().map_err(|e| e.to_string())?;
+            println!(
+                "gc {path}: kept {} records, dropped {} duplicates",
+                report.kept, report.dropped
+            );
+            Ok(())
+        }
+        "export" => {
+            let records = store.read_all().map_err(|e| e.to_string())?;
+            let filtered: Vec<_> = match flags.get("fingerprint") {
+                Some(fp) => records.into_iter().filter(|r| &r.fingerprint == fp).collect(),
+                None => records,
+            };
+            let mut text = String::new();
+            for r in &filtered {
+                text.push_str(&r.to_json().to_string_compact());
+                text.push('\n');
+            }
+            match flags.get("out") {
+                Some(out) => {
+                    std::fs::write(out, &text).map_err(|e| e.to_string())?;
+                    println!("wrote {} records to {out}", filtered.len());
+                }
+                None => print!("{text}"),
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown store subcommand '{other}' (ls, gc, export)")),
+    }
 }
 
 fn cmd_sessions(flags: &HashMap<String, String>) -> Result<(), String> {

@@ -88,7 +88,7 @@ impl Approach {
     pub fn bo(builder: Box<dyn SchedulerBuilder>, label: &str) -> Approach {
         Approach {
             builder,
-            searcher: SearcherSpec::Bo(Default::default()),
+            searcher: SearcherSpec::bo_default(),
             label: Some(label.to_string()),
         }
     }

@@ -58,6 +58,11 @@ pub struct BoSearcher {
     /// needed for encoding).
     pending: Vec<(Config, u32, f64)>,
     suggestions: usize,
+    /// Warm-start initial design: configurations replayed (in order) by
+    /// the first `suggest` calls instead of random samples. Rebuilt from
+    /// the spec at construction, never snapshotted — `suggestions`
+    /// indexes into it, so restored searchers resume mid-design.
+    warm: Vec<Config>,
 }
 
 impl BoSearcher {
@@ -72,7 +77,23 @@ impl BoSearcher {
             obs: BTreeMap::new(),
             pending: Vec::new(),
             suggestions: 0,
+            warm: Vec::new(),
         }
+    }
+
+    /// Bootstrap from prior observations (warm-start transfer): each
+    /// `(config, epoch, metric)` is folded into the surrogate like a live
+    /// report, and the configurations — in the given order — become the
+    /// initial design, proposed verbatim by the first `suggest` calls
+    /// instead of random samples. The warm phase consumes no RNG state,
+    /// and `suggestions` (already part of the snapshot) indexes into the
+    /// design, so snapshot restore and journal replay work unchanged for
+    /// warm-started searchers.
+    pub fn warm_start(&mut self, prior: Vec<(Config, u32, f64)>) {
+        for (config, epoch, metric) in &prior {
+            self.pending.push((config.clone(), *epoch, *metric));
+        }
+        self.warm = prior.into_iter().map(|(c, _, _)| c).collect();
     }
 
     /// The deepest resource level with at least `min_points` observations.
@@ -93,6 +114,11 @@ impl BoSearcher {
 impl Searcher for BoSearcher {
     fn suggest(&mut self, space: &SearchSpace) -> Config {
         self.fold_pending(space);
+        if self.suggestions < self.warm.len() {
+            let c = self.warm[self.suggestions].clone();
+            self.suggestions += 1;
+            return c;
+        }
         self.suggestions += 1;
         let explore = self.rng.next_f64() < self.cfg.random_fraction;
         let level = self.modeling_level();
@@ -334,6 +360,58 @@ mod tests {
         }
         assert_eq!(a.num_observations(), b.num_observations());
         assert!(b.load_state(&Json::obj()).is_err(), "kind is checked");
+    }
+
+    #[test]
+    fn warm_start_replays_design_then_models() {
+        let space = SearchSpace::pd1();
+        let mut rng = Rng::new(41);
+        let prior: Vec<(Config, u32, f64)> = (0..3)
+            .map(|_| {
+                let c = space.sample(&mut rng);
+                let m = quadratic_metric(&c);
+                (c, 9, m)
+            })
+            .collect();
+        let mut s = BoSearcher::new(11);
+        s.warm_start(prior.clone());
+        // the initial design is replayed verbatim, in order
+        for (c, _, _) in &prior {
+            assert_eq!(&s.suggest(&space), c);
+        }
+        // and the prior observations were folded into the surrogate
+        assert_eq!(s.num_observations(), 3);
+        // two identically warm-started searchers continue identically
+        // past the design (no RNG is consumed during the warm phase)
+        let mut t = BoSearcher::new(11);
+        t.warm_start(prior.clone());
+        for _ in 0..prior.len() {
+            t.suggest(&space);
+        }
+        for _ in 0..4 {
+            assert_eq!(s.suggest(&space), t.suggest(&space));
+        }
+    }
+
+    #[test]
+    fn warm_start_snapshot_resumes_mid_design() {
+        let space = SearchSpace::pd1();
+        let mut rng = Rng::new(42);
+        let prior: Vec<(Config, u32, f64)> = (0..4)
+            .map(|_| (space.sample(&mut rng), 3, 50.0))
+            .collect();
+        let mut a = BoSearcher::new(7);
+        a.warm_start(prior.clone());
+        a.suggest(&space); // consume part of the design
+        let state = a.save_state().unwrap();
+        // restore into a freshly warm-started searcher — exactly how
+        // recovery rebuilds one: spec first, snapshot second
+        let mut b = BoSearcher::new(7);
+        b.warm_start(prior);
+        b.load_state(&state).unwrap();
+        for _ in 0..6 {
+            assert_eq!(a.suggest(&space), b.suggest(&space));
+        }
     }
 
     #[test]

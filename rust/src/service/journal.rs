@@ -20,9 +20,10 @@
 //! instant. Durability against OS/power failure would need `fsync` per
 //! event; that trade-off is deliberately not made on the hot path.
 
-use crate::util::json::{parse, Json};
+use crate::util::json::Json;
+use crate::util::jsonl;
 use std::fs::{File, OpenOptions};
-use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::io::{self, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 /// Append handle for one session's journal file.
@@ -90,60 +91,16 @@ pub struct JournalRead {
 
 /// Read a journal file, tolerating a partial final line. Offsets are
 /// byte-accurate (the file is scanned as raw bytes, so a crash that cut a
-/// multi-byte character cannot skew `valid_len`).
+/// multi-byte character cannot skew `valid_len`). The torn-tail
+/// discipline itself lives in [`crate::util::jsonl::read_jsonl`], shared
+/// with the trial store ([`crate::store`]).
 pub fn read_journal(path: &Path) -> io::Result<JournalRead> {
-    let mut buf = Vec::new();
-    File::open(path)?.read_to_end(&mut buf)?;
-    let mut events: Vec<Json> = Vec::new();
-    let mut valid_len = 0u64;
-    let mut start = 0usize;
-    let done = |events: Vec<Json>, valid_len: u64| JournalRead {
-        truncated_bytes: buf.len() - valid_len as usize,
-        events,
-        valid_len,
-    };
-    while start < buf.len() {
-        let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') else {
-            // No newline: the final append was cut short — a crash
-            // artifact, dropped.
-            return Ok(done(events, valid_len));
-        };
-        let end = start + rel;
-        let next = end + 1;
-        let at_eof = next == buf.len();
-        let line = &buf[start..end];
-        if line.is_empty() {
-            valid_len = next as u64;
-            start = next;
-            continue;
-        }
-        let parsed: Result<Json, String> = match std::str::from_utf8(line) {
-            Ok(s) => parse(s),
-            Err(e) => Err(format!("invalid utf-8: {e}")),
-        };
-        match parsed {
-            Ok(ev) => {
-                events.push(ev);
-                valid_len = next as u64;
-            }
-            // A newline-terminated but unparseable *final* line is also
-            // treated as a crash artifact (a torn multi-chunk write);
-            // anywhere else it is corruption.
-            Err(_) if at_eof => return Ok(done(events, valid_len)),
-            Err(e) => {
-                return Err(io::Error::new(
-                    io::ErrorKind::InvalidData,
-                    format!(
-                        "corrupt journal {}: event {} unparseable: {e}",
-                        path.display(),
-                        events.len()
-                    ),
-                ));
-            }
-        }
-        start = next;
-    }
-    Ok(done(events, valid_len))
+    let r = jsonl::read_jsonl(path)?;
+    Ok(JournalRead {
+        events: r.records,
+        valid_len: r.valid_len,
+        truncated_bytes: r.truncated_bytes,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -165,32 +122,10 @@ pub fn snapshot_path(journal: &Path) -> PathBuf {
 /// directory) if needed. A previous crash can have left a torn final
 /// line; the file is first truncated back to its whole-line prefix so
 /// the new record can never merge with torn bytes (the sidecar analogue
-/// of [`Journal::open_append_at`]) — without this, one crash mid-append
-/// would silently corrupt every later record on the same line.
+/// of [`Journal::open_append_at`]). One implementation, shared with the
+/// trial store: [`crate::util::jsonl::append_line`].
 pub fn append_line(path: &Path, event: &Json) -> io::Result<()> {
-    if let Some(dir) = path.parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
-    let mut file = OpenOptions::new()
-        .create(true)
-        .read(true)
-        .write(true)
-        .open(path)?;
-    let mut buf = Vec::new();
-    file.read_to_end(&mut buf)?;
-    let valid = match buf.iter().rposition(|&b| b == b'\n') {
-        Some(i) => (i + 1) as u64,
-        None => 0,
-    };
-    if valid != buf.len() as u64 {
-        file.set_len(valid)?;
-    }
-    file.seek(SeekFrom::Start(valid))?;
-    let mut line = event.to_string_compact();
-    line.push('\n');
-    file.write_all(line.as_bytes())
+    jsonl::append_line(path, event)
 }
 
 /// Atomically replace `path` with the given lines: write a sibling
@@ -198,17 +133,7 @@ pub fn append_line(path: &Path, event: &Json) -> io::Result<()> {
 /// leaves the original untouched; after, the replacement is complete.
 /// Used by journal compaction and snapshot-file rotation.
 pub fn rewrite_atomic(path: &Path, lines: &[Json]) -> io::Result<()> {
-    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
-    {
-        let mut file = File::create(&tmp)?;
-        let mut out = String::new();
-        for l in lines {
-            out.push_str(&l.to_string_compact());
-            out.push('\n');
-        }
-        file.write_all(out.as_bytes())?;
-    }
-    std::fs::rename(&tmp, path)
+    jsonl::rewrite_atomic(path, lines)
 }
 
 /// Read every parseable line of a snapshot sidecar, skipping anything
@@ -216,32 +141,7 @@ pub fn rewrite_atomic(path: &Path, lines: &[Json]) -> io::Result<()> {
 /// the ground truth, so a bad snapshot line is dropped, never fatal).
 /// A missing file reads as empty.
 pub fn read_snapshots(path: &Path) -> Vec<Json> {
-    let mut buf = Vec::new();
-    match File::open(path) {
-        Ok(mut f) => {
-            if f.read_to_end(&mut buf).is_err() {
-                return Vec::new();
-            }
-        }
-        Err(_) => return Vec::new(),
-    }
-    let mut lines = Vec::new();
-    let mut start = 0usize;
-    while start < buf.len() {
-        // only newline-terminated lines count: a torn final append is
-        // incomplete by definition
-        let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') else {
-            break;
-        };
-        let end = start + rel;
-        if let Ok(s) = std::str::from_utf8(&buf[start..end]) {
-            if let Ok(v) = parse(s) {
-                lines.push(v);
-            }
-        }
-        start = end + 1;
-    }
-    lines
+    jsonl::read_jsonl_lenient(path)
 }
 
 // Event constructors: the journal schema in one place.

@@ -64,9 +64,15 @@ impl Registry {
     /// An in-memory registry (no journals — sessions die with the
     /// process). Used by tests and the loopback stress benchmark.
     pub fn in_memory() -> Registry {
+        Self::in_memory_opts(SessionOptions::default())
+    }
+
+    /// [`Registry::in_memory`] with an explicit session policy (e.g. a
+    /// trial store without a journal directory).
+    pub fn in_memory_opts(options: SessionOptions) -> Registry {
         Registry {
             dir: None,
-            options: SessionOptions::default(),
+            options,
             sessions: Mutex::new(HashMap::new()),
             next_id: Mutex::new(0),
             recovered: Vec::new(),

@@ -23,6 +23,7 @@ use crate::service::journal::{
 };
 use crate::service::registry::ServiceError;
 use crate::spec::ExperimentSpec;
+use crate::store::{self, StoreSpec};
 use crate::util::json::Json;
 use crate::TrialId;
 use std::path::Path;
@@ -38,6 +39,10 @@ pub struct SessionOptions {
     /// two snapshots. The one-snapshot lag means a torn latest snapshot
     /// still recovers from the previous one plus a longer tail.
     pub compact_on_snapshot: bool,
+    /// Trial store completed sessions ingest their trials into, and the
+    /// source for sealing unresolved `searcher.warm_start` references at
+    /// creation (`pasha serve --store`).
+    pub store: Option<StoreSpec>,
 }
 
 impl Default for SessionOptions {
@@ -45,6 +50,7 @@ impl Default for SessionOptions {
         SessionOptions {
             snapshot_every: None,
             compact_on_snapshot: true,
+            store: None,
         }
     }
 }
@@ -56,6 +62,7 @@ impl SessionOptions {
         SessionOptions {
             snapshot_every: Some(events),
             compact_on_snapshot: true,
+            store: None,
         }
     }
 }
@@ -105,6 +112,12 @@ pub struct Session {
     /// journal no longer matches the in-memory state, so further
     /// mutations are refused rather than risking a bad recovery.
     poisoned: bool,
+    /// Completed trials have been ingested into the options' store (the
+    /// ingestion runs once, on the first `Done` answer).
+    ingested: bool,
+    /// A store-ingestion failure is recorded rather than failing the
+    /// acknowledged `Done` — the store is an extract, never authoritative.
+    store_error: Option<String>,
 }
 
 impl Session {
@@ -121,10 +134,15 @@ impl Session {
     /// [`Session::create`] with an explicit snapshot/compaction policy.
     pub fn create_with(
         id: &str,
-        spec: ExperimentSpec,
+        mut spec: ExperimentSpec,
         journal_path: Option<&Path>,
         options: SessionOptions,
     ) -> Result<Session, ServiceError> {
+        // Seal unresolved warm-start references before the spec is
+        // journaled: the header then embeds the prior observations, so
+        // recovery rebuilds the same warm searcher without re-reading a
+        // store file that may have changed (or vanished) since.
+        store::resolve_warm_start(&mut spec).map_err(ServiceError::Spec)?;
         let core = spec.build_core().map_err(ServiceError::Spec)?;
         let journal = match journal_path {
             None => None,
@@ -149,6 +167,8 @@ impl Session {
             options,
             snapshot_error: None,
             poisoned: false,
+            ingested: false,
+            store_error: None,
         })
     }
 
@@ -255,6 +275,8 @@ impl Session {
             options,
             snapshot_error: None,
             poisoned: false,
+            ingested: false,
+            store_error: None,
         };
         let mut replayed = 0usize;
         let mut skipped = 0usize;
@@ -554,7 +576,28 @@ impl Session {
             self.append(&ev_ask(worker, assignment_json(&assignment)))?;
             self.maybe_snapshot();
         }
+        if matches!(assignment, TrialAssignment::Done) {
+            self.maybe_ingest();
+        }
         Ok(assignment)
+    }
+
+    /// On the first `Done`, record the session's completed trials into
+    /// the configured store (if any). Replay during recovery goes through
+    /// the core directly, so a recovered-then-re-asked session ingests at
+    /// most once more — the store is append-only with at-least-once
+    /// semantics, and `gc` deduplicates. Failures never fail the ask.
+    fn maybe_ingest(&mut self) {
+        if self.ingested || self.store_error.is_some() {
+            return;
+        }
+        let Some(store) = self.options.store.clone() else {
+            return;
+        };
+        match store::ingest(&store, &self.spec, self.core.trials()) {
+            Ok(_) => self.ingested = true,
+            Err(e) => self.store_error = Some(e),
+        }
     }
 
     /// Report one epoch's metric. Journaled before it is applied, so an
@@ -626,6 +669,9 @@ impl Session {
             );
         if let Some(e) = &self.snapshot_error {
             o.set("snapshot_error", e.as_str());
+        }
+        if let Some(e) = &self.store_error {
+            o.set("store_error", e.as_str());
         }
         match self.core.best() {
             Some(b) => {
@@ -887,6 +933,58 @@ mod tests {
         assert_eq!(report.events_skipped, 0, "nothing pre-snapshot on disk");
         let rbest = r.core_ref().best().unwrap();
         assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+    }
+
+    #[test]
+    fn warm_started_session_ingests_and_recovers_byte_identically() {
+        use crate::spec::SearcherSpec;
+
+        let store_path = tmp("session-store.jsonl");
+        let _ = std::fs::remove_file(&store_path);
+        let options = SessionOptions {
+            store: Some(StoreSpec::new(&store_path)),
+            ..SessionOptions::default()
+        };
+
+        // Cold session with a store attached: reaching Done ingests its
+        // completed trials.
+        let spec = small_spec();
+        let bench = spec.bench.build().unwrap();
+        let path_cold = tmp("warm-source.jsonl");
+        let mut cold =
+            Session::create_with("cold", spec.clone(), Some(&path_cold), options.clone()).unwrap();
+        drive(&mut cold, bench.as_ref(), spec.bench_seed);
+        drop(cold);
+        let recorded = store::TrialStore::open(&store_path).read_all().unwrap();
+        assert!(!recorded.is_empty(), "Done must ingest trials");
+
+        // Warm session: creation seals the reference, so the journal
+        // header embeds the prior observations.
+        let mut warm_spec = spec.clone();
+        warm_spec.seed = 1;
+        warm_spec.searcher = SearcherSpec::bo_warm(store_path.to_str().unwrap(), 4);
+        let path_warm = tmp("warm-target.jsonl");
+        let mut warm =
+            Session::create_with("warm", warm_spec, Some(&path_warm), options).unwrap();
+        let sealed = warm.spec.searcher.warm_start().unwrap();
+        let embedded = sealed.trials.as_ref().expect("create seals the spec").len();
+        assert!(embedded > 0, "prior trials embedded");
+        drive(&mut warm, bench.as_ref(), spec.bench_seed);
+        let best = warm.core_ref().best().unwrap();
+        drop(warm);
+
+        // Mutate the store after the fact: recovery must not care — the
+        // ask-replay byte-identity check passes from the header alone.
+        std::fs::remove_file(&store_path).unwrap();
+        let (mut r, report) = Session::recover(&path_warm).unwrap();
+        assert!(report.events_replayed > 0);
+        let rbest = r.core_ref().best().unwrap();
+        assert_eq!(rbest.trial, best.trial);
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+        assert_eq!(r.ask("w0").unwrap(), TrialAssignment::Done);
+
+        let _ = std::fs::remove_file(&path_cold);
+        let _ = std::fs::remove_file(&path_warm);
     }
 
     #[test]

@@ -3,8 +3,12 @@
 //! every spec file land on the same construction path (and so the
 //! equivalence of the two is testable from the library).
 
-use super::{BenchSpec, ExecBackendKind, ExperimentSpec, SchedulerSpec, SearcherSpec};
+use super::{
+    BenchSpec, ExecBackendKind, ExperimentSpec, SchedulerSpec, SearcherSpec, WarmStartSpec,
+    WARM_START_DEFAULT_MAX_TRIALS,
+};
 use crate::ranking::RankingSpec;
+use crate::searcher::bo::BoConfig;
 use std::collections::HashMap;
 
 /// The canonical set of CLI flags that lower into an [`ExperimentSpec`]:
@@ -27,6 +31,8 @@ pub const SPEC_FLAGS: &[&str] = &[
     "backend",
     "epoch-budget",
     "time-budget",
+    "warm-start",
+    "warm-start-max",
 ];
 
 /// Parse the `--ranking` shorthand into a [`RankingSpec`]:
@@ -175,6 +181,26 @@ pub fn apply_flag_overrides(
     if let Some(s) = flags.get("searcher") {
         spec.searcher = SearcherSpec::from_name(s)?;
     }
+    if let Some(path) = flags.get("warm-start") {
+        let max = num_flag::<usize>(flags, "warm-start-max")?
+            .unwrap_or(WARM_START_DEFAULT_MAX_TRIALS);
+        let ws = Some(WarmStartSpec::new(path, max));
+        spec.searcher = match spec.searcher.clone() {
+            // warm starting implies a model-based searcher: plain random
+            // sampling has no state to bootstrap, so it upgrades to BO
+            // with the default hyperparameters
+            SearcherSpec::Random => SearcherSpec::Bo {
+                config: BoConfig::default(),
+                warm_start: ws,
+            },
+            SearcherSpec::Bo { config, .. } => SearcherSpec::Bo {
+                config,
+                warm_start: ws,
+            },
+        };
+    } else if flags.contains_key("warm-start-max") {
+        return Err("--warm-start-max requires --warm-start".into());
+    }
     if let Some(b) = num_flag::<usize>(flags, "budget")? {
         spec.stop.config_budget = b;
     }
@@ -277,7 +303,7 @@ mod tests {
                 ranking: RankingSpec::SoftFixed { epsilon: 0.025 },
             }
         );
-        assert!(matches!(spec.searcher, SearcherSpec::Bo(_)));
+        assert!(matches!(spec.searcher, SearcherSpec::Bo { .. }));
         assert_eq!(spec.stop.config_budget, 64);
         assert_eq!(spec.seed, 5);
         assert_eq!(spec.exec.workers, 2);
@@ -296,6 +322,36 @@ mod tests {
             spec.scheduler.ranking(),
             Some(&RankingSpec::Rbo { p: 0.9, t: 0.5 })
         );
+    }
+
+    #[test]
+    fn warm_start_flags_lower_to_a_reference() {
+        // --warm-start alone upgrades random search to warm-started BO
+        let mut spec = ExperimentSpec::default();
+        apply_flag_overrides(&mut spec, &flags(&[("warm-start", "prior.jsonl")])).unwrap();
+        assert_eq!(
+            spec.searcher,
+            SearcherSpec::bo_warm("prior.jsonl", WARM_START_DEFAULT_MAX_TRIALS)
+        );
+        // --warm-start composes with --searcher bo and --warm-start-max,
+        // and the reference is unresolved (sealing happens at run/create)
+        let mut spec = ExperimentSpec::default();
+        apply_flag_overrides(
+            &mut spec,
+            &flags(&[
+                ("searcher", "bo"),
+                ("warm-start", "prior.jsonl"),
+                ("warm-start-max", "5"),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(spec.searcher, SearcherSpec::bo_warm("prior.jsonl", 5));
+        assert!(spec.searcher.warm_start().unwrap().trials.is_none());
+        // --warm-start-max without --warm-start is dead configuration
+        let mut spec = ExperimentSpec::default();
+        let err =
+            apply_flag_overrides(&mut spec, &flags(&[("warm-start-max", "5")])).unwrap_err();
+        assert!(err.contains("--warm-start-max"), "{err}");
     }
 
     #[test]

@@ -14,7 +14,8 @@
 
 use super::{
     BenchSpec, DecisionMode, ExecBackendKind, ExecSpec, ExperimentSpec, SchedulerSpec,
-    SearcherSpec, StopRules, SPEC_VERSION,
+    SearcherSpec, StopRules, WarmStartSpec, WarmTrial, SPEC_VERSION,
+    WARM_START_DEFAULT_MAX_TRIALS,
 };
 use crate::ranking::RankingSpec;
 use crate::searcher::bo::BoConfig;
@@ -125,6 +126,15 @@ impl<'a> Fields<'a> {
         match self.take(key) {
             None => Ok(None),
             Some(v) => Fields::new(v, &format!("{}.", self.path(key))).map(Some),
+        }
+    }
+
+    /// Consume an array-valued key, returning `None` when absent.
+    pub(crate) fn opt_arr(&mut self, key: &'a str) -> Result<Option<&'a [Json]>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(Json::Arr(v)) => Ok(Some(v)),
+            Some(_) => Err(format!("field '{}': must be an array", self.path(key))),
         }
     }
 
@@ -396,7 +406,7 @@ fn searcher_to_json(s: &SearcherSpec) -> Json {
         SearcherSpec::Random => {
             o.set("name", "random");
         }
-        SearcherSpec::Bo(cfg) => {
+        SearcherSpec::Bo { config: cfg, warm_start } => {
             o.set("name", "bo")
                 .set("min_points", cfg.min_points)
                 .set("num_candidates", cfg.num_candidates)
@@ -404,7 +414,36 @@ fn searcher_to_json(s: &SearcherSpec) -> Json {
                 .set("lengthscale", cfg.lengthscale)
                 .set("signal_var", cfg.signal_var)
                 .set("noise_var", cfg.noise_var);
+            // absent when None, so pre-warm-start payload bytes are
+            // unchanged (the golden fixtures pin this)
+            if let Some(ws) = warm_start {
+                o.set("warm_start", warm_start_to_json(ws));
+            }
         }
+    }
+    o
+}
+
+fn warm_start_to_json(ws: &WarmStartSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("from", ws.from.as_str())
+        .set("max_trials", ws.max_trials);
+    if let Some(trials) = &ws.trials {
+        o.set(
+            "trials",
+            Json::Arr(
+                trials
+                    .iter()
+                    .map(|t| {
+                        let mut e = Json::obj();
+                        e.set("config", t.config.clone())
+                            .set("epoch", t.epoch)
+                            .set("metric", t.metric);
+                        e
+                    })
+                    .collect(),
+            ),
+        );
     }
     o
 }
@@ -415,19 +454,67 @@ fn searcher_from_fields(mut f: Fields) -> Result<SearcherSpec, String> {
         "random" => SearcherSpec::Random,
         "bo" => {
             let d = BoConfig::default();
-            SearcherSpec::Bo(BoConfig {
+            let config = BoConfig {
                 min_points: f.usize_or("min_points", d.min_points)?,
                 num_candidates: f.usize_or("num_candidates", d.num_candidates)?,
                 random_fraction: f.f64_or("random_fraction", d.random_fraction)?,
                 lengthscale: f.f64_or("lengthscale", d.lengthscale)?,
                 signal_var: f.f64_or("signal_var", d.signal_var)?,
                 noise_var: f.f64_or("noise_var", d.noise_var)?,
-            })
+            };
+            let warm_start = match f.opt_obj("warm_start")? {
+                None => None,
+                Some(w) => Some(warm_start_from_fields(w)?),
+            };
+            SearcherSpec::Bo { config, warm_start }
         }
         other => return Err(format!("field 'searcher.name': unknown searcher '{other}'")),
     };
     f.finish()?;
     Ok(spec)
+}
+
+fn warm_start_from_fields(mut f: Fields) -> Result<WarmStartSpec, String> {
+    let from = f
+        .opt_str("from")?
+        .ok_or("field 'searcher.warm_start.from': a store path is required")?;
+    let max_trials = f.usize_or("max_trials", WARM_START_DEFAULT_MAX_TRIALS)?;
+    let trials = match f.opt_arr("trials")? {
+        None => None,
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, t) in arr.iter().enumerate() {
+                let prefix = format!("searcher.warm_start.trials[{i}].");
+                let mut tf = Fields::new(t, &prefix)?;
+                let config = tf
+                    .opt_arr("config")?
+                    .ok_or_else(|| format!("field '{prefix}config': is required"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .ok_or_else(|| format!("field '{prefix}config': must be numbers"))
+                    })
+                    .collect::<Result<Vec<f64>, String>>()?;
+                let epoch = tf.u32_or("epoch", 1)?;
+                let metric = tf
+                    .opt_f64("metric")?
+                    .ok_or_else(|| format!("field '{prefix}metric': is required"))?;
+                tf.finish()?;
+                out.push(WarmTrial {
+                    config,
+                    epoch,
+                    metric,
+                });
+            }
+            Some(out)
+        }
+    };
+    f.finish()?;
+    Ok(WarmStartSpec {
+        from,
+        max_trials,
+        trials,
+    })
 }
 
 fn exec_to_json(e: &ExecSpec) -> Json {
@@ -535,6 +622,66 @@ mod tests {
         let j = parse(r#"{"version":2,"scheduler":{"name":"sh","mode":"stop"}}"#).unwrap();
         let err = ExperimentSpec::from_json(&j).unwrap_err();
         assert!(err.contains("no stopping variant"), "{err}");
+    }
+
+    #[test]
+    fn warm_start_round_trips_in_both_states() {
+        // unresolved reference
+        let mut spec = ExperimentSpec::default();
+        spec.searcher = SearcherSpec::bo_warm("trials.jsonl", 8);
+        let j = spec.to_json();
+        assert_eq!(ExperimentSpec::from_json(&j).unwrap(), spec);
+
+        // sealed form with embedded trials
+        spec.searcher.seal_warm_start(vec![
+            WarmTrial {
+                config: vec![3.0],
+                epoch: 9,
+                metric: 88.5,
+            },
+            WarmTrial {
+                config: vec![1.0],
+                epoch: 3,
+                metric: 70.0,
+            },
+        ]);
+        let j = spec.to_json();
+        let back = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(back, spec);
+        // and the sealed bytes are deterministic
+        assert_eq!(back.to_json().to_string_compact(), j.to_string_compact());
+
+        // a BO searcher without warm start serializes without the key
+        let plain = ExperimentSpec {
+            searcher: SearcherSpec::bo_default(),
+            ..ExperimentSpec::default()
+        };
+        assert!(plain.to_json().get("searcher").unwrap().get("warm_start").is_none());
+
+        // strictness inside the warm-start object
+        let j = parse(
+            r#"{"version":2,"searcher":{"name":"bo","warm_start":{"from":"s.jsonl","max_trails":4}}}"#,
+        )
+        .unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'searcher.warm_start.max_trails'"), "{err}");
+        let j = parse(r#"{"version":2,"searcher":{"name":"bo","warm_start":{}}}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("searcher.warm_start.from"), "{err}");
+        let j = parse(
+            r#"{"version":2,"searcher":{"name":"bo",
+                "warm_start":{"from":"s.jsonl","trials":[{"epoch":1,"metric":5}]}}}"#,
+        )
+        .unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("trials[0].config"), "{err}");
+        // warm_start on the random searcher is an unknown field
+        let j = parse(
+            r#"{"version":2,"searcher":{"name":"random","warm_start":{"from":"s.jsonl"}}}"#,
+        )
+        .unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("'searcher.warm_start'"), "{err}");
     }
 
     #[test]

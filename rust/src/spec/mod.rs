@@ -29,10 +29,11 @@ use crate::benchmarks::lcbench::{self, LcBench};
 use crate::benchmarks::nasbench201::NasBench201;
 use crate::benchmarks::pd1::Pd1;
 use crate::benchmarks::Benchmark;
+use crate::config::space::SearchSpace;
 use crate::executor::engine::{ConfigBudget, EpochBudget, StoppingRule};
 use crate::ranking::RankingSpec;
 use crate::scheduler::asha::AshaBuilder;
-use crate::scheduler::asktell::AskTell;
+use crate::scheduler::asktell::{config_from_json, AskTell};
 use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
 use crate::scheduler::hyperband::HyperbandBuilder;
 use crate::scheduler::pasha::PashaBuilder;
@@ -392,8 +393,54 @@ fn validate_ranking(r: &RankingSpec) -> Result<(), String> {
 pub enum SearcherSpec {
     /// Uniform sampling (the paper's main experiments).
     Random,
-    /// MOBSTER-style GP + EI with explicit tuning constants.
-    Bo(BoConfig),
+    /// MOBSTER-style GP + EI with explicit tuning constants, optionally
+    /// warm-started from a persistent trial store.
+    Bo {
+        config: BoConfig,
+        warm_start: Option<WarmStartSpec>,
+    },
+}
+
+/// Default cap on embedded warm-start trials.
+pub const WARM_START_DEFAULT_MAX_TRIALS: usize = 32;
+
+/// Prior observations bootstrapping the BO searcher. Two states: an
+/// unresolved *reference* to a trial store (`trials: None` — what
+/// `--warm-start PATH` lowers to) and the *sealed* form with the selected
+/// observations embedded (`trials: Some(..)` — what
+/// `store::resolve_warm_start` produces). Only sealed specs build.
+/// Sealing happens once, before a run or session is created, so journals
+/// and snapshots are self-contained and recovery never re-reads the
+/// store.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WarmStartSpec {
+    /// Path of the trial store the prior observations come from.
+    pub from: String,
+    /// Cap on the number of embedded trials.
+    pub max_trials: usize,
+    /// The sealed observations, rank-ordered best-first (this is the BO
+    /// initial-design order); `None` while still a reference.
+    pub trials: Option<Vec<WarmTrial>>,
+}
+
+impl WarmStartSpec {
+    /// An unresolved reference to the store at `from`.
+    pub fn new(from: &str, max_trials: usize) -> WarmStartSpec {
+        WarmStartSpec {
+            from: from.to_string(),
+            max_trials,
+            trials: None,
+        }
+    }
+}
+
+/// One embedded prior observation: positional configuration values (in
+/// search-space order), the epoch it was observed at, and its metric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WarmTrial {
+    pub config: Vec<f64>,
+    pub epoch: u32,
+    pub metric: f64,
 }
 
 impl SearcherSpec {
@@ -402,39 +449,106 @@ impl SearcherSpec {
     pub fn from_name(name: &str) -> Result<SearcherSpec, String> {
         match name {
             "random" => Ok(SearcherSpec::Random),
-            "bo" => Ok(SearcherSpec::Bo(BoConfig::default())),
+            "bo" => Ok(SearcherSpec::bo_default()),
             other => Err(format!("unknown searcher '{other}' (expected random|bo)")),
+        }
+    }
+
+    /// BO with the default hyperparameters and no warm start.
+    pub fn bo_default() -> SearcherSpec {
+        SearcherSpec::Bo {
+            config: BoConfig::default(),
+            warm_start: None,
+        }
+    }
+
+    /// BO (default hyperparameters) warm-started from the store at
+    /// `from` — an unresolved reference until sealed.
+    pub fn bo_warm(from: &str, max_trials: usize) -> SearcherSpec {
+        SearcherSpec::Bo {
+            config: BoConfig::default(),
+            warm_start: Some(WarmStartSpec::new(from, max_trials)),
         }
     }
 
     pub fn wire_name(&self) -> &'static str {
         match self {
             SearcherSpec::Random => "random",
-            SearcherSpec::Bo(_) => "bo",
+            SearcherSpec::Bo { .. } => "bo",
+        }
+    }
+
+    /// The warm-start section, if any.
+    pub fn warm_start(&self) -> Option<&WarmStartSpec> {
+        match self {
+            SearcherSpec::Bo {
+                warm_start: Some(ws),
+                ..
+            } => Some(ws),
+            _ => None,
+        }
+    }
+
+    /// Seal the warm-start reference with the selected observations
+    /// (no-op without a warm-start section).
+    pub fn seal_warm_start(&mut self, trials: Vec<WarmTrial>) {
+        if let SearcherSpec::Bo {
+            warm_start: Some(ws),
+            ..
+        } = self
+        {
+            ws.trials = Some(trials);
         }
     }
 
     pub fn validate(&self) -> Result<(), String> {
-        if let SearcherSpec::Bo(cfg) = self {
-            if cfg.min_points < 1 {
-                return Err("field 'searcher.min_points': must be >= 1".into());
+        let SearcherSpec::Bo {
+            config: cfg,
+            warm_start,
+        } = self
+        else {
+            return Ok(());
+        };
+        if cfg.min_points < 1 {
+            return Err("field 'searcher.min_points': must be >= 1".into());
+        }
+        if cfg.num_candidates < 1 {
+            return Err("field 'searcher.num_candidates': must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&cfg.random_fraction) {
+            return Err(format!(
+                "field 'searcher.random_fraction': must be in [0, 1] (got {})",
+                cfg.random_fraction
+            ));
+        }
+        for (v, field) in [
+            (cfg.lengthscale, "searcher.lengthscale"),
+            (cfg.signal_var, "searcher.signal_var"),
+            (cfg.noise_var, "searcher.noise_var"),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("field '{field}': must be > 0 (got {v})"));
             }
-            if cfg.num_candidates < 1 {
-                return Err("field 'searcher.num_candidates': must be >= 1".into());
+        }
+        if let Some(ws) = warm_start {
+            if ws.from.is_empty() {
+                return Err(
+                    "field 'searcher.warm_start.from': must be a non-empty store path".into(),
+                );
             }
-            if !(0.0..=1.0).contains(&cfg.random_fraction) {
-                return Err(format!(
-                    "field 'searcher.random_fraction': must be in [0, 1] (got {})",
-                    cfg.random_fraction
-                ));
+            if ws.max_trials < 1 {
+                return Err("field 'searcher.warm_start.max_trials': must be >= 1".into());
             }
-            for (v, field) in [
-                (cfg.lengthscale, "searcher.lengthscale"),
-                (cfg.signal_var, "searcher.signal_var"),
-                (cfg.noise_var, "searcher.noise_var"),
-            ] {
-                if !(v.is_finite() && v > 0.0) {
-                    return Err(format!("field '{field}': must be > 0 (got {v})"));
+            for (i, t) in ws.trials.iter().flatten().enumerate() {
+                if t.epoch < 1 {
+                    return Err(format!(
+                        "field 'searcher.warm_start.trials[{i}].epoch': must be >= 1"
+                    ));
+                }
+                if !t.metric.is_finite() || t.config.iter().any(|v| !v.is_finite()) {
+                    return Err(format!(
+                        "field 'searcher.warm_start.trials[{i}]': values must be finite"
+                    ));
                 }
             }
         }
@@ -443,14 +557,37 @@ impl SearcherSpec {
 
     /// Build the searcher for a repetition with scheduler seed
     /// `sched_seed` — the exact seed derivations `Tuner::run` has always
-    /// used, so a served session reproduces the in-process run.
-    pub fn build(&self, sched_seed: u64) -> Box<dyn Searcher> {
-        match self {
+    /// used, so a served session reproduces the in-process run. The
+    /// space decodes embedded warm-start configurations; an unresolved
+    /// warm-start reference is an error (seal it first).
+    pub fn build(
+        &self,
+        space: &SearchSpace,
+        sched_seed: u64,
+    ) -> Result<Box<dyn Searcher>, String> {
+        Ok(match self {
             SearcherSpec::Random => Box::new(RandomSearcher::new(mix(&[sched_seed, 0x5EA2C4]))),
-            SearcherSpec::Bo(cfg) => {
-                Box::new(BoSearcher::with_config(mix(&[sched_seed, 0xB0]), cfg.clone()))
+            SearcherSpec::Bo { config, warm_start } => {
+                let mut bo = BoSearcher::with_config(mix(&[sched_seed, 0xB0]), config.clone());
+                if let Some(ws) = warm_start {
+                    let trials = ws.trials.as_ref().ok_or_else(|| {
+                        "field 'searcher.warm_start': unresolved store reference (seal it \
+                         with store::resolve_warm_start before building)"
+                            .to_string()
+                    })?;
+                    let mut prior = Vec::with_capacity(trials.len());
+                    for (i, t) in trials.iter().enumerate() {
+                        let config = config_from_json(space, &Json::from(t.config.clone()))
+                            .map_err(|e| {
+                                format!("field 'searcher.warm_start.trials[{i}].config': {e}")
+                            })?;
+                        prior.push((config, t.epoch, t.metric));
+                    }
+                    bo.warm_start(prior);
+                }
+                Box::new(bo)
             }
-        }
+        })
     }
 }
 
@@ -744,7 +881,7 @@ impl ExperimentSpec {
         let bench = self.bench.build()?;
         let builder = self.scheduler.builder(self.stop.config_budget)?;
         let scheduler = builder.build(bench.max_epochs(), self.seed);
-        let searcher = self.searcher.build(self.seed);
+        let searcher = self.searcher.build(bench.space(), self.seed)?;
         let mut rules: Vec<Box<dyn StoppingRule>> =
             vec![Box::new(ConfigBudget(self.stop.config_budget))];
         if let Some(e) = self.stop.epoch_budget {
@@ -873,7 +1010,7 @@ mod tests {
 
         // searcher family switches both ways
         spec.set("searcher.name=bo").unwrap();
-        assert!(matches!(spec.searcher, SearcherSpec::Bo(_)));
+        assert!(matches!(spec.searcher, SearcherSpec::Bo { .. }));
         spec.set("searcher.min_points=8").unwrap();
         spec.set("searcher.name=random").unwrap();
         assert_eq!(spec.searcher, SearcherSpec::Random);
@@ -926,6 +1063,49 @@ mod tests {
         spec.exec.workers = 8;
         let err = spec.build_core().unwrap_err();
         assert!(err.contains("'exec'"), "{err}");
+    }
+
+    #[test]
+    fn warm_start_specs_validate_and_seal() {
+        let mut spec = ExperimentSpec::default();
+        spec.searcher = SearcherSpec::bo_warm("store.jsonl", 8);
+        spec.validate().unwrap();
+        // unresolved references refuse to build
+        let err = spec.build_core().unwrap_err();
+        assert!(err.contains("unresolved"), "{err}");
+        // sealed — even with zero matching trials — builds fine
+        spec.searcher.seal_warm_start(vec![]);
+        spec.build_core().unwrap();
+        // an embedded trial is decoded against the benchmark's space
+        spec.searcher.seal_warm_start(vec![WarmTrial {
+            config: vec![3.0],
+            epoch: 2,
+            metric: 80.0,
+        }]);
+        spec.build_core().unwrap();
+        // wrong arity errors by field
+        spec.searcher.seal_warm_start(vec![WarmTrial {
+            config: vec![3.0, 1.0],
+            epoch: 2,
+            metric: 80.0,
+        }]);
+        let err = spec.build_core().unwrap_err();
+        assert!(err.contains("warm_start.trials[0].config"), "{err}");
+        // invalid warm-start sections are named
+        spec.searcher = SearcherSpec::bo_warm("", 8);
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("warm_start.from"), "{err}");
+        spec.searcher = SearcherSpec::bo_warm("s.jsonl", 0);
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("warm_start.max_trials"), "{err}");
+        spec.searcher = SearcherSpec::bo_warm("s.jsonl", 4);
+        spec.searcher.seal_warm_start(vec![WarmTrial {
+            config: vec![1.0],
+            epoch: 0,
+            metric: 1.0,
+        }]);
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("trials[0].epoch"), "{err}");
     }
 
     #[test]

@@ -55,7 +55,11 @@ pub(crate) fn to_v1_json(spec: &ExperimentSpec) -> Option<Json> {
     };
     let representable_searcher = match &spec.searcher {
         SearcherSpec::Random => true,
-        SearcherSpec::Bo(cfg) => *cfg == BoConfig::default(),
+        // warm starts are v2-only: a v1 client could neither express nor
+        // rebuild one
+        SearcherSpec::Bo { config, warm_start } => {
+            *config == BoConfig::default() && warm_start.is_none()
+        }
     };
     if !(representable_scheduler && representable_searcher) {
         return None;
@@ -131,7 +135,7 @@ mod tests {
                 ranking: RankingSpec::default(),
             }
         );
-        assert_eq!(spec.searcher, SearcherSpec::Bo(BoConfig::default()));
+        assert_eq!(spec.searcher, SearcherSpec::bo_default());
         assert_eq!(spec.seed, 7);
         assert_eq!(spec.bench_seed, 1);
         assert_eq!(spec.stop.config_budget, 99);
@@ -179,6 +183,9 @@ mod tests {
         let mut v2_only = spec.clone();
         v2_only.stop.time_budget = Some(10.0);
         assert!(v2_only.to_v1_compat_json().is_none(), "time budget");
+        let mut v2_only = spec.clone();
+        v2_only.searcher = SearcherSpec::bo_warm("s.jsonl", 4);
+        assert!(v2_only.to_v1_compat_json().is_none(), "warm start is v2-only");
         let mut v2_only = spec;
         v2_only.exec.workers = 2;
         assert!(v2_only.to_v1_compat_json().is_none(), "non-default exec");

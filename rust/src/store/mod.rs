@@ -1,0 +1,627 @@
+//! Persistent trial store: completed trials as reusable artifacts.
+//!
+//! Every completed tuning run discards knowledge that Zappella &
+//! Archambeau (arXiv 2103.16111) show is worth keeping: tuning problems
+//! recur, and prior trials warm-start the next run on the same (or a
+//! related) task. This module is the results half of that story — the
+//! spec half is the versioned [`crate::spec::ExperimentSpec`]:
+//!
+//! * [`TrialStore`] — an append-only JSONL file of [`TrialRecord`]s with
+//!   the same torn-tail discipline as the service journal (one shared
+//!   implementation: [`crate::util::jsonl`]). Appends are self-repairing,
+//!   a torn final line is dropped on read, mid-file corruption is an
+//!   error, and [`TrialStore::gc`] deduplicates with an atomic rewrite.
+//! * [`spec_fingerprint`] — the canonical task key: a 64-bit hash over
+//!   the benchmark name, the search-space structure, and the fidelity
+//!   schedule (`r_min`, `eta`). Deliberately **invariant** to searcher,
+//!   seeds, exec, and stop-rule fields, so related runs (same task,
+//!   different searcher/seed/budget) hash to the same fingerprint and can
+//!   share trials.
+//! * [`resolve_warm_start`] — seals a `warm_start: {from, max_trials}`
+//!   reference on a spec into embedded prior observations
+//!   ([`crate::spec::WarmTrial`]), rank-ordered by prior performance.
+//!   Sealing happens once, before a run or session is created: after it,
+//!   the spec is self-contained, so journal replay and snapshot recovery
+//!   are independent of later store mutations.
+//! * [`ingest`] — records a finished run's trials under the spec's
+//!   fingerprint. At-least-once semantics: a crash between run completion
+//!   and ingestion can duplicate records; `gc` collapses them.
+
+use crate::config::space::SearchSpace;
+use crate::scheduler::TrialInfo;
+use crate::spec::{ExperimentSpec, WarmTrial};
+use crate::util::json::Json;
+use crate::util::jsonl;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Where (and whether) to persist completed trials. Kept out of
+/// [`ExperimentSpec`] on purpose: the store location is operational
+/// context, not experiment identity — two runs writing to different
+/// stores are still the same experiment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreSpec {
+    pub path: PathBuf,
+}
+
+impl StoreSpec {
+    pub fn new(path: impl Into<PathBuf>) -> StoreSpec {
+        StoreSpec { path: path.into() }
+    }
+}
+
+/// One completed trial: a configuration observed at a resource level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrialRecord {
+    /// Task key ([`spec_fingerprint`]) this trial belongs to.
+    pub fingerprint: String,
+    /// Benchmark name, for human-readable `store ls` output.
+    pub bench: String,
+    /// Positional configuration values (the [`crate::scheduler::asktell::config_json`]
+    /// number encoding; the search space supplies the value kinds).
+    pub config: Vec<f64>,
+    /// Epochs trained when `metric` was observed (1-based).
+    pub epoch: u32,
+    /// Observed validation accuracy (%) at `epoch`.
+    pub metric: f64,
+}
+
+impl TrialRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("bench", self.bench.as_str())
+            .set("config", self.config.clone())
+            .set("epoch", self.epoch)
+            .set("fp", self.fingerprint.as_str())
+            .set("metric", self.metric);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrialRecord, String> {
+        let s = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(|v| v.to_string())
+                .ok_or_else(|| format!("trial record missing string field '{k}'"))
+        };
+        let n = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("trial record missing numeric field '{k}'"))
+        };
+        let config = j
+            .get("config")
+            .and_then(|v| v.as_arr())
+            .ok_or("trial record missing array field 'config'")?
+            .iter()
+            .map(|v| v.as_f64().ok_or("trial config values must be numbers"))
+            .collect::<Result<Vec<f64>, _>>()?;
+        let epoch = n("epoch")?;
+        if epoch < 1.0 || epoch.fract() != 0.0 {
+            return Err(format!("trial epoch must be a positive integer, got {epoch}"));
+        }
+        Ok(TrialRecord {
+            fingerprint: s("fp")?,
+            bench: s("bench")?,
+            config,
+            epoch: epoch as u32,
+            metric: n("metric")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec fingerprint: the canonical task key.
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit hash: tiny, dependency-free, stable across platforms.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint the *task*: benchmark + search-space structure + fidelity
+/// schedule. Two specs that differ only in searcher, seeds, exec backend,
+/// decision mode, ranking, or stop rules produce the same fingerprint —
+/// their trials are mutually reusable. Changing the benchmark, any
+/// search-space domain, `r_min`, or `eta` changes it.
+pub fn fingerprint_parts(bench: &str, space: &SearchSpace, r_min: u32, eta: u32) -> String {
+    let domains: Vec<Json> = space
+        .params
+        .iter()
+        .map(|(name, d)| {
+            use crate::config::space::Domain;
+            let parts: Vec<Json> = match *d {
+                Domain::Float { lo, hi } => vec!["f".into(), lo.into(), hi.into()],
+                Domain::LogFloat { lo, hi } => vec!["lf".into(), lo.into(), hi.into()],
+                Domain::Int { lo, hi } => vec!["i".into(), lo.into(), hi.into()],
+                Domain::LogInt { lo, hi } => vec!["li".into(), lo.into(), hi.into()],
+                Domain::Categorical { n } => vec!["c".into(), n.into()],
+            };
+            let mut o = Json::obj();
+            o.set(name, Json::Arr(parts));
+            o
+        })
+        .collect();
+    let mut payload = Json::obj();
+    payload
+        .set("bench", bench)
+        .set("eta", eta)
+        .set("r_min", r_min)
+        .set("space", Json::Arr(domains));
+    format!("{:016x}", fnv1a64(payload.to_string_compact().as_bytes()))
+}
+
+/// [`fingerprint_parts`] for a full spec: the benchmark is built to
+/// obtain its search space; schedulers without a rung ladder (fixed-epoch
+/// and random baselines) take the paper defaults `r_min = 1`, `eta = 3`.
+pub fn spec_fingerprint(spec: &ExperimentSpec) -> Result<String, String> {
+    let bench = spec.bench.build()?;
+    Ok(fingerprint_parts(
+        &spec.bench.name,
+        bench.space(),
+        spec.scheduler.r_min().unwrap_or(1),
+        spec.scheduler.eta().unwrap_or(3),
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// The store file.
+// ---------------------------------------------------------------------------
+
+/// Outcome of a [`TrialStore::gc`] pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GcReport {
+    pub kept: usize,
+    pub dropped: usize,
+}
+
+/// Append-only JSONL trial store. Opening is lazy (no filesystem access
+/// until a read or append); concurrent appenders are safe at the
+/// whole-line level thanks to the self-repairing append discipline.
+pub struct TrialStore {
+    path: PathBuf,
+}
+
+impl TrialStore {
+    pub fn open(path: impl Into<PathBuf>) -> TrialStore {
+        TrialStore { path: path.into() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append records, creating the file (and parents) if needed.
+    pub fn append(&self, records: &[TrialRecord]) -> io::Result<()> {
+        for r in records {
+            jsonl::append_line(&self.path, &r.to_json())?;
+        }
+        Ok(())
+    }
+
+    /// Read every whole record. A torn final line is dropped (crash
+    /// artifact); a record that is valid JSON but the wrong shape, or
+    /// unparseable mid-file, is corruption ([`io::ErrorKind::InvalidData`]).
+    pub fn read_all(&self) -> io::Result<Vec<TrialRecord>> {
+        let read = jsonl::read_jsonl(&self.path)?;
+        read.records
+            .iter()
+            .map(|j| {
+                TrialRecord::from_json(j).map_err(|e| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("corrupt trial store {}: {e}", self.path.display()),
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// Records matching one task fingerprint.
+    pub fn for_fingerprint(&self, fp: &str) -> io::Result<Vec<TrialRecord>> {
+        Ok(self
+            .read_all()?
+            .into_iter()
+            .filter(|r| r.fingerprint == fp)
+            .collect())
+    }
+
+    /// Deduplicate and rewrite atomically. The key is
+    /// `(fingerprint, config, epoch)`; the *last* record wins (later
+    /// appends supersede earlier ones), and surviving records keep their
+    /// original relative order, so gc is deterministic.
+    pub fn gc(&self) -> io::Result<GcReport> {
+        let records = self.read_all()?;
+        let key = |r: &TrialRecord| {
+            format!(
+                "{}|{}|{}",
+                r.fingerprint,
+                Json::from(r.config.clone()).to_string_compact(),
+                r.epoch
+            )
+        };
+        let mut last: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+        for (i, r) in records.iter().enumerate() {
+            last.insert(key(r), i);
+        }
+        let kept: Vec<&TrialRecord> = records
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| last[&key(r)] == *i)
+            .map(|(_, r)| r)
+            .collect();
+        let report = GcReport {
+            kept: kept.len(),
+            dropped: records.len() - kept.len(),
+        };
+        let lines: Vec<Json> = kept.iter().map(|r| r.to_json()).collect();
+        jsonl::rewrite_atomic(&self.path, &lines)?;
+        Ok(report)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ingestion and warm-start resolution.
+// ---------------------------------------------------------------------------
+
+/// Map a finished run's trials to store records: each trial that reported
+/// at least one epoch contributes its deepest observation.
+pub fn records_from_trials(
+    fingerprint: &str,
+    bench: &str,
+    trials: &[TrialInfo],
+) -> Vec<TrialRecord> {
+    trials
+        .iter()
+        .filter(|t| !t.curve.is_empty())
+        .map(|t| TrialRecord {
+            fingerprint: fingerprint.to_string(),
+            bench: bench.to_string(),
+            config: t.config.values.iter().map(|v| v.as_f64()).collect(),
+            epoch: t.curve.len() as u32,
+            metric: *t.curve.last().expect("filtered non-empty"),
+        })
+        .collect()
+}
+
+/// Record a finished run's trials under the spec's fingerprint. Returns
+/// the number of records appended.
+pub fn ingest(
+    store: &StoreSpec,
+    spec: &ExperimentSpec,
+    trials: &[TrialInfo],
+) -> Result<usize, String> {
+    let fp = spec_fingerprint(spec)?;
+    let records = records_from_trials(&fp, &spec.bench.name, trials);
+    TrialStore::open(&store.path)
+        .append(&records)
+        .map_err(|e| format!("trial store append {}: {e}", store.path.display()))?;
+    Ok(records.len())
+}
+
+/// Select the prior observations a warm start should carry: fingerprint
+/// match, budget-matched (`epoch <= max_epochs`), deduplicated per
+/// configuration keeping the deepest (then best) observation, and
+/// rank-ordered by prior performance — best metric first, deeper
+/// observations breaking ties. The order is the BO searcher's initial
+/// design order, so it is fully deterministic (final tie-break on the
+/// canonical config bytes).
+pub fn select_warm_trials(
+    records: &[TrialRecord],
+    fp: &str,
+    max_epochs: u32,
+    max_trials: usize,
+) -> Vec<WarmTrial> {
+    use std::cmp::Ordering;
+    let config_key = |r: &TrialRecord| Json::from(r.config.clone()).to_string_compact();
+    let mut best: std::collections::BTreeMap<String, &TrialRecord> =
+        std::collections::BTreeMap::new();
+    for r in records {
+        if r.fingerprint != fp
+            || r.epoch < 1
+            || r.epoch > max_epochs
+            || !r.metric.is_finite()
+            || r.config.iter().any(|x| !x.is_finite())
+        {
+            continue;
+        }
+        let k = config_key(r);
+        let better = match best.get(&k) {
+            None => true,
+            Some(prev) => (r.epoch, r.metric) > (prev.epoch, prev.metric),
+        };
+        if better {
+            best.insert(k, r);
+        }
+    }
+    let mut survivors: Vec<&TrialRecord> = best.into_values().collect();
+    survivors.sort_by(|a, b| {
+        b.metric
+            .partial_cmp(&a.metric)
+            .unwrap_or(Ordering::Equal)
+            .then(b.epoch.cmp(&a.epoch))
+            .then(config_key(a).cmp(&config_key(b)))
+    });
+    survivors.truncate(max_trials);
+    survivors
+        .into_iter()
+        .map(|r| WarmTrial {
+            config: r.config.clone(),
+            epoch: r.epoch,
+            metric: r.metric,
+        })
+        .collect()
+}
+
+/// Seal an unresolved `warm_start: {from, max_trials}` reference into
+/// embedded prior observations. No-op (returns 0) when the spec has no
+/// warm start or it is already sealed. After sealing, the spec is
+/// self-contained: building it never touches the store again, so
+/// warm-started sessions recover and replay byte-identically regardless
+/// of later store writes.
+pub fn resolve_warm_start(spec: &mut ExperimentSpec) -> Result<usize, String> {
+    let (from, max_trials) = match spec.searcher.warm_start() {
+        Some(ws) if ws.trials.is_none() => (ws.from.clone(), ws.max_trials),
+        _ => return Ok(0),
+    };
+    let fp = spec_fingerprint(spec)?;
+    let max_epochs = spec.bench.build()?.max_epochs();
+    let records = TrialStore::open(&from)
+        .read_all()
+        .map_err(|e| format!("warm-start store {from}: {e}"))?;
+    let trials = select_warm_trials(&records, &fp, max_epochs, max_trials);
+    let n = trials.len();
+    spec.searcher.seal_warm_start(trials);
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::{ExecBackendKind, ExperimentSpec, SearcherSpec, StopRules};
+    use crate::util::ptest::{check, Gen};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pasha-store-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn rec(fp: &str, config: &[f64], epoch: u32, metric: f64) -> TrialRecord {
+        TrialRecord {
+            fingerprint: fp.to_string(),
+            bench: "lcbench-Fashion-MNIST".to_string(),
+            config: config.to_vec(),
+            epoch,
+            metric,
+        }
+    }
+
+    #[test]
+    fn record_json_round_trip() {
+        let r = rec("abc123", &[1.0, 0.25, 3.0], 9, 87.5);
+        let j = r.to_json();
+        let back = TrialRecord::from_json(&crate::util::json::parse(&j.to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back, r);
+        assert!(TrialRecord::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn store_append_read_gc() {
+        let path = tmp("roundtrip.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let store = TrialStore::open(&path);
+        store
+            .append(&[
+                rec("fp1", &[0.5], 1, 50.0),
+                rec("fp1", &[0.5], 1, 55.0), // duplicate key, later wins
+                rec("fp2", &[0.5], 1, 60.0),
+                rec("fp1", &[0.7], 2, 70.0),
+            ])
+            .unwrap();
+        assert_eq!(store.read_all().unwrap().len(), 4);
+        assert_eq!(store.for_fingerprint("fp1").unwrap().len(), 3);
+        let report = store.gc().unwrap();
+        assert_eq!(report, GcReport { kept: 3, dropped: 1 });
+        let after = store.read_all().unwrap();
+        assert_eq!(after.len(), 3);
+        assert_eq!(after[0].metric, 55.0, "last duplicate wins");
+        // gc is idempotent
+        assert_eq!(store.gc().unwrap(), GcReport { kept: 3, dropped: 0 });
+    }
+
+    #[test]
+    fn torn_byte_fuzz_reads_a_whole_prefix() {
+        // The journal fuzz discipline applied to the store: cut the file
+        // at every byte boundary; the reader must return a whole-record
+        // prefix (never an error, never a partial record), and appending
+        // afterwards must self-repair.
+        let path = tmp("fuzz.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let store = TrialStore::open(&path);
+        let records: Vec<TrialRecord> = (0..5)
+            .map(|i| rec("fpf", &[i as f64, 0.125 * i as f64], i + 1, 50.0 + i as f64))
+            .collect();
+        store.append(&records).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in 0..=full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let got = store.read_all().unwrap();
+            assert!(got.len() <= records.len(), "cut {cut}");
+            assert_eq!(got[..], records[..got.len()], "cut {cut}: prefix property");
+            // repair: append over the torn tail, then the prefix + new
+            // record read back whole
+            store.append(&[rec("fpf", &[9.0], 1, 99.0)]).unwrap();
+            let repaired = store.read_all().unwrap();
+            assert_eq!(repaired.last().unwrap().metric, 99.0, "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn mid_file_corruption_is_an_error() {
+        let path = tmp("corrupt.jsonl");
+        std::fs::write(
+            &path,
+            format!(
+                "{}\nnot json\n{}\n",
+                rec("a", &[1.0], 1, 1.0).to_json().to_string_compact(),
+                rec("a", &[2.0], 1, 2.0).to_json().to_string_compact()
+            ),
+        )
+        .unwrap();
+        let err = TrialStore::open(&path).read_all().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    fn spec_for(bench: &str, scheduler: &str) -> ExperimentSpec {
+        ExperimentSpec::named(bench, scheduler).unwrap()
+    }
+
+    #[test]
+    fn fingerprint_invariance_property() {
+        // Invariant under searcher/seed/exec/stop/mode/ranking changes;
+        // sensitive to bench, search-space, and r_min/eta changes.
+        check("fingerprint invariance", 60, |g: &mut Gen| {
+            let benches = ["lcbench-Fashion-MNIST", "nas-cifar10", "pd1-wmt"];
+            let bench = benches[g.usize(0, benches.len() - 1)];
+            let scheds = ["asha", "pasha", "asha-stop", "pasha-stop"];
+            let base = spec_for(bench, scheds[g.usize(0, scheds.len() - 1)]);
+            let fp = spec_fingerprint(&base).unwrap();
+
+            // searcher / seed / exec / stop changes: same fingerprint
+            let mut varied = base.clone();
+            varied.searcher = if g.bool() {
+                SearcherSpec::Random
+            } else {
+                SearcherSpec::bo_default()
+            };
+            varied.seed = g.u64() >> 32;
+            varied.bench_seed = g.u64() >> 32;
+            varied.exec.workers = g.usize(1, 16);
+            varied.exec.backend = if g.bool() {
+                ExecBackendKind::Sim
+            } else {
+                ExecBackendKind::Pool
+            };
+            varied.stop = StopRules {
+                config_budget: g.usize(1, 512),
+                epoch_budget: if g.bool() { Some(77) } else { None },
+                time_budget: None,
+            };
+            assert_eq!(spec_fingerprint(&varied).unwrap(), fp, "invariant fields");
+
+            // a different scheduler *family* with the same ladder: same task
+            for other in scheds {
+                let same_task = spec_for(bench, other);
+                assert_eq!(spec_fingerprint(&same_task).unwrap(), fp, "{other}");
+            }
+
+            // bench change: different fingerprint
+            let other_bench = benches[(benches.iter().position(|b| *b == bench).unwrap() + 1)
+                % benches.len()];
+            assert_ne!(spec_fingerprint(&spec_for(other_bench, "asha")).unwrap(), fp);
+        });
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_ladder_and_space() {
+        let space = SearchSpace::lcbench();
+        let base = fingerprint_parts("lcbench-Fashion-MNIST", &space, 1, 3);
+        assert_ne!(fingerprint_parts("lcbench-Fashion-MNIST", &space, 2, 3), base);
+        assert_ne!(fingerprint_parts("lcbench-Fashion-MNIST", &space, 1, 4), base);
+        // any domain perturbation changes the key
+        let wider = SearchSpace::new()
+            .add("num_layers", crate::config::space::Domain::Int { lo: 1, hi: 6 });
+        let narrow = SearchSpace::new()
+            .add("num_layers", crate::config::space::Domain::Int { lo: 1, hi: 5 });
+        assert_ne!(
+            fingerprint_parts("x", &wider, 1, 3),
+            fingerprint_parts("x", &narrow, 1, 3)
+        );
+        // and the hex shape is stable
+        assert_eq!(base.len(), 16);
+        assert!(base.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn warm_selection_ranks_and_budget_matches() {
+        let records = vec![
+            rec("fp", &[1.0], 3, 70.0),
+            rec("fp", &[2.0], 9, 90.0),
+            rec("fp", &[2.0], 3, 60.0),  // shallower duplicate of [2.0]: dropped
+            rec("fp", &[3.0], 27, 80.0), // over the epoch budget: dropped
+            rec("fp", &[4.0], 9, 85.0),
+            rec("other", &[5.0], 1, 99.0), // wrong task: dropped
+            rec("fp", &[6.0], 1, f64::NAN), // non-finite: dropped
+        ];
+        let sel = select_warm_trials(&records, "fp", 9, 8);
+        let metrics: Vec<f64> = sel.iter().map(|t| t.metric).collect();
+        assert_eq!(metrics, vec![90.0, 85.0, 70.0], "rank-ordered, best first");
+        assert_eq!(sel[0].config, vec![2.0]);
+        // max_trials truncates from the bottom
+        let top = select_warm_trials(&records, "fp", 9, 2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[1].metric, 85.0);
+    }
+
+    #[test]
+    fn resolve_seals_the_spec_once() {
+        let path = tmp("resolve.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut spec = spec_for("lcbench-Fashion-MNIST", "pasha");
+        let fp = spec_fingerprint(&spec).unwrap();
+        TrialStore::open(&path)
+            .append(&[
+                rec(&fp, &[3.0, 256.0, 64.0, 0.01, 0.001, 0.5, 0.2], 9, 88.0),
+                rec(&fp, &[2.0, 128.0, 32.0, 0.02, 0.002, 0.6, 0.1], 9, 82.0),
+            ])
+            .unwrap();
+        // no warm start: no-op
+        assert_eq!(resolve_warm_start(&mut spec).unwrap(), 0);
+        spec.searcher = SearcherSpec::bo_warm(path.to_string_lossy().as_ref(), 8);
+        assert_eq!(resolve_warm_start(&mut spec).unwrap(), 2);
+        let sealed = spec.searcher.warm_start().unwrap().trials.clone().unwrap();
+        assert_eq!(sealed.len(), 2);
+        assert_eq!(sealed[0].metric, 88.0);
+        // already sealed: no-op even if the store grows
+        TrialStore::open(&path)
+            .append(&[rec(&fp, &[1.0, 64.0, 16.0, 0.03, 0.003, 0.7, 0.3], 9, 95.0)])
+            .unwrap();
+        assert_eq!(resolve_warm_start(&mut spec).unwrap(), 0);
+        assert_eq!(
+            spec.searcher.warm_start().unwrap().trials.clone().unwrap().len(),
+            2,
+            "sealed specs never re-read the store"
+        );
+        // a missing store is an explicit error, not an empty warm start
+        let mut missing = spec_for("lcbench-Fashion-MNIST", "pasha");
+        missing.searcher = SearcherSpec::bo_warm("/nonexistent/store.jsonl", 8);
+        assert!(resolve_warm_start(&mut missing).is_err());
+    }
+
+    #[test]
+    fn ingest_records_completed_trials() {
+        use crate::config::space::Config;
+        let path = tmp("ingest.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let spec = spec_for("nas-cifar10", "asha");
+        let mut done = TrialInfo::new(Config::cat(7));
+        done.curve = vec![40.0, 55.0, 61.0];
+        let empty = TrialInfo::new(Config::cat(3)); // never reported: skipped
+        let n = ingest(&StoreSpec::new(&path), &spec, &[done, empty]).unwrap();
+        assert_eq!(n, 1);
+        let records = TrialStore::open(&path).read_all().unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].fingerprint, spec_fingerprint(&spec).unwrap());
+        assert_eq!(records[0].bench, "nas-cifar10");
+        assert_eq!(records[0].config, vec![7.0]);
+        assert_eq!(records[0].epoch, 3);
+        assert_eq!(records[0].metric, 61.0);
+    }
+}

@@ -27,10 +27,10 @@ use crate::executor::engine::{ClockBudget, ConfigBudget, EpochBudget, StoppingRu
 use crate::executor::pool::{PoolBackend, SharedSurrogate};
 use crate::executor::sim::{SimBackend, SimStats};
 use crate::executor::{run_engine, SurrogateEvaluator};
-use crate::ranking::RankingSpec;
-use crate::scheduler::{Scheduler, SchedulerBuilder};
+use crate::scheduler::{Scheduler, SchedulerBuilder, TrialInfo};
 use crate::searcher::Searcher;
-use crate::spec::{BenchSpec, ExecBackendKind, ExperimentSpec, SchedulerSpec, SearcherSpec};
+use crate::spec::{ExecBackendKind, ExperimentSpec, SearcherSpec};
+use crate::store::{self, StoreSpec};
 use crate::util::parallel::{available_threads, par_map};
 use std::sync::Arc;
 
@@ -65,36 +65,9 @@ impl SearcherKind {
     pub fn to_spec(&self) -> SearcherSpec {
         match self {
             SearcherKind::Random => SearcherSpec::Random,
-            SearcherKind::Bo => SearcherSpec::Bo(Default::default()),
+            SearcherKind::Bo => SearcherSpec::bo_default(),
         }
     }
-}
-
-/// Resolve a benchmark by its wire name.
-#[deprecated(note = "use spec::BenchSpec::new(name).build() — specs are the construction path")]
-pub fn bench_from_name(name: &str) -> Result<Box<dyn Benchmark>, String> {
-    BenchSpec::new(name).build()
-}
-
-/// Resolve a scheduler by its wire name with the legacy hardcoded knobs
-/// (`r_min = 1`, default ranking). `budget` only matters for synchronous
-/// SH (its initial cohort size).
-#[deprecated(
-    note = "use spec::SchedulerSpec::from_name(...).builder(budget) — it exposes r_min and \
-            the ranking function"
-)]
-pub fn scheduler_from_name(
-    name: &str,
-    eta: u32,
-    budget: usize,
-) -> Result<Box<dyn SchedulerBuilder>, String> {
-    SchedulerSpec::from_name(name, 1, eta, RankingSpec::default())?.builder(budget)
-}
-
-/// The searcher a repetition with scheduler seed `sched_seed` uses.
-#[deprecated(note = "use spec::SearcherSpec::build(sched_seed)")]
-pub fn searcher_for(kind: &SearcherKind, sched_seed: u64) -> Box<dyn Searcher> {
-    kind.to_spec().build(sched_seed)
 }
 
 /// Extra stopping rules layered on top of the config budget (cloneable
@@ -238,6 +211,7 @@ impl Tuner {
     /// order not reproducible).
     pub fn run(spec: &ExperimentSpec) -> Result<TuneResult, String> {
         spec.validate()?;
+        Self::require_sealed(spec)?;
         let bench = spec.bench.build()?;
         let builder = spec.scheduler.builder(spec.stop.config_budget)?;
         let tspec = TunerSpec::from(spec);
@@ -263,6 +237,7 @@ impl Tuner {
         bench_seeds: &[u64],
     ) -> Result<Vec<TuneResult>, String> {
         spec.validate()?;
+        Self::require_sealed(spec)?;
         if spec.exec.backend != ExecBackendKind::Sim {
             return Err("field 'exec.backend': repetition grids require the 'sim' backend".into());
         }
@@ -288,8 +263,24 @@ impl Tuner {
         sched_seed: u64,
         bench_seed: u64,
     ) -> TuneResult {
+        Self::run_with_trials(bench, builder, spec, sched_seed, bench_seed).0
+    }
+
+    /// [`Tuner::run_with`] that additionally returns the scheduler's
+    /// per-trial records (config, dispatched epochs, learning curve) —
+    /// the raw material the trial store ingests after a run.
+    pub fn run_with_trials(
+        bench: &dyn Benchmark,
+        builder: &dyn SchedulerBuilder,
+        spec: &TunerSpec,
+        sched_seed: u64,
+        bench_seed: u64,
+    ) -> (TuneResult, Vec<TrialInfo>) {
         let mut scheduler = builder.build(bench.max_epochs(), sched_seed);
-        let mut searcher: Box<dyn Searcher> = spec.searcher.build(sched_seed);
+        let mut searcher: Box<dyn Searcher> = spec
+            .searcher
+            .build(bench.space(), sched_seed)
+            .expect("searcher spec must build (seal warm starts before run_with)");
         let mut evaluator = SurrogateEvaluator { bench, bench_seed };
         let mut backend = SimBackend::new(spec.workers, &mut evaluator);
         let rules = spec.rules();
@@ -300,7 +291,55 @@ impl Tuner {
             &rules,
             &mut backend,
         );
-        Self::collect(builder.name(), scheduler, stats, bench, bench_seed)
+        let trials = scheduler.trials().to_vec();
+        let result = Self::collect(builder.name(), scheduler, stats, bench, bench_seed);
+        (result, trials)
+    }
+
+    /// Run a spec against a persistent trial store: unresolved
+    /// `searcher.warm_start` references are sealed from the store before
+    /// the run, and every completed trial is ingested back into it
+    /// afterwards. Returns the result plus the number of trials recorded.
+    /// Requires the deterministic `sim` backend — store records feed
+    /// later warm starts, which must be reproducible.
+    pub fn run_stored(
+        spec: &ExperimentSpec,
+        store: &StoreSpec,
+    ) -> Result<(TuneResult, usize), String> {
+        let mut spec = spec.clone();
+        store::resolve_warm_start(&mut spec)?;
+        spec.validate()?;
+        if spec.exec.backend != ExecBackendKind::Sim {
+            return Err("field 'exec.backend': store-backed runs require the 'sim' backend".into());
+        }
+        let bench = spec.bench.build()?;
+        let builder = spec.scheduler.builder(spec.stop.config_budget)?;
+        let tspec = TunerSpec::from(&spec);
+        let (result, trials) = Self::run_with_trials(
+            bench.as_ref(),
+            builder.as_ref(),
+            &tspec,
+            spec.seed,
+            spec.bench_seed,
+        );
+        let ingested = store::ingest(store, &spec, &trials)?;
+        Ok((result, ingested))
+    }
+
+    /// Specs with an unresolved warm-start reference must be sealed
+    /// (observations embedded) before a plain run — otherwise a journal
+    /// or repetition would silently depend on a mutable file on disk.
+    fn require_sealed(spec: &ExperimentSpec) -> Result<(), String> {
+        if let Some(ws) = spec.searcher.warm_start() {
+            if ws.trials.is_none() {
+                return Err(
+                    "field 'searcher.warm_start': unresolved store reference (seal it with \
+                     store::resolve_warm_start, or use Tuner::run_stored)"
+                        .into(),
+                );
+            }
+        }
+        Ok(())
     }
 
     /// One repetition on the wall-clock thread pool (spec backend
@@ -312,7 +351,10 @@ impl Tuner {
         spec: &ExperimentSpec,
     ) -> TuneResult {
         let mut scheduler = builder.build(bench.max_epochs(), spec.seed);
-        let mut searcher: Box<dyn Searcher> = tspec.searcher.build(spec.seed);
+        let mut searcher: Box<dyn Searcher> = tspec
+            .searcher
+            .build(bench.space(), spec.seed)
+            .expect("searcher spec must build (seal warm starts before run)");
         let space = bench.space().clone();
         let shared = Arc::new(SharedSurrogate {
             bench,
@@ -421,10 +463,12 @@ mod tests {
     use super::*;
     use crate::benchmarks::nasbench201::NasBench201;
     use crate::benchmarks::pd1::Pd1;
+    use crate::ranking::RankingSpec;
     use crate::scheduler::asha::AshaBuilder;
     use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
     use crate::scheduler::pasha::PashaBuilder;
     use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
+    use crate::spec::{BenchSpec, SchedulerSpec};
     use crate::util::stats;
 
     fn small_spec() -> TunerSpec {
@@ -716,24 +760,57 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_factories_match_spec_construction() {
-        // The deprecated wrappers must stay bit-compatible: they now
-        // produce specs internally, and the outputs must be what the old
-        // hand-rolled factories built.
-        let bench = bench_from_name("nas-cifar10").unwrap();
+    fn spec_construction_covers_the_legacy_factories() {
+        // The deprecated name-based factories are gone; their behaviour
+        // must be fully expressible (and identical) through specs.
+        let bench = BenchSpec::new("nas-cifar10").build().unwrap();
         assert_eq!(bench.name(), NasBench201::cifar10().name());
-        assert!(bench_from_name("nope").is_err());
-        let builder = scheduler_from_name("pasha", 3, 64).unwrap();
-        assert_eq!(builder.name(), "PASHA");
+        assert!(BenchSpec::new("nope").build().is_err());
         let spec_builder = SchedulerSpec::from_name("pasha", 1, 3, RankingSpec::default())
             .unwrap()
             .builder(64)
             .unwrap();
-        let r1 = Tuner::run_with(&*bench, &*builder, &small_spec(), 0, 0);
+        assert_eq!(spec_builder.name(), "PASHA");
+        let r1 = Tuner::run_with(&*bench, &PashaBuilder::default(), &small_spec(), 0, 0);
         let r2 = Tuner::run_with(&*bench, &*spec_builder, &small_spec(), 0, 0);
         assert_eq!(r1, r2);
-        let s = searcher_for(&SearcherKind::Random, 9);
-        assert_eq!(s.name(), SearcherSpec::Random.build(9).name());
+        assert_eq!(SearcherKind::Bo.to_spec(), SearcherSpec::bo_default());
+        let s = SearcherSpec::Random.build(bench.space(), 9).unwrap();
+        assert_eq!(s.name(), "random-search");
+    }
+
+    #[test]
+    fn run_stored_warm_start_is_deterministic() {
+        let dir = std::env::temp_dir().join(format!("pasha-tuner-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm_determinism.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let store = StoreSpec::new(&path);
+
+        // Source run populates the store.
+        let mut source = ExperimentSpec::named("nas-cifar10", "pasha").unwrap();
+        source.stop.config_budget = 16;
+        source.searcher = SearcherSpec::bo_default();
+        let (_, n) = Tuner::run_stored(&source, &store).unwrap();
+        assert!(n > 0, "source run must record trials");
+
+        // Target spec warm-starts from it. Seal once, run twice: the
+        // sealed spec is self-contained, so results are bit-identical
+        // even though the store keeps growing.
+        let mut target = source.clone();
+        target.seed = 1;
+        target.searcher = SearcherSpec::bo_warm(path.to_str().unwrap(), 8);
+
+        // Unsealed specs refuse a plain run (they'd depend on disk).
+        let err = Tuner::run(&target).unwrap_err();
+        assert!(err.contains("unresolved"), "{err}");
+
+        let embedded = store::resolve_warm_start(&mut target).unwrap();
+        assert!(embedded > 0, "warm start must embed prior trials");
+        let a = Tuner::run(&target).unwrap();
+        let b = Tuner::run(&target).unwrap();
+        assert_eq!(a, b, "sealed warm-start runs must be deterministic");
+
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,252 @@
+//! Shared append-only JSONL file discipline.
+//!
+//! Both the service write-ahead journal ([`crate::service::journal`]) and
+//! the persistent trial store ([`crate::store`]) are sequences of whole
+//! JSON lines that must survive a process dying mid-append. This module
+//! holds the one implementation of that discipline:
+//!
+//! * [`read_jsonl`] — strict read tolerating a *torn tail*: a final line
+//!   with no newline, or a newline-terminated final line that fails to
+//!   parse, is a crash artifact and is dropped (its byte offset is
+//!   reported so the writer can truncate before appending). A malformed
+//!   line in the *middle* of the file is corruption and is an error.
+//! * [`read_jsonl_lenient`] — best-effort read for files that are an
+//!   optimization rather than ground truth (snapshot sidecars): corrupt
+//!   or torn lines are skipped, a missing file reads as empty.
+//! * [`append_line`] — self-repairing append: the file is first truncated
+//!   back to its whole-line prefix so a new record can never merge with
+//!   torn bytes left by an earlier crash.
+//! * [`rewrite_atomic`] — whole-file replacement via a `.tmp` sibling and
+//!   rename, for compaction.
+
+use crate::util::json::{parse, Json};
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Result of a strict [`read_jsonl`].
+pub struct JsonlRead {
+    /// Whole records, in append order.
+    pub records: Vec<Json>,
+    /// Byte length of the whole-line prefix (what a re-opened file must
+    /// be truncated to before appending).
+    pub valid_len: u64,
+    /// Bytes of a partial trailing line dropped as a crash artifact.
+    pub truncated_bytes: usize,
+}
+
+/// Read a JSONL file, tolerating a partial final line. Offsets are
+/// byte-accurate (the file is scanned as raw bytes, so a crash that cut a
+/// multi-byte character cannot skew `valid_len`).
+pub fn read_jsonl(path: &Path) -> io::Result<JsonlRead> {
+    let mut buf = Vec::new();
+    File::open(path)?.read_to_end(&mut buf)?;
+    let mut records: Vec<Json> = Vec::new();
+    let mut valid_len = 0u64;
+    let mut start = 0usize;
+    let done = |records: Vec<Json>, valid_len: u64| JsonlRead {
+        truncated_bytes: buf.len() - valid_len as usize,
+        records,
+        valid_len,
+    };
+    while start < buf.len() {
+        let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') else {
+            // No newline: the final append was cut short — a crash
+            // artifact, dropped.
+            return Ok(done(records, valid_len));
+        };
+        let end = start + rel;
+        let next = end + 1;
+        let at_eof = next == buf.len();
+        let line = &buf[start..end];
+        if line.is_empty() {
+            valid_len = next as u64;
+            start = next;
+            continue;
+        }
+        let parsed: Result<Json, String> = match std::str::from_utf8(line) {
+            Ok(s) => parse(s),
+            Err(e) => Err(format!("invalid utf-8: {e}")),
+        };
+        match parsed {
+            Ok(ev) => {
+                records.push(ev);
+                valid_len = next as u64;
+            }
+            // A newline-terminated but unparseable *final* line is also
+            // treated as a crash artifact (a torn multi-chunk write);
+            // anywhere else it is corruption.
+            Err(_) if at_eof => return Ok(done(records, valid_len)),
+            Err(e) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "corrupt journal {}: event {} unparseable: {e}",
+                        path.display(),
+                        records.len()
+                    ),
+                ));
+            }
+        }
+        start = next;
+    }
+    Ok(done(records, valid_len))
+}
+
+/// Read every parseable line, skipping anything torn or corrupt. A
+/// missing file reads as empty. For files that are an optimization, not
+/// ground truth — a bad line is dropped, never fatal.
+pub fn read_jsonl_lenient(path: &Path) -> Vec<Json> {
+    let mut buf = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            if f.read_to_end(&mut buf).is_err() {
+                return Vec::new();
+            }
+        }
+        Err(_) => return Vec::new(),
+    }
+    let mut lines = Vec::new();
+    let mut start = 0usize;
+    while start < buf.len() {
+        // only newline-terminated lines count: a torn final append is
+        // incomplete by definition
+        let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') else {
+            break;
+        };
+        let end = start + rel;
+        if let Ok(s) = std::str::from_utf8(&buf[start..end]) {
+            if let Ok(v) = parse(s) {
+                lines.push(v);
+            }
+        }
+        start = end + 1;
+    }
+    lines
+}
+
+/// Append one JSON line to `path`, creating the file (and parent
+/// directory) if needed. A previous crash can have left a torn final
+/// line; the file is first truncated back to its whole-line prefix so
+/// the new record can never merge with torn bytes — without this, one
+/// crash mid-append would silently corrupt every later record on the
+/// same line.
+pub fn append_line(path: &Path, event: &Json) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut file = OpenOptions::new()
+        .create(true)
+        .read(true)
+        .write(true)
+        .open(path)?;
+    let mut buf = Vec::new();
+    file.read_to_end(&mut buf)?;
+    let valid = match buf.iter().rposition(|&b| b == b'\n') {
+        Some(i) => (i + 1) as u64,
+        None => 0,
+    };
+    if valid != buf.len() as u64 {
+        file.set_len(valid)?;
+    }
+    file.seek(SeekFrom::Start(valid))?;
+    let mut line = event.to_string_compact();
+    line.push('\n');
+    file.write_all(line.as_bytes())
+}
+
+/// Atomically replace `path` with the given lines: write a sibling
+/// `.tmp` file, then rename over the target. A crash before the rename
+/// leaves the original untouched; after, the replacement is complete.
+pub fn rewrite_atomic(path: &Path, lines: &[Json]) -> io::Result<()> {
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    {
+        let mut file = File::create(&tmp)?;
+        let mut out = String::new();
+        for l in lines {
+            out.push_str(&l.to_string_compact());
+            out.push('\n');
+        }
+        file.write_all(out.as_bytes())?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pasha-jsonl-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn rec(n: usize) -> Json {
+        let mut o = Json::obj();
+        o.set("n", n);
+        o
+    }
+
+    #[test]
+    fn strict_read_round_trips_whole_lines() {
+        let path = tmp("strict.jsonl");
+        let _ = std::fs::remove_file(&path);
+        for i in 0..4 {
+            append_line(&path, &rec(i)).unwrap();
+        }
+        let r = read_jsonl(&path).unwrap();
+        assert_eq!(r.records.len(), 4);
+        assert_eq!(r.truncated_bytes, 0);
+        assert_eq!(r.valid_len, std::fs::metadata(&path).unwrap().len());
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_repaired_on_append() {
+        let path = tmp("torn.jsonl");
+        let _ = std::fs::remove_file(&path);
+        append_line(&path, &rec(0)).unwrap();
+        append_line(&path, &rec(1)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let r = read_jsonl(&path).unwrap();
+        assert_eq!(r.records.len(), 1);
+        assert!(r.truncated_bytes > 0);
+        // appending over the torn tail truncates it first
+        append_line(&path, &rec(2)).unwrap();
+        let r2 = read_jsonl(&path).unwrap();
+        assert_eq!(r2.records.len(), 2);
+        assert_eq!(r2.records[1], rec(2));
+    }
+
+    #[test]
+    fn mid_file_corruption_is_invalid_data() {
+        let path = tmp("midcorrupt.jsonl");
+        std::fs::write(&path, "{\"n\":0}\nnope\n{\"n\":1}\n").unwrap();
+        let err = read_jsonl(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // the lenient reader skips it instead
+        let lines = read_jsonl_lenient(&path);
+        assert_eq!(lines.len(), 2);
+    }
+
+    #[test]
+    fn lenient_read_missing_file_is_empty() {
+        let path = tmp("lenient-missing.jsonl");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_jsonl_lenient(&path).is_empty());
+    }
+
+    #[test]
+    fn rewrite_atomic_replaces_and_cleans_tmp() {
+        let path = tmp("rewrite.jsonl");
+        std::fs::write(&path, "old\n").unwrap();
+        rewrite_atomic(&path, &[rec(7)]).unwrap();
+        let r = read_jsonl(&path).unwrap();
+        assert_eq!(r.records.len(), 1);
+        assert_eq!(r.records[0], rec(7));
+        assert!(!PathBuf::from(format!("{}.tmp", path.display())).exists());
+    }
+}

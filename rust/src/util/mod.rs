@@ -6,6 +6,7 @@
 
 pub mod benchkit;
 pub mod json;
+pub mod jsonl;
 pub mod parallel;
 pub mod ptest;
 pub mod rng;

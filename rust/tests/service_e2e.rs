@@ -256,7 +256,7 @@ fn recovery_pasha_stop_mid_rung_pause() {
 fn recovery_bo_searcher() {
     // Model-based searcher: the GP's state is rebuilt through replayed
     // on_report calls, so ask responses stay byte-identical.
-    check_recovery("bo", spec_for("pasha", SearcherSpec::Bo(Default::default()), 16), 2);
+    check_recovery("bo", spec_for("pasha", SearcherSpec::bo_default(), 16), 2);
 }
 
 /// The snapshot-equivalence property for one session spec: at every cut
@@ -410,7 +410,7 @@ fn snapshot_equivalence_pasha_stop() {
 fn snapshot_equivalence_bo_searcher() {
     // The GP searcher's state (RNG stream, folded + pending observations)
     // must survive the snapshot for asks to stay byte-identical.
-    check_snapshot_equivalence("bo", spec_for("pasha", SearcherSpec::Bo(Default::default()), 16), 2, 12);
+    check_snapshot_equivalence("bo", spec_for("pasha", SearcherSpec::bo_default(), 16), 2, 12);
 }
 
 #[test]

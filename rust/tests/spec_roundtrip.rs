@@ -11,8 +11,8 @@
 //!   full generated v1 journal must recover with the byte-identical-ask
 //!   verification recovery performs on every replayed event.
 //! * **Legacy CLI equivalence** — for each legacy flag combination, the
-//!   lowered spec must produce a `TuneResult` bit-identical to the
-//!   deprecated factory path (`bench_from_name`/`scheduler_from_name`).
+//!   lowered spec must produce a `TuneResult` bit-identical to part-wise
+//!   construction with the knobs the old factories hardcoded.
 
 use pasha::ranking::RankingSpec;
 use pasha::scheduler::asktell::{TellAck, TrialAssignment};
@@ -21,7 +21,7 @@ use pasha::service::journal::ev_create;
 use pasha::service::Session;
 use pasha::spec::{
     apply_flag_overrides, BenchSpec, DecisionMode, ExecBackendKind, ExecSpec, ExperimentSpec,
-    SchedulerSpec, SearcherSpec, StopRules,
+    SchedulerSpec, SearcherSpec, StopRules, WarmStartSpec, WarmTrial,
 };
 use pasha::tuner::{StopSpec, Tuner, TunerSpec};
 use pasha::util::json::{parse, Json};
@@ -52,7 +52,7 @@ fn golden_specs() -> Vec<ExperimentSpec> {
             eta: 4,
             mode: DecisionMode::Stop,
         },
-        searcher: SearcherSpec::Bo(BoConfig::default()),
+        searcher: SearcherSpec::bo_default(),
         exec: ExecSpec {
             workers: 8,
             backend: ExecBackendKind::Pool,
@@ -173,14 +173,34 @@ fn gen_spec(g: &mut Gen) -> ExperimentSpec {
     let searcher = if g.bool() {
         SearcherSpec::Random
     } else {
-        SearcherSpec::Bo(BoConfig {
+        let config = BoConfig {
             min_points: g.usize(1, 16),
             num_candidates: g.usize(1, 256),
             random_fraction: g.f64(0.0, 1.0),
             lengthscale: g.f64(0.01, 2.0),
             signal_var: g.f64(0.1, 4.0),
             noise_var: g.f64(1e-6, 0.1),
-        })
+        };
+        // warm starts round-trip in both states: an unresolved store
+        // reference and a sealed spec with embedded observations
+        let warm_start = match g.usize(0, 2) {
+            0 => None,
+            1 => Some(WarmStartSpec::new("prior/trials.jsonl", g.usize(1, 64))),
+            _ => {
+                let mut ws = WarmStartSpec::new("prior/trials.jsonl", g.usize(1, 64));
+                ws.trials = Some(
+                    (0..g.usize(0, 3))
+                        .map(|_| WarmTrial {
+                            config: vec![g.f64(0.0, 10.0), g.f64(0.0, 10.0)],
+                            epoch: g.usize(1, 50) as u32,
+                            metric: g.f64(0.0, 100.0),
+                        })
+                        .collect(),
+                );
+                Some(ws)
+            }
+        };
+        SearcherSpec::Bo { config, warm_start }
     };
     ExperimentSpec {
         bench,
@@ -336,12 +356,12 @@ fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
 }
 
 #[test]
-#[allow(deprecated)]
 fn legacy_cli_flag_combinations_lower_bit_identically() {
-    use pasha::tuner::{bench_from_name, scheduler_from_name, SearcherKind};
+    use pasha::tuner::SearcherKind;
 
-    // Each case is (CLI flags as the old `pasha run` accepted them,
-    // the equivalent legacy factory construction).
+    // Each case is (CLI flags as the old `pasha run` accepted them, the
+    // part-wise construction with the knobs the legacy factories
+    // hardcoded: r_min = 1, the default ranking).
     let bench_name = "lcbench-Fashion-MNIST";
     let schedulers = [
         "asha",
@@ -379,9 +399,12 @@ fn legacy_cli_flag_combinations_lower_bit_identically() {
             .unwrap();
             let new = Tuner::run(&spec).unwrap();
 
-            // Old path: the pre-redesign factories, verbatim.
-            let bench = bench_from_name(bench_name).unwrap();
-            let builder = scheduler_from_name(scheduler, eta, budget).unwrap();
+            // Old path: part-wise construction with the legacy knobs.
+            let bench = BenchSpec::new(bench_name).build().unwrap();
+            let builder = SchedulerSpec::from_name(scheduler, 1, eta, RankingSpec::default())
+                .unwrap()
+                .builder(budget)
+                .unwrap();
             let kind = SearcherKind::parse(searcher).unwrap();
             let tspec = TunerSpec {
                 workers: 4,
@@ -414,8 +437,11 @@ fn legacy_cli_flag_combinations_lower_bit_identically() {
     )
     .unwrap();
     let new = Tuner::run(&spec).unwrap();
-    let bench = bench_from_name(bench_name).unwrap();
-    let builder = scheduler_from_name("asha", 3, 16).unwrap();
+    let bench = BenchSpec::new(bench_name).build().unwrap();
+    let builder = SchedulerSpec::from_name("asha", 1, 3, RankingSpec::default())
+        .unwrap()
+        .builder(16)
+        .unwrap();
     let tspec = TunerSpec {
         workers: 4,
         config_budget: 16,
