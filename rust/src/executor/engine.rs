@@ -436,7 +436,7 @@ pub fn run_engine(
                 // trained, so rewind the frontier and continue the run.
                 stats.failed_jobs += 1;
                 pending_retire.remove(&trial);
-                eprintln!("engine: job for trial {trial} failed: {error}");
+                crate::log_warn!("engine: job for trial {trial} failed: {error}");
                 scheduler.on_cancelled(trial);
             }
         }

@@ -208,7 +208,7 @@ impl ExecBackend for PoolBackend {
                 );
                 return;
             }
-            eprintln!("pasha pool: worker {wid} is gone; retiring its slot");
+            crate::log_warn!("pasha pool: worker {wid} is gone; retiring its slot");
         }
         // No live worker could take the job: surface a recoverable
         // failure instead of panicking the engine.
@@ -232,7 +232,7 @@ impl ExecBackend for PoolBackend {
                 // retire them and let the engine drain. Jobs already
                 // cancelled by the scheduler were counted then — they
                 // retire as Cancelled, not as a second failure.
-                eprintln!("pasha pool: all workers disconnected; failing in-flight jobs");
+                crate::log_warn!("pasha pool: all workers disconnected; failing in-flight jobs");
                 let trials: Vec<TrialId> = self.in_flight.keys().copied().collect();
                 for trial in trials {
                     self.in_flight.remove(&trial);

@@ -12,6 +12,7 @@
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
 //! pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
 //! pasha serve  [--addr A] [--journal-dir DIR] [--snapshot-interval N] [--store FILE]
+//!              [--io-threads N] [--shards N] [--legacy-threaded]
 //! pasha worker --addr A (--session ID | --create ...) [--expire] [--batch]
 //! pasha store  <ls|gc|export> --store FILE [--fingerprint FP] [--out FILE]
 //! pasha sessions --addr A                                # list sessions
@@ -94,8 +95,10 @@ USAGE:
   pasha figure <1|2|3|4|5> [--out DIR]
   pasha report [--scale paper|smoke] [--out DIR]
   pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
+               # service suite: [--sessions N] [--workers M] [--budget B]
+               #                [--mode event|threaded|both] [--gate BASELINE.json]
   pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR] [--snapshot-interval N]
-               [--store trials.jsonl]
+               [--store trials.jsonl] [--io-threads N] [--shards N] [--legacy-threaded]
   pasha worker --addr HOST:PORT (--session ID | --create [--spec exp.json] [--bench B]
                [--scheduler S] [--budget N] [--seed S] [--eta E] [--r-min R] [--ranking ...]
                [--searcher random|bo] [--epoch-budget E] [--warm-start trials.jsonl]
@@ -598,10 +601,33 @@ fn bench_engine(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-/// Loopback stress benchmark for the ask/tell service: N concurrent
-/// sessions × M workers over localhost TCP, recording ask/tell
-/// throughput and latency percentiles into `BENCH_service.json`, plus a
-/// single-worker determinism check against the in-process tuner.
+/// Connect with retries: the thread-per-connection baseline's accept
+/// backlog overflows under a simultaneous connect storm, so stress
+/// clients tolerate transient refusals.
+fn connect_retry(addr: &str) -> Result<Client, String> {
+    let mut last = String::new();
+    for _ in 0..250 {
+        match Client::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                last = e.to_string();
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    Err(format!("connect {addr}: {last}"))
+}
+
+/// Loopback stress suite for the ask/tell service: N sessions × M
+/// total worker connections over localhost TCP, run against BOTH serve
+/// loops — the sharded event-driven core (`event`) and the original
+/// thread-per-connection baseline (`threaded`) — recording ops/sec and
+/// ask/tell latency percentiles for each plus the old-vs-new speedup
+/// into `BENCH_service.json`. Also runs the acceptance oracles on an
+/// event-served journaled registry: single-worker determinism against
+/// the in-process tuner, and batched-vs-unbatched framing cost.
+/// `--gate FILE` compares the event path against a committed baseline
+/// and fails on a >2x regression in ops/sec or ask p99.
 fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result<(), String> {
     use pasha::scheduler::asktell::{TellAck, TrialAssignment};
     use pasha::util::json::Json;
@@ -609,18 +635,21 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
     use std::time::Instant;
 
     let out_path = PathBuf::from(out.unwrap_or_else(|| "BENCH_service.json".to_string()));
-    let n_sessions: usize = flag(flags, "sessions", 4);
-    let m_workers: usize = flag(flags, "workers", 4);
-    let budget: usize = flag(flags, "budget", 24);
+    let n_sessions: usize = flag(flags, "sessions", 64);
+    let n_workers: usize = flag(flags, "workers", 512);
+    let budget: usize = flag(flags, "budget", 8);
+    let mode = flags
+        .get("mode")
+        .cloned()
+        .unwrap_or_else(|| "both".to_string());
+    let (run_event, run_legacy) = match mode.as_str() {
+        "both" => (true, true),
+        "event" => (true, false),
+        "threaded" => (false, true),
+        other => return Err(format!("unknown --mode '{other}' (event, threaded, both)")),
+    };
     let bench_name = "lcbench-Fashion-MNIST";
-
-    // Journal into a scratch dir so the measured path includes the WAL.
-    let dir = std::env::temp_dir().join(format!("pasha-bench-service-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
-    let registry = Registry::with_journal_dir(dir.clone()).map_err(|e| e.to_string())?;
-    let server = Server::bind("127.0.0.1:0", Arc::new(registry)).map_err(|e| e.to_string())?;
-    let addr = server.local_addr().map_err(|e| e.to_string())?.to_string();
-    let server_thread = std::thread::spawn(move || server.run());
+    let bench = BenchSpec::new(bench_name).build()?;
 
     let spec_for = |seed: u64| {
         let mut s = ExperimentSpec::named(bench_name, "pasha").expect("bench name");
@@ -628,69 +657,136 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
         s.seed = seed;
         s
     };
-    let mut control = Client::connect(&addr).map_err(|e| e.to_string())?;
-    let mut session_ids = Vec::new();
-    for s in 0..n_sessions {
-        session_ids.push(control.create(&spec_for(s as u64)).map_err(|e| e.to_string())?);
-    }
 
-    // The stress phase: every (session, worker) pair drives the session
-    // over its own TCP connection, timing each round-trip.
-    let bench = BenchSpec::new(bench_name).build()?;
-    let t0 = Instant::now();
-    let per_thread: Vec<Result<(Vec<f64>, Vec<f64>), String>> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for sid in &session_ids {
-            for w in 0..m_workers {
-                let bench = &bench;
-                let addr = addr.as_str();
-                handles.push(scope.spawn(move || {
-                    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
-                    let wid = format!("w{w}");
-                    let space = bench.space().clone();
-                    let mut asks = Vec::new();
-                    let mut tells = Vec::new();
-                    loop {
-                        let t = Instant::now();
-                        let a = client.ask(sid, &wid, &space).map_err(|e| e.to_string())?;
-                        asks.push(t.elapsed().as_secs_f64() * 1e6);
-                        match a {
-                            TrialAssignment::Run(job) => {
-                                for e in job.from_epoch + 1..=job.milestone {
-                                    let m = bench.accuracy_at(&job.config, e, 0);
-                                    let t = Instant::now();
-                                    let ack = client
-                                        .tell(sid, job.trial, e, m)
-                                        .map_err(|e| e.to_string())?;
-                                    tells.push(t.elapsed().as_secs_f64() * 1e6);
-                                    if ack == TellAck::Abandon {
-                                        break;
+    // One full stress pass against the chosen serve loop, on a fresh
+    // in-memory registry so both paths measure the service core itself.
+    // Workers are distributed round-robin over the sessions, one TCP
+    // connection each, timing every synchronous round-trip.
+    let stress = |legacy: bool| -> Result<(f64, Vec<f64>, Vec<f64>), String> {
+        let registry = Arc::new(Registry::in_memory());
+        let server = Server::bind("127.0.0.1:0", registry).map_err(|e| e.to_string())?;
+        let addr = server.local_addr().map_err(|e| e.to_string())?.to_string();
+        let server_thread = std::thread::spawn(move || {
+            if legacy {
+                server.run_threaded()
+            } else {
+                server.run()
+            }
+        });
+        let mut control = connect_retry(&addr)?;
+        let mut session_ids = Vec::new();
+        for s in 0..n_sessions {
+            session_ids.push(control.create(&spec_for(s as u64)).map_err(|e| e.to_string())?);
+        }
+        let t0 = Instant::now();
+        let per_thread: Vec<Result<(Vec<f64>, Vec<f64>), String>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for w in 0..n_workers {
+                    let sid = session_ids[w % n_sessions].as_str();
+                    let bench = &bench;
+                    let addr = addr.as_str();
+                    handles.push(scope.spawn(move || {
+                        let mut client = connect_retry(addr)?;
+                        let wid = format!("w{w}");
+                        let space = bench.space().clone();
+                        let mut asks = Vec::new();
+                        let mut tells = Vec::new();
+                        loop {
+                            let t = Instant::now();
+                            let a = client.ask(sid, &wid, &space).map_err(|e| e.to_string())?;
+                            asks.push(t.elapsed().as_secs_f64() * 1e6);
+                            match a {
+                                TrialAssignment::Run(job) => {
+                                    for e in job.from_epoch + 1..=job.milestone {
+                                        let m = bench.accuracy_at(&job.config, e, 0);
+                                        let t = Instant::now();
+                                        let ack = client
+                                            .tell(sid, job.trial, e, m)
+                                            .map_err(|e| e.to_string())?;
+                                        tells.push(t.elapsed().as_secs_f64() * 1e6);
+                                        if ack == TellAck::Abandon {
+                                            break;
+                                        }
                                     }
                                 }
+                                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                                TrialAssignment::Wait => {
+                                    std::thread::sleep(Duration::from_millis(1))
+                                }
+                                TrialAssignment::Done => return Ok((asks, tells)),
                             }
-                            TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
-                            TrialAssignment::Wait => std::thread::sleep(Duration::from_millis(1)),
-                            TrialAssignment::Done => return Ok((asks, tells)),
                         }
-                    }
-                }));
-            }
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("worker thread"))
+                    .collect()
+            });
+        let wall = t0.elapsed().as_secs_f64();
+        control.shutdown().map_err(|e| e.to_string())?;
+        let _ = server_thread.join();
+        let mut ask_us = Vec::new();
+        let mut tell_us = Vec::new();
+        for r in per_thread {
+            let (a, t) = r?;
+            ask_us.extend(a);
+            tell_us.extend(t);
         }
-        handles.into_iter().map(|h| h.join().expect("worker thread")).collect()
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    let mut ask_us = Vec::new();
-    let mut tell_us = Vec::new();
-    for r in per_thread {
-        let (a, t) = r?;
-        ask_us.extend(a);
-        tell_us.extend(t);
-    }
-    let ops = ask_us.len() + tell_us.len();
+        Ok((wall, ask_us, tell_us))
+    };
 
-    // Determinism check (the acceptance bar): a fresh single-worker
-    // session over TCP must land on the same incumbent as Tuner::run
-    // with the same seeds.
+    let lat = |v: &[f64]| -> (f64, f64) {
+        if v.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(v, 50.0), percentile(v, 99.0))
+        }
+    };
+    let mode_json = |wall: f64, ask_us: &[f64], tell_us: &[f64]| -> Json {
+        let ops = ask_us.len() + tell_us.len();
+        let (ask_p50, ask_p99) = lat(ask_us);
+        let (tell_p50, tell_p99) = lat(tell_us);
+        let mut ask_j = Json::obj();
+        ask_j.set("count", ask_us.len()).set("p50_us", ask_p50).set("p99_us", ask_p99);
+        let mut tell_j = Json::obj();
+        tell_j.set("count", tell_us.len()).set("p50_us", tell_p50).set("p99_us", tell_p99);
+        let mut m = Json::obj();
+        m.set("wall_seconds", wall)
+            .set("ops", ops)
+            .set("ops_per_sec", ops as f64 / wall.max(1e-9))
+            .set("ask", ask_j)
+            .set("tell", tell_j);
+        m
+    };
+    let report_mode = |name: &str, wall: f64, ask_us: &[f64], tell_us: &[f64]| {
+        let ops = ask_us.len() + tell_us.len();
+        let (ask_p50, ask_p99) = lat(ask_us);
+        let (tell_p50, tell_p99) = lat(tell_us);
+        println!(
+            "{name}: {n_sessions} sessions x {n_workers} workers, {ops} ops in {wall:.2}s \
+             ({:.0} ops/s); ask p50/p99 {ask_p50:.0}/{ask_p99:.0}us, \
+             tell p50/p99 {tell_p50:.0}/{tell_p99:.0}us",
+            ops as f64 / wall.max(1e-9)
+        );
+    };
+
+    let event = if run_event { Some(stress(false)?) } else { None };
+    let legacy = if run_legacy { Some(stress(true)?) } else { None };
+
+    // Acceptance oracles, on an event-served *journaled* registry so the
+    // measured path includes group commit and the WAL end to end.
+    let dir = std::env::temp_dir().join(format!("pasha-bench-service-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let registry = Registry::with_journal_dir(dir.clone()).map_err(|e| e.to_string())?;
+    let server = Server::bind("127.0.0.1:0", Arc::new(registry)).map_err(|e| e.to_string())?;
+    let addr = server.local_addr().map_err(|e| e.to_string())?.to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut control = connect_retry(&addr)?;
+
+    // Determinism: a fresh single-worker session over TCP must land on
+    // the same incumbent as Tuner::run with the same seeds.
     let solo_spec = spec_for(0);
     let solo_id = control.create(&solo_spec).map_err(|e| e.to_string())?;
     run_worker(
@@ -713,10 +809,8 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
     let matches = served_best.to_bits() == inproc.best_metric.to_bits();
 
     // Batched vs unbatched framing on identical single-worker sessions:
-    // the per-op cost of a frame of N ops must sit at or below one
-    // unbatched round-trip (the acceptance bar for the batch protocol).
-    // Both runs use the canonical worker drivers, which record per-op
-    // wire latencies in their reports.
+    // a frame of N ops must cost at or below one unbatched round-trip
+    // per op (the acceptance bar for the batch protocol).
     let poll = Duration::from_millis(1);
     let ub_id = control.create(&spec_for(7)).map_err(|e| e.to_string())?;
     let unbatched = run_worker(&mut control, &ub_id, "w0", bench.as_ref(), 0, poll)
@@ -725,26 +819,12 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
     let batched = run_worker_batched(&mut control, &b_id, "w0", bench.as_ref(), 0, poll)
         .map_err(|e| e.to_string())?;
     let (unbatched_us, batched_us, frames) = (unbatched.op_us, batched.op_us, batched.frames);
-
     control.shutdown().map_err(|e| e.to_string())?;
     let _ = server_thread.join();
     let _ = std::fs::remove_dir_all(&dir);
 
-    let lat = |v: &[f64]| -> (f64, f64) {
-        if v.is_empty() {
-            (0.0, 0.0)
-        } else {
-            (percentile(v, 50.0), percentile(v, 99.0))
-        }
-    };
-    let (ask_p50, ask_p99) = lat(&ask_us);
-    let (tell_p50, tell_p99) = lat(&tell_us);
     let (ub_p50, ub_p99) = lat(&unbatched_us);
     let (b_p50, b_p99) = lat(&batched_us);
-    let mut ask_j = Json::obj();
-    ask_j.set("count", ask_us.len()).set("p50_us", ask_p50).set("p99_us", ask_p99);
-    let mut tell_j = Json::obj();
-    tell_j.set("count", tell_us.len()).set("p50_us", tell_p50).set("p99_us", tell_p99);
     let mut unbatched_j = Json::obj();
     unbatched_j
         .set("count", unbatched_us.len())
@@ -756,37 +836,85 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
         .set("frames", frames)
         .set("p50_us", b_p50)
         .set("p99_us", b_p99);
+
     let mut root = Json::obj();
     root.set("benchmark", "service")
         .set("sessions", n_sessions)
-        .set("workers_per_session", m_workers)
+        .set("workers", n_workers)
         .set("config_budget", budget)
-        .set("wall_seconds", wall)
-        .set("ops", ops)
-        .set("ops_per_sec", ops as f64 / wall.max(1e-9))
-        .set("ask", ask_j)
-        .set("tell", tell_j)
         .set("unbatched_per_op", unbatched_j)
         .set("batched_per_op", batched_j)
         .set("batched_speedup_p50", ub_p50 / b_p50.max(1e-9))
         .set("batched_at_or_below_unbatched", b_p50 <= ub_p50)
         .set("single_worker_matches_inprocess", matches);
-    std::fs::write(&out_path, root.to_string_pretty()).map_err(|e| e.to_string())?;
-    println!(
-        "service: {n_sessions} sessions x {m_workers} workers, {ops} ops in {wall:.2}s \
-         ({:.0} ops/s); ask p50/p99 {ask_p50:.0}/{ask_p99:.0}us, \
-         tell p50/p99 {tell_p50:.0}/{tell_p99:.0}us",
-        ops as f64 / wall.max(1e-9)
-    );
+    if let Some((wall, ask_us, tell_us)) = &event {
+        report_mode("event", *wall, ask_us, tell_us);
+        root.set("event", mode_json(*wall, ask_us, tell_us));
+    }
+    if let Some((wall, ask_us, tell_us)) = &legacy {
+        report_mode("threaded", *wall, ask_us, tell_us);
+        root.set("threaded", mode_json(*wall, ask_us, tell_us));
+    }
+    if let (Some((ew, ea, et)), Some((lw, la, lt))) = (&event, &legacy) {
+        let ev_rate = (ea.len() + et.len()) as f64 / ew.max(1e-9);
+        let th_rate = (la.len() + lt.len()) as f64 / lw.max(1e-9);
+        let speedup = ev_rate / th_rate.max(1e-9);
+        root.set("speedup_ops_per_sec", speedup);
+        println!("event vs threaded: {speedup:.1}x ops/sec");
+    }
     println!(
         "wire framing: unbatched p50 {ub_p50:.0}us/op vs batched p50 {b_p50:.0}us/op \
          over {frames} frames ({:.1}x)",
         ub_p50 / b_p50.max(1e-9)
     );
     println!("single-worker incumbent matches in-process tuner: {matches}");
+    std::fs::write(&out_path, root.to_string_pretty()).map_err(|e| e.to_string())?;
     println!("wrote {}", out_path.display());
     if !matches {
         return Err("served session diverged from in-process Tuner::run".into());
+    }
+
+    // Regression gate: the event path must hold within 2x of the
+    // committed baseline (same reduced scale in CI).
+    if let Some(gate_path) = flags.get("gate") {
+        let (wall, ask_us, tell_us) = event
+            .as_ref()
+            .ok_or("--gate needs the event mode (use --mode event or both)")?;
+        let ops_per_sec = (ask_us.len() + tell_us.len()) as f64 / wall.max(1e-9);
+        let (_, ask_p99) = lat(ask_us);
+        let text = std::fs::read_to_string(gate_path)
+            .map_err(|e| format!("--gate {gate_path}: {e}"))?;
+        let base = pasha::util::json::parse(&text).map_err(|e| format!("--gate {gate_path}: {e}"))?;
+        let base_event = base
+            .get("event")
+            .ok_or_else(|| format!("--gate {gate_path}: missing 'event' section"))?;
+        let base_ops = base_event
+            .get("ops_per_sec")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("--gate {gate_path}: missing event.ops_per_sec"))?;
+        let base_p99 = base_event
+            .get("ask")
+            .and_then(|a| a.get("p99_us"))
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("--gate {gate_path}: missing event.ask.p99_us"))?;
+        println!(
+            "gate: ops/sec {ops_per_sec:.0} vs baseline {base_ops:.0} (floor {:.0}), \
+             ask p99 {ask_p99:.0}us vs baseline {base_p99:.0}us (ceiling {:.0}us)",
+            base_ops / 2.0,
+            base_p99 * 2.0
+        );
+        if ops_per_sec < base_ops / 2.0 {
+            return Err(format!(
+                "service stress regression: {ops_per_sec:.0} ops/sec is below half the \
+                 committed baseline ({base_ops:.0})"
+            ));
+        }
+        if ask_p99 > base_p99 * 2.0 {
+            return Err(format!(
+                "service stress regression: ask p99 {ask_p99:.0}us is above twice the \
+                 committed baseline ({base_p99:.0}us)"
+            ));
+        }
     }
     Ok(())
 }
@@ -811,10 +939,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     // --store: completed sessions record their trials here, and new
     // sessions' warm-start references are sealed from it
     options.store = flags.get("store").map(StoreSpec::new);
+    let shards: usize = flag(flags, "shards", pasha::service::registry::default_shards());
+    if shards == 0 {
+        return Err("--shards must be >= 1".into());
+    }
+    let io_threads: usize = flag(
+        flags,
+        "io-threads",
+        pasha::service::server::DEFAULT_IO_THREADS,
+    );
     let registry = match flags.get("journal-dir") {
-        Some(d) => Registry::with_journal_dir_opts(PathBuf::from(d), options)
+        Some(d) => Registry::with_journal_dir_sharded(PathBuf::from(d), options, shards)
             .map_err(|e| e.to_string())?,
-        None => Registry::in_memory_opts(options),
+        None => Registry::in_memory_sharded(options, shards),
     };
     for (id, rep) in registry.recovered() {
         println!(
@@ -823,12 +960,24 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
             rep.snapshot_events, rep.events_replayed, rep.events_skipped, rep.truncated_bytes
         );
     }
-    let server = Server::bind(&addr, Arc::new(registry)).map_err(|e| e.to_string())?;
+    let legacy = flags.contains_key("legacy-threaded");
+    let server = Server::bind(&addr, Arc::new(registry))
+        .map_err(|e| e.to_string())?
+        .io_threads(io_threads);
     println!(
-        "pasha serve: listening on {}",
-        server.local_addr().map_err(|e| e.to_string())?
+        "pasha serve: listening on {} ({})",
+        server.local_addr().map_err(|e| e.to_string())?,
+        if legacy {
+            "thread-per-connection".to_string()
+        } else {
+            format!("{io_threads} io threads, {shards} session shards")
+        }
     );
-    server.run().map_err(|e| e.to_string())
+    if legacy {
+        server.run_threaded().map_err(|e| e.to_string())
+    } else {
+        server.run().map_err(|e| e.to_string())
+    }
 }
 
 fn cmd_worker(flags: &HashMap<String, String>, sets: &[String]) -> Result<(), String> {

@@ -1,0 +1,853 @@
+//! The sharded event-driven serve core behind [`crate::service::Server::run`].
+//!
+//! ```text
+//!             ┌────────────────────────── process ──────────────────────────┐
+//!  clients ──▶│ io thread 0 (epoll: listener + conns) ──┐                   │
+//!  clients ──▶│ io thread 1 (epoll: conns)            ──┤ bounded channels  │
+//!             │        ▲  mailbox + wake pipe           ▼                   │
+//!             │        │                     shard worker 0 ── sessions A,C │
+//!             │        └─────────────────────shard worker 1 ── sessions B,D │
+//!             │         (responses flow back)           │  group commit     │
+//!             └─────────────────────────────────────────┴───────────────────┘
+//! ```
+//!
+//! * **I/O threads** own the sockets. Each runs a level-triggered
+//!   readiness loop ([`crate::util::poll`]): non-blocking accept (thread
+//!   0), non-blocking reads into a per-connection buffer, non-blocking
+//!   writes out of a per-connection queue. No read timeouts, no
+//!   thread-per-connection — a sleeping connection costs one epoll
+//!   registration, not a thread.
+//! * **Shard workers** own the sessions. Every parsed request is routed
+//!   by `hash(session_id) % shards` ([`Registry::shard_of`]) over a
+//!   bounded channel, so all ops for one session execute on one thread
+//!   in arrival order — single-owner actors, no per-session lock
+//!   contention. Sessionless ops (`ping`, `create`, `sessions`) round-
+//!   robin. Batch frames are routed by the first session named in their
+//!   ops and execute their ops in order on that shard.
+//! * **Group commit.** A shard worker drains a batch of queued ops,
+//!   applies them (journal lines buffer in userspace), then issues one
+//!   `write` + one `sync_all` per touched session for the whole group
+//!   ([`Registry::commit_session`]). Responses are released to the I/O
+//!   threads only after their group's commit, so an acknowledged op is
+//!   a durable op; if the commit fails, every would-be-acknowledged
+//!   response in the group is rewritten into an error.
+//! * **Ordered responses.** Requests are answered in per-connection
+//!   request order even when they complete on different shards: each
+//!   parsed line gets a sequence number and completed responses wait in
+//!   a reorder buffer until their turn.
+//! * **Backpressure.** Past [`SOFT_WRITE_CAP`] queued response bytes
+//!   (or [`MAX_INFLIGHT_PER_CONN`] unanswered ops) the server stops
+//!   reading from that connection — pipelined ops already accepted keep
+//!   flowing, the socket's kernel buffer then the client's send path
+//!   fill up, and a slow reader throttles only itself. Past
+//!   [`HARD_WRITE_CAP`] the connection is dropped.
+//! * **Shutdown drain.** A `shutdown` request stops all accepting and
+//!   reading, finishes every op already received on every connection
+//!   (committed and answered), then releases the `{"bye":true}`
+//!   response and exits once all connections are flushed (bounded by a
+//!   5s deadline for clients that stopped reading).
+
+use crate::service::registry::{Registry, ServiceError};
+use crate::service::server::{apply_worker_default, handle_request, next_conn_worker_id};
+use crate::util::json::{parse, Json};
+use crate::util::poll::{Event, Poller};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Queued-response bytes past which reads from a connection pause.
+const SOFT_WRITE_CAP: usize = 256 * 1024;
+/// Queued-response bytes past which a connection is dropped outright.
+const HARD_WRITE_CAP: usize = 4 * 1024 * 1024;
+/// Unanswered ops per connection past which reads pause.
+const MAX_INFLIGHT_PER_CONN: usize = 256;
+/// A single request line larger than this drops the connection.
+const MAX_LINE_BYTES: usize = 8 * 1024 * 1024;
+/// Depth of each shard's op channel (senders block past this).
+const SHARD_QUEUE_DEPTH: usize = 4096;
+/// Max ops a shard folds into one commit group.
+const SHARD_GROUP_MAX: usize = 128;
+/// Poll timeout: the latency floor for cross-thread work delivered
+/// between wakeup bytes (mailboxes are also drained on every tick).
+const POLL_TIMEOUT: Duration = Duration::from_millis(25);
+/// How long a shutdown drain waits for clients to read their tails.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKE: usize = 1;
+/// Connection tokens are process-unique ids counting up from here, so
+/// a late shard response can never be delivered to a recycled slot.
+const TOKEN_CONN_BASE: u64 = 2;
+
+static NEXT_CONN_ID: AtomicU64 = AtomicU64::new(TOKEN_CONN_BASE);
+
+/// One parsed request in flight from an I/O thread to a shard worker.
+struct Op {
+    /// Index of the I/O thread owning the connection.
+    io: usize,
+    conn: u64,
+    /// Per-connection sequence for in-order response release.
+    seq: u64,
+    req: Json,
+}
+
+/// Work delivered to an I/O thread by shard workers or the acceptor.
+enum IoMsg {
+    /// A completed op's serialized response line (newline included).
+    Done { conn: u64, seq: u64, line: Vec<u8> },
+    /// A freshly accepted connection handed over for ownership.
+    Conn(TcpStream),
+}
+
+/// An I/O thread's inbox plus the pipe that interrupts its poll.
+struct Mailbox {
+    q: Mutex<VecDeque<IoMsg>>,
+    /// Write end of the wake pipe; the owning thread polls the read end.
+    wake: UnixStream,
+}
+
+impl Mailbox {
+    fn push(&self, msg: IoMsg) {
+        self.q.lock().expect("mailbox lock").push_back(msg);
+        self.wake();
+    }
+
+    fn wake(&self) {
+        // A full pipe is fine: the thread is already due to wake, and
+        // every loop tick drains the mailbox regardless.
+        let _ = (&self.wake).write(&[1u8]);
+    }
+
+    fn drain(&self) -> Vec<IoMsg> {
+        let mut q = self.q.lock().expect("mailbox lock");
+        q.drain(..).collect()
+    }
+}
+
+/// State shared by all I/O threads and shard workers.
+struct Shared {
+    registry: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+    /// Set by the first `shutdown` request (or the external flag):
+    /// stop accepting and reading, finish what was received.
+    draining: AtomicBool,
+    /// Ops routed to shards and not yet answered, across all conns.
+    in_flight: AtomicUsize,
+    /// I/O threads that have finished parsing their buffered bytes
+    /// after `draining` was raised; the bye releases at `n_io`.
+    parse_done: AtomicUsize,
+    n_io: usize,
+    mailboxes: Vec<Arc<Mailbox>>,
+}
+
+/// One client connection, owned by exactly one I/O thread.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet parsed into request lines.
+    rbuf: Vec<u8>,
+    /// Bytes queued to the socket, drained from `out_pos`.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Responses completed out of order, waiting for their turn.
+    pending: BTreeMap<u64, Vec<u8>>,
+    pending_bytes: usize,
+    /// Sequence assigned to the next parsed request.
+    next_seq: u64,
+    /// Sequence whose response is released next.
+    next_release: u64,
+    /// Ops routed to shards and not yet completed.
+    in_flight: usize,
+    read_paused: bool,
+    read_closed: bool,
+    want_read: bool,
+    want_write: bool,
+    /// Auto-assigned identity for `ask` ops that omit `worker`.
+    worker_id: String,
+    /// Sequence reserved for this connection's `shutdown` response.
+    shutdown_seq: Option<u64>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            pending: BTreeMap::new(),
+            pending_bytes: 0,
+            next_seq: 0,
+            next_release: 0,
+            in_flight: 0,
+            read_paused: false,
+            read_closed: false,
+            want_read: true,
+            want_write: false,
+            worker_id: next_conn_worker_id(),
+            shutdown_seq: None,
+        }
+    }
+
+    /// Response bytes queued for this connection (socket queue plus
+    /// reorder buffer) — the quantity backpressure caps.
+    fn queued_bytes(&self) -> usize {
+        (self.out.len() - self.out_pos) + self.pending_bytes
+    }
+
+    fn fully_flushed(&self) -> bool {
+        self.in_flight == 0
+            && self.pending.is_empty()
+            && self.out_pos == self.out.len()
+            && self.shutdown_seq.is_none()
+    }
+}
+
+/// Serve until shutdown. Entered from [`crate::service::Server::run`];
+/// turns group commit on for the registry's journals while serving.
+pub(crate) fn run(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+    io_threads: usize,
+) -> io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let n_io = io_threads.max(1);
+    registry
+        .set_group_commit(true)
+        .map_err(|e| io::Error::other(e.to_string()))?;
+
+    // Wake pipes and mailboxes, one per I/O thread.
+    let mut wake_rxs = Vec::with_capacity(n_io);
+    let mut mailboxes = Vec::with_capacity(n_io);
+    for _ in 0..n_io {
+        let (wake_tx, wake_rx) = UnixStream::pair()?;
+        wake_tx.set_nonblocking(true)?;
+        wake_rx.set_nonblocking(true)?;
+        mailboxes.push(Arc::new(Mailbox {
+            q: Mutex::new(VecDeque::new()),
+            wake: wake_tx,
+        }));
+        wake_rxs.push(wake_rx);
+    }
+    // Pollers built up front so setup errors surface here, not inside
+    // a detached thread.
+    let mut pollers = Vec::with_capacity(n_io);
+    for (i, wake_rx) in wake_rxs.iter().enumerate() {
+        let poller = Poller::new()?;
+        poller.register(wake_rx.as_raw_fd(), TOKEN_WAKE, true, false)?;
+        if i == 0 {
+            poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+        }
+        pollers.push(poller);
+    }
+
+    let shared = Shared {
+        registry: registry.clone(),
+        shutdown,
+        draining: AtomicBool::new(false),
+        in_flight: AtomicUsize::new(0),
+        parse_done: AtomicUsize::new(0),
+        n_io,
+        mailboxes,
+    };
+    let n_shards = registry.n_shards();
+    let mut txs: Vec<SyncSender<Op>> = Vec::with_capacity(n_shards);
+    let mut rxs: Vec<Receiver<Op>> = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let (tx, rx) = sync_channel(SHARD_QUEUE_DEPTH);
+        txs.push(tx);
+        rxs.push(rx);
+    }
+
+    let result = std::thread::scope(|scope| {
+        let shared_ref = &shared;
+        for rx in rxs {
+            scope.spawn(move || shard_worker(shared_ref, rx));
+        }
+        let mut io_handles = Vec::with_capacity(n_io);
+        let mut wake_iter = wake_rxs.into_iter();
+        for (i, poller) in pollers.into_iter().enumerate() {
+            let wake_rx = wake_iter.next().expect("one wake pipe per io thread");
+            let txs_own = txs.clone();
+            let listener_ref = if i == 0 { Some(&listener) } else { None };
+            io_handles
+                .push(scope.spawn(move || io_loop(i, shared_ref, txs_own, listener_ref, wake_rx, poller)));
+        }
+        // Once every I/O thread (each holding a clone) exits, the shard
+        // channels disconnect and the workers return.
+        drop(txs);
+        let mut res = Ok(());
+        for h in io_handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    crate::log_warn!("serve: io thread error: {e}");
+                    if res.is_ok() {
+                        res = Err(e);
+                    }
+                }
+                Err(_) => {
+                    if res.is_ok() {
+                        res = Err(io::Error::other("io thread panicked"));
+                    }
+                }
+            }
+        }
+        res
+    });
+    // Back to write-through mode; commits any buffered residue.
+    if let Err(e) = registry.set_group_commit(false) {
+        crate::log_warn!("serve: final journal commit failed: {e}");
+    }
+    result
+}
+
+/// A shard worker: the single owner of every session routed to it.
+/// Drains a group of ops, applies them, commits each touched session's
+/// journal once, then releases the group's responses.
+fn shard_worker(shared: &Shared, rx: Receiver<Op>) {
+    loop {
+        let first = match rx.recv() {
+            Ok(op) => op,
+            Err(_) => return, // all I/O threads gone: server exiting
+        };
+        let mut group = vec![first];
+        while group.len() < SHARD_GROUP_MAX {
+            match rx.try_recv() {
+                Ok(op) => group.push(op),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        let mut touched: BTreeSet<String> = BTreeSet::new();
+        let mut responses: Vec<(usize, u64, u64, Json)> = Vec::with_capacity(group.len());
+        for op in &group {
+            let resp = handle_request(&shared.registry, &op.req);
+            collect_sessions(&op.req, &resp, &mut touched);
+            responses.push((op.io, op.conn, op.seq, resp));
+        }
+        // Group commit: one write + one fsync per touched session for
+        // the whole group, before any response is released.
+        let mut commit_err: Option<String> = None;
+        for sid in &touched {
+            match shared.registry.commit_session(sid) {
+                Ok(()) => {}
+                // closed in this very group: close() already committed
+                Err(ServiceError::UnknownSession(_)) => {}
+                Err(e) => {
+                    commit_err = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        if let Some(err) = commit_err {
+            // Never acknowledge what may not be durable: downgrade every
+            // would-be success in the group to a structured error.
+            for (_, _, _, resp) in responses.iter_mut() {
+                if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                    let mut failed = Json::obj();
+                    failed
+                        .set("ok", false)
+                        .set("error", format!("group commit failed: {err}"));
+                    *resp = failed;
+                }
+            }
+        }
+        for (io, conn, seq, resp) in responses {
+            let mut line = resp.to_string_compact().into_bytes();
+            line.push(b'\n');
+            shared.mailboxes[io].push(IoMsg::Done { conn, seq, line });
+        }
+    }
+}
+
+/// Every session a request/response pair may have journaled to: the
+/// request's `session`, a `create` response's new id, and both sides
+/// of each batch sub-op.
+fn collect_sessions(req: &Json, resp: &Json, out: &mut BTreeSet<String>) {
+    let mut add = |j: &Json| {
+        if let Some(sid) = j.get("session").and_then(|s| s.as_str()) {
+            out.insert(sid.to_string());
+        }
+    };
+    add(req);
+    add(resp);
+    if let Some(ops) = req.get("ops").and_then(|o| o.as_arr()) {
+        for op in ops {
+            add(op);
+        }
+    }
+    if let Some(results) = resp.get("results").and_then(|r| r.as_arr()) {
+        for r in results {
+            add(r);
+        }
+    }
+}
+
+/// The shard that must execute `req`: the owner of its session (batch
+/// frames route by the first session named in their ops), or round-
+/// robin for sessionless ops.
+fn route_shard(req: &Json, registry: &Registry, rr: &mut usize) -> usize {
+    let sid = req.get("session").and_then(|s| s.as_str()).or_else(|| {
+        req.get("ops")
+            .and_then(|o| o.as_arr())
+            .and_then(|ops| ops.iter().find_map(|op| op.get("session").and_then(|s| s.as_str())))
+    });
+    match sid {
+        Some(sid) => registry.shard_of(sid),
+        None => {
+            let shard = *rr % registry.n_shards();
+            *rr += 1;
+            shard
+        }
+    }
+}
+
+fn io_loop(
+    idx: usize,
+    shared: &Shared,
+    shard_txs: Vec<SyncSender<Op>>,
+    listener: Option<&TcpListener>,
+    wake_rx: UnixStream,
+    mut poller: Poller,
+) -> io::Result<()> {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut events: Vec<Event> = Vec::new();
+    // Stagger the sessionless round-robin start across I/O threads.
+    let mut rr = idx;
+    let mut next_accept = 0usize;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut parse_flushed = false;
+
+    loop {
+        poller.poll(&mut events, Some(POLL_TIMEOUT))?;
+        let draining =
+            shared.draining.load(Ordering::SeqCst) || shared.shutdown.load(Ordering::SeqCst);
+        if draining {
+            shared.draining.store(true, Ordering::SeqCst);
+        }
+        let mut to_drop: Vec<u64> = Vec::new();
+
+        for &ev in events.iter() {
+            match ev.token {
+                TOKEN_LISTENER => {
+                    let Some(listener) = listener else { continue };
+                    if draining {
+                        continue;
+                    }
+                    accept_all(listener, idx, shared, &poller, &mut conns, &mut next_accept);
+                }
+                TOKEN_WAKE => drain_wake_pipe(&wake_rx),
+                tok => {
+                    let id = tok as u64;
+                    let Some(c) = conns.get_mut(&id) else { continue };
+                    let mut dead = false;
+                    if ev.readable && !draining && !c.read_paused && !c.read_closed {
+                        if do_read(c) {
+                            parse_lines(c, id, idx, shared, &shard_txs, &mut rr, false);
+                        } else {
+                            dead = true;
+                        }
+                    }
+                    if !dead && ev.writable && !do_write(c) {
+                        dead = true;
+                    }
+                    if dead {
+                        to_drop.push(id);
+                    }
+                }
+            }
+        }
+
+        // Cross-thread deliveries: completed responses, handed-over conns.
+        for msg in shared.mailboxes[idx].drain() {
+            match msg {
+                IoMsg::Conn(stream) => {
+                    if !draining {
+                        install_conn(stream, &poller, &mut conns);
+                    }
+                }
+                IoMsg::Done { conn, seq, line } => {
+                    // Decrement first: ops for already-dropped conns
+                    // must still drain the global gauge.
+                    shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    if let Some(c) = conns.get_mut(&conn) {
+                        c.in_flight -= 1;
+                        c.pending_bytes += line.len();
+                        c.pending.insert(seq, line);
+                    }
+                }
+            }
+        }
+
+        // Maintenance: release in-order responses, flush, apply caps,
+        // resume paused reads, retire finished connections.
+        let ids: Vec<u64> = conns.keys().copied().collect();
+        for id in ids {
+            if to_drop.contains(&id) {
+                continue;
+            }
+            let c = conns.get_mut(&id).expect("conn listed");
+            release_ready(c);
+            if c.out_pos < c.out.len() && !do_write(c) {
+                to_drop.push(id);
+                continue;
+            }
+            if c.queued_bytes() > HARD_WRITE_CAP {
+                crate::log_warn!("serve: dropping connection {id}: client not reading responses");
+                to_drop.push(id);
+                continue;
+            }
+            if !draining
+                && c.read_paused
+                && c.in_flight <= MAX_INFLIGHT_PER_CONN / 2
+                && c.queued_bytes() <= SOFT_WRITE_CAP / 2
+            {
+                c.read_paused = false;
+                // Bytes buffered while paused may hold complete lines.
+                parse_lines(c, id, idx, shared, &shard_txs, &mut rr, false);
+                release_ready(c);
+            }
+            if c.read_closed && c.fully_flushed() {
+                to_drop.push(id);
+                continue;
+            }
+            sync_interest(&poller, id, c, draining);
+        }
+        for id in to_drop {
+            if let Some(c) = conns.remove(&id) {
+                let _ = poller.deregister(c.stream.as_raw_fd());
+            }
+        }
+
+        if draining {
+            if drain_deadline.is_none() {
+                drain_deadline = Some(Instant::now() + DRAIN_DEADLINE);
+            }
+            if !parse_flushed {
+                // Honor every op already received: parse the remainder
+                // of each read buffer (caps ignored — nothing new is
+                // being read, this is a finite backlog).
+                let ids: Vec<u64> = conns.keys().copied().collect();
+                for id in ids {
+                    let c = conns.get_mut(&id).expect("conn listed");
+                    parse_lines(c, id, idx, shared, &shard_txs, &mut rr, true);
+                }
+                parse_flushed = true;
+                shared.parse_done.fetch_add(1, Ordering::SeqCst);
+            }
+            // All threads parsed + nothing in flight ⇒ every received
+            // op is committed and answered: release the shutdown acks.
+            if shared.parse_done.load(Ordering::SeqCst) == shared.n_io
+                && shared.in_flight.load(Ordering::SeqCst) == 0
+            {
+                for c in conns.values_mut() {
+                    if let Some(seq) = c.shutdown_seq.take() {
+                        let mut bye = Json::obj();
+                        bye.set("bye", true).set("ok", true);
+                        let mut line = bye.to_string_compact().into_bytes();
+                        line.push(b'\n');
+                        c.pending_bytes += line.len();
+                        c.pending.insert(seq, line);
+                        release_ready(c);
+                        let _ = do_write(c);
+                    }
+                }
+            }
+            let all_flushed = conns.values().all(|c| c.fully_flushed());
+            let expired = drain_deadline.map(|d| Instant::now() >= d).unwrap_or(false);
+            if all_flushed || expired {
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn accept_all(
+    listener: &TcpListener,
+    idx: usize,
+    shared: &Shared,
+    poller: &Poller,
+    conns: &mut HashMap<u64, Conn>,
+    next_accept: &mut usize,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let target = *next_accept % shared.n_io;
+                *next_accept += 1;
+                if target == idx {
+                    install_conn(stream, poller, conns);
+                } else {
+                    shared.mailboxes[target].push(IoMsg::Conn(stream));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                crate::log_warn!("serve: accept error: {e}");
+                return;
+            }
+        }
+    }
+}
+
+fn install_conn(stream: TcpStream, poller: &Poller, conns: &mut HashMap<u64, Conn>) {
+    if let Err(e) = stream.set_nonblocking(true) {
+        crate::log_warn!("serve: rejecting connection: {e}");
+        return;
+    }
+    // One-line request/response turns: latency beats Nagle batching.
+    let _ = stream.set_nodelay(true);
+    let id = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+    if let Err(e) = poller.register(stream.as_raw_fd(), id as usize, true, false) {
+        crate::log_warn!("serve: cannot register connection: {e}");
+        return;
+    }
+    conns.insert(id, Conn::new(stream));
+}
+
+fn drain_wake_pipe(wake_rx: &UnixStream) {
+    let mut sink = [0u8; 512];
+    loop {
+        match (&*wake_rx).read(&mut sink) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Read until the socket drains. Returns false when the connection is
+/// unusable (I/O error, or a single line exceeding [`MAX_LINE_BYTES`]).
+fn do_read(c: &mut Conn) -> bool {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match c.stream.read(&mut buf) {
+            Ok(0) => {
+                c.read_closed = true;
+                return true; // EOF: buffered lines still get answered
+            }
+            Ok(n) => {
+                c.rbuf.extend_from_slice(&buf[..n]);
+                if c.rbuf.len() > MAX_LINE_BYTES && !c.rbuf.contains(&b'\n') {
+                    crate::log_warn!("serve: dropping connection: unterminated request line");
+                    return false;
+                }
+                if n < buf.len() {
+                    return true; // short read: socket drained
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Flush the write queue as far as the socket allows. Returns false on
+/// an I/O error.
+fn do_write(c: &mut Conn) -> bool {
+    while c.out_pos < c.out.len() {
+        match c.stream.write(&c.out[c.out_pos..]) {
+            Ok(0) => return false,
+            Ok(n) => c.out_pos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    if c.out_pos == c.out.len() {
+        c.out.clear();
+        c.out_pos = 0;
+    } else if c.out_pos > 64 * 1024 {
+        // Reclaim the flushed prefix so the queue cannot creep.
+        c.out.drain(..c.out_pos);
+        c.out_pos = 0;
+    }
+    true
+}
+
+/// Move every response whose turn has come from the reorder buffer to
+/// the write queue.
+fn release_ready(c: &mut Conn) {
+    while let Some(line) = c.pending.remove(&c.next_release) {
+        c.pending_bytes -= line.len();
+        c.out.extend_from_slice(&line);
+        c.next_release += 1;
+    }
+}
+
+/// Parse complete lines out of `c.rbuf` and route them: session ops to
+/// their owning shard, parse failures answered inline, `shutdown`
+/// intercepted (it needs the serve loop). With `force` (drain mode)
+/// backpressure caps are ignored — the backlog is finite.
+fn parse_lines(
+    c: &mut Conn,
+    id: u64,
+    idx: usize,
+    shared: &Shared,
+    shard_txs: &[SyncSender<Op>],
+    rr: &mut usize,
+    force: bool,
+) {
+    let mut pos = 0usize;
+    while pos < c.rbuf.len() {
+        if !force
+            && (c.in_flight >= MAX_INFLIGHT_PER_CONN || c.queued_bytes() >= SOFT_WRITE_CAP)
+        {
+            c.read_paused = true;
+            break;
+        }
+        let Some(nl) = c.rbuf[pos..].iter().position(|&b| b == b'\n') else {
+            break;
+        };
+        let line = String::from_utf8_lossy(&c.rbuf[pos..pos + nl]).into_owned();
+        pos += nl + 1;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let seq = c.next_seq;
+        c.next_seq += 1;
+        match parse(trimmed) {
+            Ok(mut req) => {
+                if req.get("cmd").and_then(|v| v.as_str()) == Some("shutdown") {
+                    // Ack only after every received op on every
+                    // connection has drained; discard trailing input.
+                    c.shutdown_seq = Some(seq);
+                    c.read_closed = true;
+                    pos = c.rbuf.len();
+                    shared.draining.store(true, Ordering::SeqCst);
+                    for mb in &shared.mailboxes {
+                        mb.wake();
+                    }
+                    break;
+                }
+                apply_worker_default(&mut req, &c.worker_id);
+                let shard = route_shard(&req, &shared.registry, rr);
+                c.in_flight += 1;
+                shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                // A full shard queue blocks this I/O thread briefly;
+                // the worker is always draining, so this cannot wedge.
+                if shard_txs[shard].send(Op { io: idx, conn: id, seq, req }).is_err() {
+                    // Shard gone: the server is tearing down.
+                    c.in_flight -= 1;
+                    shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let mut r = Json::obj();
+                    r.set("ok", false).set("error", "server shutting down");
+                    queue_inline(c, seq, &r);
+                }
+            }
+            Err(e) => {
+                let mut r = Json::obj();
+                r.set("ok", false).set("error", format!("bad json: {e}"));
+                queue_inline(c, seq, &r);
+            }
+        }
+    }
+    if pos > 0 {
+        c.rbuf.drain(..pos);
+    }
+}
+
+/// Queue a response produced on the I/O thread itself (parse errors):
+/// it still flows through the reorder buffer so ordering holds.
+fn queue_inline(c: &mut Conn, seq: u64, resp: &Json) {
+    let mut line = resp.to_string_compact().into_bytes();
+    line.push(b'\n');
+    c.pending_bytes += line.len();
+    c.pending.insert(seq, line);
+}
+
+/// Reconcile the poller's interest set with what the connection can
+/// currently make progress on.
+fn sync_interest(poller: &Poller, id: u64, c: &mut Conn, draining: bool) {
+    let want_read = !draining && !c.read_closed && !c.read_paused;
+    let want_write = c.out_pos < c.out.len();
+    if (want_read != c.want_read || want_write != c.want_write)
+        && poller
+            .reregister(c.stream.as_raw_fd(), id as usize, want_read, want_write)
+            .is_ok()
+    {
+        c.want_read = want_read;
+        c.want_write = want_write;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_sessions_covers_requests_responses_and_batches() {
+        let req = parse(
+            "{\"cmd\":\"batch\",\"ops\":[\
+             {\"cmd\":\"ask\",\"session\":\"s0001\"},\
+             {\"cmd\":\"tell\",\"session\":\"s0002\"}]}",
+        )
+        .unwrap();
+        let resp = parse("{\"ok\":true,\"results\":[{\"ok\":true,\"session\":\"s0003\"}]}").unwrap();
+        let mut touched = BTreeSet::new();
+        collect_sessions(&req, &resp, &mut touched);
+        let got: Vec<&str> = touched.iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, vec!["s0001", "s0002", "s0003"]);
+
+        // create: the new id only exists in the response
+        let req = parse("{\"cmd\":\"create\",\"spec\":{}}").unwrap();
+        let resp = parse("{\"ok\":true,\"session\":\"s0009\"}").unwrap();
+        let mut touched = BTreeSet::new();
+        collect_sessions(&req, &resp, &mut touched);
+        assert!(touched.contains("s0009"));
+    }
+
+    #[test]
+    fn mailbox_push_wakes_and_drains_in_order() {
+        let (wake_tx, wake_rx) = UnixStream::pair().unwrap();
+        wake_tx.set_nonblocking(true).unwrap();
+        wake_rx.set_nonblocking(true).unwrap();
+        let mb = Mailbox {
+            q: Mutex::new(VecDeque::new()),
+            wake: wake_tx,
+        };
+        mb.push(IoMsg::Done { conn: 5, seq: 0, line: b"a\n".to_vec() });
+        mb.push(IoMsg::Done { conn: 5, seq: 1, line: b"b\n".to_vec() });
+        let mut byte = [0u8; 16];
+        assert!((&wake_rx).read(&mut byte).unwrap() >= 1, "wake byte arrives");
+        let msgs = mb.drain();
+        assert_eq!(msgs.len(), 2);
+        match (&msgs[0], &msgs[1]) {
+            (IoMsg::Done { seq: 0, .. }, IoMsg::Done { seq: 1, .. }) => {}
+            _ => panic!("messages drained out of order"),
+        }
+        assert!(mb.drain().is_empty());
+    }
+
+    #[test]
+    fn reorder_buffer_releases_in_sequence_only() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut c = Conn::new(stream);
+        c.next_seq = 3;
+        // out-of-order completions wait for seq 0
+        c.pending_bytes += 2;
+        c.pending.insert(2, b"c\n".to_vec());
+        c.pending_bytes += 2;
+        c.pending.insert(1, b"b\n".to_vec());
+        release_ready(&mut c);
+        assert!(c.out.is_empty(), "nothing releases before seq 0");
+        c.pending_bytes += 2;
+        c.pending.insert(0, b"a\n".to_vec());
+        release_ready(&mut c);
+        assert_eq!(&c.out, b"a\nb\nc\n", "in-order burst once the gap fills");
+        assert_eq!(c.pending_bytes, 0);
+        assert!(c.pending.is_empty());
+    }
+}

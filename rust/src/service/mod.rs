@@ -20,10 +20,19 @@
 //! * [`journal`] — the JSONL write-ahead log: append, truncation-tolerant
 //!   read, whole-event-prefix recovery, plus the snapshot sidecar
 //!   (`<journal>.snap`) and atomic tail compaction.
-//! * [`registry`] — the thread-safe multi-session store, recovering every
-//!   session journal in a directory at startup.
+//! * [`registry`] — the sharded multi-session store: session ids hash to
+//!   single-owner shards, and every journal in a directory is recovered
+//!   at startup.
 //! * [`server`] — a dependency-free `std::net` TCP server speaking
-//!   newline-delimited JSON (`pasha serve`).
+//!   newline-delimited JSON (`pasha serve`), backed on Unix by the
+//!   sharded event-driven core in `eventloop`: a few I/O threads
+//!   multiplex every connection over readiness polling
+//!   ([`crate::util::poll`]), shard workers own the sessions, and
+//!   journal writes group-commit (one fsync per commit group, responses
+//!   released only after their group is durable). The original
+//!   thread-per-connection loop survives as
+//!   [`server::Server::run_threaded`] — the measured baseline of
+//!   `bench-json --suite service`.
 //! * [`client`] — the matching client plus the `pasha worker` driver
 //!   loop that evaluates assignments against a local [`crate::benchmarks`]
 //!   substrate.
@@ -44,6 +53,8 @@
 //!   bytes, same incumbent, one syscall round-trip for N ops.
 
 pub mod client;
+#[cfg(unix)]
+mod eventloop;
 pub mod journal;
 pub mod registry;
 pub mod server;

@@ -1,14 +1,29 @@
-//! Multi-session registry: the server's shared, thread-safe session
-//! store, with journal-directory recovery at startup.
+//! Sharded multi-session registry: the server's session store, with
+//! journal-directory recovery at startup.
 //!
-//! Each session lives behind its own `Mutex`, so concurrent clients
-//! working different sessions never contend; the registry map itself is
-//! only locked for the short lookup/insert. When a journal directory is
-//! configured, `Registry::new` recovers every `*.jsonl` file in it —
-//! a restarted server resumes exactly where the crashed one stopped
-//! (workers that survived the restart can keep telling into their
-//! in-flight jobs; for workers that died with it, `expire` re-queues
-//! their jobs).
+//! Sessions are **single-owner actors**: each session id hashes
+//! (FNV-1a 64) to one of N shards, and only that shard's worker thread
+//! ever touches the session, so the hot path has no per-session mutex
+//! contention — the shard maps below are `Mutex`-wrapped only so the
+//! registry stays safe for embedders and tests that call in from
+//! arbitrary threads (the event loop's shard workers are each the sole
+//! steady-state lockers of their own shard). The routing table
+//! ([`Registry::shard_of`]) is pure arithmetic: read-mostly, never
+//! locked.
+//!
+//! When a journal directory is configured, the constructor recovers
+//! every `*.jsonl` file in it — a restarted server resumes exactly
+//! where the crashed one stopped (workers that survived the restart can
+//! keep telling into their in-flight jobs; for workers that died with
+//! it, `expire` re-queues their jobs).
+//!
+//! Group commit: [`Registry::set_group_commit`] switches every session
+//! journal into buffered mode; the serving shard then calls
+//! [`Registry::commit_session`] once per commit group (one `write` +
+//! one `sync_all` for the whole group) before any response in the
+//! group is released. [`Registry::close`] commits before dropping the
+//! session, so no acknowledged-or-about-to-be-acknowledged line is
+//! ever discarded.
 
 use crate::service::session::{RecoveryReport, Session, SessionOptions};
 use crate::spec::ExperimentSpec;
@@ -16,7 +31,8 @@ use crate::util::json::Json;
 use std::collections::HashMap;
 use std::fmt;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 
 /// Error type of every service-layer operation.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -50,12 +66,36 @@ impl fmt::Display for ServiceError {
 
 impl std::error::Error for ServiceError {}
 
-/// The shared session store.
+/// FNV-1a 64 over the session id: stable across runs and processes
+/// (unlike `RandomState`), so a session's shard — and therefore its
+/// processing order relative to other ops — is deterministic.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The default shard count: one session-owning worker per available
+/// core, within sane bounds.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 16)
+}
+
+/// The sharded session store.
 pub struct Registry {
     dir: Option<PathBuf>,
     options: SessionOptions,
-    sessions: Mutex<HashMap<String, Arc<Mutex<Session>>>>,
+    /// `shards[fnv1a64(id) % shards.len()]` owns session `id`.
+    shards: Vec<Mutex<HashMap<String, Session>>>,
     next_id: Mutex<usize>,
+    /// Applied to every current and future session journal.
+    group_commit: AtomicBool,
     /// Sessions recovered from the journal directory at startup.
     recovered: Vec<(String, RecoveryReport)>,
 }
@@ -70,13 +110,14 @@ impl Registry {
     /// [`Registry::in_memory`] with an explicit session policy (e.g. a
     /// trial store without a journal directory).
     pub fn in_memory_opts(options: SessionOptions) -> Registry {
-        Registry {
-            dir: None,
-            options,
-            sessions: Mutex::new(HashMap::new()),
-            next_id: Mutex::new(0),
-            recovered: Vec::new(),
-        }
+        Self::in_memory_sharded(options, default_shards())
+    }
+
+    /// [`Registry::in_memory_opts`] with an explicit shard count
+    /// (`pasha serve --shards` without a journal directory).
+    pub fn in_memory_sharded(options: SessionOptions, n_shards: usize) -> Registry {
+        Self::assemble(None, options, n_shards, Vec::new(), 0)
+            .expect("in-memory registry cannot fail")
     }
 
     /// A durable registry journaling into `dir`, recovering every
@@ -92,16 +133,26 @@ impl Registry {
         dir: PathBuf,
         options: SessionOptions,
     ) -> Result<Registry, ServiceError> {
+        Self::with_journal_dir_sharded(dir, options, default_shards())
+    }
+
+    /// [`Registry::with_journal_dir_opts`] with an explicit shard count
+    /// (`pasha serve --shards`).
+    pub fn with_journal_dir_sharded(
+        dir: PathBuf,
+        options: SessionOptions,
+        n_shards: usize,
+    ) -> Result<Registry, ServiceError> {
         std::fs::create_dir_all(&dir).map_err(|e| ServiceError::Io(e.to_string()))?;
-        let mut sessions = HashMap::new();
-        let mut recovered = Vec::new();
-        let mut max_numeric_id = 0usize;
         let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
             .map_err(|e| ServiceError::Io(e.to_string()))?
             .filter_map(|e| e.ok().map(|e| e.path()))
             .filter(|p| p.extension().map(|x| x == "jsonl").unwrap_or(false))
             .collect();
         paths.sort();
+        let mut sessions = Vec::new();
+        let mut recovered = Vec::new();
+        let mut max_numeric_id = 0usize;
         for path in paths {
             let (session, report) =
                 Session::recover_with(&path, options.clone()).map_err(|e| match e {
@@ -115,20 +166,75 @@ impl Registry {
                 max_numeric_id = max_numeric_id.max(n + 1);
             }
             recovered.push((session.id.clone(), report));
-            sessions.insert(session.id.clone(), Arc::new(Mutex::new(session)));
+            sessions.push(session);
         }
-        Ok(Registry {
-            dir: Some(dir),
+        Self::assemble(Some(dir), options, n_shards, sessions, max_numeric_id)
+            .map(|mut reg| {
+                reg.recovered = recovered;
+                reg
+            })
+    }
+
+    fn assemble(
+        dir: Option<PathBuf>,
+        options: SessionOptions,
+        n_shards: usize,
+        sessions: Vec<Session>,
+        next_id: usize,
+    ) -> Result<Registry, ServiceError> {
+        let n = n_shards.max(1);
+        let mut shards: Vec<Mutex<HashMap<String, Session>>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(Mutex::new(HashMap::new()));
+        }
+        let reg = Registry {
+            dir,
             options,
-            sessions: Mutex::new(sessions),
-            next_id: Mutex::new(max_numeric_id),
-            recovered,
-        })
+            shards,
+            next_id: Mutex::new(next_id),
+            group_commit: AtomicBool::new(false),
+            recovered: Vec::new(),
+        };
+        for session in sessions {
+            let shard = reg.shard_of(&session.id);
+            reg.shards[shard]
+                .lock()
+                .expect("shard lock")
+                .insert(session.id.clone(), session);
+        }
+        Ok(reg)
     }
 
     /// Sessions recovered at startup (id + what replay found).
     pub fn recovered(&self) -> &[(String, RecoveryReport)] {
         &self.recovered
+    }
+
+    /// Number of session-owning shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard that owns `id`. Pure arithmetic on a stable hash —
+    /// this is the read-mostly routing table, never a lock.
+    pub fn shard_of(&self, id: &str) -> usize {
+        (fnv1a64(id.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    /// Run `f` against the session `id`, on whatever shard owns it.
+    /// This is the single session access path: on the served hot path
+    /// the caller *is* the owning shard worker, so the lock below is
+    /// uncontended by construction.
+    pub fn with_session<R>(
+        &self,
+        id: &str,
+        f: impl FnOnce(&mut Session) -> R,
+    ) -> Result<R, ServiceError> {
+        let mut shard = self.shards[self.shard_of(id)].lock().expect("shard lock");
+        match shard.get_mut(id) {
+            Some(session) => Ok(f(session)),
+            None => Err(ServiceError::UnknownSession(id.to_string())),
+        }
     }
 
     /// Create a new session and return its id.
@@ -140,52 +246,73 @@ impl Registry {
             id
         };
         let journal_path = self.dir.as_ref().map(|d| d.join(format!("{id}.jsonl")));
-        let session =
+        let mut session =
             Session::create_with(&id, spec, journal_path.as_deref(), self.options.clone())?;
-        self.sessions
+        if self.group_commit.load(Ordering::SeqCst) {
+            session.set_group_commit(true)?;
+        }
+        self.shards[self.shard_of(&id)]
             .lock()
-            .expect("registry lock")
-            .insert(id.clone(), Arc::new(Mutex::new(session)));
+            .expect("shard lock")
+            .insert(id.clone(), session);
         Ok(id)
     }
 
-    /// Look up a session by id.
-    pub fn get(&self, id: &str) -> Result<Arc<Mutex<Session>>, ServiceError> {
-        self.sessions
-            .lock()
-            .expect("registry lock")
-            .get(id)
-            .cloned()
-            .ok_or_else(|| ServiceError::UnknownSession(id.to_string()))
+    /// Switch every session journal (current and future) into or out of
+    /// group-commit mode. The event loop turns this on before serving.
+    pub fn set_group_commit(&self, on: bool) -> Result<(), ServiceError> {
+        self.group_commit.store(on, Ordering::SeqCst);
+        for shard in &self.shards {
+            let mut shard = shard.lock().expect("shard lock");
+            for session in shard.values_mut() {
+                session.set_group_commit(on)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Commit session `id`'s current journal group to disk (no-op for
+    /// journal-less or write-through sessions). The owning shard calls
+    /// this once per commit group, before releasing the group's
+    /// responses.
+    pub fn commit_session(&self, id: &str) -> Result<(), ServiceError> {
+        self.with_session(id, |s| s.commit_journal())?
     }
 
     /// Status summaries of every registered session, id-sorted.
     pub fn statuses(&self) -> Vec<Json> {
-        let handles: Vec<(String, Arc<Mutex<Session>>)> = {
-            let map = self.sessions.lock().expect("registry lock");
-            let mut v: Vec<_> = map.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
-            v.sort_by(|a, b| a.0.cmp(&b.0));
-            v
-        };
-        handles
-            .into_iter()
-            .map(|(_, s)| s.lock().expect("session lock").status())
-            .collect()
+        let mut all: Vec<(String, Json)> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().expect("shard lock");
+            for (id, session) in shard.iter() {
+                all.push((id.clone(), session.status()));
+            }
+        }
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all.into_iter().map(|(_, st)| st).collect()
     }
 
-    /// Drop a session from the registry (its journal file, if any, stays
-    /// on disk and can be recovered later).
+    /// Drop a session from the registry (its journal file, if any,
+    /// stays on disk and can be recovered later). Any buffered journal
+    /// group is committed first, so closing never discards lines whose
+    /// ops were already applied.
     pub fn close(&self, id: &str) -> Result<(), ServiceError> {
-        self.sessions
-            .lock()
-            .expect("registry lock")
-            .remove(id)
-            .map(|_| ())
-            .ok_or_else(|| ServiceError::UnknownSession(id.to_string()))
+        let mut shard = self.shards[self.shard_of(id)].lock().expect("shard lock");
+        match shard.get_mut(id) {
+            Some(session) => {
+                session.commit_journal()?;
+                shard.remove(id);
+                Ok(())
+            }
+            None => Err(ServiceError::UnknownSession(id.to_string())),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.sessions.lock().expect("registry lock").len()
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("shard lock").len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -211,14 +338,17 @@ mod tests {
         spec
     }
 
-    fn drive(session: &Arc<Mutex<Session>>, bench: &dyn Benchmark, bench_seed: u64) {
+    fn drive(reg: &Registry, id: &str, bench: &dyn Benchmark, bench_seed: u64) {
         loop {
-            let assignment = session.lock().unwrap().ask("w0").unwrap();
+            let assignment = reg.with_session(id, |s| s.ask("w0")).unwrap().unwrap();
             match assignment {
                 TrialAssignment::Run(job) => {
                     for e in job.from_epoch + 1..=job.milestone {
                         let m = bench.accuracy_at(&job.config, e, bench_seed);
-                        let ack = session.lock().unwrap().tell(job.trial, e, m).unwrap();
+                        let ack = reg
+                            .with_session(id, |s| s.tell(job.trial, e, m))
+                            .unwrap()
+                            .unwrap();
                         if ack == TellAck::Abandon {
                             break;
                         }
@@ -232,7 +362,7 @@ mod tests {
     }
 
     #[test]
-    fn create_get_close_lifecycle() {
+    fn create_access_close_lifecycle() {
         let reg = Registry::in_memory();
         assert!(reg.is_empty());
         let id = reg.create(small_spec()).unwrap();
@@ -240,8 +370,8 @@ mod tests {
         let id2 = reg.create(small_spec()).unwrap();
         assert_eq!(id2, "s0001");
         assert_eq!(reg.len(), 2);
-        assert!(reg.get(&id).is_ok());
-        match reg.get("nope") {
+        assert!(reg.with_session(&id, |s| s.events_total()).is_ok());
+        match reg.with_session("nope", |_| ()) {
             Err(ServiceError::UnknownSession(missing)) => assert_eq!(missing, "nope"),
             Err(e) => panic!("wrong error {e}"),
             Ok(_) => panic!("unknown id must not resolve"),
@@ -249,6 +379,25 @@ mod tests {
         reg.close(&id).unwrap();
         assert_eq!(reg.len(), 1);
         assert!(reg.close(&id).is_err(), "double close is an error");
+    }
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let reg = Registry::in_memory();
+        let n = reg.n_shards();
+        assert!(n >= 1);
+        for i in 0..100 {
+            let id = format!("s{i:04}");
+            let shard = reg.shard_of(&id);
+            assert!(shard < n);
+            assert_eq!(shard, reg.shard_of(&id), "routing is deterministic");
+        }
+        // the spread uses more than one shard (FNV over distinct ids)
+        let distinct: std::collections::HashSet<usize> =
+            (0..100).map(|i| reg.shard_of(&format!("s{i:04}"))).collect();
+        if n > 1 {
+            assert!(distinct.len() > 1, "sessions spread across shards");
+        }
     }
 
     #[test]
@@ -260,10 +409,9 @@ mod tests {
             let reg = Registry::with_journal_dir(dir.clone()).unwrap();
             let id_a = reg.create(spec.clone()).unwrap();
             let id_b = reg.create(spec.clone()).unwrap();
-            drive(&reg.get(&id_a).unwrap(), bench.as_ref(), spec.bench_seed);
+            drive(&reg, &id_a, bench.as_ref(), spec.bench_seed);
             // leave id_b mid-session: one job asked and never told
-            let sb = reg.get(&id_b).unwrap();
-            let first = sb.lock().unwrap().ask("w0").unwrap();
+            let first = reg.with_session(&id_b, |s| s.ask("w0")).unwrap().unwrap();
             assert!(matches!(first, TrialAssignment::Run(_)));
         }
         let reg2 = Registry::with_journal_dir(dir).unwrap();
@@ -273,11 +421,13 @@ mod tests {
         let id_c = reg2.create(spec).unwrap();
         assert_eq!(id_c, "s0002");
         // the completed session is still done
-        let sa = reg2.get("s0000").unwrap();
-        assert_eq!(sa.lock().unwrap().ask("w0").unwrap(), TrialAssignment::Done);
+        let done = reg2.with_session("s0000", |s| s.ask("w0")).unwrap().unwrap();
+        assert_eq!(done, TrialAssignment::Done);
         // the mid-flight session still has its job in flight
-        let sb = reg2.get("s0001").unwrap();
-        assert_eq!(sb.lock().unwrap().core_ref().in_flight_count(), 1);
+        let in_flight = reg2
+            .with_session("s0001", |s| s.core_ref().in_flight_count())
+            .unwrap();
+        assert_eq!(in_flight, 1);
     }
 
     #[test]
@@ -290,19 +440,32 @@ mod tests {
         {
             let reg = Registry::with_journal_dir_opts(dir.clone(), options.clone()).unwrap();
             let id = reg.create(spec.clone()).unwrap();
-            let s = reg.get(&id).unwrap();
-            drive(&s, bench.as_ref(), spec.bench_seed);
-            total = s.lock().unwrap().events_total();
+            drive(&reg, &id, bench.as_ref(), spec.bench_seed);
+            total = reg.with_session(&id, |s| s.events_total()).unwrap();
         }
         let reg2 = Registry::with_journal_dir_opts(dir, options).unwrap();
         let (_, report) = &reg2.recovered()[0];
         assert!(report.snapshot_events > 0, "snapshot used on restart");
         assert!(report.events_replayed < total);
-        let s = reg2.get("s0000").unwrap();
-        assert_eq!(
-            s.lock().unwrap().ask("w0").unwrap(),
-            crate::scheduler::asktell::TrialAssignment::Done
-        );
+        let done = reg2.with_session("s0000", |s| s.ask("w0")).unwrap().unwrap();
+        assert_eq!(done, TrialAssignment::Done);
+    }
+
+    #[test]
+    fn group_commit_registry_commits_before_close() {
+        let dir = tmp_dir("group-close");
+        let spec = small_spec();
+        let bench = spec.bench.build().unwrap();
+        let reg = Registry::with_journal_dir(dir.clone()).unwrap();
+        reg.set_group_commit(true).unwrap();
+        let id = reg.create(spec.clone()).unwrap();
+        drive(&reg, &id, bench.as_ref(), spec.bench_seed);
+        reg.close(&id).unwrap();
+        // everything the session acknowledged is on disk: a fresh
+        // registry recovers it to the same Done state
+        let reg2 = Registry::with_journal_dir(dir).unwrap();
+        let done = reg2.with_session(&id, |s| s.ask("w0")).unwrap().unwrap();
+        assert_eq!(done, TrialAssignment::Done);
     }
 
     #[test]

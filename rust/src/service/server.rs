@@ -1,12 +1,14 @@
 //! Dependency-free TCP server: newline-delimited JSON over
 //! `std::net::TcpListener`.
 //!
-//! One request per line, one response per line. The accept loop runs in
-//! the calling thread; each connection is handled on a scoped thread
-//! (`std::thread::scope`, the same pure-std concurrency the rest of the
-//! crate uses — no tokio, no async). Connections poll with short read
-//! timeouts so a `shutdown` request observed by any handler stops the
-//! accept loop and drains every handler promptly.
+//! One request per line, one response per line, responses in request
+//! order per connection. [`Server::run`] serves with the sharded
+//! event-driven core (`service::eventloop`): a few I/O threads multiplex
+//! all connections over readiness polling (`util::poll`), sessions are
+//! processed by their owning shard workers, and journal writes group-
+//! commit. [`Server::run_threaded`] keeps the original
+//! thread-per-connection loop — it is the "old path" baseline the
+//! stress suite compares against, and the fallback on non-Unix targets.
 //!
 //! Wire protocol (requests; all responses carry `"ok": true|false`):
 //!
@@ -25,12 +27,27 @@
 //! {"cmd":"shutdown"}                                 -> {"ok":true,"bye":true}
 //! ```
 //!
+//! Field rules: `trial` and `epoch` must be non-negative integers —
+//! negative, fractional, or non-finite numbers are rejected with a
+//! structured error rather than silently truncated. `worker` on `ask`
+//! is optional: when omitted, the server substitutes a process-unique
+//! per-connection identity (`conn-<n>`), so two clients that both skip
+//! the field can never collide in lease accounting (a shared name would
+//! make their in-flight jobs indistinguishable to `expire`).
+//!
 //! `batch` executes its ops strictly in order and returns one result per
 //! op (each with its own `ok` flag — a failed op never aborts the frame).
 //! The ops go through the same per-session dispatch as singly-issued
 //! requests, so journal bytes and scheduler state are identical to the
 //! unbatched path; the frame just collapses N network round-trips into
 //! one. `batch` and `shutdown` cannot be nested inside a frame.
+//!
+//! `shutdown` (on the event-driven path) stops accepting and reading,
+//! lets every already-received op on every connection finish — journal
+//! groups committed, responses delivered — and only then answers
+//! `{"ok":true,"bye":true}` and closes the listener. Slow clients get
+//! backpressure: past a soft cap of queued response bytes the server
+//! stops reading that connection; past a hard cap it drops it.
 
 use crate::scheduler::asktell::assignment_json;
 use crate::service::registry::{Registry, ServiceError};
@@ -39,13 +56,16 @@ use crate::util::json::{parse, Json};
 use crate::TrialId;
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 /// Handle one parsed request against the registry. Pure apart from the
 /// registry mutation — unit-testable without a socket. `shutdown`
-/// requests are handled by the caller (they need the accept loop).
+/// requests are handled by the caller (they need the serve loop).
+/// Callers holding a connection should run [`apply_worker_default`]
+/// first; a bare `handle_request` with no `worker` falls back to the
+/// legacy `"anonymous"` identity.
 pub fn handle_request(registry: &Registry, req: &Json) -> Json {
     match dispatch(registry, req) {
         Ok(mut resp) => {
@@ -77,6 +97,59 @@ fn num_field(req: &Json, key: &str) -> Result<f64, ServiceError> {
         .ok_or_else(|| ServiceError::Request(format!("field '{key}' must be a number")))
 }
 
+/// Largest f64 whose every integer neighbour is exactly representable
+/// (2^53): the ceiling for wire-carried ids.
+const MAX_SAFE_INT: f64 = 9007199254740992.0;
+
+/// A non-negative integer field. JSON numbers arrive as f64, and the
+/// old `as usize` cast silently truncated — `"trial": 3.7` became trial
+/// 3 and `-1` became 0, corrupting lease accounting without a trace.
+/// Reject anything negative, fractional, non-finite, or out of range
+/// with a structured error instead.
+fn uint_field(req: &Json, key: &str, max: f64) -> Result<u64, ServiceError> {
+    let raw = num_field(req, key)?;
+    if !raw.is_finite() || raw.fract() != 0.0 || raw < 0.0 || raw > max {
+        return Err(ServiceError::Request(format!(
+            "field '{key}' must be a non-negative integer (got {raw})"
+        )));
+    }
+    Ok(raw as u64)
+}
+
+/// The process-unique identity minted for each accepted connection and
+/// substituted into `ask` ops that omit `worker`.
+pub(crate) fn next_conn_worker_id() -> String {
+    static NEXT_CONN_WORKER: AtomicU64 = AtomicU64::new(0);
+    format!("conn-{}", NEXT_CONN_WORKER.fetch_add(1, Ordering::Relaxed))
+}
+
+/// Fill the connection's auto-assigned worker id into `ask` ops that
+/// omit `worker` — both top-level and inside `batch` frames. An
+/// explicitly named worker is never overridden.
+pub(crate) fn apply_worker_default(req: &mut Json, worker: &str) {
+    match req.get("cmd").and_then(|c| c.as_str()) {
+        Some("ask") => {
+            if req.get("worker").is_none() {
+                req.set("worker", worker);
+            }
+        }
+        Some("batch") => {
+            if let Json::Obj(map) = req {
+                if let Some(Json::Arr(ops)) = map.get_mut("ops") {
+                    for op in ops.iter_mut() {
+                        if op.get("cmd").and_then(|c| c.as_str()) == Some("ask")
+                            && op.get("worker").is_none()
+                        {
+                            op.set("worker", worker);
+                        }
+                    }
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
 fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
     let cmd = str_field(req, "cmd")?;
     let mut resp = Json::obj();
@@ -91,33 +164,33 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
             resp.set("session", id);
         }
         "ask" => {
-            let session = registry.get(str_field(req, "session")?)?;
+            let sid = str_field(req, "session")?;
             let worker = str_field(req, "worker").unwrap_or("anonymous");
-            let assignment = session.lock().expect("session lock").ask(worker)?;
+            let assignment = registry.with_session(sid, |s| s.ask(worker))??;
             resp = assignment_json(&assignment);
         }
         "tell" => {
-            let session = registry.get(str_field(req, "session")?)?;
-            let trial = num_field(req, "trial")? as TrialId;
-            let epoch = num_field(req, "epoch")? as u32;
+            let sid = str_field(req, "session")?;
+            let trial = uint_field(req, "trial", MAX_SAFE_INT)? as TrialId;
+            let epoch = uint_field(req, "epoch", u32::MAX as f64)? as u32;
             // a diverged worker may legitimately report NaN
             let metric = req.get("metric").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
-            let ack = session.lock().expect("session lock").tell(trial, epoch, metric)?;
+            let ack = registry.with_session(sid, |s| s.tell(trial, epoch, metric))??;
             resp.set("ack", ack.as_str());
         }
         "fail" => {
-            let session = registry.get(str_field(req, "session")?)?;
-            let trial = num_field(req, "trial")? as TrialId;
-            session.lock().expect("session lock").fail(trial)?;
+            let sid = str_field(req, "session")?;
+            let trial = uint_field(req, "trial", MAX_SAFE_INT)? as TrialId;
+            registry.with_session(sid, |s| s.fail(trial))??;
         }
         "expire" => {
-            let session = registry.get(str_field(req, "session")?)?;
-            let expired = session.lock().expect("session lock").expire_workers()?;
+            let sid = str_field(req, "session")?;
+            let expired = registry.with_session(sid, |s| s.expire_workers())??;
             resp.set("expired", expired);
         }
         "status" => {
-            let session = registry.get(str_field(req, "session")?)?;
-            let status = session.lock().expect("session lock").status();
+            let sid = str_field(req, "session")?;
+            let status = registry.with_session(sid, |s| s.status())?;
             resp.set("status", status);
         }
         "sessions" => {
@@ -134,7 +207,7 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
                 .iter()
                 .map(|op| match op.get("cmd").and_then(|c| c.as_str()) {
                     // frame-control commands cannot nest: `batch` would
-                    // recurse unboundedly and `shutdown` needs the accept
+                    // recurse unboundedly and `shutdown` needs the serve
                     // loop, which only sees top-level commands
                     Some("batch") | Some("shutdown") => {
                         let mut r = Json::obj();
@@ -157,11 +230,15 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
     Ok(resp)
 }
 
+/// Default number of I/O threads for the event-driven serve loop.
+pub const DEFAULT_IO_THREADS: usize = 2;
+
 /// A bound-but-not-yet-running server.
 pub struct Server {
     listener: TcpListener,
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
+    io_threads: usize,
 }
 
 impl Server {
@@ -173,23 +250,54 @@ impl Server {
             listener,
             registry,
             shutdown: Arc::new(AtomicBool::new(false)),
+            io_threads: DEFAULT_IO_THREADS,
         })
+    }
+
+    /// Override the I/O thread count for [`Server::run`] (builder-style).
+    pub fn io_threads(mut self, n: usize) -> Server {
+        self.io_threads = n.max(1);
+        self
     }
 
     pub fn local_addr(&self) -> io::Result<SocketAddr> {
         self.listener.local_addr()
     }
 
-    /// A flag that stops the accept loop when set (the `shutdown`
+    /// A flag that stops the serve loop when set (the `shutdown`
     /// command sets it; embedders may too).
     pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
         self.shutdown.clone()
     }
 
-    /// Serve until shutdown. Each connection runs on a scoped thread;
-    /// the call returns once the accept loop stops and every connection
-    /// handler has drained.
+    /// Serve with the sharded event-driven core until shutdown: I/O
+    /// threads multiplex all connections over readiness polling, shard
+    /// workers own the sessions, journals group-commit. Returns once a
+    /// `shutdown` request (or the external flag) has drained every
+    /// in-flight op and flushed every connection.
+    #[cfg(unix)]
     pub fn run(self) -> io::Result<()> {
+        crate::service::eventloop::run(
+            self.listener,
+            self.registry,
+            self.shutdown,
+            self.io_threads,
+        )
+    }
+
+    /// Non-Unix fallback: the readiness poller needs Unix fds, so serve
+    /// with the thread-per-connection loop instead.
+    #[cfg(not(unix))]
+    pub fn run(self) -> io::Result<()> {
+        self.run_threaded()
+    }
+
+    /// The original thread-per-connection serve loop: non-blocking
+    /// accept with a 10ms retry sleep, one scoped thread per
+    /// connection, 100ms read-timeout polling. Kept as the measured baseline for
+    /// `bench-json --suite service` ("old path") and as the non-Unix
+    /// fallback.
+    pub fn run_threaded(self) -> io::Result<()> {
         self.listener.set_nonblocking(true)?;
         let registry = &self.registry;
         let shutdown = &self.shutdown;
@@ -200,7 +308,7 @@ impl Server {
                         scope.spawn(move || {
                             if let Err(e) = handle_connection(stream, registry, shutdown) {
                                 // A dropped connection is routine; log and move on.
-                                eprintln!("pasha serve: connection error: {e}");
+                                crate::log_warn!("serve: connection error: {e}");
                             }
                         });
                     }
@@ -208,7 +316,7 @@ impl Server {
                         std::thread::sleep(Duration::from_millis(10));
                     }
                     Err(e) => {
-                        eprintln!("pasha serve: accept error: {e}");
+                        crate::log_warn!("serve: accept error: {e}");
                         std::thread::sleep(Duration::from_millis(50));
                     }
                 }
@@ -226,6 +334,7 @@ fn handle_connection(
     shutdown: &AtomicBool,
 ) -> io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let worker_id = next_conn_worker_id();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -246,7 +355,8 @@ fn handle_connection(
                     continue;
                 }
                 let resp = match parse(trimmed) {
-                    Ok(req) => {
+                    Ok(mut req) => {
+                        apply_worker_default(&mut req, &worker_id);
                         let resp = handle_request(registry, &req);
                         if req.get("cmd").and_then(|c| c.as_str()) == Some("shutdown") {
                             shutdown.store(true, Ordering::SeqCst);
@@ -362,6 +472,71 @@ mod tests {
         let r = handle_request(&reg, &req(&status));
         let st = r.get("status").unwrap();
         assert_eq!(st.get("jobs_completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn tell_and_fail_reject_non_integer_trial_and_epoch() {
+        let (reg, id) = reg_with_session();
+        let cases = [
+            format!("{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":3.7,\"epoch\":1,\"metric\":1}}"),
+            format!("{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":-1,\"epoch\":1,\"metric\":1}}"),
+            format!("{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":0,\"epoch\":1.5,\"metric\":1}}"),
+            format!("{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":0,\"epoch\":-2,\"metric\":1}}"),
+            format!("{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":0,\"epoch\":1e300,\"metric\":1}}"),
+            format!("{{\"cmd\":\"fail\",\"session\":\"{id}\",\"trial\":2.5}}"),
+            format!("{{\"cmd\":\"fail\",\"session\":\"{id}\",\"trial\":-3}}"),
+        ];
+        for case in &cases {
+            let r = handle_request(&reg, &req(case));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{case}");
+            let msg = r.get("error").unwrap().as_str().unwrap();
+            assert!(msg.contains("non-negative integer"), "{case} -> {msg}");
+        }
+        // integers written with a fractional-free float spelling pass
+        // field validation (JSON has no integer type on the wire)
+        let ok_shape = format!(
+            "{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":7.0,\"epoch\":1,\"metric\":1}}"
+        );
+        let r = handle_request(&reg, &req(&ok_shape));
+        let msg = r.get("error").unwrap().as_str().unwrap();
+        assert!(
+            !msg.contains("non-negative integer"),
+            "7.0 is an integer; the failure must be the unknown trial, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn worker_default_fills_only_missing_ask_fields() {
+        let mut ask = req("{\"cmd\":\"ask\",\"session\":\"s0000\"}");
+        apply_worker_default(&mut ask, "conn-9");
+        assert_eq!(ask.get("worker").unwrap().as_str(), Some("conn-9"));
+
+        let mut named = req("{\"cmd\":\"ask\",\"session\":\"s0000\",\"worker\":\"w3\"}");
+        apply_worker_default(&mut named, "conn-9");
+        assert_eq!(named.get("worker").unwrap().as_str(), Some("w3"));
+
+        let mut frame = req(
+            "{\"cmd\":\"batch\",\"ops\":[\
+             {\"cmd\":\"ask\",\"session\":\"s0000\"},\
+             {\"cmd\":\"ask\",\"session\":\"s0000\",\"worker\":\"w3\"},\
+             {\"cmd\":\"tell\",\"session\":\"s0000\",\"trial\":0,\"epoch\":1,\"metric\":1}]}",
+        );
+        apply_worker_default(&mut frame, "conn-9");
+        let ops = frame.get("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops[0].get("worker").unwrap().as_str(), Some("conn-9"));
+        assert_eq!(ops[1].get("worker").unwrap().as_str(), Some("w3"));
+        assert!(ops[2].get("worker").is_none(), "non-ask ops untouched");
+
+        // a non-ask top-level request is untouched
+        let mut status = req("{\"cmd\":\"status\",\"session\":\"s0000\"}");
+        apply_worker_default(&mut status, "conn-9");
+        assert!(status.get("worker").is_none());
+
+        // minted ids are process-unique
+        let a = next_conn_worker_id();
+        let b = next_conn_worker_id();
+        assert_ne!(a, b);
+        assert!(a.starts_with("conn-") && b.starts_with("conn-"));
     }
 
     #[test]

@@ -112,6 +112,9 @@ pub struct Session {
     /// journal no longer matches the in-memory state, so further
     /// mutations are refused rather than risking a bad recovery.
     poisoned: bool,
+    /// Group-commit mode is on (the served event loop's setting); kept
+    /// here so a journal handle replaced by compaction inherits it.
+    group_commit: bool,
     /// Completed trials have been ingested into the options' store (the
     /// ingestion runs once, on the first `Done` answer).
     ingested: bool,
@@ -167,6 +170,7 @@ impl Session {
             options,
             snapshot_error: None,
             poisoned: false,
+            group_commit: false,
             ingested: false,
             store_error: None,
         })
@@ -275,6 +279,7 @@ impl Session {
             options,
             snapshot_error: None,
             poisoned: false,
+            group_commit: false,
             ingested: false,
             store_error: None,
         };
@@ -410,6 +415,41 @@ impl Session {
         Ok(())
     }
 
+    /// Switch the session's journal into (or out of) group-commit mode
+    /// (see `Journal::set_group_commit`). The served event loop turns
+    /// this on; standalone and embedded sessions stay write-through.
+    pub fn set_group_commit(&mut self, on: bool) -> Result<(), ServiceError> {
+        self.group_commit = on;
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.set_group_commit(on) {
+                self.poisoned = true;
+                return Err(ServiceError::Io(format!(
+                    "journal mode switch failed, session '{}' poisoned: {e}",
+                    self.id
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Force the current commit group to disk: one write + one
+    /// `sync_all` covering every event journaled since the last commit.
+    /// Responses for those ops may only be released after this returns
+    /// `Ok`. Failure poisons the session — the ops were applied in
+    /// memory but their durability cannot be vouched for.
+    pub fn commit_journal(&mut self) -> Result<(), ServiceError> {
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.commit() {
+                self.poisoned = true;
+                return Err(ServiceError::Io(format!(
+                    "journal commit failed, session '{}' poisoned: {e}",
+                    self.id
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Events appended since creation/recovery (journal-less sessions
     /// count the appends they would have made).
     pub fn events_journaled(&self) -> usize {
@@ -488,6 +528,12 @@ impl Session {
             return Ok(());
         }
         let io_err = |e: std::io::Error| ServiceError::Io(e.to_string());
+        // push buffered group-commit lines into the file first: the
+        // rewrite below re-reads the file from disk and replaces the
+        // append handle, so userspace-buffered bytes would be lost
+        if let Some(j) = self.journal.as_mut() {
+            j.flush().map_err(io_err)?;
+        }
         let read = journal::read_journal(path).map_err(io_err)?;
         let tail = &read.events[1..];
         let drop_count = new_base - self.base;
@@ -502,7 +548,11 @@ impl Session {
         lines.extend_from_slice(&tail[drop_count..]);
         journal::rewrite_atomic(path, &lines).map_err(io_err)?;
         let len = std::fs::metadata(path).map_err(io_err)?.len();
-        self.journal = Some(Journal::open_append_at(path, len).map_err(io_err)?);
+        let mut fresh = Journal::open_append_at(path, len).map_err(io_err)?;
+        if self.group_commit {
+            fresh.set_group_commit(true).map_err(io_err)?;
+        }
+        self.journal = Some(fresh);
         self.base = new_base;
         Ok(())
     }
@@ -881,6 +931,7 @@ mod tests {
         let options = SessionOptions {
             snapshot_every: Some(8),
             compact_on_snapshot: false,
+            ..SessionOptions::default()
         };
         let mut s = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
         drive(&mut s, bench.as_ref(), spec.bench_seed);
@@ -931,6 +982,53 @@ mod tests {
         assert_eq!(report.snapshot_events, total);
         assert_eq!(report.events_replayed, 0, "nothing to replay past the snapshot");
         assert_eq!(report.events_skipped, 0, "nothing pre-snapshot on disk");
+        let rbest = r.core_ref().best().unwrap();
+        assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
+    }
+
+    #[test]
+    fn group_commit_session_journal_bytes_match_write_through() {
+        let path_g = tmp("group-mode.jsonl");
+        let path_w = tmp("write-through.jsonl");
+        let spec = small_spec();
+        let bench = spec.bench.build().unwrap();
+        let mut g = Session::create("s0", spec.clone(), Some(&path_g)).unwrap();
+        g.set_group_commit(true).unwrap();
+        let mut w = Session::create("s0", spec.clone(), Some(&path_w)).unwrap();
+        drive(&mut g, bench.as_ref(), spec.bench_seed);
+        g.commit_journal().unwrap();
+        drive(&mut w, bench.as_ref(), spec.bench_seed);
+        drop(g);
+        drop(w);
+        assert_eq!(
+            std::fs::read(&path_g).unwrap(),
+            std::fs::read(&path_w).unwrap(),
+            "group-commit mode changes when bytes hit disk, never the bytes"
+        );
+        let (mut r, _) = Session::recover(&path_g).unwrap();
+        assert_eq!(r.ask("w0").unwrap(), TrialAssignment::Done);
+    }
+
+    #[test]
+    fn group_commit_survives_snapshot_compaction() {
+        let path = tmp("group-snap.jsonl");
+        let spec = small_spec();
+        let bench = spec.bench.build().unwrap();
+        let mut s = Session::create_with(
+            "s0",
+            spec.clone(),
+            Some(&path),
+            SessionOptions::snapshot_every(8),
+        )
+        .unwrap();
+        s.set_group_commit(true).unwrap();
+        drive(&mut s, bench.as_ref(), spec.bench_seed);
+        let best = s.core_ref().best().unwrap();
+        assert!(s.snapshots().len() >= 2, "rotation ran under group mode");
+        s.commit_journal().unwrap();
+        drop(s);
+        let (r, report) = Session::recover(&path).unwrap();
+        assert!(report.snapshot_events > 0, "recovery used a snapshot");
         let rbest = r.core_ref().best().unwrap();
         assert_eq!(rbest.metric.to_bits(), best.metric.to_bits());
     }

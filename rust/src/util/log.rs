@@ -1,0 +1,151 @@
+//! Tiny leveled stderr logger (the offline image has no `log` /
+//! `env_logger`; see DESIGN.md §Substitutions).
+//!
+//! The level comes from the `PASHA_LOG` environment variable
+//! (`error|warn|info|debug`, default `warn`), read once on first use.
+//! Every record is emitted with a single locked `writeln!`, so a
+//! 1000-connection stress run cannot interleave half-lines on stderr.
+//!
+//! Use through the crate-root macros:
+//!
+//! ```ignore
+//! crate::log_warn!("pasha serve: connection error: {e}");
+//! crate::log_debug!("shard {shard}: committed {n} ops");
+//! ```
+
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Log severity, ordered from most to least important.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// The lowercase tag printed in the record prefix.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `PASHA_LOG` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Sentinel meaning "not initialized yet".
+const UNSET: usize = usize::MAX;
+
+static LEVEL: AtomicUsize = AtomicUsize::new(UNSET);
+
+fn current_level() -> usize {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return v;
+    }
+    let parsed = std::env::var("PASHA_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Warn) as usize;
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the level programmatically (tests, embedders). Wins over
+/// `PASHA_LOG` from this point on.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// Would a record at `level` be emitted right now? Lets callers skip
+/// building expensive messages.
+pub fn enabled(level: Level) -> bool {
+    (level as usize) <= current_level()
+}
+
+/// Emit one record. Prefer the `log_*!` macros, which build the
+/// `format_args!` for you.
+pub fn write(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let stderr = std::io::stderr();
+    let mut handle = stderr.lock();
+    let _ = writeln!(handle, "pasha[{}] {}", level.as_str(), args);
+}
+
+/// Log at `error` level (always emitted unless the writer fails).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at `warn` level (the default threshold).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at `info` level (`PASHA_LOG=info` or lower).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at `debug` level (`PASHA_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse(" debug "), Some(Level::Debug));
+        assert_eq!(Level::parse("Info"), Some(Level::Info));
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn threshold_gates_levels() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        // emitting must not panic regardless of level
+        write(Level::Debug, format_args!("logger self-test {}", 42));
+        set_level(Level::Warn);
+    }
+}

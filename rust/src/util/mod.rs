@@ -7,7 +7,10 @@
 pub mod benchkit;
 pub mod json;
 pub mod jsonl;
+pub mod log;
 pub mod parallel;
+#[cfg(unix)]
+pub mod poll;
 pub mod ptest;
 pub mod rng;
 pub mod stats;

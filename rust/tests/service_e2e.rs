@@ -279,6 +279,7 @@ fn check_snapshot_equivalence(
     let options = SessionOptions {
         snapshot_every: Some(interval),
         compact_on_snapshot: false,
+        ..SessionOptions::default()
     };
     let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
     let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, workers);
@@ -425,6 +426,7 @@ fn torn_snapshot_fuzz_every_byte() {
     let options = SessionOptions {
         snapshot_every: Some(12),
         compact_on_snapshot: false,
+        ..SessionOptions::default()
     };
     let mut live = Session::create_with("s0", spec.clone(), Some(&path), options).unwrap();
     let trace = drive_traced(&mut live, bench.as_ref(), spec.bench_seed, 2);
@@ -718,4 +720,180 @@ fn tcp_many_workers_drain_one_session() {
     assert!(status.get("best_metric").unwrap().as_f64().unwrap() > 0.0);
     control.shutdown().unwrap();
     server_thread.join().unwrap().unwrap();
+}
+
+/// Tests specific to the sharded event-driven core (`Server::run` on
+/// Unix): shutdown drain across connections, slow-client backpressure,
+/// and auto-assigned per-connection worker ids.
+#[cfg(unix)]
+mod eventloop_e2e {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    #[test]
+    fn shutdown_drains_inflight_ops_on_other_connections() {
+        // `shutdown` on one connection must not drop work accepted on
+        // others: every op the server has read is answered and
+        // journaled before the `bye` is released and the listener
+        // closes.
+        let spec = spec_for("asha", SearcherSpec::Random, 40);
+        let dir = tmp_dir("drain");
+        let registry = Registry::with_journal_dir(dir.clone()).unwrap();
+        let server = Server::bind("127.0.0.1:0", Arc::new(registry)).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let mut control = Client::connect(&addr).unwrap();
+        let sid = control.create(&spec).unwrap();
+
+        // Pipeline 32 asks in a single write on a second connection and
+        // read only the first response; the rest are still queued when
+        // shutdown arrives.
+        let writer = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(writer.try_clone().unwrap());
+        let mut frame = String::new();
+        for w in 0..32 {
+            frame.push_str(&format!(
+                "{{\"cmd\":\"ask\",\"session\":\"{sid}\",\"worker\":\"w{w}\"}}\n"
+            ));
+        }
+        (&writer).write_all(frame.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "first ask failed: {line}");
+        // give the event loop a few ticks to ingest the residual bytes —
+        // drain covers ops the server has *read*, not bytes in flight
+        std::thread::sleep(Duration::from_millis(150));
+
+        // blocks until the drained `bye`
+        control.shutdown().unwrap();
+
+        for i in 1..32 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(
+                line.contains("\"ok\":true"),
+                "ask #{i} lost in shutdown: {line:?}"
+            );
+        }
+        server_thread.join().unwrap().unwrap();
+
+        // every acked ask made it into the journal before the exit
+        let journal = std::fs::read_to_string(dir.join(format!("{sid}.jsonl"))).unwrap();
+        let asks = journal.lines().filter(|l| l.contains("\"ev\":\"ask\"")).count();
+        assert_eq!(asks, 32, "all acked asks journaled");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slow_client_backpressure_bounds_buffering_and_keeps_service_live() {
+        // A client that pipelines requests and never reads responses
+        // must jam against the server's write-queue caps instead of
+        // growing server memory without bound — and must not wedge
+        // service for well-behaved connections.
+        let spec = spec_for("asha", SearcherSpec::Random, 12);
+        let server = Server::bind("127.0.0.1:0", Arc::new(Registry::in_memory())).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let mut control = Client::connect(&addr).unwrap();
+        let sid = control.create(&spec).unwrap();
+
+        let stalled = TcpStream::connect(&addr).unwrap();
+        stalled.set_nonblocking(true).unwrap();
+        let req = format!("{{\"cmd\":\"status\",\"session\":\"{sid}\"}}\n");
+        let req = req.as_bytes();
+        const CAP: usize = 64 * 1024 * 1024;
+        let mut written = 0usize;
+        let mut idle = 0u32;
+        while written < CAP {
+            match (&stalled).write(req) {
+                Ok(0) => break,
+                Ok(n) => {
+                    written += n;
+                    idle = 0;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    idle += 1;
+                    if idle > 100 {
+                        break; // ~1s of zero progress: the pipe is jammed
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => panic!("stalled writer failed: {e}"),
+            }
+        }
+        assert!(
+            written < CAP,
+            "backpressure never engaged: server absorbed {written} bytes unread"
+        );
+
+        // the jammed connection must not block other clients: a worker
+        // on a fresh connection drives the session to completion
+        let bench = spec.bench.build().unwrap();
+        let mut worker = Client::connect(&addr).unwrap();
+        let report = run_worker(
+            &mut worker,
+            &sid,
+            "w0",
+            bench.as_ref(),
+            spec.bench_seed,
+            Duration::from_millis(1),
+        )
+        .unwrap();
+        assert!(report.jobs_completed > 0, "service stayed live under backpressure");
+
+        drop(stalled);
+        std::thread::sleep(Duration::from_millis(100));
+        control.shutdown().unwrap();
+        server_thread.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn bare_ask_gets_unique_per_connection_worker_id() {
+        // An `ask` without a `worker` field is attributed to an
+        // auto-assigned per-connection id, so two anonymous connections
+        // never collide in the journal.
+        let spec = spec_for("asha", SearcherSpec::Random, 8);
+        let dir = tmp_dir("autoworker");
+        let registry = Registry::with_journal_dir(dir.clone()).unwrap();
+        let server = Server::bind("127.0.0.1:0", Arc::new(registry)).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let mut control = Client::connect(&addr).unwrap();
+        let sid = control.create(&spec).unwrap();
+
+        let bare_ask = |addr: &str| {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.write_all(format!("{{\"cmd\":\"ask\",\"session\":\"{sid}\"}}\n").as_bytes())
+                .unwrap();
+            let mut reader = BufReader::new(conn);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"ok\":true"), "bare ask failed: {line}");
+        };
+        bare_ask(&addr);
+        bare_ask(&addr);
+        control.shutdown().unwrap();
+        server_thread.join().unwrap().unwrap();
+
+        let journal = std::fs::read_to_string(dir.join(format!("{sid}.jsonl"))).unwrap();
+        let mut workers = Vec::new();
+        for l in journal.lines() {
+            let ev = pasha::util::json::parse(l).unwrap();
+            if ev.get("ev").and_then(|v| v.as_str()) == Some("ask") {
+                workers.push(ev.get("worker").unwrap().as_str().unwrap().to_string());
+            }
+        }
+        assert_eq!(workers.len(), 2, "both asks journaled");
+        assert!(
+            workers.iter().all(|w| w.starts_with("conn-")),
+            "auto ids use the conn- prefix: {workers:?}"
+        );
+        assert_ne!(workers[0], workers[1], "per-connection ids are unique");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
