@@ -276,6 +276,7 @@ pub fn run_engine(
     rules: &[Box<dyn StoppingRule>],
     backend: &mut dyn ExecBackend,
 ) -> EngineStats {
+    let t_run = std::time::Instant::now();
     let mut snap = EngineSnapshot::default();
     let mut stats = EngineStats::default();
     let mut stopped: HashSet<TrialId> = HashSet::new();
@@ -449,6 +450,20 @@ pub fn run_engine(
     stats.stopped_trials = stopped.len();
     stats.paused_trials = paused.len();
     stats.idle_worker_seconds = backend.idle_worker_seconds(stats.runtime_seconds);
+
+    // Run-level telemetry ([`crate::obs`]): counters aggregate across
+    // every engine run in the process. Observe-only — recorded after the
+    // run is fully decided, so metrics can never perturb scheduling.
+    crate::obs::counter("pasha_engine_runs_total", &[]).inc();
+    crate::obs::counter("pasha_engine_jobs_total", &[]).add(stats.jobs as u64);
+    crate::obs::counter("pasha_engine_epochs_total", &[]).add(stats.total_epochs);
+    crate::obs::counter("pasha_engine_cancelled_jobs_total", &[]).add(stats.cancelled_jobs as u64);
+    crate::obs::counter("pasha_engine_failed_jobs_total", &[]).add(stats.failed_jobs as u64);
+    crate::obs::histogram("pasha_engine_configs_sampled", &[]).observe(stats.configs_sampled as u64);
+    if crate::obs::trace::enabled() {
+        crate::obs::trace::span("engine", "run", 0, t_run, std::time::Instant::now());
+        crate::obs::trace::flush();
+    }
     stats
 }
 

@@ -34,6 +34,7 @@ pub mod config;
 pub mod e2e;
 pub mod executor;
 pub mod metrics;
+pub mod obs;
 pub mod ranking;
 pub mod report;
 #[cfg(feature = "pjrt")]

@@ -12,10 +12,11 @@
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
 //! pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
 //! pasha serve  [--addr A] [--journal-dir DIR] [--snapshot-interval N] [--store FILE]
-//!              [--io-threads N] [--shards N] [--legacy-threaded]
+//!              [--io-threads N] [--shards N] [--legacy-threaded] [--metrics-addr A]
 //! pasha worker --addr A (--session ID | --create ...) [--expire] [--batch]
 //! pasha store  <ls|gc|export> --store FILE [--fingerprint FP] [--out FILE]
 //! pasha sessions --addr A                                # list sessions
+//! pasha stats  --addr A [--check]                        # metrics snapshot
 //! pasha recover --journal FILE                           # journal check
 //! pasha compact --journal FILE                           # snapshot + truncate
 //! pasha e2e    [--budget N] [--hidden H]                # real PJRT training
@@ -57,6 +58,7 @@ fn main() {
         "worker" => cmd_worker(&flags, &sets),
         "store" => cmd_store(rest.first().map(|s| s.as_str()), &flags),
         "sessions" => cmd_sessions(&flags),
+        "stats" => cmd_stats(&flags),
         "recover" => cmd_recover(&flags),
         "compact" => cmd_compact(&flags),
         "e2e" => cmd_e2e(&flags),
@@ -66,13 +68,13 @@ fn main() {
             Ok(())
         }
         other => {
-            eprintln!("unknown command '{other}'");
+            pasha::log_error!("unknown command '{other}'");
             usage();
             std::process::exit(2);
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e}");
+        pasha::log_error!("{e}");
         std::process::exit(1);
     }
 }
@@ -99,6 +101,7 @@ USAGE:
                #                [--mode event|threaded|both] [--gate BASELINE.json]
   pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR] [--snapshot-interval N]
                [--store trials.jsonl] [--io-threads N] [--shards N] [--legacy-threaded]
+               [--metrics-addr 127.0.0.1:9091]   # Prometheus text endpoint
   pasha worker --addr HOST:PORT (--session ID | --create [--spec exp.json] [--bench B]
                [--scheduler S] [--budget N] [--seed S] [--eta E] [--r-min R] [--ranking ...]
                [--searcher random|bo] [--epoch-budget E] [--warm-start trials.jsonl]
@@ -108,6 +111,7 @@ USAGE:
   pasha store  gc --store trials.jsonl            # dedup + compact in place
   pasha store  export --store trials.jsonl [--fingerprint FP] [--out FILE]
   pasha sessions --addr HOST:PORT
+  pasha stats  --addr HOST:PORT [--check]  # metrics snapshot (+conservation checks)
   pasha recover --journal FILE             # verify a session journal replays cleanly
   pasha compact --journal FILE             # snapshot + truncate a session journal
   pasha e2e    [--budget N] [--hidden 64|128|256] [--workers W]
@@ -837,6 +841,67 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
         .set("p50_us", b_p50)
         .set("p99_us", b_p99);
 
+    // Metrics record for the bench file: journaling and backpressure
+    // counters from this process's obs registry, with the commit-group
+    // size distribution merged (bucket-wise) across the journaled
+    // sessions the oracle phase just drove.
+    fn bucket_quantile(buckets: &[u64; pasha::obs::HISTO_BUCKETS], q: f64) -> f64 {
+        let n: u64 = buckets.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return pasha::obs::bucket_bound(i) as f64;
+            }
+        }
+        pasha::obs::bucket_bound(pasha::obs::HISTO_BUCKETS - 1) as f64
+    }
+    let mut group_buckets = [0u64; pasha::obs::HISTO_BUCKETS];
+    let mut commit_groups = 0u64;
+    for sid in [&solo_id, &ub_id, &b_id] {
+        let h = pasha::obs::histogram(
+            "pasha_journal_commit_group_events",
+            &[("session", sid.as_str())],
+        );
+        for (b, v) in group_buckets.iter_mut().zip(h.buckets()) {
+            *b += v;
+        }
+        commit_groups += h.count();
+    }
+    let snap = pasha::obs::snapshot_json();
+    let agg_of = |name: &str| -> f64 {
+        snap.get("aggregate")
+            .and_then(|a| a.get(name))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let (group_p50, group_p99) = (
+        bucket_quantile(&group_buckets, 0.5),
+        bucket_quantile(&group_buckets, 0.99),
+    );
+    let mut metrics_j = Json::obj();
+    metrics_j
+        .set("journal_fsyncs", agg_of("pasha_journal_fsyncs_total"))
+        .set("journal_events", agg_of("pasha_journal_events_total"))
+        .set("commit_groups", commit_groups as f64)
+        .set("commit_group_events_p50", group_p50)
+        .set("commit_group_events_p99", group_p99)
+        .set(
+            "backpressure_pauses",
+            agg_of("pasha_net_backpressure_pauses_total"),
+        );
+    println!(
+        "metrics: {} fsyncs over {} journal events, commit-group p50/p99 \
+         {group_p50:.0}/{group_p99:.0} events, {} backpressure pauses",
+        agg_of("pasha_journal_fsyncs_total"),
+        agg_of("pasha_journal_events_total"),
+        agg_of("pasha_net_backpressure_pauses_total"),
+    );
+
     let mut root = Json::obj();
     root.set("benchmark", "service")
         .set("sessions", n_sessions)
@@ -846,7 +911,8 @@ fn bench_service(flags: &HashMap<String, String>, out: Option<String>) -> Result
         .set("batched_per_op", batched_j)
         .set("batched_speedup_p50", ub_p50 / b_p50.max(1e-9))
         .set("batched_at_or_below_unbatched", b_p50 <= ub_p50)
-        .set("single_worker_matches_inprocess", matches);
+        .set("single_worker_matches_inprocess", matches)
+        .set("metrics", metrics_j);
     if let Some((wall, ask_us, tell_us)) = &event {
         report_mode("event", *wall, ask_us, tell_us);
         root.set("event", mode_json(*wall, ask_us, tell_us));
@@ -961,9 +1027,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         );
     }
     let legacy = flags.contains_key("legacy-threaded");
-    let server = Server::bind(&addr, Arc::new(registry))
+    let mut server = Server::bind(&addr, Arc::new(registry))
         .map_err(|e| e.to_string())?
         .io_threads(io_threads);
+    if let Some(maddr) = flags.get("metrics-addr") {
+        if legacy {
+            return Err("--metrics-addr needs the event-driven serve loop \
+                        (drop --legacy-threaded)"
+                .into());
+        }
+        server = server
+            .metrics_addr(maddr)
+            .map_err(|e| format!("--metrics-addr {maddr}: {e}"))?;
+    }
     println!(
         "pasha serve: listening on {} ({})",
         server.local_addr().map_err(|e| e.to_string())?,
@@ -973,6 +1049,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
             format!("{io_threads} io threads, {shards} session shards")
         }
     );
+    if let Some(maddr) = server.metrics_local_addr() {
+        println!("pasha serve: Prometheus metrics on http://{maddr}/metrics");
+    }
     if legacy {
         server.run_threaded().map_err(|e| e.to_string())
     } else {
@@ -1154,6 +1233,95 @@ fn cmd_sessions(flags: &HashMap<String, String>) -> Result<(), String> {
     let statuses = client.sessions().map_err(|e| e.to_string())?;
     println!("{}", pasha::report::service::sessions_table(&statuses).to_text());
     Ok(())
+}
+
+/// `pasha stats --addr HOST:PORT [--check]` — fetch and print a live
+/// server's metrics snapshot over the read-only `stats` wire op.
+/// `--check` additionally enforces the conservation invariants the
+/// instrumentation guarantees and exits non-zero on any violation:
+/// per session, every journaled ask is backed by a journal event
+/// (`asks_journaled <= journal_events`), the scheduler saw at least as
+/// many asks as were journaled, and fsyncs never exceed appends (+1 for
+/// the conservative sync a freshly opened journal issues); globally,
+/// no in-flight gauge has gone negative.
+fn cmd_stats(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7171".to_string());
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let snap = client.stats().map_err(|e| e.to_string())?;
+    println!("{}", snap.to_string_pretty());
+    if !flags.contains_key("check") {
+        return Ok(());
+    }
+    let instruments = snap
+        .get("instruments")
+        .and_then(|v| v.as_arr())
+        .ok_or("stats snapshot missing 'instruments'")?;
+    // name -> session label -> value (counters and gauges)
+    let mut by_session: HashMap<(String, String), f64> = HashMap::new();
+    let mut sessions = std::collections::BTreeSet::new();
+    let mut violations = Vec::new();
+    for inst in instruments {
+        let name = inst.get("name").and_then(|v| v.as_str()).unwrap_or("");
+        let value = inst.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if name == "pasha_net_inflight_ops" || name == "pasha_shard_queue_depth" {
+            if value < 0.0 {
+                violations.push(format!("{name} is negative ({value})"));
+            }
+            continue;
+        }
+        let session = inst
+            .get("labels")
+            .and_then(|l| l.get("session"))
+            .and_then(|v| v.as_str());
+        if let Some(sid) = session {
+            sessions.insert(sid.to_string());
+            by_session.insert((name.to_string(), sid.to_string()), value);
+        }
+    }
+    let get = |name: &str, sid: &str| -> Option<f64> {
+        by_session.get(&(name.to_string(), sid.to_string())).copied()
+    };
+    for sid in &sessions {
+        let asks = get("pasha_sched_asks_total", sid);
+        let journaled = get("pasha_sched_asks_journaled_total", sid);
+        if let (Some(a), Some(j)) = (asks, journaled) {
+            if j > a {
+                violations.push(format!(
+                    "session {sid}: {j} journaled asks exceed {a} scheduler asks"
+                ));
+            }
+        }
+        let events = get("pasha_journal_events_total", sid);
+        if let (Some(j), Some(ev)) = (journaled, events) {
+            if j > ev {
+                violations.push(format!(
+                    "session {sid}: {j} journaled asks exceed {ev} journal events"
+                ));
+            }
+        }
+        if let (Some(f), Some(ev)) = (get("pasha_journal_fsyncs_total", sid), events) {
+            if f > ev + 1.0 {
+                violations.push(format!(
+                    "session {sid}: {f} fsyncs exceed {ev} journal events (+1)"
+                ));
+            }
+        }
+    }
+    if violations.is_empty() {
+        println!(
+            "check: conservation invariants hold across {} session(s)",
+            sessions.len()
+        );
+        Ok(())
+    } else {
+        Err(format!(
+            "metrics conservation violated:\n  {}",
+            violations.join("\n  ")
+        ))
+    }
 }
 
 /// Verify a session journal replays cleanly (CI's non-recoverable-journal

@@ -1,0 +1,682 @@
+//! Dependency-free observability: a global registry of atomic
+//! counters, gauges, and log-bucketed latency histograms, wired through
+//! the service event loop, shard workers, group-commit journaling, the
+//! scheduler layer, the executor, and the trial store.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Provably inert.** Instruments only *observe*: they never touch
+//!    RNG streams, never write to journals, and never change control
+//!    flow. `tests/service_e2e.rs` pins this down by driving identical
+//!    sessions with metrics enabled and disabled and asserting the
+//!    journal bytes are identical.
+//! 2. **Lock-free hot path.** Registration (name → instrument) takes a
+//!    mutex once; callers hold an `Arc` and every increment afterwards
+//!    is a single relaxed atomic RMW. Histograms are fixed arrays of
+//!    atomic buckets — no allocation, no locking, no ordering traffic.
+//! 3. **Kill switch.** `PASHA_METRICS=off` (or
+//!    [`set_enabled`]`(false)`) turns every record operation into a
+//!    relaxed load + branch, for overhead A/B runs and the byte-identity
+//!    oracle.
+//!
+//! Exposition paths: [`snapshot_json`] backs the read-only `stats` wire
+//! op (`pasha stats <addr>`), [`render_prometheus`] backs the
+//! `serve --metrics-addr` plain-HTTP text endpoint, and [`trace`]
+//! writes chrome://tracing spans when `PASHA_TRACE=<file>` is set.
+
+pub mod trace;
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Enable gate
+// ---------------------------------------------------------------------------
+
+const GATE_UNSET: usize = usize::MAX;
+static ENABLED: AtomicUsize = AtomicUsize::new(GATE_UNSET);
+
+/// Is recording enabled? First call reads `PASHA_METRICS` (anything but
+/// `0`/`off`/`false` — or absence — means on); afterwards a relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        GATE_UNSET => {
+            let on = match std::env::var("PASHA_METRICS") {
+                Ok(v) => !matches!(v.to_lowercase().as_str(), "0" | "off" | "false"),
+                Err(_) => true,
+            };
+            ENABLED.store(on as usize, Ordering::Relaxed);
+            on
+        }
+        v => v == 1,
+    }
+}
+
+/// Force recording on or off (tests and the byte-identity oracle).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on as usize, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing event count.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that can go up and down (queue depth, in-flight ops, the
+/// current PASHA resource cap).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        if enabled() {
+            self.0.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log₂ buckets: bucket `i` holds values whose bit length is
+/// `i` (bucket 0 holds exactly 0), so bucket `i ≥ 1` covers
+/// `[2^(i-1), 2^i)` and the whole `u64` range fits in 65 buckets.
+pub const HISTO_BUCKETS: usize = 65;
+
+/// The bucket a value lands in: its bit length.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (`2^i − 1`); the value a quantile
+/// estimate reports and the Prometheus `le` boundary.
+#[inline]
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Log-bucketed histogram for latency-style values (microseconds, group
+/// sizes). Fixed-size atomic buckets: recording is two relaxed RMWs and
+/// one store-free bucket increment; quantile estimates are within one
+/// bucket of the exact order statistic by construction (each bucket
+/// spans one power of two).
+pub struct Histogram {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: [0u64; HISTO_BUCKETS].map(AtomicU64::new),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        if enabled() {
+            self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+            self.sum.fetch_add(v, Ordering::Relaxed);
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a duration in microseconds.
+    #[inline]
+    pub fn observe_us(&self, d: std::time::Duration) {
+        self.observe(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the raw bucket counts.
+    pub fn buckets(&self) -> [u64; HISTO_BUCKETS] {
+        let mut out = [0u64; HISTO_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Estimate the `q`-quantile (`q` in `[0, 1]`) as the upper bound of
+    /// the bucket containing the `⌈q·n⌉`-th smallest observation. The
+    /// estimate therefore lands in the same log₂ bucket as the exact
+    /// order statistic. Returns `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        let buckets = self.buckets();
+        let n: u64 = buckets.iter().sum();
+        if n == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Some(bucket_bound(i));
+            }
+        }
+        Some(bucket_bound(HISTO_BUCKETS - 1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Sorted `key=value` label set, part of an instrument's identity.
+pub type Labels = Vec<(String, String)>;
+
+fn labels_of(pairs: &[(&str, &str)]) -> Labels {
+    let mut l: Labels = pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    l.sort();
+    l
+}
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Instrument {
+    fn kind(&self) -> &'static str {
+        match self {
+            Instrument::Counter(_) => "counter",
+            Instrument::Gauge(_) => "gauge",
+            Instrument::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// The process-global instrument registry: `(name, labels)` →
+/// instrument, registered once, then incremented through the returned
+/// `Arc` without touching the registry again.
+pub struct Registry {
+    inner: Mutex<BTreeMap<(String, Labels), Instrument>>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The global registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry {
+        inner: Mutex::new(BTreeMap::new()),
+    })
+}
+
+impl Registry {
+    /// Register (or look up) a counter. Panics if `name`+labels already
+    /// names an instrument of a different kind — a programming error.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let mut map = self.inner.lock().expect("obs registry lock");
+        let key = (name.to_string(), labels_of(labels));
+        match map
+            .entry(key)
+            .or_insert_with(|| Instrument::Counter(Arc::new(Counter::default())))
+        {
+            Instrument::Counter(c) => c.clone(),
+            other => panic!("obs: '{name}' is a {}, not a counter", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let mut map = self.inner.lock().expect("obs registry lock");
+        let key = (name.to_string(), labels_of(labels));
+        match map
+            .entry(key)
+            .or_insert_with(|| Instrument::Gauge(Arc::new(Gauge::default())))
+        {
+            Instrument::Gauge(g) => g.clone(),
+            other => panic!("obs: '{name}' is a {}, not a gauge", other.kind()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let mut map = self.inner.lock().expect("obs registry lock");
+        let key = (name.to_string(), labels_of(labels));
+        match map
+            .entry(key)
+            .or_insert_with(|| Instrument::Histogram(Arc::new(Histogram::default())))
+        {
+            Instrument::Histogram(h) => h.clone(),
+            other => panic!("obs: '{name}' is a {}, not a histogram", other.kind()),
+        }
+    }
+}
+
+/// Shorthands against the global registry.
+pub fn counter(name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+    registry().counter(name, labels)
+}
+
+pub fn gauge(name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+    registry().gauge(name, labels)
+}
+
+pub fn histogram(name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+    registry().histogram(name, labels)
+}
+
+// ---------------------------------------------------------------------------
+// Exposition: JSON snapshot (the `stats` wire op)
+// ---------------------------------------------------------------------------
+
+fn labels_json(labels: &Labels) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in labels {
+        o.set(k.as_str(), v.as_str());
+    }
+    o
+}
+
+/// A point-in-time JSON snapshot of every registered instrument:
+/// an `instruments` array (name, type, labels, value or quantile
+/// summary) plus an `aggregate` object summing counters and gauges
+/// across label sets. Backs the read-only `stats` wire op.
+pub fn snapshot_json() -> Json {
+    let map = registry().inner.lock().expect("obs registry lock");
+    let mut instruments = Vec::new();
+    let mut agg: BTreeMap<String, f64> = BTreeMap::new();
+    for ((name, labels), inst) in map.iter() {
+        let mut o = Json::obj();
+        o.set("name", name.as_str())
+            .set("type", inst.kind())
+            .set("labels", labels_json(labels));
+        match inst {
+            Instrument::Counter(c) => {
+                let v = c.get();
+                o.set("value", v as f64);
+                *agg.entry(name.clone()).or_insert(0.0) += v as f64;
+            }
+            Instrument::Gauge(g) => {
+                let v = g.get();
+                o.set("value", v as f64);
+                *agg.entry(name.clone()).or_insert(0.0) += v as f64;
+            }
+            Instrument::Histogram(h) => {
+                o.set("count", h.count() as f64).set("sum", h.sum() as f64);
+                for (key, q) in [("p50", 0.5), ("p90", 0.9), ("p99", 0.99)] {
+                    if let Some(v) = h.quantile(q) {
+                        o.set(key, v as f64);
+                    }
+                }
+                *agg.entry(format!("{name}_count")).or_insert(0.0) += h.count() as f64;
+            }
+        }
+        instruments.push(o);
+    }
+    let mut aggregate = Json::obj();
+    for (name, v) in &agg {
+        aggregate.set(name.as_str(), *v);
+    }
+    let mut out = Json::obj();
+    out.set("instruments", Json::Arr(instruments))
+        .set("aggregate", aggregate);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Exposition: Prometheus text format (the `--metrics-addr` endpoint)
+// ---------------------------------------------------------------------------
+
+fn prom_labels(labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render every registered instrument in the Prometheus text exposition
+/// format (version 0.0.4): `# TYPE` headers, one sample per line,
+/// histograms as cumulative `_bucket{le=...}` series plus `_sum` and
+/// `_count`.
+pub fn render_prometheus() -> String {
+    let map = registry().inner.lock().expect("obs registry lock");
+    let mut out = String::new();
+    let mut last_name = "";
+    for ((name, labels), inst) in map.iter() {
+        if name != last_name {
+            out.push_str(&format!("# TYPE {name} {}\n", inst.kind()));
+            last_name = name;
+        }
+        match inst {
+            Instrument::Counter(c) => {
+                out.push_str(&format!("{name}{} {}\n", prom_labels(labels, None), c.get()));
+            }
+            Instrument::Gauge(g) => {
+                out.push_str(&format!("{name}{} {}\n", prom_labels(labels, None), g.get()));
+            }
+            Instrument::Histogram(h) => {
+                let buckets = h.buckets();
+                let top = buckets
+                    .iter()
+                    .rposition(|&c| c > 0)
+                    .unwrap_or(0)
+                    .min(HISTO_BUCKETS - 2);
+                let mut cum = 0u64;
+                for (i, &c) in buckets.iter().enumerate().take(top + 1) {
+                    cum += c;
+                    let le = bucket_bound(i).to_string();
+                    out.push_str(&format!(
+                        "{name}_bucket{} {cum}\n",
+                        prom_labels(labels, Some(("le", &le)))
+                    ));
+                }
+                out.push_str(&format!(
+                    "{name}_bucket{} {}\n",
+                    prom_labels(labels, Some(("le", "+Inf"))),
+                    h.count()
+                ));
+                out.push_str(&format!("{name}_sum{} {}\n", prom_labels(labels, None), h.sum()));
+                out.push_str(&format!(
+                    "{name}_count{} {}\n",
+                    prom_labels(labels, None),
+                    h.count()
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    /// The enable gate is process-global and tests run concurrently:
+    /// every test that records (or flips the gate) serializes here so
+    /// `disabled_records_nothing` cannot race a recording test.
+    fn gate_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let _g = gate_lock();
+        let c = counter("test_obs_basics_total", &[]);
+        let before = c.get();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), before + 5);
+        let g = gauge("test_obs_basics_depth", &[]);
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_shared() {
+        let _g = gate_lock();
+        let a = counter("test_obs_shared_total", &[("k", "v")]);
+        let b = counter("test_obs_shared_total", &[("k", "v")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), b.get());
+        assert!(Arc::ptr_eq(&a, &b));
+        // different labels → different instrument
+        let other = counter("test_obs_shared_total", &[("k", "w")]);
+        assert!(!Arc::ptr_eq(&a, &other));
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = gate_lock();
+        let c = counter("test_obs_gate_total", &[]);
+        let h = histogram("test_obs_gate_us", &[]);
+        set_enabled(false);
+        c.inc();
+        h.observe(123);
+        set_enabled(true);
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.count(), 0);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn bucket_layout() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_bound(0), 0);
+        assert_eq!(bucket_bound(3), 7);
+        assert_eq!(bucket_bound(64), u64::MAX);
+        // every value falls inside its bucket's bounds
+        for v in [0u64, 1, 2, 3, 5, 100, 1 << 20, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(v <= bucket_bound(b));
+            if b > 0 {
+                assert!(v > bucket_bound(b - 1));
+            }
+        }
+    }
+
+    /// The tentpole property: over adversarial distributions, the
+    /// histogram's quantile estimate lands within one log₂ bucket of the
+    /// exact order statistic.
+    #[test]
+    fn quantile_within_one_bucket_of_exact() {
+        let _g = gate_lock();
+        check("histo quantile vs exact", 200, |g| {
+            let shape = g.usize(0, 5);
+            let n = g.usize(1, 400);
+            // adversarial shapes: constant, two-point mass at bucket
+            // boundaries, geometric, pseudo-uniform, heavy-tail, all-zero
+            let vals: Vec<u64> = (0..n)
+                .map(|i| match shape {
+                    0 => 17,
+                    1 => {
+                        if i % 2 == 0 {
+                            (1 << 10) - 1 // top of bucket 10
+                        } else {
+                            1 << 10 // bottom of bucket 11
+                        }
+                    }
+                    2 => 1u64 << (i % 30),
+                    3 => (i as u64).wrapping_mul(2654435761) % 10_000,
+                    4 => {
+                        if i % 17 == 0 {
+                            u64::MAX / 2
+                        } else {
+                            i as u64 % 7
+                        }
+                    }
+                    _ => 0,
+                })
+                .collect();
+            let h = Histogram::default();
+            for &v in &vals {
+                h.observe(v);
+            }
+            let mut sorted = vals.clone();
+            sorted.sort_unstable();
+            for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+                let est = h.quantile(q).expect("non-empty");
+                let idx = ((q * n as f64).ceil() as usize).max(1) - 1;
+                let exact = sorted[idx.min(n - 1)];
+                let (be, bx) = (bucket_of(est) as i64, bucket_of(exact) as i64);
+                assert!(
+                    (be - bx).abs() <= 1,
+                    "q={q}: estimate {est} (bucket {be}) vs exact {exact} (bucket {bx})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn histogram_concurrent_increments_lose_nothing() {
+        let _g = gate_lock();
+        // Race-freedom without loom: hammer one histogram + counter from
+        // many threads and check totals conserve exactly.
+        let h = Arc::new(Histogram::default());
+        let c = Arc::new(Counter::default());
+        let threads = 8;
+        let per = 10_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = h.clone();
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        h.observe(t * per + i);
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), threads * per);
+        assert_eq!(h.count(), threads * per);
+        assert_eq!(h.buckets().iter().sum::<u64>(), threads * per);
+        let exact_sum: u64 = (0..threads * per).sum();
+        assert_eq!(h.sum(), exact_sum);
+    }
+
+    #[test]
+    fn prometheus_output_parses_line_by_line() {
+        let _g = gate_lock();
+        let c = counter("test_prom_render_total", &[("session", "s0001")]);
+        c.add(3);
+        gauge("test_prom_render_depth", &[]).set(-2);
+        let h = histogram("test_prom_render_us", &[("shard", "0")]);
+        h.observe(5);
+        h.observe(300);
+        let text = render_prometheus();
+        let mut samples = 0usize;
+        for line in text.lines() {
+            assert!(!line.is_empty(), "no blank lines");
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut parts = rest.split_whitespace();
+                let name = parts.next().expect("metric name");
+                let kind = parts.next().expect("metric kind");
+                assert!(name.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_'));
+                assert!(matches!(kind, "counter" | "gauge" | "histogram"));
+                assert!(parts.next().is_none());
+                continue;
+            }
+            // sample line: name[{labels}] value
+            let (series, value) = line.rsplit_once(' ').expect("space-separated sample");
+            assert!(
+                value == "+Inf" || value.parse::<f64>().is_ok(),
+                "unparsable value '{value}' in '{line}'"
+            );
+            let name_end = series.find('{').unwrap_or(series.len());
+            let name = &series[..name_end];
+            assert!(name.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_'));
+            if name_end < series.len() {
+                let labels = &series[name_end..];
+                assert!(labels.starts_with('{') && labels.ends_with('}'));
+                for pair in labels[1..labels.len() - 1].split(',') {
+                    let (k, v) = pair.split_once('=').expect("k=v label");
+                    assert!(k.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_'));
+                    assert!(v.starts_with('"') && v.ends_with('"'));
+                }
+            }
+            samples += 1;
+        }
+        assert!(samples >= 4, "all registered instruments render");
+        // cumulative bucket discipline for the histogram series
+        let bucket_counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("test_prom_render_us_bucket"))
+            .map(|l| l.rsplit_once(' ').unwrap().1.parse().unwrap())
+            .collect();
+        assert!(bucket_counts.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*bucket_counts.last().unwrap(), 2, "+Inf bucket == count");
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let _g = gate_lock();
+        counter("test_snap_total", &[("session", "s1")]).add(2);
+        counter("test_snap_total", &[("session", "s2")]).add(3);
+        let snap = snapshot_json();
+        let instruments = snap.get("instruments").unwrap().as_arr().unwrap();
+        let mine: Vec<&Json> = instruments
+            .iter()
+            .filter(|i| i.get("name").and_then(|n| n.as_str()) == Some("test_snap_total"))
+            .collect();
+        assert_eq!(mine.len(), 2);
+        for i in &mine {
+            assert_eq!(i.get("type").unwrap().as_str(), Some("counter"));
+            assert!(i.get("labels").unwrap().get("session").is_some());
+        }
+        let agg = snap.get("aggregate").unwrap();
+        assert_eq!(agg.get("test_snap_total").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn quantile_empty_and_single() {
+        let _g = gate_lock();
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), None);
+        h.observe(100);
+        let q = h.quantile(0.5).unwrap();
+        assert_eq!(bucket_of(q), bucket_of(100));
+    }
+}

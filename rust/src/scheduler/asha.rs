@@ -50,6 +50,12 @@ impl Scheduler for Asha {
         self.core.max_resources_used
     }
 
+    fn resource_cap(&self) -> Option<u32> {
+        // Fixed `R` from the start — the flat line PASHA's growing cap
+        // is compared against in the metrics.
+        Some(self.core.levels.level(self.core.levels.top()))
+    }
+
     fn best(&self) -> Option<BestTrial> {
         self.core.best()
     }

@@ -37,6 +37,7 @@ use crate::searcher::Searcher;
 use crate::util::json::Json;
 use crate::TrialId;
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
 
 /// What `ask` hands a polling worker.
 #[derive(Clone, Debug, PartialEq)]
@@ -108,6 +109,23 @@ struct InFlight {
     discarded: bool,
 }
 
+/// Per-session scheduler telemetry ([`crate::obs`]): ask/tell counters
+/// plus gauges refreshed from scheduler state after every mutation —
+/// including `pasha_max_resource_epochs`, the live view of PASHA's
+/// progressive resource cap (grows on ranking instability, flat for
+/// ASHA). Observe-only: never consulted for decisions, never part of
+/// snapshots, so attaching it cannot perturb replay determinism.
+struct SchedObs {
+    asks: Arc<crate::obs::Counter>,
+    tells: Arc<crate::obs::Counter>,
+    stops: Arc<crate::obs::Gauge>,
+    pauses: Arc<crate::obs::Gauge>,
+    promotions: Arc<crate::obs::Gauge>,
+    cap_epochs: Arc<crate::obs::Gauge>,
+    max_used: Arc<crate::obs::Gauge>,
+    in_flight: Arc<crate::obs::Gauge>,
+}
+
 /// Aggregate progress counters mirroring [`crate::executor::EngineStats`]
 /// for the pull-driven path.
 #[derive(Clone, Debug, Default)]
@@ -145,6 +163,8 @@ pub struct AskTell {
     /// that parked a job still mutated the scheduler's frontier and must
     /// replay, or recovery would diverge.
     mutations: u64,
+    /// Telemetry instruments, attached by the service session layer.
+    obs: Option<SchedObs>,
 }
 
 impl AskTell {
@@ -167,6 +187,7 @@ impl AskTell {
             paused: HashSet::new(),
             stats: AskTellStats::default(),
             mutations: 0,
+            obs: None,
         }
     }
 
@@ -175,11 +196,58 @@ impl AskTell {
         self.mutations
     }
 
+    /// Register this adapter's telemetry under `session=<id>` labels and
+    /// publish the initial gauge values. Idempotent per label set (the
+    /// registry hands back the same instruments), so recovery re-attaches
+    /// to the counters the pre-crash incarnation was bumping.
+    pub fn attach_obs(&mut self, session: &str) {
+        let l: &[(&str, &str)] = &[("session", session)];
+        self.obs = Some(SchedObs {
+            asks: crate::obs::counter("pasha_sched_asks_total", l),
+            tells: crate::obs::counter("pasha_sched_tells_total", l),
+            stops: crate::obs::gauge("pasha_sched_stopped_trials", l),
+            pauses: crate::obs::gauge("pasha_sched_paused_trials", l),
+            promotions: crate::obs::gauge("pasha_sched_promotions", l),
+            cap_epochs: crate::obs::gauge("pasha_max_resource_epochs", l),
+            max_used: crate::obs::gauge("pasha_sched_max_resources_used_epochs", l),
+            in_flight: crate::obs::gauge("pasha_sched_inflight_jobs", l),
+        });
+        self.refresh_obs();
+    }
+
+    /// Re-derive every gauge from current scheduler state. Read-only.
+    fn refresh_obs(&self) {
+        let Some(o) = &self.obs else { return };
+        o.stops.set(self.stats.stopped_trials as i64);
+        o.pauses.set(self.stats.paused_trials as i64);
+        let promotions: usize = self
+            .scheduler
+            .trials()
+            .iter()
+            .map(|t| t.top_rung.unwrap_or(0))
+            .sum();
+        o.promotions.set(promotions as i64);
+        if let Some(cap) = self.scheduler.resource_cap() {
+            o.cap_epochs.set(cap as i64);
+        }
+        o.max_used.set(self.scheduler.max_resources_used() as i64);
+        o.in_flight.set(self.in_flight.len() as i64);
+    }
+
     /// Request work on behalf of `worker`. Mirrors the engine's dispatch
     /// phase: pending directives first, then parked (already-emitted)
     /// jobs whose predecessor retired, then the scheduler under the
     /// stopping rules' draw allowance.
     pub fn ask(&mut self, worker: &str) -> TrialAssignment {
+        let assignment = self.ask_inner(worker);
+        if let Some(o) = &self.obs {
+            o.asks.inc();
+            self.refresh_obs();
+        }
+        assignment
+    }
+
+    fn ask_inner(&mut self, worker: &str) -> TrialAssignment {
         if let Some(pos) = self.directives.iter().position(|(w, _)| w.as_str() == worker) {
             let (_, action) = self
                 .directives
@@ -268,6 +336,15 @@ impl AskTell {
     /// Errors (unknown trial, out-of-order epoch) never mutate state, so
     /// a failed tell is a no-op for journal replay too.
     pub fn tell(&mut self, trial: TrialId, epoch: u32, metric: f64) -> Result<TellAck, String> {
+        let ack = self.tell_inner(trial, epoch, metric);
+        if let Some(o) = &self.obs {
+            o.tells.inc();
+            self.refresh_obs();
+        }
+        ack
+    }
+
+    fn tell_inner(&mut self, trial: TrialId, epoch: u32, metric: f64) -> Result<TellAck, String> {
         {
             let fl = match self.in_flight.get_mut(&trial) {
                 Some(fl) => fl,
@@ -344,7 +421,7 @@ impl AskTell {
     /// not re-queued.) A config that reliably kills workers will loop;
     /// that is the operator's cue to `close` the session.
     pub fn fail(&mut self, trial: TrialId) -> Result<(), String> {
-        match self.in_flight.remove(&trial) {
+        let r = match self.in_flight.remove(&trial) {
             None => Err(format!("trial {trial} has no job in flight")),
             Some(fl) => {
                 self.stats.failed_jobs += 1;
@@ -353,7 +430,9 @@ impl AskTell {
                 }
                 Ok(())
             }
-        }
+        };
+        self.refresh_obs();
+        r
     }
 
     /// Re-queue every in-flight job — used after a server restart when

@@ -129,6 +129,10 @@ impl Scheduler for Pasha {
         self.core.max_resources_used
     }
 
+    fn resource_cap(&self) -> Option<u32> {
+        Some(self.current_max_resources())
+    }
+
     fn best(&self) -> Option<BestTrial> {
         self.core.best()
     }

@@ -191,6 +191,10 @@ impl Scheduler for StoppingSh {
         self.core.max_resources_used
     }
 
+    fn resource_cap(&self) -> Option<u32> {
+        Some(self.core.levels.level(self.cap))
+    }
+
     fn best(&self) -> Option<BestTrial> {
         self.core.best()
     }

@@ -193,6 +193,15 @@ pub trait Scheduler: Send {
     /// "Max resources" column).
     fn max_resources_used(&self) -> u32;
 
+    /// The current maximum resource level (epochs) this scheduler will
+    /// allocate to any trial — PASHA's progressively growing cap, a
+    /// constant `R` for fixed-budget schedulers, `None` when the concept
+    /// does not apply. Telemetry only (`pasha_max_resource_epochs`):
+    /// never consulted for decisions.
+    fn resource_cap(&self) -> Option<u32> {
+        None
+    }
+
     /// Best configuration identified so far (the paper selects this for
     /// the phase-2 retraining).
     fn best(&self) -> Option<BestTrial>;

@@ -171,6 +171,17 @@ impl Client {
         Ok(arr.unwrap_or_default())
     }
 
+    /// Fetch the server's read-only metrics snapshot (the `stats` wire
+    /// op, [`crate::obs::snapshot_json`] shape): an `instruments` array
+    /// plus an `aggregate` object. Needs no session and mutates nothing.
+    pub fn stats(&mut self) -> Result<Json, ServiceError> {
+        let req = self.cmd("stats");
+        let resp = self.call(&req)?;
+        resp.get("stats")
+            .cloned()
+            .ok_or_else(|| ServiceError::Io("stats response missing body".into()))
+    }
+
     pub fn expire(&mut self, session: &str) -> Result<usize, ServiceError> {
         let req = self.session_cmd("expire", session);
         let resp = self.call(&req)?;

@@ -47,6 +47,7 @@
 //!   response and exits once all connections are flushed (bounded by a
 //!   5s deadline for clients that stopped reading).
 
+use crate::obs::{self, trace};
 use crate::service::registry::{Registry, ServiceError};
 use crate::service::server::{apply_worker_default, handle_request, next_conn_worker_id};
 use crate::util::json::{parse, Json};
@@ -130,6 +131,67 @@ impl Mailbox {
     }
 }
 
+/// Serve-loop telemetry ([`crate::obs`]), labeled by the listen address
+/// so concurrent servers in one process (tests, multi-port deployments)
+/// keep separate series. All recording is observe-only: journal bytes,
+/// RNG streams, and scheduling decisions are untouched whether metrics
+/// are on, off, or absent.
+struct EvObs {
+    addr: String,
+    /// `pasha_net_accepts_total` — connections accepted.
+    accepts: Arc<obs::Counter>,
+    /// `pasha_net_conns_closed_total` — connections retired for any
+    /// reason (EOF, error, write-cap kill, drain).
+    closed: Arc<obs::Counter>,
+    /// `pasha_net_bytes_read_total` / `pasha_net_bytes_written_total`.
+    bytes_in: Arc<obs::Counter>,
+    bytes_out: Arc<obs::Counter>,
+    /// `pasha_net_requests_total` — request lines parsed (including
+    /// ones answered inline with a parse error).
+    requests: Arc<obs::Counter>,
+    /// `pasha_net_backpressure_pauses_total` — reads paused because a
+    /// connection hit the in-flight or queued-bytes cap.
+    pauses: Arc<obs::Counter>,
+    /// `pasha_net_inflight_ops` — ops routed to shards, not yet
+    /// answered (mirrors `Shared::in_flight`; drains to 0 at shutdown).
+    inflight: Arc<obs::Gauge>,
+    /// `pasha_io_poll_wait_us` — time each io thread spent blocked in
+    /// the poller per tick.
+    poll_wait_us: Arc<obs::Histogram>,
+    /// `pasha_io_dispatch_us` — time spent servicing readiness events
+    /// per non-idle tick.
+    dispatch_us: Arc<obs::Histogram>,
+    /// `pasha_shard_queue_depth` per shard — ops queued to the shard
+    /// channel and not yet picked up.
+    queue_depth: Vec<Arc<obs::Gauge>>,
+}
+
+impl EvObs {
+    fn new(addr: String, n_shards: usize) -> EvObs {
+        let l: &[(&str, &str)] = &[("addr", &addr)];
+        EvObs {
+            accepts: obs::counter("pasha_net_accepts_total", l),
+            closed: obs::counter("pasha_net_conns_closed_total", l),
+            bytes_in: obs::counter("pasha_net_bytes_read_total", l),
+            bytes_out: obs::counter("pasha_net_bytes_written_total", l),
+            requests: obs::counter("pasha_net_requests_total", l),
+            pauses: obs::counter("pasha_net_backpressure_pauses_total", l),
+            inflight: obs::gauge("pasha_net_inflight_ops", l),
+            poll_wait_us: obs::histogram("pasha_io_poll_wait_us", l),
+            dispatch_us: obs::histogram("pasha_io_dispatch_us", l),
+            queue_depth: (0..n_shards)
+                .map(|s| {
+                    obs::gauge(
+                        "pasha_shard_queue_depth",
+                        &[("addr", &addr), ("shard", &s.to_string())],
+                    )
+                })
+                .collect(),
+            addr,
+        }
+    }
+}
+
 /// State shared by all I/O threads and shard workers.
 struct Shared {
     registry: Arc<Registry>,
@@ -144,6 +206,7 @@ struct Shared {
     parse_done: AtomicUsize,
     n_io: usize,
     mailboxes: Vec<Arc<Mailbox>>,
+    obs: EvObs,
 }
 
 /// One client connection, owned by exactly one I/O thread.
@@ -210,13 +273,20 @@ impl Conn {
 
 /// Serve until shutdown. Entered from [`crate::service::Server::run`];
 /// turns group commit on for the registry's journals while serving.
+/// `metrics_listener` (from `serve --metrics-addr`) is a plain-HTTP
+/// Prometheus exposition endpoint multiplexed onto io thread 0's
+/// poller — no extra thread, no dependency.
 pub(crate) fn run(
     listener: TcpListener,
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
     io_threads: usize,
+    metrics_listener: Option<TcpListener>,
 ) -> io::Result<()> {
     listener.set_nonblocking(true)?;
+    if let Some(m) = &metrics_listener {
+        m.set_nonblocking(true)?;
+    }
     let n_io = io_threads.max(1);
     registry
         .set_group_commit(true)
@@ -247,6 +317,11 @@ pub(crate) fn run(
         pollers.push(poller);
     }
 
+    let n_shards = registry.n_shards();
+    let addr = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "unknown".into());
     let shared = Shared {
         registry: registry.clone(),
         shutdown,
@@ -255,8 +330,8 @@ pub(crate) fn run(
         parse_done: AtomicUsize::new(0),
         n_io,
         mailboxes,
+        obs: EvObs::new(addr, n_shards),
     };
-    let n_shards = registry.n_shards();
     let mut txs: Vec<SyncSender<Op>> = Vec::with_capacity(n_shards);
     let mut rxs: Vec<Receiver<Op>> = Vec::with_capacity(n_shards);
     for _ in 0..n_shards {
@@ -267,17 +342,21 @@ pub(crate) fn run(
 
     let result = std::thread::scope(|scope| {
         let shared_ref = &shared;
-        for rx in rxs {
-            scope.spawn(move || shard_worker(shared_ref, rx));
+        for (s, rx) in rxs.into_iter().enumerate() {
+            scope.spawn(move || shard_worker(shared_ref, s, rx));
         }
         let mut io_handles = Vec::with_capacity(n_io);
         let mut wake_iter = wake_rxs.into_iter();
+        let mut metrics = metrics_listener;
         for (i, poller) in pollers.into_iter().enumerate() {
             let wake_rx = wake_iter.next().expect("one wake pipe per io thread");
             let txs_own = txs.clone();
             let listener_ref = if i == 0 { Some(&listener) } else { None };
-            io_handles
-                .push(scope.spawn(move || io_loop(i, shared_ref, txs_own, listener_ref, wake_rx, poller)));
+            // the metrics endpoint rides on io thread 0's poller
+            let metrics_own = if i == 0 { metrics.take() } else { None };
+            io_handles.push(scope.spawn(move || {
+                io_loop(i, shared_ref, txs_own, listener_ref, metrics_own, wake_rx, poller)
+            }));
         }
         // Once every I/O thread (each holding a clone) exits, the shard
         // channels disconnect and the workers return.
@@ -305,22 +384,35 @@ pub(crate) fn run(
     if let Err(e) = registry.set_group_commit(false) {
         crate::log_warn!("serve: final journal commit failed: {e}");
     }
+    trace::flush();
     result
 }
 
 /// A shard worker: the single owner of every session routed to it.
 /// Drains a group of ops, applies them, commits each touched session's
 /// journal once, then releases the group's responses.
-fn shard_worker(shared: &Shared, rx: Receiver<Op>) {
+fn shard_worker(shared: &Shared, shard: usize, rx: Receiver<Op>) {
+    let shard_label = shard.to_string();
+    let l: &[(&str, &str)] = &[("addr", &shared.obs.addr), ("shard", &shard_label)];
+    let ops_total = obs::counter("pasha_shard_ops_total", l);
+    let groups_total = obs::counter("pasha_shard_groups_total", l);
+    let group_ops = obs::histogram("pasha_shard_group_ops", l);
+    let group_us = obs::histogram("pasha_shard_group_us", l);
+    let depth = &shared.obs.queue_depth[shard];
     loop {
         let first = match rx.recv() {
             Ok(op) => op,
             Err(_) => return, // all I/O threads gone: server exiting
         };
+        depth.add(-1);
+        let t0 = Instant::now();
         let mut group = vec![first];
         while group.len() < SHARD_GROUP_MAX {
             match rx.try_recv() {
-                Ok(op) => group.push(op),
+                Ok(op) => {
+                    depth.add(-1);
+                    group.push(op);
+                }
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
@@ -362,6 +454,13 @@ fn shard_worker(shared: &Shared, rx: Receiver<Op>) {
             let mut line = resp.to_string_compact().into_bytes();
             line.push(b'\n');
             shared.mailboxes[io].push(IoMsg::Done { conn, seq, line });
+        }
+        ops_total.add(group.len() as u64);
+        groups_total.inc();
+        group_ops.observe(group.len() as u64);
+        group_us.observe_us(t0.elapsed());
+        if trace::enabled() {
+            trace::span("shard", "commit-group", shard as u64, t0, Instant::now());
         }
     }
 }
@@ -413,6 +512,7 @@ fn io_loop(
     shared: &Shared,
     shard_txs: Vec<SyncSender<Op>>,
     listener: Option<&TcpListener>,
+    metrics: Option<TcpListener>,
     wake_rx: UnixStream,
     mut poller: Poller,
 ) -> io::Result<()> {
@@ -423,9 +523,27 @@ fn io_loop(
     let mut next_accept = 0usize;
     let mut drain_deadline: Option<Instant> = None;
     let mut parse_flushed = false;
+    // Prometheus scrape connections (separate id space entry in the
+    // same poller; tokens come from the shared conn-id counter so they
+    // can never collide with request connections).
+    let mut mconns: HashMap<u64, MetricsConn> = HashMap::new();
+    let metrics_tok = match &metrics {
+        Some(m) => {
+            let tok = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+            poller.register(m.as_raw_fd(), tok as usize, true, false)?;
+            Some(tok)
+        }
+        None => None,
+    };
 
     loop {
+        let t_poll = Instant::now();
         poller.poll(&mut events, Some(POLL_TIMEOUT))?;
+        let t_work = Instant::now();
+        shared
+            .obs
+            .poll_wait_us
+            .observe_us(t_work.duration_since(t_poll));
         let draining =
             shared.draining.load(Ordering::SeqCst) || shared.shutdown.load(Ordering::SeqCst);
         if draining {
@@ -445,16 +563,38 @@ fn io_loop(
                 TOKEN_WAKE => drain_wake_pipe(&wake_rx),
                 tok => {
                     let id = tok as u64;
+                    if metrics_tok == Some(id) {
+                        if let Some(m) = &metrics {
+                            accept_metrics(m, &poller, &mut mconns);
+                        }
+                        continue;
+                    }
+                    if let Some(mc) = mconns.get_mut(&id) {
+                        if !metrics_conn_event(mc, ev) {
+                            let fd = mc.stream.as_raw_fd();
+                            let _ = poller.deregister(fd);
+                            mconns.remove(&id);
+                        } else {
+                            let want_write = mc.out_pos < mc.out.len();
+                            let _ = poller.reregister(
+                                mc.stream.as_raw_fd(),
+                                id as usize,
+                                !want_write,
+                                want_write,
+                            );
+                        }
+                        continue;
+                    }
                     let Some(c) = conns.get_mut(&id) else { continue };
                     let mut dead = false;
                     if ev.readable && !draining && !c.read_paused && !c.read_closed {
-                        if do_read(c) {
+                        if do_read(c, &shared.obs) {
                             parse_lines(c, id, idx, shared, &shard_txs, &mut rr, false);
                         } else {
                             dead = true;
                         }
                     }
-                    if !dead && ev.writable && !do_write(c) {
+                    if !dead && ev.writable && !do_write(c, &shared.obs) {
                         dead = true;
                     }
                     if dead {
@@ -476,6 +616,7 @@ fn io_loop(
                     // Decrement first: ops for already-dropped conns
                     // must still drain the global gauge.
                     shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    shared.obs.inflight.add(-1);
                     if let Some(c) = conns.get_mut(&conn) {
                         c.in_flight -= 1;
                         c.pending_bytes += line.len();
@@ -494,7 +635,7 @@ fn io_loop(
             }
             let c = conns.get_mut(&id).expect("conn listed");
             release_ready(c);
-            if c.out_pos < c.out.len() && !do_write(c) {
+            if c.out_pos < c.out.len() && !do_write(c, &shared.obs) {
                 to_drop.push(id);
                 continue;
             }
@@ -522,6 +663,13 @@ fn io_loop(
         for id in to_drop {
             if let Some(c) = conns.remove(&id) {
                 let _ = poller.deregister(c.stream.as_raw_fd());
+                shared.obs.closed.inc();
+            }
+        }
+        if !events.is_empty() {
+            shared.obs.dispatch_us.observe_us(t_work.elapsed());
+            if trace::enabled() {
+                trace::span("eventloop", "tick", idx as u64, t_work, Instant::now());
             }
         }
 
@@ -555,7 +703,7 @@ fn io_loop(
                         c.pending_bytes += line.len();
                         c.pending.insert(seq, line);
                         release_ready(c);
-                        let _ = do_write(c);
+                        let _ = do_write(c, &shared.obs);
                     }
                 }
             }
@@ -579,6 +727,7 @@ fn accept_all(
     loop {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                shared.obs.accepts.inc();
                 let target = *next_accept % shared.n_io;
                 *next_accept += 1;
                 if target == idx {
@@ -627,7 +776,7 @@ fn drain_wake_pipe(wake_rx: &UnixStream) {
 
 /// Read until the socket drains. Returns false when the connection is
 /// unusable (I/O error, or a single line exceeding [`MAX_LINE_BYTES`]).
-fn do_read(c: &mut Conn) -> bool {
+fn do_read(c: &mut Conn, obs: &EvObs) -> bool {
     let mut buf = [0u8; 16 * 1024];
     loop {
         match c.stream.read(&mut buf) {
@@ -636,6 +785,7 @@ fn do_read(c: &mut Conn) -> bool {
                 return true; // EOF: buffered lines still get answered
             }
             Ok(n) => {
+                obs.bytes_in.add(n as u64);
                 c.rbuf.extend_from_slice(&buf[..n]);
                 if c.rbuf.len() > MAX_LINE_BYTES && !c.rbuf.contains(&b'\n') {
                     crate::log_warn!("serve: dropping connection: unterminated request line");
@@ -654,11 +804,14 @@ fn do_read(c: &mut Conn) -> bool {
 
 /// Flush the write queue as far as the socket allows. Returns false on
 /// an I/O error.
-fn do_write(c: &mut Conn) -> bool {
+fn do_write(c: &mut Conn, obs: &EvObs) -> bool {
     while c.out_pos < c.out.len() {
         match c.stream.write(&c.out[c.out_pos..]) {
             Ok(0) => return false,
-            Ok(n) => c.out_pos += n,
+            Ok(n) => {
+                obs.bytes_out.add(n as u64);
+                c.out_pos += n;
+            }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(_) => return false,
@@ -703,6 +856,9 @@ fn parse_lines(
         if !force
             && (c.in_flight >= MAX_INFLIGHT_PER_CONN || c.queued_bytes() >= SOFT_WRITE_CAP)
         {
+            if !c.read_paused {
+                shared.obs.pauses.inc();
+            }
             c.read_paused = true;
             break;
         }
@@ -717,6 +873,7 @@ fn parse_lines(
         }
         let seq = c.next_seq;
         c.next_seq += 1;
+        shared.obs.requests.inc();
         match parse(trimmed) {
             Ok(mut req) => {
                 if req.get("cmd").and_then(|v| v.as_str()) == Some("shutdown") {
@@ -735,12 +892,16 @@ fn parse_lines(
                 let shard = route_shard(&req, &shared.registry, rr);
                 c.in_flight += 1;
                 shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                shared.obs.inflight.add(1);
+                shared.obs.queue_depth[shard].add(1);
                 // A full shard queue blocks this I/O thread briefly;
                 // the worker is always draining, so this cannot wedge.
                 if shard_txs[shard].send(Op { io: idx, conn: id, seq, req }).is_err() {
                     // Shard gone: the server is tearing down.
                     c.in_flight -= 1;
                     shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    shared.obs.inflight.add(-1);
+                    shared.obs.queue_depth[shard].add(-1);
                     let mut r = Json::obj();
                     r.set("ok", false).set("error", "server shutting down");
                     queue_inline(c, seq, &r);
@@ -780,6 +941,105 @@ fn sync_interest(poller: &Poller, id: u64, c: &mut Conn, draining: bool) {
         c.want_read = want_read;
         c.want_write = want_write;
     }
+}
+
+/// One Prometheus scrape connection ([`run`]'s `metrics_listener`),
+/// owned by io thread 0. Deliberately minimal HTTP: read the request
+/// head, answer one `text/plain; version=0.0.4` exposition,
+/// `Connection: close`. No keep-alive, no routing — every path scrapes.
+struct MetricsConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    out: Vec<u8>,
+    out_pos: usize,
+}
+
+fn accept_metrics(
+    listener: &TcpListener,
+    poller: &Poller,
+    mconns: &mut HashMap<u64, MetricsConn>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let id = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+                if poller
+                    .register(stream.as_raw_fd(), id as usize, true, false)
+                    .is_ok()
+                {
+                    mconns.insert(
+                        id,
+                        MetricsConn {
+                            stream,
+                            rbuf: Vec::new(),
+                            out: Vec::new(),
+                            out_pos: 0,
+                        },
+                    );
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Advance one scrape connection. Returns false when it should close:
+/// response fully flushed, EOF before a complete request head, an I/O
+/// error, or an oversized head.
+fn metrics_conn_event(mc: &mut MetricsConn, ev: Event) -> bool {
+    if ev.readable && mc.out.is_empty() {
+        let mut buf = [0u8; 4096];
+        loop {
+            match mc.stream.read(&mut buf) {
+                // EOF before the head completed: abandoned scrape
+                Ok(0) => return false,
+                Ok(n) => {
+                    mc.rbuf.extend_from_slice(&buf[..n]);
+                    if mc.rbuf.len() > 16 * 1024 {
+                        return false;
+                    }
+                    if n < buf.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        let head_done = mc.rbuf.windows(4).any(|w| w == &b"\r\n\r\n"[..])
+            || mc.rbuf.windows(2).any(|w| w == &b"\n\n"[..]);
+        if head_done {
+            let body = obs::render_prometheus();
+            mc.out = format!(
+                "HTTP/1.1 200 OK\r\n\
+                 Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+                 Content-Length: {}\r\n\
+                 Connection: close\r\n\r\n{}",
+                body.len(),
+                body
+            )
+            .into_bytes();
+        }
+    }
+    while mc.out_pos < mc.out.len() {
+        match mc.stream.write(&mc.out[mc.out_pos..]) {
+            Ok(0) => return false,
+            Ok(n) => mc.out_pos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    // Still waiting on the request head; a fully flushed response
+    // (out non-empty, all written) falls through to close.
+    mc.out.is_empty()
 }
 
 #[cfg(test)]

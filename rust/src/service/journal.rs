@@ -33,6 +33,25 @@ use crate::util::jsonl;
 use std::fs::{File, OpenOptions};
 use std::io::{self, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Session-labeled journal instruments ([`Journal::set_obs`]). Purely
+/// observational: recording happens strictly *after* the journaled bytes
+/// are formed, so the on-disk format is byte-identical with metrics on,
+/// off, or absent.
+struct JournalObs {
+    /// `pasha_journal_events_total` — events appended (buffered or written).
+    events: Arc<crate::obs::Counter>,
+    /// `pasha_journal_bytes_total` — bytes appended, newline included.
+    bytes: Arc<crate::obs::Counter>,
+    /// `pasha_journal_fsyncs_total` — `sync_all` calls actually issued.
+    fsyncs: Arc<crate::obs::Counter>,
+    /// `pasha_journal_sync_us` — latency of each `sync_all`, µs.
+    sync_us: Arc<crate::obs::Histogram>,
+    /// `pasha_journal_commit_group_events` — events covered per commit.
+    group_size: Arc<crate::obs::Histogram>,
+}
 
 /// Append handle for one session's journal file.
 pub struct Journal {
@@ -43,6 +62,9 @@ pub struct Journal {
     buf: Vec<u8>,
     /// Bytes appended since the last successful `sync_all`.
     dirty: bool,
+    /// Events appended since the last commit (the commit-group size).
+    group_len: u64,
+    obs: Option<JournalObs>,
 }
 
 impl Journal {
@@ -64,6 +86,8 @@ impl Journal {
             group: false,
             buf: Vec::new(),
             dirty: false,
+            group_len: 0,
+            obs: None,
         })
     }
 
@@ -82,6 +106,8 @@ impl Journal {
             // compaction rewrite) may not have been fsynced yet, so the
             // next commit must not skip its sync
             dirty: true,
+            group_len: 0,
+            obs: None,
         };
         j.file.seek(SeekFrom::End(0))?;
         Ok(j)
@@ -96,12 +122,31 @@ impl Journal {
         let mut line = event.to_string_compact();
         line.push('\n');
         self.dirty = true;
+        self.group_len += 1;
+        if let Some(o) = &self.obs {
+            o.events.inc();
+            o.bytes.add(line.len() as u64);
+        }
         if self.group {
             self.buf.extend_from_slice(line.as_bytes());
             Ok(())
         } else {
             self.file.write_all(line.as_bytes())
         }
+    }
+
+    /// Register this journal's session-labeled instruments. Idempotent
+    /// per session id (re-attaching resolves to the same registry
+    /// entries, so counters survive handle replacement on compaction).
+    pub fn set_obs(&mut self, session: &str) {
+        let l: &[(&str, &str)] = &[("session", session)];
+        self.obs = Some(JournalObs {
+            events: crate::obs::counter("pasha_journal_events_total", l),
+            bytes: crate::obs::counter("pasha_journal_bytes_total", l),
+            fsyncs: crate::obs::counter("pasha_journal_fsyncs_total", l),
+            sync_us: crate::obs::histogram("pasha_journal_sync_us", l),
+            group_size: crate::obs::histogram("pasha_journal_commit_group_events", l),
+        });
     }
 
     /// Switch group-commit buffering on or off. Turning it off commits
@@ -138,9 +183,20 @@ impl Journal {
     pub fn commit(&mut self) -> io::Result<()> {
         self.flush()?;
         if self.dirty {
+            let t0 = self.obs.is_some().then(Instant::now);
             self.file.sync_all()?;
             self.dirty = false;
+            if let Some(o) = &self.obs {
+                o.fsyncs.inc();
+                if let Some(t0) = t0 {
+                    o.sync_us.observe_us(t0.elapsed());
+                }
+                if self.group_len > 0 {
+                    o.group_size.observe(self.group_len);
+                }
+            }
         }
+        self.group_len = 0;
         Ok(())
     }
 

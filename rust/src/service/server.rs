@@ -22,6 +22,7 @@
 //! {"cmd":"expire","session":"s0000"}                 -> {"ok":true,"expired":2}
 //! {"cmd":"status","session":"s0000"}                 -> {"ok":true,"status":{...}}
 //! {"cmd":"sessions"}                                 -> {"ok":true,"sessions":[...]}
+//! {"cmd":"stats"}                                    -> {"ok":true,"stats":{...}}
 //! {"cmd":"close","session":"s0000"}                  -> {"ok":true}
 //! {"cmd":"batch","ops":[{...},{...}]}                -> {"ok":true,"results":[...]}
 //! {"cmd":"shutdown"}                                 -> {"ok":true,"bye":true}
@@ -196,6 +197,12 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
         "sessions" => {
             resp.set("sessions", registry.statuses());
         }
+        // Read-only snapshot of the process metrics registry
+        // ([`crate::obs`]). Needs no session, mutates nothing, and is
+        // safe to poll from monitoring at any frequency.
+        "stats" => {
+            resp.set("stats", crate::obs::snapshot_json());
+        }
         "close" => {
             registry.close(str_field(req, "session")?)?;
         }
@@ -239,6 +246,7 @@ pub struct Server {
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
     io_threads: usize,
+    metrics: Option<TcpListener>,
 }
 
 impl Server {
@@ -251,6 +259,7 @@ impl Server {
             registry,
             shutdown: Arc::new(AtomicBool::new(false)),
             io_threads: DEFAULT_IO_THREADS,
+            metrics: None,
         })
     }
 
@@ -258,6 +267,20 @@ impl Server {
     pub fn io_threads(mut self, n: usize) -> Server {
         self.io_threads = n.max(1);
         self
+    }
+
+    /// Also bind `addr` as a plain-HTTP Prometheus exposition endpoint
+    /// (`serve --metrics-addr`). Served off I/O thread 0's readiness
+    /// poller — no extra thread. Event-driven path only; the
+    /// thread-per-connection fallback ignores it.
+    pub fn metrics_addr(mut self, addr: &str) -> io::Result<Server> {
+        self.metrics = Some(TcpListener::bind(addr)?);
+        Ok(self)
+    }
+
+    /// Local address of the metrics endpoint, if one was bound.
+    pub fn metrics_local_addr(&self) -> Option<SocketAddr> {
+        self.metrics.as_ref().and_then(|m| m.local_addr().ok())
     }
 
     pub fn local_addr(&self) -> io::Result<SocketAddr> {
@@ -282,6 +305,7 @@ impl Server {
             self.registry,
             self.shutdown,
             self.io_threads,
+            self.metrics,
         )
     }
 

@@ -27,6 +27,7 @@ use crate::store::{self, StoreSpec};
 use crate::util::json::Json;
 use crate::TrialId;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Snapshot/compaction policy for a durable session.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -121,6 +122,11 @@ pub struct Session {
     /// A store-ingestion failure is recorded rather than failing the
     /// acknowledged `Done` — the store is an extract, never authoritative.
     store_error: Option<String>,
+    /// `pasha_sched_asks_journaled_total` — asks that produced a journal
+    /// event (the mutation-count rule), including replayed ones. The
+    /// conservation oracle compares this against the journal's literal
+    /// `ask` event count.
+    asks_journaled: Option<Arc<crate::obs::Counter>>,
 }
 
 impl Session {
@@ -158,7 +164,7 @@ impl Session {
                 Some(j)
             }
         };
-        Ok(Session {
+        let mut session = Session {
             id: id.to_string(),
             spec,
             core,
@@ -173,7 +179,27 @@ impl Session {
             group_commit: false,
             ingested: false,
             store_error: None,
-        })
+            asks_journaled: None,
+        };
+        session.attach_obs();
+        Ok(session)
+    }
+
+    /// Register this session's observability instruments (scheduler
+    /// gauges/counters on the ask/tell core, journal fsync/byte counters)
+    /// under a `session=<id>` label. Registration is idempotent per
+    /// label set, so recovery and compaction re-attach to the same
+    /// instruments. Recording is inert for determinism: nothing here
+    /// feeds back into decisions or journal bytes.
+    fn attach_obs(&mut self) {
+        self.core.attach_obs(&self.id);
+        self.asks_journaled = Some(crate::obs::counter(
+            "pasha_sched_asks_journaled_total",
+            &[("session", &self.id)],
+        ));
+        if let Some(j) = self.journal.as_mut() {
+            j.set_obs(&self.id);
+        }
     }
 
     /// Rebuild a session from its journal: restore the newest usable
@@ -282,7 +308,11 @@ impl Session {
             group_commit: false,
             ingested: false,
             store_error: None,
+            asks_journaled: None,
         };
+        // before replay: replayed events re-increment the same counters a
+        // live run would, so post-recovery metrics match the journal
+        session.attach_obs();
         let mut replayed = 0usize;
         let mut skipped = 0usize;
         for (i, ev) in tail.iter().enumerate() {
@@ -297,10 +327,10 @@ impl Session {
             replayed += 1;
         }
         if attach {
-            session.journal = Some(
-                Journal::open_append_at(path, read.valid_len)
-                    .map_err(|e| ServiceError::Io(e.to_string()))?,
-            );
+            let mut j = Journal::open_append_at(path, read.valid_len)
+                .map_err(|e| ServiceError::Io(e.to_string()))?;
+            j.set_obs(&session.id);
+            session.journal = Some(j);
         }
         // replayed events are already on disk; the counter tracks only
         // what this process appends from here on
@@ -360,6 +390,9 @@ impl Session {
                     .ok_or("ask event missing worker")?;
                 let recorded = ev.get("resp").ok_or("ask event missing resp")?;
                 let replayed = assignment_json(&self.core.ask(worker));
+                if let Some(c) = &self.asks_journaled {
+                    c.inc();
+                }
                 if replayed != *recorded {
                     return Err(format!(
                         "replay divergence: journal acknowledged {} but replay produced {}",
@@ -552,6 +585,7 @@ impl Session {
         if self.group_commit {
             fresh.set_group_commit(true).map_err(io_err)?;
         }
+        fresh.set_obs(&self.id);
         self.journal = Some(fresh);
         self.base = new_base;
         Ok(())
@@ -624,6 +658,9 @@ impl Session {
         let assignment = self.core.ask(worker);
         if assignment.is_mutation() || self.core.mutation_count() != before {
             self.append(&ev_ask(worker, assignment_json(&assignment)))?;
+            if let Some(c) = &self.asks_journaled {
+                c.inc();
+            }
             self.maybe_snapshot();
         }
         if matches!(assignment, TrialAssignment::Done) {

@@ -201,6 +201,8 @@ impl TrialStore {
         for r in records {
             jsonl::append_line(&self.path, &r.to_json())?;
         }
+        crate::obs::counter("pasha_store_records_appended_total", &[])
+            .add(records.len() as u64);
         Ok(())
     }
 
@@ -209,6 +211,7 @@ impl TrialStore {
     /// unparseable mid-file, is corruption ([`io::ErrorKind::InvalidData`]).
     pub fn read_all(&self) -> io::Result<Vec<TrialRecord>> {
         let read = jsonl::read_jsonl(&self.path)?;
+        crate::obs::counter("pasha_store_reads_total", &[]).inc();
         read.records
             .iter()
             .map(|j| {
@@ -261,6 +264,7 @@ impl TrialStore {
         };
         let lines: Vec<Json> = kept.iter().map(|r| r.to_json()).collect();
         jsonl::rewrite_atomic(&self.path, &lines)?;
+        crate::obs::counter("pasha_store_gc_dropped_total", &[]).add(report.dropped as u64);
         Ok(report)
     }
 }

@@ -22,6 +22,13 @@
 //! * **Batched-wire equivalence** — the same op sequence issued in
 //!   `batch` frames and singly must leave byte-identical journals and
 //!   the same incumbent.
+//! * **Observability conservation** — stress a multi-worker session,
+//!   scrape the `stats` wire op and the Prometheus endpoint against the
+//!   live server, and require the counters to conserve against the
+//!   journal on disk (acked asks == journaled ask events, fsyncs ≤
+//!   events + 1, in-flight drains to 0 at shutdown).
+//! * **Metrics inertness** — identical sessions with the metrics gate
+//!   on and off must leave byte-identical journals.
 
 use pasha::benchmarks::Benchmark;
 use pasha::scheduler::asktell::{assignment_json, config_from_json, TellAck, TrialAssignment};
@@ -894,6 +901,180 @@ mod eventloop_e2e {
             "auto ids use the conn- prefix: {workers:?}"
         );
         assert_ne!(workers[0], workers[1], "per-connection ids are unique");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Observability E2E: the `stats` wire op and Prometheus endpoint
+/// against a live stressed server, conservation invariants between the
+/// metrics registry and the journal on disk, and proof that the metrics
+/// gate never changes journal bytes. Both tests touch the process-global
+/// metrics gate, so they serialize on one lock.
+#[cfg(unix)]
+mod obs_e2e {
+    use super::*;
+    use pasha::util::json::Json;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::{Mutex, MutexGuard};
+
+    fn obs_gate() -> MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The `value` of the instrument `name` with `labels[key] == value`
+    /// in a `stats` snapshot, if present.
+    fn inst_value(snap: &Json, name: &str, key: &str, label: &str) -> Option<f64> {
+        snap.get("instruments")?
+            .as_arr()?
+            .iter()
+            .find(|i| {
+                i.get("name").and_then(|n| n.as_str()) == Some(name)
+                    && i.get("labels")
+                        .and_then(|l| l.get(key))
+                        .and_then(|v| v.as_str())
+                        == Some(label)
+            })?
+            .get("value")?
+            .as_f64()
+    }
+
+    #[test]
+    fn stats_and_prometheus_conserve_against_journal_under_stress() {
+        let _gate = obs_gate();
+        pasha::obs::set_enabled(true);
+        let dir = tmp_dir("obs-conserve");
+        let registry = Arc::new(Registry::with_journal_dir(dir.clone()).unwrap());
+        // Session-labeled instruments are process-global and every
+        // fresh registry numbers sessions from s0000, so parallel tests
+        // in this binary would share our counters. Burn ids so the
+        // measured session's labels are unique process-wide.
+        for _ in 0..40 {
+            registry.create(spec_for("asha", SearcherSpec::Random, 1)).unwrap();
+        }
+        let server = Server::bind("127.0.0.1:0", registry)
+            .unwrap()
+            .metrics_addr("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let maddr = server.metrics_local_addr().unwrap();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let spec = spec_for("pasha", SearcherSpec::Random, 32);
+        let bench = spec.bench.build().unwrap();
+        let mut control = Client::connect(&addr).unwrap();
+        let sid = control.create(&spec).unwrap();
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let addr = addr.as_str();
+                let sid = sid.as_str();
+                let bench = &bench;
+                let bench_seed = spec.bench_seed;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    run_worker(
+                        &mut client,
+                        sid,
+                        &format!("w{w}"),
+                        bench.as_ref(),
+                        bench_seed,
+                        Duration::from_millis(1),
+                    )
+                    .unwrap()
+                });
+            }
+        });
+
+        // Prometheus scrape over plain HTTP, against the live server.
+        let mut msock = TcpStream::connect(maddr).unwrap();
+        msock
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: pasha\r\n\r\n")
+            .unwrap();
+        let mut scrape = String::new();
+        msock.read_to_string(&mut scrape).unwrap(); // Connection: close
+        assert!(scrape.starts_with("HTTP/1.1 200 OK"), "scrape status: {scrape:.60}");
+        for needle in [
+            "# TYPE pasha_net_accepts_total counter",
+            "pasha_net_requests_total",
+            "pasha_journal_events_total",
+            "_bucket{", // at least one histogram series rendered
+        ] {
+            assert!(scrape.contains(needle), "scrape missing {needle:?}");
+        }
+        assert!(
+            scrape.contains(&format!("addr=\"{addr}\"")),
+            "serve metrics carry the listen-address label"
+        );
+
+        // `stats` wire op: the snapshot the server reports about itself.
+        let snap = control.stats().unwrap();
+        let journaled_asks = inst_value(&snap, "pasha_sched_asks_journaled_total", "session", &sid)
+            .expect("per-session journaled-ask counter in snapshot");
+        let asks_total = inst_value(&snap, "pasha_sched_asks_total", "session", &sid)
+            .expect("per-session ask counter in snapshot");
+        let cap_epochs = inst_value(&snap, "pasha_max_resource_epochs", "session", &sid)
+            .expect("PASHA resource-cap gauge in snapshot");
+        assert!(asks_total >= journaled_asks, "Wait/Done asks never journal");
+        assert!(cap_epochs >= 1.0, "progressive cap engaged: {cap_epochs}");
+        // The only op in flight while the snapshot is taken is the
+        // `stats` request itself: the workers have read every response.
+        assert_eq!(
+            inst_value(&snap, "pasha_net_inflight_ops", "addr", &addr),
+            Some(1.0),
+            "quiesced server counts only the stats op itself"
+        );
+
+        control.shutdown().unwrap();
+        server_thread.join().unwrap().unwrap();
+
+        // Conservation against the journal on disk (complete after the
+        // server's final group-commit flush).
+        let journal = std::fs::read_to_string(dir.join(format!("{sid}.jsonl"))).unwrap();
+        let ask_lines = journal.lines().filter(|l| l.contains("\"ev\":\"ask\"")).count();
+        assert!(ask_lines > 0, "stress run journaled work");
+        assert_eq!(
+            journaled_asks as usize, ask_lines,
+            "acked asks == scheduler journaled-ask counter == journal ask events"
+        );
+        let sl: &[(&str, &str)] = &[("session", &sid)];
+        let events = pasha::obs::counter("pasha_journal_events_total", sl).get();
+        let fsyncs = pasha::obs::counter("pasha_journal_fsyncs_total", sl).get();
+        assert!(
+            events as usize >= ask_lines,
+            "journal event counter covers ask events: {events} < {ask_lines}"
+        );
+        assert!(
+            fsyncs <= events + 1,
+            "group commit batches fsyncs: {fsyncs} syncs for {events} events"
+        );
+        assert_eq!(
+            pasha::obs::gauge("pasha_net_inflight_ops", &[("addr", &addr)]).get(),
+            0,
+            "in-flight ops drain to 0 after shutdown"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metrics_gate_does_not_change_journal_bytes() {
+        let _gate = obs_gate();
+        let dir = tmp_dir("obs-byteid");
+        let spec = spec_for("pasha", SearcherSpec::Random, 16);
+        let bench = spec.bench.build().unwrap();
+        let run = |name: &str, enabled: bool| -> Vec<u8> {
+            pasha::obs::set_enabled(enabled);
+            let path = dir.join(format!("{name}.jsonl"));
+            let mut live = Session::create("byteid", spec.clone(), Some(&path)).unwrap();
+            drive_traced(&mut live, bench.as_ref(), spec.bench_seed, 3);
+            drop(live);
+            std::fs::read(&path).unwrap()
+        };
+        let on = run("on", true);
+        let off = run("off", false);
+        pasha::obs::set_enabled(true);
+        assert!(!on.is_empty(), "instrumented run journaled nothing");
+        assert_eq!(on, off, "metrics gate must never reach the journal bytes");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }
