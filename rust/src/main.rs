@@ -13,10 +13,13 @@
 //! pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
 //! pasha serve  [--addr A] [--journal-dir DIR] [--snapshot-interval N] [--store FILE]
 //!              [--io-threads N] [--shards N] [--legacy-threaded] [--metrics-addr A]
+//!              [--replicate A] [--worker-lease SECONDS]
+//! pasha follow ADDR --journal-dir DIR                    # replication follower
+//! pasha route  [--addr A] --table route.json             # session router
 //! pasha worker --addr A (--session ID | --create ...) [--expire] [--batch]
 //! pasha store  <ls|gc|export> --store FILE [--fingerprint FP] [--out FILE]
 //! pasha sessions --addr A                                # list sessions
-//! pasha stats  --addr A [--check]                        # metrics snapshot
+//! pasha stats  --addr A [--check] [--journal-dir DIR]    # metrics snapshot
 //! pasha recover --journal FILE                           # journal check
 //! pasha compact --journal FILE                           # snapshot + truncate
 //! pasha e2e    [--budget N] [--hidden H]                # real PJRT training
@@ -55,6 +58,8 @@ fn main() {
         "report" => cmd_report(&flags),
         "bench-json" => cmd_bench_json(&flags),
         "serve" => cmd_serve(&flags),
+        "follow" => cmd_follow(rest.first().map(|s| s.as_str()), &flags),
+        "route" => cmd_route(&flags),
         "worker" => cmd_worker(&flags, &sets),
         "store" => cmd_store(rest.first().map(|s| s.as_str()), &flags),
         "sessions" => cmd_sessions(&flags),
@@ -102,6 +107,10 @@ USAGE:
   pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR] [--snapshot-interval N]
                [--store trials.jsonl] [--io-threads N] [--shards N] [--legacy-threaded]
                [--metrics-addr 127.0.0.1:9091]   # Prometheus text endpoint
+               [--replicate 127.0.0.1:7272]      # ship commit groups to followers
+               [--worker-lease SECONDS]          # expire silent workers (0 = off)
+  pasha follow HOST:PORT --journal-dir DIR  # byte-identical journal copy
+  pasha route  [--addr 127.0.0.1:7170] --table route.json  # session router
   pasha worker --addr HOST:PORT (--session ID | --create [--spec exp.json] [--bench B]
                [--scheduler S] [--budget N] [--seed S] [--eta E] [--r-min R] [--ranking ...]
                [--searcher random|bo] [--epoch-budget E] [--warm-start trials.jsonl]
@@ -111,7 +120,9 @@ USAGE:
   pasha store  gc --store trials.jsonl            # dedup + compact in place
   pasha store  export --store trials.jsonl [--fingerprint FP] [--out FILE]
   pasha sessions --addr HOST:PORT
-  pasha stats  --addr HOST:PORT [--check]  # metrics snapshot (+conservation checks)
+  pasha stats  --addr HOST:PORT [--check] [--journal-dir DIR]
+               # metrics snapshot; --check enforces conservation invariants,
+               # --journal-dir reconciles counters against a journal copy
   pasha recover --journal FILE             # verify a session journal replays cleanly
   pasha compact --journal FILE             # snapshot + truncate a session journal
   pasha e2e    [--budget N] [--hidden 64|128|256] [--workers W]
@@ -1040,6 +1051,32 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
             .metrics_addr(maddr)
             .map_err(|e| format!("--metrics-addr {maddr}: {e}"))?;
     }
+    if let Some(raddr) = flags.get("replicate") {
+        if legacy {
+            return Err("--replicate needs the event-driven serve loop \
+                        (drop --legacy-threaded)"
+                .into());
+        }
+        server = server
+            .replicate_addr(raddr)
+            .map_err(|e| format!("--replicate {raddr}: {e}"))?;
+    }
+    if let Some(lease) = flags.get("worker-lease") {
+        let secs: f64 = lease
+            .parse()
+            .map_err(|_| format!("invalid --worker-lease '{lease}' (expected seconds)"))?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(format!("invalid --worker-lease '{lease}' (expected seconds)"));
+        }
+        if legacy && secs > 0.0 {
+            return Err("--worker-lease needs the event-driven serve loop \
+                        (drop --legacy-threaded)"
+                .into());
+        }
+        if secs > 0.0 {
+            server = server.worker_lease(Duration::from_secs_f64(secs));
+        }
+    }
     println!(
         "pasha serve: listening on {} ({})",
         server.local_addr().map_err(|e| e.to_string())?,
@@ -1052,11 +1089,64 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     if let Some(maddr) = server.metrics_local_addr() {
         println!("pasha serve: Prometheus metrics on http://{maddr}/metrics");
     }
+    if let Some(raddr) = server.replicate_local_addr() {
+        println!("pasha serve: replication listener on {raddr} (attach `pasha follow`)");
+    }
     if legacy {
         server.run_threaded().map_err(|e| e.to_string())
     } else {
         server.run().map_err(|e| e.to_string())
     }
+}
+
+/// `pasha follow ADDR --journal-dir DIR` — subscribe to a leader's
+/// replication listener and maintain a byte-identical copy of every
+/// session journal (and snapshot sidecar) under DIR. Each durable commit
+/// group is fsynced locally before it is acked. Runs until the leader
+/// closes the connection — clean shutdown or crash, the copy is durable
+/// either way — then prints a JSON report (groups, rebases, bytes) for
+/// scripts to capture. Promote the copy with
+/// `pasha serve --journal-dir DIR`.
+fn cmd_follow(addr: Option<&str>, flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = addr
+        .filter(|a| !a.starts_with("--"))
+        .map(str::to_string)
+        .or_else(|| flags.get("addr").cloned())
+        .ok_or("need the leader's replication address: pasha follow HOST:PORT --journal-dir DIR")?;
+    let dir = flags.get("journal-dir").ok_or("need --journal-dir DIR")?;
+    eprintln!("pasha follow: tailing {addr} into {dir}");
+    let report = pasha::service::replica::follow(&addr, std::path::Path::new(dir))
+        .map_err(|e| format!("follow {addr}: {e}"))?;
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+/// `pasha route [--addr A] --table route.json` — serve the session
+/// router: each worker request line forwards to the backend its session
+/// id hashes to (the registry's FNV-1a placement rule, so the mapping is
+/// stable across router restarts). On backend failure the table is
+/// re-read and the upstream re-dialed, so rewriting the table to point
+/// at a promoted follower heals in-flight connections. A sessionless
+/// `shutdown` broadcasts to every backend and stops the router.
+fn cmd_route(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7170".to_string());
+    let table = flags
+        .get("table")
+        .ok_or("need --table FILE (a versioned RouteSpec backend list)")?;
+    let listener =
+        std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let spec = pasha::spec::RouteSpec::load(std::path::Path::new(table))
+        .map_err(|e| format!("--table {table}: {e}"))?;
+    println!(
+        "pasha route: listening on {} over {} backend(s) in {table}",
+        listener.local_addr().map_err(|e| e.to_string())?,
+        spec.backends.len()
+    );
+    pasha::service::replica::route(listener, std::path::Path::new(table))
+        .map_err(|e| e.to_string())
 }
 
 fn cmd_worker(flags: &HashMap<String, String>, sets: &[String]) -> Result<(), String> {
@@ -1235,15 +1325,23 @@ fn cmd_sessions(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-/// `pasha stats --addr HOST:PORT [--check]` — fetch and print a live
-/// server's metrics snapshot over the read-only `stats` wire op.
-/// `--check` additionally enforces the conservation invariants the
-/// instrumentation guarantees and exits non-zero on any violation:
+/// `pasha stats --addr HOST:PORT [--check] [--journal-dir DIR]` — fetch
+/// and print a live server's metrics snapshot over the read-only `stats`
+/// wire op. `--check` additionally enforces the conservation invariants
+/// the instrumentation guarantees and exits non-zero on any violation:
 /// per session, every journaled ask is backed by a journal event
 /// (`asks_journaled <= journal_events`), the scheduler saw at least as
 /// many asks as were journaled, and fsyncs never exceed appends (+1 for
 /// the conservative sync a freshly opened journal issues); globally,
 /// no in-flight gauge has gone negative.
+///
+/// `--journal-dir DIR` reconciles the server's counters against a
+/// journal directory — typically a follower's replicated copy: per
+/// session journal, the literal ask events on disk must not exceed
+/// `pasha_sched_asks_journaled_total` (compaction can fold disk events
+/// into the snapshot, so the copy may trail the monotonic counter, never
+/// lead it). The counter resets with the server process, so reconcile
+/// against a leader that created its sessions this lifetime.
 fn cmd_stats(flags: &HashMap<String, String>) -> Result<(), String> {
     let addr = flags
         .get("addr")
@@ -1252,7 +1350,9 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<(), String> {
     let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
     let snap = client.stats().map_err(|e| e.to_string())?;
     println!("{}", snap.to_string_pretty());
-    if !flags.contains_key("check") {
+    let check = flags.contains_key("check");
+    let journal_dir = flags.get("journal-dir").map(PathBuf::from);
+    if !check && journal_dir.is_none() {
         return Ok(());
     }
     let instruments = snap
@@ -1284,37 +1384,72 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<(), String> {
     let get = |name: &str, sid: &str| -> Option<f64> {
         by_session.get(&(name.to_string(), sid.to_string())).copied()
     };
-    for sid in &sessions {
-        let asks = get("pasha_sched_asks_total", sid);
-        let journaled = get("pasha_sched_asks_journaled_total", sid);
-        if let (Some(a), Some(j)) = (asks, journaled) {
-            if j > a {
-                violations.push(format!(
-                    "session {sid}: {j} journaled asks exceed {a} scheduler asks"
-                ));
+    if check {
+        for sid in &sessions {
+            let asks = get("pasha_sched_asks_total", sid);
+            let journaled = get("pasha_sched_asks_journaled_total", sid);
+            if let (Some(a), Some(j)) = (asks, journaled) {
+                if j > a {
+                    violations.push(format!(
+                        "session {sid}: {j} journaled asks exceed {a} scheduler asks"
+                    ));
+                }
+            }
+            let events = get("pasha_journal_events_total", sid);
+            if let (Some(j), Some(ev)) = (journaled, events) {
+                if j > ev {
+                    violations.push(format!(
+                        "session {sid}: {j} journaled asks exceed {ev} journal events"
+                    ));
+                }
+            }
+            if let (Some(f), Some(ev)) = (get("pasha_journal_fsyncs_total", sid), events) {
+                if f > ev + 1.0 {
+                    violations.push(format!(
+                        "session {sid}: {f} fsyncs exceed {ev} journal events (+1)"
+                    ));
+                }
             }
         }
-        let events = get("pasha_journal_events_total", sid);
-        if let (Some(j), Some(ev)) = (journaled, events) {
-            if j > ev {
-                violations.push(format!(
-                    "session {sid}: {j} journaled asks exceed {ev} journal events"
-                ));
-            }
+    }
+    if let Some(dir) = &journal_dir {
+        let dir_asks = count_journal_asks(dir)?;
+        if dir_asks.is_empty() {
+            println!("journal-dir {}: no *.jsonl session journals", dir.display());
         }
-        if let (Some(f), Some(ev)) = (get("pasha_journal_fsyncs_total", sid), events) {
-            if f > ev + 1.0 {
-                violations.push(format!(
-                    "session {sid}: {f} fsyncs exceed {ev} journal events (+1)"
-                ));
+        for (sid, n) in &dir_asks {
+            match get("pasha_sched_asks_journaled_total", sid) {
+                Some(j) => {
+                    println!(
+                        "journal-dir {sid}: {n} ask events on disk vs {j} journaled by the \
+                         server (lag {} asks)",
+                        (j - *n as f64).max(0.0)
+                    );
+                    if (*n as f64) > j {
+                        violations.push(format!(
+                            "session {sid}: journal copy holds {n} ask events but the \
+                             server journaled only {j} this lifetime"
+                        ));
+                    }
+                }
+                None => violations.push(format!(
+                    "session {sid}: journal copy present in {} but the server reports \
+                     no journaled-ask counter for it",
+                    dir.display()
+                )),
             }
         }
     }
     if violations.is_empty() {
-        println!(
-            "check: conservation invariants hold across {} session(s)",
-            sessions.len()
-        );
+        if check {
+            println!(
+                "check: conservation invariants hold across {} session(s)",
+                sessions.len()
+            );
+        }
+        if journal_dir.is_some() {
+            println!("check: journal copy is consistent with the server's counters");
+        }
         Ok(())
     } else {
         Err(format!(
@@ -1322,6 +1457,40 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<(), String> {
             violations.join("\n  ")
         ))
     }
+}
+
+/// Count literal `{"ev":"ask",...}` events per session journal
+/// (`<session>.jsonl`) in `dir`. Torn or non-JSON trailing lines are
+/// skipped, matching the journal reader's whole-event-prefix tolerance;
+/// snapshot sidecars (`*.jsonl.snap`) are not journals and are ignored.
+fn count_journal_asks(
+    dir: &std::path::Path,
+) -> Result<std::collections::BTreeMap<String, u64>, String> {
+    let mut out = std::collections::BTreeMap::new();
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("--journal-dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| e.to_string())?.path();
+        if !path.extension().map(|x| x == "jsonl").unwrap_or(false) {
+            continue;
+        }
+        let sid = match path.file_stem().and_then(|s| s.to_str()) {
+            Some(s) => s.to_string(),
+            None => continue,
+        };
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut asks = 0u64;
+        for line in text.lines() {
+            if let Ok(v) = pasha::util::json::parse(line) {
+                if v.get("ev").and_then(|e| e.as_str()) == Some("ask") {
+                    asks += 1;
+                }
+            }
+        }
+        out.insert(sid, asks);
+    }
+    Ok(out)
 }
 
 /// Verify a session journal replays cleanly (CI's non-recoverable-journal

@@ -451,6 +451,42 @@ impl AskTell {
         n
     }
 
+    /// Re-queue the jobs held by one crashed worker, leaving every other
+    /// worker's leases intact — the per-shard lease-expiry tick uses this
+    /// so a single dead worker cannot stall the session. Trials are
+    /// processed in id order for the same determinism reason as
+    /// [`AskTell::expire_workers`]; the worker's pending directives are
+    /// dropped (it will never poll again to receive them).
+    pub fn expire_worker(&mut self, worker: &str) -> usize {
+        let mut trials: Vec<TrialId> = self
+            .in_flight
+            .iter()
+            .filter(|(_, fl)| fl.worker == worker)
+            .map(|(t, _)| *t)
+            .collect();
+        trials.sort_unstable();
+        let n = trials.len();
+        for t in trials {
+            let _ = self.fail(t);
+        }
+        self.directives.retain(|(w, _)| w != worker);
+        self.refresh_obs();
+        n
+    }
+
+    /// The worker holding `trial`'s live job, if any.
+    pub fn worker_of(&self, trial: TrialId) -> Option<&str> {
+        self.in_flight.get(&trial).map(|fl| fl.worker.as_str())
+    }
+
+    /// Does `worker` hold any in-flight job or undelivered directive?
+    /// (An idle polling worker holds nothing — expiring it would be a
+    /// journaled no-op, so the expiry tick skips it.)
+    pub fn worker_busy(&self, worker: &str) -> bool {
+        self.in_flight.values().any(|fl| fl.worker == worker)
+            || self.directives.iter().any(|(w, _)| w == worker)
+    }
+
     /// The session is drained: nothing in flight, nothing the scheduler
     /// can launch. (A `Wait` answer from `ask` does not count as done.)
     pub fn is_done(&self) -> bool {

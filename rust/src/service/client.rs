@@ -188,6 +188,15 @@ impl Client {
         Ok(resp.get("expired").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize)
     }
 
+    /// Expire one worker's in-flight jobs (the targeted form of
+    /// [`Client::expire`]) — its unfinished trials fail and re-queue.
+    pub fn expire_worker(&mut self, session: &str, worker: &str) -> Result<usize, ServiceError> {
+        let mut req = self.session_cmd("expire", session);
+        req.set("worker", worker);
+        let resp = self.call(&req)?;
+        Ok(resp.get("expired").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize)
+    }
+
     pub fn shutdown(&mut self) -> Result<(), ServiceError> {
         let req = self.cmd("shutdown");
         self.call(&req).map(|_| ())

@@ -45,10 +45,24 @@
 //!   reading, finishes every op already received on every connection
 //!   (committed and answered), then releases the `{"bye":true}`
 //!   response and exits once all connections are flushed (bounded by a
-//!   5s deadline for clients that stopped reading).
+//!   deadline for clients that stopped reading; responses already
+//!   committed are still released and flushed when the deadline fires).
+//! * **Worker-lease expiry.** With `--worker-lease`, each shard worker
+//!   sweeps its own sessions on a periodic tick and expires workers
+//!   whose lease lapsed mid-job ([`Registry::expire_stale_shard`]) —
+//!   the expiry is journaled, committed, and replicated exactly like a
+//!   client-driven mutation, and the dead worker's jobs re-queue.
+//! * **Replication.** With `--replicate`, a second listener (also on
+//!   io thread 0's poller) accepts `pasha follow` subscribers: after a
+//!   `{"cmd":"sub"}` handshake the registry starts retaining durable
+//!   commit-group bytes, and every tick drains them to all subscribers
+//!   ([`crate::service::replica`]). Shipping is strictly post-fsync and
+//!   observe-only — journal bytes and responses are identical with
+//!   replication on or off.
 
 use crate::obs::{self, trace};
 use crate::service::registry::{Registry, ServiceError};
+use crate::service::replica::ShipKind;
 use crate::service::server::{apply_worker_default, handle_request, next_conn_worker_id};
 use crate::util::json::{parse, Json};
 use crate::util::poll::{Event, Poller};
@@ -58,7 +72,7 @@ use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -77,8 +91,32 @@ const SHARD_GROUP_MAX: usize = 128;
 /// Poll timeout: the latency floor for cross-thread work delivered
 /// between wakeup bytes (mailboxes are also drained on every tick).
 const POLL_TIMEOUT: Duration = Duration::from_millis(25);
-/// How long a shutdown drain waits for clients to read their tails.
-const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+/// Default for [`RunCfg::drain_deadline`]: how long a shutdown drain
+/// waits for clients to read their tails.
+pub(crate) const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+/// Queued replication bytes past which a non-reading subscriber is
+/// dropped (it re-subscribes and gets a full rebase).
+const REPL_WRITE_CAP: usize = 64 * 1024 * 1024;
+/// How long the final drain waits for subscriber sockets to take the
+/// last shipped frames before closing.
+const REPL_FLUSH_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Everything [`run`] needs beyond the listener/registry/shutdown trio,
+/// bundled so adding a serve knob does not ripple a signature change
+/// through [`crate::service::server::Server`].
+pub(crate) struct RunCfg {
+    /// I/O threads multiplexing connections (min 1).
+    pub(crate) io_threads: usize,
+    /// Prometheus exposition listener (`serve --metrics-addr`).
+    pub(crate) metrics: Option<TcpListener>,
+    /// Replication-subscriber listener (`serve --replicate`).
+    pub(crate) replicate: Option<TcpListener>,
+    /// Expire a worker's in-flight jobs when it has not asked or told
+    /// for this long (`serve --worker-lease`); `None` disables the tick.
+    pub(crate) worker_lease: Option<Duration>,
+    /// How long a shutdown drain waits before force-closing stragglers.
+    pub(crate) drain_deadline: Duration,
+}
 
 const TOKEN_LISTENER: usize = 0;
 const TOKEN_WAKE: usize = 1;
@@ -206,6 +244,10 @@ struct Shared {
     parse_done: AtomicUsize,
     n_io: usize,
     mailboxes: Vec<Arc<Mailbox>>,
+    /// Worker-lease duration for the shard workers' expiry tick.
+    worker_lease: Option<Duration>,
+    /// Shutdown-drain force-close deadline.
+    drain_deadline: Duration,
     obs: EvObs,
 }
 
@@ -280,12 +322,21 @@ pub(crate) fn run(
     listener: TcpListener,
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
-    io_threads: usize,
-    metrics_listener: Option<TcpListener>,
+    cfg: RunCfg,
 ) -> io::Result<()> {
+    let RunCfg {
+        io_threads,
+        metrics: metrics_listener,
+        replicate: repl_listener,
+        worker_lease,
+        drain_deadline,
+    } = cfg;
     listener.set_nonblocking(true)?;
     if let Some(m) = &metrics_listener {
         m.set_nonblocking(true)?;
+    }
+    if let Some(r) = &repl_listener {
+        r.set_nonblocking(true)?;
     }
     let n_io = io_threads.max(1);
     registry
@@ -330,6 +381,8 @@ pub(crate) fn run(
         parse_done: AtomicUsize::new(0),
         n_io,
         mailboxes,
+        worker_lease,
+        drain_deadline,
         obs: EvObs::new(addr, n_shards),
     };
     let mut txs: Vec<SyncSender<Op>> = Vec::with_capacity(n_shards);
@@ -348,14 +401,26 @@ pub(crate) fn run(
         let mut io_handles = Vec::with_capacity(n_io);
         let mut wake_iter = wake_rxs.into_iter();
         let mut metrics = metrics_listener;
+        let mut repl = repl_listener;
         for (i, poller) in pollers.into_iter().enumerate() {
             let wake_rx = wake_iter.next().expect("one wake pipe per io thread");
             let txs_own = txs.clone();
             let listener_ref = if i == 0 { Some(&listener) } else { None };
-            // the metrics endpoint rides on io thread 0's poller
+            // the metrics and replication endpoints ride on io thread
+            // 0's poller
             let metrics_own = if i == 0 { metrics.take() } else { None };
+            let repl_own = if i == 0 { repl.take() } else { None };
             io_handles.push(scope.spawn(move || {
-                io_loop(i, shared_ref, txs_own, listener_ref, metrics_own, wake_rx, poller)
+                io_loop(
+                    i,
+                    shared_ref,
+                    txs_own,
+                    listener_ref,
+                    metrics_own,
+                    repl_own,
+                    wake_rx,
+                    poller,
+                )
             }));
         }
         // Once every I/O thread (each holding a clone) exits, the shard
@@ -390,7 +455,11 @@ pub(crate) fn run(
 
 /// A shard worker: the single owner of every session routed to it.
 /// Drains a group of ops, applies them, commits each touched session's
-/// journal once, then releases the group's responses.
+/// journal once, then releases the group's responses. With a worker
+/// lease configured it also runs this shard's liveness tick: waiting
+/// for ops is bounded by `recv_timeout`, and both the idle timeout and
+/// a lapsed interval under load sweep the shard's sessions for stale
+/// workers ([`Registry::expire_stale_shard`]).
 fn shard_worker(shared: &Shared, shard: usize, rx: Receiver<Op>) {
     let shard_label = shard.to_string();
     let l: &[(&str, &str)] = &[("addr", &shared.obs.addr), ("shard", &shard_label)];
@@ -398,12 +467,46 @@ fn shard_worker(shared: &Shared, shard: usize, rx: Receiver<Op>) {
     let groups_total = obs::counter("pasha_shard_groups_total", l);
     let group_ops = obs::histogram("pasha_shard_group_ops", l);
     let group_us = obs::histogram("pasha_shard_group_us", l);
+    let expirations = obs::counter("pasha_worker_lease_expirations_total", l);
     let depth = &shared.obs.queue_depth[shard];
+    // Sweep a few times per lease so expiry lands within ~lease/4 of
+    // the deadline, bounded to keep idle wakeups and sweep overhead sane.
+    let sweep_every = shared
+        .worker_lease
+        .map(|lease| (lease / 4).clamp(Duration::from_millis(50), Duration::from_secs(1)));
+    let mut last_sweep = Instant::now();
     loop {
-        let first = match rx.recv() {
-            Ok(op) => op,
-            Err(_) => return, // all I/O threads gone: server exiting
+        let first = match sweep_every {
+            Some(tick) => match rx.recv_timeout(tick) {
+                Ok(op) => Some(op),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => return,
+            },
+            None => match rx.recv() {
+                Ok(op) => Some(op),
+                Err(_) => return, // all I/O threads gone: server exiting
+            },
         };
+        if let (Some(lease), Some(tick)) = (shared.worker_lease, sweep_every) {
+            if first.is_none() || last_sweep.elapsed() >= tick {
+                let expired = shared.registry.expire_stale_shard(shard, lease);
+                last_sweep = Instant::now();
+                if !expired.is_empty() {
+                    for (sid, workers) in &expired {
+                        expirations.add(workers.len() as u64);
+                        crate::log_warn!(
+                            "serve: shard {shard}: expired stale workers {workers:?} \
+                             in session {sid}; their jobs re-queue"
+                        );
+                    }
+                    if shared.registry.shipping() {
+                        // expiry frames are already in the sink
+                        shared.mailboxes[0].wake();
+                    }
+                }
+            }
+        }
+        let Some(first) = first else { continue };
         depth.add(-1);
         let t0 = Instant::now();
         let mut group = vec![first];
@@ -448,6 +551,17 @@ fn shard_worker(shared: &Shared, shard: usize, rx: Receiver<Op>) {
                         .set("error", format!("group commit failed: {err}"));
                     *resp = failed;
                 }
+            }
+        } else if shared.registry.shipping() {
+            // Fsync happened above: the group's bytes are durable, so
+            // they may ship. Collect them into the sink and nudge io
+            // thread 0 (the replication broadcaster).
+            let mut collected = 0usize;
+            for sid in &touched {
+                collected += shared.registry.collect_shipped(sid);
+            }
+            if collected > 0 {
+                shared.mailboxes[0].wake();
             }
         }
         for (io, conn, seq, resp) in responses {
@@ -507,12 +621,14 @@ fn route_shard(req: &Json, registry: &Registry, rr: &mut usize) -> usize {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn io_loop(
     idx: usize,
     shared: &Shared,
     shard_txs: Vec<SyncSender<Op>>,
     listener: Option<&TcpListener>,
     metrics: Option<TcpListener>,
+    repl: Option<TcpListener>,
     wake_rx: UnixStream,
     mut poller: Poller,
 ) -> io::Result<()> {
@@ -535,6 +651,21 @@ fn io_loop(
         }
         None => None,
     };
+    // Replication subscribers (`pasha follow`), same pattern: a second
+    // listener multiplexed onto this thread's poller, no extra thread.
+    let mut rconns: HashMap<u64, ReplConn> = HashMap::new();
+    let repl_tok = match &repl {
+        Some(r) => {
+            let tok = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+            poller.register(r.as_raw_fd(), tok as usize, true, false)?;
+            Some(tok)
+        }
+        None => None,
+    };
+    let robs = repl.as_ref().map(|_| ReplObs::new(&shared.obs.addr));
+    // Journal bytes handed to subscribers so far, the minuend of the
+    // lag gauge (local so concurrent in-process servers stay separate).
+    let mut shipped_bytes: u64 = 0;
 
     loop {
         let t_poll = Instant::now();
@@ -567,6 +698,39 @@ fn io_loop(
                         if let Some(m) = &metrics {
                             accept_metrics(m, &poller, &mut mconns);
                         }
+                        continue;
+                    }
+                    if repl_tok == Some(id) {
+                        if let Some(r) = &repl {
+                            accept_repl(r, &poller, &mut rconns);
+                        }
+                        continue;
+                    }
+                    if rconns.contains_key(&id) {
+                        let (alive, newly_subscribed) = {
+                            let rc = rconns.get_mut(&id).expect("repl conn listed");
+                            repl_conn_event(rc, ev)
+                        };
+                        if newly_subscribed {
+                            // First frames are full rebases queued by
+                            // set_shipping; the broadcast below ships them.
+                            if let Err(e) = shared.registry.set_shipping(true) {
+                                crate::log_warn!("serve: cannot enable replication: {e}");
+                            }
+                        }
+                        if alive {
+                            let rc = rconns.get_mut(&id).expect("repl conn listed");
+                            let want_write = rc.out_pos < rc.out.len();
+                            let _ = poller.reregister(
+                                rc.stream.as_raw_fd(),
+                                id as usize,
+                                true,
+                                want_write,
+                            );
+                        } else {
+                            drop_repl_conn(id, shared, &poller, &mut rconns);
+                        }
+                        sync_repl_gauges(&rconns, robs.as_ref(), shipped_bytes);
                         continue;
                     }
                     if let Some(mc) = mconns.get_mut(&id) {
@@ -626,6 +790,56 @@ fn io_loop(
             }
         }
 
+        // Ship durable commit groups to replication subscribers. Shard
+        // workers park post-fsync frames in the registry sink and wake
+        // this thread; frames are encoded once and fanned out to every
+        // subscriber.
+        if repl_tok.is_some() && rconns.values().any(|r| r.subscribed) {
+            let frames = shared.registry.drain_ship_sink();
+            if !frames.is_empty() {
+                let ro = robs.as_ref().expect("repl obs built with repl listener");
+                let mut payload: Vec<u8> = Vec::new();
+                for frame in &frames {
+                    match frame.to_line() {
+                        Ok(line) => {
+                            if frame.kind == ShipKind::Group {
+                                ro.groups.inc();
+                            }
+                            shipped_bytes += frame.bytes.len() as u64;
+                            ro.bytes.add(frame.bytes.len() as u64);
+                            payload.extend_from_slice(line.as_bytes());
+                        }
+                        Err(e) => {
+                            crate::log_warn!("serve: cannot encode replication frame: {e}")
+                        }
+                    }
+                }
+                let mut dead_subs: Vec<u64> = Vec::new();
+                for (&id, rc) in rconns.iter_mut() {
+                    if !rc.subscribed {
+                        continue;
+                    }
+                    rc.out.extend_from_slice(&payload);
+                    if !repl_flush(rc) || rc.out.len() - rc.out_pos > REPL_WRITE_CAP {
+                        dead_subs.push(id);
+                    } else {
+                        let want_write = rc.out_pos < rc.out.len();
+                        let _ = poller.reregister(
+                            rc.stream.as_raw_fd(),
+                            id as usize,
+                            true,
+                            want_write,
+                        );
+                    }
+                }
+                for id in dead_subs {
+                    crate::log_warn!("serve: dropping replication subscriber {id}");
+                    drop_repl_conn(id, shared, &poller, &mut rconns);
+                }
+                sync_repl_gauges(&rconns, robs.as_ref(), shipped_bytes);
+            }
+        }
+
         // Maintenance: release in-order responses, flush, apply caps,
         // resume paused reads, retire finished connections.
         let ids: Vec<u64> = conns.keys().copied().collect();
@@ -675,7 +889,7 @@ fn io_loop(
 
         if draining {
             if drain_deadline.is_none() {
-                drain_deadline = Some(Instant::now() + DRAIN_DEADLINE);
+                drain_deadline = Some(Instant::now() + shared.drain_deadline);
             }
             if !parse_flushed {
                 // Honor every op already received: parse the remainder
@@ -710,6 +924,21 @@ fn io_loop(
             let all_flushed = conns.values().all(|c| c.fully_flushed());
             let expired = drain_deadline.map(|d| Instant::now() >= d).unwrap_or(false);
             if all_flushed || expired {
+                if expired && !all_flushed {
+                    // The deadline fired with stragglers unflushed.
+                    // Responses sitting in their reorder buffers are for
+                    // *committed* groups — dropping them would lose an
+                    // acked-or-durable op's answer. Release and push
+                    // whatever the sockets will take before force-close.
+                    for c in conns.values_mut() {
+                        release_ready(c);
+                        let _ = do_write(c, &shared.obs);
+                    }
+                }
+                // Ship the drain's own final commit groups (the ops
+                // answered above) so a cleanly shut down leader leaves
+                // its follower byte-identical.
+                finish_repl(shared, &mut rconns, robs.as_ref(), &mut shipped_bytes);
                 return Ok(());
             }
         }
@@ -1040,6 +1269,228 @@ fn metrics_conn_event(mc: &mut MetricsConn, ev: Event) -> bool {
     // Still waiting on the request head; a fully flushed response
     // (out non-empty, all written) falls through to close.
     mc.out.is_empty()
+}
+
+/// One replication subscriber (`pasha follow`, see
+/// [`crate::service::replica`]), owned by io thread 0. Receives the
+/// `{"cmd":"sub"}` handshake and per-frame acks; sends encoded
+/// [`crate::service::replica::ShipFrame`] lines.
+struct ReplConn {
+    stream: TcpStream,
+    /// Unparsed handshake/ack bytes.
+    rbuf: Vec<u8>,
+    /// Encoded frames queued to the socket, drained from `out_pos`.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Whether the `sub` handshake arrived (frames flow only after it).
+    subscribed: bool,
+    /// Cumulative journal bytes this follower last acked (`total`).
+    acked: u64,
+}
+
+/// Replication telemetry, labeled like [`EvObs`] by listen address.
+struct ReplObs {
+    /// `pasha_repl_groups_shipped_total` — commit-group frames shipped.
+    groups: Arc<obs::Counter>,
+    /// `pasha_repl_bytes_shipped_total` — journal bytes shipped (all
+    /// frame kinds).
+    bytes: Arc<obs::Counter>,
+    /// `pasha_repl_lag_bytes` — bytes shipped but not yet acked by the
+    /// slowest subscriber (0 with no subscriber).
+    lag: Arc<obs::Gauge>,
+    /// `pasha_repl_subscribers` — currently subscribed followers.
+    subscribers: Arc<obs::Gauge>,
+}
+
+impl ReplObs {
+    fn new(addr: &str) -> ReplObs {
+        let l: &[(&str, &str)] = &[("addr", addr)];
+        ReplObs {
+            groups: obs::counter("pasha_repl_groups_shipped_total", l),
+            bytes: obs::counter("pasha_repl_bytes_shipped_total", l),
+            lag: obs::gauge("pasha_repl_lag_bytes", l),
+            subscribers: obs::gauge("pasha_repl_subscribers", l),
+        }
+    }
+}
+
+fn accept_repl(listener: &TcpListener, poller: &Poller, rconns: &mut HashMap<u64, ReplConn>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let id = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+                if poller
+                    .register(stream.as_raw_fd(), id as usize, true, false)
+                    .is_ok()
+                {
+                    rconns.insert(
+                        id,
+                        ReplConn {
+                            stream,
+                            rbuf: Vec::new(),
+                            out: Vec::new(),
+                            out_pos: 0,
+                            subscribed: false,
+                            acked: 0,
+                        },
+                    );
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Flush a subscriber's write queue as far as the socket allows.
+/// Returns false on an I/O error.
+fn repl_flush(rc: &mut ReplConn) -> bool {
+    while rc.out_pos < rc.out.len() {
+        match rc.stream.write(&rc.out[rc.out_pos..]) {
+            Ok(0) => return false,
+            Ok(n) => rc.out_pos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    if rc.out_pos == rc.out.len() {
+        rc.out.clear();
+        rc.out_pos = 0;
+    }
+    true
+}
+
+/// Advance one subscriber on readiness: read handshake/ack lines, then
+/// flush pending frames. Returns `(alive, newly_subscribed)`.
+fn repl_conn_event(rc: &mut ReplConn, ev: Event) -> (bool, bool) {
+    let mut newly_subscribed = false;
+    if ev.readable {
+        let mut buf = [0u8; 4096];
+        loop {
+            match rc.stream.read(&mut buf) {
+                Ok(0) => return (false, newly_subscribed), // follower left
+                Ok(n) => {
+                    rc.rbuf.extend_from_slice(&buf[..n]);
+                    if rc.rbuf.len() > 64 * 1024 {
+                        return (false, newly_subscribed); // ack lines are tiny
+                    }
+                    if n < buf.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return (false, newly_subscribed),
+            }
+        }
+        while let Some(nl) = rc.rbuf.iter().position(|&b| b == b'\n') {
+            let line = String::from_utf8_lossy(&rc.rbuf[..nl]).into_owned();
+            rc.rbuf.drain(..=nl);
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let Ok(v) = parse(trimmed) else { continue };
+            if v.get("cmd").and_then(|c| c.as_str()) == Some("sub") {
+                if !rc.subscribed {
+                    rc.subscribed = true;
+                    newly_subscribed = true;
+                }
+                // the follower skips non-repl lines, so a plain ack is safe
+                rc.out.extend_from_slice(b"{\"ok\":true,\"sub\":true}\n");
+            } else if let Some(total) = v.get("total").and_then(|t| t.as_f64()) {
+                if total >= 0.0 {
+                    rc.acked = total as u64;
+                }
+            }
+        }
+    }
+    (repl_flush(rc), newly_subscribed)
+}
+
+/// Retire a subscriber. When the last subscribed follower goes away,
+/// shipping turns off — frames stop accumulating, and a future
+/// subscriber restarts from a full rebase.
+fn drop_repl_conn(
+    id: u64,
+    shared: &Shared,
+    poller: &Poller,
+    rconns: &mut HashMap<u64, ReplConn>,
+) {
+    if let Some(rc) = rconns.remove(&id) {
+        let _ = poller.deregister(rc.stream.as_raw_fd());
+    }
+    if !rconns.values().any(|r| r.subscribed) && shared.registry.shipping() {
+        if let Err(e) = shared.registry.set_shipping(false) {
+            crate::log_warn!("serve: cannot disable replication: {e}");
+        }
+    }
+}
+
+fn sync_repl_gauges(rconns: &HashMap<u64, ReplConn>, robs: Option<&ReplObs>, shipped: u64) {
+    let Some(ro) = robs else { return };
+    let subs = rconns.values().filter(|r| r.subscribed);
+    let min_acked = subs.clone().map(|r| r.acked).min();
+    ro.subscribers.set(subs.count() as i64);
+    ro.lag.set(match min_acked {
+        Some(acked) => shipped.saturating_sub(acked) as i64,
+        None => 0,
+    });
+}
+
+/// Final replication flush on drain exit: ship whatever the last commit
+/// groups parked in the sink and push it onto the wire (bounded wait —
+/// the sockets are non-blocking) so a cleanly shut down leader's
+/// follower holds a byte-identical copy. The follower needs no ack
+/// round-trip: bytes written before close are delivered, and it applies
+/// everything up to EOF.
+fn finish_repl(
+    shared: &Shared,
+    rconns: &mut HashMap<u64, ReplConn>,
+    robs: Option<&ReplObs>,
+    shipped_bytes: &mut u64,
+) {
+    if !rconns.values().any(|r| r.subscribed) {
+        return;
+    }
+    let frames = shared.registry.drain_ship_sink();
+    let mut payload: Vec<u8> = Vec::new();
+    for frame in &frames {
+        match frame.to_line() {
+            Ok(line) => {
+                if let Some(ro) = robs {
+                    if frame.kind == ShipKind::Group {
+                        ro.groups.inc();
+                    }
+                    ro.bytes.add(frame.bytes.len() as u64);
+                }
+                *shipped_bytes += frame.bytes.len() as u64;
+                payload.extend_from_slice(line.as_bytes());
+            }
+            Err(e) => crate::log_warn!("serve: cannot encode replication frame: {e}"),
+        }
+    }
+    let deadline = Instant::now() + REPL_FLUSH_DEADLINE;
+    for rc in rconns.values_mut() {
+        if !rc.subscribed {
+            continue;
+        }
+        rc.out.extend_from_slice(&payload);
+        while rc.out_pos < rc.out.len() && Instant::now() < deadline {
+            if !repl_flush(rc) {
+                break;
+            }
+            if rc.out_pos < rc.out.len() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -64,6 +64,16 @@ pub struct Journal {
     dirty: bool,
     /// Events appended since the last commit (the commit-group size).
     group_len: u64,
+    /// Shipping mode: retain a copy of every byte written to the file so
+    /// replication ([`crate::service::replica`]) can stream durable commit
+    /// groups to a follower. Observe-only: the file bytes are identical
+    /// with shipping on or off.
+    ship: bool,
+    /// Bytes written to the file since the last [`Journal::take_shipped`].
+    shipped: Vec<u8>,
+    /// Bytes currently in the file (tracked so shipped frames carry the
+    /// exact append offset without an extra metadata syscall).
+    file_len: u64,
     obs: Option<JournalObs>,
 }
 
@@ -87,6 +97,9 @@ impl Journal {
             buf: Vec::new(),
             dirty: false,
             group_len: 0,
+            ship: false,
+            shipped: Vec::new(),
+            file_len: 0,
             obs: None,
         })
     }
@@ -107,6 +120,9 @@ impl Journal {
             // next commit must not skip its sync
             dirty: true,
             group_len: 0,
+            ship: false,
+            shipped: Vec::new(),
+            file_len: valid_len,
             obs: None,
         };
         j.file.seek(SeekFrom::End(0))?;
@@ -131,7 +147,12 @@ impl Journal {
             self.buf.extend_from_slice(line.as_bytes());
             Ok(())
         } else {
-            self.file.write_all(line.as_bytes())
+            self.file.write_all(line.as_bytes())?;
+            self.file_len += line.len() as u64;
+            if self.ship {
+                self.shipped.extend_from_slice(line.as_bytes());
+            }
+            Ok(())
         }
     }
 
@@ -171,6 +192,10 @@ impl Journal {
     pub fn flush(&mut self) -> io::Result<()> {
         if !self.buf.is_empty() {
             self.file.write_all(&self.buf)?;
+            self.file_len += self.buf.len() as u64;
+            if self.ship {
+                self.shipped.extend_from_slice(&self.buf);
+            }
             self.buf.clear();
         }
         Ok(())
@@ -202,6 +227,33 @@ impl Journal {
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// Start retaining a copy of every byte written to the file, for
+    /// replication shipping. The caller is expected to ship a full-file
+    /// rebase frame first so the follower's copy is positioned exactly at
+    /// [`Journal::file_len`].
+    pub fn enable_shipping(&mut self) {
+        self.ship = true;
+    }
+
+    /// Bytes currently in the file (buffered group-mode appends not
+    /// included until [`Journal::flush`]).
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+
+    /// Drain the retained copy of bytes written since the last take,
+    /// with the file offset at which they begin. Call only after a
+    /// successful [`Journal::commit`] so the returned bytes are durable
+    /// — the replication contract is fsync-then-ship.
+    pub fn take_shipped(&mut self) -> Option<(u64, Vec<u8>)> {
+        if !self.ship || self.shipped.is_empty() {
+            return None;
+        }
+        let bytes = std::mem::take(&mut self.shipped);
+        let base = self.file_len - bytes.len() as u64;
+        Some((base, bytes))
     }
 }
 
@@ -338,6 +390,15 @@ pub fn ev_fail(trial: usize) -> Json {
 pub fn ev_expire() -> Json {
     let mut o = Json::obj();
     o.set("ev", "expire");
+    o
+}
+
+/// Expire a single worker's leases (its in-flight jobs re-park, its
+/// pending directives drop). The argless [`ev_expire`] form — expire
+/// every worker — is what legacy journals carry; both replay.
+pub fn ev_expire_worker(worker: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ev", "expire").set("worker", worker);
     o
 }
 
@@ -517,6 +578,46 @@ mod tests {
         j.append(&ev_fail(7)).unwrap();
         drop(j);
         assert_eq!(read_journal(&path).unwrap().events.len(), 1);
+    }
+
+    #[test]
+    fn shipping_retains_committed_bytes_without_changing_file() {
+        let path = tmp("ship.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        j.set_group_commit(true).unwrap();
+        j.append(&ev_tell(0, 1, 1.0)).unwrap();
+        j.commit().unwrap();
+        assert!(j.take_shipped().is_none(), "shipping off: nothing retained");
+        j.enable_shipping();
+        j.append(&ev_tell(0, 2, 2.0)).unwrap();
+        j.append(&ev_fail(1)).unwrap();
+        j.commit().unwrap();
+        let (base, bytes) = j.take_shipped().unwrap();
+        let file = std::fs::read(&path).unwrap();
+        assert_eq!(base as usize + bytes.len(), file.len());
+        assert_eq!(
+            &file[base as usize..],
+            &bytes[..],
+            "shipped bytes are the exact durable file tail"
+        );
+        assert!(j.take_shipped().is_none(), "drained after take");
+        // write-through mode ships too, and the file bytes are identical
+        // to an unshipped journal's (observe-only invariant)
+        j.set_group_commit(false).unwrap();
+        j.append(&ev_expire()).unwrap();
+        j.commit().unwrap();
+        let (base2, bytes2) = j.take_shipped().unwrap();
+        assert_eq!(base2 as usize, file.len());
+        let file2 = std::fs::read(&path).unwrap();
+        assert_eq!(&file2[base2 as usize..], &bytes2[..]);
+    }
+
+    #[test]
+    fn expire_worker_event_shape() {
+        let e = ev_expire_worker("w3");
+        assert_eq!(e.get("ev").unwrap().as_str(), Some("expire"));
+        assert_eq!(e.get("worker").unwrap().as_str(), Some("w3"));
+        assert!(ev_expire().get("worker").is_none());
     }
 
     #[test]

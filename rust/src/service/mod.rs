@@ -51,17 +51,25 @@
 //! * **Batching** — `batch` frames execute their ops in order against
 //!   the same journal path as singly-issued requests: same journal
 //!   bytes, same incumbent, one syscall round-trip for N ops.
+//! * **Replication** — [`replica`]: `pasha serve --replicate` streams
+//!   every durable commit group (after its fsync) to a `pasha follow`
+//!   process that maintains a byte-identical journal copy; killing the
+//!   leader and serving the follower's directory completes the session
+//!   with byte-identical asks and the same incumbent, and the
+//!   `pasha route` session router lets workers ride through the swap.
 
 pub mod client;
 #[cfg(unix)]
 mod eventloop;
 pub mod journal;
 pub mod registry;
+pub mod replica;
 pub mod server;
 pub mod session;
 
 pub use crate::spec::ExperimentSpec;
 pub use client::{run_worker, run_worker_batched, Client, WorkerReport};
 pub use registry::{Registry, ServiceError};
+pub use replica::{FollowReport, ShipFrame, ShipKind};
 pub use server::{handle_request, Server};
 pub use session::{RecoveryReport, Session, SessionOptions};

@@ -25,6 +25,7 @@
 //! session, so no acknowledged-or-about-to-be-acknowledged line is
 //! ever discarded.
 
+use crate::service::replica::ShipFrame;
 use crate::service::session::{RecoveryReport, Session, SessionOptions};
 use crate::spec::ExperimentSpec;
 use crate::util::json::Json;
@@ -33,6 +34,7 @@ use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Error type of every service-layer operation.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -69,7 +71,7 @@ impl std::error::Error for ServiceError {}
 /// FNV-1a 64 over the session id: stable across runs and processes
 /// (unlike `RandomState`), so a session's shard — and therefore its
 /// processing order relative to other ops — is deterministic.
-fn fnv1a64(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in bytes {
         h ^= b as u64;
@@ -96,6 +98,13 @@ pub struct Registry {
     next_id: Mutex<usize>,
     /// Applied to every current and future session journal.
     group_commit: AtomicBool,
+    /// Replication shipping on: sessions retain durable commit-group
+    /// bytes as [`ShipFrame`]s, drained into `ship_sink`.
+    shipping: AtomicBool,
+    /// Frames collected from sessions ([`Registry::collect_shipped`]),
+    /// awaiting pickup by the replication layer. Per-journal frame order
+    /// is preserved: frames enter under the owning shard's lock.
+    ship_sink: Mutex<Vec<ShipFrame>>,
     /// Sessions recovered from the journal directory at startup.
     recovered: Vec<(String, RecoveryReport)>,
 }
@@ -193,6 +202,8 @@ impl Registry {
             shards,
             next_id: Mutex::new(next_id),
             group_commit: AtomicBool::new(false),
+            shipping: AtomicBool::new(false),
+            ship_sink: Mutex::new(Vec::new()),
             recovered: Vec::new(),
         };
         for session in sessions {
@@ -251,10 +262,15 @@ impl Registry {
         if self.group_commit.load(Ordering::SeqCst) {
             session.set_group_commit(true)?;
         }
-        self.shards[self.shard_of(&id)]
-            .lock()
-            .expect("shard lock")
-            .insert(id.clone(), session);
+        if self.shipping.load(Ordering::SeqCst) {
+            session.set_shipping(true)?;
+        }
+        let mut shard = self.shards[self.shard_of(&id)].lock().expect("shard lock");
+        let frames = session.drain_ship_frames();
+        shard.insert(id.clone(), session);
+        if !frames.is_empty() {
+            self.ship_sink.lock().expect("ship sink").extend(frames);
+        }
         Ok(id)
     }
 
@@ -279,6 +295,98 @@ impl Registry {
         self.with_session(id, |s| s.commit_journal())?
     }
 
+    /// Turn replication shipping on (or off) for every current and
+    /// future session. Enabling queues full-file rebase frames so a
+    /// subscriber starts from byte-level copies; they land in the sink
+    /// immediately (drain with [`Registry::drain_ship_sink`]).
+    pub fn set_shipping(&self, on: bool) -> Result<(), ServiceError> {
+        self.shipping.store(on, Ordering::SeqCst);
+        for shard in &self.shards {
+            let mut shard = shard.lock().expect("shard lock");
+            // id order: rebase frames for distinct journals are
+            // independent, but a deterministic order keeps runs comparable
+            let mut ids: Vec<String> = shard.keys().cloned().collect();
+            ids.sort();
+            for id in ids {
+                let session = shard.get_mut(&id).expect("id just listed");
+                session.set_shipping(on)?;
+                let frames = session.drain_ship_frames();
+                if !frames.is_empty() {
+                    self.ship_sink.lock().expect("ship sink").extend(frames);
+                }
+            }
+        }
+        if !on {
+            self.ship_sink.lock().expect("ship sink").clear();
+        }
+        Ok(())
+    }
+
+    /// Is replication shipping on? (Lock-free fast path for the shard
+    /// workers' per-group check.)
+    pub fn shipping(&self) -> bool {
+        self.shipping.load(Ordering::SeqCst)
+    }
+
+    /// Move session `id`'s queued replication frames into the sink,
+    /// returning how many moved. Called by the owning shard right after
+    /// a successful [`Registry::commit_session`] — the sink lock is
+    /// taken while still holding the shard lock, so per-journal frame
+    /// order in the sink matches commit order.
+    pub fn collect_shipped(&self, id: &str) -> usize {
+        if !self.shipping() {
+            return 0;
+        }
+        let mut shard = self.shards[self.shard_of(id)].lock().expect("shard lock");
+        let Some(session) = shard.get_mut(id) else {
+            return 0; // closed in its own commit group: close() collected
+        };
+        let frames = session.drain_ship_frames();
+        let n = frames.len();
+        if n > 0 {
+            self.ship_sink.lock().expect("ship sink").extend(frames);
+        }
+        n
+    }
+
+    /// Drain every frame awaiting shipment, in arrival order.
+    pub fn drain_ship_sink(&self) -> Vec<ShipFrame> {
+        std::mem::take(&mut *self.ship_sink.lock().expect("ship sink"))
+    }
+
+    /// Expire stale worker leases on every session owned by `shard`:
+    /// the event loop's per-shard liveness tick. Sessions are swept in
+    /// id order; each expiry is journaled, committed, and (when
+    /// shipping) collected, exactly like a client-driven mutation.
+    /// Returns `(session, expired workers)` pairs for tracing.
+    pub fn expire_stale_shard(&self, shard: usize, lease: Duration) -> Vec<(String, Vec<String>)> {
+        let Some(slot) = self.shards.get(shard) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        let mut guard = slot.lock().expect("shard lock");
+        let mut ids: Vec<String> = guard.keys().cloned().collect();
+        ids.sort();
+        for id in ids {
+            let session = guard.get_mut(&id).expect("id just listed");
+            let expired = match session.expire_stale(lease) {
+                Ok(w) => w,
+                Err(_) => continue, // poisoned/io: surfaced on the next op
+            };
+            if expired.is_empty() {
+                continue;
+            }
+            if session.commit_journal().is_ok() && self.shipping() {
+                let frames = session.drain_ship_frames();
+                if !frames.is_empty() {
+                    self.ship_sink.lock().expect("ship sink").extend(frames);
+                }
+            }
+            out.push((id, expired));
+        }
+        out
+    }
+
     /// Status summaries of every registered session, id-sorted.
     pub fn statuses(&self) -> Vec<Json> {
         let mut all: Vec<(String, Json)> = Vec::new();
@@ -301,6 +409,11 @@ impl Registry {
         match shard.get_mut(id) {
             Some(session) => {
                 session.commit_journal()?;
+                // frames from that final commit must outlive the session
+                let frames = session.drain_ship_frames();
+                if !frames.is_empty() {
+                    self.ship_sink.lock().expect("ship sink").extend(frames);
+                }
                 shard.remove(id);
                 Ok(())
             }

@@ -1,0 +1,650 @@
+//! Journal streaming replication: ship durable commit groups to a
+//! follower process, plus the thin session router that makes N serving
+//! processes look like one endpoint to workers.
+//!
+//! Topology:
+//!
+//! ```text
+//!   workers ──▶ pasha route ──▶ pasha serve --replicate :r  (leader)
+//!                                   │  journal fsync, then ship
+//!                                   ▼
+//!                               pasha follow :r --journal-dir
+//!                                   (byte-identical journal copy)
+//! ```
+//!
+//! The unit of replication is the **[`ShipFrame`]**: either one durable
+//! commit group (the exact bytes the leader just fsynced, tagged with
+//! the file offset they start at) or a full-file rebase (journal or
+//! snapshot sidecar) that positions a subscriber at the leader's current
+//! byte-level state. The leader ships frames strictly *after* the
+//! group's `sync_all` ([`crate::service::journal::Journal::take_shipped`]),
+//! so a follower can never hold bytes the leader might lose; the
+//! follower appends byte-identically, fsyncs, and acks by file offset.
+//!
+//! Failover is ordinary recovery: promote the follower by serving its
+//! journal directory (`pasha serve --journal-dir <follower-dir>`). The
+//! ask-replay byte-identity verification that guards every recovery is
+//! the correctness oracle here too, now across a process boundary — a
+//! diverged copy refuses to serve rather than serving wrong answers.
+//!
+//! Everything speaks the service's existing newline-JSON wire: the
+//! follower subscribes with `{"cmd":"sub"}` on the leader's replication
+//! listener, frames arrive as `{"cmd":"repl",...}` lines, and acks flow
+//! back as plain JSON lines. Replication is observe-only for the
+//! leader: journal bytes, fsync schedule, and responses are identical
+//! with it on or off.
+
+use crate::service::registry::fnv1a64;
+use crate::spec::RouteSpec;
+use crate::util::json::{self, Json};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufRead, BufReader, Seek, SeekFrom, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What one replication frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShipKind {
+    /// One durable commit group: append `bytes` at offset `base` of the
+    /// journal file (the follower's copy must be exactly `base` long).
+    Group,
+    /// Full journal rebase: atomically replace the follower's journal
+    /// file with `bytes` (sent at subscribe time and after compaction
+    /// rewrites the leader's file).
+    JournalFull,
+    /// Full snapshot-sidecar rebase: replace `<journal>.snap`.
+    SnapFull,
+}
+
+impl ShipKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            ShipKind::Group => "group",
+            ShipKind::JournalFull => "journal",
+            ShipKind::SnapFull => "snap",
+        }
+    }
+
+    fn parse(s: &str) -> Option<ShipKind> {
+        match s {
+            "group" => Some(ShipKind::Group),
+            "journal" => Some(ShipKind::JournalFull),
+            "snap" => Some(ShipKind::SnapFull),
+            _ => None,
+        }
+    }
+}
+
+/// One unit of journal replication (see [`ShipKind`]). `journal` is the
+/// bare file name (`s0000.jsonl`) — the follower resolves it inside its
+/// own `--journal-dir`, never outside it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShipFrame {
+    pub journal: String,
+    pub kind: ShipKind,
+    /// File offset the bytes apply at (`Group` only; 0 for full frames).
+    pub base: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl ShipFrame {
+    pub fn group(journal: &str, base: u64, bytes: Vec<u8>) -> ShipFrame {
+        ShipFrame {
+            journal: journal.to_string(),
+            kind: ShipKind::Group,
+            base,
+            bytes,
+        }
+    }
+
+    pub fn journal_full(journal: &str, bytes: Vec<u8>) -> ShipFrame {
+        ShipFrame {
+            journal: journal.to_string(),
+            kind: ShipKind::JournalFull,
+            base: 0,
+            bytes,
+        }
+    }
+
+    pub fn snap_full(journal: &str, bytes: Vec<u8>) -> ShipFrame {
+        ShipFrame {
+            journal: journal.to_string(),
+            kind: ShipKind::SnapFull,
+            base: 0,
+            bytes,
+        }
+    }
+
+    /// Encode as one `{"cmd":"repl",...}` wire line (newline included).
+    /// Journal bytes are UTF-8 JSON text, so they ride inside a JSON
+    /// string (newlines and quotes escaped by the encoder) and decode
+    /// back byte-exactly.
+    pub fn to_line(&self) -> io::Result<String> {
+        let data = String::from_utf8(self.bytes.clone()).map_err(|_| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                "journal bytes are not UTF-8 — refusing to ship",
+            )
+        })?;
+        let mut o = Json::obj();
+        o.set("cmd", "repl")
+            .set("journal", self.journal.as_str())
+            .set("kind", self.kind.as_str())
+            .set("base", self.base as f64)
+            .set("data", data);
+        let mut line = o.to_string_compact();
+        line.push('\n');
+        Ok(line)
+    }
+
+    /// Decode a `{"cmd":"repl",...}` wire object.
+    pub fn from_json(v: &Json) -> Result<ShipFrame, String> {
+        let journal = v
+            .get("journal")
+            .and_then(|j| j.as_str())
+            .ok_or("repl frame missing 'journal'")?;
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .and_then(ShipKind::parse)
+            .ok_or("repl frame has unknown 'kind'")?;
+        let base = v.get("base").and_then(|b| b.as_f64()).unwrap_or(0.0);
+        if !(base >= 0.0 && base.fract() == 0.0) {
+            return Err("repl frame 'base' is not a non-negative integer".into());
+        }
+        let data = v
+            .get("data")
+            .and_then(|d| d.as_str())
+            .ok_or("repl frame missing 'data'")?;
+        Ok(ShipFrame {
+            journal: journal.to_string(),
+            kind,
+            base: base as u64,
+            bytes: data.as_bytes().to_vec(),
+        })
+    }
+}
+
+/// Resolve a frame's target file inside `dir`, refusing anything that
+/// could escape it (the frame name comes off the network).
+fn frame_path(dir: &Path, name: &str) -> io::Result<PathBuf> {
+    if name.is_empty()
+        || name.contains('/')
+        || name.contains('\\')
+        || name.contains("..")
+        || name.starts_with('.')
+    {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("refusing replication frame for suspicious file name {name:?}"),
+        ));
+    }
+    Ok(dir.join(name))
+}
+
+/// Atomically replace `path` with `bytes` (tmp file + rename), fsynced.
+fn replace_file(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+}
+
+/// Apply one frame under `dir`, returning the target file's new length
+/// (the offset the follower acks). A `Group` frame whose base does not
+/// match the local copy's length is divergence and refuses to apply —
+/// the same refuse-rather-than-corrupt stance as recovery's ask-replay
+/// check.
+pub fn apply_frame(dir: &Path, frame: &ShipFrame) -> io::Result<u64> {
+    match frame.kind {
+        ShipKind::Group => {
+            let path = frame_path(dir, &frame.journal)?;
+            let mut f = OpenOptions::new()
+                .create(true)
+                .read(true)
+                .write(true)
+                .open(&path)?;
+            let len = f.metadata()?.len();
+            if len != frame.base {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "replication divergence on {}: local copy is {len} bytes \
+                         but the leader shipped a group at offset {}",
+                        frame.journal, frame.base
+                    ),
+                ));
+            }
+            f.seek(SeekFrom::End(0))?;
+            f.write_all(&frame.bytes)?;
+            f.sync_all()?;
+            Ok(len + frame.bytes.len() as u64)
+        }
+        ShipKind::JournalFull => {
+            let path = frame_path(dir, &frame.journal)?;
+            replace_file(&path, &frame.bytes)?;
+            Ok(frame.bytes.len() as u64)
+        }
+        ShipKind::SnapFull => {
+            let journal = frame_path(dir, &frame.journal)?;
+            let path = crate::service::journal::snapshot_path(&journal);
+            replace_file(&path, &frame.bytes)?;
+            Ok(frame.bytes.len() as u64)
+        }
+    }
+}
+
+/// What a follower did before the leader connection closed.
+#[derive(Clone, Debug, Default)]
+pub struct FollowReport {
+    /// Frames applied, by kind.
+    pub groups: u64,
+    pub rebases: u64,
+    pub snaps: u64,
+    /// Journal bytes received across all frames.
+    pub bytes: u64,
+    /// Distinct journal files touched.
+    pub journals: usize,
+}
+
+impl FollowReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("groups", self.groups as f64)
+            .set("rebases", self.rebases as f64)
+            .set("snaps", self.snaps as f64)
+            .set("bytes", self.bytes as f64)
+            .set("journals", self.journals as f64);
+        o
+    }
+}
+
+/// Tail a leader's replicated journals into `dir` until the leader
+/// closes the connection (normal shutdown or crash — the follower's
+/// copy is durable either way; promote it with
+/// `pasha serve --journal-dir <dir>`). Subscribes with `{"cmd":"sub"}`,
+/// applies every `repl` frame fsynced-before-ack, and acks each with
+/// `{"ok":true,"journal":...,"off":N,"total":T}` where `T` is the
+/// cumulative byte count (the leader's replication-lag gauge feeds on
+/// it).
+pub fn follow(addr: &str, dir: &Path) -> io::Result<FollowReport> {
+    std::fs::create_dir_all(dir)?;
+    let stream = TcpStream::connect(addr)?;
+    follow_stream(stream, dir)
+}
+
+/// [`follow`] over an already-connected stream (tests drive this
+/// directly against an in-process server).
+pub fn follow_stream(stream: TcpStream, dir: &Path) -> io::Result<FollowReport> {
+    std::fs::create_dir_all(dir)?;
+    let mut out = stream.try_clone()?;
+    out.write_all(b"{\"cmd\":\"sub\"}\n")?;
+    out.flush()?;
+    let reader = BufReader::new(stream);
+    let mut report = FollowReport::default();
+    let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            // leader died mid-line: everything acked is already durable
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = match json::parse(&line) {
+            Ok(v) => v,
+            // a leader killed mid-write leaves a torn trailing line —
+            // the same crash artifact journal recovery tolerates; every
+            // whole frame before it is already applied and durable
+            Err(_) => break,
+        };
+        if v.get("cmd").and_then(|c| c.as_str()) != Some("repl") {
+            continue; // the sub acknowledgement, or future chatter
+        }
+        let frame = ShipFrame::from_json(&v)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        let off = apply_frame(dir, &frame)?;
+        match frame.kind {
+            ShipKind::Group => report.groups += 1,
+            ShipKind::JournalFull => report.rebases += 1,
+            ShipKind::SnapFull => report.snaps += 1,
+        }
+        report.bytes += frame.bytes.len() as u64;
+        seen.insert(frame.journal.clone());
+        report.journals = seen.len();
+        let mut ack = Json::obj();
+        ack.set("ok", true)
+            .set("journal", frame.journal.as_str())
+            .set("off", off as f64)
+            .set("total", report.bytes as f64);
+        let mut ack_line = ack.to_string_compact();
+        ack_line.push('\n');
+        out.write_all(ack_line.as_bytes())?;
+        out.flush()?;
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Session router: N serving processes behind one worker-facing endpoint.
+// ---------------------------------------------------------------------------
+
+/// Attempts to reach a backend before a forward fails over: the routing
+/// table is re-read and the upstream re-dialed between attempts, so a
+/// promoted follower (at a new address written into the table) picks up
+/// mid-connection — workers just see one slow call.
+const ROUTE_RETRIES: usize = 40;
+const ROUTE_RETRY_DELAY: Duration = Duration::from_millis(250);
+
+/// The backend index serving `session` under `table` — the same FNV-1a
+/// placement rule the registry uses for shards, so the assignment is
+/// stable across router restarts. Sessionless requests (and `create`,
+/// which mints its id server-side) pin to backend 0.
+pub fn backend_for(table: &RouteSpec, session: Option<&str>) -> usize {
+    match session {
+        Some(sid) if !table.backends.is_empty() => {
+            (fnv1a64(sid.as_bytes()) % table.backends.len() as u64) as usize
+        }
+        _ => 0,
+    }
+}
+
+/// The session id a request line routes by: its `session` field, or the
+/// first op's inside a `batch` frame.
+fn route_session(req: &Json) -> Option<String> {
+    if let Some(sid) = req.get("session").and_then(|s| s.as_str()) {
+        return Some(sid.to_string());
+    }
+    if req.get("cmd").and_then(|c| c.as_str()) == Some("batch") {
+        if let Some(Json::Arr(ops)) = req.get("ops") {
+            for op in ops {
+                if let Some(sid) = op.get("session").and_then(|s| s.as_str()) {
+                    return Some(sid.to_string());
+                }
+            }
+        }
+    }
+    None
+}
+
+struct Upstream {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Upstream {
+    fn dial(addr: &str) -> io::Result<Upstream> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(Upstream {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// One request/response round-trip. An empty response line means the
+    /// backend closed on us — surfaced as an error so the caller retries.
+    fn call(&mut self, line: &str) -> io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "backend closed the connection",
+            ));
+        }
+        Ok(resp.trim_end_matches('\n').to_string())
+    }
+}
+
+/// Serve the session router: accept worker connections on `listener`
+/// and forward each request line to the backend its session id hashes
+/// to, re-reading `table_path` and re-dialing on backend failure. A
+/// sessionless `shutdown` is broadcast to every backend and then stops
+/// the router itself (mirroring how `pasha serve` treats it).
+pub fn route(listener: TcpListener, table_path: &Path) -> io::Result<()> {
+    // validate the table up front so a typo'd path fails loudly
+    RouteSpec::load(table_path).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let table = table_path.to_path_buf();
+                let stop = Arc::clone(&stop);
+                conns.push(std::thread::spawn(move || {
+                    let _ = route_conn(stream, &table, &stop);
+                }));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn route_conn(client: TcpStream, table_path: &Path, stop: &AtomicBool) -> io::Result<()> {
+    client.set_nodelay(true).ok();
+    let mut out = client.try_clone()?;
+    let reader = BufReader::new(client);
+    let mut table =
+        RouteSpec::load(table_path).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    let mut upstreams: HashMap<usize, Upstream> = HashMap::new();
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match json::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                let mut resp = Json::obj();
+                resp.set("ok", false).set("error", format!("bad request: {e}"));
+                let mut rl = resp.to_string_compact();
+                rl.push('\n');
+                out.write_all(rl.as_bytes())?;
+                continue;
+            }
+        };
+        let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
+        let sid = route_session(&req);
+        if cmd == "shutdown" && sid.is_none() {
+            // broadcast, reply with the last answer, stop routing
+            let mut last = String::from("{\"ok\":true,\"bye\":true}");
+            for idx in 0..table.backends.len() {
+                if let Ok(resp) = forward(&mut upstreams, &mut table, table_path, idx, &line) {
+                    last = resp;
+                }
+            }
+            out.write_all(last.as_bytes())?;
+            out.write_all(b"\n")?;
+            stop.store(true, Ordering::SeqCst);
+            break;
+        }
+        let idx = backend_for(&table, sid.as_deref());
+        let resp = forward(&mut upstreams, &mut table, table_path, idx, &line)?;
+        out.write_all(resp.as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Forward one line to backend `idx`, retrying across table re-reads
+/// and re-dials. At-least-once on failure: a line whose response was
+/// lost is re-sent to the (possibly promoted) backend — callers that
+/// quiesce between commit groups (the failover e2e, drained workers)
+/// see exactly-once behavior.
+fn forward(
+    upstreams: &mut HashMap<usize, Upstream>,
+    table: &mut RouteSpec,
+    table_path: &Path,
+    idx: usize,
+    line: &str,
+) -> io::Result<String> {
+    let mut last_err: Option<io::Error> = None;
+    for attempt in 0..ROUTE_RETRIES {
+        if attempt > 0 {
+            std::thread::sleep(ROUTE_RETRY_DELAY);
+            // the table may have been rewritten to point at a promoted
+            // follower — pick up the new address before re-dialing
+            if let Ok(fresh) = RouteSpec::load(table_path) {
+                *table = fresh;
+            }
+            upstreams.remove(&idx);
+        }
+        let addr = match table.backends.get(idx) {
+            Some(a) => a.clone(),
+            None => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("routing table has no backend {idx}"),
+                ))
+            }
+        };
+        if !upstreams.contains_key(&idx) {
+            match Upstream::dial(&addr) {
+                Ok(u) => {
+                    upstreams.insert(idx, u);
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    continue;
+                }
+            }
+        }
+        match upstreams.get_mut(&idx).expect("just inserted").call(line) {
+            Ok(resp) => return Ok(resp),
+            Err(e) => {
+                upstreams.remove(&idx);
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        io::Error::new(io::ErrorKind::TimedOut, "backend unreachable after retries")
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("pasha-replica-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn frame_wire_roundtrip_preserves_bytes() {
+        let bytes = b"{\"ev\":\"tell\",\"trial\":1}\n{\"ev\":\"fail\",\"trial\":2}\n".to_vec();
+        let f = ShipFrame::group("s0000.jsonl", 57, bytes.clone());
+        let line = f.to_line().unwrap();
+        assert!(line.ends_with('\n'));
+        let v = json::parse(line.trim_end()).unwrap();
+        assert_eq!(v.get("cmd").unwrap().as_str(), Some("repl"));
+        let back = ShipFrame::from_json(&v).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(back.bytes, bytes, "journal bytes survive the wire exactly");
+        // full frames too
+        for f in [
+            ShipFrame::journal_full("s0001.jsonl", b"{\"ev\":\"create\"}\n".to_vec()),
+            ShipFrame::snap_full("s0001.jsonl", b"{\"ev\":\"snapshot\"}\n".to_vec()),
+        ] {
+            let v = json::parse(f.to_line().unwrap().trim_end()).unwrap();
+            assert_eq!(ShipFrame::from_json(&v).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn apply_group_appends_and_acks_offset() {
+        let dir = tmp_dir("apply");
+        let head = b"{\"ev\":\"create\",\"session\":\"s0\"}\n".to_vec();
+        let off = apply_frame(&dir, &ShipFrame::journal_full("s0.jsonl", head.clone())).unwrap();
+        assert_eq!(off, head.len() as u64);
+        let tail = b"{\"ev\":\"tell\",\"trial\":0}\n".to_vec();
+        let off2 = apply_frame(
+            &dir,
+            &ShipFrame::group("s0.jsonl", head.len() as u64, tail.clone()),
+        )
+        .unwrap();
+        assert_eq!(off2, (head.len() + tail.len()) as u64);
+        let mut want = head.clone();
+        want.extend_from_slice(&tail);
+        assert_eq!(std::fs::read(dir.join("s0.jsonl")).unwrap(), want);
+        // a gap or overlap is divergence, refused
+        let bad = apply_frame(&dir, &ShipFrame::group("s0.jsonl", 0, tail.clone()));
+        assert_eq!(bad.unwrap_err().kind(), io::ErrorKind::InvalidData);
+        assert_eq!(
+            std::fs::read(dir.join("s0.jsonl")).unwrap(),
+            want,
+            "refused frame leaves the copy untouched"
+        );
+        // snapshot sidecar frames land next to the journal
+        apply_frame(&dir, &ShipFrame::snap_full("s0.jsonl", b"snap\n".to_vec())).unwrap();
+        assert_eq!(std::fs::read(dir.join("s0.jsonl.snap")).unwrap(), b"snap\n");
+    }
+
+    #[test]
+    fn suspicious_frame_names_are_refused() {
+        let dir = tmp_dir("names");
+        for name in ["../etc/passwd", "a/b.jsonl", "", ".hidden", "a\\b"] {
+            let err = apply_frame(&dir, &ShipFrame::journal_full(name, b"x".to_vec()))
+                .expect_err("must refuse");
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{name:?}");
+        }
+    }
+
+    #[test]
+    fn backend_placement_is_stable_and_sessionless_pins_to_zero() {
+        let table = RouteSpec {
+            backends: vec!["a:1".into(), "b:2".into(), "c:3".into()],
+        };
+        assert_eq!(backend_for(&table, None), 0);
+        let mut spread = std::collections::HashSet::new();
+        for i in 0..64 {
+            let sid = format!("s{i:04}");
+            let idx = backend_for(&table, Some(&sid));
+            assert!(idx < 3);
+            assert_eq!(idx, backend_for(&table, Some(&sid)), "stable placement");
+            spread.insert(idx);
+        }
+        assert!(spread.len() > 1, "sessions spread across backends");
+    }
+
+    #[test]
+    fn route_session_reads_batch_ops() {
+        let req = json::parse(
+            "{\"cmd\":\"batch\",\"ops\":[{\"cmd\":\"ask\",\"session\":\"s7\"},\
+             {\"cmd\":\"tell\",\"session\":\"s7\"}]}",
+        )
+        .unwrap();
+        assert_eq!(route_session(&req).as_deref(), Some("s7"));
+        let plain = json::parse("{\"cmd\":\"ask\",\"session\":\"s1\"}").unwrap();
+        assert_eq!(route_session(&plain).as_deref(), Some("s1"));
+        let none = json::parse("{\"cmd\":\"ping\"}").unwrap();
+        assert_eq!(route_session(&none), None);
+    }
+}

@@ -20,6 +20,7 @@
 //!                                                    -> {"ok":true,"ack":"continue"}
 //! {"cmd":"fail","session":"s0000","trial":3}         -> {"ok":true}
 //! {"cmd":"expire","session":"s0000"}                 -> {"ok":true,"expired":2}
+//! {"cmd":"expire","session":"s0000","worker":"w1"}   -> {"ok":true,"expired":1}
 //! {"cmd":"status","session":"s0000"}                 -> {"ok":true,"status":{...}}
 //! {"cmd":"sessions"}                                 -> {"ok":true,"sessions":[...]}
 //! {"cmd":"stats"}                                    -> {"ok":true,"stats":{...}}
@@ -186,7 +187,16 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
         }
         "expire" => {
             let sid = str_field(req, "session")?;
-            let expired = registry.with_session(sid, |s| s.expire_workers())??;
+            // `worker` narrows the expiry to one identity (what the
+            // lease tick and targeted recovery use); omitting it keeps
+            // the legacy everyone-at-once semantics.
+            let expired = match req.get("worker").and_then(|w| w.as_str()) {
+                Some(worker) => {
+                    let worker = worker.to_string();
+                    registry.with_session(sid, move |s| s.expire_worker(&worker))??
+                }
+                None => registry.with_session(sid, |s| s.expire_workers())??,
+            };
             resp.set("expired", expired);
         }
         "status" => {
@@ -230,6 +240,12 @@ fn dispatch(registry: &Registry, req: &Json) -> Result<Json, ServiceError> {
         "shutdown" => {
             resp.set("bye", true);
         }
+        // replication handshakes belong on the dedicated listener
+        "sub" | "repl" => {
+            return Err(ServiceError::Request(
+                "replication commands go to the --replicate listener, not the serve port".into(),
+            ));
+        }
         other => {
             return Err(ServiceError::Request(format!("unknown cmd '{other}'")));
         }
@@ -247,6 +263,9 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     io_threads: usize,
     metrics: Option<TcpListener>,
+    replicate: Option<TcpListener>,
+    worker_lease: Option<Duration>,
+    drain_deadline: Option<Duration>,
 }
 
 impl Server {
@@ -260,6 +279,9 @@ impl Server {
             shutdown: Arc::new(AtomicBool::new(false)),
             io_threads: DEFAULT_IO_THREADS,
             metrics: None,
+            replicate: None,
+            worker_lease: None,
+            drain_deadline: None,
         })
     }
 
@@ -283,6 +305,39 @@ impl Server {
         self.metrics.as_ref().and_then(|m| m.local_addr().ok())
     }
 
+    /// Also bind `addr` as the replication listener (`serve
+    /// --replicate`): `pasha follow` subscribers connect here and
+    /// receive every durable commit group ([`crate::service::replica`]).
+    /// Served off I/O thread 0's readiness poller, like the metrics
+    /// endpoint. Event-driven path only; [`Server::run_threaded`]
+    /// ignores it.
+    pub fn replicate_addr(mut self, addr: &str) -> io::Result<Server> {
+        self.replicate = Some(TcpListener::bind(addr)?);
+        Ok(self)
+    }
+
+    /// Local address of the replication listener, if one was bound.
+    pub fn replicate_local_addr(&self) -> Option<SocketAddr> {
+        self.replicate.as_ref().and_then(|r| r.local_addr().ok())
+    }
+
+    /// Expire a worker's in-flight jobs when it has not asked or told
+    /// for `lease` (`serve --worker-lease`): each shard worker sweeps
+    /// its sessions periodically, journaling the expiry like a
+    /// client-driven `expire`. Event-driven path only.
+    pub fn worker_lease(mut self, lease: Duration) -> Server {
+        self.worker_lease = Some(lease);
+        self
+    }
+
+    /// Override how long a shutdown drain waits for slow clients before
+    /// force-closing them (default 5s). Committed responses are still
+    /// released and flushed when the deadline fires.
+    pub fn drain_deadline(mut self, deadline: Duration) -> Server {
+        self.drain_deadline = Some(deadline);
+        self
+    }
+
     pub fn local_addr(&self) -> io::Result<SocketAddr> {
         self.listener.local_addr()
     }
@@ -300,12 +355,18 @@ impl Server {
     /// in-flight op and flushed every connection.
     #[cfg(unix)]
     pub fn run(self) -> io::Result<()> {
-        crate::service::eventloop::run(
+        use crate::service::eventloop::{self, RunCfg};
+        eventloop::run(
             self.listener,
             self.registry,
             self.shutdown,
-            self.io_threads,
-            self.metrics,
+            RunCfg {
+                io_threads: self.io_threads,
+                metrics: self.metrics,
+                replicate: self.replicate,
+                worker_lease: self.worker_lease,
+                drain_deadline: self.drain_deadline.unwrap_or(eventloop::DRAIN_DEADLINE),
+            },
         )
     }
 
@@ -640,6 +701,33 @@ mod tests {
         let results = resp.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results[0].get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(results[1].get("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn expire_with_worker_field_targets_one_identity() {
+        let (reg, id) = reg_with_session();
+        let ask_w0 = format!("{{\"cmd\":\"ask\",\"session\":\"{id}\",\"worker\":\"w0\"}}");
+        let ask_w1 = format!("{{\"cmd\":\"ask\",\"session\":\"{id}\",\"worker\":\"w1\"}}");
+        let a0 = handle_request(&reg, &req(&ask_w0));
+        assert_eq!(a0.get("type").unwrap().as_str(), Some("run"));
+        let a1 = handle_request(&reg, &req(&ask_w1));
+        assert_eq!(a1.get("type").unwrap().as_str(), Some("run"));
+        // expire only w0: exactly its one job re-queues
+        let expire = format!("{{\"cmd\":\"expire\",\"session\":\"{id}\",\"worker\":\"w0\"}}");
+        let r = handle_request(&reg, &req(&expire));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("expired").unwrap().as_f64(), Some(1.0));
+        // w0's trial is re-offered; w1's job is untouched and its tell
+        // still lands
+        let again = handle_request(&reg, &req(&ask_w0));
+        assert_eq!(again.get("type").unwrap().as_str(), Some("run"));
+        assert_eq!(again.get("trial"), a0.get("trial"));
+        let t1 = a1.get("trial").unwrap().as_f64().unwrap() as usize;
+        let tell = format!(
+            "{{\"cmd\":\"tell\",\"session\":\"{id}\",\"trial\":{t1},\"epoch\":1,\"metric\":55}}"
+        );
+        let r = handle_request(&reg, &req(&tell));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
     }
 
     #[test]

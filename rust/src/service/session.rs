@@ -19,15 +19,19 @@
 
 use crate::scheduler::asktell::{assignment_json, config_json, AskTell, TellAck, TrialAssignment};
 use crate::service::journal::{
-    self, ev_ask, ev_create, ev_create_at, ev_expire, ev_fail, ev_snapshot, ev_tell, Journal,
+    self, ev_ask, ev_create, ev_create_at, ev_expire, ev_expire_worker, ev_fail, ev_snapshot,
+    ev_tell, Journal,
 };
 use crate::service::registry::ServiceError;
+use crate::service::replica::ShipFrame;
 use crate::spec::ExperimentSpec;
 use crate::store::{self, StoreSpec};
 use crate::util::json::Json;
 use crate::TrialId;
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Snapshot/compaction policy for a durable session.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -127,6 +131,18 @@ pub struct Session {
     /// conservation oracle compares this against the journal's literal
     /// `ask` event count.
     asks_journaled: Option<Arc<crate::obs::Counter>>,
+    /// Replication shipping is on: durable journal bytes are retained
+    /// after each commit and queued as [`ShipFrame`]s for a follower.
+    /// Observe-only — the journal bytes on disk are identical either way.
+    shipping: bool,
+    /// Frames awaiting collection by the replication layer
+    /// ([`Session::drain_ship_frames`]), in the order they must apply.
+    ship_queue: Vec<ShipFrame>,
+    /// Wall-clock last-seen instant per worker, fed by `ask`/`tell`/`fail`.
+    /// Not journaled (recovery starts fresh — post-restart workers are
+    /// known gone and handled by the recovery-time expire); used only by
+    /// the per-shard lease-expiry tick.
+    leases: HashMap<String, Instant>,
 }
 
 impl Session {
@@ -180,6 +196,9 @@ impl Session {
             ingested: false,
             store_error: None,
             asks_journaled: None,
+            shipping: false,
+            ship_queue: Vec::new(),
+            leases: HashMap::new(),
         };
         session.attach_obs();
         Ok(session)
@@ -309,6 +328,9 @@ impl Session {
             ingested: false,
             store_error: None,
             asks_journaled: None,
+            shipping: false,
+            ship_queue: Vec::new(),
+            leases: HashMap::new(),
         };
         // before replay: replayed events re-increment the same counters a
         // live run would, so post-recovery metrics match the journal
@@ -426,7 +448,16 @@ impl Session {
                 Ok(())
             }
             Some("expire") => {
-                self.core.expire_workers();
+                // with a worker field: one lease expired (the per-shard
+                // tick); argless: every worker (the legacy operator op)
+                match ev.get("worker").and_then(|v| v.as_str()) {
+                    Some(w) => {
+                        self.core.expire_worker(w);
+                    }
+                    None => {
+                        self.core.expire_workers();
+                    }
+                }
                 Ok(())
             }
             other => Err(format!("unknown journal event {other:?}")),
@@ -479,8 +510,67 @@ impl Session {
                     self.id
                 )));
             }
+            // fsync-then-ship: only bytes the commit above made durable
+            // are ever handed to the replication layer
+            if self.shipping {
+                if let Some((base, bytes)) = j.take_shipped() {
+                    let name = Self::file_name(j.path());
+                    self.ship_queue.push(ShipFrame::group(&name, base, bytes));
+                }
+            }
         }
         Ok(())
+    }
+
+    /// Journal file name used as the replication frame key (`s0000.jsonl`).
+    fn file_name(path: &Path) -> String {
+        path.file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string())
+    }
+
+    /// Turn replication shipping on (or off). Enabling queues full-file
+    /// rebase frames for the journal and its snapshot sidecar so a
+    /// subscriber starts from an exact byte-level copy, then every
+    /// subsequent [`Session::commit_journal`] queues the durable commit
+    /// group as an incremental frame. Observe-only: nothing about the
+    /// journal's own bytes or fsync schedule changes.
+    pub fn set_shipping(&mut self, on: bool) -> Result<(), ServiceError> {
+        self.shipping = on;
+        if !on {
+            self.ship_queue.clear();
+            return Ok(());
+        }
+        self.queue_rebase()
+    }
+
+    /// Queue full-file frames positioning a (new) subscriber at the
+    /// journal's current durable state. Commits first so the shipped
+    /// bytes are exactly the file's; any incremental bytes retained but
+    /// not yet taken are folded into the full frame and dropped.
+    fn queue_rebase(&mut self) -> Result<(), ServiceError> {
+        let Some(path) = self.journal.as_ref().map(|j| j.path().to_path_buf()) else {
+            return Ok(());
+        };
+        self.commit_journal()?;
+        let name = Self::file_name(&path);
+        if let Some(j) = self.journal.as_mut() {
+            j.enable_shipping();
+            let _ = j.take_shipped();
+        }
+        self.ship_queue.retain(|f| f.journal != name);
+        let bytes = std::fs::read(&path).map_err(|e| ServiceError::Io(e.to_string()))?;
+        self.ship_queue.push(ShipFrame::journal_full(&name, bytes));
+        let snap_path = journal::snapshot_path(&path);
+        if let Ok(bytes) = std::fs::read(&snap_path) {
+            self.ship_queue.push(ShipFrame::snap_full(&name, bytes));
+        }
+        Ok(())
+    }
+
+    /// Drain the frames queued since the last drain, in apply order.
+    pub fn drain_ship_frames(&mut self) -> Vec<ShipFrame> {
+        std::mem::take(&mut self.ship_queue)
     }
 
     /// Events appended since creation/recovery (journal-less sessions
@@ -549,7 +639,23 @@ impl Session {
             }
             self.trim_sidecar(&snap_path, 2)?;
         }
+        // ship the sidecar as it finally stands (post-trim), so the
+        // follower's copy stays a byte-level mirror
+        self.queue_snap_frame(&journal_path, &snap_path);
         Ok(())
+    }
+
+    /// Queue a full-sidecar replication frame (no-op when shipping is
+    /// off or the sidecar is unreadable — snapshots are an optimization,
+    /// the journal frames alone keep the follower recoverable).
+    fn queue_snap_frame(&mut self, journal_path: &Path, snap_path: &Path) {
+        if !self.shipping {
+            return;
+        }
+        if let Ok(bytes) = std::fs::read(snap_path) {
+            let name = Self::file_name(journal_path);
+            self.ship_queue.push(ShipFrame::snap_full(&name, bytes));
+        }
     }
 
     /// Rewrite the journal tail atomically so it starts at absolute event
@@ -588,6 +694,11 @@ impl Session {
         fresh.set_obs(&self.id);
         self.journal = Some(fresh);
         self.base = new_base;
+        // the rewrite invalidated any follower's byte-level copy; queue a
+        // full-file rebase so replication survives handle replacement
+        if self.shipping {
+            self.queue_rebase()?;
+        }
         Ok(())
     }
 
@@ -634,6 +745,7 @@ impl Session {
         self.snapshots.push(self.events_total);
         self.compact_tail_to(&journal_path, self.events_total)?;
         self.trim_sidecar(&snap_path, 2)?;
+        self.queue_snap_frame(&journal_path, &snap_path);
         Ok(())
     }
 
@@ -654,6 +766,7 @@ impl Session {
     /// replay for recovery to stay byte-identical.
     pub fn ask(&mut self, worker: &str) -> Result<TrialAssignment, ServiceError> {
         self.check_poisoned()?;
+        self.leases.insert(worker.to_string(), Instant::now());
         let before = self.core.mutation_count();
         let assignment = self.core.ask(worker);
         if assignment.is_mutation() || self.core.mutation_count() != before {
@@ -696,6 +809,7 @@ impl Session {
         metric: f64,
     ) -> Result<TellAck, ServiceError> {
         self.check_poisoned()?;
+        self.touch_lease_of(trial);
         self.append(&ev_tell(trial, epoch, metric))?;
         let ack = self.core.tell(trial, epoch, metric).map_err(ServiceError::Session);
         self.maybe_snapshot();
@@ -705,10 +819,21 @@ impl Session {
     /// A worker reported failure while running `trial`.
     pub fn fail(&mut self, trial: TrialId) -> Result<(), ServiceError> {
         self.check_poisoned()?;
+        self.touch_lease_of(trial);
         self.append(&ev_fail(trial))?;
         let r = self.core.fail(trial).map_err(ServiceError::Session);
         self.maybe_snapshot();
         r
+    }
+
+    /// Refresh the lease of whichever worker holds `trial` — a `tell`
+    /// or `fail` proves that worker alive even though neither op names
+    /// it on the wire.
+    fn touch_lease_of(&mut self, trial: TrialId) {
+        if let Some(w) = self.core.worker_of(trial) {
+            let w = w.to_string();
+            self.leases.insert(w, Instant::now());
+        }
     }
 
     /// Retire all in-flight jobs (operator action after worker loss).
@@ -716,8 +841,47 @@ impl Session {
         self.check_poisoned()?;
         self.append(&ev_expire())?;
         let n = self.core.expire_workers();
+        self.leases.clear();
         self.maybe_snapshot();
         Ok(n)
+    }
+
+    /// Expire one worker's lease: its in-flight jobs re-queue (handed
+    /// deterministically to the next asking worker) and its pending
+    /// directives drop. Journaled like every other mutation.
+    pub fn expire_worker(&mut self, worker: &str) -> Result<usize, ServiceError> {
+        self.check_poisoned()?;
+        self.append(&ev_expire_worker(worker))?;
+        let n = self.core.expire_worker(worker);
+        self.leases.remove(worker);
+        self.maybe_snapshot();
+        Ok(n)
+    }
+
+    /// The per-shard liveness tick: expire every worker not seen for
+    /// `lease` that still holds work. Workers are expired in name order
+    /// so the journal (and therefore replay) is deterministic; idle
+    /// stale workers are forgotten without a journal event. A poisoned
+    /// session is skipped, not an error — the tick must never kill the
+    /// shard loop.
+    pub fn expire_stale(&mut self, lease: Duration) -> Result<Vec<String>, ServiceError> {
+        if self.poisoned || self.leases.is_empty() {
+            return Ok(Vec::new());
+        }
+        let now = Instant::now();
+        let core = &self.core;
+        let mut stale: Vec<String> = self
+            .leases
+            .iter()
+            .filter(|(w, t)| now.duration_since(**t) >= lease && core.worker_busy(w))
+            .map(|(w, _)| w.clone())
+            .collect();
+        stale.sort();
+        for w in &stale {
+            self.expire_worker(w)?;
+        }
+        self.leases.retain(|_, t| now.duration_since(*t) < lease);
+        Ok(stale)
     }
 
     /// Read-only status summary (what `pasha sessions` renders).

@@ -21,9 +21,11 @@
 
 mod cli;
 mod codec;
+mod route;
 mod v1;
 
 pub use cli::{apply_flag_overrides, parse_ranking, SPEC_FLAGS};
+pub use route::{RouteSpec, ROUTE_VERSION};
 
 use crate::benchmarks::lcbench::{self, LcBench};
 use crate::benchmarks::nasbench201::NasBench201;

@@ -1,0 +1,144 @@
+//! The session-routing table: which serving backends exist, in what
+//! order — the `ExecSpec`-style plain-struct-plus-versioned-codec that
+//! `pasha route` reads (and re-reads during failover).
+//!
+//! A [`RouteSpec`] file is a tiny JSON document:
+//!
+//! ```json
+//! {"version":1,"backends":["127.0.0.1:7171","127.0.0.1:7271"]}
+//! ```
+//!
+//! Placement is *positional*: session `sid` is served by
+//! `backends[fnv1a64(sid) % len]` (see
+//! [`crate::service::replica::backend_for`]), so editing an entry
+//! in place — the promotion runbook's "swap the dead leader's address
+//! for the promoted follower's" — re-routes exactly that backend's
+//! sessions and nothing else. Reordering or resizing the list reshuffles
+//! placement and is only safe with no sessions in flight.
+
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// Current wire-format version written by [`RouteSpec::to_json`].
+pub const ROUTE_VERSION: u32 = 1;
+
+/// A validated routing table: one `host:port` per serving backend.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteSpec {
+    pub backends: Vec<String>,
+}
+
+impl RouteSpec {
+    pub fn new(backends: Vec<String>) -> RouteSpec {
+        RouteSpec { backends }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.backends.is_empty() {
+            return Err("field 'backends': must list at least one backend".into());
+        }
+        for (i, b) in self.backends.iter().enumerate() {
+            if b.trim().is_empty() {
+                return Err(format!("field 'backends[{i}]': must not be empty"));
+            }
+            if !b.contains(':') {
+                return Err(format!("field 'backends[{i}]': expected host:port, got {b:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let backends = self.backends.iter().map(|b| Json::Str(b.clone())).collect();
+        o.set("version", ROUTE_VERSION as f64)
+            .set("backends", Json::Arr(backends));
+        o
+    }
+
+    /// Strict parse: unknown keys, a missing/foreign version, and
+    /// malformed entries are named errors, same stance as
+    /// [`crate::spec::ExperimentSpec::from_json`].
+    pub fn from_json(v: &Json) -> Result<RouteSpec, String> {
+        let Json::Obj(pairs) = v else {
+            return Err("routing table must be a JSON object".into());
+        };
+        for (k, _) in pairs {
+            if k != "version" && k != "backends" {
+                return Err(format!("unknown field '{k}' in routing table"));
+            }
+        }
+        let version = v
+            .get("version")
+            .and_then(|x| x.as_f64())
+            .ok_or("field 'version': required")?;
+        if version != ROUTE_VERSION as f64 {
+            return Err(format!("field 'version': expected {ROUTE_VERSION}, got {version}"));
+        }
+        let Some(Json::Arr(items)) = v.get("backends") else {
+            return Err("field 'backends': required array".into());
+        };
+        let mut backends = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            match item.as_str() {
+                Some(s) => backends.push(s.to_string()),
+                None => return Err(format!("field 'backends[{i}]': must be a string")),
+            }
+        }
+        let spec = RouteSpec { backends };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Read and validate a table file.
+    pub fn load(path: &Path) -> Result<RouteSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read routing table {}: {e}", path.display()))?;
+        let v = json::parse(text.trim())
+            .map_err(|e| format!("routing table {}: {e}", path.display()))?;
+        Self::from_json(&v).map_err(|e| format!("routing table {}: {e}", path.display()))
+    }
+
+    /// Write the table (one line, trailing newline) — what the failover
+    /// runbook edits and the e2e rewrites at promotion time.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        self.validate()?;
+        let mut line = self.to_json().to_string_compact();
+        line.push('\n');
+        std::fs::write(path, line)
+            .map_err(|e| format!("cannot write routing table {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_validation() {
+        let spec = RouteSpec::new(vec!["127.0.0.1:7171".into(), "127.0.0.1:7271".into()]);
+        spec.validate().unwrap();
+        let back = RouteSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+
+        assert!(RouteSpec::new(vec![]).validate().is_err(), "empty table");
+        assert!(
+            RouteSpec::new(vec!["noport".into()]).validate().is_err(),
+            "host:port enforced"
+        );
+
+        let bad = json::parse("{\"version\":1,\"backends\":[\"a:1\"],\"extra\":0}").unwrap();
+        assert!(RouteSpec::from_json(&bad).unwrap_err().contains("extra"));
+        let wrong_v = json::parse("{\"version\":9,\"backends\":[\"a:1\"]}").unwrap();
+        assert!(RouteSpec::from_json(&wrong_v).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = std::env::temp_dir().join(format!("pasha-route-{}.json", std::process::id()));
+        let spec = RouteSpec::new(vec!["127.0.0.1:7171".into()]);
+        spec.save(&path).unwrap();
+        assert_eq!(RouteSpec::load(&path).unwrap(), spec);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -29,6 +29,18 @@
 //!   events + 1, in-flight drains to 0 at shutdown).
 //! * **Metrics inertness** — identical sessions with the metrics gate
 //!   on and off must leave byte-identical journals.
+//! * **Replication & failover** — `serve --replicate` streams every
+//!   durable commit group to a `follow` process whose journal directory
+//!   stays a byte-identical mirror; SIGKILL the leader mid-tune and the
+//!   promoted follower completes the session through the `route`
+//!   session router with byte-identical asks and the same incumbent.
+//!   Randomized kill points prove (snapshot + tail) and full-replay
+//!   recovery agree byte-for-byte from both the leader's and the
+//!   follower's directory.
+//! * **Worker-lease expiry** — a worker that dies mid-job is expired by
+//!   the per-shard liveness tick and its job re-assigned verbatim to
+//!   the next asking worker; a forced shutdown drain honors its
+//!   configured deadline without losing acked-and-durable ops.
 
 use pasha::benchmarks::Benchmark;
 use pasha::scheduler::asktell::{assignment_json, config_from_json, TellAck, TrialAssignment};
@@ -1076,5 +1088,567 @@ mod obs_e2e {
         assert!(!on.is_empty(), "instrumented run journaled nothing");
         assert_eq!(on, off, "metrics gate must never reach the journal bytes");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Replication, lease-expiry, forced-drain, and leader-failover E2E
+/// (`serve --replicate`, `follow`, `route`). In-process where the
+/// property allows it; across real process boundaries — SIGKILL
+/// included — where it does not.
+#[cfg(unix)]
+mod replication_e2e {
+    use super::*;
+    use pasha::service::replica;
+    use pasha::spec::RouteSpec;
+    use std::process::{Child, Command, Stdio};
+    use std::time::Instant;
+
+    fn wait_for(mut cond: impl FnMut() -> bool, ms: u64, what: &str) {
+        let deadline = Instant::now() + Duration::from_millis(ms);
+        while Instant::now() < deadline {
+            if cond() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    fn pasha_bin() -> Command {
+        Command::new(env!("CARGO_BIN_EXE_pasha"))
+    }
+
+    /// A loopback address with a port the OS just proved free.
+    fn free_addr() -> String {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap().to_string();
+        drop(l);
+        a
+    }
+
+    fn connect_when_up(addr: &str) -> Client {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match Client::connect(addr) {
+                Ok(c) => return c,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        panic!("connect {addr}: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(40));
+                }
+            }
+        }
+    }
+
+    /// Drive an in-process session to completion with one worker,
+    /// recording the canonical encoding of every ask response.
+    fn drive_solo_recording(
+        session: &mut Session,
+        bench: &dyn Benchmark,
+        bench_seed: u64,
+    ) -> Vec<String> {
+        let mut asks = Vec::new();
+        loop {
+            let a = session.ask("w0").unwrap();
+            asks.push(assignment_json(&a).to_string_compact());
+            match a {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, bench_seed);
+                        if session.tell(job.trial, e, m).unwrap() == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => panic!("single worker never waits"),
+                TrialAssignment::Done => return asks,
+            }
+        }
+    }
+
+    /// The canonical continuation of a crashed session: expire the dead
+    /// workers' leases (the promotion runbook's first step), then drive
+    /// to completion recording every ask plus the final incumbent.
+    fn crashed_continuation(
+        session: &mut Session,
+        bench: &dyn Benchmark,
+        bench_seed: u64,
+    ) -> (usize, Vec<String>, Option<(usize, u64)>) {
+        let expired = session.expire_workers().unwrap();
+        let asks = drive_solo_recording(session, bench, bench_seed);
+        let best = session
+            .core_ref()
+            .best()
+            .map(|b| (b.trial, b.metric.to_bits()));
+        (expired, asks, best)
+    }
+
+    /// A follower attached to an in-process leader mirrors every
+    /// session journal byte-for-byte, including one created mid-stream,
+    /// and the mirror recovers to the same incumbent.
+    #[test]
+    fn follower_mirrors_leader_journals_byte_for_byte() {
+        let ldir = tmp_dir("mirror-l");
+        let fdir = tmp_dir("mirror-f");
+        let registry = Registry::with_journal_dir(ldir.clone()).unwrap();
+        let server = Server::bind("127.0.0.1:0", Arc::new(registry))
+            .unwrap()
+            .replicate_addr("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let raddr = server.replicate_local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let follow_dir = fdir.clone();
+        let follower = std::thread::spawn(move || replica::follow(&raddr, &follow_dir));
+
+        let spec = spec_for("asha", SearcherSpec::Random, 12);
+        let bench = spec.bench.build().unwrap();
+        let mut client = Client::connect(&addr).unwrap();
+        let sid = client.create(&spec).unwrap();
+        wait_for(
+            || fdir.join(format!("{sid}.jsonl")).exists(),
+            15_000,
+            "follower subscription",
+        );
+        run_worker(
+            &mut client,
+            &sid,
+            "w0",
+            bench.as_ref(),
+            spec.bench_seed,
+            Duration::from_millis(1),
+        )
+        .unwrap();
+        // a session created mid-stream rides the same subscription
+        let sid2 = client.create(&spec).unwrap();
+        run_worker(
+            &mut client,
+            &sid2,
+            "w0",
+            bench.as_ref(),
+            spec.bench_seed,
+            Duration::from_millis(1),
+        )
+        .unwrap();
+        client.shutdown().unwrap();
+        server_thread.join().unwrap().unwrap();
+        let report = follower.join().unwrap().unwrap();
+        assert!(report.bytes > 0, "frames flowed: {report:?}");
+        assert_eq!(report.journals, 2, "both sessions replicated: {report:?}");
+
+        for id in [&sid, &sid2] {
+            let name = format!("{id}.jsonl");
+            let l = std::fs::read(ldir.join(&name)).unwrap();
+            let f = std::fs::read(fdir.join(&name)).unwrap();
+            assert!(!l.is_empty(), "leader journaled {name}");
+            assert_eq!(l, f, "{name}: follower copy is byte-identical");
+            let (a, _) = Session::recover_readonly(&ldir.join(&name)).unwrap();
+            let (b, _) = Session::recover_readonly(&fdir.join(&name)).unwrap();
+            let ba = a.core_ref().best().unwrap();
+            let bb = b.core_ref().best().unwrap();
+            assert_eq!(ba.trial, bb.trial, "{name}: same incumbent trial");
+            let (ma, mb) = (ba.metric.to_bits(), bb.metric.to_bits());
+            assert_eq!(ma, mb, "{name}: same incumbent metric");
+        }
+        for d in [&ldir, &fdir] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+
+    /// A worker that goes silent mid-job under `--shards` is expired by
+    /// the per-shard liveness tick — with no client op to piggyback on —
+    /// and its exact job is re-assigned to the next asking worker.
+    #[test]
+    fn worker_lease_expiry_requeues_dead_workers_job_under_shards() {
+        let dir = tmp_dir("lease");
+        let opts = SessionOptions::default();
+        let registry = Registry::with_journal_dir_sharded(dir.clone(), opts, 4).unwrap();
+        let server = Server::bind("127.0.0.1:0", Arc::new(registry))
+            .unwrap()
+            .worker_lease(Duration::from_millis(250));
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let spec = spec_for("asha", SearcherSpec::Random, 8);
+        let bench = spec.bench.build().unwrap();
+        let space = bench.space().clone();
+        let mut control = Client::connect(&addr).unwrap();
+        let sid = control.create(&spec).unwrap();
+
+        // w0 takes a job, then its process "dies" (drops the conn)
+        let mut w0 = Client::connect(&addr).unwrap();
+        let job = match w0.ask(&sid, "w0", &space).unwrap() {
+            TrialAssignment::Run(job) => job,
+            other => panic!("expected a job for w0, got {other:?}"),
+        };
+        drop(w0);
+
+        // the shard's liveness tick journals the expiry on its own
+        let journal_path = dir.join(format!("{sid}.jsonl"));
+        wait_for(
+            || {
+                std::fs::read_to_string(&journal_path)
+                    .map(|j| {
+                        j.lines().any(|l| {
+                            l.contains("\"ev\":\"expire\"") && l.contains("\"worker\":\"w0\"")
+                        })
+                    })
+                    .unwrap_or(false)
+            },
+            15_000,
+            "lease expiry to be journaled",
+        );
+
+        // deterministic re-assignment: the next asking worker receives
+        // the identical job the dead worker held
+        let retry = match control.ask(&sid, "w1", &space).unwrap() {
+            TrialAssignment::Run(job) => job,
+            other => panic!("expected the re-queued job for w1, got {other:?}"),
+        };
+        assert_eq!(retry, job, "dead worker's job re-assigned verbatim");
+
+        control.shutdown().unwrap();
+        server_thread.join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A client that pipelines requests but never reads responses jams
+    /// its connection; shutdown must be bounded by the configured drain
+    /// deadline — not the jam — and every acked op stays durable.
+    #[test]
+    fn forced_drain_honors_deadline_and_keeps_acked_ops_durable() {
+        use std::io::Write;
+        let dir = tmp_dir("forcedrain");
+        let registry = Registry::with_journal_dir(dir.clone()).unwrap();
+        let server = Server::bind("127.0.0.1:0", Arc::new(registry))
+            .unwrap()
+            .drain_deadline(Duration::from_millis(300));
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let spec = spec_for("asha", SearcherSpec::Random, 40);
+        let bench = spec.bench.build().unwrap();
+        let space = bench.space().clone();
+        let mut control = Client::connect(&addr).unwrap();
+        let sid = control.create(&spec).unwrap();
+
+        // acked-and-durable work on a well-behaved connection
+        let mut acked = 0usize;
+        for _ in 0..6 {
+            let a = control.ask(&sid, "wb", &space).unwrap();
+            if !matches!(a, TrialAssignment::Wait | TrialAssignment::Done) {
+                acked += 1;
+            }
+        }
+        assert!(acked > 0, "no journaled asks to check durability with");
+
+        let stalled = std::net::TcpStream::connect(&addr).unwrap();
+        stalled.set_nonblocking(true).unwrap();
+        let req = format!("{{\"cmd\":\"status\",\"session\":\"{sid}\"}}\n");
+        let req = req.as_bytes();
+        let mut written = 0usize;
+        let mut idle = 0u32;
+        while written < 4 * 1024 * 1024 {
+            match (&stalled).write(req) {
+                Ok(0) => break,
+                Ok(n) => {
+                    written += n;
+                    idle = 0;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    idle += 1;
+                    if idle > 50 {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => panic!("stalled writer failed: {e}"),
+            }
+        }
+        assert!(written > 0, "jammed connection wrote nothing");
+        // let the server answer into the (now jammed) write queue
+        std::thread::sleep(Duration::from_millis(300));
+
+        let t0 = Instant::now();
+        control.shutdown().unwrap();
+        server_thread.join().unwrap().unwrap();
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(4),
+            "configured 300ms drain deadline not honored: took {waited:?}"
+        );
+        drop(stalled);
+
+        // every acked ask reached the journal before its response
+        let journal = std::fs::read_to_string(dir.join(format!("{sid}.jsonl"))).unwrap();
+        let asks = journal
+            .lines()
+            .filter(|l| l.contains("\"ev\":\"ask\""))
+            .count();
+        assert!(
+            asks >= acked,
+            "forced drain lost acked asks: journal holds {asks} ask events, acked {acked}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Cross-process crash-recovery property: SIGKILL a replicating
+    /// leader at randomized commit-group boundaries; the follower's copy
+    /// is a byte prefix of the leader's, and for BOTH directories a
+    /// (snapshot + tail) recovery and a full-replay recovery continue
+    /// the session byte-identically to the same incumbent.
+    #[test]
+    fn sigkill_crash_recovery_agrees_from_leader_and_follower_dirs() {
+        // fixed-seed LCG: deterministic in CI, spread across the run
+        let mut lcg: u64 = 0x2545_F491_4F6C_DD1D;
+        let mut kill_points = Vec::new();
+        for _ in 0..3 {
+            lcg = lcg
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            kill_points.push(5 + ((lcg >> 33) as usize % 14)); // asks 5..=18
+        }
+
+        let spec = spec_for("asha", SearcherSpec::Random, 16);
+        let bench = spec.bench.build().unwrap();
+        let space = bench.space().clone();
+
+        for (i, &kill_at) in kill_points.iter().enumerate() {
+            let ldir = tmp_dir(&format!("crash-l{i}"));
+            let fdir = tmp_dir(&format!("crash-f{i}"));
+            let scratch = tmp_dir(&format!("crash-s{i}"));
+            let addr = free_addr();
+            let raddr = free_addr();
+            let mut leader = pasha_bin()
+                .args([
+                    "serve",
+                    "--addr",
+                    &addr,
+                    "--journal-dir",
+                    ldir.to_str().unwrap(),
+                    "--replicate",
+                    &raddr,
+                ])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .unwrap();
+            let mut client = connect_when_up(&addr);
+            let fdir_arg = fdir.to_str().unwrap().to_string();
+            let mut follower = pasha_bin()
+                .args(["follow", &raddr, "--journal-dir", &fdir_arg])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .unwrap();
+            let sid = client.create(&spec).unwrap();
+            wait_for(
+                || fdir.join(format!("{sid}.jsonl")).exists(),
+                15_000,
+                "follower subscription",
+            );
+
+            // drive to the kill point; the client is synchronous, so a
+            // SIGKILL between ops lands between commit groups
+            let mut asks = 0usize;
+            loop {
+                let a = client.ask(&sid, "w0", &space).unwrap();
+                asks += 1;
+                if asks >= kill_at {
+                    break;
+                }
+                match a {
+                    TrialAssignment::Run(job) => {
+                        for e in job.from_epoch + 1..=job.milestone {
+                            let m = bench.accuracy_at(&job.config, e, spec.bench_seed);
+                            if client.tell(&sid, job.trial, e, m).unwrap() == TellAck::Abandon {
+                                break;
+                            }
+                        }
+                    }
+                    TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                    TrialAssignment::Wait => panic!("single worker never waits"),
+                    TrialAssignment::Done => break,
+                }
+            }
+            leader.kill().unwrap();
+            leader.wait().unwrap();
+            follower.wait().unwrap();
+
+            let lbytes = std::fs::read(ldir.join(format!("{sid}.jsonl"))).unwrap();
+            let fbytes = std::fs::read(fdir.join(format!("{sid}.jsonl"))).unwrap();
+            assert!(
+                fbytes.len() <= lbytes.len() && lbytes[..fbytes.len()] == fbytes[..],
+                "iteration {i}: follower diverged from the leader's journal"
+            );
+
+            for (which, src) in [("leader", &ldir), ("follower", &fdir)] {
+                let full_path = scratch.join(format!("{which}-full.jsonl"));
+                std::fs::copy(src.join(format!("{sid}.jsonl")), &full_path).unwrap();
+                let snap_path = scratch.join(format!("{which}-snap.jsonl"));
+                std::fs::copy(src.join(format!("{sid}.jsonl")), &snap_path).unwrap();
+                {
+                    // snapshot the crashed state, then recover from it
+                    let (mut s, _) = Session::recover(&snap_path).unwrap();
+                    s.compact_now().unwrap();
+                }
+                let (mut via_full, _) = Session::recover(&full_path).unwrap();
+                let (mut via_snap, rep) = Session::recover(&snap_path).unwrap();
+                assert!(
+                    rep.snapshot_events > 0,
+                    "iteration {i}/{which}: snapshot recovery engaged"
+                );
+                let full = crashed_continuation(&mut via_full, bench.as_ref(), spec.bench_seed);
+                let snap = crashed_continuation(&mut via_snap, bench.as_ref(), spec.bench_seed);
+                assert_eq!(full, snap, "iteration {i}/{which}: snapshot+tail vs full replay");
+            }
+            for d in [&ldir, &fdir, &scratch] {
+                let _ = std::fs::remove_dir_all(d);
+            }
+        }
+    }
+
+    /// The tentpole: SIGKILL the leader mid-tune, promote the follower's
+    /// journal directory, and finish the session through the session
+    /// router — the complete ask stream and the incumbent must be
+    /// byte-identical to an uninterrupted run.
+    #[test]
+    fn leader_sigkill_failover_through_router_matches_uninterrupted_run() {
+        let ldir = tmp_dir("failover-l");
+        let fdir = tmp_dir("failover-f");
+        let scratch = tmp_dir("failover-s");
+        let spec = spec_for("asha", SearcherSpec::Random, 16);
+        let bench = spec.bench.build().unwrap();
+        let space = bench.space().clone();
+
+        // the uninterrupted reference run, in process
+        let mut reference = Session::create("ref", spec.clone(), None).unwrap();
+        let ref_asks = drive_solo_recording(&mut reference, bench.as_ref(), spec.bench_seed);
+        let ref_best = reference.core_ref().best().expect("reference incumbent");
+        let kill_after = ref_asks.len() / 2;
+        assert!(kill_after > 2, "workload too small to kill mid-tune");
+
+        let leader_addr = free_addr();
+        let repl_addr = free_addr();
+        let mut leader = pasha_bin()
+            .args([
+                "serve",
+                "--addr",
+                &leader_addr,
+                "--journal-dir",
+                ldir.to_str().unwrap(),
+                "--replicate",
+                &repl_addr,
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        drop(connect_when_up(&leader_addr));
+        let fdir_arg = fdir.to_str().unwrap().to_string();
+        let mut follower = pasha_bin()
+            .args(["follow", &repl_addr, "--journal-dir", &fdir_arg])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+
+        // the worker talks to the router, never to a backend directly
+        let table_path = scratch.join("route.json");
+        RouteSpec::new(vec![leader_addr.clone()]).save(&table_path).unwrap();
+        let router_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let router_addr = router_listener.local_addr().unwrap().to_string();
+        let tpath = table_path.clone();
+        let router = std::thread::spawn(move || replica::route(router_listener, &tpath));
+
+        let mut client = Client::connect(&router_addr).unwrap();
+        let sid = client.create(&spec).unwrap();
+        wait_for(
+            || fdir.join(format!("{sid}.jsonl")).exists(),
+            15_000,
+            "follower subscription",
+        );
+
+        let mut asks: Vec<String> = Vec::new();
+        let mut promoted: Option<Child> = None;
+        loop {
+            let a = client.ask(&sid, "w0", &space).unwrap();
+            asks.push(assignment_json(&a).to_string_compact());
+            match a {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, spec.bench_seed);
+                        if client.tell(&sid, job.trial, e, m).unwrap() == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => panic!("single worker never waits"),
+                TrialAssignment::Done => break,
+            }
+            if promoted.is_none() && asks.len() >= kill_after {
+                // quiesce (follower caught up between commit groups),
+                // then SIGKILL the leader
+                let lpath = ldir.join(format!("{sid}.jsonl"));
+                let fpath = fdir.join(format!("{sid}.jsonl"));
+                wait_for(
+                    || match (std::fs::read(&lpath), std::fs::read(&fpath)) {
+                        (Ok(l), Ok(f)) => l == f,
+                        _ => false,
+                    },
+                    15_000,
+                    "replication to quiesce",
+                );
+                leader.kill().unwrap();
+                leader.wait().unwrap();
+                follower.wait().unwrap();
+                // promotion runbook: serve the follower's directory at a
+                // new address, then swap it into the routing table; the
+                // live worker connection rides the router's retry loop
+                // across the gap
+                let promoted_addr = free_addr();
+                promoted = Some(
+                    pasha_bin()
+                        .args([
+                            "serve",
+                            "--addr",
+                            &promoted_addr,
+                            "--journal-dir",
+                            fdir.to_str().unwrap(),
+                        ])
+                        .stdout(Stdio::null())
+                        .stderr(Stdio::null())
+                        .spawn()
+                        .unwrap(),
+                );
+                drop(connect_when_up(&promoted_addr));
+                RouteSpec::new(vec![promoted_addr]).save(&table_path).unwrap();
+            }
+        }
+        let mut promoted = promoted.expect("the session outlived the kill point");
+
+        assert_eq!(asks.len(), ref_asks.len(), "same number of asks");
+        assert_eq!(asks, ref_asks, "ask stream byte-identical across failover");
+        let status = client.status(&sid).unwrap();
+        let served_best = status.get("best_metric").unwrap().as_f64().unwrap();
+        assert_eq!(
+            served_best.to_bits(),
+            ref_best.metric.to_bits(),
+            "incumbent survives the failover bit-for-bit"
+        );
+
+        // a sessionless shutdown broadcasts through the router to the
+        // promoted backend and then stops the router itself
+        client.shutdown().unwrap();
+        router.join().unwrap().unwrap();
+        promoted.wait().unwrap();
+        for d in [&ldir, &fdir, &scratch] {
+            let _ = std::fs::remove_dir_all(d);
+        }
     }
 }
