@@ -1,0 +1,144 @@
+//! Deterministic grid-refine least squares over the decay rate.
+//!
+//! The only nonlinear parameter of either family is the decay rate `c`;
+//! `(a, b)` are closed-form given `c` ([`super::models::solve_ab`]). A
+//! Levenberg–Marquardt iteration over one parameter buys nothing over a
+//! bracketed search, and its float trajectory is fragile; instead we scan
+//! a fixed log-spaced grid and refine the bracket around the winner a
+//! fixed number of times. Every candidate, every comparison, and the
+//! visit order are functions of the input points alone, so the same
+//! history always yields **bit-identical** parameters — the property the
+//! scheduler's snapshot/replay byte-identity rests on.
+
+use super::models::{solve_ab, CurveModel, LinearFit};
+
+/// Fitted parameters of one family, before goodness-of-fit annotation.
+#[derive(Clone, Copy, Debug)]
+pub struct RawFit {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub sse: f64,
+}
+
+/// Decay-rate search bracket per family. Epochs are 1-based, so a power
+/// law with `c` up to 8 already drops its basis below 1e-7 by epoch 9;
+/// exponential decay saturates even faster.
+fn bracket(model: CurveModel) -> (f64, f64) {
+    match model {
+        CurveModel::Power => (1e-2, 8.0),
+        CurveModel::Exp => (1e-3, 3.0),
+    }
+}
+
+const COARSE: usize = 48;
+const REFINE_ROUNDS: usize = 4;
+const REFINE: usize = 24;
+
+/// `n` log-spaced candidates across `[lo, hi]`, endpoints included.
+fn log_grid(lo: f64, hi: f64, n: usize) -> impl Iterator<Item = f64> {
+    let (llo, lhi) = (lo.ln(), hi.ln());
+    (0..n).map(move |i| (llo + (lhi - llo) * i as f64 / (n - 1) as f64).exp())
+}
+
+/// Best `(c, fit)` over one candidate grid; ties keep the earlier
+/// candidate so the scan order pins the result.
+fn scan(
+    model: CurveModel,
+    points: &[(f64, f64)],
+    grid: impl Iterator<Item = f64>,
+) -> Option<(f64, LinearFit)> {
+    let mut best: Option<(f64, LinearFit)> = None;
+    for c in grid {
+        if let Some(fit) = solve_ab(model, c, points) {
+            if best.as_ref().is_none_or(|(_, b)| fit.sse < b.sse) {
+                best = Some((c, fit));
+            }
+        }
+    }
+    best
+}
+
+/// Fit one model family to `points` (epoch, metric). Returns `None` when
+/// no candidate decay rate yields a solvable system (degenerate inputs).
+pub fn fit_model(model: CurveModel, points: &[(f64, f64)]) -> Option<RawFit> {
+    let (lo, hi) = bracket(model);
+    let mut best = scan(model, points, log_grid(lo, hi, COARSE))?;
+    // Shrink the bracket around the winner: one coarse step each side,
+    // then half the previous window per round.
+    let mut half_span = (hi / lo).powf(1.0 / (COARSE - 1) as f64);
+    for _ in 0..REFINE_ROUNDS {
+        let (c_lo, c_hi) = (
+            (best.0 / half_span).max(lo * 1e-3),
+            (best.0 * half_span).min(hi * 1e3),
+        );
+        if let Some(cand) = scan(model, points, log_grid(c_lo, c_hi, REFINE)) {
+            if cand.1.sse < best.1.sse {
+                best = cand;
+            }
+        }
+        half_span = half_span.sqrt();
+    }
+    let (c, fit) = best;
+    Some(RawFit {
+        a: fit.a,
+        b: fit.b,
+        c,
+        sse: fit.sse,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_power_law_decay_rate() {
+        let (a, b, c) = (88.0, 50.0, 0.9);
+        let pts: Vec<(f64, f64)> = (1..=40)
+            .map(|e| (e as f64, a - b * (e as f64).powf(-c)))
+            .collect();
+        let fit = fit_model(CurveModel::Power, &pts).unwrap();
+        assert!((fit.c - c).abs() < 1e-3, "c = {}", fit.c);
+        assert!((fit.a - a).abs() < 1e-3, "a = {}", fit.a);
+        assert!(fit.sse < 1e-6);
+    }
+
+    #[test]
+    fn recovers_exponential_decay_rate() {
+        let (a, b, c) = (70.0, 45.0, 0.15);
+        let pts: Vec<(f64, f64)> = (1..=40)
+            .map(|e| (e as f64, a - b * (-c * e as f64).exp()))
+            .collect();
+        let fit = fit_model(CurveModel::Exp, &pts).unwrap();
+        assert!((fit.c - c).abs() < 1e-3, "c = {}", fit.c);
+        assert!(fit.sse < 1e-6);
+    }
+
+    #[test]
+    fn fit_is_bit_deterministic() {
+        let pts: Vec<(f64, f64)> = (1..=25)
+            .map(|e| {
+                let e = e as f64;
+                (e, 80.0 - 30.0 * e.powf(-0.4) + (e * 7.0).sin() * 0.3)
+            })
+            .collect();
+        let x = fit_model(CurveModel::Power, &pts).unwrap();
+        let y = fit_model(CurveModel::Power, &pts).unwrap();
+        assert_eq!(x.a.to_bits(), y.a.to_bits());
+        assert_eq!(x.b.to_bits(), y.b.to_bits());
+        assert_eq!(x.c.to_bits(), y.c.to_bits());
+        assert_eq!(x.sse.to_bits(), y.sse.to_bits());
+    }
+
+    #[test]
+    fn flat_history_fits_its_constant() {
+        let pts: Vec<(f64, f64)> = (1..=10).map(|e| (e as f64, 42.0)).collect();
+        let fit = fit_model(CurveModel::Exp, &pts).unwrap();
+        // a - b·g ≡ 42 exactly on the observed epochs
+        for &(e, y) in &pts {
+            let pred = fit.a - fit.b * CurveModel::Exp.basis(e, fit.c);
+            assert!((pred - y).abs() < 1e-8);
+        }
+    }
+}

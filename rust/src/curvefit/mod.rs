@@ -1,0 +1,308 @@
+//! Learning-curve fitting and extrapolation (FastBO-style, arXiv
+//! 2409.00584; model family from Domhan et al. 2015).
+//!
+//! Dependency-free parametric models of a trial's per-epoch metric
+//! history: the power law `a − b·e^{−c}` and exponential decay
+//! `a − b·exp(−c·e)`, fit by deterministic grid-refine least squares
+//! ([`fit`]) with a closed-form inner solve ([`models`]). A fit carries
+//! goodness-of-fit (`R²`), a residual standard deviation (the
+//! uncertainty band), and extrapolates the metric to any target epoch —
+//! the signal [`crate::scheduler::lce`] uses to stop predicted losers
+//! early and promote on extrapolated rank.
+//!
+//! **Determinism guarantee:** fitting is a pure function of the input
+//! history — fixed grids, fixed refinement schedule, no RNG, no
+//! time-dependence — so the same points always produce bit-identical
+//! parameters. Schedulers may therefore both persist fit state f64-bit
+//! exactly *and* recompute it from replayed curves; either path yields
+//! the same decisions, which is what keeps served-session ask-replay
+//! byte-identity intact.
+
+pub mod fit;
+pub mod models;
+
+pub use models::CurveModel;
+
+/// Which model family to fit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ModelChoice {
+    /// Power law only.
+    Power,
+    /// Exponential decay only.
+    Exp,
+    /// Fit both, keep the lower-SSE family (ties prefer the power law).
+    #[default]
+    Auto,
+}
+
+impl ModelChoice {
+    /// Wire name (`"power"` / `"exp"` / `"auto"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ModelChoice::Power => "power",
+            ModelChoice::Exp => "exp",
+            ModelChoice::Auto => "auto",
+        }
+    }
+
+    /// Parse the wire name back.
+    pub fn parse(s: &str) -> Option<ModelChoice> {
+        match s {
+            "power" => Some(ModelChoice::Power),
+            "exp" => Some(ModelChoice::Exp),
+            "auto" => Some(ModelChoice::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// A fitted learning curve with goodness-of-fit annotations.
+#[derive(Clone, Copy, Debug)]
+pub struct FitResult {
+    /// Winning model family.
+    pub model: CurveModel,
+    /// Asymptote: `predict(e) → a` as `e → ∞`.
+    pub a: f64,
+    /// Gap scale; positive for a rising (accuracy-style) curve.
+    pub b: f64,
+    /// Decay rate of the basis.
+    pub c: f64,
+    /// Sum of squared residuals at the fit.
+    pub sse: f64,
+    /// Residual standard deviation `sqrt(SSE / max(1, n − 3))` — the
+    /// width unit of the extrapolation uncertainty band.
+    pub residual_sd: f64,
+    /// Coefficient of determination in `[−∞, 1]`; 1 = perfect fit.
+    pub r2: f64,
+    /// Number of finite history points the fit used.
+    pub n_points: usize,
+}
+
+impl FitResult {
+    /// Extrapolated metric at `epoch` (1-based, may exceed the history).
+    pub fn predict(&self, epoch: f64) -> f64 {
+        self.a - self.b * self.model.basis(epoch, self.c)
+    }
+
+    /// Optimistic edge of the uncertainty band: `predict + z·residual_sd`.
+    pub fn upper(&self, epoch: f64, z: f64) -> f64 {
+        self.predict(epoch) + z * self.residual_sd
+    }
+}
+
+fn annotate(model: CurveModel, raw: fit::RawFit, points: &[(f64, f64)]) -> FitResult {
+    let n = points.len();
+    let mean = points.iter().map(|&(_, y)| y).sum::<f64>() / n as f64;
+    let sst = points.iter().map(|&(_, y)| (y - mean) * (y - mean)).sum::<f64>();
+    let r2 = if sst > 0.0 { 1.0 - raw.sse / sst } else { 1.0 };
+    FitResult {
+        model,
+        a: raw.a,
+        b: raw.b,
+        c: raw.c,
+        sse: raw.sse,
+        residual_sd: (raw.sse / (n.saturating_sub(3).max(1)) as f64).sqrt(),
+        r2,
+        n_points: n,
+    }
+}
+
+/// Fit a trial's observed history `curve` (entry `i` = metric after epoch
+/// `i + 1`). Non-finite entries are dropped; abstains (`None`) when fewer
+/// than `max(min_points, 3)` finite points remain or every candidate
+/// system is degenerate. Never panics on NaN/±Inf/short inputs.
+pub fn fit_history(choice: ModelChoice, curve: &[f64], min_points: usize) -> Option<FitResult> {
+    let points: Vec<(f64, f64)> = curve
+        .iter()
+        .enumerate()
+        .filter(|(_, y)| y.is_finite())
+        .map(|(i, &y)| ((i + 1) as f64, y))
+        .collect();
+    if points.len() < min_points.max(3) {
+        return None;
+    }
+    let fit_one = |m: CurveModel| fit::fit_model(m, &points).map(|raw| annotate(m, raw, &points));
+    match choice {
+        ModelChoice::Power => fit_one(CurveModel::Power),
+        ModelChoice::Exp => fit_one(CurveModel::Exp),
+        ModelChoice::Auto => match (fit_one(CurveModel::Power), fit_one(CurveModel::Exp)) {
+            (Some(p), Some(e)) => Some(if e.sse < p.sse { e } else { p }),
+            (p, e) => p.or(e),
+        },
+    }
+}
+
+/// Standard-normal quantile (inverse CDF) via Acklam's rational
+/// approximation (|relative error| < 1.15e-9) — deterministic and
+/// dependency-free. `normal_quantile(0.9) ≈ 1.2816`. Returns 0 outside
+/// the open interval `(0, 1)` (callers validate the confidence knob).
+pub fn normal_quantile(p: f64) -> f64 {
+    if !(p > 0.0 && p < 1.0) {
+        return 0.0;
+    }
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let tail = |q: f64| {
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    if p < P_LOW {
+        tail((-2.0 * p.ln()).sqrt())
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -tail((-2.0 * (1.0 - p).ln()).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::curves::CurveParams;
+    use crate::util::ptest::{check, Gen};
+
+    fn surrogate(seed: u64) -> CurveParams {
+        CurveParams {
+            final_acc: 90.0,
+            floor: 10.0,
+            tau: 20.0,
+            gamma: 1.0,
+            noise_early: 1.5,
+            noise_late: 0.3,
+            noise_decay: 30.0,
+            noise_seed: seed,
+        }
+    }
+
+    #[test]
+    fn normal_quantile_matches_known_values() {
+        for (p, z) in [(0.5, 0.0), (0.9, 1.2815515655), (0.975, 1.9599639845), (0.99, 2.3263478740)]
+        {
+            assert!((normal_quantile(p) - z).abs() < 1e-6, "p = {p}");
+            assert!((normal_quantile(1.0 - p) + z).abs() < 1e-6, "p = {}", 1.0 - p);
+        }
+        assert_eq!(normal_quantile(0.0), 0.0);
+        assert_eq!(normal_quantile(1.0), 0.0);
+        assert_eq!(normal_quantile(f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn auto_prefers_the_generating_family_shape() {
+        // A pure exponential-decay history: Auto must extrapolate close
+        // to the true asymptote even far past the observed range.
+        let curve: Vec<f64> =
+            (1..=30).map(|e| 80.0 - 55.0 * (-0.2 * e as f64).exp()).collect();
+        let f = fit_history(ModelChoice::Auto, &curve, 4).unwrap();
+        assert!((f.predict(200.0) - 80.0).abs() < 0.5, "pred = {}", f.predict(200.0));
+        assert!(f.r2 > 0.999);
+    }
+
+    #[test]
+    fn ptest_same_points_bit_identical_params() {
+        check("curvefit_deterministic", 60, |g: &mut Gen| {
+            let n = g.usize(4, 40);
+            let curve = g.vec_f64(n, n, 0.0, 100.0);
+            let choice = match g.usize(0, 2) {
+                0 => ModelChoice::Power,
+                1 => ModelChoice::Exp,
+                _ => ModelChoice::Auto,
+            };
+            let x = fit_history(choice, &curve, 3);
+            let y = fit_history(choice, &curve, 3);
+            match (x, y) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.model, y.model);
+                    assert_eq!(x.a.to_bits(), y.a.to_bits());
+                    assert_eq!(x.b.to_bits(), y.b.to_bits());
+                    assert_eq!(x.c.to_bits(), y.c.to_bits());
+                    assert_eq!(x.residual_sd.to_bits(), y.residual_sd.to_bits());
+                }
+                _ => panic!("fit/abstain flipped between identical inputs"),
+            }
+        });
+    }
+
+    #[test]
+    fn ptest_surrogate_curves_recovered_within_tolerance() {
+        // Ground truth from the benchmark surrogate family: fits over a
+        // long noisy prefix must extrapolate near the clean final value.
+        check("curvefit_surrogate_recovery", 30, |g: &mut Gen| {
+            let p = surrogate(g.u64());
+            let horizon = 200u32;
+            let seen = g.usize(60, 120) as u32;
+            let curve: Vec<f64> = (1..=seen).map(|e| p.value(e)).collect();
+            let f = fit_history(ModelChoice::Auto, &curve, 4).expect("long history must fit");
+            let truth = p.clean(horizon);
+            let err = (f.predict(horizon as f64) - truth).abs();
+            assert!(err < 5.0, "extrapolation off by {err} (truth {truth})");
+            assert!(f.r2 > 0.8, "r2 = {}", f.r2);
+        });
+    }
+
+    #[test]
+    fn ptest_hostile_histories_never_panic() {
+        check("curvefit_hostile_inputs", 120, |g: &mut Gen| {
+            let n = g.usize(0, 12);
+            let mut curve: Vec<f64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                curve.push(match g.usize(0, 4) {
+                    0 => f64::NAN,
+                    1 => f64::INFINITY,
+                    2 => f64::NEG_INFINITY,
+                    _ => g.f64(-1e9, 1e9),
+                });
+            }
+            let min_points = g.usize(0, 8);
+            let fit = fit_history(ModelChoice::Auto, &curve, min_points);
+            let finite = curve.iter().filter(|y| y.is_finite()).count();
+            if finite < min_points.max(3) {
+                assert!(fit.is_none(), "must abstain below min_points");
+            }
+            if let Some(f) = fit {
+                assert!(f.predict(1e6).is_finite(), "extrapolation must stay finite");
+                assert!(f.residual_sd >= 0.0);
+                assert!(f.n_points == finite);
+            }
+        });
+    }
+
+    #[test]
+    fn short_and_empty_histories_abstain() {
+        assert!(fit_history(ModelChoice::Auto, &[], 3).is_none());
+        assert!(fit_history(ModelChoice::Auto, &[50.0, 60.0], 3).is_none());
+        assert!(fit_history(ModelChoice::Power, &[1.0, 2.0, 3.0], 5).is_none());
+        assert!(fit_history(ModelChoice::Exp, &[f64::NAN; 10], 3).is_none());
+    }
+}

@@ -1,0 +1,125 @@
+//! Parametric learning-curve model families.
+//!
+//! Both families share the shape `f(e) = a − b·g(e; c)` with a decaying
+//! basis `g`: the curve climbs from `a − b·g(1)` toward the asymptote `a`
+//! as the basis vanishes. Because `(a, b)` enter linearly, the fit for a
+//! *fixed* decay rate `c` is a closed-form 2×2 least-squares solve — the
+//! outer search over `c` (in [`super::fit`]) is the only nonlinear part.
+
+/// A fitted model family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CurveModel {
+    /// Power law `f(e) = a − b·e^{−c}` (Domhan et al.'s `pow3`).
+    Power,
+    /// Exponential decay `f(e) = a − b·exp(−c·e)`.
+    Exp,
+}
+
+impl CurveModel {
+    /// Wire/debug name (`"power"` / `"exp"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CurveModel::Power => "power",
+            CurveModel::Exp => "exp",
+        }
+    }
+
+    /// Parse the wire name back.
+    pub fn parse(s: &str) -> Option<CurveModel> {
+        match s {
+            "power" => Some(CurveModel::Power),
+            "exp" => Some(CurveModel::Exp),
+            _ => None,
+        }
+    }
+
+    /// The decaying basis `g(e; c)`; epochs are 1-based so `e ≥ 1`.
+    #[inline]
+    pub fn basis(self, epoch: f64, c: f64) -> f64 {
+        match self {
+            CurveModel::Power => epoch.powf(-c),
+            CurveModel::Exp => (-c * epoch).exp(),
+        }
+    }
+}
+
+/// Closed-form `(a, b)` for a fixed decay rate, plus the resulting SSE.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearFit {
+    pub a: f64,
+    pub b: f64,
+    pub sse: f64,
+}
+
+/// Least-squares `(a, b)` of `y ≈ a − b·g(e; c)` over `points` via the
+/// normal equations. Returns `None` when the system is singular (all
+/// basis values coincide — e.g. `c = 0` collapses `g` to a constant).
+pub fn solve_ab(model: CurveModel, c: f64, points: &[(f64, f64)]) -> Option<LinearFit> {
+    let n = points.len() as f64;
+    let (mut sv, mut svv, mut sy, mut syv) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for &(e, y) in points {
+        let v = model.basis(e, c);
+        if !v.is_finite() {
+            return None;
+        }
+        sv += v;
+        svv += v * v;
+        sy += y;
+        syv += y * v;
+    }
+    // Minimise Σ(a − b·v_i − y_i)²:  [n  −Sv; Sv  −Svv]·[a; b] = [Sy; Syv]
+    let det = sv * sv - n * svv;
+    if det.abs() < 1e-12 * (1.0 + svv) {
+        return None;
+    }
+    let a = (sv * syv - svv * sy) / det;
+    let b = (n * syv - sv * sy) / det;
+    if !a.is_finite() || !b.is_finite() {
+        return None;
+    }
+    let mut sse = 0.0f64;
+    for &(e, y) in points {
+        let r = a - b * model.basis(e, c) - y;
+        sse += r * r;
+    }
+    if !sse.is_finite() {
+        return None;
+    }
+    Some(LinearFit { a, b, sse })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_power_curve_is_recovered_given_true_c() {
+        let (a, b, c) = (90.0, 40.0, 0.7);
+        let pts: Vec<(f64, f64)> = (1..=20)
+            .map(|e| (e as f64, a - b * (e as f64).powf(-c)))
+            .collect();
+        let fit = solve_ab(CurveModel::Power, c, &pts).unwrap();
+        assert!((fit.a - a).abs() < 1e-9, "a = {}", fit.a);
+        assert!((fit.b - b).abs() < 1e-9, "b = {}", fit.b);
+        assert!(fit.sse < 1e-16);
+    }
+
+    #[test]
+    fn exact_exp_curve_is_recovered_given_true_c() {
+        let (a, b, c) = (75.0, 60.0, 0.25);
+        let pts: Vec<(f64, f64)> = (1..=30)
+            .map(|e| (e as f64, a - b * (-c * e as f64).exp()))
+            .collect();
+        let fit = solve_ab(CurveModel::Exp, c, &pts).unwrap();
+        assert!((fit.a - a).abs() < 1e-9);
+        assert!((fit.b - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_constant_basis_is_rejected() {
+        let pts: Vec<(f64, f64)> = (1..=5).map(|e| (e as f64, 50.0)).collect();
+        // c = 0 makes both bases constant 1 → singular normal equations
+        assert!(solve_ab(CurveModel::Power, 0.0, &pts).is_none());
+        assert!(solve_ab(CurveModel::Exp, 0.0, &pts).is_none());
+    }
+}

@@ -6,7 +6,9 @@
 //! * **Layer 3 (this crate)** — the tuning framework: asynchronous
 //!   multi-fidelity schedulers ([`scheduler`]: ASHA, PASHA, successive
 //!   halving, Hyperband, baselines), the ranking-function library that
-//!   drives PASHA's progressive resource growth ([`ranking`]), searchers
+//!   drives PASHA's progressive resource growth ([`ranking`]), the
+//!   learning-curve fitting + extrapolation engine behind the `lce`
+//!   scheduler ([`curvefit`]), searchers
 //!   ([`searcher`]: random and MOBSTER-style GP+EI), a discrete-event
 //!   multi-worker executor ([`executor`]), benchmark substrates
 //!   ([`benchmarks`]), the declarative experiment specification that is
@@ -30,6 +32,7 @@
 
 pub mod benchmarks;
 pub mod config;
+pub mod curvefit;
 #[cfg(feature = "pjrt")]
 pub mod e2e;
 pub mod executor;

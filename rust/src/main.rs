@@ -10,7 +10,7 @@
 //! pasha table  <id>  [--scale paper|smoke] [--out results/]
 //! pasha figure <1..5> [--out results/]
 //! pasha report [--scale paper|smoke] [--out results/]   # everything
-//! pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
+//! pasha bench-json [--suite engine|service|transfer|ablations|all] [--out FILE]
 //! pasha serve  [--addr A] [--journal-dir DIR] [--snapshot-interval N] [--store FILE]
 //!              [--io-threads N] [--shards N] [--legacy-threaded] [--metrics-addr A]
 //!              [--replicate A] [--worker-lease SECONDS]
@@ -91,7 +91,7 @@ fn usage() {
 USAGE:
   pasha run    [--spec exp.json] [--set key.path=value ...]
                [--bench <nas-cifar10|nas-cifar100|nas-imagenet16|pd1-wmt|pd1-imagenet|lcbench-<name>>]
-               [--scheduler <asha|pasha|asha-stop|pasha-stop|sh|hyperband|1-epoch|random>]
+               [--scheduler <asha|pasha|asha-stop|pasha-stop|lce|sh|hyperband|1-epoch|random>]
                [--budget N] [--seed S] [--eta E] [--r-min R]
                [--ranking plain|noisy[:PCT]|soft:EPS|sigma:MULT|mean-gap|median-gap|rbo:P[,T]|rrr:P[,T]|arrr:P[,T]]
                [--searcher random|bo] [--workers W] [--backend sim|pool]
@@ -101,7 +101,7 @@ USAGE:
   pasha table  <1|2|3|4|5|6|8|9|10|11|12|13|14|15|ablation|stopping> [--scale paper|smoke] [--out DIR]
   pasha figure <1|2|3|4|5> [--out DIR]
   pasha report [--scale paper|smoke] [--out DIR]
-  pasha bench-json [--suite engine|service|transfer|all] [--out FILE]
+  pasha bench-json [--suite engine|service|transfer|ablations|all] [--out FILE]
                # service suite: [--sessions N] [--workers M] [--budget B]
                #                [--mode event|threaded|both] [--gate BASELINE.json]
   pasha serve  [--addr 127.0.0.1:7171] [--journal-dir DIR] [--snapshot-interval N]
@@ -391,17 +391,20 @@ fn cmd_report(flags: &HashMap<String, String>) -> Result<(), String> {
 /// Performance records (`BENCH_*.json`): `--suite engine` (default) for
 /// the in-process engine, `--suite service` for the TCP ask/tell loop,
 /// `--suite transfer` for cold-vs-warm-start resource-to-target runs,
+/// `--suite ablations` for the PASHA/ASHA/lce scheduler head-to-head,
 /// `--suite all` for all of them.
 fn cmd_bench_json(flags: &HashMap<String, String>) -> Result<(), String> {
     match flags.get("suite").map(|s| s.as_str()).unwrap_or("engine") {
         "engine" => bench_engine(flags),
         "service" => bench_service(flags, flags.get("out").cloned()),
         "transfer" => bench_transfer(flags, flags.get("out").cloned()),
+        "ablations" => bench_ablations(flags, flags.get("out").cloned()),
         "all" => {
             bench_engine(flags)?;
             // `all` keeps each suite's default file name to avoid clobbering
             bench_service(flags, None)?;
-            bench_transfer(flags, None)
+            bench_transfer(flags, None)?;
+            bench_ablations(flags, None)
         }
         other => Err(format!("unknown bench suite '{other}'")),
     }
@@ -530,6 +533,119 @@ fn bench_transfer(flags: &HashMap<String, String>, out: Option<String>) -> Resul
     println!("wrote {}", out_path.display());
     if !all_deterministic {
         return Err("sealed warm-start run was not deterministic".into());
+    }
+    Ok(())
+}
+
+/// Scheduler ablation benchmark: PASHA vs ASHA vs learning-curve
+/// extrapolation (`lce`) head to head on both tabular benchmarks
+/// (LCBench and NASBench201), one synchronous worker each, recording
+/// epochs to a shared target accuracy, total consumed epochs, and final
+/// regret into `BENCH_ablations.json`. Fails (nonzero exit) when `lce`
+/// consumes more total epochs than ASHA on either benchmark — the
+/// efficiency claim CI gates on.
+fn bench_ablations(flags: &HashMap<String, String>, out: Option<String>) -> Result<(), String> {
+    use pasha::scheduler::asktell::{TellAck, TrialAssignment};
+    use pasha::util::json::Json;
+
+    let out_path = PathBuf::from(out.unwrap_or_else(|| "BENCH_ablations.json".to_string()));
+    let budget: usize = flag(flags, "budget", 32);
+
+    // Same single-worker incumbent trajectory the transfer suite drives:
+    // (cumulative epochs consumed, best metric so far) after every tell.
+    let trajectory = |spec: &ExperimentSpec| -> Result<Vec<(u64, f64)>, String> {
+        let bench = spec.bench.build()?;
+        let mut at = spec.build_core()?;
+        let mut track = Vec::new();
+        let mut epochs = 0u64;
+        loop {
+            match at.ask("w0") {
+                TrialAssignment::Run(job) => {
+                    for e in job.from_epoch + 1..=job.milestone {
+                        let m = bench.accuracy_at(&job.config, e, spec.bench_seed);
+                        epochs += 1;
+                        let ack = at.tell(job.trial, e, m).map_err(|e| e.to_string())?;
+                        if let Some(b) = at.best() {
+                            track.push((epochs, b.metric));
+                        }
+                        if ack == TellAck::Abandon {
+                            break;
+                        }
+                    }
+                }
+                TrialAssignment::Stop(_) | TrialAssignment::Pause(_) => {}
+                TrialAssignment::Wait => return Err("single worker must never wait".into()),
+                TrialAssignment::Done => return Ok(track),
+            }
+        }
+    };
+    let epochs_to = |track: &[(u64, f64)], target: f64| -> Option<u64> {
+        track.iter().find(|(_, m)| *m >= target).map(|(e, _)| *e)
+    };
+
+    let mut benches = Vec::new();
+    let mut lce_at_or_below_asha = true;
+    let mut gate_lines = Vec::new();
+    for bench_name in ["lcbench-Fashion-MNIST", "nas-cifar10"] {
+        let mut tracks = Vec::new();
+        for sched in ["pasha", "asha", "lce"] {
+            let mut spec = ExperimentSpec::named(bench_name, sched)?;
+            spec.stop.config_budget = budget;
+            tracks.push((sched, trajectory(&spec)?));
+        }
+        let finals: Vec<f64> = tracks
+            .iter()
+            .map(|(_, t)| t.last().map(|&(_, m)| m).unwrap_or(f64::NAN))
+            .collect();
+        // Shared target: the weakest final incumbent, so every arm is
+        // guaranteed to cross it; regret is against the strongest.
+        let target = finals.iter().copied().fold(f64::INFINITY, f64::min);
+        let best_overall = finals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut arms = Vec::new();
+        let mut totals: HashMap<&str, u64> = HashMap::new();
+        for ((sched, track), final_best) in tracks.iter().zip(&finals) {
+            let total = track.last().map(|&(e, _)| e).unwrap_or(0);
+            let to_target = epochs_to(track, target).unwrap_or(u64::MAX);
+            totals.insert(*sched, total);
+            println!(
+                "{bench_name}/{sched}: {total} epochs consumed, {to_target} to target \
+                 {target:.2}, final {final_best:.2} (regret {:.2})",
+                best_overall - final_best
+            );
+            let mut a = Json::obj();
+            a.set("scheduler", *sched)
+                .set("total_epochs", total as f64)
+                .set("epochs_to_target", to_target as f64)
+                .set("final_best", *final_best)
+                .set("final_regret", best_overall - final_best);
+            arms.push(a);
+        }
+        let (lce_total, asha_total) = (totals["lce"], totals["asha"]);
+        if lce_total > asha_total {
+            lce_at_or_below_asha = false;
+            gate_lines.push(format!(
+                "{bench_name}: lce consumed {lce_total} epochs vs asha {asha_total}"
+            ));
+        }
+        let mut b = Json::obj();
+        b.set("bench", bench_name)
+            .set("target_metric", target)
+            .set("arms", Json::Arr(arms));
+        benches.push(b);
+    }
+
+    let mut root = Json::obj();
+    root.set("benchmark", "ablations")
+        .set("config_budget", budget)
+        .set("benches", Json::Arr(benches))
+        .set("lce_total_at_or_below_asha", lce_at_or_below_asha);
+    std::fs::write(&out_path, root.to_string_pretty()).map_err(|e| e.to_string())?;
+    println!("wrote {}", out_path.display());
+    if !lce_at_or_below_asha {
+        return Err(format!(
+            "ablation gate failed — lce must not consume more epochs than asha: {}",
+            gate_lines.join("; ")
+        ));
     }
     Ok(())
 }

@@ -794,6 +794,7 @@ mod tests {
     use crate::executor::sim::SimBackend;
     use crate::executor::SurrogateEvaluator;
     use crate::scheduler::asha::AshaBuilder;
+    use crate::scheduler::lce::LceBuilder;
     use crate::scheduler::pasha::PashaBuilder;
     use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
     use crate::scheduler::SchedulerBuilder;
@@ -840,6 +841,7 @@ mod tests {
             Box::new(PashaBuilder::default()),
             Box::new(StopAshaBuilder::default()),
             Box::new(StopPashaBuilder::default()),
+            Box::new(LceBuilder::default()),
         ];
         for builder in &builders {
             let mut at = asktell_for(builder.as_ref(), 32, 7);
@@ -1065,6 +1067,7 @@ mod tests {
             Box::new(PashaBuilder::default()),
             Box::new(StopAshaBuilder::default()),
             Box::new(StopPashaBuilder::default()),
+            Box::new(LceBuilder::default()),
         ];
         for builder in &builders {
             for cut_rounds in [3usize, 11, 29] {

@@ -1,0 +1,652 @@
+//! `CurveStopScheduler` — stopping-type scheduling on *extrapolated*
+//! learning curves (the ROADMAP's FastBO-inspired adaptive-fidelity arm).
+//!
+//! Structurally this is [`super::stopping::StoppingSh`] with PASHA's
+//! progressive resource cap, but every decision that the stopping family
+//! takes on **observed** rung metrics is taken here on each trial's
+//! **extrapolated** metric at the current cap's epoch level, predicted by
+//! a per-trial parametric fit from [`crate::curvefit`]:
+//!
+//! * **Stop test** (rung `< cap`): a trial continues while its
+//!   extrapolated rank in the rung is inside the top `1/η`; additionally,
+//!   a trial whose *optimistic* prediction (`predict + z·residual_sd`)
+//!   sits below the `stop_quantile` quantile of its peers' predictions is
+//!   stopped outright — the curve says it cannot catch up, so the epochs
+//!   are better spent elsewhere (counted in `pasha_sched_extrapolated_stops`).
+//! * **Cap growth** (rung `== cap`): the cap grows one rung when the
+//!   observed cap-rung order disagrees with the extrapolated order at the
+//!   *next* level — the PASHA consistency check, but asking the curve
+//!   models rather than a lower rung. While histories are too short to
+//!   fit (`min_points` guard), both tests degrade gracefully: ranks fall
+//!   back to observed metrics and growth falls back to the paper's
+//!   direct-ranking consistency check, so short-history behaviour is
+//!   exactly PASHA-stop.
+//!
+//! Fits are deterministic functions of the curves and the scheduler
+//! persists them f64-bit-exactly in [`Scheduler::save_state`], so
+//! snapshot+tail recovery and served-session ask-replay byte-identity
+//! hold exactly as for the other arms.
+
+use super::core::ShCore;
+use super::pasha::cap_ranking_consistent;
+use super::rung::RungLevels;
+use super::state::{
+    action_from, action_json, curve_from, curve_json, f64_from, f64_json, field, load_sh_core,
+    sh_core_json, trial_ids_from, u64_from, u64_json, usize_field,
+};
+use super::types::{
+    BestTrial, Job, JobOutcome, SchedCtx, Scheduler, SchedulerBuilder, TrialAction, TrialInfo,
+};
+use crate::curvefit::{fit_history, normal_quantile, CurveModel, FitResult, ModelChoice};
+use crate::obs;
+use crate::ranking::{RankingFunction, RankingSpec};
+use crate::util::json::Json;
+use crate::util::stats::desc_cmp;
+use crate::TrialId;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+/// Observe-only instrumentation; never serialized, never on the journal
+/// byte path.
+struct LceObs {
+    fits: Arc<obs::Counter>,
+    stops: Arc<obs::Counter>,
+    /// Fit residual standard deviation in milli-metric-units.
+    residual_milli: Arc<obs::Histogram>,
+}
+
+impl LceObs {
+    fn new() -> Self {
+        LceObs {
+            fits: obs::counter("pasha_sched_curve_fits", &[]),
+            stops: obs::counter("pasha_sched_extrapolated_stops", &[]),
+            residual_milli: obs::histogram("pasha_sched_fit_residual_milli", &[]),
+        }
+    }
+}
+
+/// Stopping-type scheduler promoting on extrapolated rank under a
+/// PASHA-style growing resource cap.
+pub struct CurveStopScheduler {
+    core: ShCore,
+    /// Current top-rung index: jobs may target rungs `0..=cap`.
+    cap: usize,
+    model: ModelChoice,
+    min_points: usize,
+    stop_quantile: f64,
+    /// `normal_quantile(confidence)` — width of the optimistic band.
+    z: f64,
+    /// Fallback consistency check while curve fits abstain.
+    fallback: Box<dyn RankingFunction>,
+    /// Continuations waiting for a free worker: `(trial, target rung)`.
+    ready: VecDeque<(TrialId, usize)>,
+    /// Trials suspended at the current cap, resumable when it grows.
+    paused: Vec<TrialId>,
+    /// Stop/Pause decisions not yet drained by the engine.
+    actions: Vec<TrialAction>,
+    eps_history: Vec<f64>,
+    growths: usize,
+    /// Latest fit per trial (absent = fit abstained). `BTreeMap` so the
+    /// serialized order — and therefore the snapshot bytes — is pinned.
+    fits: BTreeMap<TrialId, FitResult>,
+    fit_count: u64,
+    extrapolated_stops: u64,
+    obs: LceObs,
+}
+
+impl CurveStopScheduler {
+    /// `confidence` is the one-sided level of the optimistic band
+    /// (`0.5` ⇒ band collapses to the point prediction).
+    pub fn new(
+        levels: RungLevels,
+        model: ModelChoice,
+        min_points: usize,
+        stop_quantile: f64,
+        confidence: f64,
+    ) -> Self {
+        let cap = 1.min(levels.top());
+        CurveStopScheduler {
+            core: ShCore::new(levels),
+            cap,
+            model,
+            min_points,
+            stop_quantile,
+            z: normal_quantile(confidence),
+            fallback: RankingSpec::Direct.build(),
+            ready: VecDeque::new(),
+            paused: Vec::new(),
+            actions: Vec::new(),
+            eps_history: Vec::new(),
+            growths: 0,
+            fits: BTreeMap::new(),
+            fit_count: 0,
+            extrapolated_stops: 0,
+            obs: LceObs::new(),
+        }
+    }
+
+    pub fn current_cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn growths(&self) -> usize {
+        self.growths
+    }
+
+    /// Successful fits performed so far (refits included).
+    pub fn fit_count(&self) -> u64 {
+        self.fit_count
+    }
+
+    /// Stops decided by the confidence-band rule rather than by rank.
+    pub fn extrapolated_stops(&self) -> u64 {
+        self.extrapolated_stops
+    }
+
+    /// Refit `trial` from its full observed history; abstentions clear
+    /// any stale cached fit.
+    fn refit(&mut self, trial: TrialId) {
+        match fit_history(self.model, &self.core.trials[trial].curve, self.min_points) {
+            Some(f) => {
+                self.fit_count += 1;
+                self.obs.fits.inc();
+                self.obs
+                    .residual_milli
+                    .observe((f.residual_sd * 1e3).clamp(0.0, 1e15) as u64);
+                self.fits.insert(trial, f);
+            }
+            None => {
+                self.fits.remove(&trial);
+            }
+        }
+    }
+
+    /// Rung `k` ordered by extrapolated metric at epoch `target`
+    /// (observed rung metric where the fit abstained), best first, ties
+    /// by trial id — the deterministic ranking all decisions read.
+    fn extrapolated_order(&self, k: usize, target: f64) -> Vec<(TrialId, f64)> {
+        let mut v: Vec<(TrialId, f64)> = self.core.rungs[k]
+            .entries
+            .iter()
+            .map(|&(t, m)| (t, self.fits.get(&t).map_or(m, |f| f.predict(target))))
+            .collect();
+        v.sort_by(|a, b| desc_cmp(a.1, b.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// The stopping test on extrapolated rank: is `trial` in the top
+    /// `1/η` of rung `k` when everyone is projected to the cap's level?
+    fn passes(&self, k: usize, trial: TrialId) -> bool {
+        let target = self.core.levels.level(self.cap) as f64;
+        let order = self.extrapolated_order(k, target);
+        let keep = (order.len() / self.core.levels.eta as usize).max(1);
+        order
+            .iter()
+            .position(|&(t, _)| t == trial)
+            .is_some_and(|rank| rank < keep)
+    }
+
+    /// The confidence-band stop: even the trial's optimistic projection
+    /// (`predict + z·σ`) sits below the `stop_quantile` quantile of its
+    /// peers' projections — it cannot plausibly catch up.
+    fn confidently_below(&self, k: usize, trial: TrialId) -> bool {
+        let Some(f) = self.fits.get(&trial) else {
+            return false;
+        };
+        let target = self.core.levels.level(self.cap) as f64;
+        let mut peers: Vec<f64> = self.core.rungs[k]
+            .entries
+            .iter()
+            .filter(|&&(t, _)| t != trial)
+            .map(|&(t, m)| self.fits.get(&t).map_or(m, |p| p.predict(target)))
+            .filter(|s| s.is_finite())
+            .collect();
+        if peers.len() < 2 {
+            return false;
+        }
+        peers.sort_by(f64::total_cmp);
+        f.upper(target, self.z) < quantile(&peers, self.stop_quantile)
+    }
+
+    /// Cap-growth check: does the observed cap-rung order survive
+    /// extrapolation to the next level? With fewer than two fitted
+    /// members the curves cannot answer, and the check falls back to the
+    /// paper's direct-ranking consistency over observed rungs.
+    fn cap_order_consistent(&mut self) -> bool {
+        let observed = self.core.ranking(self.cap);
+        if observed.len() < 2 {
+            return true;
+        }
+        let fitted = observed.iter().filter(|(t, _)| self.fits.contains_key(t)).count();
+        if fitted < 2 {
+            return cap_ranking_consistent(
+                &self.core,
+                self.fallback.as_mut(),
+                self.cap,
+                &mut self.eps_history,
+            );
+        }
+        let next = self.core.levels.level(self.cap + 1) as f64;
+        let extrapolated = self.extrapolated_order(self.cap, next);
+        observed
+            .iter()
+            .map(|&(t, _)| t)
+            .eq(extrapolated.iter().map(|&(t, _)| t))
+    }
+}
+
+/// Linear-interpolation quantile of an ascending-sorted slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = (lo + 1).min(sorted.len() - 1);
+    let w = pos - lo as f64;
+    sorted[lo] * (1.0 - w) + sorted[hi] * w
+}
+
+impl Scheduler for CurveStopScheduler {
+    fn next_job(&mut self, ctx: &mut SchedCtx) -> Option<Job> {
+        if let Some((trial, rung)) = self.ready.pop_front() {
+            return Some(self.core.continue_job(trial, rung));
+        }
+        self.core.start_new(ctx)
+    }
+
+    fn on_result(&mut self, outcome: &JobOutcome) {
+        self.core.record(outcome);
+        let trial = outcome.trial;
+        let rung = outcome.rung;
+        self.refit(trial);
+        if rung == self.core.levels.top() {
+            return; // trained to the safety net R: trial is complete
+        }
+        if rung < self.cap {
+            if self.confidently_below(rung, trial) {
+                self.extrapolated_stops += 1;
+                self.obs.stops.inc();
+                self.actions.push(TrialAction::Stop(trial));
+            } else if self.passes(rung, trial) {
+                self.core.rungs[rung].mark_promoted(trial);
+                self.ready.push_back((trial, rung + 1));
+            } else {
+                self.actions.push(TrialAction::Stop(trial));
+            }
+            return;
+        }
+        // rung == cap < top: decide whether the cap must grow.
+        if !self.cap_order_consistent() {
+            self.cap += 1;
+            self.growths += 1;
+            // Resume every paused trial (including this one) that passes
+            // the stopping test at its own frontier rung; the rest stay
+            // paused for the next growth (same choreography as
+            // `StoppingSh`, including the only-announce-new-pauses rule).
+            self.paused.push(trial);
+            let candidates = std::mem::take(&mut self.paused);
+            for t in candidates {
+                let at = self.core.trials[t].top_rung.unwrap_or(0);
+                if at < self.cap && self.passes(at, t) {
+                    self.core.rungs[at].mark_promoted(t);
+                    self.ready.push_back((t, at + 1));
+                } else {
+                    if t == trial {
+                        self.actions.push(TrialAction::Pause(t));
+                    }
+                    self.paused.push(t);
+                }
+            }
+        } else {
+            self.paused.push(trial);
+            self.actions.push(TrialAction::Pause(trial));
+        }
+    }
+
+    fn drain_actions(&mut self) -> Vec<TrialAction> {
+        std::mem::take(&mut self.actions)
+    }
+
+    fn on_cancelled(&mut self, trial: TrialId) {
+        self.core.rewind_dispatch(trial);
+    }
+
+    fn max_resources_used(&self) -> u32 {
+        self.core.max_resources_used
+    }
+
+    fn resource_cap(&self) -> Option<u32> {
+        Some(self.core.levels.level(self.cap))
+    }
+
+    fn best(&self) -> Option<BestTrial> {
+        self.core.best()
+    }
+
+    fn trials(&self) -> &[TrialInfo] {
+        &self.core.trials
+    }
+
+    fn epsilon_history(&self) -> &[f64] {
+        &self.eps_history
+    }
+
+    fn save_state(&self) -> Option<Json> {
+        // Knobs (`model`, `min_points`, `stop_quantile`, `z`) come from
+        // the builder; queues and the fit cache ride along — `ready` is
+        // the dispatch order, `paused` the resume-scan order, and `fits`
+        // the exact per-trial parameters decisions are read from, all of
+        // which the byte-identity depends on.
+        let fits: Vec<Json> = self
+            .fits
+            .iter()
+            .map(|(&t, f)| {
+                let mut o = Json::obj();
+                o.set("trial", t)
+                    .set("model", f.model.as_str())
+                    .set("a", f64_json(f.a))
+                    .set("b", f64_json(f.b))
+                    .set("c", f64_json(f.c))
+                    .set("sse", f64_json(f.sse))
+                    .set("residual_sd", f64_json(f.residual_sd))
+                    .set("r2", f64_json(f.r2))
+                    .set("n_points", f.n_points);
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("kind", "lce")
+            .set("core", sh_core_json(&self.core))
+            .set("cap", self.cap)
+            .set(
+                "ready",
+                Json::Arr(
+                    self.ready
+                        .iter()
+                        .map(|&(t, k)| Json::Arr(vec![Json::from(t), Json::from(k)]))
+                        .collect(),
+                ),
+            )
+            .set(
+                "paused",
+                Json::Arr(self.paused.iter().map(|&t| Json::from(t)).collect()),
+            )
+            .set(
+                "actions",
+                Json::Arr(self.actions.iter().map(action_json).collect()),
+            )
+            .set("eps_history", curve_json(&self.eps_history))
+            .set("growths", self.growths)
+            .set("fits", Json::Arr(fits))
+            .set("fit_count", u64_json(self.fit_count))
+            .set("extrapolated_stops", u64_json(self.extrapolated_stops));
+        Some(o)
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        if state.get("kind").and_then(|k| k.as_str()) != Some("lce") {
+            return Err("state is not an lce snapshot".into());
+        }
+        load_sh_core(&mut self.core, field(state, "core")?)?;
+        let cap = usize_field(state, "cap")?;
+        if cap >= self.core.levels.num_rungs() {
+            return Err(format!("snapshot cap {cap} outside the rung grid"));
+        }
+        self.cap = cap;
+        self.ready.clear();
+        for pair in field(state, "ready")?.as_arr().ok_or("ready must be an array")? {
+            let p = pair.as_arr().ok_or("ready entry must be a pair")?;
+            if p.len() != 2 {
+                return Err("ready entry must be a [trial, rung] pair".into());
+            }
+            let t = p[0].as_f64().ok_or("ready trial must be a number")? as TrialId;
+            let k = p[1].as_f64().ok_or("ready rung must be a number")? as usize;
+            self.ready.push_back((t, k));
+        }
+        self.paused = trial_ids_from(field(state, "paused")?)?;
+        self.actions = field(state, "actions")?
+            .as_arr()
+            .ok_or("actions must be an array")?
+            .iter()
+            .map(action_from)
+            .collect::<Result<_, _>>()?;
+        self.eps_history = curve_from(field(state, "eps_history")?)?;
+        self.growths = usize_field(state, "growths")?;
+        self.fits.clear();
+        for f in field(state, "fits")?.as_arr().ok_or("fits must be an array")? {
+            let trial = usize_field(f, "trial")?;
+            let model = field(f, "model")?
+                .as_str()
+                .and_then(CurveModel::parse)
+                .ok_or("fit model must be 'power' or 'exp'")?;
+            let fit = FitResult {
+                model,
+                a: f64_from(field(f, "a")?)?,
+                b: f64_from(field(f, "b")?)?,
+                c: f64_from(field(f, "c")?)?,
+                sse: f64_from(field(f, "sse")?)?,
+                residual_sd: f64_from(field(f, "residual_sd")?)?,
+                r2: f64_from(field(f, "r2")?)?,
+                n_points: usize_field(f, "n_points")?,
+            };
+            self.fits.insert(trial, fit);
+        }
+        self.fit_count = u64_from(field(state, "fit_count")?)?;
+        self.extrapolated_stops = u64_from(field(state, "extrapolated_stops")?)?;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "LCE-stop".into()
+    }
+}
+
+/// Builder for the learning-curve-extrapolation scheduler.
+#[derive(Clone, Debug)]
+pub struct LceBuilder {
+    pub r_min: u32,
+    pub eta: u32,
+    pub model: ModelChoice,
+    pub min_points: usize,
+    pub stop_quantile: f64,
+    pub confidence: f64,
+}
+
+impl Default for LceBuilder {
+    fn default() -> Self {
+        LceBuilder {
+            r_min: 1,
+            eta: 3,
+            model: ModelChoice::Auto,
+            min_points: 4,
+            stop_quantile: 0.5,
+            confidence: 0.9,
+        }
+    }
+}
+
+impl SchedulerBuilder for LceBuilder {
+    fn build(&self, max_epochs: u32, _seed: u64) -> Box<dyn Scheduler> {
+        Box::new(CurveStopScheduler::new(
+            RungLevels::new(self.r_min, self.eta, max_epochs),
+            self.model,
+            self.min_points,
+            self.stop_quantile,
+            self.confidence,
+        ))
+    }
+
+    fn name(&self) -> String {
+        "LCE-stop".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::SearchSpace;
+    use crate::searcher::random::RandomSearcher;
+    use std::collections::HashSet;
+
+    /// Serial driver mirroring the stopping-family harness: run to
+    /// exhaustion against a per-epoch metric oracle and enforce the
+    /// engine contract that stopped trials never get another job.
+    fn drive(
+        sched: &mut CurveStopScheduler,
+        n_configs: usize,
+        metric: impl Fn(usize, u32) -> f64,
+    ) -> Vec<TrialAction> {
+        let space = SearchSpace::nas(100_000);
+        let mut searcher = RandomSearcher::new(3);
+        let mut ctx = SchedCtx::with_budget(&space, &mut searcher, 0, n_configs);
+        let mut actions = Vec::new();
+        let mut stopped: HashSet<usize> = HashSet::new();
+        while let Some(job) = sched.next_job(&mut ctx) {
+            assert!(
+                !stopped.contains(&job.trial),
+                "job dispatched for stopped trial {}",
+                job.trial
+            );
+            sched.on_result(&JobOutcome {
+                trial: job.trial,
+                rung: job.rung,
+                milestone: job.milestone,
+                metric: metric(job.trial, job.milestone),
+                curve_segment: (job.from_epoch + 1..=job.milestone)
+                    .map(|e| metric(job.trial, e))
+                    .collect(),
+            });
+            for a in sched.drain_actions() {
+                if let TrialAction::Stop(t) = a {
+                    stopped.insert(t);
+                }
+                actions.push(a);
+            }
+        }
+        actions
+    }
+
+    fn lce(levels: RungLevels, min_points: usize, stop_quantile: f64) -> CurveStopScheduler {
+        CurveStopScheduler::new(levels, ModelChoice::Auto, min_points, stop_quantile, 0.9)
+    }
+
+    /// Two curve classes crossing after the initial cap: "fast"
+    /// saturates early at 50, "slow" climbs to 90. Epoch-1 values climb
+    /// with the trial id so every arrival survives rung 0 and the rungs
+    /// actually populate under the serial driver.
+    fn crossing(t: usize, e: u32) -> f64 {
+        if e == 1 {
+            return 10.0 + t as f64;
+        }
+        let tie = t as f64 * 1e-3;
+        if t % 2 == 0 {
+            50.0 * (1.0 - (-(e as f64)).exp()) + tie
+        } else {
+            90.0 * (1.0 - (-(e as f64) / 6.0).exp()) + tie
+        }
+    }
+
+    #[test]
+    fn crossing_curves_grow_the_cap_and_pick_the_slow_climber() {
+        // Observed order at the cap rung favours the fast class, but the
+        // extrapolated order at the next level favours the slow class —
+        // the disagreement must grow the cap, and promotion on
+        // extrapolated rank must surface a slow climber as best.
+        let mut s = lce(RungLevels::new(1, 3, 27), 3, 0.5);
+        drive(&mut s, 6, crossing);
+        assert!(s.growths() >= 1, "extrapolation disagreement must grow the cap");
+        assert!(s.fit_count() > 0);
+        let best = s.best().unwrap();
+        assert_eq!(best.trial % 2, 1, "slow climber must win, got trial {}", best.trial);
+    }
+
+    #[test]
+    fn aggressive_quantile_stops_are_counted() {
+        let mut s = lce(RungLevels::new(1, 3, 27), 3, 0.95);
+        let actions = drive(&mut s, 8, crossing);
+        assert!(
+            s.extrapolated_stops() >= 1,
+            "confidence-band rule must fire under a 0.95 stop quantile"
+        );
+        let stops = actions.iter().filter(|a| matches!(a, TrialAction::Stop(_))).count();
+        assert!(stops as u64 >= s.extrapolated_stops());
+    }
+
+    #[test]
+    fn stable_orders_pause_at_initial_cap() {
+        // Flat, strictly-ordered curves: observed and extrapolated
+        // orders agree everywhere, so the cap never grows and nothing
+        // trains beyond η·r — the PASHA frugality property.
+        let mut s = lce(RungLevels::new(1, 3, 200), 4, 0.5);
+        let actions = drive(&mut s, 30, |t, _| t as f64);
+        assert_eq!(s.current_cap(), 1);
+        assert_eq!(s.growths(), 0);
+        assert_eq!(s.max_resources_used(), 3);
+        assert!(actions.iter().any(|a| matches!(a, TrialAction::Pause(_))));
+    }
+
+    #[test]
+    fn short_history_fallback_behaves_like_pasha_stop() {
+        // min_points too large for any fit: every decision degrades to
+        // observed metrics + direct-ranking growth. Rank flips at every
+        // level must still grow the cap to the safety net.
+        let levels = [1u32, 3, 9, 27, 81, 200];
+        let mut s = lce(RungLevels::new(1, 3, 200), 10_000, 0.5);
+        drive(&mut s, 300, move |t, m| {
+            let k = levels.iter().position(|&l| l >= m).unwrap_or(0);
+            if k % 2 == 0 {
+                t as f64
+            } else {
+                -(t as f64)
+            }
+        });
+        assert_eq!(s.fit_count(), 0, "no fit may succeed below min_points");
+        assert_eq!(s.current_cap(), RungLevels::new(1, 3, 200).top());
+        assert!(s.growths() >= 2);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_byte_exact() {
+        let mut s = lce(RungLevels::new(1, 3, 27), 3, 0.5);
+        drive(&mut s, 10, crossing);
+        let state = s.save_state().unwrap();
+        let mut fresh = lce(RungLevels::new(1, 3, 27), 3, 0.5);
+        fresh.load_state(&state).unwrap();
+        let reserialized = fresh.save_state().unwrap();
+        assert_eq!(
+            state.to_string_compact(),
+            reserialized.to_string_compact(),
+            "load → save must reproduce the snapshot byte-for-byte"
+        );
+        assert_eq!(fresh.fit_count(), s.fit_count());
+        assert_eq!(fresh.extrapolated_stops(), s.extrapolated_stops());
+    }
+
+    #[test]
+    fn load_rejects_foreign_kinds_and_bad_caps() {
+        let mut s = lce(RungLevels::new(1, 3, 27), 4, 0.5);
+        let mut foreign = Json::obj();
+        foreign.set("kind", "stopping");
+        assert!(s.load_state(&foreign).is_err());
+        let mut bad = s.save_state().unwrap();
+        bad.set("cap", 99usize);
+        assert!(s.load_state(&bad).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn builder_name_and_resource_cap() {
+        let b = LceBuilder::default();
+        assert_eq!(b.name(), "LCE-stop");
+        let s = b.build(27, 0);
+        assert_eq!(s.name(), "LCE-stop");
+        // cap starts at rung 1 (PASHA-style), so the gauge source is η·r
+        assert_eq!(s.resource_cap(), Some(3));
+    }
+
+    #[test]
+    fn degenerate_single_rung_grid() {
+        let mut s = lce(RungLevels::new(1, 3, 1), 4, 0.5);
+        let actions = drive(&mut s, 10, |t, _| t as f64);
+        assert_eq!(s.current_cap(), 0);
+        assert_eq!(s.max_resources_used(), 1);
+        assert!(actions.is_empty(), "single-rung trials just complete");
+    }
+}

@@ -11,6 +11,9 @@
 //!   layer (`Stop` terminates, `Pause` suspends until PASHA's cap grows).
 //! * [`sh`] / [`hyperband`] — classical synchronous SH and Hyperband,
 //!   context baselines.
+//! * [`lce`] — learning-curve extrapolation: a stopping-type arm that
+//!   stops predicted losers early and promotes on *extrapolated* rank
+//!   under PASHA's growing cap, backed by [`crate::curvefit`].
 //! * [`baselines`] — the paper's k-epoch and random baselines.
 //! * [`asktell`] — the pull-mode adapter: any scheduler + searcher behind
 //!   an `ask`/`tell` API for the tuning service ([`crate::service`]),
@@ -33,6 +36,7 @@ pub mod asktell;
 pub mod baselines;
 pub mod core;
 pub mod hyperband;
+pub mod lce;
 pub mod pasha;
 pub mod rung;
 pub mod sh;

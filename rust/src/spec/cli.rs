@@ -159,6 +159,22 @@ pub fn apply_flag_overrides(
         spec.scheduler = match renamed {
             // no r_min/eta/ranking to overlay on these families
             SchedulerSpec::FixedEpoch { .. } | SchedulerSpec::RandomBaseline => renamed,
+            // overlay r_min/eta without resetting the curve-fit knobs
+            // (those are spec-file/`--set` territory, not flags)
+            SchedulerSpec::Lce {
+                model,
+                min_points,
+                stop_quantile,
+                confidence,
+                ..
+            } => SchedulerSpec::Lce {
+                r_min,
+                eta,
+                model,
+                min_points,
+                stop_quantile,
+                confidence,
+            },
             other => SchedulerSpec::from_name(other.wire_name(), r_min, eta, ranking)?,
         };
         // A flag the selected family cannot honor is an error, not dead
@@ -352,6 +368,51 @@ mod tests {
         let err =
             apply_flag_overrides(&mut spec, &flags(&[("warm-start-max", "5")])).unwrap_err();
         assert!(err.contains("--warm-start-max"), "{err}");
+    }
+
+    #[test]
+    fn lce_flags_compose_without_resetting_curve_knobs() {
+        use crate::curvefit::ModelChoice;
+        // knobs set through the spec surface survive flag overlays
+        let mut spec = ExperimentSpec::default();
+        spec.set("scheduler.name=lce").unwrap();
+        spec.set("scheduler.model=exp").unwrap();
+        spec.set("scheduler.min_points=6").unwrap();
+        apply_flag_overrides(&mut spec, &flags(&[("r-min", "2"), ("eta", "4")])).unwrap();
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Lce {
+                r_min: 2,
+                eta: 4,
+                model: ModelChoice::Exp,
+                min_points: 6,
+                stop_quantile: 0.5,
+                confidence: 0.9,
+            }
+        );
+        // and `--scheduler lce` from scratch takes the documented defaults
+        let mut spec = ExperimentSpec::default();
+        apply_flag_overrides(&mut spec, &flags(&[("scheduler", "lce"), ("eta", "4")]))
+            .unwrap();
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Lce {
+                r_min: 1,
+                eta: 4,
+                model: ModelChoice::Auto,
+                min_points: 4,
+                stop_quantile: 0.5,
+                confidence: 0.9,
+            }
+        );
+        // lce ranks by extrapolation, not a ranking function
+        let mut spec = ExperimentSpec::default();
+        let err = apply_flag_overrides(
+            &mut spec,
+            &flags(&[("scheduler", "lce"), ("ranking", "soft:0.5")]),
+        )
+        .unwrap_err();
+        assert!(err.contains("--ranking"), "{err}");
     }
 
     #[test]

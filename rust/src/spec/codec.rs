@@ -17,6 +17,7 @@ use super::{
     SearcherSpec, StopRules, WarmStartSpec, WarmTrial, SPEC_VERSION,
     WARM_START_DEFAULT_MAX_TRIALS,
 };
+use crate::curvefit::ModelChoice;
 use crate::ranking::RankingSpec;
 use crate::searcher::bo::BoConfig;
 use crate::util::json::Json;
@@ -247,6 +248,23 @@ fn scheduler_to_json(s: &SchedulerSpec) -> Json {
                 .set("eta", *eta)
                 .set("ranking", ranking_to_json(ranking));
         }
+        SchedulerSpec::Lce {
+            r_min,
+            eta,
+            model,
+            min_points,
+            stop_quantile,
+            confidence,
+        } => {
+            // always stopping-type: no `mode` key on the wire
+            o.set("name", "lce")
+                .set("r_min", *r_min)
+                .set("eta", *eta)
+                .set("model", model.as_str())
+                .set("min_points", *min_points)
+                .set("stop_quantile", *stop_quantile)
+                .set("confidence", *confidence);
+        }
         SchedulerSpec::Sh { r_min, eta } => {
             o.set("name", "sh").set("r_min", *r_min).set("eta", *eta);
         }
@@ -274,7 +292,9 @@ fn scheduler_from_fields(mut f: Fields) -> Result<SchedulerSpec, String> {
         "pasha-stop" => ("pasha", Some(DecisionMode::Stop)),
         other => (other, None),
     };
-    let mode = match (name_mode, f.opt_str("mode")?) {
+    let explicit_mode = f.opt_str("mode")?;
+    let has_explicit_mode = explicit_mode.is_some();
+    let mode = match (name_mode, explicit_mode) {
         (Some(_), Some(_)) => {
             return Err(format!(
                 "field 'scheduler.mode': conflicts with scheduler name '{name}' \
@@ -303,6 +323,31 @@ fn scheduler_from_fields(mut f: Fields) -> Result<SchedulerSpec, String> {
                 eta: f.u32_or("eta", 3)?,
                 mode,
                 ranking,
+            }
+        }
+        "lce" => {
+            // lce is always stopping-type; the mode key is meaningless
+            // for it in either spelling, so reject it outright.
+            if has_explicit_mode {
+                return Err(
+                    "field 'scheduler.mode': 'lce' is always stopping-type and takes no mode"
+                        .to_string(),
+                );
+            }
+            let model_name = f.str_or("model", "auto")?;
+            let model = ModelChoice::parse(&model_name).ok_or_else(|| {
+                format!(
+                    "field 'scheduler.model': expected 'auto', 'power', or 'exp' \
+                     (got '{model_name}')"
+                )
+            })?;
+            SchedulerSpec::Lce {
+                r_min: f.u32_or("r_min", 1)?,
+                eta: f.u32_or("eta", 3)?,
+                model,
+                min_points: f.u32_or("min_points", 4)?,
+                stop_quantile: f.f64_or("stop_quantile", 0.5)?,
+                confidence: f.f64_or("confidence", 0.9)?,
             }
         }
         "sh" => SchedulerSpec::Sh {
@@ -622,6 +667,60 @@ mod tests {
         let j = parse(r#"{"version":2,"scheduler":{"name":"sh","mode":"stop"}}"#).unwrap();
         let err = ExperimentSpec::from_json(&j).unwrap_err();
         assert!(err.contains("no stopping variant"), "{err}");
+    }
+
+    #[test]
+    fn lce_round_trips_and_rejects_mode_in_any_spelling() {
+        let j = parse(
+            r#"{"version":2,"scheduler":{"name":"lce","r_min":2,"eta":4,"model":"exp",
+                "min_points":6,"stop_quantile":0.25,"confidence":0.8}}"#,
+        )
+        .unwrap();
+        let spec = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Lce {
+                r_min: 2,
+                eta: 4,
+                model: ModelChoice::Exp,
+                min_points: 6,
+                stop_quantile: 0.25,
+                confidence: 0.8,
+            }
+        );
+        let bytes = spec.to_json().to_string_compact();
+        let back = ExperimentSpec::from_json(&parse(&bytes).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string_compact(), bytes);
+
+        // defaults when knobs are omitted
+        let j = parse(r#"{"version":2,"scheduler":{"name":"lce"}}"#).unwrap();
+        let spec = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Lce {
+                r_min: 1,
+                eta: 3,
+                model: ModelChoice::Auto,
+                min_points: 4,
+                stop_quantile: 0.5,
+                confidence: 0.9,
+            }
+        );
+
+        // lce carries no DecisionMode: even mode=promote is an error
+        for mode in ["promote", "stop"] {
+            let j = parse(&format!(
+                r#"{{"version":2,"scheduler":{{"name":"lce","mode":"{mode}"}}}}"#
+            ))
+            .unwrap();
+            let err = ExperimentSpec::from_json(&j).unwrap_err();
+            assert!(err.contains("scheduler.mode"), "{err}");
+        }
+
+        let j = parse(r#"{"version":2,"scheduler":{"name":"lce","model":"cubic"}}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("scheduler.model"), "{err}");
     }
 
     #[test]

@@ -32,12 +32,14 @@ use crate::benchmarks::nasbench201::NasBench201;
 use crate::benchmarks::pd1::Pd1;
 use crate::benchmarks::Benchmark;
 use crate::config::space::SearchSpace;
+use crate::curvefit::ModelChoice;
 use crate::executor::engine::{ConfigBudget, EpochBudget, StoppingRule};
 use crate::ranking::RankingSpec;
 use crate::scheduler::asha::AshaBuilder;
 use crate::scheduler::asktell::{config_from_json, AskTell};
 use crate::scheduler::baselines::{FixedEpochBuilder, RandomBaselineBuilder};
 use crate::scheduler::hyperband::HyperbandBuilder;
+use crate::scheduler::lce::LceBuilder;
 use crate::scheduler::pasha::PashaBuilder;
 use crate::scheduler::sh::SyncShBuilder;
 use crate::scheduler::stopping::{StopAshaBuilder, StopPashaBuilder};
@@ -144,6 +146,22 @@ pub enum SchedulerSpec {
         mode: DecisionMode,
         ranking: RankingSpec,
     },
+    /// Learning-curve extrapolation: stopping-type scheduling on
+    /// extrapolated rank under a PASHA-style growing cap, backed by the
+    /// [`crate::curvefit`] subsystem. Always stopping-type — the variant
+    /// carries no [`DecisionMode`].
+    Lce {
+        r_min: u32,
+        eta: u32,
+        /// Curve family to fit (`power` / `exp` / `auto`).
+        model: ModelChoice,
+        /// Minimum finite history points before a fit is trusted.
+        min_points: u32,
+        /// Peer-prediction quantile below which a confident loser stops.
+        stop_quantile: f64,
+        /// One-sided confidence of the optimistic prediction band.
+        confidence: f64,
+    },
     /// Synchronous successive halving; its initial cohort size is the
     /// experiment's configuration budget.
     Sh { r_min: u32, eta: u32 },
@@ -188,6 +206,14 @@ impl SchedulerSpec {
                 mode: DecisionMode::Stop,
                 ranking,
             },
+            "lce" => SchedulerSpec::Lce {
+                r_min,
+                eta,
+                model: ModelChoice::Auto,
+                min_points: 4,
+                stop_quantile: 0.5,
+                confidence: 0.9,
+            },
             "sh" => SchedulerSpec::Sh { r_min, eta },
             "hyperband" => SchedulerSpec::Hyperband { r_min, eta },
             "1-epoch" => SchedulerSpec::FixedEpoch { epochs: 1 },
@@ -214,6 +240,28 @@ impl SchedulerSpec {
         {
             *epochs = *current;
         }
+        if let (
+            SchedulerSpec::Lce {
+                model,
+                min_points,
+                stop_quantile,
+                confidence,
+                ..
+            },
+            SchedulerSpec::Lce {
+                model: cur_model,
+                min_points: cur_min,
+                stop_quantile: cur_q,
+                confidence: cur_conf,
+                ..
+            },
+        ) = (&mut next, self)
+        {
+            *model = *cur_model;
+            *min_points = *cur_min;
+            *stop_quantile = *cur_q;
+            *confidence = *cur_conf;
+        }
         Ok(next)
     }
 
@@ -237,6 +285,7 @@ impl SchedulerSpec {
                 mode: DecisionMode::Stop,
                 ..
             } => "pasha-stop",
+            SchedulerSpec::Lce { .. } => "lce",
             SchedulerSpec::Sh { .. } => "sh",
             SchedulerSpec::Hyperband { .. } => "hyperband",
             SchedulerSpec::FixedEpoch { .. } => "1-epoch",
@@ -249,6 +298,7 @@ impl SchedulerSpec {
         match *self {
             SchedulerSpec::Asha { r_min, .. }
             | SchedulerSpec::Pasha { r_min, .. }
+            | SchedulerSpec::Lce { r_min, .. }
             | SchedulerSpec::Sh { r_min, .. }
             | SchedulerSpec::Hyperband { r_min, .. } => Some(r_min),
             _ => None,
@@ -260,6 +310,7 @@ impl SchedulerSpec {
         match *self {
             SchedulerSpec::Asha { eta, .. }
             | SchedulerSpec::Pasha { eta, .. }
+            | SchedulerSpec::Lce { eta, .. }
             | SchedulerSpec::Sh { eta, .. }
             | SchedulerSpec::Hyperband { eta, .. } => Some(eta),
             _ => None,
@@ -288,6 +339,29 @@ impl SchedulerSpec {
         if let SchedulerSpec::FixedEpoch { epochs } = *self {
             if epochs < 1 {
                 return Err("field 'scheduler.epochs': must be >= 1".into());
+            }
+        }
+        if let SchedulerSpec::Lce {
+            min_points,
+            stop_quantile,
+            confidence,
+            ..
+        } = *self
+        {
+            if min_points < 3 {
+                return Err(format!(
+                    "field 'scheduler.min_points': must be >= 3 (got {min_points})"
+                ));
+            }
+            if !(stop_quantile.is_finite() && stop_quantile > 0.0 && stop_quantile < 1.0) {
+                return Err(format!(
+                    "field 'scheduler.stop_quantile': must be in (0, 1) (got {stop_quantile})"
+                ));
+            }
+            if !(confidence.is_finite() && confidence > 0.0 && confidence < 1.0) {
+                return Err(format!(
+                    "field 'scheduler.confidence': must be in (0, 1) (got {confidence})"
+                ));
             }
         }
         if let Some(ranking) = self.ranking() {
@@ -330,6 +404,21 @@ impl SchedulerSpec {
                 r_min,
                 eta,
                 ranking,
+            }),
+            SchedulerSpec::Lce {
+                r_min,
+                eta,
+                model,
+                min_points,
+                stop_quantile,
+                confidence,
+            } => Box::new(LceBuilder {
+                r_min,
+                eta,
+                model,
+                min_points: min_points as usize,
+                stop_quantile,
+                confidence,
             }),
             SchedulerSpec::Sh { r_min, eta } => Box::new(SyncShBuilder {
                 r_min,
@@ -1027,6 +1116,31 @@ mod tests {
             spec.scheduler.ranking(),
             Some(&RankingSpec::SoftFixed { epsilon: 0.0 })
         );
+
+        // lce: family switch drops the ranking, keeps r_min/η, and its
+        // curve-fit knobs are reachable through --set paths
+        spec.set("scheduler.name=lce").unwrap();
+        spec.set("scheduler.model=exp").unwrap();
+        spec.set("scheduler.min_points=6").unwrap();
+        spec.set("scheduler.stop_quantile=0.25").unwrap();
+        assert_eq!(
+            spec.scheduler,
+            SchedulerSpec::Lce {
+                r_min: 1,
+                eta: 4,
+                model: ModelChoice::Exp,
+                min_points: 6,
+                stop_quantile: 0.25,
+                confidence: 0.9,
+            }
+        );
+        let err = spec.set("scheduler.model=cubic").unwrap_err();
+        assert!(err.contains("scheduler.model"), "{err}");
+        let err = spec.set("scheduler.min_points=1").unwrap_err();
+        assert!(err.contains("scheduler.min_points"), "{err}");
+        // and back out: the curve-fit keys don't leak into pasha
+        spec.set("scheduler.name=pasha").unwrap();
+        assert_eq!(spec.scheduler.ranking(), Some(&RankingSpec::default()));
     }
 
     #[test]
@@ -1037,6 +1151,7 @@ mod tests {
             ("pasha", "PASHA"),
             ("asha-stop", "ASHA-stop"),
             ("pasha-stop", "PASHA-stop"),
+            ("lce", "LCE-stop"),
             ("sh", "SuccessiveHalving"),
             ("hyperband", "Hyperband"),
             ("1-epoch", "One-epoch baseline"),
@@ -1131,5 +1246,57 @@ mod tests {
             }
         );
         assert_eq!(pasha.renamed("pasha").unwrap(), pasha);
+
+        // lce: same-family renames keep the curve-fit knobs, cross-family
+        // renames into lce take the curve-fit defaults but carry r_min/η
+        let lce = SchedulerSpec::Lce {
+            r_min: 2,
+            eta: 4,
+            model: ModelChoice::Exp,
+            min_points: 6,
+            stop_quantile: 0.25,
+            confidence: 0.8,
+        };
+        assert_eq!(lce.renamed("lce").unwrap(), lce);
+        assert_eq!(
+            lce.renamed("asha").unwrap(),
+            SchedulerSpec::Asha {
+                r_min: 2,
+                eta: 4,
+                mode: DecisionMode::Promote,
+            }
+        );
+        assert_eq!(
+            pasha.renamed("lce").unwrap(),
+            SchedulerSpec::Lce {
+                r_min: 2,
+                eta: 4,
+                model: ModelChoice::Auto,
+                min_points: 4,
+                stop_quantile: 0.5,
+                confidence: 0.9,
+            }
+        );
+    }
+
+    #[test]
+    fn lce_knobs_validate_by_field() {
+        let mk = |min_points, stop_quantile, confidence| SchedulerSpec::Lce {
+            r_min: 1,
+            eta: 3,
+            model: ModelChoice::Auto,
+            min_points,
+            stop_quantile,
+            confidence,
+        };
+        mk(4, 0.5, 0.9).validate().unwrap();
+        let err = mk(2, 0.5, 0.9).validate().unwrap_err();
+        assert!(err.contains("scheduler.min_points"), "{err}");
+        let err = mk(4, 1.0, 0.9).validate().unwrap_err();
+        assert!(err.contains("scheduler.stop_quantile"), "{err}");
+        let err = mk(4, f64::NAN, 0.9).validate().unwrap_err();
+        assert!(err.contains("scheduler.stop_quantile"), "{err}");
+        let err = mk(4, 0.5, 0.0).validate().unwrap_err();
+        assert!(err.contains("scheduler.confidence"), "{err}");
     }
 }

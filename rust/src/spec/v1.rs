@@ -52,6 +52,8 @@ pub(crate) fn to_v1_json(spec: &ExperimentSpec) -> Option<Json> {
         }
         SchedulerSpec::FixedEpoch { epochs } => *epochs == 1,
         SchedulerSpec::RandomBaseline => true,
+        // no v1 client ever spoke learning-curve extrapolation
+        SchedulerSpec::Lce { .. } => false,
     };
     let representable_searcher = match &spec.searcher {
         SearcherSpec::Random => true,
@@ -91,6 +93,16 @@ pub(crate) fn from_v1_json(j: &Json) -> Result<ExperimentSpec, String> {
     f.finish()?;
     let searcher = SearcherSpec::from_name(&searcher_name)
         .map_err(|e| format!("field 'searcher': {e}"))?;
+    // `lce` post-dates the v1 wire format: `from_name` would happily
+    // build it, but no legacy client could have created such a session,
+    // so a v1 payload naming it is a corrupt/mislabeled document.
+    if scheduler_name == "lce" {
+        return Err(
+            "field 'scheduler': 'lce' is a v2-only scheduler (send a v2 spec with \
+             \"version\":2)"
+                .to_string(),
+        );
+    }
     // r_min = 1 and the default (noise-adaptive) ranking are what the
     // legacy factories hardcoded for every v1 session.
     let scheduler = SchedulerSpec::from_name(&scheduler_name, 1, eta, RankingSpec::default())
@@ -186,9 +198,22 @@ mod tests {
         let mut v2_only = spec.clone();
         v2_only.searcher = SearcherSpec::bo_warm("s.jsonl", 4);
         assert!(v2_only.to_v1_compat_json().is_none(), "warm start is v2-only");
+        let mut v2_only = spec.clone();
+        v2_only.set("scheduler.name=lce").unwrap();
+        assert!(v2_only.to_v1_compat_json().is_none(), "lce is v2-only");
         let mut v2_only = spec;
         v2_only.exec.workers = 2;
         assert!(v2_only.to_v1_compat_json().is_none(), "non-default exec");
+    }
+
+    #[test]
+    fn v1_payload_cannot_name_lce() {
+        // a versionless (v1) document claiming the v2-only scheduler is
+        // mislabeled, not migratable — the error cites the field
+        let j = parse(r#"{"bench":"nas-cifar10","scheduler":"lce","eta":3}"#).unwrap();
+        let err = ExperimentSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("field 'scheduler'"), "{err}");
+        assert!(err.contains("v2-only"), "{err}");
     }
 
     #[test]

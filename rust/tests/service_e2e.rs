@@ -272,6 +272,15 @@ fn recovery_pasha_stop_mid_rung_pause() {
 }
 
 #[test]
+fn recovery_lce() {
+    // Learning-curve extrapolation: the per-trial fit state is rebuilt
+    // bit-exactly from replayed curves (fitting is deterministic), so
+    // extrapolated stop/promote decisions — and therefore asks — must
+    // stay byte-identical at every cut.
+    check_recovery("lce", spec_for("lce", SearcherSpec::Random, 48), 3);
+}
+
+#[test]
 fn recovery_bo_searcher() {
     // Model-based searcher: the GP's state is rebuilt through replayed
     // on_report calls, so ask responses stay byte-identical.
@@ -424,6 +433,13 @@ fn snapshot_equivalence_pasha_stop() {
         3,
         20,
     );
+}
+
+#[test]
+fn snapshot_equivalence_lce() {
+    // The snapshot carries every curve fit f64-bit-exactly; recovery from
+    // snapshot+tail and from full replay must agree byte for byte.
+    check_snapshot_equivalence("lce", spec_for("lce", SearcherSpec::Random, 48), 3, 20);
 }
 
 #[test]
@@ -1066,6 +1082,84 @@ mod obs_e2e {
             "in-flight ops drain to 0 after shutdown"
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lce_resource_cap_reaches_the_gauge_and_fit_counters_scrape() {
+        let _gate = obs_gate();
+        pasha::obs::set_enabled(true);
+        let registry = Arc::new(Registry::in_memory());
+        // unique session labels process-wide (see the conservation test)
+        for _ in 0..40 {
+            registry.create(spec_for("asha", SearcherSpec::Random, 1)).unwrap();
+        }
+        let server = Server::bind("127.0.0.1:0", registry)
+            .unwrap()
+            .metrics_addr("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let maddr = server.metrics_local_addr().unwrap();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let mut spec = spec_for("lce", SearcherSpec::Random, 48);
+        // 3-point histories fit, so rung-1 completions produce fits even
+        // before the cap grows — the counter assert below is determined
+        spec.set("scheduler.min_points=3").unwrap();
+        let bench = spec.bench.build().unwrap();
+        let mut control = Client::connect(&addr).unwrap();
+        let sid = control.create(&spec).unwrap();
+        std::thread::scope(|scope| {
+            for w in 0..2 {
+                let addr = addr.as_str();
+                let sid = sid.as_str();
+                let bench = &bench;
+                let bench_seed = spec.bench_seed;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    run_worker(
+                        &mut client,
+                        sid,
+                        &format!("w{w}"),
+                        bench.as_ref(),
+                        bench_seed,
+                        Duration::from_millis(1),
+                    )
+                    .unwrap()
+                });
+            }
+        });
+
+        // The gauge must reflect lce's PASHA-style growing cap — at least
+        // the initial cap of one growth level (r_min·eta = 3 epochs),
+        // never the 1-epoch base rung a broken propagation would report.
+        let snap = control.stats().unwrap();
+        let cap_epochs = inst_value(&snap, "pasha_max_resource_epochs", "session", &sid)
+            .expect("lce resource-cap gauge in snapshot");
+        assert!(cap_epochs >= 3.0, "lce cap gauge engaged: {cap_epochs}");
+        assert!(
+            pasha::obs::counter("pasha_sched_curve_fits", &[]).get() > 0,
+            "served lce session fitted learning curves"
+        );
+
+        // And the Prometheus exposition carries the curve-fit instruments.
+        let mut msock = TcpStream::connect(maddr).unwrap();
+        msock
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: pasha\r\n\r\n")
+            .unwrap();
+        let mut scrape = String::new();
+        msock.read_to_string(&mut scrape).unwrap();
+        assert!(scrape.starts_with("HTTP/1.1 200 OK"), "scrape status: {scrape:.60}");
+        for needle in [
+            "pasha_sched_curve_fits",
+            "pasha_sched_extrapolated_stops",
+            "pasha_sched_fit_residual_milli",
+            "pasha_max_resource_epochs",
+        ] {
+            assert!(scrape.contains(needle), "scrape missing {needle:?}");
+        }
+
+        control.shutdown().unwrap();
+        server_thread.join().unwrap().unwrap();
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //!   lowered spec must produce a `TuneResult` bit-identical to part-wise
 //!   construction with the knobs the old factories hardcoded.
 
+use pasha::curvefit::ModelChoice;
 use pasha::ranking::RankingSpec;
 use pasha::scheduler::asktell::{TellAck, TrialAssignment};
 use pasha::searcher::bo::BoConfig;
@@ -80,7 +81,24 @@ fn golden_specs() -> Vec<ExperimentSpec> {
         seed: 5,
         ..ExperimentSpec::default()
     };
-    vec![default, kitchen_sink, rbo]
+    let lce = ExperimentSpec {
+        bench: BenchSpec::new("nas-cifar100"),
+        scheduler: SchedulerSpec::Lce {
+            r_min: 2,
+            eta: 4,
+            model: ModelChoice::Exp,
+            min_points: 6,
+            stop_quantile: 0.25,
+            confidence: 0.8,
+        },
+        stop: StopRules {
+            config_budget: 48,
+            ..Default::default()
+        },
+        seed: 9,
+        ..ExperimentSpec::default()
+    };
+    vec![default, kitchen_sink, rbo, lce]
 }
 
 #[test]
@@ -143,7 +161,7 @@ fn gen_spec(g: &mut Gen) -> ExperimentSpec {
     let bench = BenchSpec::new(benches[g.usize(0, benches.len() - 1)]);
     let r_min = g.usize(1, 4) as u32;
     let eta = g.usize(2, 5) as u32;
-    let scheduler = match g.usize(0, 5) {
+    let scheduler = match g.usize(0, 6) {
         0 => SchedulerSpec::Asha {
             r_min,
             eta,
@@ -167,6 +185,18 @@ fn gen_spec(g: &mut Gen) -> ExperimentSpec {
         3 => SchedulerSpec::Hyperband { r_min, eta },
         4 => SchedulerSpec::FixedEpoch {
             epochs: g.usize(1, 10) as u32,
+        },
+        5 => SchedulerSpec::Lce {
+            r_min,
+            eta,
+            model: match g.usize(0, 2) {
+                0 => ModelChoice::Power,
+                1 => ModelChoice::Exp,
+                _ => ModelChoice::Auto,
+            },
+            min_points: g.usize(3, 12) as u32,
+            stop_quantile: g.f64(0.05, 0.95),
+            confidence: g.f64(0.05, 0.95),
         },
         _ => SchedulerSpec::RandomBaseline,
     };
@@ -346,6 +376,18 @@ fn generated_v1_journal_recovers_byte_identically() {
         assert_eq!(rbest.metric.to_bits(), best.metric.to_bits(), "{scheduler}");
         let _ = std::fs::remove_dir_all(&dir);
     }
+}
+
+#[test]
+fn lce_is_v2_only_in_both_directions() {
+    // Emission abstains: no v1 wire shape can carry the scheduler, so
+    // status responses must not lie to pre-redesign workers.
+    let spec = ExperimentSpec::named("lcbench-Fashion-MNIST", "lce").unwrap();
+    assert!(spec.to_v1_compat_json().is_none(), "no v1 shape can carry lce");
+    // And a v1 payload naming it is rejected with the field cited, not
+    // silently migrated into a session no legacy client could have made.
+    let err = ExperimentSpec::from_json(&v1_spec_json(&spec)).unwrap_err();
+    assert!(err.contains("field 'scheduler'"), "{err}");
 }
 
 fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
